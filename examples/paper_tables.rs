@@ -1,0 +1,37 @@
+//! Regenerate every table and figure from the paper in one run (reduced
+//! sample count for a quick look; `cargo bench` / `mtsrnn tables` run the
+//! full 1,024-sample protocol).
+//!
+//! Run: `cargo run --release --example paper_tables`
+
+use mtsrnn::bench::tables::{
+    ablation_dram, ablation_energy, ablation_lstm_precompute, figure_series, generate_table,
+    PAPER_TABLES,
+};
+use mtsrnn::bench::{ascii_plot, BenchOpts};
+use mtsrnn::models::config::{Arch, ModelSize};
+
+fn main() {
+    let samples = 256;
+    let opts = BenchOpts {
+        warmup_iters: 1,
+        measure_iters: 2,
+        max_seconds: 30.0,
+    };
+    println!("== Paper tables (reduced: {samples} samples, {} iters) ==\n", opts.measure_iters);
+    for pt in &PAPER_TABLES {
+        println!("{}", generate_table(pt, samples, &opts).render());
+    }
+    for (fig, arch) in [("5", Arch::Sru), ("6", Arch::Qrnn)] {
+        println!(
+            "{}",
+            ascii_plot(
+                &format!("Figure {fig}: {arch} speedup vs T (simulated)"),
+                &figure_series(arch, samples),
+            )
+        );
+    }
+    println!("{}", ablation_dram(Arch::Sru, ModelSize::Large, samples).render());
+    println!("{}", ablation_lstm_precompute(ModelSize::Small, samples, &opts).render());
+    println!("{}", ablation_energy(Arch::Sru, ModelSize::Large, samples).render());
+}

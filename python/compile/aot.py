@@ -1,0 +1,290 @@
+"""AOT compile path: lower every model variant to HLO text + export weights.
+
+This is the ONLY place Python touches the system: ``make artifacts`` runs
+it once, producing
+
+    artifacts/
+      layer_{arch}_{size}_T{n}.hlo.txt   single-layer block-step executables
+      stack_{name}_T{n}.hlo.txt          full ASR-stack executables
+      weights_{arch}_{size}.bin          seeded weights (shared with Rust)
+      weights_{name}.bin                 stack weights
+      golden_{...}.bin                   golden outputs for Rust integration
+      manifest.json                      machine-readable artifact index
+
+after which the Rust binary is self-contained.
+
+Interchange is HLO **text** (not serialized HloModuleProto): jax ≥ 0.5
+emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+parser reassigns ids (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .export import write_tensors
+
+WEIGHT_SEED = 2018  # SAMOS'18
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True so the Rust
+    side can uniformly unwrap tuples)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape: tuple[int, ...]) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def _shapes(entries) -> list[dict]:
+    return [{"name": n, "shape": list(s)} for n, s in entries]
+
+
+# ---------------------------------------------------------------------------
+# Single-layer artifacts
+# ---------------------------------------------------------------------------
+
+
+def lower_layer(arch: str, size: str, t: int) -> tuple[str, dict]:
+    cfg = M.CONFIGS[(arch, size)]
+    h, d = cfg.hidden, cfg.input
+    fn = M.make_layer_fn(arch)
+
+    if arch == "sru":
+        args = [_spec((3 * h, d)), _spec((2 * h,)), _spec((t, d)), _spec((h,))]
+        inputs = _shapes(
+            [("w", (3 * h, d)), ("b", (2 * h,)), ("x", (t, d)), ("c0", (h,))]
+        )
+        outputs = _shapes([("h", (t, h)), ("c_last", (h,))])
+    elif arch == "qrnn":
+        args = [
+            _spec((3 * h, 2 * d)),
+            _spec((3 * h,)),
+            _spec((t, d)),
+            _spec((h,)),
+            _spec((d,)),
+        ]
+        inputs = _shapes(
+            [
+                ("w", (3 * h, 2 * d)),
+                ("b", (3 * h,)),
+                ("x", (t, d)),
+                ("c0", (h,)),
+                ("x_prev", (d,)),
+            ]
+        )
+        outputs = _shapes(
+            [("h", (t, h)), ("c_last", (h,)), ("x_last", (d,))]
+        )
+    else:  # lstm
+        args = [
+            _spec((4 * h, d)),
+            _spec((4 * h, h)),
+            _spec((4 * h,)),
+            _spec((t, d)),
+            _spec((h,)),
+            _spec((h,)),
+        ]
+        inputs = _shapes(
+            [
+                ("w", (4 * h, d)),
+                ("u", (4 * h, h)),
+                ("b", (4 * h,)),
+                ("x", (t, d)),
+                ("h0", (h,)),
+                ("c0", (h,)),
+            ]
+        )
+        outputs = _shapes(
+            [("h", (t, h)), ("h_last", (h,)), ("c_last", (h,))]
+        )
+
+    text = to_hlo_text(jax.jit(fn).lower(*args))
+    meta = {
+        "kind": "layer",
+        "arch": arch,
+        "size": size,
+        "hidden": h,
+        "input": d,
+        "block": t,
+        "inputs": inputs,
+        "outputs": outputs,
+    }
+    return text, meta
+
+
+# ---------------------------------------------------------------------------
+# Stack artifacts
+# ---------------------------------------------------------------------------
+
+
+def lower_stack(cfg: M.StackConfig, t: int) -> tuple[str, dict]:
+    pnames, snames = M.stack_flat_order(cfg)
+    params = M.init_stack(jax.random.PRNGKey(WEIGHT_SEED), cfg)
+    state = M.stack_init_state(cfg)
+    args = (
+        [_spec(params[n].shape) for n in pnames]
+        + [_spec((t, cfg.feat))]
+        + [_spec(state[n].shape) for n in snames]
+    )
+    fn = M.make_stack_fn(cfg)
+    text = to_hlo_text(jax.jit(fn).lower(*args))
+    meta = {
+        "kind": "stack",
+        "name": cfg.name,
+        "arch": cfg.arch,
+        "feat": cfg.feat,
+        "hidden": cfg.hidden,
+        "depth": cfg.depth,
+        "vocab": cfg.vocab,
+        "block": t,
+        "param_order": pnames,
+        "state_order": snames,
+        "inputs": _shapes(
+            [(n, params[n].shape) for n in pnames]
+            + [("x", (t, cfg.feat))]
+            + [(n, state[n].shape) for n in snames]
+        ),
+        "outputs": _shapes(
+            [("logits", (t, cfg.vocab))]
+            + [(n, state[n].shape) for n in snames]
+        ),
+    }
+    return text, meta
+
+
+# ---------------------------------------------------------------------------
+# Weight + golden-output export (Rust integration checks both backends
+# against these)
+# ---------------------------------------------------------------------------
+
+
+def export_layer_weights(out_dir: str, arch: str, size: str) -> str:
+    cfg = M.CONFIGS[(arch, size)]
+    params = M.init_params(jax.random.PRNGKey(WEIGHT_SEED), cfg)
+    path = os.path.join(out_dir, f"weights_{arch}_{size}.bin")
+    write_tensors(path, {k: np.asarray(v) for k, v in params.items()})
+    return os.path.basename(path)
+
+
+def export_stack_weights(out_dir: str, cfg: M.StackConfig) -> str:
+    params = M.init_stack(jax.random.PRNGKey(WEIGHT_SEED), cfg)
+    path = os.path.join(out_dir, f"weights_{cfg.name}.bin")
+    write_tensors(path, {k: np.asarray(v) for k, v in params.items()})
+    return os.path.basename(path)
+
+
+def export_layer_golden(out_dir: str, arch: str, size: str, t: int) -> str:
+    """Golden input/output pair for the Rust native-engine parity test."""
+    cfg = M.CONFIGS[(arch, size)]
+    h, d = cfg.hidden, cfg.input
+    params = M.init_params(jax.random.PRNGKey(WEIGHT_SEED), cfg)
+    key = jax.random.PRNGKey(7)
+    x = jax.random.normal(key, (t, d), jnp.float32)
+    c0 = jnp.zeros((h,), jnp.float32)
+    if arch == "sru":
+        hs, c_last = M.sru_block_step(params["w"], params["b"], x, c0)
+        tensors = {"x": x, "h": hs, "c_last": c_last}
+    elif arch == "qrnn":
+        xprev = jnp.zeros((d,), jnp.float32)
+        hs, c_last, x_last = M.qrnn_block_step(
+            params["w"], params["b"], x, c0, xprev
+        )
+        tensors = {"x": x, "h": hs, "c_last": c_last, "x_last": x_last}
+    else:
+        h0 = jnp.zeros((h,), jnp.float32)
+        hs, h_last, c_last = M.lstm_block_step(
+            params["w"], params["u"], params["b"], x, h0, c0
+        )
+        tensors = {"x": x, "h": hs, "h_last": h_last, "c_last": c_last}
+    path = os.path.join(out_dir, f"golden_{arch}_{size}_T{t}.bin")
+    write_tensors(path, {k: np.asarray(v) for k, v in tensors.items()})
+    return os.path.basename(path)
+
+
+def export_stack_golden(out_dir: str, cfg: M.StackConfig, t: int) -> str:
+    params = M.init_stack(jax.random.PRNGKey(WEIGHT_SEED), cfg)
+    state = M.stack_init_state(cfg)
+    x = jax.random.normal(jax.random.PRNGKey(11), (t, cfg.feat), jnp.float32)
+    logits, new_state = M.stack_block_step(cfg, params, x, state)
+    tensors = {"x": x, "logits": logits}
+    for k, v in new_state.items():
+        tensors[f"state_{k}"] = v
+    path = os.path.join(out_dir, f"golden_{cfg.name}_T{t}.bin")
+    write_tensors(path, {k: np.asarray(v) for k, v in tensors.items()})
+    return os.path.basename(path)
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+STACKS = (M.ASR_SMALL, M.ASR_QRNN)
+STACK_BLOCK_SIZES = (1, 8, 32)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument(
+        "--quick",
+        action="store_true",
+        help="only small models, T in {1,16} (CI smoke path)",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    sizes = ("small",) if args.quick else ("small", "large")
+    layer_ts = (1, 16) if args.quick else M.AOT_BLOCK_SIZES
+    stack_ts = (8,) if args.quick else STACK_BLOCK_SIZES
+    stacks = (M.ASR_SMALL,) if args.quick else STACKS
+
+    manifest: dict = {"version": 1, "seed": WEIGHT_SEED, "entries": []}
+
+    for arch in ("sru", "qrnn", "lstm"):
+        for size in sizes:
+            wfile = export_layer_weights(args.out, arch, size)
+            for t in layer_ts:
+                fname = f"layer_{arch}_{size}_T{t}.hlo.txt"
+                text, meta = lower_layer(arch, size, t)
+                with open(os.path.join(args.out, fname), "w") as f:
+                    f.write(text)
+                meta["file"] = fname
+                meta["weights"] = wfile
+                meta["golden"] = export_layer_golden(args.out, arch, size, t)
+                manifest["entries"].append(meta)
+                print(f"  lowered {fname} ({len(text)} chars)")
+
+    for cfg in stacks:
+        wfile = export_stack_weights(args.out, cfg)
+        for t in stack_ts:
+            fname = f"stack_{cfg.name}_T{t}.hlo.txt"
+            text, meta = lower_stack(cfg, t)
+            with open(os.path.join(args.out, fname), "w") as f:
+                f.write(text)
+            meta["file"] = fname
+            meta["weights"] = wfile
+            meta["golden"] = export_stack_golden(args.out, cfg, t)
+            manifest["entries"].append(meta)
+            print(f"  lowered {fname} ({len(text)} chars)")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(manifest['entries'])} artifacts to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

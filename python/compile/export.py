@@ -1,0 +1,77 @@
+"""Weight/tensor binary interchange format (Python writer).
+
+The Rust side (``rust/src/weights/``) implements the matching reader; the
+format is deliberately trivial so both implementations stay obviously
+correct:
+
+    magic   b"MTSW"
+    u32 LE  version (=1)
+    u32 LE  tensor count
+    per tensor:
+        u16 LE   name length, then name (utf-8)
+        u8       ndim, then ndim × u32 LE dims
+        u64 LE   FNV-1a-64 of the raw data bytes
+        u64 LE   byte length, then f32 LE data
+
+All tensors are fp32, row-major.
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+MAGIC = b"MTSW"
+VERSION = 1
+
+_FNV_OFFSET = 0xCBF29CE484222325
+_FNV_PRIME = 0x100000001B3
+
+
+def fnv1a64(data: bytes) -> int:
+    h = _FNV_OFFSET
+    for byte in data:
+        h ^= byte
+        h = (h * _FNV_PRIME) & 0xFFFFFFFFFFFFFFFF
+    return h
+
+
+def write_tensors(path: str, tensors: dict[str, np.ndarray]) -> None:
+    """Write a named tensor bundle (deterministic: sorted by name)."""
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<II", VERSION, len(tensors)))
+        for name in sorted(tensors):
+            arr = np.ascontiguousarray(tensors[name], dtype=np.float32)
+            raw = arr.tobytes()
+            name_b = name.encode("utf-8")
+            f.write(struct.pack("<H", len(name_b)))
+            f.write(name_b)
+            f.write(struct.pack("<B", arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(struct.pack("<QQ", fnv1a64(raw), len(raw)))
+            f.write(raw)
+
+
+def read_tensors(path: str) -> dict[str, np.ndarray]:
+    """Read a bundle back (used by python tests for round-trip checks)."""
+    with open(path, "rb") as f:
+        if f.read(4) != MAGIC:
+            raise ValueError(f"{path}: bad magic")
+        version, count = struct.unpack("<II", f.read(8))
+        if version != VERSION:
+            raise ValueError(f"{path}: unsupported version {version}")
+        out: dict[str, np.ndarray] = {}
+        for _ in range(count):
+            (nlen,) = struct.unpack("<H", f.read(2))
+            name = f.read(nlen).decode("utf-8")
+            (ndim,) = struct.unpack("<B", f.read(1))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim))
+            cksum, nbytes = struct.unpack("<QQ", f.read(16))
+            raw = f.read(nbytes)
+            if fnv1a64(raw) != cksum:
+                raise ValueError(f"{path}: checksum mismatch for {name!r}")
+            out[name] = np.frombuffer(raw, np.float32).reshape(dims).copy()
+        return out

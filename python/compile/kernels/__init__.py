@@ -1,0 +1,18 @@
+"""Layer-1 Pallas kernels for multi-time-step single-stream RNN inference.
+
+Public surface:
+
+* :func:`mts_gates`  — the paper's Eq. (4) GEMM: one weight fetch, T steps.
+* :func:`sru_scan`   — SRU element-wise recurrence (Eq. 2 remainder).
+* :func:`qrnn_scan`  — QRNN fo-pooling recurrence (Eq. 3 remainder).
+* :func:`lstm_loop`  — LSTM sequential baseline (Eq. 1 remainder).
+
+Each has a pure-jnp oracle of the same name in :mod:`ref`.
+"""
+
+from .lstm_cell import lstm_loop
+from .mts_gates import mts_gates
+from .qrnn_scan import qrnn_scan
+from .sru_scan import sru_scan
+
+__all__ = ["lstm_loop", "mts_gates", "qrnn_scan", "sru_scan"]

@@ -1,0 +1,97 @@
+"""L1 Pallas kernel: LSTM recurrence loop (the baseline the paper beats).
+
+Given the input-side pre-activations ``GX = W @ [x_0 ... x_{T-1}]`` (which
+*can* be multi-time-step batched, §3.1), this kernel runs the part that
+cannot: for each step, the ``U @ h_{t-1}`` GEMV plus the gate math.
+
+The GEMV re-reads all of ``U`` (``4H × H``) every step — this is exactly
+the DRAM-traffic floor the paper attributes to LSTM: input-side batching
+can at most halve the weight traffic.  The kernel runs as a single grid
+cell because every output row of ``U @ h_{t-1}`` needs the *whole*
+``h_{t-1}``, so an H-split would need a cross-cell barrier per step; a
+production TPU version would instead tile the GEMV's K-dim inside the
+step.  For our measurement purposes (baseline), the structure is what
+matters.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lstm_kernel(gx_ref, u_ref, b_ref, h0_ref, c0_ref, h_ref, c_ref):
+    t_len = gx_ref.shape[1]
+    hdim = u_ref.shape[1]
+
+    def body(t, carry):
+        h_prev, c_prev = carry
+        ts = pl.dslice(t, 1)
+        g = gx_ref[:, ts] + jnp.dot(
+            u_ref[...], h_prev, preferred_element_type=jnp.float32
+        ) + b_ref[...]
+        f = jax.nn.sigmoid(g[0 * hdim : 1 * hdim])
+        i = jax.nn.sigmoid(g[1 * hdim : 2 * hdim])
+        o = jax.nn.sigmoid(g[2 * hdim : 3 * hdim])
+        chat = jnp.tanh(g[3 * hdim : 4 * hdim])
+        c_t = f * c_prev + i * chat
+        h_t = o * jnp.tanh(c_t)
+        h_ref[:, ts] = h_t
+        c_ref[:, ts] = c_t
+        return h_t, c_t
+
+    jax.lax.fori_loop(0, t_len, body, (h0_ref[...], c0_ref[...]))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def lstm_loop(
+    gx: jax.Array,
+    u: jax.Array,
+    b: jax.Array,
+    h0: jax.Array,
+    c0: jax.Array,
+    *,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """LSTM recurrence over a block given precomputed input-side gates.
+
+    Args:
+      gx: ``[4H, T]`` = ``W @ X`` (rows f|i|o|chat).
+      u:  ``[4H, H]`` recurrent weights.
+      b:  ``[4H]`` bias.
+      h0, c0: ``[H]`` carried state.
+
+    Returns:
+      ``(h, c)`` each ``[H, T]``.
+    """
+    g4, t = gx.shape
+    hdim = u.shape[1]
+    if g4 != 4 * hdim or u.shape[0] != 4 * hdim:
+        raise ValueError(f"gx {gx.shape} / u {u.shape} inconsistent")
+    if b.shape != (4 * hdim,) or h0.shape != (hdim,) or c0.shape != (hdim,):
+        raise ValueError("b/h0/c0 shape mismatch")
+
+    h_out, c_out = pl.pallas_call(
+        _lstm_kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((g4, t), lambda i: (0, 0)),
+            pl.BlockSpec((g4, hdim), lambda i: (0, 0)),
+            pl.BlockSpec((g4, 1), lambda i: (0, 0)),
+            pl.BlockSpec((hdim, 1), lambda i: (0, 0)),
+            pl.BlockSpec((hdim, 1), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((hdim, t), lambda i: (0, 0)),
+            pl.BlockSpec((hdim, t), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((hdim, t), jnp.float32),
+            jax.ShapeDtypeStruct((hdim, t), jnp.float32),
+        ],
+        interpret=interpret,
+    )(gx, u, b[:, None], h0[:, None], c0[:, None])
+    return h_out, c_out

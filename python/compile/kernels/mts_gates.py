@@ -1,0 +1,112 @@
+"""L1 Pallas kernel: multi-time-step gate GEMM (the paper's Eq. 4).
+
+Computes ``G = W @ X + b`` where ``W: [G, D]`` holds the stacked gate
+weight matrices, ``X: [D, T]`` is the block of T input columns
+``[x_0 ... x_{T-1}]`` and ``b: [G, 1]`` is broadcast along time.
+
+This kernel is where the paper's insight lives on TPU-shaped hardware:
+
+* ``W`` is tiled ``(block_g, block_d)``; each tile is brought from HBM
+  into VMEM **once** and multiplied against all T columns of ``X`` — the
+  exact analog of "fetch one row of the weight matrix and use it for
+  multiple time steps" (paper §3).  Arithmetic intensity grows linearly
+  with T until the MXU is saturated.
+* The grid is ``(G/block_g, D/block_d)`` with the K (``D``) dimension
+  innermost so the output tile stays resident in VMEM across the
+  K-reduction (output-revisiting accumulation; no HBM round trips for
+  partial sums).
+* T ≤ 128 keeps ``X`` (``block_d × T``) and the output tile
+  (``block_g × T``) comfortably inside VMEM; see DESIGN.md §8 for the
+  footprint table.
+
+Runs under ``interpret=True`` on CPU (the image has no TPU); the BlockSpec
+structure is what we optimize, not interpret-mode wallclock.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gates_kernel(w_ref, x_ref, b_ref, o_ref, *, nk: int):
+    """One (g, k) grid cell: accumulate a [block_g, T] output tile."""
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        w_ref[...], x_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        o_ref[...] += b_ref[...]
+
+
+def _pad_to(a: jax.Array, axis: int, mult: int) -> jax.Array:
+    rem = a.shape[axis] % mult
+    if rem == 0:
+        return a
+    pad = [(0, 0)] * a.ndim
+    pad[axis] = (0, mult - rem)
+    return jnp.pad(a, pad)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_g", "block_d", "interpret")
+)
+def mts_gates(
+    w: jax.Array,
+    x: jax.Array,
+    b: jax.Array,
+    *,
+    block_g: int = 256,
+    block_d: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    """``W @ X + b`` with VMEM-tiled weight reuse across T time steps.
+
+    Args:
+      w: ``[G, D]`` stacked gate weights (fp32).
+      x: ``[D, T]`` block of input columns.
+      b: ``[G, 1]`` bias (pass zeros for bias-free gates).
+      block_g / block_d: VMEM tile sizes (clamped to the padded problem).
+      interpret: run the kernel in interpret mode (required on CPU).
+
+    Returns:
+      ``[G, T]`` gate pre-activations.
+    """
+    gdim, d = w.shape
+    t = x.shape[1]
+    if x.shape[0] != d:
+        raise ValueError(f"W/X contraction mismatch: {w.shape} vs {x.shape}")
+    if b.shape != (gdim, 1):
+        raise ValueError(f"bias must be [G, 1], got {b.shape}")
+
+    bg = min(block_g, gdim)
+    bd = min(block_d, d)
+    wp = _pad_to(_pad_to(w, 0, bg), 1, bd)
+    xp = _pad_to(x, 0, bd)
+    bp = _pad_to(b, 0, bg)
+    gp, dp = wp.shape
+    nk = dp // bd
+
+    out = pl.pallas_call(
+        functools.partial(_gates_kernel, nk=nk),
+        grid=(gp // bg, nk),
+        in_specs=[
+            pl.BlockSpec((bg, bd), lambda g, k: (g, k)),  # W tile
+            pl.BlockSpec((bd, t), lambda g, k: (k, 0)),  # X stripe
+            pl.BlockSpec((bg, 1), lambda g, k: (g, 0)),  # bias
+        ],
+        out_specs=pl.BlockSpec((bg, t), lambda g, k: (g, 0)),
+        out_shape=jax.ShapeDtypeStruct((gp, t), jnp.float32),
+        interpret=interpret,
+    )(wp, xp, bp)
+    return out[:gdim]

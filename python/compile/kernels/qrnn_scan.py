@@ -1,0 +1,89 @@
+"""L1 Pallas kernel: QRNN element-wise recurrence over a T-step block.
+
+QRNN's "fo-pooling" (paper Eq. 3):
+
+    c_t = f_t . c_{t-1} + (1 - f_t) . xhat_t
+    h_t = o_t . tanh(c_t)
+
+Identical structure to the SRU scan but without the highway term, so the
+layer's input width may differ from its hidden width.  Activations
+(tanh on xhat, sigmoid on f/o) are fused into the scan.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _qrnn_scan_kernel(xhat_ref, f_ref, o_ref, c0_ref, h_ref, c_ref):
+    t_len = xhat_ref.shape[1]
+
+    def body(t, c_prev):
+        ts = pl.dslice(t, 1)
+        xhat = jnp.tanh(xhat_ref[:, ts])
+        f = jax.nn.sigmoid(f_ref[:, ts])
+        o = jax.nn.sigmoid(o_ref[:, ts])
+        c_t = f * c_prev + (1.0 - f) * xhat
+        c_ref[:, ts] = c_t
+        h_ref[:, ts] = o * jnp.tanh(c_t)
+        return c_t
+
+    jax.lax.fori_loop(0, t_len, body, c0_ref[...])
+
+
+def _pad_h(a: jax.Array, bh: int) -> jax.Array:
+    rem = a.shape[0] % bh
+    if rem == 0:
+        return a
+    pad = [(0, bh - rem)] + [(0, 0)] * (a.ndim - 1)
+    return jnp.pad(a, pad)
+
+
+@functools.partial(jax.jit, static_argnames=("block_h", "interpret"))
+def qrnn_scan(
+    xhat_pre: jax.Array,
+    f_pre: jax.Array,
+    o_pre: jax.Array,
+    c0: jax.Array,
+    *,
+    block_h: int = 256,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """QRNN fo-pooling over a block.
+
+    Args:
+      xhat_pre, f_pre, o_pre: ``[H, T]`` pre-activations from the gate GEMM.
+      c0: ``[H]`` carried cell state.
+
+    Returns:
+      ``(h, c)`` each ``[H, T]``.
+    """
+    h_dim, t = xhat_pre.shape
+    for name, a in (("f_pre", f_pre), ("o_pre", o_pre)):
+        if a.shape != (h_dim, t):
+            raise ValueError(f"{name} shape {a.shape} != {(h_dim, t)}")
+    if c0.shape != (h_dim,):
+        raise ValueError(f"c0 shape {c0.shape} != {(h_dim,)}")
+
+    bh = min(block_h, h_dim)
+    args = [_pad_h(a, bh) for a in (xhat_pre, f_pre, o_pre)]
+    c0p = _pad_h(c0[:, None], bh)
+    hp = args[0].shape[0]
+
+    spec = pl.BlockSpec((bh, t), lambda i: (i, 0))
+    h_out, c_out = pl.pallas_call(
+        _qrnn_scan_kernel,
+        grid=(hp // bh,),
+        in_specs=[spec, spec, spec, pl.BlockSpec((bh, 1), lambda i: (i, 0))],
+        out_specs=[spec, spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((hp, t), jnp.float32),
+            jax.ShapeDtypeStruct((hp, t), jnp.float32),
+        ],
+        interpret=interpret,
+    )(*args, c0p)
+    return h_out[:h_dim], c_out[:h_dim]

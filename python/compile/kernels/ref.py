@@ -1,0 +1,256 @@
+"""Pure-jnp reference oracles for every Pallas kernel and model block.
+
+These are the CORE correctness signal of the compile path: every Pallas
+kernel in this package is checked against the function of the same name
+here (pytest + hypothesis, see ``python/tests/``), and the multi-time-step
+block implementations are checked against the strictly sequential
+single-step recurrences below.
+
+Shape conventions
+-----------------
+* Sequences at the model interface are **time-major**: ``x`` is ``[T, D]``.
+* Inside the kernels (and in these oracles' ``*_scan`` helpers) tensors are
+  **hidden-major**: ``[H, T]`` — one column per time step, matching the
+  paper's Eq. (4) ``[f_0 f_1 ... f_T] = W_f [x_0 x_1 ... x_T]``.
+* Weight matrices are stored stacked: SRU ``W`` is ``[3H, D]`` (rows:
+  x-hat, forget, reset), QRNN ``W`` is ``[3H, 2D]`` (columns: current
+  input, previous input), LSTM ``W`` is ``[4H, D]`` and ``U`` is
+  ``[4H, H]`` (rows: f, i, o, c-hat).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Elementary pieces (mirror the Pallas kernels 1:1)
+# ---------------------------------------------------------------------------
+
+
+def mts_gates(w: jax.Array, x: jax.Array, b: jax.Array) -> jax.Array:
+    """Multi-time-step gate pre-activations: ``W @ X + b``.
+
+    w: [G, D], x: [D, T], b: [G, 1] -> [G, T].  This is the paper's Eq. (4):
+    one weight fetch serves T time steps (GEMM instead of T GEMVs).
+    """
+    return w @ x + b
+
+
+def sru_scan(
+    xhat: jax.Array,
+    f_pre: jax.Array,
+    r_pre: jax.Array,
+    x: jax.Array,
+    c0: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """SRU element-wise recurrence over a block of T steps (Eq. 2).
+
+    All of xhat/f_pre/r_pre/x are [H, T] (pre-activation for the gates),
+    c0 is [H].  Returns (h, c), each [H, T].
+    """
+    f = jax.nn.sigmoid(f_pre)
+    r = jax.nn.sigmoid(r_pre)
+
+    def step(c_prev, t):
+        c_t = f[:, t] * c_prev + (1.0 - f[:, t]) * xhat[:, t]
+        h_t = r[:, t] * jnp.tanh(c_t) + (1.0 - r[:, t]) * x[:, t]
+        return c_t, (h_t, c_t)
+
+    _, (h_seq, c_seq) = jax.lax.scan(step, c0, jnp.arange(xhat.shape[1]))
+    return h_seq.T, c_seq.T
+
+
+def qrnn_scan(
+    xhat_pre: jax.Array,
+    f_pre: jax.Array,
+    o_pre: jax.Array,
+    c0: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """QRNN element-wise recurrence over a block of T steps (Eq. 3).
+
+    xhat_pre/f_pre/o_pre: [H, T] pre-activations, c0: [H].
+    Returns (h, c), each [H, T].
+    """
+    xhat = jnp.tanh(xhat_pre)
+    f = jax.nn.sigmoid(f_pre)
+    o = jax.nn.sigmoid(o_pre)
+
+    def step(c_prev, t):
+        c_t = f[:, t] * c_prev + (1.0 - f[:, t]) * xhat[:, t]
+        h_t = o[:, t] * jnp.tanh(c_t)
+        return c_t, (h_t, c_t)
+
+    _, (h_seq, c_seq) = jax.lax.scan(step, c0, jnp.arange(xhat_pre.shape[1]))
+    return h_seq.T, c_seq.T
+
+
+def lstm_loop(
+    gx: jax.Array,
+    u: jax.Array,
+    b: jax.Array,
+    h0: jax.Array,
+    c0: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """LSTM recurrence given precomputed input-side gates (Eq. 1).
+
+    gx: [4H, T] = W @ X (input-side pre-activations, the only part that can
+    be multi-time-step batched, §3.1), u: [4H, H], b: [4H], h0/c0: [H].
+    Gate row order: f, i, o, c-hat.  Returns (h, c), each [H, T].
+
+    The ``U @ h_{t-1}`` GEMV inside the loop is exactly the dependency the
+    paper identifies as the reason LSTM cannot be fully time-parallelized.
+    """
+    hdim = u.shape[1]
+
+    def step(carry, t):
+        h_prev, c_prev = carry
+        g = gx[:, t] + u @ h_prev + b
+        f = jax.nn.sigmoid(g[0 * hdim : 1 * hdim])
+        i = jax.nn.sigmoid(g[1 * hdim : 2 * hdim])
+        o = jax.nn.sigmoid(g[2 * hdim : 3 * hdim])
+        chat = jnp.tanh(g[3 * hdim : 4 * hdim])
+        c_t = f * c_prev + i * chat
+        h_t = o * jnp.tanh(c_t)
+        return (h_t, c_t), (h_t, c_t)
+
+    _, (h_seq, c_seq) = jax.lax.scan(step, (h0, c0), jnp.arange(gx.shape[1]))
+    return h_seq.T, c_seq.T
+
+
+# ---------------------------------------------------------------------------
+# Full single-step (strictly sequential) recurrences — the ground truth the
+# multi-time-step block implementations must match (up to float
+# reassociation in the GEMM).
+# ---------------------------------------------------------------------------
+
+
+def sru_seq(
+    w: jax.Array, b: jax.Array, x: jax.Array, c0: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Strictly sequential SRU: one GEMV per gate per step.
+
+    w: [3H, D] (rows xhat|f|r), b: [2H] (f, r biases; xhat has none),
+    x: [T, D] time-major, c0: [H].  Returns (h [T, H], c_last [H]).
+    """
+    hdim = w.shape[0] // 3
+    w_x, w_f, w_r = w[:hdim], w[hdim : 2 * hdim], w[2 * hdim :]
+    b_f, b_r = b[:hdim], b[hdim:]
+
+    def step(c_prev, x_t):
+        xhat = w_x @ x_t
+        f = jax.nn.sigmoid(w_f @ x_t + b_f)
+        r = jax.nn.sigmoid(w_r @ x_t + b_r)
+        c_t = f * c_prev + (1.0 - f) * xhat
+        h_t = r * jnp.tanh(c_t) + (1.0 - r) * x_t
+        return c_t, h_t
+
+    c_last, h = jax.lax.scan(step, c0, x)
+    return h, c_last
+
+
+def qrnn_seq(
+    w: jax.Array, b: jax.Array, x: jax.Array, c0: jax.Array, x_prev: jax.Array
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Strictly sequential QRNN (conv window 2).
+
+    w: [3H, 2D] (rows xhat|f|o; column blocks [current | previous]),
+    b: [3H], x: [T, D], c0: [H], x_prev: [D] (the input at t = -1).
+    Returns (h [T, H], c_last [H], x_last [D]).
+    """
+    hdim = w.shape[0] // 3
+    d = x.shape[1]
+    w_cur, w_prev = w[:, :d], w[:, d:]
+
+    def step(carry, x_t):
+        c_prev, xp = carry
+        g = w_cur @ x_t + w_prev @ xp + b
+        xhat = jnp.tanh(g[:hdim])
+        f = jax.nn.sigmoid(g[hdim : 2 * hdim])
+        o = jax.nn.sigmoid(g[2 * hdim :])
+        c_t = f * c_prev + (1.0 - f) * xhat
+        h_t = o * jnp.tanh(c_t)
+        return (c_t, x_t), h_t
+
+    (c_last, x_last), h = jax.lax.scan(step, (c0, x_prev), x)
+    return h, c_last, x_last
+
+
+def lstm_seq(
+    w: jax.Array,
+    u: jax.Array,
+    b: jax.Array,
+    x: jax.Array,
+    h0: jax.Array,
+    c0: jax.Array,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Strictly sequential LSTM (Eq. 1).
+
+    w: [4H, D], u: [4H, H], b: [4H] (rows f|i|o|chat), x: [T, D],
+    h0/c0: [H].  Returns (h [T, H], h_last [H], c_last [H]).
+    """
+    hdim = u.shape[1]
+
+    def step(carry, x_t):
+        h_prev, c_prev = carry
+        g = w @ x_t + u @ h_prev + b
+        f = jax.nn.sigmoid(g[:hdim])
+        i = jax.nn.sigmoid(g[hdim : 2 * hdim])
+        o = jax.nn.sigmoid(g[2 * hdim : 3 * hdim])
+        chat = jnp.tanh(g[3 * hdim :])
+        c_t = f * c_prev + i * chat
+        h_t = o * jnp.tanh(c_t)
+        return (h_t, c_t), h_t
+
+    (h_last, c_last), h = jax.lax.scan(step, (h0, c0), x)
+    return h, h_last, c_last
+
+
+# ---------------------------------------------------------------------------
+# Multi-time-step block forms (reference composition; the L2 model performs
+# the same composition with the Pallas kernels).
+# ---------------------------------------------------------------------------
+
+
+def sru_block(
+    w: jax.Array, b: jax.Array, x: jax.Array, c0: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Multi-time-step SRU block: one GEMM for all T steps, then the scan.
+
+    Same signature/returns as :func:`sru_seq`; must match it numerically.
+    """
+    hdim = w.shape[0] // 3
+    b3 = jnp.concatenate([jnp.zeros((hdim,), w.dtype), b])
+    g = mts_gates(w, x.T, b3[:, None])  # [3H, T]
+    h, c = sru_scan(g[:hdim], g[hdim : 2 * hdim], g[2 * hdim :], x.T, c0)
+    return h.T, c[:, -1]
+
+
+def qrnn_block(
+    w: jax.Array, b: jax.Array, x: jax.Array, c0: jax.Array, x_prev: jax.Array
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Multi-time-step QRNN block (window-2 conv folded into one GEMM)."""
+    hdim = w.shape[0] // 3
+    # xs_prev[:, t] = x_{t-1}: shift right by one, inject the carried x_prev.
+    xs = x.T  # [D, T]
+    xs_prev = jnp.concatenate([x_prev[:, None], xs[:, :-1]], axis=1)
+    xcat = jnp.concatenate([xs, xs_prev], axis=0)  # [2D, T]
+    g = mts_gates(w, xcat, b[:, None])  # [3H, T]
+    h, c = qrnn_scan(g[:hdim], g[hdim : 2 * hdim], g[2 * hdim :], c0)
+    return h.T, c[:, -1], xs[:, -1]
+
+
+def lstm_block(
+    w: jax.Array,
+    u: jax.Array,
+    b: jax.Array,
+    x: jax.Array,
+    h0: jax.Array,
+    c0: jax.Array,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Partially parallelized LSTM (§3.1): GEMM the input side for T steps,
+    then run the unavoidable sequential ``U @ h`` loop.  At most halves the
+    DRAM traffic — the paper's motivating negative result."""
+    gx = mts_gates(w, x.T, jnp.zeros((w.shape[0], 1), w.dtype))  # [4H, T]
+    h, c = lstm_loop(gx, u, b, h0, c0)
+    return h.T, h[:, -1], c[:, -1]

@@ -1,0 +1,332 @@
+"""L2: JAX model definitions composing the L1 Pallas kernels.
+
+This module defines every network variant the paper evaluates plus the
+stacked end-to-end model served by the Rust coordinator:
+
+* Single RNN layers (LSTM / SRU / QRNN) in *block-step* form: the function
+  processes a block of T time steps per call and threads the recurrent
+  state explicitly, so the AOT-compiled executable is a pure function the
+  Rust L3 can call repeatedly on a stream.
+* The paper's benchmark models: ``small`` (LSTM-350 / SRU-512 / QRNN-512,
+  ~1M params) and ``large`` (LSTM-700 / SRU-1024 / QRNN-1024, ~3M params),
+  input width == hidden width as in the paper's timing setup.
+* An "on-device ASR"-like stack (input projection → N SRU/QRNN layers →
+  output head) used by ``examples/streaming_asr.rs``.
+
+Everything here runs at build time only; `aot.py` lowers the jitted block
+functions to HLO text for the Rust runtime.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import lstm_loop, mts_gates, qrnn_scan, sru_scan
+
+# ---------------------------------------------------------------------------
+# Configs (mirror rust/src/models/config.rs — keep in sync)
+# ---------------------------------------------------------------------------
+
+
+class ModelConfig(NamedTuple):
+    """One benchmark model variant (paper §4)."""
+
+    arch: str  # "lstm" | "sru" | "qrnn"
+    hidden: int
+    input: int
+
+    @property
+    def name(self) -> str:
+        return f"{self.arch}_{self.hidden}"
+
+    def param_count(self) -> int:
+        h, d = self.hidden, self.input
+        if self.arch == "lstm":
+            return 4 * h * d + 4 * h * h + 4 * h
+        if self.arch == "sru":
+            return 3 * h * d + 2 * h
+        if self.arch == "qrnn":
+            return 3 * h * 2 * d + 3 * h
+        raise ValueError(self.arch)
+
+
+# The paper's small (~1M param) and large (~3M param) variants.
+CONFIGS: dict[tuple[str, str], ModelConfig] = {
+    ("lstm", "small"): ModelConfig("lstm", 350, 350),
+    ("lstm", "large"): ModelConfig("lstm", 700, 700),
+    ("sru", "small"): ModelConfig("sru", 512, 512),
+    ("sru", "large"): ModelConfig("sru", 1024, 1024),
+    ("qrnn", "small"): ModelConfig("qrnn", 512, 512),
+    ("qrnn", "large"): ModelConfig("qrnn", 1024, 1024),
+}
+
+# Block sizes ("SRU-n" / "QRNN-n" in the tables).
+PAPER_BLOCK_SIZES = (1, 2, 4, 8, 16, 32, 64, 128)
+# Subset AOT-compiled into artifacts for the Rust runtime (full sweep runs
+# on the native engine; see DESIGN.md §4).
+AOT_BLOCK_SIZES = (1, 4, 16, 64)
+
+
+# ---------------------------------------------------------------------------
+# Parameter init (deterministic; the same seeds/layouts are exported to the
+# Rust native engine so both backends agree bit-for-bit on weights)
+# ---------------------------------------------------------------------------
+
+
+def _glorot(key: jax.Array, shape: tuple[int, ...]) -> jax.Array:
+    fan_out, fan_in = shape[0], shape[-1]
+    scale = jnp.sqrt(6.0 / (fan_in + fan_out)).astype(jnp.float32)
+    return jax.random.uniform(
+        key, shape, jnp.float32, minval=-scale, maxval=scale
+    )
+
+
+def init_lstm(key: jax.Array, cfg: ModelConfig) -> dict[str, jax.Array]:
+    k_w, k_u = jax.random.split(key)
+    h, d = cfg.hidden, cfg.input
+    return {
+        "w": _glorot(k_w, (4 * h, d)),
+        "u": _glorot(k_u, (4 * h, h)),
+        # Forget-gate bias 1.0 (rows 0..H), standard LSTM practice.
+        "b": jnp.concatenate(
+            [jnp.ones((h,), jnp.float32), jnp.zeros((3 * h,), jnp.float32)]
+        ),
+    }
+
+
+def init_sru(key: jax.Array, cfg: ModelConfig) -> dict[str, jax.Array]:
+    h, d = cfg.hidden, cfg.input
+    return {
+        "w": _glorot(key, (3 * h, d)),
+        # Forget bias 1.0 biases the cell toward remembering early on.
+        "b": jnp.concatenate(
+            [jnp.ones((h,), jnp.float32), jnp.zeros((h,), jnp.float32)]
+        ),
+    }
+
+
+def init_qrnn(key: jax.Array, cfg: ModelConfig) -> dict[str, jax.Array]:
+    h, d = cfg.hidden, cfg.input
+    return {
+        "w": _glorot(key, (3 * h, 2 * d)),
+        "b": jnp.concatenate(
+            [
+                jnp.zeros((h,), jnp.float32),
+                jnp.ones((h,), jnp.float32),
+                jnp.zeros((h,), jnp.float32),
+            ]
+        ),
+    }
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> dict[str, jax.Array]:
+    return {"lstm": init_lstm, "sru": init_sru, "qrnn": init_qrnn}[cfg.arch](
+        key, cfg
+    )
+
+
+# ---------------------------------------------------------------------------
+# Layer block-step functions (the units that get AOT-compiled)
+# ---------------------------------------------------------------------------
+
+
+def sru_block_step(
+    w: jax.Array, b: jax.Array, x: jax.Array, c0: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Multi-time-step SRU layer step.
+
+    w: [3H, D], b: [2H], x: [T, D] time-major, c0: [H].
+    Returns (h [T, H], c_last [H]).  D must equal H (highway term).
+    """
+    hdim = w.shape[0] // 3
+    b3 = jnp.concatenate([jnp.zeros((hdim,), w.dtype), b])
+    g = mts_gates(w, x.T, b3[:, None])  # Eq. (4): one GEMM for T steps
+    h, c = sru_scan(g[:hdim], g[hdim : 2 * hdim], g[2 * hdim :], x.T, c0)
+    return h.T, c[:, -1]
+
+
+def qrnn_block_step(
+    w: jax.Array, b: jax.Array, x: jax.Array, c0: jax.Array, x_prev: jax.Array
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Multi-time-step QRNN layer step (conv window 2 folded into the GEMM).
+
+    w: [3H, 2D], b: [3H], x: [T, D], c0: [H], x_prev: [D] (input at t=-1).
+    Returns (h [T, H], c_last [H], x_last [D]).
+    """
+    hdim = w.shape[0] // 3
+    xs = x.T  # [D, T]
+    xs_prev = jnp.concatenate([x_prev[:, None], xs[:, :-1]], axis=1)
+    xcat = jnp.concatenate([xs, xs_prev], axis=0)  # [2D, T]
+    g = mts_gates(w, xcat, b[:, None])
+    h, c = qrnn_scan(g[:hdim], g[hdim : 2 * hdim], g[2 * hdim :], c0)
+    return h.T, c[:, -1], xs[:, -1]
+
+
+def lstm_block_step(
+    w: jax.Array,
+    u: jax.Array,
+    b: jax.Array,
+    x: jax.Array,
+    h0: jax.Array,
+    c0: jax.Array,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """LSTM layer step, §3.1-style: input-side GEMM batched over T, the
+    ``U @ h`` recurrence strictly sequential.
+
+    Returns (h [T, H], h_last [H], c_last [H]).
+    """
+    gx = mts_gates(w, x.T, jnp.zeros((w.shape[0], 1), w.dtype))
+    h, c = lstm_loop(gx, u, b, h0, c0)
+    return h.T, h[:, -1], c[:, -1]
+
+
+def layer_block_step(arch: str):
+    """Dispatch table used by aot.py."""
+    return {
+        "sru": sru_block_step,
+        "qrnn": qrnn_block_step,
+        "lstm": lstm_block_step,
+    }[arch]
+
+
+# ---------------------------------------------------------------------------
+# Stacked end-to-end model ("on-device ASR"-like transducer)
+# ---------------------------------------------------------------------------
+
+
+class StackConfig(NamedTuple):
+    """Input proj → ``depth`` recurrent layers → output head.
+
+    This is the RNN-transducer shape from the paper's Fig. 1(b) and the
+    motivating on-device ASR use case in §1.
+    """
+
+    arch: str = "sru"  # "sru" | "qrnn"
+    feat: int = 40  # input feature width (e.g. fbank-40)
+    hidden: int = 512
+    depth: int = 4
+    vocab: int = 32  # output classes (e.g. phonemes/graphemes)
+
+    @property
+    def name(self) -> str:
+        return f"asr_{self.arch}_{self.hidden}x{self.depth}"
+
+    def param_count(self) -> int:
+        h = self.hidden
+        per_layer = ModelConfig(self.arch, h, h).param_count()
+        return (
+            self.feat * h + h  # input projection
+            + self.depth * per_layer
+            + h * self.vocab + self.vocab  # head
+        )
+
+
+ASR_SMALL = StackConfig("sru", 40, 512, 4, 32)
+ASR_QRNN = StackConfig("qrnn", 40, 512, 4, 32)
+
+
+def init_stack(key: jax.Array, cfg: StackConfig) -> dict[str, jax.Array]:
+    keys = jax.random.split(key, cfg.depth + 2)
+    h = cfg.hidden
+    params: dict[str, jax.Array] = {
+        "proj_w": _glorot(keys[0], (h, cfg.feat)),
+        "proj_b": jnp.zeros((h,), jnp.float32),
+        "head_w": _glorot(keys[1], (cfg.vocab, h)),
+        "head_b": jnp.zeros((cfg.vocab,), jnp.float32),
+    }
+    layer_cfg = ModelConfig(cfg.arch, h, h)
+    for i in range(cfg.depth):
+        lp = init_params(keys[2 + i], layer_cfg)
+        for k, v in lp.items():
+            params[f"l{i}_{k}"] = v
+    return params
+
+
+def stack_init_state(cfg: StackConfig) -> dict[str, jax.Array]:
+    """Zero recurrent state for one stream (what L3 stores per session)."""
+    h = cfg.hidden
+    state: dict[str, jax.Array] = {}
+    for i in range(cfg.depth):
+        state[f"l{i}_c"] = jnp.zeros((h,), jnp.float32)
+        if cfg.arch == "qrnn":
+            state[f"l{i}_xprev"] = jnp.zeros((h,), jnp.float32)
+    return state
+
+
+def stack_block_step(
+    cfg: StackConfig,
+    params: dict[str, jax.Array],
+    x: jax.Array,
+    state: dict[str, jax.Array],
+) -> tuple[jax.Array, dict[str, jax.Array]]:
+    """Run the full stack over a block of T feature frames.
+
+    x: [T, feat] -> logits [T, vocab]; returns the updated per-layer state.
+    """
+    # Input projection (also a multi-time-step GEMM: same Eq. 4 benefit).
+    h = mts_gates(params["proj_w"], x.T, params["proj_b"][:, None]).T
+    h = jnp.tanh(h)
+
+    new_state: dict[str, jax.Array] = {}
+    for i in range(cfg.depth):
+        if cfg.arch == "sru":
+            h, c_last = sru_block_step(
+                params[f"l{i}_w"], params[f"l{i}_b"], h, state[f"l{i}_c"]
+            )
+            new_state[f"l{i}_c"] = c_last
+        else:
+            h, c_last, x_last = qrnn_block_step(
+                params[f"l{i}_w"],
+                params[f"l{i}_b"],
+                h,
+                state[f"l{i}_c"],
+                state[f"l{i}_xprev"],
+            )
+            new_state[f"l{i}_c"] = c_last
+            new_state[f"l{i}_xprev"] = x_last
+
+    logits = mts_gates(params["head_w"], h.T, params["head_b"][:, None]).T
+    return logits, new_state
+
+
+# ---------------------------------------------------------------------------
+# Flat-signature wrappers for AOT lowering (PJRT wants positional params)
+# ---------------------------------------------------------------------------
+
+
+def stack_flat_order(cfg: StackConfig) -> tuple[list[str], list[str]]:
+    """Deterministic flattening order for params and state (shared with the
+    Rust runtime; see rust/src/runtime/artifacts.rs)."""
+    pnames = ["proj_w", "proj_b"]
+    for i in range(cfg.depth):
+        pnames += [f"l{i}_w", f"l{i}_b"]
+    pnames += ["head_w", "head_b"]
+    snames = []
+    for i in range(cfg.depth):
+        snames.append(f"l{i}_c")
+        if cfg.arch == "qrnn":
+            snames.append(f"l{i}_xprev")
+    return pnames, snames
+
+
+def make_stack_fn(cfg: StackConfig):
+    """Returns ``fn(*params, x, *state) -> (logits, *new_state)``."""
+    pnames, snames = stack_flat_order(cfg)
+
+    def fn(*args):
+        params = dict(zip(pnames, args[: len(pnames)]))
+        x = args[len(pnames)]
+        state = dict(zip(snames, args[len(pnames) + 1 :]))
+        logits, new_state = stack_block_step(cfg, params, x, state)
+        return (logits, *[new_state[n] for n in snames])
+
+    return fn
+
+
+def make_layer_fn(arch: str):
+    """Returns the flat single-layer block fn for AOT (see layer_block_step)."""
+    return layer_block_step(arch)

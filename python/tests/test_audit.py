@@ -1,0 +1,76 @@
+"""HLO audit tool: opcode scanning + the Eq.-4 T-invariance check."""
+
+from __future__ import annotations
+
+import pytest
+
+from compile import audit
+
+HLO_SAMPLE = """
+HloModule m
+body {
+  %p = f32[256,8]{1,0} parameter(0)
+  %d = f32[256,8]{1,0} dot(f32[256,512]{1,0} %w, f32[512,8]{1,0} %x)
+  %a = f32[256,8]{1,0} add(%p, %d)
+}
+ENTRY e {
+  %w0 = f32[1536,512]{1,0} parameter(0)
+  %dot.1 = f32[32,8]{1,0} dot(f32[32,512]{1,0} %h, f32[512,8]{1,0} %x2)
+  %wh = (s32[], f32[256,8]{1,0}) while(%init), body=body
+  %t = f32[256,8]{1,0} tanh(%d2)
+}
+"""
+
+
+def test_op_histogram_and_dot_count():
+    ops = audit.op_histogram(HLO_SAMPLE)
+    assert ops["dot"] == 2
+    assert ops["while"] == 1
+    assert ops["tanh"] == 1
+    assert audit.dot_count(HLO_SAMPLE) == 2
+    assert audit.while_count(HLO_SAMPLE) == 1
+
+
+def test_dot_shapes_extracted():
+    shapes = audit.dot_shapes(HLO_SAMPLE)
+    assert (256, 8) in shapes
+    assert (32, 8) in shapes
+
+
+def test_t_invariance_grouping():
+    reports = [
+        {"kind": "layer", "arch": "sru", "tag": "small", "dots": 1},
+        {"kind": "layer", "arch": "sru", "tag": "small", "dots": 1},
+        {"kind": "layer", "arch": "qrnn", "tag": "small", "dots": 1},
+        {"kind": "layer", "arch": "qrnn", "tag": "small", "dots": 2},  # bad
+    ]
+    groups = audit.t_invariance_groups(reports)
+    assert groups[("layer", "sru", "small")] == {1}
+    assert groups[("layer", "qrnn", "small")] == {1, 2}
+
+
+def test_vmem_estimate_bounds():
+    v = audit.vmem_estimate(256, 256, 128)
+    assert v["total"] == (256 * 256 + 256 * 128 + 256 * 128) * 4
+    assert v["fits_vmem"]
+    assert v["mxu_utilization"] == 1.0
+    v1 = audit.vmem_estimate(256, 256, 1)
+    assert v1["mxu_utilization"] < 0.02
+    big = audit.vmem_estimate(4096, 4096, 128)
+    assert not big["fits_vmem"]
+
+
+@pytest.mark.skipif(
+    not __import__("os").path.exists("../artifacts/manifest.json"),
+    reason="artifacts not built",
+)
+def test_real_artifacts_are_t_invariant():
+    import json
+    import os
+
+    manifest = json.load(open("../artifacts/manifest.json"))
+    reports = [audit.audit_entry("../artifacts", e) for e in manifest["entries"]]
+    for key, counts in audit.t_invariance_groups(reports).items():
+        assert len(counts) == 1, f"{key}: dot structure scales with T: {counts}"
+    # And every artifact actually contains at least one dot.
+    assert all(r["dots"] >= 1 for r in reports)

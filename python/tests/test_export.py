@@ -1,0 +1,74 @@
+"""Weight-bundle interchange format: round-trip + corruption detection."""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.export import fnv1a64, read_tensors, write_tensors
+
+
+def test_fnv1a64_known_vectors():
+    # Standard FNV-1a test vectors.
+    assert fnv1a64(b"") == 0xCBF29CE484222325
+    assert fnv1a64(b"a") == 0xAF63DC4C8601EC8C
+    assert fnv1a64(b"foobar") == 0x85944171F73967E8
+
+
+@settings(deadline=None, max_examples=20)
+@given(
+    n=st.integers(1, 5),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_round_trip(tmp_path_factory, n, seed):
+    tmp = tmp_path_factory.mktemp("wt")
+    rng = np.random.default_rng(seed)
+    tensors = {}
+    for i in range(n):
+        ndim = int(rng.integers(1, 4))
+        shape = tuple(int(rng.integers(1, 8)) for _ in range(ndim))
+        tensors[f"t{i}_{'x'.join(map(str, shape))}"] = rng.standard_normal(
+            shape, dtype=np.float32
+        )
+    path = str(tmp / "bundle.bin")
+    write_tensors(path, tensors)
+    back = read_tensors(path)
+    assert set(back) == set(tensors)
+    for k in tensors:
+        np.testing.assert_array_equal(back[k], tensors[k])
+
+
+def test_corruption_detected(tmp_path):
+    path = str(tmp_path / "b.bin")
+    write_tensors(path, {"w": np.arange(12, dtype=np.float32).reshape(3, 4)})
+    raw = bytearray(open(path, "rb").read())
+    raw[-3] ^= 0xFF  # flip a data byte
+    open(path, "wb").write(bytes(raw))
+    with pytest.raises(ValueError, match="checksum"):
+        read_tensors(path)
+
+
+def test_bad_magic_rejected(tmp_path):
+    path = str(tmp_path / "b.bin")
+    open(path, "wb").write(b"NOPE" + b"\x00" * 16)
+    with pytest.raises(ValueError, match="magic"):
+        read_tensors(path)
+
+
+def test_bad_version_rejected(tmp_path):
+    path = str(tmp_path / "b.bin")
+    open(path, "wb").write(b"MTSW" + struct.pack("<II", 99, 0))
+    with pytest.raises(ValueError, match="version"):
+        read_tensors(path)
+
+
+def test_deterministic_bytes(tmp_path):
+    """Same tensors -> identical file bytes (sorted order, no timestamps)."""
+    t = {"b": np.ones((2, 2), np.float32), "a": np.zeros((3,), np.float32)}
+    p1, p2 = str(tmp_path / "1.bin"), str(tmp_path / "2.bin")
+    write_tensors(p1, t)
+    write_tensors(p2, dict(reversed(list(t.items()))))
+    assert open(p1, "rb").read() == open(p2, "rb").read()

@@ -1,0 +1,233 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes and block sizes; fixed-seed cases pin the paper's
+actual model dimensions.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import lstm_loop, mts_gates, qrnn_scan, sru_scan
+from compile.kernels import ref
+
+SET = dict(deadline=None, max_examples=25, print_blob=True)
+
+
+def arr(rng: np.random.Generator, *shape: int, scale: float = 1.0):
+    return jnp.asarray(
+        rng.standard_normal(shape, dtype=np.float32) * scale
+    )
+
+
+# ---------------------------------------------------------------------------
+# mts_gates (Eq. 4 GEMM)
+# ---------------------------------------------------------------------------
+
+
+@settings(**SET)
+@given(
+    g=st.integers(1, 200),
+    d=st.integers(1, 200),
+    t=st.integers(1, 40),
+    bg=st.sampled_from([8, 32, 100, 256]),
+    bd=st.sampled_from([8, 32, 100, 256]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_mts_gates_matches_ref(g, d, t, bg, bd, seed):
+    rng = np.random.default_rng(seed)
+    w, x, b = arr(rng, g, d, scale=0.2), arr(rng, d, t), arr(rng, g, 1)
+    got = mts_gates(w, x, b, block_g=bg, block_d=bd)
+    want = ref.mts_gates(w, x, b)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_mts_gates_paper_dims():
+    """SRU-large: W [3*1024, 1024], T = 32 (Table 4's sweet spot)."""
+    rng = np.random.default_rng(0)
+    w, x = arr(rng, 3072, 1024, scale=0.03), arr(rng, 1024, 32)
+    b = arr(rng, 3072, 1)
+    got = mts_gates(w, x, b)
+    np.testing.assert_allclose(got, ref.mts_gates(w, x, b), rtol=1e-4, atol=1e-4)
+
+
+def test_mts_gates_zero_bias_is_plain_matmul():
+    rng = np.random.default_rng(1)
+    w, x = arr(rng, 64, 48), arr(rng, 48, 4)
+    b = jnp.zeros((64, 1), jnp.float32)
+    np.testing.assert_allclose(
+        mts_gates(w, x, b, block_g=32, block_d=16), w @ x, rtol=1e-5, atol=1e-5
+    )
+
+
+def test_mts_gates_t1_is_gemv():
+    """T=1 degenerates to the single-step GEMV the paper starts from."""
+    rng = np.random.default_rng(2)
+    w, x, b = arr(rng, 96, 80), arr(rng, 80, 1), arr(rng, 96, 1)
+    np.testing.assert_allclose(
+        mts_gates(w, x, b), w @ x + b, rtol=1e-5, atol=1e-5
+    )
+
+
+def test_mts_gates_rejects_bad_shapes():
+    w = jnp.zeros((4, 5))
+    x = jnp.zeros((6, 2))
+    b = jnp.zeros((4, 1))
+    with pytest.raises(ValueError, match="contraction"):
+        mts_gates(w, x, b)
+    with pytest.raises(ValueError, match="bias"):
+        mts_gates(jnp.zeros((4, 6)), x, jnp.zeros((5, 1)))
+
+
+# ---------------------------------------------------------------------------
+# sru_scan (Eq. 2 remainder)
+# ---------------------------------------------------------------------------
+
+
+@settings(**SET)
+@given(
+    h=st.integers(1, 300),
+    t=st.integers(1, 48),
+    bh=st.sampled_from([16, 64, 256]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sru_scan_matches_ref(h, t, bh, seed):
+    rng = np.random.default_rng(seed)
+    xh, f, r, x = (arr(rng, h, t) for _ in range(4))
+    c0 = arr(rng, h)
+    got_h, got_c = sru_scan(xh, f, r, x, c0, block_h=bh)
+    want_h, want_c = ref.sru_scan(xh, f, r, x, c0)
+    np.testing.assert_allclose(got_h, want_h, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(got_c, want_c, rtol=1e-5, atol=1e-5)
+
+
+def test_sru_scan_saturated_forget_keeps_state():
+    """f -> 1 (pre-activation +inf-ish) must propagate c0 unchanged."""
+    h, t = 32, 9
+    big = jnp.full((h, t), 30.0, jnp.float32)
+    xh = jnp.ones((h, t), jnp.float32) * 5.0
+    x = jnp.zeros((h, t), jnp.float32)
+    c0 = jnp.linspace(-1, 1, h, dtype=jnp.float32)
+    _, c = sru_scan(xh, big, big, x, c0, block_h=16)
+    np.testing.assert_allclose(c[:, -1], c0, rtol=1e-5, atol=1e-5)
+
+
+def test_sru_scan_open_forget_tracks_input():
+    """f -> 0 makes c_t == xhat_t exactly (no history)."""
+    h, t = 16, 5
+    rng = np.random.default_rng(3)
+    xh = arr(rng, h, t)
+    neg = jnp.full((h, t), -30.0, jnp.float32)
+    c0 = arr(rng, h)
+    _, c = sru_scan(xh, neg, neg, jnp.zeros((h, t), jnp.float32), c0)
+    np.testing.assert_allclose(c, xh, rtol=1e-5, atol=1e-5)
+
+
+def test_sru_scan_shape_validation():
+    with pytest.raises(ValueError):
+        sru_scan(
+            jnp.zeros((4, 3)),
+            jnp.zeros((4, 2)),  # wrong T
+            jnp.zeros((4, 3)),
+            jnp.zeros((4, 3)),
+            jnp.zeros((4,)),
+        )
+
+
+# ---------------------------------------------------------------------------
+# qrnn_scan (Eq. 3 remainder)
+# ---------------------------------------------------------------------------
+
+
+@settings(**SET)
+@given(
+    h=st.integers(1, 300),
+    t=st.integers(1, 48),
+    bh=st.sampled_from([16, 64, 256]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_qrnn_scan_matches_ref(h, t, bh, seed):
+    rng = np.random.default_rng(seed)
+    xh, f, o = (arr(rng, h, t) for _ in range(3))
+    c0 = arr(rng, h)
+    got_h, got_c = qrnn_scan(xh, f, o, c0, block_h=bh)
+    want_h, want_c = ref.qrnn_scan(xh, f, o, c0)
+    np.testing.assert_allclose(got_h, want_h, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(got_c, want_c, rtol=1e-5, atol=1e-5)
+
+
+def test_qrnn_scan_output_gate_closed_means_zero_h():
+    h, t = 24, 6
+    rng = np.random.default_rng(4)
+    xh, f = arr(rng, h, t), arr(rng, h, t)
+    neg = jnp.full((h, t), -30.0, jnp.float32)
+    got_h, _ = qrnn_scan(xh, f, neg, arr(rng, h))
+    np.testing.assert_allclose(got_h, jnp.zeros((h, t)), atol=1e-6)
+
+
+def test_qrnn_scan_cell_bounded_by_tanh():
+    """c is a convex combination of tanh values and c0=0, so |c| <= 1."""
+    h, t = 64, 33
+    rng = np.random.default_rng(5)
+    xh, f, o = (arr(rng, h, t, scale=10.0) for _ in range(3))
+    _, c = qrnn_scan(xh, f, o, jnp.zeros((h,), jnp.float32))
+    assert float(jnp.max(jnp.abs(c))) <= 1.0 + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# lstm_loop (Eq. 1 remainder — the baseline)
+# ---------------------------------------------------------------------------
+
+
+@settings(**SET)
+@given(
+    h=st.integers(1, 96),
+    t=st.integers(1, 24),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_lstm_loop_matches_ref(h, t, seed):
+    rng = np.random.default_rng(seed)
+    gx = arr(rng, 4 * h, t)
+    u = arr(rng, 4 * h, h, scale=0.2)
+    b, h0, c0 = arr(rng, 4 * h), arr(rng, h), arr(rng, h)
+    got_h, got_c = lstm_loop(gx, u, b, h0, c0)
+    want_h, want_c = ref.lstm_loop(gx, u, b, h0, c0)
+    np.testing.assert_allclose(got_h, want_h, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(got_c, want_c, rtol=1e-4, atol=1e-4)
+
+
+def test_lstm_loop_rejects_inconsistent_gate_rows():
+    with pytest.raises(ValueError):
+        lstm_loop(
+            jnp.zeros((12, 3)),
+            jnp.zeros((12, 4)),  # 12 != 4*4
+            jnp.zeros((12,)),
+            jnp.zeros((4,)),
+            jnp.zeros((4,)),
+        )
+
+
+def test_lstm_loop_t1_single_step():
+    """T=1 equals one hand-computed LSTM step."""
+    rng = np.random.default_rng(6)
+    h = 8
+    gx = arr(rng, 4 * h, 1)
+    u = arr(rng, 4 * h, h, scale=0.3)
+    b, h0, c0 = arr(rng, 4 * h), arr(rng, h), arr(rng, h)
+    got_h, got_c = lstm_loop(gx, u, b, h0, c0)
+    g = gx[:, 0] + u @ h0 + b
+    f, i, o, ch = (
+        jax.nn.sigmoid(g[:h]),
+        jax.nn.sigmoid(g[h : 2 * h]),
+        jax.nn.sigmoid(g[2 * h : 3 * h]),
+        jnp.tanh(g[3 * h :]),
+    )
+    c1 = f * c0 + i * ch
+    np.testing.assert_allclose(got_c[:, 0], c1, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(
+        got_h[:, 0], o * jnp.tanh(c1), rtol=1e-5, atol=1e-5
+    )

@@ -1,0 +1,237 @@
+"""L2 correctness: multi-time-step block == strictly sequential recurrence.
+
+This is the paper's core claim made testable: for SRU/QRNN the T-step
+block (one GEMM + elementwise scan) must produce the *same numbers* as
+running the recurrence one step at a time — multi-time-step processing is
+a pure execution-order transformation, not an approximation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+from compile.kernels import ref
+
+SET = dict(deadline=None, max_examples=15, print_blob=True)
+TOL = dict(rtol=2e-4, atol=2e-5)  # GEMM reassociation slack
+
+
+def _rand(key, *shape):
+    return jax.random.normal(key, shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Block vs sequential equivalence (the paper's §3 transformation)
+# ---------------------------------------------------------------------------
+
+
+@settings(**SET)
+@given(
+    h=st.sampled_from([8, 64, 128]),
+    t=st.sampled_from([1, 2, 3, 8, 16, 33]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sru_block_equals_seq(h, t, seed):
+    k = jax.random.PRNGKey(seed)
+    kw, kb, kx, kc = jax.random.split(k, 4)
+    w = _rand(kw, 3 * h, h) * 0.2
+    b = _rand(kb, 2 * h)
+    x = _rand(kx, t, h)
+    c0 = _rand(kc, h)
+    h_blk, c_blk = M.sru_block_step(w, b, x, c0)
+    h_seq, c_seq = ref.sru_seq(w, b, x, c0)
+    np.testing.assert_allclose(h_blk, h_seq, **TOL)
+    np.testing.assert_allclose(c_blk, c_seq, **TOL)
+
+
+@settings(**SET)
+@given(
+    h=st.sampled_from([8, 64]),
+    d=st.sampled_from([8, 40, 64]),
+    t=st.sampled_from([1, 2, 7, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_qrnn_block_equals_seq(h, d, t, seed):
+    k = jax.random.PRNGKey(seed)
+    kw, kb, kx, kc, kp = jax.random.split(k, 5)
+    w = _rand(kw, 3 * h, 2 * d) * 0.2
+    b = _rand(kb, 3 * h)
+    x = _rand(kx, t, d)
+    c0 = _rand(kc, h)
+    x_prev = _rand(kp, d)
+    h_blk, c_blk, x_last_blk = M.qrnn_block_step(w, b, x, c0, x_prev)
+    h_seq, c_seq, x_last_seq = ref.qrnn_seq(w, b, x, c0, x_prev)
+    np.testing.assert_allclose(h_blk, h_seq, **TOL)
+    np.testing.assert_allclose(c_blk, c_seq, **TOL)
+    np.testing.assert_allclose(x_last_blk, x_last_seq, **TOL)
+
+
+@settings(**SET)
+@given(
+    h=st.sampled_from([8, 48]),
+    t=st.sampled_from([1, 2, 9]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_lstm_block_equals_seq(h, t, seed):
+    k = jax.random.PRNGKey(seed)
+    kw, ku, kb, kx, kh, kc = jax.random.split(k, 6)
+    w = _rand(kw, 4 * h, h) * 0.2
+    u = _rand(ku, 4 * h, h) * 0.2
+    b = _rand(kb, 4 * h)
+    x = _rand(kx, t, h)
+    h0, c0 = _rand(kh, h), _rand(kc, h)
+    h_blk, hl_blk, cl_blk = M.lstm_block_step(w, u, b, x, h0, c0)
+    h_seq, hl_seq, cl_seq = ref.lstm_seq(w, u, b, x, h0, c0)
+    np.testing.assert_allclose(h_blk, h_seq, **TOL)
+    np.testing.assert_allclose(hl_blk, hl_seq, **TOL)
+    np.testing.assert_allclose(cl_blk, cl_seq, **TOL)
+
+
+# ---------------------------------------------------------------------------
+# State carry: two T-blocks == one 2T-block == 2T single steps
+# (what the Rust coordinator relies on when chunking a stream)
+# ---------------------------------------------------------------------------
+
+
+@settings(**SET)
+@given(
+    t1=st.sampled_from([1, 3, 8]),
+    t2=st.sampled_from([1, 5, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sru_block_chaining(t1, t2, seed):
+    h = 32
+    k = jax.random.PRNGKey(seed)
+    kw, kb, kx = jax.random.split(k, 3)
+    w = _rand(kw, 3 * h, h) * 0.2
+    b = _rand(kb, 2 * h)
+    x = _rand(kx, t1 + t2, h)
+    c0 = jnp.zeros((h,), jnp.float32)
+
+    h_all, c_all = M.sru_block_step(w, b, x, c0)
+    h_a, c_a = M.sru_block_step(w, b, x[:t1], c0)
+    h_b, c_b = M.sru_block_step(w, b, x[t1:], c_a)
+    np.testing.assert_allclose(jnp.concatenate([h_a, h_b]), h_all, **TOL)
+    np.testing.assert_allclose(c_b, c_all, **TOL)
+
+
+@settings(**SET)
+@given(
+    t1=st.sampled_from([1, 4]),
+    t2=st.sampled_from([2, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_qrnn_block_chaining(t1, t2, seed):
+    h, d = 24, 24
+    k = jax.random.PRNGKey(seed)
+    kw, kb, kx = jax.random.split(k, 3)
+    w = _rand(kw, 3 * h, 2 * d) * 0.2
+    b = _rand(kb, 3 * h)
+    x = _rand(kx, t1 + t2, d)
+    c0 = jnp.zeros((h,), jnp.float32)
+    xp = jnp.zeros((d,), jnp.float32)
+
+    h_all, c_all, xl_all = M.qrnn_block_step(w, b, x, c0, xp)
+    h_a, c_a, xl_a = M.qrnn_block_step(w, b, x[:t1], c0, xp)
+    h_b, c_b, xl_b = M.qrnn_block_step(w, b, x[t1:], c_a, xl_a)
+    np.testing.assert_allclose(jnp.concatenate([h_a, h_b]), h_all, **TOL)
+    np.testing.assert_allclose(c_b, c_all, **TOL)
+    np.testing.assert_allclose(xl_b, xl_all, **TOL)
+
+
+# ---------------------------------------------------------------------------
+# Configs: parameter counts match the paper's ~1M / ~3M claims
+# ---------------------------------------------------------------------------
+
+
+def test_paper_param_counts():
+    small_lstm = M.CONFIGS[("lstm", "small")].param_count()
+    small_sru = M.CONFIGS[("sru", "small")].param_count()
+    large_lstm = M.CONFIGS[("lstm", "large")].param_count()
+    large_sru = M.CONFIGS[("sru", "large")].param_count()
+    # "approximately 1M" / "approximately 3M" with comparable LSTM/SRU sizes
+    assert 0.7e6 < small_lstm < 1.3e6, small_lstm
+    assert 0.7e6 < small_sru < 1.3e6, small_sru
+    assert 2.5e6 < large_lstm < 4.5e6, large_lstm
+    assert 2.5e6 < large_sru < 4.5e6, large_sru
+
+
+def test_config_names_and_dims():
+    assert M.CONFIGS[("lstm", "small")].hidden == 350
+    assert M.CONFIGS[("sru", "small")].hidden == 512
+    assert M.CONFIGS[("lstm", "large")].hidden == 700
+    assert M.CONFIGS[("sru", "large")].hidden == 1024
+    for cfg in M.CONFIGS.values():
+        assert cfg.name == f"{cfg.arch}_{cfg.hidden}"
+
+
+def test_init_shapes():
+    key = jax.random.PRNGKey(0)
+    for (arch, size), cfg in M.CONFIGS.items():
+        p = M.init_params(key, cfg)
+        h, d = cfg.hidden, cfg.input
+        if arch == "lstm":
+            assert p["w"].shape == (4 * h, d)
+            assert p["u"].shape == (4 * h, h)
+            assert p["b"].shape == (4 * h,)
+        elif arch == "sru":
+            assert p["w"].shape == (3 * h, d)
+            assert p["b"].shape == (2 * h,)
+        else:
+            assert p["w"].shape == (3 * h, 2 * d)
+            assert p["b"].shape == (3 * h,)
+
+
+# ---------------------------------------------------------------------------
+# Stacked model
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("cfg", [M.ASR_SMALL, M.ASR_QRNN], ids=lambda c: c.name)
+@pytest.mark.parametrize("t", [1, 8])
+def test_stack_shapes(cfg, t):
+    params = M.init_stack(jax.random.PRNGKey(0), cfg)
+    state = M.stack_init_state(cfg)
+    x = _rand(jax.random.PRNGKey(1), t, cfg.feat)
+    logits, new_state = M.stack_block_step(cfg, params, x, state)
+    assert logits.shape == (t, cfg.vocab)
+    assert set(new_state) == set(state)
+    for k in state:
+        assert new_state[k].shape == state[k].shape
+
+
+def test_stack_chaining_equals_full_block():
+    cfg = M.ASR_SMALL
+    params = M.init_stack(jax.random.PRNGKey(0), cfg)
+    x = _rand(jax.random.PRNGKey(2), 12, cfg.feat)
+    s0 = M.stack_init_state(cfg)
+    full, _ = M.stack_block_step(cfg, params, x, s0)
+    a, s1 = M.stack_block_step(cfg, params, x[:5], s0)
+    b, _ = M.stack_block_step(cfg, params, x[5:], s1)
+    np.testing.assert_allclose(jnp.concatenate([a, b]), full, **TOL)
+
+
+def test_stack_flat_fn_matches_dict_fn():
+    cfg = M.ASR_SMALL
+    params = M.init_stack(jax.random.PRNGKey(0), cfg)
+    state = M.stack_init_state(cfg)
+    x = _rand(jax.random.PRNGKey(3), 4, cfg.feat)
+    pnames, snames = M.stack_flat_order(cfg)
+    fn = M.make_stack_fn(cfg)
+    out = fn(*[params[n] for n in pnames], x, *[state[n] for n in snames])
+    logits, new_state = M.stack_block_step(cfg, params, x, state)
+    np.testing.assert_allclose(out[0], logits, rtol=1e-6)
+    for got, name in zip(out[1:], snames):
+        np.testing.assert_allclose(got, new_state[name], rtol=1e-6)
+
+
+def test_stack_param_count_positive_and_consistent():
+    for cfg in (M.ASR_SMALL, M.ASR_QRNN):
+        params = M.init_stack(jax.random.PRNGKey(0), cfg)
+        total = sum(int(np.prod(p.shape)) for p in params.values())
+        assert total == cfg.param_count()

@@ -1,0 +1,32 @@
+//! Ablation benches (DESIGN.md §4 ABL1–ABL3):
+//! * ABL1 — DRAM bytes/sample vs T (the causal mechanism, measured in the
+//!   cache simulator rather than inferred).
+//! * ABL2 — LSTM §3.1 input-side precompute: speedup saturates ≈2×.
+//! * ABL3 — energy/sample vs T (the title's "low power" claim).
+
+use mtsrnn::bench::tables::{ablation_dram, ablation_energy, ablation_lstm_precompute, ablation_quant};
+use mtsrnn::bench::{write_report, BenchOpts};
+use mtsrnn::models::config::{Arch, ModelSize};
+
+fn main() {
+    let opts = BenchOpts {
+        warmup_iters: 1,
+        measure_iters: 3,
+        max_seconds: 60.0,
+    };
+    let tables = [
+        ("ablation_dram", ablation_dram(Arch::Sru, ModelSize::Large, 1024)),
+        (
+            "ablation_lstm_precompute",
+            ablation_lstm_precompute(ModelSize::Small, 512, &opts),
+        ),
+        ("ablation_energy", ablation_energy(Arch::Sru, ModelSize::Large, 1024)),
+        ("ablation_quant", ablation_quant(ModelSize::Small, 512, &opts)),
+    ];
+    for (name, t) in tables {
+        println!("{}", t.render());
+        if let Ok(p) = write_report(&format!("{name}.csv"), &t.to_csv()) {
+            println!("wrote {}\n", p.display());
+        }
+    }
+}

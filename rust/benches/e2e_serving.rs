@@ -1,0 +1,70 @@
+//! End-to-end serving bench: the paper's trade-off seen from the
+//! coordinator — throughput, per-frame latency and weight-traffic
+//! reduction of the full ASR stack as a function of the block policy.
+//!
+//! This is the "Table 1–8 effect" expressed in serving terms: bigger T
+//! buys throughput and DRAM-traffic reduction at the cost of per-frame
+//! latency (frames wait for their block to fill).
+
+use std::time::Duration;
+
+use mtsrnn::coordinator::{Coordinator, CoordinatorConfig, NativeBackend, PolicyMode};
+use mtsrnn::engine::NativeStack;
+use mtsrnn::models::config::ASR_SRU;
+use mtsrnn::models::StackParams;
+use mtsrnn::util::{Rng, Timer};
+use mtsrnn::workload::AsrTrace;
+
+fn run(policy: PolicyMode, label: &str, frames: &[f32]) {
+    let params = StackParams::init(&ASR_SRU, &mut Rng::new(2018));
+    let backend = NativeBackend::new(NativeStack::new(ASR_SRU, params, 32));
+    let mut coord = Coordinator::new(
+        backend,
+        CoordinatorConfig {
+            policy,
+            max_wait: Duration::from_millis(80),
+            max_sessions: 4,
+        },
+    );
+    let id = coord.open().unwrap();
+    let timer = Timer::start();
+    let mut out = 0usize;
+    for chunk in frames.chunks(4 * ASR_SRU.feat) {
+        coord.feed(id, chunk).unwrap();
+        coord.tick().unwrap();
+        out += coord.drain(id, usize::MAX).unwrap().len() / ASR_SRU.vocab;
+    }
+    out += coord.close(id).unwrap().len() / ASR_SRU.vocab;
+    let wall = timer.elapsed_ms();
+    let n = frames.len() / ASR_SRU.feat;
+    assert_eq!(out, n);
+    println!(
+        "{label:<14} {:>8.1} ms wall  {:>7.0} frames/s  mean_T {:>5.1}  p50 {:>7.2} ms  p99 {:>7.2} ms  traffic ÷{:.1}",
+        wall,
+        n as f64 / (wall / 1e3),
+        coord.metrics.mean_block(),
+        coord.metrics.latency_us.quantile_bound(0.5) / 1e3,
+        coord.metrics.latency_us.quantile_bound(0.99) / 1e3,
+        coord.metrics.traffic_reduction(),
+    );
+}
+
+fn main() {
+    let n = 2000;
+    let mut trace = AsrTrace::new(ASR_SRU.feat, 11);
+    let frames = trace.frames(n);
+    println!(
+        "E2E serving: {} ({} params), {n} speech-like frames\n",
+        ASR_SRU.name(),
+        ASR_SRU.param_count()
+    );
+    for (policy, label) in [
+        (PolicyMode::Fixed(1), "fixed T=1"),
+        (PolicyMode::Fixed(4), "fixed T=4"),
+        (PolicyMode::Fixed(16), "fixed T=16"),
+        (PolicyMode::Fixed(32), "fixed T=32"),
+        (PolicyMode::Adaptive, "adaptive"),
+    ] {
+        run(policy, label, &frames);
+    }
+}

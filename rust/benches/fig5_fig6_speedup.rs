@@ -1,0 +1,29 @@
+//! Regenerates paper Figures 5 and 6: relative speed-up of SRU (Fig. 5)
+//! and QRNN (Fig. 6) vs the number of parallelization steps, for
+//! small/large models on both simulated platforms.
+
+use mtsrnn::bench::tables::figure_series;
+use mtsrnn::bench::{ascii_plot, write_report};
+use mtsrnn::models::config::Arch;
+
+fn main() {
+    for (fig, arch) in [("5", Arch::Sru), ("6", Arch::Qrnn)] {
+        let series = figure_series(arch, 1024);
+        println!(
+            "{}",
+            ascii_plot(
+                &format!("Figure {fig}: relative speed-up of {arch} (simulated)"),
+                &series
+            )
+        );
+        let mut csv = String::from("series,t,speedup\n");
+        for (name, pts) in &series {
+            for (t, s) in pts {
+                csv.push_str(&format!("{name},{t},{s:.4}\n"));
+            }
+        }
+        if let Ok(p) = write_report(&format!("fig{fig}.csv"), &csv) {
+            println!("wrote {}\n", p.display());
+        }
+    }
+}

@@ -1,0 +1,119 @@
+//! Microbenchmarks of the L3 hot paths (the §Perf profiling substrate):
+//! * blocked GEMM GFLOP/s across the paper's shapes (weight reuse curve)
+//! * GEMV GB/s (the T=1 bottleneck)
+//! * element-wise recurrence throughput (the sequential remainder)
+//! * coordinator dispatch overhead per block (must stay ≪ block compute)
+
+use std::time::Duration;
+
+use mtsrnn::bench::{bench, print_measurement, BenchOpts};
+use mtsrnn::coordinator::{Coordinator, CoordinatorConfig, NativeBackend, PolicyMode};
+use mtsrnn::engine::{Engine, NativeStack, SruEngine};
+use mtsrnn::linalg::{gemm, gemv};
+use mtsrnn::models::config::{Arch, ModelConfig, ModelSize, StackConfig};
+use mtsrnn::models::{SruParams, StackParams};
+use mtsrnn::util::Rng;
+
+fn main() {
+    let opts = BenchOpts {
+        warmup_iters: 2,
+        measure_iters: 7,
+        max_seconds: 30.0,
+    };
+    let mut rng = Rng::new(1);
+
+    println!("-- GEMM (C[3H,T] = W[3H,H] @ X[H,T]) --");
+    for (h, t) in [(512, 1), (512, 16), (512, 128), (1024, 16), (1024, 128)] {
+        let m = 3 * h;
+        let mut a = vec![0.0; m * h];
+        let mut b = vec![0.0; h * t];
+        rng.fill_normal(&mut a, 0.1);
+        rng.fill_normal(&mut b, 1.0);
+        let mut c = vec![0.0; m * t];
+        let meas = bench(&format!("gemm {m}x{h}x{t}"), &opts, || {
+            gemm(&mut c, &a, &b, m, h, t)
+        });
+        let gflops = 2.0 * (m * h * t) as f64 / meas.median_ns;
+        println!(
+            "  {:<22} {:>9.2} GFLOP/s (median {:.3} ms)",
+            format!("{m}x{h}x{t}"),
+            gflops,
+            meas.median_ns / 1e6
+        );
+    }
+
+    println!("-- GEMV (y[3H] = W[3H,H] @ x[H]) --");
+    for h in [512usize, 1024] {
+        let m = 3 * h;
+        let mut a = vec![0.0; m * h];
+        rng.fill_normal(&mut a, 0.1);
+        let x = vec![1.0; h];
+        let mut y = vec![0.0; m];
+        let meas = bench(&format!("gemv {m}x{h}"), &opts, || {
+            gemv(&mut y, &a, &x, m, h)
+        });
+        let gbs = (m * h * 4) as f64 / meas.median_ns;
+        println!(
+            "  {:<22} {:>9.2} GB/s weight stream (median {:.1} µs)",
+            format!("{m}x{h}"),
+            gbs,
+            meas.median_ns / 1e3
+        );
+    }
+
+    println!("-- SRU recurrence remainder (scan only, via T=block run) --");
+    for (h, t) in [(512, 128), (1024, 128)] {
+        let cfg = ModelConfig {
+            arch: Arch::Sru,
+            hidden: h,
+            input: h,
+        };
+        let params = SruParams::init(&cfg, &mut Rng::new(2));
+        let mut eng = SruEngine::new(params, t);
+        let mut x = vec![0.0; t * h];
+        Rng::new(3).fill_normal(&mut x, 1.0);
+        let mut out = vec![0.0; t * h];
+        let meas = bench(&format!("sru block {h}x{t}"), &opts, || {
+            eng.run_sequence(&x, t, &mut out)
+        });
+        print_measurement(&meas);
+    }
+
+    println!("-- coordinator dispatch overhead --");
+    // Tiny stack: measures coordination cost, not compute.
+    let cfg = StackConfig {
+        arch: Arch::Sru,
+        feat: 8,
+        hidden: 16,
+        depth: 1,
+        vocab: 4,
+    };
+    let params = StackParams::init(&cfg, &mut Rng::new(4));
+    let backend = NativeBackend::new(NativeStack::new(cfg, params, 32));
+    let mut coord = Coordinator::new(
+        backend,
+        CoordinatorConfig {
+            policy: PolicyMode::Fixed(32),
+            max_wait: Duration::from_millis(100),
+            max_sessions: 4,
+        },
+    );
+    let id = coord.open().unwrap();
+    let frames = vec![0.0f32; 32 * 8];
+    let meas = bench("feed+tick+drain 32 frames", &opts, || {
+        coord.feed(id, &frames).unwrap();
+        coord.tick().unwrap();
+        let _ = coord.drain(id, usize::MAX).unwrap();
+    });
+    print_measurement(&meas);
+    println!(
+        "  per-frame coordination {:.0} ns",
+        meas.median_ns / 32.0
+    );
+
+    println!(
+        "-- ModelSize sanity: {:?} weights {} MiB --",
+        ModelSize::Large,
+        ModelConfig::paper(Arch::Sru, ModelSize::Large).weight_bytes() / (1024 * 1024)
+    );
+}

@@ -1,0 +1,18 @@
+//! Regenerates paper Table 1: small-model SRU on Intel (native host
+//! wall-clock, 1,024 samples) — LSTM baseline + SRU-1..128.
+
+use mtsrnn::bench::tables::{generate_table, PAPER_TABLES};
+use mtsrnn::bench::{write_report, BenchOpts};
+
+fn main() {
+    let opts = BenchOpts {
+        warmup_iters: 1,
+        measure_iters: 3,
+        max_seconds: 60.0,
+    };
+    let t = generate_table(&PAPER_TABLES[0], 1024, &opts);
+    println!("{}", t.render());
+    if let Ok(p) = write_report("table1.csv", &t.to_csv()) {
+        println!("wrote {}", p.display());
+    }
+}

@@ -1,0 +1,281 @@
+//! Hand-rolled benchmark harness (criterion is unavailable offline).
+//!
+//! Provides warmup + repeated timing with median/p95 reporting, plus the
+//! table/CSV printers the per-paper-table bench binaries use.  Designed
+//! for the paper's measurement protocol: time the processing of 1,024
+//! samples, report milliseconds and speedup vs a baseline row.
+
+pub mod tables;
+
+use std::time::Instant;
+
+use crate::util::stats::Summary;
+use crate::util::timer::fmt_ns;
+
+/// Configuration for one measurement.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchOpts {
+    pub warmup_iters: usize,
+    pub measure_iters: usize,
+    /// Hard cap on total measure time (large models × many T values).
+    pub max_seconds: f64,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        Self {
+            warmup_iters: 1,
+            measure_iters: 5,
+            max_seconds: 20.0,
+        }
+    }
+}
+
+/// Result of measuring one closure.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+impl Measurement {
+    pub fn median_ms(&self) -> f64 {
+        self.median_ns / 1e6
+    }
+}
+
+/// Time `f` under `opts`; `f` should perform one full unit of work.
+pub fn bench(name: &str, opts: &BenchOpts, mut f: impl FnMut()) -> Measurement {
+    for _ in 0..opts.warmup_iters {
+        f();
+    }
+    let mut s = Summary::new();
+    let start = Instant::now();
+    for _ in 0..opts.measure_iters {
+        let t0 = Instant::now();
+        f();
+        s.push(t0.elapsed().as_nanos() as f64);
+        if start.elapsed().as_secs_f64() > opts.max_seconds {
+            break;
+        }
+    }
+    let mut s2 = s.clone();
+    Measurement {
+        name: name.to_string(),
+        iters: s.len(),
+        median_ns: s2.median(),
+        mean_ns: s.mean(),
+        p95_ns: s2.p95(),
+        min_ns: s.min(),
+    }
+}
+
+/// One row of a paper-style table.
+#[derive(Debug, Clone)]
+pub struct TableRow {
+    pub model: String,
+    pub millis: f64,
+    /// Speedup vs the table's baseline row (SRU-1 / QRNN-1), percent
+    /// (100% = baseline), `None` for rows outside the speedup basis
+    /// (the LSTM reference row, as in the paper).
+    pub speedup_pct: Option<f64>,
+}
+
+/// Paper-style table: header + rows + optional note, printed aligned and
+/// exportable as CSV.
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub title: String,
+    pub rows: Vec<TableRow>,
+    pub note: String,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>) -> Self {
+        Self {
+            title: title.into(),
+            rows: Vec::new(),
+            note: String::new(),
+        }
+    }
+
+    pub fn push(&mut self, model: impl Into<String>, millis: f64, speedup_pct: Option<f64>) {
+        self.rows.push(TableRow {
+            model: model.into(),
+            millis,
+            speedup_pct,
+        });
+    }
+
+    /// Compute speedups against the row named `baseline` (paper style:
+    /// baseline = 100%).
+    pub fn compute_speedups(&mut self, baseline: &str) {
+        let base = self
+            .rows
+            .iter()
+            .find(|r| r.model == baseline)
+            .map(|r| r.millis);
+        if let Some(base) = base {
+            for r in &mut self.rows {
+                if r.model != baseline && r.speedup_pct.is_none() && r.model != "LSTM" {
+                    r.speedup_pct = Some(base / r.millis * 100.0);
+                }
+                if r.model == baseline {
+                    r.speedup_pct = Some(100.0);
+                }
+            }
+        }
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("### {}\n", self.title));
+        out.push_str(&format!(
+            "{:<12} {:>16} {:>10}\n",
+            "Model", "Execution Time", "Speed-up"
+        ));
+        for r in &self.rows {
+            let su = match r.speedup_pct {
+                Some(p) => format!("{p:.1}%"),
+                None => "-".to_string(),
+            };
+            out.push_str(&format!(
+                "{:<12} {:>13.3} ms {:>10}\n",
+                r.model, r.millis, su
+            ));
+        }
+        if !self.note.is_empty() {
+            out.push_str(&format!("note: {}\n", self.note));
+        }
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("model,millis,speedup_pct\n");
+        for r in &self.rows {
+            out.push_str(&format!(
+                "{},{:.6},{}\n",
+                r.model,
+                r.millis,
+                r.speedup_pct.map(|p| format!("{p:.2}")).unwrap_or_default()
+            ));
+        }
+        out
+    }
+}
+
+/// ASCII line plot for the figures (speedup vs block size, log2 x-axis).
+pub fn ascii_plot(title: &str, series: &[(String, Vec<(usize, f64)>)]) -> String {
+    let mut out = format!("### {title}\n");
+    let ymax = series
+        .iter()
+        .flat_map(|(_, pts)| pts.iter().map(|p| p.1))
+        .fold(1.0f64, f64::max);
+    let height = 16usize;
+    let xs: Vec<usize> = series
+        .first()
+        .map(|(_, pts)| pts.iter().map(|p| p.0).collect())
+        .unwrap_or_default();
+    let width = xs.len();
+    let marks = ['*', 'o', '+', 'x', '#', '@'];
+    let mut grid = vec![vec![' '; width * 6]; height];
+    for (si, (_, pts)) in series.iter().enumerate() {
+        for (xi, &(_, y)) in pts.iter().enumerate() {
+            let row = ((y / ymax) * (height - 1) as f64).round() as usize;
+            let row = height - 1 - row.min(height - 1);
+            grid[row][xi * 6 + 3] = marks[si % marks.len()];
+        }
+    }
+    for (i, row) in grid.iter().enumerate() {
+        let yval = ymax * (height - 1 - i) as f64 / (height - 1) as f64;
+        out.push_str(&format!("{yval:6.1}x |"));
+        out.push_str(&row.iter().collect::<String>());
+        out.push('\n');
+    }
+    out.push_str("        +");
+    out.push_str(&"-".repeat(width * 6));
+    out.push('\n');
+    out.push_str("         ");
+    for x in &xs {
+        out.push_str(&format!("{x:^6}"));
+    }
+    out.push_str("  (block size T)\n");
+    for (si, (name, _)) in series.iter().enumerate() {
+        out.push_str(&format!("  {} = {}\n", marks[si % marks.len()], name));
+    }
+    out
+}
+
+/// Write a CSV/text report under `bench_out/`.
+pub fn write_report(name: &str, content: &str) -> std::io::Result<std::path::PathBuf> {
+    let dir = std::path::Path::new("bench_out");
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(name);
+    std::fs::write(&path, content)?;
+    Ok(path)
+}
+
+/// Pretty print a measurement (bench binaries' per-line output).
+pub fn print_measurement(m: &Measurement) {
+    println!(
+        "{:<40} median {:>12}  (p95 {:>12}, n={})",
+        m.name,
+        fmt_ns(m.median_ns),
+        fmt_ns(m.p95_ns),
+        m.iters
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_iters() {
+        let opts = BenchOpts {
+            warmup_iters: 1,
+            measure_iters: 4,
+            max_seconds: 10.0,
+        };
+        let mut calls = 0;
+        let m = bench("t", &opts, || calls += 1);
+        assert_eq!(calls, 5); // 1 warmup + 4 measured
+        assert_eq!(m.iters, 4);
+        assert!(m.median_ns >= 0.0);
+    }
+
+    #[test]
+    fn table_speedups_paper_convention() {
+        let mut t = Table::new("Table X");
+        t.push("LSTM", 200.0, None);
+        t.push("SRU-1", 100.0, None);
+        t.push("SRU-4", 25.0, None);
+        t.compute_speedups("SRU-1");
+        assert_eq!(t.rows[0].speedup_pct, None, "LSTM row shows '-'");
+        assert_eq!(t.rows[1].speedup_pct, Some(100.0));
+        assert_eq!(t.rows[2].speedup_pct, Some(400.0));
+        let txt = t.render();
+        assert!(txt.contains("400.0%"));
+        assert!(txt.contains("SRU-4"));
+        let csv = t.to_csv();
+        assert!(csv.starts_with("model,millis"));
+        assert!(csv.contains("SRU-4,25.0"));
+    }
+
+    #[test]
+    fn ascii_plot_contains_series() {
+        let s = vec![
+            ("arm".to_string(), vec![(1, 1.0), (2, 2.0), (4, 4.0)]),
+            ("intel".to_string(), vec![(1, 1.0), (2, 1.5), (4, 2.0)]),
+        ];
+        let p = ascii_plot("Fig 5", &s);
+        assert!(p.contains("Fig 5"));
+        assert!(p.contains('*'));
+        assert!(p.contains('o'));
+        assert!(p.contains("arm"));
+    }
+}

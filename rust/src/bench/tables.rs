@@ -1,0 +1,314 @@
+//! Regenerators for every table and figure in the paper's evaluation.
+//!
+//! Two measurement paths, per DESIGN.md §4–5:
+//! * **native** — wall-clock of the Rust engine on the host CPU (the
+//!   analog of the paper's Intel desktop results, Tables 1/2/5/6);
+//! * **sim** — the trace-driven cache/DRAM model with the paper's exact
+//!   platform geometries (Tables 3/4/7/8 on the ARM config we don't
+//!   physically have; the Intel config doubles as a sanity cross-check).
+//!
+//! Used by the `mtsrnn tables|figures|ablation` CLI and by the
+//! `rust/benches/table*.rs` bench binaries.
+
+use crate::bench::{bench, BenchOpts, Table};
+use crate::engine::{Engine, LstmEngine, LstmMode, QrnnEngine, SruEngine};
+use crate::memsim::{simulate, CpuSpec, SimConfig, ARM_DENVER2, INTEL_I7_3930K};
+use crate::models::config::{Arch, ModelConfig, ModelSize, PAPER_BLOCK_SIZES};
+use crate::models::{LstmParams, QrnnParams, SruParams};
+use crate::util::Rng;
+use crate::workload::gaussian_frames;
+
+const WEIGHT_SEED: u64 = 2018;
+
+/// Build an engine for (arch, size, T) with seeded weights.
+pub fn build_engine(arch: Arch, size: ModelSize, t: usize) -> Box<dyn Engine> {
+    let cfg = ModelConfig::paper(arch, size);
+    let mut rng = Rng::new(WEIGHT_SEED);
+    match arch {
+        Arch::Sru => Box::new(SruEngine::new(SruParams::init(&cfg, &mut rng), t)),
+        Arch::Qrnn => Box::new(QrnnEngine::new(QrnnParams::init(&cfg, &mut rng), t)),
+        Arch::Lstm => {
+            let p = LstmParams::init(&cfg, &mut rng);
+            let mode = if t <= 1 {
+                LstmMode::SingleStep
+            } else {
+                LstmMode::Precompute(t)
+            };
+            Box::new(LstmEngine::new(p, mode))
+        }
+    }
+}
+
+/// Wall-clock milliseconds to process `samples` frames at block size `t`.
+pub fn native_ms(arch: Arch, size: ModelSize, t: usize, samples: usize, opts: &BenchOpts) -> f64 {
+    let mut engine = build_engine(arch, size, t);
+    let d = engine.input();
+    let h = engine.hidden();
+    let mut rng = Rng::new(7);
+    let x = gaussian_frames(&mut rng, samples, d, 1.0);
+    let mut out = vec![0.0; samples * h];
+    let m = bench(
+        &format!("{arch}-{t}"),
+        opts,
+        || {
+            engine.reset();
+            engine.run_sequence(&x, samples, &mut out);
+        },
+    );
+    m.median_ms()
+}
+
+/// Simulated milliseconds on `cpu` (trace-driven model).
+pub fn sim_ms(cpu: CpuSpec, arch: Arch, size: ModelSize, t: usize, samples: usize) -> f64 {
+    let mut cfg = SimConfig::paper(cpu, ModelConfig::paper(arch, size), t);
+    cfg.samples = samples;
+    simulate(&cfg).millis()
+}
+
+/// Which measurement backs a table.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Meas {
+    /// Host wall-clock (this machine stands in for the Intel desktop).
+    NativeHost,
+    /// Cache/DRAM simulation of the named platform.
+    Sim(&'static str),
+}
+
+/// Descriptor of one paper table.
+#[derive(Debug, Clone, Copy)]
+pub struct PaperTable {
+    pub id: &'static str,
+    pub title: &'static str,
+    pub arch: Arch,
+    pub size: ModelSize,
+    pub meas: Meas,
+    /// Whether the paper's table includes the LSTM reference row.
+    pub lstm_row: bool,
+}
+
+/// All eight tables of the paper §4.
+pub const PAPER_TABLES: [PaperTable; 8] = [
+    PaperTable { id: "t1", title: "Table 1: small SRU, Intel (native host)", arch: Arch::Sru, size: ModelSize::Small, meas: Meas::NativeHost, lstm_row: true },
+    PaperTable { id: "t2", title: "Table 2: large SRU, Intel (native host)", arch: Arch::Sru, size: ModelSize::Large, meas: Meas::NativeHost, lstm_row: true },
+    PaperTable { id: "t3", title: "Table 3: small SRU, ARM (simulated Denver2)", arch: Arch::Sru, size: ModelSize::Small, meas: Meas::Sim("arm"), lstm_row: true },
+    PaperTable { id: "t4", title: "Table 4: large SRU, ARM (simulated Denver2)", arch: Arch::Sru, size: ModelSize::Large, meas: Meas::Sim("arm"), lstm_row: true },
+    PaperTable { id: "t5", title: "Table 5: small QRNN, Intel (native host)", arch: Arch::Qrnn, size: ModelSize::Small, meas: Meas::NativeHost, lstm_row: false },
+    PaperTable { id: "t6", title: "Table 6: large QRNN, Intel (native host)", arch: Arch::Qrnn, size: ModelSize::Large, meas: Meas::NativeHost, lstm_row: false },
+    PaperTable { id: "t7", title: "Table 7: small QRNN, ARM (simulated Denver2)", arch: Arch::Qrnn, size: ModelSize::Small, meas: Meas::Sim("arm"), lstm_row: false },
+    PaperTable { id: "t8", title: "Table 8: large QRNN, ARM (simulated Denver2)", arch: Arch::Qrnn, size: ModelSize::Large, meas: Meas::Sim("arm"), lstm_row: false },
+];
+
+pub fn cpu_by_name(name: &str) -> Option<CpuSpec> {
+    match name {
+        "intel" => Some(INTEL_I7_3930K),
+        "arm" => Some(ARM_DENVER2),
+        _ => None,
+    }
+}
+
+/// Generate one paper table.
+pub fn generate_table(pt: &PaperTable, samples: usize, opts: &BenchOpts) -> Table {
+    let mut table = Table::new(pt.title);
+    let prefix = match pt.arch {
+        Arch::Sru => "SRU",
+        Arch::Qrnn => "QRNN",
+        Arch::Lstm => "LSTM",
+    };
+    let measure = |arch: Arch, t: usize| -> f64 {
+        match pt.meas {
+            Meas::NativeHost => native_ms(arch, pt.size, t, samples, opts),
+            Meas::Sim(cpu) => sim_ms(cpu_by_name(cpu).unwrap(), arch, pt.size, t, samples),
+        }
+    };
+    if pt.lstm_row {
+        table.push("LSTM", measure(Arch::Lstm, 1), None);
+    }
+    for &t in &PAPER_BLOCK_SIZES {
+        table.push(format!("{prefix}-{t}"), measure(pt.arch, t), None);
+    }
+    table.compute_speedups(&format!("{prefix}-1"));
+    table.note = match pt.meas {
+        Meas::NativeHost => format!(
+            "host wall-clock, {samples} samples, median of {} iters; shapes (not absolute times) comparable to the paper",
+            opts.measure_iters
+        ),
+        Meas::Sim(cpu) => format!(
+            "trace-driven cache/DRAM simulation of {cpu}, {samples} samples (see DESIGN.md §5)"
+        ),
+    };
+    table
+}
+
+/// Figure 5/6 series: speedup vs block size for small/large × Intel/ARM.
+/// `arch` = Sru → Fig. 5, Qrnn → Fig. 6.  Simulation-based (both
+/// platforms on equal footing, like the paper's figures).
+pub fn figure_series(arch: Arch, samples: usize) -> Vec<(String, Vec<(usize, f64)>)> {
+    let mut out = Vec::new();
+    for (cpu, cname) in [(INTEL_I7_3930K, "intel"), (ARM_DENVER2, "arm")] {
+        for size in [ModelSize::Small, ModelSize::Large] {
+            let base = sim_ms(cpu, arch, size, 1, samples);
+            let pts: Vec<(usize, f64)> = PAPER_BLOCK_SIZES
+                .iter()
+                .map(|&t| (t, base / sim_ms(cpu, arch, size, t, samples)))
+                .collect();
+            out.push((
+                format!("{cname}-{}", match size { ModelSize::Small => "small", ModelSize::Large => "large" }),
+                pts,
+            ));
+        }
+    }
+    out
+}
+
+/// ABL1: DRAM bytes per sample vs T (the causal mechanism).
+pub fn ablation_dram(arch: Arch, size: ModelSize, samples: usize) -> Table {
+    let mut t = Table::new(format!(
+        "ABL1: DRAM bytes/sample vs T ({arch} {:?}, simulated Denver2)",
+        size
+    ));
+    for &tb in &PAPER_BLOCK_SIZES {
+        let mut cfg = SimConfig::paper(ARM_DENVER2, ModelConfig::paper(arch, size), tb);
+        cfg.samples = samples;
+        let r = simulate(&cfg);
+        // reuse millis column for KB/sample; note explains units.
+        t.push(
+            format!("T={tb}"),
+            r.dram_bytes_per_sample / 1024.0,
+            None,
+        );
+    }
+    t.note = "column is KiB of DRAM traffic per input sample (not ms)".into();
+    t
+}
+
+/// ABL2: LSTM input-side precompute (§3.1) — the "at most half" result.
+pub fn ablation_lstm_precompute(size: ModelSize, samples: usize, opts: &BenchOpts) -> Table {
+    let mut t = Table::new(format!(
+        "ABL2: LSTM §3.1 precompute ({:?}, native host + sim traffic)",
+        size
+    ));
+    for &tb in &[1usize, 4, 16, 64] {
+        let ms = native_ms(Arch::Lstm, size, tb, samples, opts);
+        t.push(format!("LSTM-pre-{tb}"), ms, None);
+    }
+    t.compute_speedups("LSTM-pre-1");
+    t.note = "speedup saturates ~2x: only the W@x half of the traffic is amortizable".into();
+    t
+}
+
+/// ABL5 (extension): int8 weight quantization x multi-time-step — the
+/// two traffic reductions multiply.  Native wall-clock + traffic ratio.
+pub fn ablation_quant(size: ModelSize, samples: usize, opts: &BenchOpts) -> Table {
+    use crate::engine::{Engine, QuantSruEngine, SruEngine};
+    let cfg = ModelConfig::paper(Arch::Sru, size);
+    let params = crate::models::SruParams::init(&cfg, &mut Rng::new(WEIGHT_SEED));
+    let mut t = Table::new(format!(
+        "ABL5: int8 weights x multi-time-step (SRU {size:?}, native host)"
+    ));
+    let mut x = gaussian_frames(&mut Rng::new(7), samples, cfg.input, 1.0);
+    x.truncate(samples * cfg.input);
+    let mut out = vec![0.0; samples * cfg.hidden];
+    for &tb in &[1usize, 8, 32] {
+        let mut f32e = SruEngine::new(params.clone(), tb);
+        let m = bench(&format!("f32-{tb}"), opts, || {
+            f32e.reset();
+            f32e.run_sequence(&x, samples, &mut out);
+        });
+        t.push(format!("f32-T{tb}"), m.median_ms(), None);
+        let mut qe = QuantSruEngine::new(&params, tb);
+        let m = bench(&format!("int8-{tb}"), opts, || {
+            qe.reset();
+            qe.run_sequence(&x, samples, &mut out);
+        });
+        t.push(format!("int8-T{tb}"), m.median_ms(), None);
+    }
+    t.compute_speedups("f32-T1");
+    let f32_bytes = 3 * cfg.hidden * cfg.input * 4;
+    let q = QuantSruEngine::new(&params, 1);
+    t.note = format!(
+        "weight bytes/block: f32 {} KiB vs int8 {} KiB (x{:.1} traffic cut, multiplies with T)",
+        f32_bytes / 1024,
+        q.weight_bytes_per_block() / 1024,
+        f32_bytes as f64 / q.weight_bytes_per_block() as f64
+    );
+    t
+}
+
+/// ABL3: energy per sample vs T (the title's "low power" claim).
+pub fn ablation_energy(arch: Arch, size: ModelSize, samples: usize) -> Table {
+    let mut t = Table::new(format!(
+        "ABL3: energy/sample vs T ({arch} {:?}, simulated)",
+        size
+    ));
+    for (cpu, cname) in [(INTEL_I7_3930K, "intel"), (ARM_DENVER2, "arm")] {
+        for &tb in &[1usize, 8, 32, 128] {
+            let mut cfg = SimConfig::paper(cpu, ModelConfig::paper(arch, size), tb);
+            cfg.samples = samples;
+            let r = simulate(&cfg);
+            t.push(
+                format!("{cname}-T{tb}"),
+                r.energy_per_sample_joules * 1e6,
+                None,
+            );
+        }
+    }
+    t.note = "column is µJ per sample (not ms)".into();
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_opts() -> BenchOpts {
+        BenchOpts {
+            warmup_iters: 0,
+            measure_iters: 1,
+            max_seconds: 30.0,
+        }
+    }
+
+    #[test]
+    fn sim_table_shape_matches_paper_t3() {
+        // Table 3 shape: LSTM > SRU-1 > SRU-2 > ... with strong total gain.
+        let t = generate_table(&PAPER_TABLES[2], 256, &quick_opts());
+        assert_eq!(t.rows.len(), 9);
+        assert_eq!(t.rows[0].model, "LSTM");
+        assert!(t.rows[0].millis > t.rows[1].millis, "LSTM slower than SRU-1");
+        let sru1 = t.rows[1].millis;
+        let sru32 = t.rows[6].millis;
+        assert!(sru1 / sru32 > 4.0, "ARM speedup at T=32: {}", sru1 / sru32);
+    }
+
+    #[test]
+    fn native_table_small_shape() {
+        // One-iteration native run at reduced samples: SRU-16 must beat
+        // SRU-1 clearly on any host with caches smaller than 3 MB of
+        // weights... which is every host; weaker assert to stay robust.
+        let ms1 = native_ms(Arch::Sru, ModelSize::Small, 1, 128, &quick_opts());
+        let ms16 = native_ms(Arch::Sru, ModelSize::Small, 16, 128, &quick_opts());
+        assert!(
+            ms16 < ms1,
+            "T=16 ({ms16:.1}ms) should beat T=1 ({ms1:.1}ms)"
+        );
+    }
+
+    #[test]
+    fn figure_series_has_four_curves() {
+        let s = figure_series(Arch::Sru, 128);
+        assert_eq!(s.len(), 4);
+        for (name, pts) in &s {
+            assert_eq!(pts.len(), PAPER_BLOCK_SIZES.len(), "{name}");
+            assert!((pts[0].1 - 1.0).abs() < 1e-9, "{name} starts at 1x");
+            // Monotone-ish: last point well above first.
+            assert!(pts.last().unwrap().1 > 1.5, "{name}");
+        }
+    }
+
+    #[test]
+    fn dram_ablation_monotone() {
+        let t = ablation_dram(Arch::Sru, ModelSize::Small, 256);
+        let kib: Vec<f64> = t.rows.iter().map(|r| r.millis).collect();
+        assert!(kib[0] > kib[4] * 4.0, "T=1 {} vs T=16 {}", kib[0], kib[4]);
+    }
+}

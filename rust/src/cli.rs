@@ -1,0 +1,130 @@
+//! Hand-rolled CLI argument parsing (clap is unavailable offline).
+//!
+//! Grammar: `mtsrnn <command> [--flag value]... [--switch]...`
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: String,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Args, String> {
+        let mut it = args.into_iter().peekable();
+        let command = it.next().unwrap_or_else(|| "help".to_string());
+        let mut out = Args {
+            command,
+            ..Default::default()
+        };
+        while let Some(a) = it.next() {
+            let name = a
+                .strip_prefix("--")
+                .ok_or_else(|| format!("expected --flag, got {a:?}"))?
+                .to_string();
+            if name.is_empty() {
+                return Err("empty flag name".into());
+            }
+            // `--flag value` when the next token is not a flag; else switch.
+            match it.peek() {
+                Some(v) if !v.starts_with("--") => {
+                    let v = it.next().unwrap();
+                    out.flags.insert(name, v);
+                }
+                _ => out.switches.push(name),
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<usize>()
+                .map_err(|e| format!("--{name}: {e}")),
+        }
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+}
+
+pub const USAGE: &str = "\
+mtsrnn — multi-time-step single-stream RNN inference (SAMOS'18 repro)
+
+USAGE: mtsrnn <command> [options]
+
+COMMANDS:
+  tables     regenerate paper tables        [--exp t1..t8|all] [--samples N]
+                                            [--iters N] [--csv]
+  figures    regenerate paper figures 5/6   [--fig 5|6|all] [--samples N] [--csv]
+  ablation   run ablations                  --exp dram|lstm-precompute|energy|quant
+  simulate   one memsim point               --cpu intel|arm --arch sru|qrnn|lstm
+                                            --size small|large --t N [--samples N]
+  parity     check artifacts vs JAX goldens [--artifacts DIR] [--filter SUBSTR]
+  serve      streaming TCP server           [--artifacts DIR] [--stack NAME]
+                                            [--backend native|pjrt] [--port P]
+                                            [--block N | --adaptive]
+                                            [--max-wait-ms N]
+  info       model/platform inventory
+  help       this text
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn basic_command_and_flags() {
+        let a = parse(&["tables", "--exp", "t3", "--samples", "256", "--csv"]);
+        assert_eq!(a.command, "tables");
+        assert_eq!(a.get("exp"), Some("t3"));
+        assert_eq!(a.get_usize("samples", 0).unwrap(), 256);
+        assert!(a.has("csv"));
+        assert!(!a.has("quick"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&["figures"]);
+        assert_eq!(a.get_or("fig", "all"), "all");
+        assert_eq!(a.get_usize("samples", 1024).unwrap(), 1024);
+    }
+
+    #[test]
+    fn empty_argv_is_help() {
+        let a = Args::parse(std::iter::empty()).unwrap();
+        assert_eq!(a.command, "help");
+    }
+
+    #[test]
+    fn rejects_bad_syntax() {
+        assert!(Args::parse(["x".into(), "notflag".into()]).is_err());
+        let a = parse(&["x", "--n", "abc"]);
+        assert!(a.get_usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn negative_numbers_are_values_not_flags() {
+        let a = parse(&["x", "--lo", "-3.5"]);
+        assert_eq!(a.get("lo"), Some("-3.5"));
+    }
+}

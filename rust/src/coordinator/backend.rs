@@ -1,0 +1,125 @@
+//! Execution backend abstraction for the coordinator.
+//!
+//! Two implementations exist:
+//! * [`NativeBackend`] — wraps `engine::NativeStack` (pure Rust, always
+//!   available; what the tables measure).
+//! * `runtime::PjrtBackend` — executes the AOT JAX/Pallas artifacts via
+//!   the PJRT CPU client (the three-layer path; see `runtime::pjrt_backend`).
+//!
+//! Both must produce the same numbers for the same weights — asserted by
+//! the integration test `rust/tests/backend_parity.rs`.
+
+use crate::engine::{NativeStack, StreamState};
+use crate::models::config::StackConfig;
+
+/// A backend that can run blocks of `t` frames for a stream.
+///
+/// Contract:
+/// * `block_sizes()` is the ascending list of supported block sizes; the
+///   coordinator only calls `run_block` with one of them.
+/// * `run_block` consumes `t * feat` input floats, returns `t * vocab`
+///   logits, and advances `state` — processing a stream as any sequence
+///   of supported block sizes must equal single-step processing.
+pub trait BlockBackend {
+    fn config(&self) -> &StackConfig;
+    fn block_sizes(&self) -> &[usize];
+    fn init_state(&self) -> StreamState;
+    fn run_block(
+        &mut self,
+        x: &[f32],
+        t: usize,
+        state: &mut StreamState,
+    ) -> Result<Vec<f32>, String>;
+
+    /// Weight bytes fetched per block dispatch (power accounting).
+    fn weight_bytes_per_block(&self) -> usize;
+}
+
+/// Native-engine backend supporting every block size up to `max_block`.
+pub struct NativeBackend {
+    stack: NativeStack,
+    sizes: Vec<usize>,
+}
+
+impl NativeBackend {
+    pub fn new(stack: NativeStack) -> Self {
+        // Native supports any t in 1..=max_block; advertise the powers of
+        // two (plus max) so the batcher's decomposition mirrors the AOT
+        // backend's variant set.
+        let max = stack.max_block();
+        let mut sizes: Vec<usize> = (0..)
+            .map(|k| 1usize << k)
+            .take_while(|&v| v <= max)
+            .collect();
+        if *sizes.last().unwrap() != max {
+            sizes.push(max);
+        }
+        Self { stack, sizes }
+    }
+}
+
+impl BlockBackend for NativeBackend {
+    fn config(&self) -> &StackConfig {
+        self.stack.config()
+    }
+
+    fn block_sizes(&self) -> &[usize] {
+        &self.sizes
+    }
+
+    fn init_state(&self) -> StreamState {
+        StreamState::zeros(self.stack.config())
+    }
+
+    fn run_block(
+        &mut self,
+        x: &[f32],
+        t: usize,
+        state: &mut StreamState,
+    ) -> Result<Vec<f32>, String> {
+        let vocab = self.stack.config().vocab;
+        let mut logits = vec![0.0; t * vocab];
+        self.stack.run_block(x, t, state, &mut logits);
+        Ok(logits)
+    }
+
+    fn weight_bytes_per_block(&self) -> usize {
+        let cfg = self.stack.config();
+        cfg.param_count() * std::mem::size_of::<f32>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::config::Arch;
+    use crate::models::StackParams;
+    use crate::util::Rng;
+
+    fn tiny() -> NativeBackend {
+        let cfg = StackConfig {
+            arch: Arch::Sru,
+            feat: 8,
+            hidden: 16,
+            depth: 2,
+            vocab: 4,
+        };
+        let params = StackParams::init(&cfg, &mut Rng::new(0));
+        NativeBackend::new(NativeStack::new(cfg, params, 12))
+    }
+
+    #[test]
+    fn sizes_are_pow2_plus_max() {
+        let b = tiny();
+        assert_eq!(b.block_sizes(), &[1, 2, 4, 8, 12]);
+    }
+
+    #[test]
+    fn run_block_shapes() {
+        let mut b = tiny();
+        let mut st = b.init_state();
+        let x = vec![0.1; 4 * 8];
+        let logits = b.run_block(&x, 4, &mut st).unwrap();
+        assert_eq!(logits.len(), 4 * 4);
+    }
+}

@@ -1,0 +1,190 @@
+//! Block-dispatch decisions.
+//!
+//! A session becomes dispatchable when:
+//! * it has at least `t_target` pending frames (a full block), or
+//! * its oldest pending frame is older than `max_wait` (deadline flush) —
+//!   the latency/efficiency dial of the whole system.
+//!
+//! Dispatched work is decomposed onto the backend's *compiled* block
+//! sizes.  Zero-padding partial blocks would corrupt the recurrent state,
+//! so a partial block of `p` frames is covered exactly by a greedy sum of
+//! supported sizes (e.g. p=13 with sizes {1,2,4,8,16} → 8+4+1).
+
+use std::time::{Duration, Instant};
+
+use crate::coordinator::session::Session;
+
+/// What to run for one session right now.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Dispatch {
+    /// Exact block sizes to execute back-to-back, largest first.
+    pub blocks: Vec<usize>,
+}
+
+impl Dispatch {
+    pub fn total_frames(&self) -> usize {
+        self.blocks.iter().sum()
+    }
+}
+
+/// Greedy exact decomposition of `frames` onto `sizes` (ascending list
+/// containing 1).  Returns largest-first blocks summing to `frames`.
+pub fn decompose_block(frames: usize, sizes: &[usize]) -> Vec<usize> {
+    assert!(!sizes.is_empty() && sizes[0] == 1, "sizes must include 1");
+    debug_assert!(sizes.windows(2).all(|w| w[0] < w[1]), "sizes ascending");
+    let mut rest = frames;
+    let mut out = Vec::new();
+    while rest > 0 {
+        let s = sizes
+            .iter()
+            .rev()
+            .find(|&&s| s <= rest)
+            .copied()
+            .expect("sizes contains 1, so a fit always exists");
+        out.push(s);
+        rest -= s;
+    }
+    out
+}
+
+/// The dispatch policy.
+#[derive(Debug, Clone)]
+pub struct Batcher {
+    /// Preferred (target) block size T.
+    pub t_target: usize,
+    /// Deadline: flush a partial block once its oldest frame waited this
+    /// long.
+    pub max_wait: Duration,
+}
+
+impl Batcher {
+    pub fn new(t_target: usize, max_wait: Duration) -> Self {
+        assert!(t_target >= 1);
+        Self { t_target, max_wait }
+    }
+
+    /// Decide what (if anything) to run for `session` at time `now`.
+    /// `sizes` is the backend's supported block-size list (ascending).
+    pub fn decide(&self, session: &Session, sizes: &[usize], now: Instant) -> Option<Dispatch> {
+        let pending = session.pending_frames();
+        if pending == 0 {
+            return None;
+        }
+        if pending >= self.t_target {
+            // Full block(s): run the largest multiple of t_target ready,
+            // decomposed onto compiled sizes.
+            let frames = (pending / self.t_target) * self.t_target;
+            return Some(Dispatch {
+                blocks: decompose_block(frames, sizes),
+            });
+        }
+        // Deadline flush for stragglers.
+        if let Some(oldest) = session.oldest_arrival() {
+            if now.duration_since(oldest) >= self.max_wait {
+                return Some(Dispatch {
+                    blocks: decompose_block(pending, sizes),
+                });
+            }
+        }
+        None
+    }
+
+    /// Force-flush everything pending (stream close).
+    pub fn flush(&self, session: &Session, sizes: &[usize]) -> Option<Dispatch> {
+        let pending = session.pending_frames();
+        if pending == 0 {
+            return None;
+        }
+        Some(Dispatch {
+            blocks: decompose_block(pending, sizes),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::StreamState;
+
+    const SIZES: &[usize] = &[1, 2, 4, 8, 16, 32];
+
+    #[test]
+    fn decompose_exact_cases() {
+        assert_eq!(decompose_block(32, SIZES), vec![32]);
+        assert_eq!(decompose_block(13, SIZES), vec![8, 4, 1]);
+        assert_eq!(decompose_block(1, SIZES), vec![1]);
+        assert_eq!(decompose_block(63, SIZES), vec![32, 16, 8, 4, 2, 1]);
+        assert_eq!(decompose_block(0, SIZES), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn decompose_sums_correctly_for_many_values() {
+        for frames in 0..200 {
+            let blocks = decompose_block(frames, SIZES);
+            assert_eq!(blocks.iter().sum::<usize>(), frames, "frames {frames}");
+            // Largest-first, all supported.
+            assert!(blocks.windows(2).all(|w| w[0] >= w[1]));
+            assert!(blocks.iter().all(|b| SIZES.contains(b)));
+        }
+    }
+
+    fn session_with(pending: usize, feat: usize) -> Session {
+        let mut s = Session::new(
+            0,
+            feat,
+            2,
+            StreamState {
+                tensors: vec![vec![0.0; 1]],
+            },
+        );
+        s.push_frames(&vec![0.0; pending * feat], Instant::now())
+            .unwrap();
+        s
+    }
+
+    #[test]
+    fn full_block_dispatches_immediately() {
+        let b = Batcher::new(16, Duration::from_millis(50));
+        let s = session_with(20, 3);
+        let d = b.decide(&s, SIZES, Instant::now()).unwrap();
+        // 16 ready now; the 4 extra wait for more frames or the deadline.
+        assert_eq!(d.total_frames(), 16);
+        assert_eq!(d.blocks, vec![16]);
+    }
+
+    #[test]
+    fn multiple_full_blocks_at_once() {
+        let b = Batcher::new(8, Duration::from_millis(50));
+        let s = session_with(25, 3);
+        let d = b.decide(&s, SIZES, Instant::now()).unwrap();
+        assert_eq!(d.total_frames(), 24);
+    }
+
+    #[test]
+    fn partial_waits_until_deadline() {
+        let b = Batcher::new(16, Duration::from_millis(20));
+        let s = session_with(5, 3);
+        let now = Instant::now();
+        assert!(b.decide(&s, SIZES, now).is_none(), "too fresh to flush");
+        let later = now + Duration::from_millis(25);
+        let d = b.decide(&s, SIZES, later).unwrap();
+        assert_eq!(d.blocks, vec![4, 1]);
+    }
+
+    #[test]
+    fn empty_session_never_dispatches() {
+        let b = Batcher::new(4, Duration::from_millis(0));
+        let s = session_with(0, 3);
+        assert!(b.decide(&s, SIZES, Instant::now()).is_none());
+        assert!(b.flush(&s, SIZES).is_none());
+    }
+
+    #[test]
+    fn flush_takes_everything() {
+        let b = Batcher::new(16, Duration::from_secs(10));
+        let s = session_with(7, 3);
+        let d = b.flush(&s, SIZES).unwrap();
+        assert_eq!(d.total_frames(), 7);
+        assert_eq!(d.blocks, vec![4, 2, 1]);
+    }
+}

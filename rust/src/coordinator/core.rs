@@ -1,0 +1,324 @@
+//! The coordinator: session table + batcher + policy + backend, driven by
+//! `feed` / `tick` / `drain` calls.
+//!
+//! Threading model: the coordinator is single-threaded by design (PJRT
+//! executables and the native engine both live on one inference thread);
+//! the TCP server wraps it in a mutex and a ticker thread.  This mirrors
+//! the paper's setting — one embedded core serving one user's streams —
+//! and keeps execution deterministic.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::backend::BlockBackend;
+use crate::coordinator::batcher::Batcher;
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::policy::{AdaptivePolicy, PolicyMode};
+use crate::coordinator::session::{Session, SessionId};
+
+/// Tunables for the coordinator.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    /// Target block size (or adaptive).
+    pub policy: PolicyMode,
+    /// Latency budget used by the adaptive policy AND the deadline flush.
+    pub max_wait: Duration,
+    /// Maximum live sessions (embedded memory budget).
+    pub max_sessions: usize,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        Self {
+            policy: PolicyMode::Fixed(16),
+            max_wait: Duration::from_millis(100),
+            max_sessions: 64,
+        }
+    }
+}
+
+/// Single-stream-parallelization serving coordinator.
+pub struct Coordinator<B: BlockBackend> {
+    backend: B,
+    cfg: CoordinatorConfig,
+    sessions: BTreeMap<SessionId, Session>,
+    next_id: SessionId,
+    policy: AdaptivePolicy,
+    pub metrics: Metrics,
+}
+
+impl<B: BlockBackend> Coordinator<B> {
+    pub fn new(backend: B, cfg: CoordinatorConfig) -> Self {
+        let policy = AdaptivePolicy::new(cfg.policy, cfg.max_wait);
+        Self {
+            backend,
+            cfg,
+            sessions: BTreeMap::new(),
+            next_id: 1,
+            policy,
+            metrics: Metrics::new(),
+        }
+    }
+
+    pub fn backend(&self) -> &B {
+        &self.backend
+    }
+
+    pub fn session_count(&self) -> usize {
+        self.sessions.len()
+    }
+
+    pub fn feat(&self) -> usize {
+        self.backend.config().feat
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.backend.config().vocab
+    }
+
+    /// Open a new stream; returns its id.
+    pub fn open(&mut self) -> Result<SessionId, String> {
+        if self.sessions.len() >= self.cfg.max_sessions {
+            return Err(format!(
+                "session limit {} reached",
+                self.cfg.max_sessions
+            ));
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        let cfg = self.backend.config();
+        let session = Session::new(id, cfg.feat, cfg.vocab, self.backend.init_state());
+        self.sessions.insert(id, session);
+        Ok(id)
+    }
+
+    /// Close a stream, flushing any pending frames first.  Returns the
+    /// final logits flushed (possibly empty).
+    pub fn close(&mut self, id: SessionId) -> Result<Vec<f32>, String> {
+        // Flush remaining frames at exact sizes.
+        self.flush_session(id)?;
+        let mut sess = self
+            .sessions
+            .remove(&id)
+            .ok_or_else(|| format!("no such session {id}"))?;
+        Ok(sess.pop_ready(usize::MAX))
+    }
+
+    /// Feed frames to a stream (`x.len()` multiple of `feat`).
+    pub fn feed(&mut self, id: SessionId, x: &[f32]) -> Result<usize, String> {
+        let now = Instant::now();
+        let sess = self
+            .sessions
+            .get_mut(&id)
+            .ok_or_else(|| format!("no such session {id}"))?;
+        let n = sess.push_frames(x, now)?;
+        self.policy.on_arrival(n, now);
+        Ok(n)
+    }
+
+    /// Pop up to `max_frames` of computed logits for a stream.
+    pub fn drain(&mut self, id: SessionId, max_frames: usize) -> Result<Vec<f32>, String> {
+        let sess = self
+            .sessions
+            .get_mut(&id)
+            .ok_or_else(|| format!("no such session {id}"))?;
+        Ok(sess.pop_ready(max_frames))
+    }
+
+    /// Frames computed and waiting for pickup.
+    pub fn ready_frames(&self, id: SessionId) -> Result<usize, String> {
+        self.sessions
+            .get(&id)
+            .map(|s| s.ready_frames())
+            .ok_or_else(|| format!("no such session {id}"))
+    }
+
+    /// Run the dispatch loop once: for every session, execute whatever
+    /// the batcher deems ready.  Returns the number of blocks run.
+    pub fn tick(&mut self) -> Result<usize, String> {
+        let now = Instant::now();
+        let sizes: Vec<usize> = self.backend.block_sizes().to_vec();
+        let ids: Vec<SessionId> = self.sessions.keys().copied().collect();
+        let mut ran = 0;
+        for id in ids {
+            // Recompute target per session from current backlog.
+            let backlog = self.sessions[&id].pending_frames();
+            let t_target = self.policy.target(&sizes, backlog);
+            let batcher = Batcher::new(t_target, self.cfg.max_wait);
+            let dispatch = {
+                let sess = &self.sessions[&id];
+                batcher.decide(sess, &sizes, now)
+            };
+            if let Some(d) = dispatch {
+                ran += self.execute(id, &d.blocks)?;
+            }
+        }
+        Ok(ran)
+    }
+
+    /// Force-flush one session's pending frames.
+    pub fn flush_session(&mut self, id: SessionId) -> Result<usize, String> {
+        let sizes: Vec<usize> = self.backend.block_sizes().to_vec();
+        let batcher = Batcher::new(1, Duration::ZERO);
+        let dispatch = {
+            let sess = self
+                .sessions
+                .get(&id)
+                .ok_or_else(|| format!("no such session {id}"))?;
+            batcher.flush(sess, &sizes)
+        };
+        match dispatch {
+            Some(d) => self.execute(id, &d.blocks),
+            None => Ok(0),
+        }
+    }
+
+    /// Execute a sequence of exact-size blocks for one session.
+    fn execute(&mut self, id: SessionId, blocks: &[usize]) -> Result<usize, String> {
+        for &t in blocks {
+            let (x, arrivals) = {
+                let sess = self
+                    .sessions
+                    .get_mut(&id)
+                    .ok_or_else(|| format!("no such session {id}"))?;
+                sess.take_frames(t)
+            };
+            // Run outside the session borrow (backend needs &mut self).
+            let sess = self.sessions.get_mut(&id).unwrap();
+            let logits = self.backend.run_block(&x, t, &mut sess.state)?;
+            debug_assert_eq!(logits.len(), t * self.backend.config().vocab);
+            sess.push_ready(&logits);
+            let done = Instant::now();
+            self.metrics
+                .on_block(t, self.backend.weight_bytes_per_block(), &arrivals, done);
+        }
+        Ok(blocks.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::NativeBackend;
+    use crate::engine::NativeStack;
+    use crate::models::config::{Arch, StackConfig};
+    use crate::models::StackParams;
+    use crate::util::Rng;
+
+    fn coord(policy: PolicyMode, max_wait_ms: u64) -> Coordinator<NativeBackend> {
+        let cfg = StackConfig {
+            arch: Arch::Sru,
+            feat: 8,
+            hidden: 16,
+            depth: 2,
+            vocab: 4,
+        };
+        let params = StackParams::init(&cfg, &mut Rng::new(0));
+        let backend = NativeBackend::new(NativeStack::new(cfg, params, 16));
+        Coordinator::new(
+            backend,
+            CoordinatorConfig {
+                policy,
+                max_wait: Duration::from_millis(max_wait_ms),
+                max_sessions: 4,
+            },
+        )
+    }
+
+    #[test]
+    fn open_feed_tick_drain() {
+        let mut c = coord(PolicyMode::Fixed(4), 1000);
+        let id = c.open().unwrap();
+        let mut x = vec![0.0; 8 * 8];
+        Rng::new(1).fill_normal(&mut x, 1.0);
+        c.feed(id, &x).unwrap();
+        let ran = c.tick().unwrap();
+        assert!(ran > 0);
+        assert_eq!(c.ready_frames(id).unwrap(), 8);
+        let logits = c.drain(id, 100).unwrap();
+        assert_eq!(logits.len(), 8 * 4);
+        assert!(logits.iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn partial_block_waits_for_deadline() {
+        let mut c = coord(PolicyMode::Fixed(8), 10_000);
+        let id = c.open().unwrap();
+        c.feed(id, &vec![0.0; 3 * 8]).unwrap();
+        assert_eq!(c.tick().unwrap(), 0, "3 < 8 and deadline far away");
+        assert_eq!(c.ready_frames(id).unwrap(), 0);
+        // Closing flushes.
+        let logits = c.close(id).unwrap();
+        assert_eq!(logits.len(), 3 * 4);
+    }
+
+    #[test]
+    fn deadline_flushes_partials() {
+        let mut c = coord(PolicyMode::Fixed(8), 0); // 0ms deadline
+        let id = c.open().unwrap();
+        c.feed(id, &vec![0.0; 3 * 8]).unwrap();
+        assert!(c.tick().unwrap() > 0, "deadline 0 flushes immediately");
+        assert_eq!(c.ready_frames(id).unwrap(), 3);
+    }
+
+    #[test]
+    fn session_limit_enforced() {
+        let mut c = coord(PolicyMode::Fixed(4), 100);
+        for _ in 0..4 {
+            c.open().unwrap();
+        }
+        assert!(c.open().is_err());
+    }
+
+    #[test]
+    fn unknown_session_errors() {
+        let mut c = coord(PolicyMode::Fixed(4), 100);
+        assert!(c.feed(99, &[0.0; 8]).is_err());
+        assert!(c.drain(99, 1).is_err());
+        assert!(c.close(99).is_err());
+    }
+
+    #[test]
+    fn results_independent_of_block_policy() {
+        // The serving guarantee: whatever blocks the batcher chooses, the
+        // logits equal strictly sequential processing.
+        let mut x = vec![0.0; 30 * 8];
+        Rng::new(5).fill_normal(&mut x, 1.0);
+
+        let run = |policy: PolicyMode| -> Vec<f32> {
+            let mut c = coord(policy, 0);
+            let id = c.open().unwrap();
+            // Feed in odd chunks, ticking between.
+            for chunk in x.chunks(7 * 8) {
+                c.feed(id, chunk).unwrap();
+                c.tick().unwrap();
+            }
+            let mut out = c.drain(id, usize::MAX).unwrap();
+            out.extend(c.close(id).unwrap());
+            out
+        };
+
+        let seq = run(PolicyMode::Fixed(1));
+        let blocked = run(PolicyMode::Fixed(16));
+        let adaptive = run(PolicyMode::Adaptive);
+        assert_eq!(seq.len(), 30 * 4);
+        assert_eq!(seq.len(), blocked.len());
+        for (i, (a, b)) in seq.iter().zip(&blocked).enumerate() {
+            assert!((a - b).abs() < 1e-4, "idx {i}: {a} vs {b}");
+        }
+        for (a, b) in seq.iter().zip(&adaptive) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn traffic_reduction_reported() {
+        let mut c = coord(PolicyMode::Fixed(16), 10_000);
+        let id = c.open().unwrap();
+        c.feed(id, &vec![0.0; 32 * 8]).unwrap();
+        c.tick().unwrap();
+        // Two T=16 blocks: reduction should be ~16x.
+        assert!((c.metrics.traffic_reduction() - 16.0).abs() < 1e-9);
+        let _ = c.close(id);
+    }
+}

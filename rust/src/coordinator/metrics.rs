@@ -1,0 +1,135 @@
+//! Serving metrics: frame latency, throughput, block-size mix, and the
+//! weight-traffic estimate that ties serving back to the paper's DRAM
+//! argument.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::Histogram;
+
+#[derive(Debug)]
+pub struct Metrics {
+    started: Instant,
+    /// Per-frame latency (arrival → logits ready), microseconds.
+    pub latency_us: Histogram,
+    pub frames_processed: u64,
+    pub blocks_dispatched: u64,
+    /// Σ block size — for the average-T statistic.
+    pub frames_in_blocks: u64,
+    /// Histogram of dispatched block sizes (index by log2-ish bucket).
+    pub block_size_counts: Vec<(usize, u64)>,
+    /// Estimated weight bytes fetched (weight_bytes_per_block × blocks).
+    pub weight_bytes_fetched: u64,
+    /// Hypothetical weight bytes if every frame ran at T=1.
+    pub weight_bytes_t1: u64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self {
+            started: Instant::now(),
+            latency_us: Histogram::exponential(10.0, 10_000_000.0, 2.0),
+            frames_processed: 0,
+            blocks_dispatched: 0,
+            frames_in_blocks: 0,
+            block_size_counts: Vec::new(),
+            weight_bytes_fetched: 0,
+            weight_bytes_t1: 0,
+        }
+    }
+
+    pub fn on_block(&mut self, t: usize, weight_bytes: usize, arrivals: &[Instant], done: Instant) {
+        self.blocks_dispatched += 1;
+        self.frames_in_blocks += t as u64;
+        self.frames_processed += arrivals.len() as u64;
+        self.weight_bytes_fetched += weight_bytes as u64;
+        self.weight_bytes_t1 += (weight_bytes * t) as u64;
+        match self.block_size_counts.iter_mut().find(|(s, _)| *s == t) {
+            Some((_, c)) => *c += 1,
+            None => {
+                self.block_size_counts.push((t, 1));
+                self.block_size_counts.sort_unstable();
+            }
+        }
+        for &a in arrivals {
+            let us = done.duration_since(a).as_secs_f64() * 1e6;
+            self.latency_us.record(us);
+        }
+    }
+
+    /// Mean dispatched block size.
+    pub fn mean_block(&self) -> f64 {
+        if self.blocks_dispatched == 0 {
+            return f64::NAN;
+        }
+        self.frames_in_blocks as f64 / self.blocks_dispatched as f64
+    }
+
+    /// DRAM weight-traffic reduction vs single-step execution (>= 1.0).
+    pub fn traffic_reduction(&self) -> f64 {
+        if self.weight_bytes_fetched == 0 {
+            return 1.0;
+        }
+        self.weight_bytes_t1 as f64 / self.weight_bytes_fetched as f64
+    }
+
+    pub fn throughput_fps(&self) -> f64 {
+        let dt = self.started.elapsed().as_secs_f64();
+        if dt <= 0.0 {
+            return 0.0;
+        }
+        self.frames_processed as f64 / dt
+    }
+
+    pub fn uptime(&self) -> Duration {
+        self.started.elapsed()
+    }
+
+    /// One-line human summary (server STATS command, examples).
+    pub fn summary(&self) -> String {
+        format!(
+            "frames={} blocks={} mean_T={:.1} p50_lat={:.0}us p99_lat={:.0}us traffic_reduction={:.1}x",
+            self.frames_processed,
+            self.blocks_dispatched,
+            self.mean_block(),
+            self.latency_us.quantile_bound(0.5),
+            self.latency_us.quantile_bound(0.99),
+            self.traffic_reduction(),
+        )
+    }
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_accounting() {
+        let mut m = Metrics::new();
+        let now = Instant::now();
+        let arr = vec![now; 16];
+        m.on_block(16, 1000, &arr, now + Duration::from_millis(1));
+        m.on_block(4, 1000, &arr[..4], now + Duration::from_millis(1));
+        assert_eq!(m.blocks_dispatched, 2);
+        assert_eq!(m.frames_processed, 20);
+        assert!((m.mean_block() - 10.0).abs() < 1e-9);
+        // Reduction: t1 traffic = 16*1000 + 4*1000 = 20000; actual 2000.
+        assert!((m.traffic_reduction() - 10.0).abs() < 1e-9);
+        assert_eq!(m.block_size_counts, vec![(4, 1), (16, 1)]);
+    }
+
+    #[test]
+    fn summary_contains_key_numbers() {
+        let mut m = Metrics::new();
+        let now = Instant::now();
+        m.on_block(8, 500, &[now; 8], now + Duration::from_micros(100));
+        let s = m.summary();
+        assert!(s.contains("frames=8"));
+        assert!(s.contains("mean_T=8.0"));
+    }
+}

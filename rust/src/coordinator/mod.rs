@@ -1,0 +1,32 @@
+//! L3 coordinator: single-stream serving with multi-time-step block
+//! batching — the paper's idea promoted to a first-class serving feature.
+//!
+//! A classic request router batches *across* streams (server-style batch
+//! processing, which the paper's §1 rules out for on-device use).  This
+//! coordinator instead batches **across time within each stream**: frames
+//! accumulate per session until a block of `T` is ready (or a latency
+//! deadline expires), then one block inference runs — weights fetched
+//! once per `T` frames.
+//!
+//! Pieces:
+//! * [`backend`] — `BlockBackend` trait (native engine or PJRT runtime).
+//! * [`session`] — per-stream state + pending-frame queue.
+//! * [`batcher`] — dispatch decision: block-ready / deadline / flush, and
+//!   the greedy decomposition of partial blocks onto compiled sizes.
+//! * [`policy`]  — adaptive block-size selection (latency vs. power).
+//! * [`metrics`] — latency histograms, throughput, DRAM-traffic estimate.
+//! * [`core`]    — the `Coordinator` tying it together.
+
+pub mod backend;
+pub mod batcher;
+pub mod core;
+pub mod metrics;
+pub mod policy;
+pub mod session;
+
+pub use backend::{BlockBackend, NativeBackend};
+pub use batcher::{decompose_block, Batcher, Dispatch};
+pub use core::{Coordinator, CoordinatorConfig};
+pub use metrics::Metrics;
+pub use policy::{AdaptivePolicy, PolicyMode};
+pub use session::{Session, SessionId};

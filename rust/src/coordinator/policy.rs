@@ -1,0 +1,154 @@
+//! Adaptive block-size policy.
+//!
+//! The paper's tables show the efficiency/latency trade directly: larger
+//! T → fewer DRAM fetches per frame (faster, lower power) but each frame
+//! waits longer for its block to fill.  The policy picks the target T
+//! from the observed arrival rate so the *fill time* of a block stays
+//! within the latency budget:
+//!
+//! ```text
+//! fill_time(T) ≈ T / arrival_rate   ⇒   T* = rate × budget
+//! ```
+//!
+//! clamped to the supported sizes.  Under bursty load (deep backlog) it
+//! raises T to the maximum: the frames are already here, so batching them
+//! costs no extra latency — pure win.
+
+use std::time::{Duration, Instant};
+
+/// Policy operating mode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicyMode {
+    /// Always use a fixed target T (the paper's static "SRU-n").
+    Fixed(usize),
+    /// Adapt T to arrival rate + latency budget.
+    Adaptive,
+}
+
+/// Exponentially-weighted arrival-rate estimator + T chooser.
+#[derive(Debug, Clone)]
+pub struct AdaptivePolicy {
+    pub mode: PolicyMode,
+    /// Latency budget for block fill (not compute).
+    pub budget: Duration,
+    /// EWMA arrival rate, frames/sec.
+    rate: f64,
+    last_arrival: Option<Instant>,
+    /// EWMA smoothing factor per event.
+    alpha: f64,
+}
+
+impl AdaptivePolicy {
+    pub fn new(mode: PolicyMode, budget: Duration) -> Self {
+        Self {
+            mode,
+            budget,
+            rate: 0.0,
+            last_arrival: None,
+            alpha: 0.2,
+        }
+    }
+
+    /// Record the arrival of `n` frames at `now`.
+    pub fn on_arrival(&mut self, n: usize, now: Instant) {
+        if let Some(prev) = self.last_arrival {
+            let dt = now.duration_since(prev).as_secs_f64();
+            if dt > 0.0 {
+                let inst_rate = n as f64 / dt;
+                self.rate = if self.rate == 0.0 {
+                    inst_rate
+                } else {
+                    self.alpha * inst_rate + (1.0 - self.alpha) * self.rate
+                };
+            }
+        }
+        self.last_arrival = Some(now);
+    }
+
+    pub fn rate(&self) -> f64 {
+        self.rate
+    }
+
+    /// Choose the target block size given the backlog depth.
+    /// `sizes` ascending; returns one of them.
+    pub fn target(&self, sizes: &[usize], backlog: usize) -> usize {
+        let max = *sizes.last().expect("non-empty sizes");
+        match self.mode {
+            PolicyMode::Fixed(t) => clamp_to(sizes, t),
+            PolicyMode::Adaptive => {
+                // Backlogged frames are free to batch.
+                if backlog >= max {
+                    return max;
+                }
+                let ideal = (self.rate * self.budget.as_secs_f64()).floor() as usize;
+                let ideal = ideal.max(backlog).max(1);
+                clamp_to(sizes, ideal)
+            }
+        }
+    }
+}
+
+/// Largest supported size <= want (or the smallest size if none fit).
+fn clamp_to(sizes: &[usize], want: usize) -> usize {
+    sizes
+        .iter()
+        .rev()
+        .find(|&&s| s <= want)
+        .copied()
+        .unwrap_or(sizes[0])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SIZES: &[usize] = &[1, 2, 4, 8, 16, 32];
+
+    #[test]
+    fn fixed_mode_clamps() {
+        let p = AdaptivePolicy::new(PolicyMode::Fixed(16), Duration::from_millis(100));
+        assert_eq!(p.target(SIZES, 0), 16);
+        let p = AdaptivePolicy::new(PolicyMode::Fixed(100), Duration::from_millis(100));
+        assert_eq!(p.target(SIZES, 0), 32, "clamped to max supported");
+        let p = AdaptivePolicy::new(PolicyMode::Fixed(3), Duration::from_millis(100));
+        assert_eq!(p.target(SIZES, 0), 2, "clamped down");
+    }
+
+    #[test]
+    fn adaptive_raises_t_with_rate() {
+        let mut p = AdaptivePolicy::new(PolicyMode::Adaptive, Duration::from_millis(100));
+        let t0 = Instant::now();
+        // 1000 frames/sec arrival: 1 frame per ms.
+        for i in 1..50 {
+            p.on_arrival(1, t0 + Duration::from_millis(i));
+        }
+        assert!(p.rate() > 500.0, "rate {}", p.rate());
+        // budget 100ms * 1000 fps = 100 frames -> clamp to 32.
+        assert_eq!(p.target(SIZES, 0), 32);
+    }
+
+    #[test]
+    fn adaptive_low_rate_prefers_small_blocks() {
+        let mut p = AdaptivePolicy::new(PolicyMode::Adaptive, Duration::from_millis(100));
+        let t0 = Instant::now();
+        // 10 frames/sec: one per 100 ms.
+        for i in 1..20 {
+            p.on_arrival(1, t0 + Duration::from_millis(100 * i));
+        }
+        // 10 fps * 0.1s = 1 frame per budget -> T = 1.
+        assert_eq!(p.target(SIZES, 0), 1);
+    }
+
+    #[test]
+    fn backlog_forces_max() {
+        let p = AdaptivePolicy::new(PolicyMode::Adaptive, Duration::from_millis(100));
+        assert_eq!(p.target(SIZES, 64), 32);
+    }
+
+    #[test]
+    fn backlog_below_max_is_floor() {
+        let p = AdaptivePolicy::new(PolicyMode::Adaptive, Duration::from_millis(100));
+        // No rate info, backlog 5 -> at least cover the backlog.
+        assert_eq!(p.target(SIZES, 5), 4);
+    }
+}

@@ -1,0 +1,162 @@
+//! Per-stream session: recurrent state, pending input frames, and the
+//! delivered-output queue.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use crate::engine::StreamState;
+
+pub type SessionId = u64;
+
+/// One client stream.
+#[derive(Debug)]
+pub struct Session {
+    pub id: SessionId,
+    /// Recurrent state carried across blocks.
+    pub state: StreamState,
+    /// Pending input frames (flat, `feat` floats each), FIFO.
+    pending: VecDeque<f32>,
+    /// Arrival time of each pending frame (parallel queue, per frame).
+    arrivals: VecDeque<Instant>,
+    /// Completed logits awaiting pickup (flat, `vocab` floats per frame).
+    ready: VecDeque<f32>,
+    pub feat: usize,
+    pub vocab: usize,
+    pub frames_in: u64,
+    pub frames_out: u64,
+    pub created: Instant,
+}
+
+impl Session {
+    pub fn new(id: SessionId, feat: usize, vocab: usize, state: StreamState) -> Self {
+        Self {
+            id,
+            state,
+            pending: VecDeque::new(),
+            arrivals: VecDeque::new(),
+            ready: VecDeque::new(),
+            feat,
+            vocab,
+            frames_in: 0,
+            frames_out: 0,
+            created: Instant::now(),
+        }
+    }
+
+    /// Enqueue frames (`x.len()` must be a multiple of `feat`).
+    pub fn push_frames(&mut self, x: &[f32], now: Instant) -> Result<usize, String> {
+        if x.len() % self.feat != 0 {
+            return Err(format!(
+                "input length {} is not a multiple of feat {}",
+                x.len(),
+                self.feat
+            ));
+        }
+        let n = x.len() / self.feat;
+        self.pending.extend(x.iter().copied());
+        for _ in 0..n {
+            self.arrivals.push_back(now);
+        }
+        self.frames_in += n as u64;
+        Ok(n)
+    }
+
+    /// Frames waiting to be processed.
+    pub fn pending_frames(&self) -> usize {
+        self.pending.len() / self.feat
+    }
+
+    /// Arrival time of the oldest unprocessed frame.
+    pub fn oldest_arrival(&self) -> Option<Instant> {
+        self.arrivals.front().copied()
+    }
+
+    /// Dequeue exactly `t` frames into a flat `[t, feat]` buffer, along
+    /// with their arrival times (latency accounting).
+    pub fn take_frames(&mut self, t: usize) -> (Vec<f32>, Vec<Instant>) {
+        assert!(t <= self.pending_frames(), "not enough pending frames");
+        let mut x = Vec::with_capacity(t * self.feat);
+        for _ in 0..t * self.feat {
+            x.push(self.pending.pop_front().unwrap());
+        }
+        let mut arr = Vec::with_capacity(t);
+        for _ in 0..t {
+            arr.push(self.arrivals.pop_front().unwrap());
+        }
+        (x, arr)
+    }
+
+    /// Deliver computed logits (`t * vocab` floats).
+    pub fn push_ready(&mut self, logits: &[f32]) {
+        debug_assert_eq!(logits.len() % self.vocab, 0);
+        self.ready.extend(logits.iter().copied());
+        self.frames_out += (logits.len() / self.vocab) as u64;
+    }
+
+    /// Pop up to `max_frames` completed frames of logits.
+    pub fn pop_ready(&mut self, max_frames: usize) -> Vec<f32> {
+        let avail = self.ready.len() / self.vocab;
+        let n = avail.min(max_frames) * self.vocab;
+        self.ready.drain(..n).collect()
+    }
+
+    pub fn ready_frames(&self) -> usize {
+        self.ready.len() / self.vocab
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::StreamState;
+
+    fn sess() -> Session {
+        Session::new(
+            1,
+            3,
+            2,
+            StreamState {
+                tensors: vec![vec![0.0; 4]],
+            },
+        )
+    }
+
+    #[test]
+    fn push_take_round_trip() {
+        let mut s = sess();
+        let now = Instant::now();
+        s.push_frames(&[1., 2., 3., 4., 5., 6.], now).unwrap();
+        assert_eq!(s.pending_frames(), 2);
+        let (x, arr) = s.take_frames(1);
+        assert_eq!(x, vec![1., 2., 3.]);
+        assert_eq!(arr.len(), 1);
+        assert_eq!(s.pending_frames(), 1);
+        assert_eq!(s.frames_in, 2);
+    }
+
+    #[test]
+    fn rejects_ragged_input() {
+        let mut s = sess();
+        assert!(s.push_frames(&[1., 2.], Instant::now()).is_err());
+    }
+
+    #[test]
+    fn ready_queue_fifo() {
+        let mut s = sess();
+        s.push_ready(&[0.1, 0.2, 0.3, 0.4]);
+        assert_eq!(s.ready_frames(), 2);
+        let got = s.pop_ready(1);
+        assert_eq!(got, vec![0.1, 0.2]);
+        assert_eq!(s.ready_frames(), 1);
+        let rest = s.pop_ready(10);
+        assert_eq!(rest, vec![0.3, 0.4]);
+        assert_eq!(s.frames_out, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "not enough pending")]
+    fn take_more_than_pending_panics() {
+        let mut s = sess();
+        s.take_frames(1);
+    }
+}

@@ -1,0 +1,177 @@
+//! Bidirectional RNN execution (paper §2.1: "the bi-directional RNN can
+//! be constructed by combining two RNNs operating at different
+//! directions").
+//!
+//! For *offline* single-stream workloads (the acceptor / encoder cases)
+//! both directions see the whole sequence, so multi-time-step blocks
+//! apply to each direction independently; outputs are concatenated
+//! per-step: `y_t = [fwd_t ; bwd_t]`.
+//!
+//! Bidirectional models cannot be served incrementally (the backward pass
+//! needs the end of the sequence) — this type is deliberately a
+//! whole-sequence API, unlike the streaming `Engine` trait.
+
+use crate::engine::Engine;
+
+/// Two engines of identical geometry run in opposite directions.
+pub struct BiDir<E: Engine> {
+    fwd: E,
+    bwd: E,
+    /// Scratch for the reversed input / backward outputs.
+    rev_x: Vec<f32>,
+    bwd_out: Vec<f32>,
+}
+
+impl<E: Engine> BiDir<E> {
+    pub fn new(fwd: E, bwd: E) -> Self {
+        assert_eq!(fwd.hidden(), bwd.hidden(), "direction width mismatch");
+        assert_eq!(fwd.input(), bwd.input(), "direction input mismatch");
+        Self {
+            fwd,
+            bwd,
+            rev_x: Vec::new(),
+            bwd_out: Vec::new(),
+        }
+    }
+
+    pub fn hidden(&self) -> usize {
+        // Concatenated output width.
+        2 * self.fwd.hidden()
+    }
+
+    pub fn input(&self) -> usize {
+        self.fwd.input()
+    }
+
+    /// Process a whole sequence; `out` is `[steps, 2H]` with the forward
+    /// features in the first H columns and backward in the last H.
+    pub fn run_sequence(&mut self, x: &[f32], steps: usize, out: &mut [f32]) {
+        let d = self.fwd.input();
+        let h = self.fwd.hidden();
+        assert_eq!(x.len(), steps * d, "x must be [steps, input]");
+        assert_eq!(out.len(), steps * 2 * h, "out must be [steps, 2H]");
+
+        // Reset both directions: a bidirectional pass is per-sequence.
+        self.fwd.reset();
+        self.bwd.reset();
+
+        // Forward direction writes directly into the left half.
+        self.rev_x.resize(steps * d, 0.0);
+        self.bwd_out.resize(steps * h, 0.0);
+        let mut fwd_out = vec![0.0; steps * h];
+        self.fwd.run_sequence(x, steps, &mut fwd_out);
+
+        // Backward: reverse frames, run, un-reverse outputs.
+        for s in 0..steps {
+            self.rev_x[s * d..(s + 1) * d]
+                .copy_from_slice(&x[(steps - 1 - s) * d..(steps - s) * d]);
+        }
+        self.bwd.run_sequence(&self.rev_x, steps, &mut self.bwd_out);
+
+        for s in 0..steps {
+            out[s * 2 * h..s * 2 * h + h].copy_from_slice(&fwd_out[s * h..(s + 1) * h]);
+            out[s * 2 * h + h..(s + 1) * 2 * h]
+                .copy_from_slice(&self.bwd_out[(steps - 1 - s) * h..(steps - s) * h]);
+        }
+    }
+
+    /// Weight traffic for one full sequence pass (both directions).
+    pub fn weight_bytes_per_sequence(&self, steps: usize) -> usize {
+        let per_block_f = self.fwd.weight_bytes_per_block();
+        let per_block_b = self.bwd.weight_bytes_per_block();
+        let blocks_f = steps.div_ceil(self.fwd.block_size());
+        let blocks_b = steps.div_ceil(self.bwd.block_size());
+        per_block_f * blocks_f + per_block_b * blocks_b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::SruEngine;
+    use crate::models::config::{Arch, ModelConfig};
+    use crate::models::SruParams;
+    use crate::util::Rng;
+
+    fn engines(h: usize, t: usize) -> (SruEngine, SruEngine) {
+        let cfg = ModelConfig {
+            arch: Arch::Sru,
+            hidden: h,
+            input: h,
+        };
+        let f = SruParams::init(&cfg, &mut Rng::new(1));
+        let b = SruParams::init(&cfg, &mut Rng::new(2));
+        (SruEngine::new(f, t), SruEngine::new(b, t))
+    }
+
+    #[test]
+    fn block_size_does_not_change_bidir_outputs() {
+        let h = 24;
+        let steps = 19;
+        let mut x = vec![0.0; steps * h];
+        Rng::new(3).fill_normal(&mut x, 1.0);
+
+        let (f1, b1) = engines(h, 1);
+        let mut bi1 = BiDir::new(f1, b1);
+        let mut want = vec![0.0; steps * 2 * h];
+        bi1.run_sequence(&x, steps, &mut want);
+
+        let (f8, b8) = engines(h, 8);
+        let mut bi8 = BiDir::new(f8, b8);
+        let mut got = vec![0.0; steps * 2 * h];
+        bi8.run_sequence(&x, steps, &mut got);
+
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert!((g - w).abs() < 1e-4, "idx {i}: {g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn backward_half_sees_the_future() {
+        // A zero sequence with a single spike at the END must influence
+        // the backward features at step 0 but not the forward features.
+        let h = 16;
+        let steps = 10;
+        let mut x = vec![0.0; steps * h];
+        let (f, b) = engines(h, 4);
+        let mut bi = BiDir::new(f, b);
+        let mut base = vec![0.0; steps * 2 * h];
+        bi.run_sequence(&x, steps, &mut base);
+
+        x[(steps - 1) * h] = 5.0; // spike in the last frame
+        let mut spiked = vec![0.0; steps * 2 * h];
+        bi.run_sequence(&x, steps, &mut spiked);
+
+        let fwd0: f32 = (0..h)
+            .map(|i| (spiked[i] - base[i]).abs())
+            .fold(0.0, f32::max);
+        let bwd0: f32 = (h..2 * h)
+            .map(|i| (spiked[i] - base[i]).abs())
+            .fold(0.0, f32::max);
+        assert!(fwd0 < 1e-6, "forward at t=0 must not see the future: {fwd0}");
+        assert!(bwd0 > 1e-4, "backward at t=0 must see the future: {bwd0}");
+    }
+
+    #[test]
+    fn repeated_runs_are_deterministic() {
+        let h = 8;
+        let steps = 7;
+        let mut x = vec![0.0; steps * h];
+        Rng::new(5).fill_normal(&mut x, 1.0);
+        let (f, b) = engines(h, 2);
+        let mut bi = BiDir::new(f, b);
+        let mut a = vec![0.0; steps * 2 * h];
+        let mut c = vec![0.0; steps * 2 * h];
+        bi.run_sequence(&x, steps, &mut a);
+        bi.run_sequence(&x, steps, &mut c);
+        assert_eq!(a, c);
+    }
+
+    #[test]
+    fn weight_traffic_counts_both_directions() {
+        let (f, b) = engines(8, 4);
+        let bi = BiDir::new(f, b);
+        let one_dir = 3 * 8 * 8 * 4; // [3H, D] f32
+        assert_eq!(bi.weight_bytes_per_sequence(8), 2 * 2 * one_dir);
+    }
+}

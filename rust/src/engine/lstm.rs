@@ -1,0 +1,276 @@
+//! LSTM engine — the paper's baseline (§2.2, §3.1).
+//!
+//! Two execution modes:
+//!
+//! * [`LstmMode::SingleStep`]: the classic per-step GEMV pair
+//!   (`W @ x_t` and `U @ h_{t-1}`) — the "LSTM" row of Tables 1–4.
+//! * [`LstmMode::Precompute`]: the §3.1 partial parallelization — the
+//!   input-side `W @ X` is batched over T steps as a GEMM, but the
+//!   recurrent `U @ h` GEMV stays sequential.  The paper's point: this
+//!   can cut weight traffic *at most in half*, which the ABL2 ablation
+//!   measures.
+
+use crate::engine::{check_io, Engine};
+use crate::linalg::{fast_sigmoid, fast_tanh, gemm, gemm_bt, gemv, gemv_acc, SMALL_N_CUTOFF};
+use crate::models::LstmParams;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LstmMode {
+    SingleStep,
+    /// Input-side precompute over blocks of the given size.
+    Precompute(usize),
+}
+
+#[derive(Debug, Clone)]
+pub struct LstmEngine {
+    params: LstmParams,
+    mode: LstmMode,
+    hidden: usize,
+    input: usize,
+    h: Vec<f32>,
+    c: Vec<f32>,
+    // --- scratch ---
+    /// Per-step gate vector `[4H]`.
+    g: Vec<f32>,
+    /// Precompute mode: `[4H, T]` input-side gates.
+    gx: Vec<f32>,
+    /// Precompute mode: `[D, T]` transposed input block.
+    xt: Vec<f32>,
+}
+
+impl LstmEngine {
+    pub fn new(params: LstmParams, mode: LstmMode) -> Self {
+        let hidden = params.hidden();
+        let input = params.input();
+        let t_block = match mode {
+            LstmMode::SingleStep => 1,
+            LstmMode::Precompute(t) => {
+                assert!(t >= 1, "block size must be >= 1");
+                t
+            }
+        };
+        Self {
+            g: vec![0.0; 4 * hidden],
+            gx: vec![0.0; 4 * hidden * t_block],
+            xt: vec![0.0; input * t_block],
+            h: vec![0.0; hidden],
+            c: vec![0.0; hidden],
+            params,
+            mode,
+            hidden,
+            input,
+        }
+    }
+
+    pub fn state(&self) -> (&[f32], &[f32]) {
+        (&self.h, &self.c)
+    }
+
+    pub fn set_state(&mut self, h: &[f32], c: &[f32]) {
+        assert_eq!(h.len(), self.hidden);
+        assert_eq!(c.len(), self.hidden);
+        self.h.copy_from_slice(h);
+        self.c.copy_from_slice(c);
+    }
+
+    /// Apply gate math for one step given pre-activations in `self.g`,
+    /// writing `h_t` into `out_row`.
+    fn gate_step(&mut self, out_row: &mut [f32]) {
+        let h = self.hidden;
+        for i in 0..h {
+            let f = fast_sigmoid(self.g[i]);
+            let ig = fast_sigmoid(self.g[h + i]);
+            let o = fast_sigmoid(self.g[2 * h + i]);
+            let chat = fast_tanh(self.g[3 * h + i]);
+            self.c[i] = f * self.c[i] + ig * chat;
+            let hv = o * fast_tanh(self.c[i]);
+            self.h[i] = hv;
+            out_row[i] = hv;
+        }
+    }
+
+    fn run_single_step(&mut self, x: &[f32], steps: usize, out: &mut [f32]) {
+        let (d, h) = (self.input, self.hidden);
+        for s in 0..steps {
+            let xs = &x[s * d..(s + 1) * d];
+            // g = W @ x_t  (weights fetched every step — the bottleneck)
+            gemv(&mut self.g, self.params.w.data(), xs, 4 * h, d);
+            // g += U @ h_{t-1}
+            gemv_acc(&mut self.g, self.params.u.data(), &self.h, 4 * h, h);
+            for (gv, bv) in self.g.iter_mut().zip(&self.params.b) {
+                *gv += bv;
+            }
+            self.gate_step(&mut out[s * h..(s + 1) * h]);
+        }
+    }
+
+    fn run_precompute(&mut self, x: &[f32], steps: usize, out: &mut [f32], t_block: usize) {
+        let (d, h) = (self.input, self.hidden);
+        let mut s0 = 0;
+        while s0 < steps {
+            let t = t_block.min(steps - s0);
+            // Batched input side: GX [4H, t] = W @ X — one weight fetch
+            // for t steps (the only part of LSTM that allows this).
+            if t <= SMALL_N_CUTOFF {
+                gemm_bt(
+                    &mut self.gx[..4 * h * t],
+                    self.params.w.data(),
+                    &x[s0 * d..(s0 + t) * d],
+                    4 * h,
+                    d,
+                    t,
+                );
+            } else {
+                let xt = &mut self.xt[..d * t];
+                crate::linalg::transpose_into(&x[s0 * d..(s0 + t) * d], t, d, xt);
+                gemm(&mut self.gx[..4 * h * t], self.params.w.data(), xt, 4 * h, d, t);
+            }
+
+            for s in 0..t {
+                // g = GX[:, s] (strided column copy) + U @ h + b.
+                for r in 0..4 * h {
+                    self.g[r] = self.gx[r * t + s] + self.params.b[r];
+                }
+                gemv_acc(&mut self.g, self.params.u.data(), &self.h, 4 * h, h);
+                self.gate_step(&mut out[(s0 + s) * h..(s0 + s + 1) * h]);
+            }
+            s0 += t;
+        }
+    }
+}
+
+impl Engine for LstmEngine {
+    fn arch(&self) -> &'static str {
+        "lstm"
+    }
+
+    fn hidden(&self) -> usize {
+        self.hidden
+    }
+
+    fn input(&self) -> usize {
+        self.input
+    }
+
+    fn block_size(&self) -> usize {
+        match self.mode {
+            LstmMode::SingleStep => 1,
+            LstmMode::Precompute(t) => t,
+        }
+    }
+
+    fn run_sequence(&mut self, x: &[f32], steps: usize, out: &mut [f32]) {
+        check_io(x, steps, self.input, out, self.hidden);
+        match self.mode {
+            LstmMode::SingleStep => self.run_single_step(x, steps, out),
+            LstmMode::Precompute(t) => self.run_precompute(x, steps, out, t),
+        }
+    }
+
+    fn reset(&mut self) {
+        self.h.fill(0.0);
+        self.c.fill(0.0);
+    }
+
+    fn weight_bytes_per_block(&self) -> usize {
+        // Per block: W once, plus U once per step in the block.
+        let t = self.block_size();
+        (self.params.w.len() + t * self.params.u.len()) * std::mem::size_of::<f32>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::sigmoid;
+    use crate::models::config::{Arch, ModelConfig};
+    use crate::util::Rng;
+
+    fn params(h: usize, seed: u64) -> LstmParams {
+        let cfg = ModelConfig {
+            arch: Arch::Lstm,
+            hidden: h,
+            input: h,
+        };
+        LstmParams::init(&cfg, &mut Rng::new(seed))
+    }
+
+    #[test]
+    fn precompute_matches_single_step() {
+        // §3.1's transformation must be numerically exact: batching the
+        // input-side GEMM changes execution order, not results.
+        let h = 20;
+        let p = params(h, 21);
+        let steps = 13;
+        let mut x = vec![0.0; steps * h];
+        Rng::new(5).fill_normal(&mut x, 1.0);
+
+        let mut base = LstmEngine::new(p.clone(), LstmMode::SingleStep);
+        let mut want = vec![0.0; steps * h];
+        base.run_sequence(&x, steps, &mut want);
+
+        for t in [1, 2, 4, 13, 32] {
+            let mut e = LstmEngine::new(p.clone(), LstmMode::Precompute(t));
+            let mut out = vec![0.0; steps * h];
+            e.run_sequence(&x, steps, &mut out);
+            for (i, (&g, &w)) in out.iter().zip(&want).enumerate() {
+                assert!((g - w).abs() < 1e-4, "T={t} idx {i}: {g} vs {w}");
+            }
+            let (hs, cs) = e.state();
+            let (hw, cw) = base.state();
+            for (a, b) in hs.iter().zip(hw).chain(cs.iter().zip(cw)) {
+                assert!((a - b).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn forget_gate_bias_keeps_memory() {
+        // With forget bias init = 1 and small weights, c should decay
+        // slowly: run zeros input, c must stay close to its start.
+        let h = 16;
+        let mut p = params(h, 1);
+        // zero all weights, keep bias (f = sigmoid(1) ~ 0.73)
+        p.w.data_mut().fill(0.0);
+        p.u.data_mut().fill(0.0);
+        let mut e = LstmEngine::new(p, LstmMode::SingleStep);
+        let c0 = vec![1.0; h];
+        e.set_state(&vec![0.0; h], &c0);
+        let x = vec![0.0; 2 * h];
+        let mut out = vec![0.0; 2 * h];
+        e.run_sequence(&x, 2, &mut out);
+        let f = sigmoid(1.0);
+        let expect = f * f; // two decay steps, no input contribution
+        for &cv in e.state().1 {
+            assert!((cv - expect).abs() < 1e-5, "{cv} vs {expect}");
+        }
+    }
+
+    #[test]
+    fn weight_bytes_reflect_mode() {
+        let p = params(8, 2);
+        let single = LstmEngine::new(p.clone(), LstmMode::SingleStep);
+        let pre = LstmEngine::new(p, LstmMode::Precompute(4));
+        // Precompute(4): W once + 4x U. SingleStep: W + U per step.
+        assert!(pre.weight_bytes_per_block() > single.weight_bytes_per_block());
+        let w_bytes = 4 * 8 * 8 * 4;
+        let u_bytes = 4 * 8 * 8 * 4;
+        assert_eq!(single.weight_bytes_per_block(), w_bytes + u_bytes);
+        assert_eq!(pre.weight_bytes_per_block(), w_bytes + 4 * u_bytes);
+    }
+
+    #[test]
+    fn reset_and_restart() {
+        let h = 12;
+        let p = params(h, 3);
+        let mut e = LstmEngine::new(p, LstmMode::SingleStep);
+        let mut x = vec![0.0; 5 * h];
+        Rng::new(9).fill_normal(&mut x, 1.0);
+        let mut a = vec![0.0; 5 * h];
+        e.run_sequence(&x, 5, &mut a);
+        e.reset();
+        let mut b = vec![0.0; 5 * h];
+        e.run_sequence(&x, 5, &mut b);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,62 @@
+//! Native CPU inference engines — the Rust analog of the paper's C++/BLAS
+//! implementation, and the backend behind Tables 1–8.
+//!
+//! Each engine processes a **single stream** and is parameterized by the
+//! multi-time-step block size `T` ("SRU-n" in the paper): input frames are
+//! consumed `T` at a time, the gate matrices are applied as one GEMM
+//! (`linalg::gemm`, weights fetched once per block), and only the cheap
+//! element-wise recurrence runs strictly sequentially.
+//!
+//! Engines own all scratch buffers: the per-step hot path performs **zero
+//! heap allocation** after construction (verified by the allocation-free
+//! property test in `rust/tests/engine_invariants.rs`).
+
+pub mod bidir;
+pub mod lstm;
+pub mod qrnn;
+pub mod quant;
+pub mod sru;
+pub mod stack;
+
+pub use bidir::BiDir;
+pub use lstm::{LstmEngine, LstmMode};
+pub use qrnn::QrnnEngine;
+pub use quant::{QuantMatrix, QuantSruEngine};
+pub use sru::SruEngine;
+pub use stack::{NativeStack, StreamState};
+
+/// A single-stream RNN inference engine.
+///
+/// `x` is time-major `[steps, input]`; `out` is time-major
+/// `[steps, hidden]`.  `steps` need not be a multiple of the block size —
+/// the final partial block is processed with its true length (semantics
+/// identical to single-step execution; see the equivalence tests).
+pub trait Engine {
+    fn arch(&self) -> &'static str;
+    fn hidden(&self) -> usize;
+    fn input(&self) -> usize;
+    /// Multi-time-step block size T (1 = strictly sequential).
+    fn block_size(&self) -> usize;
+    /// Process `steps` frames, writing `steps * hidden` outputs.
+    fn run_sequence(&mut self, x: &[f32], steps: usize, out: &mut [f32]);
+    /// Zero the recurrent state (new stream).
+    fn reset(&mut self);
+    /// Weight bytes fetched per processed *block* (the DRAM unit the
+    /// paper counts; see memsim for the cache-accurate version).
+    fn weight_bytes_per_block(&self) -> usize;
+}
+
+/// Validate the common run_sequence contract; panics with a clear message
+/// when an example/bench wires shapes wrong.
+pub(crate) fn check_io(x: &[f32], steps: usize, input: usize, out: &[f32], hidden: usize) {
+    assert_eq!(
+        x.len(),
+        steps * input,
+        "x must be [steps={steps}, input={input}]"
+    );
+    assert_eq!(
+        out.len(),
+        steps * hidden,
+        "out must be [steps={steps}, hidden={hidden}]"
+    );
+}

@@ -1,0 +1,287 @@
+//! QRNN engine with multi-time-step parallelization (paper §3.2, Eq. 3).
+//!
+//! The window-2 "convolution" over `[x_t | x_{t-1}]` becomes two GEMMs per
+//! block (current and shifted-previous input columns) — both still enjoy
+//! the once-per-block weight fetch.
+
+use crate::engine::{check_io, Engine};
+use crate::linalg::{
+    add_row_bias, fast_sigmoid, fast_tanh, gemm, gemm_acc, gemm_bt, gemm_bt_acc,
+    transpose_into, Matrix, SMALL_N_CUTOFF,
+};
+use crate::models::QrnnParams;
+
+#[derive(Debug, Clone)]
+pub struct QrnnEngine {
+    /// `[3H, D]` weights applied to the current input x_t.
+    w_cur: Matrix,
+    /// `[3H, D]` weights applied to the previous input x_{t-1}.
+    w_prev: Matrix,
+    b: Vec<f32>,
+    t_block: usize,
+    hidden: usize,
+    input: usize,
+    /// Cell state `[H]`.
+    c: Vec<f32>,
+    /// Carried previous input `x_{-1}` for the next block (`[D]`).
+    x_carry: Vec<f32>,
+    // --- scratch ---
+    xt: Vec<f32>,      // [D, T] current columns
+    xt_prev: Vec<f32>, // [D, T] previous columns (shifted)
+    gates: Vec<f32>,   // [3H, T]
+}
+
+impl QrnnEngine {
+    pub fn new(params: QrnnParams, t_block: usize) -> Self {
+        assert!(t_block >= 1, "block size must be >= 1");
+        let hidden = params.hidden();
+        let input = params.input();
+        // Split the stacked [3H, 2D] weight into contiguous halves once at
+        // construction; the hot path then runs two clean GEMMs.
+        let w_cur = Matrix::from_fn(3 * hidden, input, |r, c| params.w.at(r, c));
+        let w_prev = Matrix::from_fn(3 * hidden, input, |r, c| params.w.at(r, c + input));
+        Self {
+            w_cur,
+            w_prev,
+            b: params.b.clone(),
+            t_block,
+            hidden,
+            input,
+            c: vec![0.0; hidden],
+            x_carry: vec![0.0; input],
+            xt: vec![0.0; input * t_block],
+            xt_prev: vec![0.0; input * t_block],
+            gates: vec![0.0; 3 * hidden * t_block],
+        }
+    }
+
+    pub fn state(&self) -> (&[f32], &[f32]) {
+        (&self.c, &self.x_carry)
+    }
+
+    pub fn set_state(&mut self, c: &[f32], x_carry: &[f32]) {
+        assert_eq!(c.len(), self.hidden);
+        assert_eq!(x_carry.len(), self.input);
+        self.c.copy_from_slice(c);
+        self.x_carry.copy_from_slice(x_carry);
+    }
+
+    fn forward_block(&mut self, x: &[f32], t: usize, out: &mut [f32]) {
+        let (h, d) = (self.hidden, self.input);
+        debug_assert!(t >= 1 && t <= self.t_block);
+
+        let gates = &mut self.gates[..3 * h * t];
+        if t <= SMALL_N_CUTOFF {
+            // Small blocks: multi-dot directly on the time-major frames.
+            // The shifted "previous" frames are a contiguous copy:
+            // [carry ; x[0..t-1]].
+            let xp = &mut self.xt_prev[..t * d];
+            xp[..d].copy_from_slice(&self.x_carry);
+            xp[d..t * d].copy_from_slice(&x[..(t - 1) * d]);
+            gemm_bt(gates, self.w_cur.data(), &x[..t * d], 3 * h, d, t);
+            gemm_bt_acc(gates, self.w_prev.data(), xp, 3 * h, d, t);
+        } else {
+            // Current input columns [D, T].
+            let xt = &mut self.xt[..d * t];
+            transpose_into(&x[..t * d], t, d, xt);
+            // Previous input columns: row-wise shift by one step,
+            // injecting the carry from the previous block at column 0.
+            let xt_prev = &mut self.xt_prev[..d * t];
+            for row in 0..d {
+                xt_prev[row * t] = self.x_carry[row];
+                xt_prev[row * t + 1..row * t + t]
+                    .copy_from_slice(&xt[row * t..row * t + t - 1]);
+            }
+            // Two GEMMs (Eq. 4 applied to both conv taps).
+            gemm(gates, self.w_cur.data(), xt, 3 * h, d, t);
+            gemm_acc(gates, self.w_prev.data(), xt_prev, 3 * h, d, t);
+        }
+        add_row_bias(gates, &self.b, 3 * h, t);
+
+        // fo-pooling remainder, unit-outer for contiguous gate rows.
+        let (gx, gfo) = gates.split_at(h * t);
+        let (gf, go) = gfo.split_at(h * t);
+        for i in 0..h {
+            let mut c = self.c[i];
+            let xh_row = &gx[i * t..i * t + t];
+            let f_row = &gf[i * t..i * t + t];
+            let o_row = &go[i * t..i * t + t];
+            for s in 0..t {
+                let xhat = fast_tanh(xh_row[s]);
+                let f = fast_sigmoid(f_row[s]);
+                let o = fast_sigmoid(o_row[s]);
+                c = f * c + (1.0 - f) * xhat;
+                out[s * h + i] = o * fast_tanh(c);
+            }
+            self.c[i] = c;
+        }
+
+        // Carry the final input column for the next block.
+        self.x_carry.copy_from_slice(&x[(t - 1) * d..t * d]);
+    }
+}
+
+impl Engine for QrnnEngine {
+    fn arch(&self) -> &'static str {
+        "qrnn"
+    }
+
+    fn hidden(&self) -> usize {
+        self.hidden
+    }
+
+    fn input(&self) -> usize {
+        self.input
+    }
+
+    fn block_size(&self) -> usize {
+        self.t_block
+    }
+
+    fn run_sequence(&mut self, x: &[f32], steps: usize, out: &mut [f32]) {
+        check_io(x, steps, self.input, out, self.hidden);
+        let (d, h, tb) = (self.input, self.hidden, self.t_block);
+        let mut s = 0;
+        while s < steps {
+            let t = tb.min(steps - s);
+            let (xs, os) = (&x[s * d..(s + t) * d], &mut out[s * h..(s + t) * h]);
+            self.forward_block(xs, t, os);
+            s += t;
+        }
+    }
+
+    fn reset(&mut self) {
+        self.c.fill(0.0);
+        self.x_carry.fill(0.0);
+    }
+
+    fn weight_bytes_per_block(&self) -> usize {
+        (self.w_cur.len() + self.w_prev.len()) * std::mem::size_of::<f32>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::sigmoid;
+    use crate::models::config::{Arch, ModelConfig};
+    use crate::util::Rng;
+
+    fn params(h: usize, d: usize, seed: u64) -> QrnnParams {
+        let cfg = ModelConfig {
+            arch: Arch::Qrnn,
+            hidden: h,
+            input: d,
+        };
+        QrnnParams::init(&cfg, &mut Rng::new(seed))
+    }
+
+    /// Strict per-step QRNN reference.
+    fn qrnn_seq_ref(
+        p: &QrnnParams,
+        x: &[f32],
+        steps: usize,
+    ) -> (Vec<f32>, Vec<f32>) {
+        let h = p.hidden();
+        let d = p.input();
+        let mut c = vec![0.0f32; h];
+        let mut xp = vec![0.0f32; d];
+        let mut out = vec![0.0; steps * h];
+        for s in 0..steps {
+            let xs = &x[s * d..(s + 1) * d];
+            for i in 0..h {
+                let g = |row: usize| -> f32 {
+                    let r = p.w.row(row);
+                    let cur: f32 = r[..d].iter().zip(xs).map(|(a, b)| a * b).sum();
+                    let prev: f32 = r[d..].iter().zip(&xp).map(|(a, b)| a * b).sum();
+                    cur + prev + p.b[row]
+                };
+                let xhat = g(i).tanh();
+                let f = sigmoid(g(h + i));
+                let o = sigmoid(g(2 * h + i));
+                c[i] = f * c[i] + (1.0 - f) * xhat;
+                out[s * h + i] = o * c[i].tanh();
+            }
+            xp.copy_from_slice(xs);
+        }
+        (out, c)
+    }
+
+    #[test]
+    fn block_sizes_agree_with_sequential() {
+        let (h, d) = (24, 16);
+        let p = params(h, d, 11);
+        let steps = 17;
+        let mut rng = Rng::new(4);
+        let mut x = vec![0.0; steps * d];
+        rng.fill_normal(&mut x, 1.0);
+        let (want, want_c) = qrnn_seq_ref(&p, &x, steps);
+
+        for t in [1, 2, 5, 16, 17, 32] {
+            let mut e = QrnnEngine::new(p.clone(), t);
+            let mut out = vec![0.0; steps * h];
+            e.run_sequence(&x, steps, &mut out);
+            for (i, (&g, &w)) in out.iter().zip(&want).enumerate() {
+                assert!((g - w).abs() < 1e-4, "T={t} idx {i}: {g} vs {w}");
+            }
+            for (g, w) in e.state().0.iter().zip(&want_c) {
+                assert!((g - w).abs() < 1e-4, "state T={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn x_carry_crosses_blocks() {
+        // The t=0 column of block k+1 must see the last input of block k
+        // through W_prev; verified against a single full-sequence run.
+        let (h, d) = (12, 12);
+        let p = params(h, d, 13);
+        let steps = 10;
+        let mut x = vec![0.0; steps * d];
+        Rng::new(8).fill_normal(&mut x, 1.0);
+
+        let mut full_e = QrnnEngine::new(p.clone(), steps);
+        let mut full = vec![0.0; steps * h];
+        full_e.run_sequence(&x, steps, &mut full);
+
+        let mut split_e = QrnnEngine::new(p, 5);
+        let mut split = vec![0.0; steps * h];
+        split_e.run_sequence(&x, steps, &mut split);
+        for (a, b) in full.iter().zip(&split) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn rectangular_input_supported() {
+        // Unlike SRU, QRNN has no highway term: D != H is fine (used by
+        // the ASR stack's 40-dim feature front).
+        let (h, d) = (32, 12);
+        let p = params(h, d, 17);
+        let mut e = QrnnEngine::new(p, 4);
+        let steps = 9;
+        let mut x = vec![0.0; steps * d];
+        Rng::new(1).fill_normal(&mut x, 1.0);
+        let mut out = vec![0.0; steps * h];
+        e.run_sequence(&x, steps, &mut out);
+        assert!(out.iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn reset_restores_initial() {
+        let (h, d) = (8, 8);
+        let p = params(h, d, 19);
+        let mut e = QrnnEngine::new(p, 3);
+        let mut x = vec![0.0; 6 * d];
+        Rng::new(3).fill_normal(&mut x, 1.0);
+        let mut a = vec![0.0; 6 * h];
+        e.run_sequence(&x, 6, &mut a);
+        e.reset();
+        let (c, xc) = e.state();
+        assert!(c.iter().all(|&v| v == 0.0));
+        assert!(xc.iter().all(|&v| v == 0.0));
+        let mut b = vec![0.0; 6 * h];
+        e.run_sequence(&x, 6, &mut b);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,267 @@
+//! SRU engine with multi-time-step parallelization (paper §3.2, Eq. 2/4).
+
+use crate::engine::{check_io, Engine};
+use crate::linalg::{
+    add_row_bias, fast_sigmoid, fast_tanh, gemm, gemm_bt, transpose_into,
+    SMALL_N_CUTOFF,
+};
+use crate::models::SruParams;
+
+/// Single-stream SRU inference with block size `t_block`.
+#[derive(Debug, Clone)]
+pub struct SruEngine {
+    params: SruParams,
+    t_block: usize,
+    hidden: usize,
+    input: usize,
+    /// Recurrent cell state `c` (`[H]`).
+    c: Vec<f32>,
+    // --- preallocated scratch (no allocation on the hot path) ---
+    /// Transposed input block `[D, T]` (column per step).
+    xt: Vec<f32>,
+    /// Gate pre-activations `[3H, T]` (rows: xhat, f, r).
+    gates: Vec<f32>,
+    /// Stacked bias `[3H]`: zeros for xhat, then b_f, b_r.
+    b3: Vec<f32>,
+}
+
+impl SruEngine {
+    pub fn new(params: SruParams, t_block: usize) -> Self {
+        assert!(t_block >= 1, "block size must be >= 1");
+        let hidden = params.hidden();
+        let input = params.input();
+        assert_eq!(
+            hidden, input,
+            "SRU highway term requires input == hidden (got {input} vs {hidden})"
+        );
+        let mut b3 = vec![0.0; 3 * hidden];
+        b3[hidden..].copy_from_slice(&params.b);
+        Self {
+            c: vec![0.0; hidden],
+            xt: vec![0.0; input * t_block],
+            gates: vec![0.0; 3 * hidden * t_block],
+            b3,
+            params,
+            t_block,
+            hidden,
+            input,
+        }
+    }
+
+    /// Access the cell state (for session checkpoint/restore in L3).
+    pub fn state(&self) -> &[f32] {
+        &self.c
+    }
+
+    pub fn set_state(&mut self, c: &[f32]) {
+        assert_eq!(c.len(), self.hidden);
+        self.c.copy_from_slice(c);
+    }
+
+    /// Process one block of `t <= t_block` steps.
+    /// `x`: `[t, D]` time-major; `out`: `[t, H]` time-major.
+    fn forward_block(&mut self, x: &[f32], t: usize, out: &mut [f32]) {
+        let (h, d) = (self.hidden, self.input);
+        debug_assert!(t >= 1 && t <= self.t_block);
+
+        // (1) Eq. (4): one GEMM computes all three gates for all t steps.
+        //     Each weight row is fetched from DRAM once per block instead
+        //     of once per step — the paper's entire effect.
+        let gates = &mut self.gates[..3 * h * t];
+        if t <= SMALL_N_CUTOFF {
+            // Small blocks: multi-dot against the time-major frames
+            // directly (no transpose; K-vectorized at any T).
+            gemm_bt(gates, self.params.w.data(), &x[..t * d], 3 * h, d, t);
+        } else {
+            let xt = &mut self.xt[..d * t];
+            transpose_into(&x[..t * d], t, d, xt);
+            gemm(gates, self.params.w.data(), xt, 3 * h, d, t);
+        }
+        add_row_bias(gates, &self.b3, 3 * h, t);
+
+        // (2) The sequential remainder (element-wise, per hidden unit).
+        //     Each unit's c-chain is independent, so we iterate units in
+        //     the outer loop: gate rows are then read contiguously.
+        let (gx, gfr) = gates.split_at(h * t);
+        let (gf, gr) = gfr.split_at(h * t);
+        for i in 0..h {
+            let mut c = self.c[i];
+            let xh_row = &gx[i * t..i * t + t];
+            let f_row = &gf[i * t..i * t + t];
+            let r_row = &gr[i * t..i * t + t];
+            for s in 0..t {
+                let f = fast_sigmoid(f_row[s]);
+                let r = fast_sigmoid(r_row[s]);
+                c = f * c + (1.0 - f) * xh_row[s];
+                // Highway term uses the raw input (time-major read).
+                out[s * h + i] = r * fast_tanh(c) + (1.0 - r) * x[s * d + i];
+            }
+            self.c[i] = c;
+        }
+    }
+}
+
+impl Engine for SruEngine {
+    fn arch(&self) -> &'static str {
+        "sru"
+    }
+
+    fn hidden(&self) -> usize {
+        self.hidden
+    }
+
+    fn input(&self) -> usize {
+        self.input
+    }
+
+    fn block_size(&self) -> usize {
+        self.t_block
+    }
+
+    fn run_sequence(&mut self, x: &[f32], steps: usize, out: &mut [f32]) {
+        check_io(x, steps, self.input, out, self.hidden);
+        let (d, h, tb) = (self.input, self.hidden, self.t_block);
+        let mut s = 0;
+        while s < steps {
+            let t = tb.min(steps - s);
+            let (xs, os) = (&x[s * d..(s + t) * d], &mut out[s * h..(s + t) * h]);
+            self.forward_block(xs, t, os);
+            s += t;
+        }
+    }
+
+    fn reset(&mut self) {
+        self.c.fill(0.0);
+    }
+
+    fn weight_bytes_per_block(&self) -> usize {
+        self.params.w.len() * std::mem::size_of::<f32>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::sigmoid;
+    use crate::models::config::{Arch, ModelConfig};
+    use crate::util::Rng;
+
+    fn small_params(h: usize, seed: u64) -> SruParams {
+        let cfg = ModelConfig {
+            arch: Arch::Sru,
+            hidden: h,
+            input: h,
+        };
+        SruParams::init(&cfg, &mut Rng::new(seed))
+    }
+
+    /// Reference: strictly per-step SRU via the same params (gemv path).
+    fn sru_seq_ref(p: &SruParams, x: &[f32], steps: usize, c0: &[f32]) -> (Vec<f32>, Vec<f32>) {
+        let h = p.hidden();
+        let d = p.input();
+        let mut c = c0.to_vec();
+        let mut out = vec![0.0; steps * h];
+        for s in 0..steps {
+            let xs = &x[s * d..(s + 1) * d];
+            for i in 0..h {
+                let dotr = |row: usize| -> f32 {
+                    let r = p.w.row(row);
+                    r.iter().zip(xs).map(|(a, b)| a * b).sum::<f32>()
+                };
+                let xhat = dotr(i);
+                let f = sigmoid(dotr(h + i) + p.b[i]);
+                let r = sigmoid(dotr(2 * h + i) + p.b[h + i]);
+                c[i] = f * c[i] + (1.0 - f) * xhat;
+                out[s * h + i] = r * c[i].tanh() + (1.0 - r) * xs[i];
+            }
+        }
+        (out, c)
+    }
+
+    #[test]
+    fn block_sizes_agree_with_sequential() {
+        let h = 48;
+        let p = small_params(h, 3);
+        let steps = 23;
+        let mut rng = Rng::new(9);
+        let mut x = vec![0.0; steps * h];
+        rng.fill_normal(&mut x, 1.0);
+        let (want, want_c) = sru_seq_ref(&p, &x, steps, &vec![0.0; h]);
+
+        for t in [1, 2, 3, 8, 16, 23, 64] {
+            let mut e = SruEngine::new(p.clone(), t);
+            let mut out = vec![0.0; steps * h];
+            e.run_sequence(&x, steps, &mut out);
+            for (i, (&g, &w)) in out.iter().zip(&want).enumerate() {
+                assert!(
+                    (g - w).abs() < 1e-4,
+                    "T={t} idx {i}: {g} vs {w}"
+                );
+            }
+            for (g, w) in e.state().iter().zip(&want_c) {
+                assert!((g - w).abs() < 1e-4, "state T={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn chained_calls_equal_one_call() {
+        let h = 32;
+        let p = small_params(h, 5);
+        let steps = 20;
+        let mut rng = Rng::new(6);
+        let mut x = vec![0.0; steps * h];
+        rng.fill_normal(&mut x, 1.0);
+
+        let mut e1 = SruEngine::new(p.clone(), 8);
+        let mut full = vec![0.0; steps * h];
+        e1.run_sequence(&x, steps, &mut full);
+
+        let mut e2 = SruEngine::new(p, 8);
+        let mut part = vec![0.0; steps * h];
+        e2.run_sequence(&x[..7 * h], 7, &mut part[..7 * h]);
+        e2.run_sequence(&x[7 * h..], steps - 7, &mut part[7 * h..]);
+        for (a, b) in full.iter().zip(&part) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let h = 16;
+        let p = small_params(h, 1);
+        let mut e = SruEngine::new(p, 4);
+        let mut x = vec![0.0; 8 * h];
+        Rng::new(2).fill_normal(&mut x, 1.0);
+        let mut out1 = vec![0.0; 8 * h];
+        e.run_sequence(&x, 8, &mut out1);
+        assert!(e.state().iter().any(|&v| v != 0.0));
+        e.reset();
+        assert!(e.state().iter().all(|&v| v == 0.0));
+        let mut out2 = vec![0.0; 8 * h];
+        e.run_sequence(&x, 8, &mut out2);
+        assert_eq!(out1, out2, "reset must restore initial behaviour");
+    }
+
+    #[test]
+    fn state_round_trip() {
+        let h = 8;
+        let p = small_params(h, 7);
+        let mut e = SruEngine::new(p, 2);
+        let snap: Vec<f32> = (0..h).map(|i| i as f32 / 8.0).collect();
+        e.set_state(&snap);
+        assert_eq!(e.state(), snap.as_slice());
+    }
+
+    #[test]
+    #[should_panic(expected = "input == hidden")]
+    fn rejects_non_square() {
+        let cfg = ModelConfig {
+            arch: Arch::Sru,
+            hidden: 8,
+            input: 4,
+        };
+        let p = SruParams::init(&cfg, &mut Rng::new(0));
+        SruEngine::new(p, 1);
+    }
+}

@@ -1,0 +1,316 @@
+//! Native execution of the full served stack (input projection → N
+//! SRU/QRNN layers → output head) — the CPU-engine twin of the AOT
+//! `stack_*.hlo.txt` artifacts.
+//!
+//! Designed for the coordinator: the stack itself is stateless across
+//! calls; per-stream recurrent state lives in a [`StreamState`] that the
+//! caller swaps in and out, so one weight set serves many sessions.
+
+use crate::engine::{Engine, QrnnEngine, SruEngine};
+use crate::linalg::{add_row_bias, gemm, transpose_into, Matrix};
+use crate::models::config::{Arch, StackConfig};
+use crate::models::StackParams;
+
+/// Per-stream recurrent state: one entry per state tensor, in the same
+/// order as `python/compile/model.py::stack_flat_order` (c per layer,
+/// plus x_prev per layer for QRNN).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StreamState {
+    pub tensors: Vec<Vec<f32>>,
+}
+
+impl StreamState {
+    pub fn zeros(cfg: &StackConfig) -> Self {
+        let mut tensors = Vec::new();
+        for _ in 0..cfg.depth {
+            tensors.push(vec![0.0; cfg.hidden]);
+            if cfg.arch == Arch::Qrnn {
+                tensors.push(vec![0.0; cfg.hidden]);
+            }
+        }
+        Self { tensors }
+    }
+
+    /// Bytes of state (session-table sizing in the coordinator).
+    pub fn bytes(&self) -> usize {
+        self.tensors.iter().map(|t| t.len() * 4).sum()
+    }
+}
+
+/// Native stack engine with a maximum block size; weights shared across
+/// all sessions via state swap-in/swap-out.
+pub struct NativeStack {
+    cfg: StackConfig,
+    proj_w: Matrix,
+    proj_b: Vec<f32>,
+    head_w: Matrix,
+    head_b: Vec<f32>,
+    sru: Vec<SruEngine>,
+    qrnn: Vec<QrnnEngine>,
+    max_block: usize,
+    // scratch
+    xt: Vec<f32>,     // [feat, T]
+    hcur: Vec<f32>,   // [T, H]
+    hnext: Vec<f32>,  // [T, H]
+    proj: Vec<f32>,   // [H, T] projection output (column per step)
+    logit: Vec<f32>,  // [vocab, T]
+}
+
+impl NativeStack {
+    pub fn new(cfg: StackConfig, params: StackParams, max_block: usize) -> Self {
+        assert!(max_block >= 1);
+        let h = cfg.hidden;
+        let mut sru = Vec::new();
+        let mut qrnn = Vec::new();
+        match cfg.arch {
+            Arch::Sru => {
+                assert_eq!(params.sru_layers.len(), cfg.depth);
+                for lp in &params.sru_layers {
+                    sru.push(SruEngine::new(lp.clone(), max_block));
+                }
+            }
+            Arch::Qrnn => {
+                assert_eq!(params.qrnn_layers.len(), cfg.depth);
+                for lp in &params.qrnn_layers {
+                    qrnn.push(QrnnEngine::new(lp.clone(), max_block));
+                }
+            }
+            Arch::Lstm => panic!("stack supports sru/qrnn only"),
+        }
+        Self {
+            proj_w: params.proj_w,
+            proj_b: params.proj_b,
+            head_w: params.head_w,
+            head_b: params.head_b,
+            sru,
+            qrnn,
+            max_block,
+            xt: vec![0.0; cfg.feat * max_block],
+            hcur: vec![0.0; h * max_block],
+            hnext: vec![0.0; h * max_block],
+            proj: vec![0.0; h * max_block],
+            logit: vec![0.0; cfg.vocab * max_block],
+            cfg,
+        }
+    }
+
+    pub fn config(&self) -> &StackConfig {
+        &self.cfg
+    }
+
+    pub fn max_block(&self) -> usize {
+        self.max_block
+    }
+
+    /// Load a stream's recurrent state into the layer engines.
+    fn load_state(&mut self, state: &StreamState) {
+        let mut idx = 0;
+        match self.cfg.arch {
+            Arch::Sru => {
+                for e in &mut self.sru {
+                    e.set_state(&state.tensors[idx]);
+                    idx += 1;
+                }
+            }
+            _ => {
+                for e in &mut self.qrnn {
+                    e.set_state(&state.tensors[idx], &state.tensors[idx + 1]);
+                    idx += 2;
+                }
+            }
+        }
+    }
+
+    /// Store the layer engines' state back into the stream's state.
+    fn save_state(&self, state: &mut StreamState) {
+        let mut idx = 0;
+        match self.cfg.arch {
+            Arch::Sru => {
+                for e in &self.sru {
+                    state.tensors[idx].copy_from_slice(e.state());
+                    idx += 1;
+                }
+            }
+            _ => {
+                for e in &self.qrnn {
+                    let (c, xp) = e.state();
+                    state.tensors[idx].copy_from_slice(c);
+                    state.tensors[idx + 1].copy_from_slice(xp);
+                    idx += 2;
+                }
+            }
+        }
+    }
+
+    /// Run a block of `t <= max_block` frames for the stream whose state
+    /// is `state`.  `x`: `[t, feat]`, `logits_out`: `[t, vocab]`.
+    pub fn run_block(
+        &mut self,
+        x: &[f32],
+        t: usize,
+        state: &mut StreamState,
+        logits_out: &mut [f32],
+    ) {
+        let (feat, h, vocab) = (self.cfg.feat, self.cfg.hidden, self.cfg.vocab);
+        assert!(t >= 1 && t <= self.max_block, "block size {t}");
+        assert_eq!(x.len(), t * feat, "x must be [t, feat]");
+        assert_eq!(logits_out.len(), t * vocab, "logits must be [t, vocab]");
+
+        self.load_state(state);
+
+        // Input projection: [H, t] = proj_w @ X^T + b; tanh; then convert
+        // to time-major [t, H] for the recurrent layers.
+        let xt = &mut self.xt[..feat * t];
+        transpose_into(&x[..t * feat], t, feat, xt);
+        let proj = &mut self.proj[..h * t];
+        gemm(proj, self.proj_w.data(), xt, h, feat, t);
+        add_row_bias(proj, &self.proj_b, h, t);
+        let hcur = &mut self.hcur[..t * h];
+        // transpose [H, t] -> [t, H] with tanh fused.
+        for r in 0..h {
+            for s in 0..t {
+                hcur[s * h + r] = proj[r * t + s].tanh();
+            }
+        }
+
+        // Recurrent layers.
+        for li in 0..self.cfg.depth {
+            let hnext = &mut self.hnext[..t * h];
+            match self.cfg.arch {
+                Arch::Sru => self.sru[li].run_sequence(&self.hcur[..t * h], t, hnext),
+                _ => self.qrnn[li].run_sequence(&self.hcur[..t * h], t, hnext),
+            }
+            std::mem::swap(&mut self.hcur, &mut self.hnext);
+        }
+
+        // Output head: logits [vocab, t] = head_w @ H^T + b.
+        let ht = &mut self.hnext[..t * h]; // reuse as [H, t] transpose buffer
+        transpose_into(&self.hcur[..t * h], t, h, ht);
+        let logit = &mut self.logit[..vocab * t];
+        gemm(logit, self.head_w.data(), ht, vocab, h, t);
+        add_row_bias(logit, &self.head_b, vocab, t);
+        for s in 0..t {
+            for v in 0..vocab {
+                logits_out[s * vocab + v] = logit[v * t + s];
+            }
+        }
+
+        self.save_state(state);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::config::ASR_SRU;
+    use crate::util::Rng;
+
+    fn tiny_cfg(arch: Arch) -> StackConfig {
+        StackConfig {
+            arch,
+            feat: 8,
+            hidden: 16,
+            depth: 2,
+            vocab: 4,
+        }
+    }
+
+    #[test]
+    fn block_sizes_agree() {
+        for arch in [Arch::Sru, Arch::Qrnn] {
+            let cfg = tiny_cfg(arch);
+            let params = StackParams::init(&cfg, &mut Rng::new(42));
+            let steps = 11;
+            let mut x = vec![0.0; steps * cfg.feat];
+            Rng::new(1).fill_normal(&mut x, 1.0);
+
+            // Reference: block size = whole sequence.
+            let mut full = NativeStack::new(cfg, params.clone(), steps);
+            let mut st_full = StreamState::zeros(&cfg);
+            let mut want = vec![0.0; steps * cfg.vocab];
+            full.run_block(&x, steps, &mut st_full, &mut want);
+
+            // Chunked: 4+4+3 through a max_block=4 stack.
+            let mut chunked = NativeStack::new(cfg, params, 4);
+            let mut st = StreamState::zeros(&cfg);
+            let mut got = vec![0.0; steps * cfg.vocab];
+            let mut s = 0;
+            while s < steps {
+                let t = 4.min(steps - s);
+                let (xs, os) = (
+                    &x[s * cfg.feat..(s + t) * cfg.feat],
+                    &mut got[s * cfg.vocab..(s + t) * cfg.vocab],
+                );
+                chunked.run_block(xs, t, &mut st, os);
+                s += t;
+            }
+            for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert!((g - w).abs() < 1e-4, "{arch:?} idx {i}: {g} vs {w}");
+            }
+            assert_eq!(st.tensors.len(), st_full.tensors.len());
+            for (a, b) in st.tensors.iter().zip(&st_full.tensors) {
+                for (x1, x2) in a.iter().zip(b) {
+                    assert!((x1 - x2).abs() < 1e-4);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sessions_are_isolated() {
+        // Two streams interleaved through one engine must behave as if
+        // each had its own engine — the state-swap contract.
+        let cfg = tiny_cfg(Arch::Sru);
+        let params = StackParams::init(&cfg, &mut Rng::new(7));
+        let mut eng = NativeStack::new(cfg, params.clone(), 4);
+
+        let mut xa = vec![0.0; 8 * cfg.feat];
+        let mut xb = vec![0.0; 8 * cfg.feat];
+        Rng::new(2).fill_normal(&mut xa, 1.0);
+        Rng::new(3).fill_normal(&mut xb, 1.0);
+
+        // Interleaved A/B blocks.
+        let mut sa = StreamState::zeros(&cfg);
+        let mut sb = StreamState::zeros(&cfg);
+        let mut la = vec![0.0; 8 * cfg.vocab];
+        let mut lb = vec![0.0; 8 * cfg.vocab];
+        for blk in 0..2 {
+            let r = blk * 4;
+            eng.run_block(
+                &xa[r * cfg.feat..(r + 4) * cfg.feat],
+                4,
+                &mut sa,
+                &mut la[r * cfg.vocab..(r + 4) * cfg.vocab],
+            );
+            eng.run_block(
+                &xb[r * cfg.feat..(r + 4) * cfg.feat],
+                4,
+                &mut sb,
+                &mut lb[r * cfg.vocab..(r + 4) * cfg.vocab],
+            );
+        }
+
+        // Solo run of stream A.
+        let mut solo = NativeStack::new(cfg, params, 4);
+        let mut ss = StreamState::zeros(&cfg);
+        let mut want = vec![0.0; 8 * cfg.vocab];
+        for blk in 0..2 {
+            let r = blk * 4;
+            solo.run_block(
+                &xa[r * cfg.feat..(r + 4) * cfg.feat],
+                4,
+                &mut ss,
+                &mut want[r * cfg.vocab..(r + 4) * cfg.vocab],
+            );
+        }
+        for (g, w) in la.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-5, "interleaving changed stream A");
+        }
+    }
+
+    #[test]
+    fn state_bytes() {
+        let st = StreamState::zeros(&ASR_SRU);
+        assert_eq!(st.bytes(), 4 * 512 * 4);
+    }
+}

@@ -1,0 +1,35 @@
+//! # mtsrnn — Multi-Time-Step Single-Stream RNN Inference
+//!
+//! Production-shaped reproduction of *"Single Stream Parallelization of
+//! Recurrent Neural Networks for Low Power and Fast Inference"* (Sung &
+//! Park, SAMOS'18): SRU/QRNN inference where a single stream is processed
+//! `T` time steps at a time, so each weight fetched from DRAM is used `T`
+//! times (one GEMM instead of `T` GEMVs) — faster and lower-power on
+//! cache-starved embedded CPUs.
+//!
+//! Architecture (three layers, Python never on the request path):
+//!
+//! * **L1/L2** (`python/compile/`): Pallas gate-GEMM + recurrence kernels
+//!   inside JAX block-step models, AOT-lowered to HLO text artifacts.
+//! * **L3** (this crate): streaming coordinator, block batcher, PJRT
+//!   runtime executing the artifacts, a native CPU engine (the paper's
+//!   C++/BLAS analog), a cache/DRAM simulator standing in for the ARM
+//!   board, and the bench harness regenerating every table and figure.
+//!
+//! See `DESIGN.md` for the system inventory and experiment index.
+
+pub mod bench;
+pub mod cli;
+pub mod coordinator;
+pub mod engine;
+pub mod linalg;
+pub mod memsim;
+pub mod models;
+pub mod runtime;
+pub mod server;
+pub mod util;
+pub mod weights;
+pub mod workload;
+
+/// Crate version (matches Cargo.toml).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

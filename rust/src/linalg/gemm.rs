@@ -1,0 +1,375 @@
+//! Blocked single-threaded f32 GEMM/GEMV — the BLAS substitute.
+//!
+//! The shape class we care about is the paper's Eq. (4):
+//!
+//! ```text
+//! C[M, N] = A[M, K] @ B[K, N]
+//! ```
+//!
+//! with `A` a *weight* matrix (M = 3H/4H rows, K = D, both large) and `B`
+//! the block of N = T input columns (N between 1 and 128).  The loop order
+//! is chosen so each weight element is loaded **once** per block and used
+//! N times from registers — the multi-time-step DRAM amortization the
+//! paper builds on.  `B` and the 4-row `C` stripe stay cache-resident.
+//!
+//! `MR = 4` rows of `A` are processed together; the inner loop runs over
+//! the contiguous `B` row so it auto-vectorizes (verified: produces packed
+//! FMA under `-C target-cpu` defaults; see EXPERIMENTS.md §Perf).
+
+/// Rows of A processed per microkernel pass.
+pub const MR: usize = 4;
+/// K-blocking: a `MR x KC` A-stripe (64 KiB) stays L1/L2-resident while
+/// its partial products accumulate.
+pub const KC: usize = 256;
+
+/// `c = a @ b`, overwriting `c`.  All row-major: a `[m,k]`, b `[k,n]`,
+/// c `[m,n]`.
+pub fn gemm(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k, "A size");
+    assert_eq!(b.len(), k * n, "B size");
+    assert_eq!(c.len(), m * n, "C size");
+    c.fill(0.0);
+    gemm_acc(c, a, b, m, k, n);
+}
+
+/// `c += a @ b` (no zeroing) — used for QRNN's two-term gate GEMM.
+pub fn gemm_acc(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k, "A size");
+    assert_eq!(b.len(), k * n, "B size");
+    assert_eq!(c.len(), m * n, "C size");
+    if n == 1 {
+        // Degenerate GEMV: per-row dot products are faster than the
+        // broadcast kernel when there is only one column.
+        gemv_acc(c, a, b, m, k);
+        return;
+    }
+    for k0 in (0..k).step_by(KC) {
+        let kc = KC.min(k - k0);
+        let mut i = 0;
+        while i + MR <= m {
+            kernel_4xn(
+                c, a, b, i, k0, kc, n, k,
+            );
+            i += MR;
+        }
+        // Remainder rows.
+        for r in i..m {
+            let arow = &a[r * k + k0..r * k + k0 + kc];
+            let crow = &mut c[r * n..(r + 1) * n];
+            for (kk, &av) in arow.iter().enumerate() {
+                let brow = &b[(k0 + kk) * n..(k0 + kk) * n + n];
+                for (cv, &bv) in crow.iter_mut().zip(brow) {
+                    *cv += av * bv;
+                }
+            }
+        }
+    }
+}
+
+/// Register-tile width (f32 columns held in accumulators per pass).
+/// `MR x NR` = 4x32 f32 accumulators = 8 AVX-512 zmm — fits
+/// the register file with room for the broadcast A values and B loads.
+pub const NR: usize = 16;
+
+/// 4 rows of A against the full N width for one K-stripe.
+///
+/// The N dimension is processed in `NR`-column register tiles: the
+/// `[MR x NR]` accumulator array lives in SIMD registers across the
+/// whole K-stripe (the compiler keeps fixed-size arrays register-
+/// resident), so C traffic is one write per tile instead of one
+/// read+write per `kk` — this doubled GFLOP/s over the slice-accumulate
+/// version (see EXPERIMENTS.md §Perf).
+#[inline]
+fn kernel_4xn(
+    c: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    i: usize,
+    k0: usize,
+    kc: usize,
+    n: usize,
+    lda: usize,
+) {
+    let a0 = &a[i * lda + k0..i * lda + k0 + kc];
+    let a1 = &a[(i + 1) * lda + k0..(i + 1) * lda + k0 + kc];
+    let a2 = &a[(i + 2) * lda + k0..(i + 2) * lda + k0 + kc];
+    let a3 = &a[(i + 3) * lda + k0..(i + 3) * lda + k0 + kc];
+
+    let mut j0 = 0;
+    // Full NR-wide register tiles.
+    while j0 + NR <= n {
+        let mut acc = [[0f32; NR]; MR];
+        for kk in 0..kc {
+            let brow = &b[(k0 + kk) * n + j0..(k0 + kk) * n + j0 + NR];
+            let (v0, v1, v2, v3) = (a0[kk], a1[kk], a2[kk], a3[kk]);
+            for j in 0..NR {
+                let bv = brow[j];
+                acc[0][j] += v0 * bv;
+                acc[1][j] += v1 * bv;
+                acc[2][j] += v2 * bv;
+                acc[3][j] += v3 * bv;
+            }
+        }
+        for (r, row_acc) in acc.iter().enumerate() {
+            let crow = &mut c[(i + r) * n + j0..(i + r) * n + j0 + NR];
+            for j in 0..NR {
+                crow[j] += row_acc[j];
+            }
+        }
+        j0 += NR;
+    }
+    // Remainder columns (n % NR): slice-accumulate tail.
+    if j0 < n {
+        let rem = n - j0;
+        let mut acc = [[0f32; NR]; MR];
+        for kk in 0..kc {
+            let brow = &b[(k0 + kk) * n + j0..(k0 + kk) * n + j0 + rem];
+            let (v0, v1, v2, v3) = (a0[kk], a1[kk], a2[kk], a3[kk]);
+            for j in 0..rem {
+                let bv = brow[j];
+                acc[0][j] += v0 * bv;
+                acc[1][j] += v1 * bv;
+                acc[2][j] += v2 * bv;
+                acc[3][j] += v3 * bv;
+            }
+        }
+        for (r, row_acc) in acc.iter().enumerate() {
+            let crow = &mut c[(i + r) * n + j0..(i + r) * n + j0 + rem];
+            for (j, cv) in crow.iter_mut().enumerate() {
+                *cv += row_acc[j];
+            }
+        }
+    }
+}
+
+/// Column-count threshold below which `gemm_bt` (multi-dot) beats the
+/// broadcast 4xN kernel: at tiny N the N-inner loop cannot vectorize.
+pub const SMALL_N_CUTOFF: usize = 8;
+
+/// `c[m,n] = a[m,k] @ bt[n,k]^T` — GEMM with the **right operand given
+/// transposed** (each of the `n` columns is a contiguous `k`-vector).
+///
+/// This is the engines' fast path for small block sizes: the input block
+/// is already time-major `[T, D]`, so no transpose is needed, and each
+/// weight row is loaded once and dotted against all `n` frames (the
+/// paper's "fetch one row of the weight matrix, use it for multiple time
+/// steps" — literally).  Each dot uses the 8-lane unrolled kernel, so
+/// small N keeps full K-vectorization (the 4xN kernel cannot).
+pub fn gemm_bt(c: &mut [f32], a: &[f32], bt: &[f32], m: usize, k: usize, n: usize) {
+    c.fill(0.0);
+    gemm_bt_acc(c, a, bt, m, k, n);
+}
+
+/// `c += a @ bt^T` (accumulating variant of [`gemm_bt`]).
+pub fn gemm_bt_acc(c: &mut [f32], a: &[f32], bt: &[f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k, "A size");
+    assert_eq!(bt.len(), n * k, "Bt size");
+    assert_eq!(c.len(), m * n, "C size");
+    for r in 0..m {
+        let arow = &a[r * k..(r + 1) * k];
+        let crow = &mut c[r * n..(r + 1) * n];
+        for (j, cv) in crow.iter_mut().enumerate() {
+            *cv += dot(arow, &bt[j * k..(j + 1) * k]);
+        }
+    }
+}
+
+/// `y = a @ x` (single output column), overwriting y.  a `[m,k]`, x `[k]`.
+pub fn gemv(y: &mut [f32], a: &[f32], x: &[f32], m: usize, k: usize) {
+    assert_eq!(y.len(), m, "y size");
+    y.fill(0.0);
+    gemv_acc(y, a, x, m, k);
+}
+
+/// `y += a @ x`.  Row-wise dot products with 8-lane unrolling.
+pub fn gemv_acc(y: &mut [f32], a: &[f32], x: &[f32], m: usize, k: usize) {
+    assert_eq!(a.len(), m * k, "A size");
+    assert_eq!(x.len(), k, "x size");
+    assert_eq!(y.len(), m, "y size");
+    for r in 0..m {
+        let row = &a[r * k..(r + 1) * k];
+        y[r] += dot(row, x);
+    }
+}
+
+/// Unrolled dot product (8 partial sums hide FMA latency; autovectorizes).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0f32; 8];
+    let chunks = a.len() / 8;
+    for i in 0..chunks {
+        let a8 = &a[i * 8..i * 8 + 8];
+        let b8 = &b[i * 8..i * 8 + 8];
+        for l in 0..8 {
+            acc[l] += a8[l] * b8[l];
+        }
+    }
+    let mut s = (acc[0] + acc[4]) + (acc[1] + acc[5]) + (acc[2] + acc[6]) + (acc[3] + acc[7]);
+    for i in chunks * 8..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// Add a per-row bias to a `[m, n]` row-major matrix (gate epilogue).
+pub fn add_row_bias(c: &mut [f32], bias: &[f32], m: usize, n: usize) {
+    assert_eq!(c.len(), m * n);
+    assert_eq!(bias.len(), m);
+    for r in 0..m {
+        let bv = bias[r];
+        for v in &mut c[r * n..(r + 1) * n] {
+            *v += bv;
+        }
+    }
+}
+
+/// Naive triple loop — correctness oracle for the blocked kernels.
+pub fn gemm_naive(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        for j in 0..n {
+            let mut s = 0.0f64;
+            for kk in 0..k {
+                s += a[i * k + kk] as f64 * b[kk * n + j] as f64;
+            }
+            c[i * n + j] = s as f32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        let mut v = vec![0.0; n];
+        rng.fill_normal(&mut v, 1.0);
+        v
+    }
+
+    fn check_gemm(m: usize, k: usize, n: usize, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let a = rand_vec(&mut rng, m * k);
+        let b = rand_vec(&mut rng, k * n);
+        let mut c = vec![0.0; m * n];
+        let mut want = vec![0.0; m * n];
+        gemm(&mut c, &a, &b, m, k, n);
+        gemm_naive(&mut want, &a, &b, m, k, n);
+        let tol = 1e-3 * (k as f32).sqrt();
+        for (i, (&g, &w)) in c.iter().zip(&want).enumerate() {
+            assert!(
+                (g - w).abs() <= tol.max(1e-4),
+                "({m},{k},{n}) idx {i}: got {g} want {w}"
+            );
+        }
+    }
+
+    #[test]
+    fn gemm_matches_naive_small() {
+        for &(m, k, n) in &[
+            (1, 1, 1),
+            (3, 5, 2),
+            (4, 8, 16),
+            (5, 7, 3),
+            (8, 512, 1),
+            (17, 33, 9),
+        ] {
+            check_gemm(m, k, n, 42 + m as u64);
+        }
+    }
+
+    #[test]
+    fn gemm_matches_naive_paper_shapes() {
+        // SRU small T=8: [1536, 512] x [512, 8]; KC boundary crossing.
+        check_gemm(1536, 512, 8, 1);
+        // Odd everything, > KC in K.
+        check_gemm(37, 1037, 11, 2);
+    }
+
+    #[test]
+    fn gemm_acc_accumulates() {
+        let mut rng = Rng::new(5);
+        let (m, k, n) = (6, 9, 4);
+        let a = rand_vec(&mut rng, m * k);
+        let b = rand_vec(&mut rng, k * n);
+        let mut c = vec![1.0; m * n];
+        gemm_acc(&mut c, &a, &b, m, k, n);
+        let mut want = vec![0.0; m * n];
+        gemm_naive(&mut want, &a, &b, m, k, n);
+        for (g, w) in c.iter().zip(&want) {
+            assert!((g - (w + 1.0)).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn gemm_bt_matches_gemm() {
+        let mut rng = Rng::new(31);
+        for &(m, k, n) in &[(1, 1, 1), (17, 33, 2), (48, 512, 4), (64, 100, 8)] {
+            let a = rand_vec(&mut rng, m * k);
+            let bt = rand_vec(&mut rng, n * k);
+            // b = bt^T
+            let mut b = vec![0.0; k * n];
+            for j in 0..n {
+                for kk in 0..k {
+                    b[kk * n + j] = bt[j * k + kk];
+                }
+            }
+            let mut want = vec![0.0; m * n];
+            gemm_naive(&mut want, &a, &b, m, k, n);
+            let mut got = vec![0.0; m * n];
+            gemm_bt(&mut got, &a, &bt, m, k, n);
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-3, "({m},{k},{n}): {g} vs {w}");
+            }
+            // accumulate variant
+            let mut acc = vec![1.0; m * n];
+            gemm_bt_acc(&mut acc, &a, &bt, m, k, n);
+            for (g, w) in acc.iter().zip(&want) {
+                assert!((g - (w + 1.0)).abs() < 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn gemv_matches_gemm_n1() {
+        let mut rng = Rng::new(6);
+        let (m, k) = (100, 257);
+        let a = rand_vec(&mut rng, m * k);
+        let x = rand_vec(&mut rng, k);
+        let mut y = vec![0.0; m];
+        gemv(&mut y, &a, &x, m, k);
+        let mut want = vec![0.0; m];
+        gemm_naive(&mut want, &a, &x, m, k, 1);
+        for (g, w) in y.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-3, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn dot_handles_remainders() {
+        for len in [0, 1, 7, 8, 9, 64, 65] {
+            let a: Vec<f32> = (0..len).map(|i| i as f32).collect();
+            let b = vec![2.0f32; len];
+            let want: f32 = a.iter().sum::<f32>() * 2.0;
+            assert_eq!(dot(&a, &b), want, "len {len}");
+        }
+    }
+
+    #[test]
+    fn bias_broadcast() {
+        let mut c = vec![0.0; 6];
+        add_row_bias(&mut c, &[1.0, 2.0], 2, 3);
+        assert_eq!(c, vec![1.0, 1.0, 1.0, 2.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "B size")]
+    fn shape_mismatch_panics() {
+        let mut c = vec![0.0; 4];
+        gemm(&mut c, &[0.0; 4], &[0.0; 5], 2, 2, 2);
+    }
+}

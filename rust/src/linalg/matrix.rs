@@ -1,0 +1,188 @@
+//! Dense row-major f32 matrix — the only tensor type the native engine
+//! needs.  Deliberately minimal: the hot paths (`gemm`, `gemv`) operate on
+//! raw slices; `Matrix` is the owning container with shape checking.
+
+use crate::util::Rng;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(
+            data.len(),
+            rows * cols,
+            "data length {} != {rows}x{cols}",
+            data.len()
+        );
+        Self { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        Self { rows, cols, data }
+    }
+
+    /// Glorot-uniform init matching `python/compile/model.py::_glorot`
+    /// in distribution (not bit-exact — bit-exact weights come from the
+    /// exported bundles; this is for self-contained tests/benches).
+    pub fn glorot(rows: usize, cols: usize, rng: &mut Rng) -> Self {
+        let scale = (6.0 / (rows + cols) as f32).sqrt();
+        let mut data = vec![0.0; rows * cols];
+        rng.fill_uniform(&mut data, -scale, scale);
+        Self { rows, cols, data }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c] = v;
+    }
+
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn transposed(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.set(c, r, self.at(r, c));
+            }
+        }
+        out
+    }
+
+    /// Max |a - b| over all elements (test helper).
+    pub fn max_abs_diff(&self, other: &Matrix) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+/// Transpose a `[t, d]` row-major block into a `[d, t]` column-per-step
+/// buffer (the GEMM-friendly layout; see DESIGN.md §7).  `out` must be
+/// `d * t` long.
+pub fn transpose_into(x: &[f32], t: usize, d: usize, out: &mut [f32]) {
+    assert_eq!(x.len(), t * d, "input is not t*d");
+    assert_eq!(out.len(), t * d, "output is not d*t");
+    // Blocked transpose: 16x16 tiles keep both streams cache-resident.
+    const B: usize = 16;
+    for r0 in (0..t).step_by(B) {
+        for c0 in (0..d).step_by(B) {
+            for r in r0..(r0 + B).min(t) {
+                let src = &x[r * d..];
+                for c in c0..(c0 + B).min(d) {
+                    out[c * t + r] = src[c];
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_accessors() {
+        let mut m = Matrix::zeros(2, 3);
+        m.set(1, 2, 5.0);
+        assert_eq!(m.at(1, 2), 5.0);
+        assert_eq!(m.row(1), &[0.0, 0.0, 5.0]);
+        assert_eq!(m.rows(), 2);
+        assert_eq!(m.cols(), 3);
+    }
+
+    #[test]
+    fn from_fn_and_transpose() {
+        let m = Matrix::from_fn(2, 3, |r, c| (r * 10 + c) as f32);
+        let t = m.transposed();
+        assert_eq!(t.rows(), 3);
+        for r in 0..2 {
+            for c in 0..3 {
+                assert_eq!(m.at(r, c), t.at(c, r));
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "data length")]
+    fn from_vec_checks_len() {
+        Matrix::from_vec(2, 2, vec![1.0; 3]);
+    }
+
+    #[test]
+    fn transpose_into_matches_naive() {
+        let (t, d) = (7, 33);
+        let x: Vec<f32> = (0..t * d).map(|i| i as f32).collect();
+        let mut out = vec![0.0; t * d];
+        transpose_into(&x, t, d, &mut out);
+        for r in 0..t {
+            for c in 0..d {
+                assert_eq!(out[c * t + r], x[r * d + c]);
+            }
+        }
+    }
+
+    #[test]
+    fn glorot_bounds() {
+        let mut rng = Rng::new(1);
+        let m = Matrix::glorot(64, 64, &mut rng);
+        let scale = (6.0 / 128.0f32).sqrt();
+        assert!(m.data().iter().all(|v| v.abs() <= scale));
+        // Not all zero / not all equal.
+        assert!(m.data().iter().any(|&v| v != m.data()[0]));
+    }
+}

@@ -1,0 +1,62 @@
+//! Dense linear algebra substrate (the paper's MKL/OpenBLAS substitute).
+//!
+//! Single-threaded by design: the paper's experiments measure a single
+//! inference stream on an embedded-class core; determinism also matters
+//! for the golden-output parity tests against the JAX artifacts.
+
+pub mod fastmath;
+pub mod gemm;
+pub mod matrix;
+
+pub use fastmath::{fast_exp, fast_sigmoid, fast_tanh};
+pub use gemm::{add_row_bias, dot, gemm, gemm_acc, gemm_bt, gemm_bt_acc, gemm_naive, gemv, gemv_acc, SMALL_N_CUTOFF};
+pub use matrix::{transpose_into, Matrix};
+
+/// Elementwise activations used by every engine.  `sigmoid` and `tanh`
+/// are the scalar hot ops of the recurrence remainder; they operate on
+/// slices so the compiler can vectorize the surrounding loop.
+#[inline]
+pub fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// In-place sigmoid over a slice.
+pub fn sigmoid_slice(xs: &mut [f32]) {
+    for v in xs.iter_mut() {
+        *v = sigmoid(*v);
+    }
+}
+
+/// In-place tanh over a slice.
+pub fn tanh_slice(xs: &mut [f32]) {
+    for v in xs.iter_mut() {
+        *v = v.tanh();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sigmoid_fixed_points() {
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-7);
+        assert!(sigmoid(30.0) > 0.999_999);
+        assert!(sigmoid(-30.0) < 1e-6);
+        // Symmetry: s(-x) = 1 - s(x)
+        for x in [-3.0f32, -0.5, 0.7, 2.2] {
+            assert!((sigmoid(-x) - (1.0 - sigmoid(x))).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn slice_ops() {
+        let mut v = vec![0.0f32, 1.0, -1.0];
+        sigmoid_slice(&mut v);
+        assert!((v[0] - 0.5).abs() < 1e-7);
+        let mut w = vec![0.0f32, 1.0];
+        tanh_slice(&mut w);
+        assert_eq!(w[0], 0.0);
+        assert!((w[1] - 1.0f32.tanh()).abs() < 1e-7);
+    }
+}

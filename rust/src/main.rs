@@ -1,0 +1,313 @@
+//! `mtsrnn` CLI — leader entrypoint for the coordinator, the paper-table
+//! regenerators, the memsim, and the artifact parity checks.
+
+use std::net::TcpListener;
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+use std::time::Duration;
+
+use mtsrnn::bench::tables::{
+    ablation_dram, ablation_energy, ablation_lstm_precompute, ablation_quant, cpu_by_name,
+    figure_series, generate_table, sim_ms, PAPER_TABLES,
+};
+use mtsrnn::bench::{ascii_plot, write_report, BenchOpts};
+use mtsrnn::cli::{Args, USAGE};
+use mtsrnn::coordinator::{Coordinator, CoordinatorConfig, NativeBackend, PolicyMode};
+use mtsrnn::engine::NativeStack;
+use mtsrnn::memsim::{simulate, SimConfig};
+use mtsrnn::models::config::{Arch, ModelConfig, ModelSize, ASR_QRNN, ASR_SRU};
+use mtsrnn::models::StackParams;
+use mtsrnn::runtime::{layer_parity, stack_parity, ArtifactDir, PjrtBackend};
+use mtsrnn::server;
+use mtsrnn::util::Rng;
+
+fn main() {
+    let args = match Args::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let code = match args.command.as_str() {
+        "tables" => cmd_tables(&args),
+        "figures" => cmd_figures(&args),
+        "ablation" => cmd_ablation(&args),
+        "simulate" => cmd_simulate(&args),
+        "parity" => cmd_parity(&args),
+        "serve" => cmd_serve(&args),
+        "info" => cmd_info(),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => Err(format!("unknown command {other:?}\n\n{USAGE}")),
+    }
+    .map(|_| 0)
+    .unwrap_or_else(|e| {
+        eprintln!("error: {e}");
+        1
+    });
+    std::process::exit(code);
+}
+
+fn bench_opts(args: &Args) -> Result<BenchOpts, String> {
+    Ok(BenchOpts {
+        warmup_iters: 1,
+        measure_iters: args.get_usize("iters", 3)?,
+        max_seconds: 60.0,
+    })
+}
+
+fn cmd_tables(args: &Args) -> Result<(), String> {
+    let exp = args.get_or("exp", "all");
+    let samples = args.get_usize("samples", 1024)?;
+    let opts = bench_opts(args)?;
+    let mut any = false;
+    for pt in &PAPER_TABLES {
+        if exp != "all" && pt.id != exp {
+            continue;
+        }
+        any = true;
+        let t = generate_table(pt, samples, &opts);
+        println!("{}", t.render());
+        if args.has("csv") {
+            let path = write_report(&format!("{}.csv", pt.id), &t.to_csv())
+                .map_err(|e| e.to_string())?;
+            println!("wrote {}\n", path.display());
+        }
+    }
+    if !any {
+        return Err(format!("unknown --exp {exp:?} (t1..t8 or all)"));
+    }
+    Ok(())
+}
+
+fn cmd_figures(args: &Args) -> Result<(), String> {
+    let fig = args.get_or("fig", "all");
+    let samples = args.get_usize("samples", 1024)?;
+    for (id, arch) in [("5", Arch::Sru), ("6", Arch::Qrnn)] {
+        if fig != "all" && fig != id {
+            continue;
+        }
+        let series = figure_series(arch, samples);
+        println!(
+            "{}",
+            ascii_plot(
+                &format!("Figure {id}: relative speed-up of {arch} vs block size (simulated)"),
+                &series
+            )
+        );
+        if args.has("csv") {
+            let mut csv = String::from("series,t,speedup\n");
+            for (name, pts) in &series {
+                for (t, s) in pts {
+                    csv.push_str(&format!("{name},{t},{s:.4}\n"));
+                }
+            }
+            let path = write_report(&format!("fig{id}.csv"), &csv).map_err(|e| e.to_string())?;
+            println!("wrote {}\n", path.display());
+        }
+    }
+    Ok(())
+}
+
+fn cmd_ablation(args: &Args) -> Result<(), String> {
+    let samples = args.get_usize("samples", 1024)?;
+    let table = match args.get_or("exp", "dram") {
+        "dram" => ablation_dram(Arch::Sru, ModelSize::Large, samples),
+        "lstm-precompute" => {
+            ablation_lstm_precompute(ModelSize::Small, samples.min(512), &bench_opts(args)?)
+        }
+        "energy" => ablation_energy(Arch::Sru, ModelSize::Large, samples),
+        "quant" => ablation_quant(ModelSize::Small, samples.min(512), &bench_opts(args)?),
+        other => return Err(format!("unknown ablation {other:?}")),
+    };
+    println!("{}", table.render());
+    if args.has("csv") {
+        let name = format!("ablation_{}.csv", args.get_or("exp", "dram"));
+        let path = write_report(&name, &table.to_csv()).map_err(|e| e.to_string())?;
+        println!("wrote {}", path.display());
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<(), String> {
+    let cpu = cpu_by_name(args.get_or("cpu", "arm"))
+        .ok_or_else(|| format!("unknown --cpu {:?}", args.get_or("cpu", "arm")))?;
+    let arch = Arch::parse(args.get_or("arch", "sru"))
+        .ok_or_else(|| format!("unknown --arch {:?}", args.get_or("arch", "sru")))?;
+    let size = ModelSize::parse(args.get_or("size", "small"))
+        .ok_or_else(|| format!("unknown --size {:?}", args.get_or("size", "small")))?;
+    let t = args.get_usize("t", 16)?;
+    let samples = args.get_usize("samples", 1024)?;
+    let mut cfg = SimConfig::paper(cpu, ModelConfig::paper(arch, size), t);
+    cfg.samples = samples;
+    let r = simulate(&cfg);
+    println!("platform            {}", cpu.name);
+    println!("model               {arch} {size:?} T={t} ({samples} samples)");
+    println!("predicted time      {:.3} ms", r.millis());
+    println!("  compute cycles    {:.3e}", r.compute_cycles);
+    println!("  memory cycles     {:.3e}", r.memory_cycles);
+    println!(
+        "served  L1 {}  L2 {}  L3 {}  DRAM {}",
+        r.counts.l1, r.counts.l2, r.counts.l3, r.counts.dram
+    );
+    println!(
+        "DRAM/sample         {:.1} KiB",
+        r.dram_bytes_per_sample / 1024.0
+    );
+    println!(
+        "energy              {:.3} mJ total, {:.1} µJ/sample",
+        r.energy_joules * 1e3,
+        r.energy_per_sample_joules * 1e6
+    );
+    // Context: T=1 baseline.
+    let mut base = cfg;
+    base.t_block = 1;
+    let b = simulate(&base);
+    println!(
+        "speedup vs T=1      {:.2}x   energy reduction {:.2}x",
+        b.seconds / r.seconds,
+        b.energy_per_sample_joules / r.energy_per_sample_joules
+    );
+    Ok(())
+}
+
+fn cmd_parity(args: &Args) -> Result<(), String> {
+    let dir = ArtifactDir::load(args.get_or("artifacts", "artifacts"))?;
+    let filter = args.get_or("filter", "");
+    let mut failures = 0;
+    let mut checked = 0;
+    for entry in &dir.entries {
+        if !entry.file.contains(filter) {
+            continue;
+        }
+        checked += 1;
+        let result = if entry.kind == "stack" {
+            stack_parity(&dir, entry)
+        } else {
+            layer_parity(&dir, entry)
+        };
+        match result {
+            Ok(diff) if diff < 2e-4 => {
+                println!("OK   {:<36} max|Δ| = {diff:.2e}", entry.file)
+            }
+            Ok(diff) => {
+                failures += 1;
+                println!("FAIL {:<36} max|Δ| = {diff:.2e}", entry.file)
+            }
+            Err(e) => {
+                failures += 1;
+                println!("ERR  {:<36} {e}", entry.file)
+            }
+        }
+    }
+    println!("checked {checked} artifacts, {failures} failures");
+    if failures > 0 {
+        return Err(format!("{failures} parity failures"));
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<(), String> {
+    let port = args.get_usize("port", 7433)?;
+    let policy = if args.has("adaptive") {
+        PolicyMode::Adaptive
+    } else {
+        PolicyMode::Fixed(args.get_usize("block", 16)?)
+    };
+    let cfg = CoordinatorConfig {
+        policy,
+        max_wait: Duration::from_millis(args.get_usize("max-wait-ms", 100)? as u64),
+        max_sessions: args.get_usize("max-sessions", 64)?,
+    };
+    let listener =
+        TcpListener::bind(("127.0.0.1", port as u16)).map_err(|e| format!("bind: {e}"))?;
+    println!("listening on 127.0.0.1:{port}");
+    let stop = Arc::new(AtomicBool::new(false));
+    let tick = Duration::from_millis(5);
+
+    match args.get_or("backend", "native") {
+        "native" => {
+            let stack_cfg = match args.get_or("stack", "asr_sru_512x4") {
+                "asr_sru_512x4" => ASR_SRU,
+                "asr_qrnn_512x4" => ASR_QRNN,
+                other => return Err(format!("unknown --stack {other:?}")),
+            };
+            let params = StackParams::init(&stack_cfg, &mut Rng::new(2018));
+            let max_block = 32;
+            let backend = NativeBackend::new(NativeStack::new(stack_cfg, params, max_block));
+            let coordinator = Coordinator::new(backend, cfg);
+            println!(
+                "backend=native stack={} params={}",
+                stack_cfg.name(),
+                stack_cfg.param_count()
+            );
+            let handle = server::spawn_inference(coordinator, tick);
+            server::serve(listener, handle, stop).map_err(|e| e.to_string())
+        }
+        "pjrt" => {
+            // PJRT handles are not Send: inference runs on THIS thread and
+            // the accept loop runs on a helper thread.
+            let dir = ArtifactDir::load(args.get_or("artifacts", "artifacts"))?;
+            let name = args.get_or("stack", "asr_sru_512x4").to_string();
+            let backend = PjrtBackend::load(&dir, &name).map_err(|e| e.to_string())?;
+            println!("backend=pjrt platform={} stack={name}", backend.platform());
+            let coordinator = Coordinator::new(backend, cfg);
+            let (tx, rx) = std::sync::mpsc::channel();
+            let handle = server::ServerHandle::from_sender(tx);
+            let stop2 = stop.clone();
+            let accept = std::thread::spawn(move || server::serve(listener, handle, stop2));
+            server::inference_loop(coordinator, rx, tick);
+            accept
+                .join()
+                .map_err(|_| "accept thread panicked".to_string())?
+                .map_err(|e| e.to_string())
+        }
+        other => Err(format!("unknown --backend {other:?}")),
+    }
+}
+
+fn cmd_info() -> Result<(), String> {
+    println!(
+        "mtsrnn {} — SAMOS'18 single-stream RNN parallelization",
+        mtsrnn::VERSION
+    );
+    println!("\nBenchmark models (paper §4):");
+    for arch in [Arch::Lstm, Arch::Sru, Arch::Qrnn] {
+        for size in [ModelSize::Small, ModelSize::Large] {
+            let cfg = ModelConfig::paper(arch, size);
+            println!(
+                "  {:<10} {:>6?}  hidden {:>5}  params {:>9}  weights {:>6.2} MiB",
+                cfg.name(),
+                size,
+                cfg.hidden,
+                cfg.param_count(),
+                cfg.weight_bytes() as f64 / (1024.0 * 1024.0)
+            );
+        }
+    }
+    println!("\nServed stacks:");
+    for cfg in [ASR_SRU, ASR_QRNN] {
+        println!(
+            "  {:<16} feat {} hidden {} depth {} vocab {}  params {}",
+            cfg.name(),
+            cfg.feat,
+            cfg.hidden,
+            cfg.depth,
+            cfg.vocab,
+            cfg.param_count()
+        );
+    }
+    println!("\nSimulated platforms: intel (i7-3930K), arm (Denver2)");
+    let quick = sim_ms(
+        mtsrnn::memsim::ARM_DENVER2,
+        Arch::Sru,
+        ModelSize::Small,
+        16,
+        256,
+    );
+    println!("memsim self-check: arm/sru-small/T16/256 samples -> {quick:.2} ms");
+    Ok(())
+}

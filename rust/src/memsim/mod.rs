@@ -1,0 +1,26 @@
+//! Trace-driven cache + DRAM simulator (the paper's ARM/Intel testbeds).
+//!
+//! We do not have the paper's Denver2 board or i7-3930K; the effect the
+//! paper measures is a *memory hierarchy* effect, so we reproduce the
+//! hierarchies (exact cache geometries from §4) and replay the real
+//! blocked-kernel access streams through them.  See DESIGN.md §5.
+//!
+//! Pieces:
+//! * [`cache`]  — set-associative LRU cache at line granularity.
+//! * [`hierarchy`] — L1/L2/(L3)/DRAM walk with per-level counters.
+//! * [`cpu`]    — platform specs (Intel i7-3930K, Nvidia Denver2).
+//! * [`trace`]  — access-stream generators mirroring `linalg`'s loops.
+//! * [`model`]  — per-model block replay + roofline timing + energy.
+
+pub mod cache;
+pub mod cpu;
+pub mod hierarchy;
+pub mod model;
+pub mod sweep;
+pub mod trace;
+
+pub use cache::Cache;
+pub use cpu::{CpuSpec, ARM_DENVER2, INTEL_I7_3930K};
+pub use hierarchy::{AccessCounts, Hierarchy, Served};
+pub use model::{simulate, SimConfig, SimReport, COMPUTE_PJ_PER_FLOP};
+pub use sweep::{bandwidth_sweep, llc_sweep, SweepPoint};

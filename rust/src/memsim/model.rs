@@ -1,0 +1,275 @@
+//! End-to-end execution model: replay one model's per-block access stream
+//! through the cache hierarchy, combine with a roofline compute term, and
+//! extrapolate to the paper's 1,024-sample measurement.
+//!
+//! Timing: `block_cycles = max(compute_cycles, memory_cycles)` — compute
+//! and (prefetched) memory overlap on an OoO core, so the slower resource
+//! bounds throughput.  Energy: per-level access energies (hierarchy) plus
+//! a per-FLOP compute term.  See DESIGN.md §5 for why this substitution
+//! preserves the paper's mechanism.
+
+use crate::memsim::cpu::CpuSpec;
+use crate::memsim::hierarchy::{AccessCounts, Hierarchy};
+use crate::memsim::trace::{
+    trace_elementwise, trace_gemm, trace_gemv, trace_transpose, Layout,
+};
+use crate::models::config::{Arch, ModelConfig};
+
+/// Compute energy per f32 FLOP (pJ) — ALU + register file, CACTI-class.
+pub const COMPUTE_PJ_PER_FLOP: f64 = 1.5;
+
+/// One simulation request.
+#[derive(Debug, Clone, Copy)]
+pub struct SimConfig {
+    pub cpu: CpuSpec,
+    pub model: ModelConfig,
+    /// Multi-time-step block size T ("SRU-n").
+    pub t_block: usize,
+    /// Total samples (the paper times 1,024).
+    pub samples: usize,
+    /// Blocks replayed through the cache sim after warmup; the rest are
+    /// extrapolated from the measured steady state.
+    pub measure_blocks: usize,
+}
+
+impl SimConfig {
+    pub fn paper(cpu: CpuSpec, model: ModelConfig, t_block: usize) -> Self {
+        Self {
+            cpu,
+            model,
+            t_block,
+            samples: crate::models::config::PAPER_SAMPLES,
+            measure_blocks: 2,
+        }
+    }
+}
+
+/// Simulation result for the full `samples`-long run.
+#[derive(Debug, Clone, Copy)]
+pub struct SimReport {
+    pub seconds: f64,
+    pub cycles: f64,
+    pub compute_cycles: f64,
+    pub memory_cycles: f64,
+    /// Extrapolated per-level service counts for the whole run.
+    pub counts: AccessCounts,
+    pub dram_bytes_per_sample: f64,
+    pub energy_joules: f64,
+    pub energy_per_sample_joules: f64,
+}
+
+impl SimReport {
+    pub fn millis(&self) -> f64 {
+        self.seconds * 1e3
+    }
+}
+
+/// Replay one block's access stream. Returns the FLOPs and transcendental
+/// counts of the block (for the compute term).
+fn trace_block(h: &mut Hierarchy, lay: &Layout, model: &ModelConfig, t: usize) -> (f64, f64) {
+    let (hd, d) = (model.hidden, model.input);
+    match model.arch {
+        Arch::Sru => {
+            // transpose x -> xt, gates = W @ xt (+bias), scan.
+            trace_transpose(h, lay.x, lay.xt, t, d);
+            trace_gemm(h, lay.weights, lay.xt, lay.gates, 3 * hd, d, t);
+            // Scan: read 3 gate rows + x, write out; carry state.
+            trace_elementwise(h, &[lay.gates, lay.x], &[lay.out], hd * t * 3 / 2);
+            trace_elementwise(h, &[lay.state], &[lay.state], hd);
+            let flops = 2.0 * (3 * hd * d * t) as f64 + 8.0 * (hd * t) as f64;
+            let transc = 3.0 * (hd * t) as f64; // 2 sigmoid + 1 tanh
+            (flops, transc)
+        }
+        Arch::Qrnn => {
+            trace_transpose(h, lay.x, lay.xt, t, d);
+            // Shift copy for xt_prev (read xt, write xt_prev region).
+            trace_elementwise(h, &[lay.xt], &[lay.xt + 0x40_0000], d * t);
+            trace_gemm(h, lay.weights, lay.xt, lay.gates, 3 * hd, d, t);
+            trace_gemm(
+                h,
+                lay.weights2,
+                lay.xt + 0x40_0000,
+                lay.gates,
+                3 * hd,
+                d,
+                t,
+            );
+            trace_elementwise(h, &[lay.gates], &[lay.out], hd * t * 3 / 2);
+            trace_elementwise(h, &[lay.state], &[lay.state], hd);
+            let flops = 2.0 * (2 * 3 * hd * d * t) as f64 + 8.0 * (hd * t) as f64;
+            let transc = 4.0 * (hd * t) as f64; // sig f, sig o, tanh xhat, tanh c
+            (flops, transc)
+        }
+        Arch::Lstm => {
+            // Precompute mode when t > 1 (§3.1); classic per-step when t=1.
+            if t > 1 {
+                trace_transpose(h, lay.x, lay.xt, t, d);
+                trace_gemm(h, lay.weights, lay.xt, lay.gates, 4 * hd, d, t);
+            }
+            let mut flops = if t > 1 {
+                2.0 * (4 * hd * d * t) as f64
+            } else {
+                0.0
+            };
+            for _s in 0..t {
+                if t == 1 {
+                    // W @ x_t every step (no precompute).
+                    trace_gemv(h, lay.weights, lay.x, lay.gates, 4 * hd, d);
+                    flops += 2.0 * (4 * hd * d) as f64;
+                } else {
+                    // Strided read of the GX column.
+                    trace_elementwise(h, &[lay.gates], &[], 4 * hd);
+                }
+                // U @ h_{t-1}: the irreducible per-step weight stream.
+                trace_gemv(h, lay.weights2, lay.state, lay.gates + 0x40_0000, 4 * hd, hd);
+                flops += 2.0 * (4 * hd * hd) as f64;
+                trace_elementwise(h, &[lay.gates + 0x40_0000], &[lay.out, lay.state], hd * 2);
+                flops += 10.0 * hd as f64;
+            }
+            let transc = 5.0 * (hd * t) as f64; // 3 sigmoid + 2 tanh per step
+            (flops, transc)
+        }
+    }
+}
+
+/// Run the simulation: one warmup block, `measure_blocks` measured blocks,
+/// steady-state extrapolation to `samples` time steps.
+pub fn simulate(cfg: &SimConfig) -> SimReport {
+    let spec = cfg.cpu;
+    let mut h = Hierarchy::new(spec);
+    let lay = Layout::default();
+    let t = cfg.t_block;
+    let total_blocks = cfg.samples.div_ceil(t);
+    let measured = cfg.measure_blocks.min(total_blocks).max(1);
+
+    // Warmup: populate the hierarchy (cold-start effects are a rounding
+    // error over 1,024 samples and the paper times warm loops).
+    trace_block(&mut h, &lay, &cfg.model, t);
+    h.reset_counters();
+
+    let mut flops = 0.0;
+    let mut transc = 0.0;
+    for _ in 0..measured {
+        let (f, tr) = trace_block(&mut h, &lay, &cfg.model, t);
+        flops += f;
+        transc += tr;
+    }
+
+    let scale = total_blocks as f64 / measured as f64;
+    let counts = h.counts.scale(scale);
+    let mem_cycles_measured = h.memory_cycles();
+    let energy_measured = h.energy_joules();
+
+    // Compute term: GEMM-shaped FLOPs at the block-size-dependent
+    // efficiency (ramps from GEMV-like at T=1 to the asymptote; see
+    // CpuSpec::gemm_efficiency_at), plus scalar transcendentals.
+    let eff = spec.gemm_efficiency_at(t);
+    let compute_cycles_measured =
+        flops / (spec.flops_per_cycle * eff) + transc * spec.transcendental_cycles;
+
+    let compute_cycles = compute_cycles_measured * scale;
+    let memory_cycles = mem_cycles_measured * scale;
+    let cycles = compute_cycles.max(memory_cycles);
+    let seconds = spec.cycles_to_seconds(cycles);
+
+    let compute_energy = flops * scale * COMPUTE_PJ_PER_FLOP * 1e-12;
+    let energy = energy_measured * scale + compute_energy;
+
+    SimReport {
+        seconds,
+        cycles,
+        compute_cycles,
+        memory_cycles,
+        counts,
+        dram_bytes_per_sample: counts.dram_bytes(spec.line_size) as f64 / cfg.samples as f64,
+        energy_joules: energy,
+        energy_per_sample_joules: energy / cfg.samples as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memsim::cpu::{ARM_DENVER2, INTEL_I7_3930K};
+    use crate::models::config::ModelSize;
+
+    fn sim(cpu: CpuSpec, arch: Arch, size: ModelSize, t: usize) -> SimReport {
+        simulate(&SimConfig::paper(cpu, ModelConfig::paper(arch, size), t))
+    }
+
+    #[test]
+    fn sru_speedup_grows_with_t_on_arm() {
+        // Table 3/4 shape: monotone speedup, large at T=32.
+        let base = sim(ARM_DENVER2, Arch::Sru, ModelSize::Large, 1);
+        let t4 = sim(ARM_DENVER2, Arch::Sru, ModelSize::Large, 4);
+        let t32 = sim(ARM_DENVER2, Arch::Sru, ModelSize::Large, 32);
+        assert!(base.seconds > t4.seconds);
+        assert!(t4.seconds > t32.seconds);
+        let speedup32 = base.seconds / t32.seconds;
+        assert!(speedup32 > 4.0, "ARM large T=32 speedup {speedup32:.2}");
+    }
+
+    #[test]
+    fn arm_gains_exceed_intel_gains() {
+        // Fig. 5's headline: the poorer memory system benefits more.
+        let arm = sim(ARM_DENVER2, Arch::Sru, ModelSize::Large, 1).seconds
+            / sim(ARM_DENVER2, Arch::Sru, ModelSize::Large, 32).seconds;
+        let intel = sim(INTEL_I7_3930K, Arch::Sru, ModelSize::Large, 1).seconds
+            / sim(INTEL_I7_3930K, Arch::Sru, ModelSize::Large, 32).seconds;
+        assert!(
+            arm > intel,
+            "ARM speedup {arm:.2} should exceed Intel {intel:.2}"
+        );
+    }
+
+    #[test]
+    fn dram_bytes_per_sample_shrink_with_t() {
+        // The causal mechanism (ABL1): DRAM traffic per sample ~ W/T.
+        let t1 = sim(ARM_DENVER2, Arch::Sru, ModelSize::Small, 1);
+        let t16 = sim(ARM_DENVER2, Arch::Sru, ModelSize::Small, 16);
+        let ratio = t1.dram_bytes_per_sample / t16.dram_bytes_per_sample;
+        assert!(ratio > 8.0, "DRAM reduction {ratio:.2}");
+    }
+
+    #[test]
+    fn lstm_slower_than_sru1_on_both_platforms() {
+        // Tables 1–4: LSTM row above SRU-1.
+        for cpu in [INTEL_I7_3930K, ARM_DENVER2] {
+            let lstm = sim(cpu, Arch::Lstm, ModelSize::Small, 1);
+            let sru1 = sim(cpu, Arch::Sru, ModelSize::Small, 1);
+            assert!(
+                lstm.seconds > sru1.seconds,
+                "{}: lstm {:.1}ms vs sru1 {:.1}ms",
+                cpu.name,
+                lstm.millis(),
+                sru1.millis()
+            );
+        }
+    }
+
+    #[test]
+    fn energy_per_sample_drops_with_t() {
+        // The title's "low power" claim (ABL3).
+        let t1 = sim(ARM_DENVER2, Arch::Sru, ModelSize::Large, 1);
+        let t32 = sim(ARM_DENVER2, Arch::Sru, ModelSize::Large, 32);
+        assert!(
+            t1.energy_per_sample_joules > 2.0 * t32.energy_per_sample_joules,
+            "{} vs {}",
+            t1.energy_per_sample_joules,
+            t32.energy_per_sample_joules
+        );
+    }
+
+    #[test]
+    fn lstm_precompute_saves_at_most_half() {
+        // §3.1: input-side batching can reduce DRAM traffic only ~2x.
+        let t1 = sim(ARM_DENVER2, Arch::Lstm, ModelSize::Large, 1);
+        let t32 = sim(ARM_DENVER2, Arch::Lstm, ModelSize::Large, 32);
+        let traffic_ratio = t1.dram_bytes_per_sample / t32.dram_bytes_per_sample;
+        assert!(
+            traffic_ratio < 2.5,
+            "LSTM precompute traffic ratio {traffic_ratio:.2} should be ~<=2"
+        );
+        assert!(traffic_ratio > 1.2, "but it should still help: {traffic_ratio:.2}");
+    }
+}

@@ -1,0 +1,151 @@
+//! Sensitivity sweeps over the memory hierarchy — the "what-if" analysis
+//! the paper's discussion gestures at ("the benefit ... becomes more
+//! prominent when the computer system has a poor memory system").
+//!
+//! ABL4: sweep last-level-cache size and DRAM bandwidth around the two
+//! real platforms and observe where the multi-time-step speedup crosses
+//! over — i.e., at what LLC size the weights become cache-resident and
+//! the paper's effect disappears.
+
+use crate::memsim::cpu::{CacheSpec, CpuSpec};
+use crate::memsim::model::{simulate, SimConfig};
+use crate::models::config::ModelConfig;
+
+/// One sweep point.
+#[derive(Debug, Clone, Copy)]
+pub struct SweepPoint {
+    /// LLC size in bytes used for this point.
+    pub llc_bytes: usize,
+    /// DRAM bandwidth GB/s used for this point.
+    pub dram_bw_gbs: f64,
+    /// Simulated speedup of T=`t_hi` over T=1.
+    pub speedup: f64,
+    /// DRAM traffic reduction T=1 → T=`t_hi`.
+    pub traffic_reduction: f64,
+}
+
+/// Replace the last-level cache of `base` with `size` bytes (keeps
+/// associativity/latency of the level it replaces).
+fn with_llc(base: CpuSpec, size: usize) -> CpuSpec {
+    let mut cpu = base;
+    match cpu.l3 {
+        Some(l3) => {
+            cpu.l3 = Some(CacheSpec {
+                size_bytes: size,
+                ..l3
+            })
+        }
+        None => {
+            cpu.l2 = CacheSpec {
+                size_bytes: size,
+                ..cpu.l2
+            }
+        }
+    }
+    cpu
+}
+
+/// Sweep the LLC size across `sizes`, measuring the T=1 → `t_hi` speedup
+/// for `model` with `samples` frames.
+pub fn llc_sweep(
+    base: CpuSpec,
+    model: ModelConfig,
+    t_hi: usize,
+    sizes: &[usize],
+    samples: usize,
+) -> Vec<SweepPoint> {
+    sizes
+        .iter()
+        .map(|&size| {
+            let cpu = with_llc(base, size);
+            let mut c1 = SimConfig::paper(cpu, model, 1);
+            c1.samples = samples;
+            let mut ch = SimConfig::paper(cpu, model, t_hi);
+            ch.samples = samples;
+            let r1 = simulate(&c1);
+            let rh = simulate(&ch);
+            SweepPoint {
+                llc_bytes: size,
+                dram_bw_gbs: cpu.dram_bw_gbs,
+                speedup: r1.seconds / rh.seconds,
+                traffic_reduction: r1.dram_bytes_per_sample
+                    / rh.dram_bytes_per_sample.max(1.0),
+            }
+        })
+        .collect()
+}
+
+/// Sweep the DRAM bandwidth across `bws` (GB/s).
+pub fn bandwidth_sweep(
+    base: CpuSpec,
+    model: ModelConfig,
+    t_hi: usize,
+    bws: &[f64],
+    samples: usize,
+) -> Vec<SweepPoint> {
+    bws.iter()
+        .map(|&bw| {
+            let mut cpu = base;
+            cpu.dram_bw_gbs = bw;
+            let mut c1 = SimConfig::paper(cpu, model, 1);
+            c1.samples = samples;
+            let mut ch = SimConfig::paper(cpu, model, t_hi);
+            ch.samples = samples;
+            let r1 = simulate(&c1);
+            let rh = simulate(&ch);
+            SweepPoint {
+                llc_bytes: cpu
+                    .l3
+                    .map(|l| l.size_bytes)
+                    .unwrap_or(cpu.l2.size_bytes),
+                dram_bw_gbs: bw,
+                speedup: r1.seconds / rh.seconds,
+                traffic_reduction: r1.dram_bytes_per_sample
+                    / rh.dram_bytes_per_sample.max(1.0),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memsim::cpu::ARM_DENVER2;
+    use crate::models::config::{Arch, ModelSize};
+
+    #[test]
+    fn small_llc_benefits_more() {
+        // The paper's discussion: poorer memory system ⇒ bigger win.
+        let model = ModelConfig::paper(Arch::Sru, ModelSize::Large);
+        let pts = llc_sweep(
+            ARM_DENVER2,
+            model,
+            32,
+            &[512 * 1024, 2 * 1024 * 1024, 32 * 1024 * 1024],
+            256,
+        );
+        assert_eq!(pts.len(), 3);
+        // 32 MB LLC holds the 12 MB weights: effect should collapse
+        // toward the compute-bound ratio; 512 KB shows the full effect.
+        assert!(
+            pts[0].speedup >= pts[2].speedup,
+            "tiny LLC {:.1}x should beat huge LLC {:.1}x",
+            pts[0].speedup,
+            pts[2].speedup
+        );
+        // Weight-traffic reduction is large when thrashing.
+        assert!(pts[0].traffic_reduction > 4.0);
+    }
+
+    #[test]
+    fn lower_bandwidth_benefits_more() {
+        let model = ModelConfig::paper(Arch::Sru, ModelSize::Large);
+        let pts = bandwidth_sweep(ARM_DENVER2, model, 32, &[1.0, 3.2, 25.6], 256);
+        assert!(
+            pts[0].speedup > pts[2].speedup,
+            "1 GB/s {:.1}x should beat 25.6 GB/s {:.1}x",
+            pts[0].speedup,
+            pts[2].speedup
+        );
+    }
+}

@@ -1,0 +1,220 @@
+//! Benchmark model variants (paper §4) and the served stack shape.
+
+use std::fmt;
+
+/// RNN cell architecture.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Arch {
+    Lstm,
+    Sru,
+    Qrnn,
+}
+
+impl Arch {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Arch::Lstm => "lstm",
+            Arch::Sru => "sru",
+            Arch::Qrnn => "qrnn",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Arch> {
+        match s {
+            "lstm" => Some(Arch::Lstm),
+            "sru" => Some(Arch::Sru),
+            "qrnn" => Some(Arch::Qrnn),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Arch {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Paper model size class.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ModelSize {
+    /// ~1M parameters: LSTM-350 / SRU-512 / QRNN-512.
+    Small,
+    /// ~3M parameters: LSTM-700 / SRU-1024 / QRNN-1024.
+    Large,
+}
+
+impl ModelSize {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ModelSize::Small => "small",
+            ModelSize::Large => "large",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ModelSize> {
+        match s {
+            "small" => Some(ModelSize::Small),
+            "large" => Some(ModelSize::Large),
+            _ => None,
+        }
+    }
+}
+
+/// One benchmark model (single recurrent layer, as timed in Tables 1–8).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ModelConfig {
+    pub arch: Arch,
+    pub hidden: usize,
+    pub input: usize,
+}
+
+impl ModelConfig {
+    /// The paper's configuration grid.
+    pub fn paper(arch: Arch, size: ModelSize) -> ModelConfig {
+        let hidden = match (arch, size) {
+            (Arch::Lstm, ModelSize::Small) => 350,
+            (Arch::Lstm, ModelSize::Large) => 700,
+            (_, ModelSize::Small) => 512,
+            (_, ModelSize::Large) => 1024,
+        };
+        ModelConfig {
+            arch,
+            hidden,
+            input: hidden,
+        }
+    }
+
+    pub fn name(&self) -> String {
+        format!("{}_{}", self.arch, self.hidden)
+    }
+
+    /// Total trainable parameters (must match python's `param_count`).
+    pub fn param_count(&self) -> usize {
+        let (h, d) = (self.hidden, self.input);
+        match self.arch {
+            Arch::Lstm => 4 * h * d + 4 * h * h + 4 * h,
+            Arch::Sru => 3 * h * d + 2 * h,
+            Arch::Qrnn => 3 * h * 2 * d + 3 * h,
+        }
+    }
+
+    /// Bytes of weights touched per *single* time step (fp32) — the DRAM
+    /// traffic unit the paper's analysis is built on.
+    pub fn weight_bytes(&self) -> usize {
+        let matrix_params = match self.arch {
+            Arch::Lstm => 4 * self.hidden * self.input + 4 * self.hidden * self.hidden,
+            Arch::Sru => 3 * self.hidden * self.input,
+            Arch::Qrnn => 3 * self.hidden * 2 * self.input,
+        };
+        matrix_params * std::mem::size_of::<f32>()
+    }
+}
+
+/// The block sizes swept in the paper's tables ("SRU-n").
+pub const PAPER_BLOCK_SIZES: [usize; 8] = [1, 2, 4, 8, 16, 32, 64, 128];
+
+/// Samples processed per measurement in the paper (§4).
+pub const PAPER_SAMPLES: usize = 1024;
+
+/// Served stack: input projection → `depth` recurrent layers → head.
+/// Mirrors `python/compile/model.py::StackConfig`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct StackConfig {
+    pub arch: Arch,
+    pub feat: usize,
+    pub hidden: usize,
+    pub depth: usize,
+    pub vocab: usize,
+}
+
+impl StackConfig {
+    pub fn name(&self) -> String {
+        format!("asr_{}_{}x{}", self.arch, self.hidden, self.depth)
+    }
+
+    pub fn param_count(&self) -> usize {
+        let h = self.hidden;
+        let layer = ModelConfig {
+            arch: self.arch,
+            hidden: h,
+            input: h,
+        }
+        .param_count();
+        self.feat * h + h + self.depth * layer + h * self.vocab + self.vocab
+    }
+}
+
+pub const ASR_SRU: StackConfig = StackConfig {
+    arch: Arch::Sru,
+    feat: 40,
+    hidden: 512,
+    depth: 4,
+    vocab: 32,
+};
+
+pub const ASR_QRNN: StackConfig = StackConfig {
+    arch: Arch::Qrnn,
+    feat: 40,
+    hidden: 512,
+    depth: 4,
+    vocab: 32,
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_param_budgets() {
+        // "approximately 1M" small, "approximately 3M" large.
+        for (arch, lo, hi) in [
+            (Arch::Lstm, 0.7e6, 1.3e6),
+            (Arch::Sru, 0.7e6, 1.3e6),
+        ] {
+            let p = ModelConfig::paper(arch, ModelSize::Small).param_count() as f64;
+            assert!(p > lo && p < hi, "{arch} small: {p}");
+        }
+        for (arch, lo, hi) in [
+            (Arch::Lstm, 2.5e6, 4.5e6),
+            (Arch::Sru, 2.5e6, 4.5e6),
+        ] {
+            let p = ModelConfig::paper(arch, ModelSize::Large).param_count() as f64;
+            assert!(p > lo && p < hi, "{arch} large: {p}");
+        }
+    }
+
+    #[test]
+    fn paper_dims() {
+        assert_eq!(ModelConfig::paper(Arch::Lstm, ModelSize::Small).hidden, 350);
+        assert_eq!(ModelConfig::paper(Arch::Sru, ModelSize::Small).hidden, 512);
+        assert_eq!(ModelConfig::paper(Arch::Lstm, ModelSize::Large).hidden, 700);
+        assert_eq!(ModelConfig::paper(Arch::Qrnn, ModelSize::Large).hidden, 1024);
+    }
+
+    #[test]
+    fn arch_round_trip() {
+        for a in [Arch::Lstm, Arch::Sru, Arch::Qrnn] {
+            assert_eq!(Arch::parse(a.as_str()), Some(a));
+        }
+        assert_eq!(Arch::parse("gru"), None);
+    }
+
+    #[test]
+    fn weight_bytes_lstm_dominated_by_two_matrices() {
+        let cfg = ModelConfig::paper(Arch::Lstm, ModelSize::Small);
+        assert_eq!(
+            cfg.weight_bytes(),
+            (4 * 350 * 350 + 4 * 350 * 350) * 4
+        );
+    }
+
+    #[test]
+    fn stack_name_and_params() {
+        assert_eq!(ASR_SRU.name(), "asr_sru_512x4");
+        // matches python: feat*h + h + depth*(3h^2+2h) + h*vocab + vocab
+        let h = 512usize;
+        let expect = 40 * h + h + 4 * (3 * h * h + 2 * h) + h * 32 + 32;
+        assert_eq!(ASR_SRU.param_count(), expect);
+    }
+}

@@ -1,0 +1,11 @@
+//! Model configurations and parameter containers.
+//!
+//! Mirrors `python/compile/model.py` (keep in sync): the same arch/size
+//! grid, the same stacked-weight layouts, the same ~1M/~3M parameter
+//! budgets as the paper's small/large variants.
+
+pub mod config;
+pub mod params;
+
+pub use config::{Arch, ModelConfig, ModelSize, StackConfig, ASR_QRNN, ASR_SRU};
+pub use params::{LstmParams, QrnnParams, SruParams, StackParams};

@@ -1,0 +1,244 @@
+//! Parameter containers for each architecture + loading from weight
+//! bundles exported by `python/compile/aot.py`.
+
+use crate::linalg::Matrix;
+use crate::models::config::{Arch, ModelConfig, StackConfig};
+use crate::util::Rng;
+use crate::weights::Bundle;
+
+/// SRU layer parameters: stacked `W = [W_xhat; W_f; W_r]` and gate biases.
+#[derive(Debug, Clone)]
+pub struct SruParams {
+    /// `[3H, D]` stacked weight (rows: xhat, forget, reset).
+    pub w: Matrix,
+    /// `[2H]` biases (forget then reset; xhat has none).
+    pub b: Vec<f32>,
+}
+
+impl SruParams {
+    pub fn hidden(&self) -> usize {
+        self.w.rows() / 3
+    }
+
+    pub fn input(&self) -> usize {
+        self.w.cols()
+    }
+
+    pub fn init(cfg: &ModelConfig, rng: &mut Rng) -> Self {
+        assert_eq!(cfg.arch, Arch::Sru);
+        let h = cfg.hidden;
+        let mut b = vec![0.0; 2 * h];
+        b[..h].fill(1.0); // forget bias 1.0 (matches python init_sru)
+        Self {
+            w: Matrix::glorot(3 * h, cfg.input, rng),
+            b,
+        }
+    }
+
+    pub fn from_bundle(bundle: &Bundle, cfg: &ModelConfig) -> Result<Self, String> {
+        let w = bundle.matrix("w")?;
+        let b = bundle.vector("b")?;
+        let h = cfg.hidden;
+        if w.rows() != 3 * h || w.cols() != cfg.input {
+            return Err(format!("sru w shape {}x{}", w.rows(), w.cols()));
+        }
+        if b.len() != 2 * h {
+            return Err(format!("sru b len {}", b.len()));
+        }
+        Ok(Self { w, b })
+    }
+}
+
+/// QRNN layer parameters: `W = [W_xhat; W_f; W_o]` over `[x_t | x_{t-1}]`.
+#[derive(Debug, Clone)]
+pub struct QrnnParams {
+    /// `[3H, 2D]` stacked weight.
+    pub w: Matrix,
+    /// `[3H]` biases (xhat, forget, output).
+    pub b: Vec<f32>,
+}
+
+impl QrnnParams {
+    pub fn hidden(&self) -> usize {
+        self.w.rows() / 3
+    }
+
+    pub fn input(&self) -> usize {
+        self.w.cols() / 2
+    }
+
+    pub fn init(cfg: &ModelConfig, rng: &mut Rng) -> Self {
+        assert_eq!(cfg.arch, Arch::Qrnn);
+        let h = cfg.hidden;
+        let mut b = vec![0.0; 3 * h];
+        b[h..2 * h].fill(1.0); // forget bias
+        Self {
+            w: Matrix::glorot(3 * h, 2 * cfg.input, rng),
+            b,
+        }
+    }
+
+    pub fn from_bundle(bundle: &Bundle, cfg: &ModelConfig) -> Result<Self, String> {
+        let w = bundle.matrix("w")?;
+        let b = bundle.vector("b")?;
+        if w.rows() != 3 * cfg.hidden || w.cols() != 2 * cfg.input {
+            return Err(format!("qrnn w shape {}x{}", w.rows(), w.cols()));
+        }
+        if b.len() != 3 * cfg.hidden {
+            return Err(format!("qrnn b len {}", b.len()));
+        }
+        Ok(Self { w, b })
+    }
+}
+
+/// LSTM parameters (the baseline): input weights, recurrent weights, bias.
+#[derive(Debug, Clone)]
+pub struct LstmParams {
+    /// `[4H, D]` input-side weights (rows: f, i, o, chat).
+    pub w: Matrix,
+    /// `[4H, H]` recurrent weights.
+    pub u: Matrix,
+    /// `[4H]` bias.
+    pub b: Vec<f32>,
+}
+
+impl LstmParams {
+    pub fn hidden(&self) -> usize {
+        self.u.cols()
+    }
+
+    pub fn input(&self) -> usize {
+        self.w.cols()
+    }
+
+    pub fn init(cfg: &ModelConfig, rng: &mut Rng) -> Self {
+        assert_eq!(cfg.arch, Arch::Lstm);
+        let h = cfg.hidden;
+        let mut b = vec![0.0; 4 * h];
+        b[..h].fill(1.0); // forget bias (matches python init_lstm)
+        Self {
+            w: Matrix::glorot(4 * h, cfg.input, rng),
+            u: Matrix::glorot(4 * h, h, rng),
+            b,
+        }
+    }
+
+    pub fn from_bundle(bundle: &Bundle, cfg: &ModelConfig) -> Result<Self, String> {
+        let w = bundle.matrix("w")?;
+        let u = bundle.matrix("u")?;
+        let b = bundle.vector("b")?;
+        let h = cfg.hidden;
+        if w.rows() != 4 * h || w.cols() != cfg.input {
+            return Err(format!("lstm w shape {}x{}", w.rows(), w.cols()));
+        }
+        if u.rows() != 4 * h || u.cols() != h {
+            return Err(format!("lstm u shape {}x{}", u.rows(), u.cols()));
+        }
+        if b.len() != 4 * h {
+            return Err(format!("lstm b len {}", b.len()));
+        }
+        Ok(Self { w, u, b })
+    }
+}
+
+/// Full served stack: projection, recurrent layers, head.
+#[derive(Debug, Clone)]
+pub struct StackParams {
+    pub proj_w: Matrix, // [H, feat]
+    pub proj_b: Vec<f32>,
+    /// Per-layer SRU or QRNN params (arch from the config).
+    pub sru_layers: Vec<SruParams>,
+    pub qrnn_layers: Vec<QrnnParams>,
+    pub head_w: Matrix, // [vocab, H]
+    pub head_b: Vec<f32>,
+}
+
+impl StackParams {
+    pub fn init(cfg: &StackConfig, rng: &mut Rng) -> Self {
+        let layer_cfg = ModelConfig {
+            arch: cfg.arch,
+            hidden: cfg.hidden,
+            input: cfg.hidden,
+        };
+        let (mut sru_layers, mut qrnn_layers) = (Vec::new(), Vec::new());
+        let proj_w = Matrix::glorot(cfg.hidden, cfg.feat, rng);
+        for _ in 0..cfg.depth {
+            match cfg.arch {
+                Arch::Sru => sru_layers.push(SruParams::init(&layer_cfg, rng)),
+                Arch::Qrnn => qrnn_layers.push(QrnnParams::init(&layer_cfg, rng)),
+                Arch::Lstm => panic!("stack supports sru/qrnn only"),
+            }
+        }
+        Self {
+            proj_w,
+            proj_b: vec![0.0; cfg.hidden],
+            sru_layers,
+            qrnn_layers,
+            head_w: Matrix::glorot(cfg.vocab, cfg.hidden, rng),
+            head_b: vec![0.0; cfg.vocab],
+        }
+    }
+
+    pub fn from_bundle(bundle: &Bundle, cfg: &StackConfig) -> Result<Self, String> {
+        let layer_cfg = ModelConfig {
+            arch: cfg.arch,
+            hidden: cfg.hidden,
+            input: cfg.hidden,
+        };
+        let (mut sru_layers, mut qrnn_layers) = (Vec::new(), Vec::new());
+        for i in 0..cfg.depth {
+            let sub = bundle.scoped(&format!("l{i}_"));
+            match cfg.arch {
+                Arch::Sru => sru_layers.push(SruParams::from_bundle(&sub, &layer_cfg)?),
+                Arch::Qrnn => qrnn_layers.push(QrnnParams::from_bundle(&sub, &layer_cfg)?),
+                Arch::Lstm => return Err("stack supports sru/qrnn only".into()),
+            }
+        }
+        Ok(Self {
+            proj_w: bundle.matrix("proj_w")?,
+            proj_b: bundle.vector("proj_b")?,
+            sru_layers,
+            qrnn_layers,
+            head_w: bundle.matrix("head_w")?,
+            head_b: bundle.vector("head_b")?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::config::{ModelSize, ASR_SRU};
+
+    #[test]
+    fn init_shapes_match_config() {
+        let mut rng = Rng::new(0);
+        let cfg = ModelConfig::paper(Arch::Sru, ModelSize::Small);
+        let p = SruParams::init(&cfg, &mut rng);
+        assert_eq!(p.hidden(), 512);
+        assert_eq!(p.input(), 512);
+        assert_eq!(p.b.len(), 1024);
+        assert_eq!(p.b[0], 1.0); // forget bias
+        assert_eq!(p.b[512], 0.0);
+
+        let cfg = ModelConfig::paper(Arch::Lstm, ModelSize::Small);
+        let p = LstmParams::init(&cfg, &mut rng);
+        assert_eq!(p.hidden(), 350);
+        assert_eq!(p.w.rows(), 1400);
+
+        let cfg = ModelConfig::paper(Arch::Qrnn, ModelSize::Large);
+        let p = QrnnParams::init(&cfg, &mut rng);
+        assert_eq!(p.input(), 1024);
+        assert_eq!(p.w.cols(), 2048);
+    }
+
+    #[test]
+    fn stack_init_layer_count() {
+        let mut rng = Rng::new(0);
+        let p = StackParams::init(&ASR_SRU, &mut rng);
+        assert_eq!(p.sru_layers.len(), 4);
+        assert!(p.qrnn_layers.is_empty());
+        assert_eq!(p.proj_w.rows(), 512);
+        assert_eq!(p.head_w.rows(), 32);
+    }
+}

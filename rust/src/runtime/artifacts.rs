@@ -1,0 +1,232 @@
+//! AOT artifact manifest (`artifacts/manifest.json`) parsing.
+//!
+//! The manifest is written by `python/compile/aot.py`; this module turns
+//! it into typed entries and locates the HLO text / weight / golden files
+//! on disk.  Schema drift between the two sides fails loudly here.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::Json;
+
+/// Shape of one named executable input/output.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One compiled artifact (a `layer_*` or `stack_*` HLO module).
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    /// "layer" or "stack".
+    pub kind: String,
+    /// "sru" | "qrnn" | "lstm".
+    pub arch: String,
+    /// Layer entries: "small" / "large".  Stack entries: the stack name.
+    pub tag: String,
+    /// Block size T this executable was specialized for.
+    pub block: usize,
+    pub file: String,
+    pub weights: String,
+    pub golden: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// Stack only: flattened parameter / state tensor orderings.
+    pub param_order: Vec<String>,
+    pub state_order: Vec<String>,
+    pub feat: usize,
+    pub hidden: usize,
+    pub depth: usize,
+    pub vocab: usize,
+}
+
+/// The artifact directory + parsed manifest.
+#[derive(Debug)]
+pub struct ArtifactDir {
+    pub dir: PathBuf,
+    pub seed: usize,
+    pub entries: Vec<ArtifactEntry>,
+}
+
+fn parse_specs(j: &Json, key: &str) -> Result<Vec<TensorSpec>, String> {
+    let arr = j
+        .get(key)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| format!("missing array {key:?}"))?;
+    arr.iter()
+        .map(|e| {
+            let name = e.str_field("name")?.to_string();
+            let shape = e
+                .get("shape")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| format!("{name}: missing shape"))?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| format!("{name}: bad dim")))
+                .collect::<Result<Vec<_>, _>>()?;
+            Ok(TensorSpec { name, shape })
+        })
+        .collect()
+}
+
+fn parse_names(j: &Json, key: &str) -> Vec<String> {
+    j.get(key)
+        .and_then(Json::as_arr)
+        .map(|a| {
+            a.iter()
+                .filter_map(|v| v.as_str().map(str::to_string))
+                .collect()
+        })
+        .unwrap_or_default()
+}
+
+impl ArtifactDir {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self, String> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .map_err(|e| format!("read {}: {e}", manifest_path.display()))?;
+        Self::from_manifest(dir, &text)
+    }
+
+    pub fn from_manifest(dir: PathBuf, text: &str) -> Result<Self, String> {
+        let j = Json::parse(text).map_err(|e| e.to_string())?;
+        let version = j.usize_field("version")?;
+        if version != 1 {
+            return Err(format!("unsupported manifest version {version}"));
+        }
+        let seed = j.usize_field("seed")?;
+        let entries = j
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or("missing entries")?
+            .iter()
+            .map(|e| {
+                let kind = e.str_field("kind")?.to_string();
+                let tag = if kind == "stack" {
+                    e.str_field("name")?.to_string()
+                } else {
+                    e.str_field("size")?.to_string()
+                };
+                Ok(ArtifactEntry {
+                    arch: e.str_field("arch")?.to_string(),
+                    block: e.usize_field("block")?,
+                    file: e.str_field("file")?.to_string(),
+                    weights: e.str_field("weights")?.to_string(),
+                    golden: e.str_field("golden")?.to_string(),
+                    inputs: parse_specs(e, "inputs")?,
+                    outputs: parse_specs(e, "outputs")?,
+                    param_order: parse_names(e, "param_order"),
+                    state_order: parse_names(e, "state_order"),
+                    feat: e.usize_field("feat").unwrap_or(0),
+                    hidden: e.usize_field("hidden").unwrap_or(0),
+                    depth: e.usize_field("depth").unwrap_or(0),
+                    vocab: e.usize_field("vocab").unwrap_or(0),
+                    kind,
+                    tag,
+                })
+            })
+            .collect::<Result<Vec<_>, String>>()?;
+        Ok(Self { dir, seed, entries })
+    }
+
+    pub fn path_of(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+
+    /// Find a single-layer artifact.
+    pub fn layer(&self, arch: &str, size: &str, block: usize) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| {
+            e.kind == "layer" && e.arch == arch && e.tag == size && e.block == block
+        })
+    }
+
+    /// Find a stack artifact by name and block size.
+    pub fn stack(&self, name: &str, block: usize) -> Option<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.kind == "stack" && e.tag == name && e.block == block)
+    }
+
+    /// All block sizes available for a stack, ascending.
+    pub fn stack_blocks(&self, name: &str) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .entries
+            .iter()
+            .filter(|e| e.kind == "stack" && e.tag == name)
+            .map(|e| e.block)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Names of all stacks present.
+    pub fn stack_names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self
+            .entries
+            .iter()
+            .filter(|e| e.kind == "stack")
+            .map(|e| e.tag.clone())
+            .collect();
+        v.sort();
+        v.dedup();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1, "seed": 2018,
+      "entries": [
+        {"kind":"layer","arch":"sru","size":"small","hidden":512,"input":512,
+         "block":16,"file":"layer_sru_small_T16.hlo.txt",
+         "weights":"weights_sru_small.bin","golden":"golden_sru_small_T16.bin",
+         "inputs":[{"name":"w","shape":[1536,512]},{"name":"b","shape":[1024]},
+                   {"name":"x","shape":[16,512]},{"name":"c0","shape":[512]}],
+         "outputs":[{"name":"h","shape":[16,512]},{"name":"c_last","shape":[512]}]},
+        {"kind":"stack","name":"asr_sru_512x4","arch":"sru","feat":40,
+         "hidden":512,"depth":4,"vocab":32,"block":8,
+         "file":"stack_asr_sru_512x4_T8.hlo.txt",
+         "weights":"weights_asr_sru_512x4.bin","golden":"golden_asr_sru_512x4_T8.bin",
+         "param_order":["proj_w","proj_b","l0_w","l0_b","head_w","head_b"],
+         "state_order":["l0_c"],
+         "inputs":[{"name":"proj_w","shape":[512,40]}],
+         "outputs":[{"name":"logits","shape":[8,32]}]}
+      ]}"#;
+
+    #[test]
+    fn parses_layers_and_stacks() {
+        let d = ArtifactDir::from_manifest(PathBuf::from("/tmp"), SAMPLE).unwrap();
+        assert_eq!(d.seed, 2018);
+        assert_eq!(d.entries.len(), 2);
+        let l = d.layer("sru", "small", 16).unwrap();
+        assert_eq!(l.inputs[0].shape, vec![1536, 512]);
+        assert_eq!(l.inputs[0].elements(), 1536 * 512);
+        assert!(d.layer("sru", "small", 99).is_none());
+        let s = d.stack("asr_sru_512x4", 8).unwrap();
+        assert_eq!(s.param_order.len(), 6);
+        assert_eq!(s.vocab, 32);
+        assert_eq!(d.stack_blocks("asr_sru_512x4"), vec![8]);
+        assert_eq!(d.stack_names(), vec!["asr_sru_512x4"]);
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let bad = SAMPLE.replace("\"version\": 1", "\"version\": 7");
+        assert!(ArtifactDir::from_manifest(PathBuf::from("/tmp"), &bad).is_err());
+    }
+
+    #[test]
+    fn rejects_malformed_entries() {
+        let bad = SAMPLE.replace("\"arch\":\"sru\"", "\"arch\":7");
+        assert!(ArtifactDir::from_manifest(PathBuf::from("/tmp"), &bad).is_err());
+    }
+}

@@ -1,0 +1,12 @@
+//! PJRT runtime: load and execute the AOT JAX/Pallas artifacts.
+//!
+//! * [`artifacts`] — `manifest.json` parsing + artifact lookup.
+//! * [`pjrt`] — CPU PJRT client, compiled executables with device-resident
+//!   weights, the coordinator [`pjrt::PjrtBackend`], and golden-parity
+//!   checks tying the Rust path back to the JAX oracle.
+
+pub mod artifacts;
+pub mod pjrt;
+
+pub use artifacts::{ArtifactDir, ArtifactEntry, TensorSpec};
+pub use pjrt::{layer_parity, stack_parity, PjrtBackend, PjrtContext, StackExecutable};

@@ -1,0 +1,331 @@
+//! PJRT execution of the AOT JAX/Pallas artifacts.
+//!
+//! Load path (see /opt/xla-example/load_hlo): HLO **text** →
+//! `HloModuleProto::from_text_file` → `XlaComputation` → `client.compile`.
+//! Weights are uploaded to device buffers once per executable; the hot
+//! path transfers only the input block and the (small) recurrent state.
+//!
+//! Everything here lives on one inference thread (PJRT handles are not
+//! `Send` in the `xla` crate); the coordinator is single-threaded by
+//! design (see `coordinator::core`).
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::engine::StreamState;
+use crate::models::config::{Arch, StackConfig};
+use crate::runtime::artifacts::{ArtifactDir, ArtifactEntry};
+use crate::weights::Bundle;
+
+/// Shared PJRT CPU client.
+pub struct PjrtContext {
+    pub client: xla::PjRtClient,
+}
+
+impl PjrtContext {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e}"))?;
+        Ok(Self { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn compile(&self, hlo_path: &std::path::Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(hlo_path)
+            .map_err(|e| anyhow!("parse {}: {e}", hlo_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {}: {e}", hlo_path.display()))
+    }
+
+    fn upload(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("upload {dims:?}: {e}"))
+    }
+}
+
+/// Decompose an executed tuple result into flat f32 vectors.
+fn untuple(result: Vec<Vec<xla::PjRtBuffer>>) -> Result<Vec<Vec<f32>>> {
+    let buf = result
+        .into_iter()
+        .next()
+        .and_then(|v| v.into_iter().next())
+        .ok_or_else(|| anyhow!("empty execution result"))?;
+    let lit = buf
+        .to_literal_sync()
+        .map_err(|e| anyhow!("readback: {e}"))?;
+    let parts = lit.to_tuple().map_err(|e| anyhow!("untuple: {e}"))?;
+    parts
+        .iter()
+        .map(|p| p.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e}")))
+        .collect()
+}
+
+/// One compiled stack executable (fixed block size T) with its weights
+/// resident on device.
+pub struct StackExecutable {
+    exe: xla::PjRtLoadedExecutable,
+    pub entry: ArtifactEntry,
+    weight_bufs: Vec<xla::PjRtBuffer>,
+    weight_elems: usize,
+}
+
+impl StackExecutable {
+    pub fn load(ctx: &PjrtContext, dir: &ArtifactDir, entry: &ArtifactEntry) -> Result<Self> {
+        if entry.kind != "stack" {
+            bail!("{} is not a stack artifact", entry.file);
+        }
+        let exe = ctx.compile(&dir.path_of(&entry.file))?;
+        let bundle = Bundle::load(dir.path_of(&entry.weights))
+            .with_context(|| format!("weights {}", entry.weights))?;
+        let mut weight_bufs = Vec::new();
+        let mut weight_elems = 0;
+        for name in &entry.param_order {
+            let t = bundle
+                .get(name)
+                .ok_or_else(|| anyhow!("weights missing {name:?}"))?;
+            weight_elems += t.data.len();
+            weight_bufs.push(ctx.upload(&t.data, &t.dims)?);
+        }
+        Ok(Self {
+            exe,
+            entry: entry.clone(),
+            weight_bufs,
+            weight_elems,
+        })
+    }
+
+    pub fn block(&self) -> usize {
+        self.entry.block
+    }
+
+    pub fn weight_bytes(&self) -> usize {
+        self.weight_elems * std::mem::size_of::<f32>()
+    }
+
+    /// Run one block: `x` is `[T, feat]`, `state` holds the tensors named
+    /// by `entry.state_order`.  Returns `(logits [T, vocab], new_state)`.
+    pub fn run_block(
+        &self,
+        ctx: &PjrtContext,
+        x: &[f32],
+        state: &[Vec<f32>],
+    ) -> Result<(Vec<f32>, Vec<Vec<f32>>)> {
+        let e = &self.entry;
+        if x.len() != e.block * e.feat {
+            bail!("x len {} != {}x{}", x.len(), e.block, e.feat);
+        }
+        if state.len() != e.state_order.len() {
+            bail!(
+                "state count {} != {}",
+                state.len(),
+                e.state_order.len()
+            );
+        }
+        let mut args: Vec<&xla::PjRtBuffer> = self.weight_bufs.iter().collect();
+        let x_buf = ctx.upload(x, &[e.block, e.feat])?;
+        let state_bufs: Vec<xla::PjRtBuffer> = state
+            .iter()
+            .map(|s| ctx.upload(s, &[s.len()]))
+            .collect::<Result<_>>()?;
+        args.push(&x_buf);
+        for b in &state_bufs {
+            args.push(b);
+        }
+        let result = self
+            .exe
+            .execute_b(&args)
+            .map_err(|e| anyhow!("execute: {e}"))?;
+        let mut parts = untuple(result)?;
+        if parts.len() != 1 + state.len() {
+            bail!("expected {} outputs, got {}", 1 + state.len(), parts.len());
+        }
+        let new_state = parts.split_off(1);
+        let logits = parts.pop().unwrap();
+        if logits.len() != e.block * e.vocab {
+            bail!("logits len {} != {}x{}", logits.len(), e.block, e.vocab);
+        }
+        Ok((logits, new_state))
+    }
+}
+
+/// Multi-variant PJRT backend for the coordinator: one compiled
+/// executable per available block size.
+pub struct PjrtBackend {
+    ctx: PjrtContext,
+    variants: BTreeMap<usize, StackExecutable>,
+    sizes: Vec<usize>,
+    cfg: StackConfig,
+}
+
+impl PjrtBackend {
+    /// Load every available block-size variant of `stack_name`.
+    pub fn load(dir: &ArtifactDir, stack_name: &str) -> Result<Self> {
+        let ctx = PjrtContext::cpu()?;
+        let blocks = dir.stack_blocks(stack_name);
+        if blocks.is_empty() {
+            bail!("no stack artifacts named {stack_name:?} in {}", dir.dir.display());
+        }
+        if blocks[0] != 1 {
+            bail!(
+                "stack {stack_name:?} lacks a T=1 variant (blocks {blocks:?}); \
+                 exact partial coverage is impossible"
+            );
+        }
+        let mut variants = BTreeMap::new();
+        let mut proto: Option<ArtifactEntry> = None;
+        for &b in &blocks {
+            let entry = dir.stack(stack_name, b).unwrap();
+            variants.insert(b, StackExecutable::load(&ctx, dir, entry)?);
+            proto.get_or_insert_with(|| entry.clone());
+        }
+        let e = proto.unwrap();
+        let arch = Arch::parse(&e.arch).ok_or_else(|| anyhow!("bad arch {}", e.arch))?;
+        Ok(Self {
+            ctx,
+            sizes: blocks,
+            cfg: StackConfig {
+                arch,
+                feat: e.feat,
+                hidden: e.hidden,
+                depth: e.depth,
+                vocab: e.vocab,
+            },
+            variants,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.ctx.platform()
+    }
+}
+
+impl crate::coordinator::BlockBackend for PjrtBackend {
+    fn config(&self) -> &StackConfig {
+        &self.cfg
+    }
+
+    fn block_sizes(&self) -> &[usize] {
+        &self.sizes
+    }
+
+    fn init_state(&self) -> StreamState {
+        StreamState::zeros(&self.cfg)
+    }
+
+    fn run_block(
+        &mut self,
+        x: &[f32],
+        t: usize,
+        state: &mut StreamState,
+    ) -> Result<Vec<f32>, String> {
+        let exe = self
+            .variants
+            .get(&t)
+            .ok_or_else(|| format!("no compiled variant for T={t}"))?;
+        let (logits, new_state) = exe
+            .run_block(&self.ctx, x, &state.tensors)
+            .map_err(|e| e.to_string())?;
+        state.tensors = new_state;
+        Ok(logits)
+    }
+
+    fn weight_bytes_per_block(&self) -> usize {
+        self.variants
+            .values()
+            .next()
+            .map(|e| e.weight_bytes())
+            .unwrap_or(0)
+    }
+}
+
+/// Golden-parity check for a layer artifact: execute it on the exported
+/// weights + golden input and compare against the golden outputs.
+/// Returns the max |Δ| observed.  Used by `mtsrnn parity` and the
+/// integration tests.
+pub fn layer_parity(dir: &ArtifactDir, entry: &ArtifactEntry) -> Result<f32> {
+    let ctx = PjrtContext::cpu()?;
+    let exe = ctx.compile(&dir.path_of(&entry.file))?;
+    let weights = Bundle::load(dir.path_of(&entry.weights))
+        .with_context(|| entry.weights.clone())?;
+    let golden = Bundle::load(dir.path_of(&entry.golden))
+        .with_context(|| entry.golden.clone())?;
+
+    let h = entry.hidden;
+    let zeros_h = vec![0.0f32; h];
+    let x = &golden.get("x").ok_or_else(|| anyhow!("golden missing x"))?.data;
+    let xdims = &golden.get("x").unwrap().dims;
+
+    // Assemble inputs in the artifact's declared order.
+    let mut bufs: Vec<xla::PjRtBuffer> = Vec::new();
+    for spec in &entry.inputs {
+        let buf = match spec.name.as_str() {
+            "x" => ctx.upload(x, xdims)?,
+            "c0" | "h0" => ctx.upload(&zeros_h, &[h])?,
+            "x_prev" => ctx.upload(&vec![0.0; spec.elements()], &spec.shape)?,
+            name => {
+                let t = weights
+                    .get(name)
+                    .ok_or_else(|| anyhow!("weights missing {name:?}"))?;
+                ctx.upload(&t.data, &t.dims)?
+            }
+        };
+        bufs.push(buf);
+    }
+    let parts = untuple(exe.execute_b(&bufs).map_err(|e| anyhow!("execute: {e}"))?)?;
+    if parts.len() != entry.outputs.len() {
+        bail!("output arity {} != {}", parts.len(), entry.outputs.len());
+    }
+
+    let mut max_diff = 0f32;
+    for (got, spec) in parts.iter().zip(&entry.outputs) {
+        let want = &golden
+            .get(&spec.name)
+            .ok_or_else(|| anyhow!("golden missing {:?}", spec.name))?
+            .data;
+        if got.len() != want.len() {
+            bail!("{}: len {} != {}", spec.name, got.len(), want.len());
+        }
+        for (g, w) in got.iter().zip(want) {
+            max_diff = max_diff.max((g - w).abs());
+        }
+    }
+    Ok(max_diff)
+}
+
+/// Stack-parity check (same idea, zero initial state).
+pub fn stack_parity(dir: &ArtifactDir, entry: &ArtifactEntry) -> Result<f32> {
+    let ctx = PjrtContext::cpu()?;
+    let exe = StackExecutable::load(&ctx, dir, entry)?;
+    let golden = Bundle::load(dir.path_of(&entry.golden))?;
+    let x = &golden.get("x").ok_or_else(|| anyhow!("golden missing x"))?.data;
+    let state: Vec<Vec<f32>> = entry
+        .state_order
+        .iter()
+        .map(|_| vec![0.0f32; entry.hidden])
+        .collect();
+    let (logits, new_state) = exe.run_block(&ctx, x, &state)?;
+    let mut max_diff = 0f32;
+    let want = &golden
+        .get("logits")
+        .ok_or_else(|| anyhow!("golden missing logits"))?
+        .data;
+    for (g, w) in logits.iter().zip(want) {
+        max_diff = max_diff.max((g - w).abs());
+    }
+    for (ns, name) in new_state.iter().zip(&entry.state_order) {
+        let want = &golden
+            .get(&format!("state_{name}"))
+            .ok_or_else(|| anyhow!("golden missing state_{name}"))?
+            .data;
+        for (g, w) in ns.iter().zip(want) {
+            max_diff = max_diff.max((g - w).abs());
+        }
+    }
+    Ok(max_diff)
+}

@@ -1,0 +1,178 @@
+//! Streaming TCP front-end for the coordinator.
+//!
+//! Line-oriented text protocol (one command per line, space-separated):
+//!
+//! ```text
+//! OPEN                          -> OK <session-id>
+//! FEED <id> <f0> <f1> ...       -> OK <n-frames-accepted>
+//! POLL <id> <max-frames>        -> OK <n> <v0> <v1> ...   (logits)
+//! CLOSE <id>                    -> OK <n> <v0> ...        (final flush)
+//! STATS                         -> OK <summary line>
+//! QUIT                          -> OK bye
+//! ```
+//!
+//! Threading: connection handlers parse text and push typed requests onto
+//! a channel; a single inference thread owns the coordinator (PJRT /
+//! engine handles are not Send) and serves requests in order, ticking the
+//! batcher between requests and on a timer.  Responses return through
+//! per-request channels.
+
+pub mod protocol;
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Duration;
+
+use crate::coordinator::{BlockBackend, Coordinator};
+use protocol::{parse_line, Request, Response};
+
+/// A typed request plus its reply channel.
+pub struct Job {
+    req: Request,
+    reply: Sender<Response>,
+}
+
+/// Handle used by connection threads to reach the inference thread.
+#[derive(Clone)]
+pub struct ServerHandle {
+    jobs: Sender<Job>,
+}
+
+impl ServerHandle {
+    /// Build a handle from a raw sender (used when the inference loop must
+    /// run on the main thread, e.g. the non-Send PJRT backend).
+    pub fn from_sender(jobs: Sender<Job>) -> Self {
+        Self { jobs }
+    }
+
+    pub fn call(&self, req: Request) -> Response {
+        let (tx, rx) = channel();
+        if self.jobs.send(Job { req, reply: tx }).is_err() {
+            return Response::Err("server shutting down".into());
+        }
+        rx.recv()
+            .unwrap_or_else(|_| Response::Err("inference thread died".into()))
+    }
+}
+
+/// Run the inference loop over `coordinator`, serving `jobs` until the
+/// channel closes.  Ticks the batcher on every request and on timeout.
+pub fn inference_loop<B: BlockBackend>(
+    mut coordinator: Coordinator<B>,
+    jobs: Receiver<Job>,
+    tick_every: Duration,
+) {
+    loop {
+        let job = match jobs.recv_timeout(tick_every) {
+            Ok(j) => Some(j),
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => None,
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
+        };
+        if let Some(job) = job {
+            let resp = match job.req {
+                Request::Open => match coordinator.open() {
+                    Ok(id) => Response::Opened(id),
+                    Err(e) => Response::Err(e),
+                },
+                Request::Feed(id, frames) => match coordinator.feed(id, &frames) {
+                    Ok(n) => {
+                        // Opportunistic dispatch right after arrival.
+                        let _ = coordinator.tick();
+                        Response::Accepted(n)
+                    }
+                    Err(e) => Response::Err(e),
+                },
+                Request::Poll(id, max) => match coordinator.drain(id, max) {
+                    Ok(v) => Response::Logits(v),
+                    Err(e) => Response::Err(e),
+                },
+                Request::Close(id) => match coordinator.close(id) {
+                    Ok(v) => Response::Logits(v),
+                    Err(e) => Response::Err(e),
+                },
+                Request::Stats => Response::Stats(coordinator.metrics.summary()),
+            };
+            let _ = job.reply.send(resp);
+        }
+        // Deadline flushes for partially-filled blocks.
+        let _ = coordinator.tick();
+    }
+}
+
+/// Spawn the inference thread; returns the handle connections use.
+pub fn spawn_inference<B: BlockBackend + Send + 'static>(
+    coordinator: Coordinator<B>,
+    tick_every: Duration,
+) -> ServerHandle {
+    let (tx, rx) = channel();
+    std::thread::Builder::new()
+        .name("mtsrnn-inference".into())
+        .spawn(move || inference_loop(coordinator, rx, tick_every))
+        .expect("spawn inference thread");
+    ServerHandle { jobs: tx }
+}
+
+/// Serve one client connection (blocking).
+pub fn handle_connection(stream: TcpStream, handle: ServerHandle) {
+    let peer = stream
+        .peer_addr()
+        .map(|a| a.to_string())
+        .unwrap_or_else(|_| "?".into());
+    log::info!("connection from {peer}");
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = match line {
+            Ok(l) => l,
+            Err(_) => break,
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        if line.trim() == "QUIT" {
+            let _ = writeln!(writer, "OK bye");
+            break;
+        }
+        let resp = match parse_line(&line) {
+            Ok(req) => handle.call(req),
+            Err(e) => Response::Err(e),
+        };
+        if writeln!(writer, "{}", resp.encode()).is_err() {
+            break;
+        }
+    }
+    log::info!("connection {peer} closed");
+}
+
+/// Run the TCP server until `stop` flips (or forever).
+pub fn serve(
+    listener: TcpListener,
+    handle: ServerHandle,
+    stop: Arc<AtomicBool>,
+) -> std::io::Result<()> {
+    listener.set_nonblocking(true)?;
+    let mut threads = Vec::new();
+    while !stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                stream.set_nonblocking(false)?;
+                let h = handle.clone();
+                threads.push(std::thread::spawn(move || handle_connection(stream, h)));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    for t in threads {
+        let _ = t.join();
+    }
+    Ok(())
+}

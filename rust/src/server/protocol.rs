@@ -1,0 +1,130 @@
+//! Wire protocol: text lines ⇄ typed requests/responses.
+
+use crate::coordinator::SessionId;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    Open,
+    Feed(SessionId, Vec<f32>),
+    Poll(SessionId, usize),
+    Close(SessionId),
+    Stats,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    Opened(SessionId),
+    Accepted(usize),
+    Logits(Vec<f32>),
+    Stats(String),
+    Err(String),
+}
+
+/// Parse one request line.
+pub fn parse_line(line: &str) -> Result<Request, String> {
+    let mut it = line.split_ascii_whitespace();
+    let cmd = it.next().ok_or("empty command")?;
+    match cmd {
+        "OPEN" => Ok(Request::Open),
+        "STATS" => Ok(Request::Stats),
+        "FEED" => {
+            let id = parse_id(it.next())?;
+            let frames: Result<Vec<f32>, _> = it.map(str::parse::<f32>).collect();
+            let frames = frames.map_err(|e| format!("bad float: {e}"))?;
+            if frames.is_empty() {
+                return Err("FEED requires at least one value".into());
+            }
+            Ok(Request::Feed(id, frames))
+        }
+        "POLL" => {
+            let id = parse_id(it.next())?;
+            let max = it
+                .next()
+                .unwrap_or("1000000")
+                .parse::<usize>()
+                .map_err(|e| format!("bad max: {e}"))?;
+            Ok(Request::Poll(id, max))
+        }
+        "CLOSE" => Ok(Request::Close(parse_id(it.next())?)),
+        other => Err(format!("unknown command {other:?}")),
+    }
+}
+
+fn parse_id(tok: Option<&str>) -> Result<SessionId, String> {
+    tok.ok_or("missing session id")?
+        .parse::<SessionId>()
+        .map_err(|e| format!("bad session id: {e}"))
+}
+
+impl Response {
+    /// Encode for the wire (single line).
+    pub fn encode(&self) -> String {
+        match self {
+            Response::Opened(id) => format!("OK {id}"),
+            Response::Accepted(n) => format!("OK {n}"),
+            Response::Logits(v) => {
+                let mut s = format!("OK {}", v.len());
+                for x in v {
+                    s.push(' ');
+                    // Shortest round-trippable float formatting.
+                    s.push_str(&format!("{x}"));
+                }
+                s
+            }
+            Response::Stats(line) => format!("OK {line}"),
+            Response::Err(e) => format!("ERR {e}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trip() {
+        assert_eq!(parse_line("OPEN").unwrap(), Request::Open);
+        assert_eq!(parse_line("STATS").unwrap(), Request::Stats);
+        assert_eq!(
+            parse_line("FEED 3 1.5 -2 0.25").unwrap(),
+            Request::Feed(3, vec![1.5, -2.0, 0.25])
+        );
+        assert_eq!(parse_line("POLL 7 16").unwrap(), Request::Poll(7, 16));
+        assert_eq!(parse_line("POLL 7").unwrap(), Request::Poll(7, 1_000_000));
+        assert_eq!(parse_line("CLOSE 2").unwrap(), Request::Close(2));
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(parse_line("").is_err());
+        assert!(parse_line("NOPE").is_err());
+        assert!(parse_line("FEED").is_err());
+        assert!(parse_line("FEED x 1").is_err());
+        assert!(parse_line("FEED 1").is_err());
+        assert!(parse_line("FEED 1 abc").is_err());
+        assert!(parse_line("POLL").is_err());
+    }
+
+    #[test]
+    fn encode_forms() {
+        assert_eq!(Response::Opened(5).encode(), "OK 5");
+        assert_eq!(Response::Accepted(3).encode(), "OK 3");
+        assert_eq!(
+            Response::Logits(vec![1.0, -0.5]).encode(),
+            "OK 2 1 -0.5"
+        );
+        assert_eq!(Response::Err("nope".into()).encode(), "ERR nope");
+    }
+
+    #[test]
+    fn logits_encode_round_trips_through_f32_parse() {
+        let vals = vec![0.1, -3.25e-5, 1234.5678];
+        let enc = Response::Logits(vals.clone()).encode();
+        let parts: Vec<&str> = enc.split_whitespace().collect();
+        assert_eq!(parts[0], "OK");
+        assert_eq!(parts[1], "3");
+        for (p, want) in parts[2..].iter().zip(&vals) {
+            assert_eq!(p.parse::<f32>().unwrap(), *want);
+        }
+    }
+}

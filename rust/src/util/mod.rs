@@ -1,0 +1,11 @@
+//! Shared utilities: deterministic PRNGs, statistics, JSON, timing.
+
+pub mod json;
+pub mod prng;
+pub mod stats;
+pub mod timer;
+
+pub use json::Json;
+pub use prng::{Rng, SplitMix64};
+pub use stats::{Histogram, Summary};
+pub use timer::Timer;

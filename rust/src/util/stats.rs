@@ -1,0 +1,216 @@
+//! Small statistics toolkit for the bench harness and coordinator metrics.
+
+/// Streaming summary of a set of samples (nanoseconds, counts, ...).
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    samples: Vec<f64>,
+    sorted: bool,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, v: f64) {
+        self.samples.push(v);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples
+            .iter()
+            .copied()
+            .fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Sample standard deviation (n-1 denominator).
+    pub fn stddev(&self) -> f64 {
+        let n = self.samples.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        let ss: f64 = self.samples.iter().map(|v| (v - m) * (v - m)).sum();
+        (ss / (n - 1) as f64).sqrt()
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.samples
+                .sort_by(|a, b| a.partial_cmp(b).expect("NaN sample"));
+            self.sorted = true;
+        }
+    }
+
+    /// Percentile in `[0, 100]` with linear interpolation.
+    pub fn percentile(&mut self, p: f64) -> f64 {
+        assert!((0.0..=100.0).contains(&p), "percentile out of range");
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        self.ensure_sorted();
+        let n = self.samples.len();
+        if n == 1 {
+            return self.samples[0];
+        }
+        let rank = p / 100.0 * (n - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        let frac = rank - lo as f64;
+        self.samples[lo] * (1.0 - frac) + self.samples[hi] * frac
+    }
+
+    pub fn median(&mut self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p95(&mut self) -> f64 {
+        self.percentile(95.0)
+    }
+}
+
+/// Fixed-bound histogram for latency tracking in the coordinator (lock-free
+/// readers not needed; the coordinator owns it behind a mutex).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    /// Bucket upper bounds (exclusive), ascending; last bucket is +inf.
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    total: u64,
+    sum: f64,
+}
+
+impl Histogram {
+    /// Exponential buckets: `lo * ratio^k` until `hi`.
+    pub fn exponential(lo: f64, hi: f64, ratio: f64) -> Self {
+        assert!(lo > 0.0 && ratio > 1.0 && hi > lo);
+        let mut bounds = Vec::new();
+        let mut b = lo;
+        while b < hi {
+            bounds.push(b);
+            b *= ratio;
+        }
+        let n = bounds.len() + 1;
+        Self {
+            bounds,
+            counts: vec![0; n],
+            total: 0,
+            sum: 0.0,
+        }
+    }
+
+    pub fn record(&mut self, v: f64) {
+        let idx = match self
+            .bounds
+            .iter()
+            .position(|&b| v < b)
+        {
+            Some(i) => i,
+            None => self.counts.len() - 1,
+        };
+        self.counts[idx] += 1;
+        self.total += 1;
+        self.sum += v;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            f64::NAN
+        } else {
+            self.sum / self.total as f64
+        }
+    }
+
+    /// Upper bound of the bucket containing quantile `q` in `[0,1]`.
+    pub fn quantile_bound(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return f64::NAN;
+        }
+        let target = (q * self.total as f64).ceil() as u64;
+        let mut acc = 0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return if i < self.bounds.len() {
+                    self.bounds[i]
+                } else {
+                    f64::INFINITY
+                };
+            }
+        }
+        f64::INFINITY
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let mut s = Summary::new();
+        for v in [4.0, 1.0, 3.0, 2.0, 5.0] {
+            s.push(v);
+        }
+        assert_eq!(s.len(), 5);
+        assert!((s.mean() - 3.0).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 5.0);
+        assert!((s.median() - 3.0).abs() < 1e-12);
+        assert!((s.stddev() - (2.5f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let mut s = Summary::new();
+        for v in [10.0, 20.0] {
+            s.push(v);
+        }
+        assert!((s.percentile(50.0) - 15.0).abs() < 1e-12);
+        assert_eq!(s.percentile(0.0), 10.0);
+        assert_eq!(s.percentile(100.0), 20.0);
+    }
+
+    #[test]
+    fn empty_summary_is_nan() {
+        let mut s = Summary::new();
+        assert!(s.mean().is_nan());
+        assert!(s.median().is_nan());
+    }
+
+    #[test]
+    fn histogram_buckets_and_quantiles() {
+        let mut h = Histogram::exponential(1.0, 1000.0, 10.0);
+        for v in [0.5, 5.0, 50.0, 500.0, 5000.0] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert!(h.quantile_bound(0.2) <= 1.0);
+        assert!(h.quantile_bound(1.0).is_infinite());
+        assert!((h.mean() - 1111.1).abs() < 0.1);
+    }
+}

@@ -1,0 +1,335 @@
+//! Weight-bundle interchange format (Rust reader/writer).
+//!
+//! Byte-compatible with `python/compile/export.py` — see that module's
+//! docstring for the layout.  Every tensor carries an FNV-1a-64 checksum
+//! so a truncated or corrupted artifact fails loudly at load time rather
+//! than as silent numerical garbage.
+
+pub mod fnv;
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::io::{self, Read, Write};
+use std::path::Path;
+
+use crate::linalg::Matrix;
+use fnv::fnv1a64;
+
+pub const MAGIC: &[u8; 4] = b"MTSW";
+pub const VERSION: u32 = 1;
+
+/// One named fp32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn elements(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+/// A named tensor bundle (one `weights_*.bin` / `golden_*.bin` file).
+#[derive(Debug, Clone, Default)]
+pub struct Bundle {
+    tensors: BTreeMap<String, Tensor>,
+}
+
+#[derive(Debug)]
+pub enum WeightError {
+    Io(io::Error),
+    Format(String),
+}
+
+impl std::fmt::Display for WeightError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WeightError::Io(e) => write!(f, "io: {e}"),
+            WeightError::Format(m) => write!(f, "format: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for WeightError {}
+
+impl From<io::Error> for WeightError {
+    fn from(e: io::Error) -> Self {
+        WeightError::Io(e)
+    }
+}
+
+fn format_err<T>(msg: impl Into<String>) -> Result<T, WeightError> {
+    Err(WeightError::Format(msg.into()))
+}
+
+impl Bundle {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, name: impl Into<String>, dims: Vec<usize>, data: Vec<f32>) {
+        let n: usize = dims.iter().product();
+        assert_eq!(n, data.len(), "dims/data mismatch");
+        self.tensors.insert(name.into(), Tensor { dims, data });
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.tensors.keys().map(String::as_str)
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.tensors.get(name)
+    }
+
+    /// Fetch a 2-D tensor as a `Matrix`.
+    pub fn matrix(&self, name: &str) -> Result<Matrix, String> {
+        let t = self
+            .tensors
+            .get(name)
+            .ok_or_else(|| format!("missing tensor {name:?}"))?;
+        if t.dims.len() != 2 {
+            return Err(format!("{name:?} is {}-d, wanted 2-d", t.dims.len()));
+        }
+        Ok(Matrix::from_vec(t.dims[0], t.dims[1], t.data.clone()))
+    }
+
+    /// Fetch a 1-D tensor.
+    pub fn vector(&self, name: &str) -> Result<Vec<f32>, String> {
+        let t = self
+            .tensors
+            .get(name)
+            .ok_or_else(|| format!("missing tensor {name:?}"))?;
+        if t.dims.len() != 1 {
+            return Err(format!("{name:?} is {}-d, wanted 1-d", t.dims.len()));
+        }
+        Ok(t.data.clone())
+    }
+
+    /// View of all tensors whose name starts with `prefix`, with the
+    /// prefix stripped (per-layer loading).
+    pub fn scoped(&self, prefix: &str) -> Bundle {
+        let tensors = self
+            .tensors
+            .iter()
+            .filter_map(|(k, v)| {
+                k.strip_prefix(prefix)
+                    .map(|rest| (rest.to_string(), v.clone()))
+            })
+            .collect();
+        Bundle { tensors }
+    }
+
+    // -- serialization ---------------------------------------------------
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Bundle, WeightError> {
+        let raw = fs::read(path.as_ref())?;
+        Self::from_bytes(&raw)
+    }
+
+    pub fn from_bytes(raw: &[u8]) -> Result<Bundle, WeightError> {
+        let mut r = Cursor { raw, pos: 0 };
+        if r.take(4)? != &MAGIC[..] {
+            return format_err("bad magic");
+        }
+        let version = r.u32()?;
+        if version != VERSION {
+            return format_err(format!("unsupported version {version}"));
+        }
+        let count = r.u32()? as usize;
+        let mut tensors = BTreeMap::new();
+        for _ in 0..count {
+            let nlen = r.u16()? as usize;
+            let name = String::from_utf8(r.take(nlen)?.to_vec())
+                .map_err(|_| WeightError::Format("bad utf8 name".into()))?;
+            let ndim = r.u8()? as usize;
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                dims.push(r.u32()? as usize);
+            }
+            let cksum = r.u64()?;
+            let nbytes = r.u64()? as usize;
+            let expect: usize = dims.iter().product::<usize>() * 4;
+            if nbytes != expect {
+                return format_err(format!(
+                    "{name:?}: byte length {nbytes} != dims {expect}"
+                ));
+            }
+            let bytes = r.take(nbytes)?;
+            if fnv1a64(bytes) != cksum {
+                return format_err(format!("checksum mismatch for {name:?}"));
+            }
+            let mut data = Vec::with_capacity(nbytes / 4);
+            for ch in bytes.chunks_exact(4) {
+                data.push(f32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]));
+            }
+            tensors.insert(name, Tensor { dims, data });
+        }
+        if r.pos != raw.len() {
+            return format_err("trailing bytes");
+        }
+        Ok(Bundle { tensors })
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<(), WeightError> {
+        let mut f = fs::File::create(path.as_ref())?;
+        f.write_all(&self.to_bytes())?;
+        Ok(())
+    }
+
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&(self.tensors.len() as u32).to_le_bytes());
+        // BTreeMap iterates sorted — matches python's sorted() writer.
+        for (name, t) in &self.tensors {
+            out.extend_from_slice(&(name.len() as u16).to_le_bytes());
+            out.extend_from_slice(name.as_bytes());
+            out.push(t.dims.len() as u8);
+            for &d in &t.dims {
+                out.extend_from_slice(&(d as u32).to_le_bytes());
+            }
+            let mut raw = Vec::with_capacity(t.data.len() * 4);
+            for &v in &t.data {
+                raw.extend_from_slice(&v.to_le_bytes());
+            }
+            out.extend_from_slice(&fnv1a64(&raw).to_le_bytes());
+            out.extend_from_slice(&(raw.len() as u64).to_le_bytes());
+            out.extend_from_slice(&raw);
+        }
+        out
+    }
+}
+
+struct Cursor<'a> {
+    raw: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WeightError> {
+        if self.pos + n > self.raw.len() {
+            return format_err("unexpected eof");
+        }
+        let s = &self.raw[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, WeightError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, WeightError> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self) -> Result<u32, WeightError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, WeightError> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes(b.try_into().unwrap()))
+    }
+}
+
+// Dummy Read impl is not needed; fs::read covers files.
+#[allow(unused)]
+fn _assert_read_unused<R: Read>(_r: R) {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Bundle {
+        let mut b = Bundle::new();
+        b.insert("w", vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        b.insert("b", vec![2], vec![0.5, -0.5]);
+        b
+    }
+
+    #[test]
+    fn round_trip_bytes() {
+        let b = sample();
+        let back = Bundle::from_bytes(&b.to_bytes()).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back.get("w").unwrap().dims, vec![2, 3]);
+        assert_eq!(back.get("b").unwrap().data, vec![0.5, -0.5]);
+    }
+
+    #[test]
+    fn matrix_and_vector_accessors() {
+        let b = sample();
+        let m = b.matrix("w").unwrap();
+        assert_eq!(m.at(1, 2), 6.0);
+        assert_eq!(b.vector("b").unwrap(), vec![0.5, -0.5]);
+        assert!(b.matrix("b").is_err()); // 1-d as matrix
+        assert!(b.vector("w").is_err()); // 2-d as vector
+        assert!(b.matrix("nope").is_err());
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let mut raw = sample().to_bytes();
+        let n = raw.len();
+        raw[n - 2] ^= 0xFF;
+        match Bundle::from_bytes(&raw) {
+            Err(WeightError::Format(m)) => assert!(m.contains("checksum"), "{m}"),
+            other => panic!("expected checksum error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let raw = sample().to_bytes();
+        assert!(Bundle::from_bytes(&raw[..raw.len() - 1]).is_err());
+        assert!(Bundle::from_bytes(&raw[..10]).is_err());
+    }
+
+    #[test]
+    fn bad_magic_and_version() {
+        let mut raw = sample().to_bytes();
+        raw[0] = b'X';
+        assert!(matches!(
+            Bundle::from_bytes(&raw),
+            Err(WeightError::Format(_))
+        ));
+        let mut raw = sample().to_bytes();
+        raw[4] = 9; // version 9
+        assert!(Bundle::from_bytes(&raw).is_err());
+    }
+
+    #[test]
+    fn scoped_strips_prefix() {
+        let mut b = Bundle::new();
+        b.insert("l0_w", vec![1], vec![1.0]);
+        b.insert("l1_w", vec![1], vec![2.0]);
+        let s = b.scoped("l1_");
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.get("w").unwrap().data, vec![2.0]);
+    }
+
+    #[test]
+    fn file_round_trip() {
+        let dir = std::env::temp_dir().join("mtsrnn_weights_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("b.bin");
+        sample().save(&path).unwrap();
+        let back = Bundle::load(&path).unwrap();
+        assert_eq!(back.get("w").unwrap().data[5], 6.0);
+        std::fs::remove_file(path).ok();
+    }
+}

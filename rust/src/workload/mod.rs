@@ -1,0 +1,210 @@
+//! Synthetic workload generators.
+//!
+//! The paper times dense inference, which is data-independent, so the
+//! *statistics* of the inputs only matter for numerical-sanity checks and
+//! for the end-to-end serving example.  We provide three generators:
+//!
+//! * [`gaussian_frames`] — i.i.d. normal feature frames (the timing
+//!   workload; matches what the paper's 1,024-sample measurement does).
+//! * [`AsrTrace`] — speech-like 40-dim log-mel-ish frames: smooth
+//!   band-limited trajectories with pauses, approximating the temporal
+//!   correlation of real acoustic features.
+//! * [`TokenStream`] — integer token ids with a Zipf-ish distribution for
+//!   the text/sentiment acceptor example (embedded via a fixed table).
+
+use crate::util::Rng;
+
+/// `steps` i.i.d. N(0, scale²) frames of width `dim`, time-major.
+pub fn gaussian_frames(rng: &mut Rng, steps: usize, dim: usize, scale: f32) -> Vec<f32> {
+    let mut out = vec![0.0; steps * dim];
+    rng.fill_normal(&mut out, scale);
+    out
+}
+
+/// Speech-like feature stream: each of `dim` channels follows a slow
+/// AR(1) trajectory with channel-dependent smoothness; utterances are
+/// separated by low-energy "silence" gaps, mimicking a VAD-segmented
+/// on-device ASR feed.
+#[derive(Debug)]
+pub struct AsrTrace {
+    dim: usize,
+    state: Vec<f32>,
+    rng: Rng,
+    /// Steps remaining in the current segment.
+    remaining: usize,
+    /// Whether the current segment is speech (true) or silence.
+    speech: bool,
+}
+
+impl AsrTrace {
+    pub fn new(dim: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut state = vec![0.0; dim];
+        rng.fill_normal(&mut state, 0.5);
+        Self {
+            dim,
+            state,
+            rng,
+            remaining: 0,
+            speech: true,
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Produce the next frame into `out` (`dim` floats).
+    pub fn next_frame(&mut self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.dim);
+        if self.remaining == 0 {
+            // New segment: speech bursts 30–150 frames, pauses 5–40.
+            self.speech = !self.speech;
+            self.remaining = if self.speech {
+                30 + self.rng.below(121) as usize
+            } else {
+                5 + self.rng.below(36) as usize
+            };
+        }
+        self.remaining -= 1;
+        let (energy, drive) = if self.speech { (1.0, 0.35) } else { (0.05, 0.05) };
+        for (i, v) in self.state.iter_mut().enumerate() {
+            // Lower channels (low frequencies) move more slowly.
+            let alpha = 0.85 + 0.1 * (i as f32 / self.dim as f32);
+            *v = alpha * *v + drive * self.rng.normal();
+            out[i] = *v * energy;
+        }
+    }
+
+    /// Convenience: materialize `steps` frames time-major.
+    pub fn frames(&mut self, steps: usize) -> Vec<f32> {
+        let dim = self.dim;
+        let mut out = vec![0.0; steps * dim];
+        for s in 0..steps {
+            self.next_frame(&mut out[s * dim..(s + 1) * dim]);
+        }
+        out
+    }
+}
+
+/// Zipf-ish token stream + embedding table for the acceptor example.
+#[derive(Debug)]
+pub struct TokenStream {
+    vocab: usize,
+    dim: usize,
+    /// `[vocab, dim]` fixed random embedding table.
+    table: Vec<f32>,
+    rng: Rng,
+}
+
+impl TokenStream {
+    pub fn new(vocab: usize, dim: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed ^ 0xE5CA_9E00);
+        let mut table = vec![0.0; vocab * dim];
+        rng.fill_normal(&mut table, 1.0);
+        Self {
+            vocab,
+            dim,
+            table,
+            rng: Rng::new(seed),
+        }
+    }
+
+    /// Draw a token id with P(k) ∝ 1/(k+1) (harmonic Zipf).
+    pub fn next_token(&mut self) -> usize {
+        // Inverse-CDF on the harmonic distribution via rejection-free
+        // cumulative walk (vocab is small in the examples).
+        let hn: f64 = (1..=self.vocab).map(|k| 1.0 / k as f64).sum();
+        let mut u = self.rng.uniform() * hn;
+        for k in 0..self.vocab {
+            u -= 1.0 / (k + 1) as f64;
+            if u <= 0.0 {
+                return k;
+            }
+        }
+        self.vocab - 1
+    }
+
+    pub fn embed(&self, token: usize, out: &mut [f32]) {
+        assert!(token < self.vocab);
+        assert_eq!(out.len(), self.dim);
+        out.copy_from_slice(&self.table[token * self.dim..(token + 1) * self.dim]);
+    }
+
+    /// A `steps`-token sequence embedded time-major `[steps, dim]`.
+    pub fn sequence(&mut self, steps: usize) -> (Vec<usize>, Vec<f32>) {
+        let mut ids = Vec::with_capacity(steps);
+        let mut x = vec![0.0; steps * self.dim];
+        for s in 0..steps {
+            let t = self.next_token();
+            ids.push(t);
+            let dim = self.dim;
+            let start = s * dim;
+            let out = &mut x[start..start + dim];
+            out.copy_from_slice(&self.table[t * dim..(t + 1) * dim]);
+        }
+        (ids, x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gaussian_frames_shape_and_stats() {
+        let mut rng = Rng::new(1);
+        let x = gaussian_frames(&mut rng, 100, 40, 2.0);
+        assert_eq!(x.len(), 4000);
+        let mean: f32 = x.iter().sum::<f32>() / x.len() as f32;
+        assert!(mean.abs() < 0.2, "{mean}");
+        let var: f32 = x.iter().map(|v| v * v).sum::<f32>() / x.len() as f32;
+        assert!((var - 4.0).abs() < 0.5, "{var}");
+    }
+
+    #[test]
+    fn asr_trace_is_smooth_and_deterministic() {
+        let mut a = AsrTrace::new(40, 7);
+        let mut b = AsrTrace::new(40, 7);
+        let fa = a.frames(50);
+        let fb = b.frames(50);
+        assert_eq!(fa, fb, "same seed, same trace");
+        // Smoothness: successive speech frames should be correlated far
+        // more than i.i.d. noise would be.
+        let mut same = 0.0;
+        let mut count = 0;
+        for s in 1..50 {
+            for i in 0..40 {
+                let (p, q) = (fa[(s - 1) * 40 + i], fa[s * 40 + i]);
+                if p.abs() > 1e-3 && q.abs() > 1e-3 {
+                    same += (p.signum() == q.signum()) as i32 as f64;
+                    count += 1;
+                }
+            }
+        }
+        assert!(count > 0);
+        assert!(same / count as f64 > 0.7, "{}", same / count as f64);
+    }
+
+    #[test]
+    fn token_stream_zipf_head_heavy() {
+        let mut ts = TokenStream::new(100, 16, 3);
+        let mut counts = vec![0usize; 100];
+        for _ in 0..20_000 {
+            counts[ts.next_token()] += 1;
+        }
+        assert!(counts[0] > counts[10], "head token should dominate");
+        assert!(counts[0] > counts[50] * 5);
+    }
+
+    #[test]
+    fn embedding_is_consistent() {
+        let mut ts = TokenStream::new(8, 4, 9);
+        let (ids, x) = ts.sequence(12);
+        let mut buf = vec![0.0; 4];
+        for (s, &id) in ids.iter().enumerate() {
+            ts.embed(id, &mut buf);
+            assert_eq!(&x[s * 4..(s + 1) * 4], buf.as_slice());
+        }
+    }
+}

@@ -1,0 +1,137 @@
+//! Cross-backend parity: the native Rust engine and the PJRT-executed
+//! AOT JAX/Pallas artifacts must produce the same numbers for the same
+//! exported weights — this is the test that proves the three layers
+//! compose into one system rather than two parallel implementations.
+//!
+//! Requires `make artifacts`; skips (with a loud message) if absent so
+//! `cargo test` works on a fresh checkout.
+
+use mtsrnn::coordinator::BlockBackend;
+use mtsrnn::engine::{NativeStack, StreamState};
+use mtsrnn::models::config::{Arch, StackConfig};
+use mtsrnn::models::StackParams;
+use mtsrnn::runtime::{ArtifactDir, PjrtBackend};
+use mtsrnn::util::Rng;
+use mtsrnn::weights::Bundle;
+
+fn artifacts() -> Option<ArtifactDir> {
+    match ArtifactDir::load("artifacts") {
+        Ok(d) => Some(d),
+        Err(e) => {
+            eprintln!("SKIP backend_parity: {e} (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+#[test]
+fn native_and_pjrt_agree_on_stack_logits() {
+    let Some(dir) = artifacts() else { return };
+    let name = "asr_sru_512x4";
+    let mut pjrt = match PjrtBackend::load(&dir, name) {
+        Ok(b) => b,
+        Err(e) => panic!("artifacts exist but PJRT load failed: {e}"),
+    };
+    let cfg: StackConfig = *pjrt.config();
+
+    // Native stack from the SAME exported weights.
+    let bundle = Bundle::load(dir.path_of(&format!("weights_{name}.bin"))).unwrap();
+    let params = StackParams::from_bundle(&bundle, &cfg).unwrap();
+    let max_block = *pjrt.block_sizes().last().unwrap();
+    let mut native = NativeStack::new(cfg, params, max_block);
+
+    let mut rng = Rng::new(99);
+    let mut pjrt_state = pjrt.init_state();
+    let mut native_state = StreamState::zeros(&cfg);
+
+    // Several blocks, carrying state across: both paths must track.
+    for (bi, &t) in pjrt.block_sizes().to_vec().iter().enumerate() {
+        let mut x = vec![0.0; t * cfg.feat];
+        rng.fill_normal(&mut x, 1.0);
+
+        let pjrt_logits = pjrt.run_block(&x, t, &mut pjrt_state).expect("pjrt run");
+
+        let mut native_logits = vec![0.0; t * cfg.vocab];
+        native.run_block(&x, t, &mut native_state, &mut native_logits);
+
+        let max_d = pjrt_logits
+            .iter()
+            .zip(&native_logits)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(
+            max_d < 5e-4,
+            "block {bi} (T={t}): native vs pjrt logits max|Δ| = {max_d}"
+        );
+        // States must track too (they feed every later block).
+        for (s_p, s_n) in pjrt_state.tensors.iter().zip(&native_state.tensors) {
+            for (a, b) in s_p.iter().zip(s_n) {
+                assert!((a - b).abs() < 5e-4, "state diverged at block {bi}");
+            }
+        }
+    }
+}
+
+#[test]
+fn pjrt_block_decomposition_preserves_stream() {
+    // Running 1+8+32 frames through mixed-size PJRT variants must equal
+    // a T=1-only run: the coordinator relies on this to cover partial
+    // blocks exactly.
+    let Some(dir) = artifacts() else { return };
+    let name = "asr_sru_512x4";
+    let mut a = PjrtBackend::load(&dir, name).unwrap();
+    let mut b = PjrtBackend::load(&dir, name).unwrap();
+    let cfg = *a.config();
+    let total = 41; // 32 + 8 + 1
+    let mut x = vec![0.0; total * cfg.feat];
+    Rng::new(5).fill_normal(&mut x, 1.0);
+
+    // Path A: 32, then 8, then 1.
+    let mut st_a = a.init_state();
+    let mut logits_a = Vec::new();
+    let mut off = 0;
+    for t in [32usize, 8, 1] {
+        logits_a.extend(
+            a.run_block(&x[off * cfg.feat..(off + t) * cfg.feat], t, &mut st_a)
+                .unwrap(),
+        );
+        off += t;
+    }
+
+    // Path B: 41 single steps.
+    let mut st_b = b.init_state();
+    let mut logits_b = Vec::new();
+    for s in 0..total {
+        logits_b.extend(
+            b.run_block(&x[s * cfg.feat..(s + 1) * cfg.feat], 1, &mut st_b)
+                .unwrap(),
+        );
+    }
+
+    assert_eq!(logits_a.len(), logits_b.len());
+    for (i, (p, q)) in logits_a.iter().zip(&logits_b).enumerate() {
+        assert!((p - q).abs() < 5e-4, "idx {i}: {p} vs {q}");
+    }
+}
+
+#[test]
+fn weights_bundle_matches_jax_init_distribution() {
+    // Sanity: exported SRU weights respect the Glorot bound (catches
+    // layout/transposition mistakes that parity alone might mask).
+    let Some(dir) = artifacts() else { return };
+    let bundle = Bundle::load(dir.path_of("weights_sru_small.bin")).unwrap();
+    let w = bundle.matrix("w").unwrap();
+    assert_eq!((w.rows(), w.cols()), (1536, 512));
+    let bound = (6.0f32 / (1536.0 + 512.0)).sqrt();
+    assert!(w.data().iter().all(|v| v.abs() <= bound * 1.001));
+    let b = bundle.vector("b").unwrap();
+    assert_eq!(b.len(), 1024);
+    assert!(b[..512].iter().all(|&v| v == 1.0), "forget bias");
+    // The same weights load into the engine layer without error.
+    let cfg = mtsrnn::models::config::ModelConfig::paper(
+        Arch::Sru,
+        mtsrnn::models::config::ModelSize::Small,
+    );
+    let p = mtsrnn::models::SruParams::from_bundle(&bundle, &cfg).unwrap();
+    assert_eq!(p.hidden(), 512);
+}

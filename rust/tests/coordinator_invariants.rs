@@ -1,0 +1,206 @@
+//! Randomized + failure-injection tests of the coordinator.
+//!
+//! Serving guarantees under test:
+//! 1. Logits are independent of the block policy and of the feed/tick
+//!    interleaving (the paper's transformation lifted to the service).
+//! 2. Frames are never lost, duplicated or reordered.
+//! 3. Sessions are isolated.
+//! 4. Backend failures surface as errors without corrupting other
+//!    sessions.
+
+use std::time::Duration;
+
+use mtsrnn::coordinator::{
+    BlockBackend, Coordinator, CoordinatorConfig, NativeBackend, PolicyMode,
+};
+use mtsrnn::engine::{NativeStack, StreamState};
+use mtsrnn::models::config::{Arch, StackConfig};
+use mtsrnn::models::StackParams;
+use mtsrnn::util::Rng;
+
+const CFG: StackConfig = StackConfig {
+    arch: Arch::Sru,
+    feat: 8,
+    hidden: 16,
+    depth: 2,
+    vocab: 4,
+};
+
+fn coordinator(policy: PolicyMode, max_wait_ms: u64) -> Coordinator<NativeBackend> {
+    let params = StackParams::init(&CFG, &mut Rng::new(7));
+    Coordinator::new(
+        NativeBackend::new(NativeStack::new(CFG, params, 32)),
+        CoordinatorConfig {
+            policy,
+            max_wait: Duration::from_millis(max_wait_ms),
+            max_sessions: 16,
+        },
+    )
+}
+
+/// Ground truth: run the same stream through a T=1 coordinator.
+fn reference_logits(x: &[f32]) -> Vec<f32> {
+    let mut c = coordinator(PolicyMode::Fixed(1), 0);
+    let id = c.open().unwrap();
+    c.feed(id, x).unwrap();
+    c.tick().unwrap();
+    let mut out = c.drain(id, usize::MAX).unwrap();
+    out.extend(c.close(id).unwrap());
+    out
+}
+
+#[test]
+fn random_interleavings_preserve_logits() {
+    let mut meta = Rng::new(0xABCD);
+    for trial in 0..15 {
+        let frames = 20 + meta.below(60) as usize;
+        let mut x = vec![0.0; frames * CFG.feat];
+        Rng::new(meta.next_u64()).fill_normal(&mut x, 1.0);
+        let want = reference_logits(&x);
+
+        let policy = match meta.below(3) {
+            0 => PolicyMode::Fixed(1 + meta.below(32) as usize),
+            1 => PolicyMode::Fixed(32),
+            _ => PolicyMode::Adaptive,
+        };
+        let mut c = coordinator(policy, 0);
+        let id = c.open().unwrap();
+
+        // Random feed chunks with random tick/drain interleaving.
+        let mut got = Vec::new();
+        let mut s = 0;
+        while s < frames {
+            let n = (1 + meta.below(13) as usize).min(frames - s);
+            c.feed(id, &x[s * CFG.feat..(s + n) * CFG.feat]).unwrap();
+            s += n;
+            if meta.chance(0.7) {
+                c.tick().unwrap();
+            }
+            if meta.chance(0.5) {
+                got.extend(c.drain(id, meta.below(50) as usize + 1).unwrap());
+            }
+        }
+        got.extend(c.drain(id, usize::MAX).unwrap());
+        got.extend(c.close(id).unwrap());
+
+        assert_eq!(got.len(), want.len(), "trial {trial}: frame loss/dup");
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert!(
+                (g - w).abs() < 2e-4,
+                "trial {trial} ({policy:?}): idx {i}: {g} vs {w}"
+            );
+        }
+    }
+}
+
+#[test]
+fn sessions_do_not_interfere() {
+    let mut c = coordinator(PolicyMode::Fixed(8), 0);
+    let ids: Vec<_> = (0..4).map(|_| c.open().unwrap()).collect();
+    let mut streams = Vec::new();
+    for (k, _) in ids.iter().enumerate() {
+        let mut x = vec![0.0; 24 * CFG.feat];
+        Rng::new(100 + k as u64).fill_normal(&mut x, 1.0);
+        streams.push(x);
+    }
+    // Interleave feeds round-robin in small chunks.
+    for step in 0..6 {
+        for (k, &id) in ids.iter().enumerate() {
+            let x = &streams[k][step * 4 * CFG.feat..(step + 1) * 4 * CFG.feat];
+            c.feed(id, x).unwrap();
+        }
+        c.tick().unwrap();
+    }
+    for (k, &id) in ids.iter().enumerate() {
+        let mut got = c.drain(id, usize::MAX).unwrap();
+        got.extend(c.close(id).unwrap());
+        let want = reference_logits(&streams[k]);
+        assert_eq!(got.len(), want.len());
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 2e-4, "stream {k} corrupted");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Failure injection
+// ---------------------------------------------------------------------
+
+/// Backend that fails on demand.
+struct FlakyBackend {
+    inner: NativeBackend,
+    fail_next: std::cell::Cell<bool>,
+}
+
+impl BlockBackend for FlakyBackend {
+    fn config(&self) -> &StackConfig {
+        self.inner.config()
+    }
+    fn block_sizes(&self) -> &[usize] {
+        self.inner.block_sizes()
+    }
+    fn init_state(&self) -> StreamState {
+        self.inner.init_state()
+    }
+    fn run_block(
+        &mut self,
+        x: &[f32],
+        t: usize,
+        state: &mut StreamState,
+    ) -> Result<Vec<f32>, String> {
+        if self.fail_next.replace(false) {
+            return Err("injected backend failure".into());
+        }
+        self.inner.run_block(x, t, state)
+    }
+    fn weight_bytes_per_block(&self) -> usize {
+        self.inner.weight_bytes_per_block()
+    }
+}
+
+#[test]
+fn backend_failure_is_reported_and_recoverable() {
+    let params = StackParams::init(&CFG, &mut Rng::new(7));
+    let backend = FlakyBackend {
+        inner: NativeBackend::new(NativeStack::new(CFG, params, 32)),
+        fail_next: std::cell::Cell::new(false),
+    };
+    let mut c = Coordinator::new(
+        backend,
+        CoordinatorConfig {
+            policy: PolicyMode::Fixed(4),
+            max_wait: Duration::from_millis(0),
+            max_sessions: 4,
+        },
+    );
+    let id = c.open().unwrap();
+    c.feed(id, &vec![0.0; 4 * CFG.feat]).unwrap();
+    c.backend().fail_next.set(true);
+    let err = c.tick();
+    assert!(err.is_err(), "injected failure must surface");
+    // The coordinator survives: a fresh session still works end-to-end.
+    let id2 = c.open().unwrap();
+    c.feed(id2, &vec![0.0; 8 * CFG.feat]).unwrap();
+    c.tick().unwrap();
+    assert_eq!(c.ready_frames(id2).unwrap(), 8);
+}
+
+#[test]
+fn session_limit_and_unknown_ids() {
+    let mut c = coordinator(PolicyMode::Fixed(4), 100);
+    let _ids: Vec<_> = (0..16).map(|_| c.open().unwrap()).collect();
+    assert!(c.open().is_err(), "17th session must be rejected");
+    assert!(c.feed(9999, &[0.0; 8]).is_err());
+    assert!(c.drain(9999, 1).is_err());
+}
+
+#[test]
+fn ragged_input_rejected_without_state_damage() {
+    let mut c = coordinator(PolicyMode::Fixed(4), 0);
+    let id = c.open().unwrap();
+    assert!(c.feed(id, &[0.0; 5]).is_err(), "5 floats is not a frame");
+    // Session still usable.
+    c.feed(id, &vec![0.0; 4 * CFG.feat]).unwrap();
+    c.tick().unwrap();
+    assert_eq!(c.ready_frames(id).unwrap(), 4);
+}

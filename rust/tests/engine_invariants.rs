@@ -1,0 +1,172 @@
+//! Property tests over the native engines (hand-rolled PRNG sweep —
+//! proptest is unavailable offline).
+//!
+//! Core invariant (the paper's §3 transformation): for ANY block size,
+//! ANY shape and ANY input, multi-time-step processing produces the same
+//! numbers as single-step processing, and any chunking of a stream
+//! produces the same numbers as one pass.
+
+use mtsrnn::engine::{Engine, LstmEngine, LstmMode, QrnnEngine, SruEngine};
+use mtsrnn::models::config::{Arch, ModelConfig};
+use mtsrnn::models::{LstmParams, QrnnParams, SruParams};
+use mtsrnn::util::Rng;
+
+const TRIALS: usize = 30;
+const TOL: f32 = 2e-4;
+
+fn make_engine(arch: Arch, h: usize, d: usize, t: usize, seed: u64) -> Box<dyn Engine> {
+    let cfg = ModelConfig {
+        arch,
+        hidden: h,
+        input: d,
+    };
+    let mut rng = Rng::new(seed);
+    match arch {
+        Arch::Sru => Box::new(SruEngine::new(SruParams::init(&cfg, &mut rng), t)),
+        Arch::Qrnn => Box::new(QrnnEngine::new(QrnnParams::init(&cfg, &mut rng), t)),
+        Arch::Lstm => Box::new(LstmEngine::new(
+            LstmParams::init(&cfg, &mut rng),
+            if t == 1 {
+                LstmMode::SingleStep
+            } else {
+                LstmMode::Precompute(t)
+            },
+        )),
+    }
+}
+
+fn assert_close(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            (x - y).abs() < TOL,
+            "{what}: idx {i}: {x} vs {y} (|Δ|={})",
+            (x - y).abs()
+        );
+    }
+}
+
+#[test]
+fn any_block_size_equals_single_step() {
+    let mut meta = Rng::new(0xFEED);
+    for trial in 0..TRIALS {
+        let arch = [Arch::Sru, Arch::Qrnn, Arch::Lstm][meta.below(3) as usize];
+        let h = 8 + meta.below(56) as usize;
+        // SRU requires square; others may be rectangular.
+        let d = if arch == Arch::Sru {
+            h
+        } else {
+            4 + meta.below(40) as usize
+        };
+        let steps = 1 + meta.below(40) as usize;
+        let t = 1 + meta.below(48) as usize;
+        let seed = meta.next_u64();
+
+        let mut x = vec![0.0; steps * d];
+        Rng::new(seed ^ 1).fill_normal(&mut x, 1.0);
+
+        let mut base = make_engine(arch, h, d, 1, seed);
+        let mut want = vec![0.0; steps * h];
+        base.run_sequence(&x, steps, &mut want);
+
+        let mut eng = make_engine(arch, h, d, t, seed);
+        let mut got = vec![0.0; steps * h];
+        eng.run_sequence(&x, steps, &mut got);
+
+        assert_close(
+            &got,
+            &want,
+            &format!("trial {trial}: {arch:?} h={h} d={d} steps={steps} T={t}"),
+        );
+    }
+}
+
+#[test]
+fn arbitrary_chunking_equals_one_pass() {
+    let mut meta = Rng::new(0xC0FFEE);
+    for trial in 0..TRIALS {
+        let arch = [Arch::Sru, Arch::Qrnn][meta.below(2) as usize];
+        let h = 8 + meta.below(40) as usize;
+        let d = if arch == Arch::Sru { h } else { 8 + meta.below(24) as usize };
+        let steps = 10 + meta.below(50) as usize;
+        let t = 1 + meta.below(16) as usize;
+        let seed = meta.next_u64();
+
+        let mut x = vec![0.0; steps * d];
+        Rng::new(seed).fill_normal(&mut x, 1.0);
+
+        let mut once = make_engine(arch, h, d, t, seed);
+        let mut want = vec![0.0; steps * h];
+        once.run_sequence(&x, steps, &mut want);
+
+        // Random chunk boundaries.
+        let mut chunked = make_engine(arch, h, d, t, seed);
+        let mut got = vec![0.0; steps * h];
+        let mut s = 0;
+        while s < steps {
+            let n = (1 + meta.below(9) as usize).min(steps - s);
+            chunked.run_sequence(
+                &x[s * d..(s + n) * d],
+                n,
+                &mut got[s * h..(s + n) * h],
+            );
+            s += n;
+        }
+        assert_close(&got, &want, &format!("trial {trial}: {arch:?} chunked"));
+    }
+}
+
+#[test]
+fn outputs_are_finite_for_extreme_inputs() {
+    // Saturation robustness: huge inputs must not produce NaN/inf
+    // (sigmoid/tanh saturate; the convex-combination cell update cannot
+    // blow up).
+    for arch in [Arch::Sru, Arch::Qrnn, Arch::Lstm] {
+        let h = 32;
+        let mut eng = make_engine(arch, h, h, 8, 1);
+        for scale in [1e3f32, 1e6, 1e9] {
+            let steps = 16;
+            let x = vec![scale; steps * h];
+            let mut out = vec![0.0; steps * h];
+            eng.run_sequence(&x, steps, &mut out);
+            assert!(
+                out.iter().all(|v| v.is_finite()),
+                "{arch:?} produced non-finite output at scale {scale}"
+            );
+        }
+    }
+}
+
+#[test]
+fn reset_gives_bitwise_reproducibility() {
+    for arch in [Arch::Sru, Arch::Qrnn, Arch::Lstm] {
+        let h = 24;
+        let mut eng = make_engine(arch, h, h, 4, 9);
+        let steps = 13;
+        let mut x = vec![0.0; steps * h];
+        Rng::new(2).fill_normal(&mut x, 1.0);
+        let mut a = vec![0.0; steps * h];
+        let mut b = vec![0.0; steps * h];
+        eng.run_sequence(&x, steps, &mut a);
+        eng.reset();
+        eng.run_sequence(&x, steps, &mut b);
+        assert_eq!(a, b, "{arch:?}: reset must restore exact behaviour");
+    }
+}
+
+#[test]
+fn weight_bytes_accounting_matches_config() {
+    // The DRAM argument rests on this accounting.
+    let h = 64;
+    for (arch, expect) in [
+        (Arch::Sru, 3 * h * h * 4),
+        (Arch::Qrnn, 3 * h * 2 * h * 4),
+    ] {
+        let eng = make_engine(arch, h, h, 16, 3);
+        assert_eq!(
+            eng.weight_bytes_per_block(),
+            expect,
+            "{arch:?} weight bytes"
+        );
+    }
+}

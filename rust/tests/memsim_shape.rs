@@ -1,0 +1,111 @@
+//! Shape-level reproduction checks: the simulated tables must exhibit the
+//! paper's qualitative results (who wins, by roughly what factor, where
+//! the curves saturate) — the criterion DESIGN.md §4 sets for Tables 3/4/
+//! 7/8 and Figures 5/6.
+//!
+//! Paper anchor points (Tables 3–8):
+//!   ARM  SRU large:  T=2 ≈ 190%, T=8 ≈ 575%, T=32 ≈ 1265%
+//!   ARM  SRU small:  T=32 ≈ 1054%
+//!   ARM  QRNN large: T=32 ≈ 1360%
+//!   Intel SRU large: T=32 ≈ 500%
+//! We assert each simulated speedup lands within a generous band (±45%)
+//! of the paper's number — the substrate is a model, not their silicon.
+
+use mtsrnn::bench::tables::sim_ms;
+use mtsrnn::memsim::{ARM_DENVER2, INTEL_I7_3930K};
+use mtsrnn::models::config::{Arch, ModelSize};
+
+const SAMPLES: usize = 512;
+
+fn speedup(cpu: mtsrnn::memsim::CpuSpec, arch: Arch, size: ModelSize, t: usize) -> f64 {
+    sim_ms(cpu, arch, size, 1, SAMPLES) / sim_ms(cpu, arch, size, t, SAMPLES)
+}
+
+fn assert_band(got: f64, paper: f64, what: &str) {
+    let lo = paper * 0.55;
+    let hi = paper * 1.45;
+    assert!(
+        got >= lo && got <= hi,
+        "{what}: simulated {got:.2}x outside [{lo:.2}, {hi:.2}] (paper {paper:.2}x)"
+    );
+}
+
+#[test]
+fn arm_sru_large_matches_paper_band() {
+    assert_band(speedup(ARM_DENVER2, Arch::Sru, ModelSize::Large, 2), 1.897, "ARM SRU-L T=2");
+    assert_band(speedup(ARM_DENVER2, Arch::Sru, ModelSize::Large, 8), 5.753, "ARM SRU-L T=8");
+    assert_band(speedup(ARM_DENVER2, Arch::Sru, ModelSize::Large, 32), 12.654, "ARM SRU-L T=32");
+}
+
+#[test]
+fn arm_sru_small_matches_paper_band() {
+    assert_band(speedup(ARM_DENVER2, Arch::Sru, ModelSize::Small, 16), 8.326, "ARM SRU-S T=16");
+    assert_band(speedup(ARM_DENVER2, Arch::Sru, ModelSize::Small, 32), 10.538, "ARM SRU-S T=32");
+}
+
+#[test]
+fn arm_qrnn_matches_paper_band() {
+    assert_band(speedup(ARM_DENVER2, Arch::Qrnn, ModelSize::Large, 32), 13.603, "ARM QRNN-L T=32");
+    assert_band(speedup(ARM_DENVER2, Arch::Qrnn, ModelSize::Small, 32), 11.049, "ARM QRNN-S T=32");
+}
+
+#[test]
+fn intel_sru_matches_paper_band() {
+    assert_band(speedup(INTEL_I7_3930K, Arch::Sru, ModelSize::Large, 32), 5.006, "Intel SRU-L T=32");
+    assert_band(speedup(INTEL_I7_3930K, Arch::Sru, ModelSize::Small, 32), 4.021, "Intel SRU-S T=32");
+}
+
+#[test]
+fn qualitative_orderings_hold() {
+    // 1. ARM gains > Intel gains (Fig. 5's headline).
+    let arm = speedup(ARM_DENVER2, Arch::Sru, ModelSize::Large, 32);
+    let intel = speedup(INTEL_I7_3930K, Arch::Sru, ModelSize::Large, 32);
+    assert!(arm > 1.5 * intel, "ARM {arm:.1}x vs Intel {intel:.1}x");
+
+    // 2. Large-model gains >= small-model gains on ARM (paper §4).
+    let large = speedup(ARM_DENVER2, Arch::Sru, ModelSize::Large, 32);
+    let small = speedup(ARM_DENVER2, Arch::Sru, ModelSize::Small, 32);
+    assert!(large >= small * 0.95, "large {large:.1}x vs small {small:.1}x");
+
+    // 3. Speedup is monotone non-decreasing up to T=32 on ARM.
+    let mut prev = 0.0;
+    for t in [1usize, 2, 4, 8, 16, 32] {
+        let s = speedup(ARM_DENVER2, Arch::Sru, ModelSize::Large, t);
+        assert!(s >= prev * 0.98, "dip at T={t}: {s:.2} after {prev:.2}");
+        prev = s;
+    }
+
+    // 4. Saturation: T=128 gains little over T=32 (both platforms).
+    for cpu in [ARM_DENVER2, INTEL_I7_3930K] {
+        let s32 = speedup(cpu, Arch::Sru, ModelSize::Large, 32);
+        let s128 = speedup(cpu, Arch::Sru, ModelSize::Large, 128);
+        assert!(
+            s128 < s32 * 1.6,
+            "{}: no saturation ({s32:.1} -> {s128:.1})",
+            cpu.name
+        );
+    }
+
+    // 5. LSTM slower than SRU-1 everywhere (Tables 1-4 row order).
+    for cpu in [ARM_DENVER2, INTEL_I7_3930K] {
+        let lstm = sim_ms(cpu, Arch::Lstm, ModelSize::Small, 1, SAMPLES);
+        let sru1 = sim_ms(cpu, Arch::Sru, ModelSize::Small, 1, SAMPLES);
+        assert!(lstm > sru1, "{}: LSTM {lstm:.0}ms vs SRU-1 {sru1:.0}ms", cpu.name);
+    }
+}
+
+#[test]
+fn absolute_times_right_order_of_magnitude() {
+    // Paper Table 4: ARM SRU-large T=1 is 3652 ms / 1024 samples.
+    let ms = sim_ms(ARM_DENVER2, Arch::Sru, ModelSize::Large, 1, 1024);
+    assert!(
+        ms > 1800.0 && ms < 7500.0,
+        "ARM SRU-L T=1: {ms:.0} ms (paper 3652 ms)"
+    );
+    // Paper Table 2: Intel SRU-large T=1 is 1880 ms.
+    let ms = sim_ms(INTEL_I7_3930K, Arch::Sru, ModelSize::Large, 1, 1024);
+    assert!(
+        ms > 900.0 && ms < 4000.0,
+        "Intel SRU-L T=1: {ms:.0} ms (paper 1880 ms)"
+    );
+}

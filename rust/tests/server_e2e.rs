@@ -1,0 +1,172 @@
+//! End-to-end TCP server test: spawn the full server stack (listener +
+//! inference thread + native backend) on an ephemeral port, speak the
+//! wire protocol as a client, verify logits arrive and stats add up.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use mtsrnn::coordinator::{Coordinator, CoordinatorConfig, NativeBackend, PolicyMode};
+use mtsrnn::engine::NativeStack;
+use mtsrnn::models::config::{Arch, StackConfig};
+use mtsrnn::models::StackParams;
+use mtsrnn::server;
+use mtsrnn::util::Rng;
+
+const CFG: StackConfig = StackConfig {
+    arch: Arch::Sru,
+    feat: 4,
+    hidden: 8,
+    depth: 1,
+    vocab: 3,
+};
+
+fn start_server() -> (u16, Arc<AtomicBool>, std::thread::JoinHandle<()>) {
+    let params = StackParams::init(&CFG, &mut Rng::new(3));
+    let backend = NativeBackend::new(NativeStack::new(CFG, params, 8));
+    let coordinator = Coordinator::new(
+        backend,
+        CoordinatorConfig {
+            policy: PolicyMode::Fixed(4),
+            max_wait: Duration::from_millis(10),
+            max_sessions: 8,
+        },
+    );
+    let handle = server::spawn_inference(coordinator, Duration::from_millis(2));
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let port = listener.local_addr().unwrap().port();
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = stop.clone();
+    let join = std::thread::spawn(move || {
+        server::serve(listener, handle, stop2).unwrap();
+    });
+    (port, stop, join)
+}
+
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    fn connect(port: u16) -> Client {
+        let stream = TcpStream::connect(("127.0.0.1", port)).unwrap();
+        stream
+            .set_read_timeout(Some(Duration::from_secs(10)))
+            .unwrap();
+        Client {
+            reader: BufReader::new(stream.try_clone().unwrap()),
+            writer: stream,
+        }
+    }
+
+    fn call(&mut self, line: &str) -> String {
+        writeln!(self.writer, "{line}").unwrap();
+        let mut resp = String::new();
+        self.reader.read_line(&mut resp).unwrap();
+        resp.trim_end().to_string()
+    }
+}
+
+#[test]
+fn full_session_over_tcp() {
+    let (port, stop, join) = start_server();
+    let mut c = Client::connect(port);
+
+    // OPEN
+    let resp = c.call("OPEN");
+    assert!(resp.starts_with("OK "), "{resp}");
+    let id: u64 = resp[3..].parse().unwrap();
+
+    // FEED 8 frames of 4 floats.
+    let mut frames = String::new();
+    for i in 0..32 {
+        frames.push_str(&format!(" {}", (i as f32) * 0.1));
+    }
+    let resp = c.call(&format!("FEED {id}{frames}"));
+    assert_eq!(resp, "OK 8");
+
+    // POLL until all 8 frames of logits arrive (blocks dispatch async).
+    let mut total = 0usize;
+    for _ in 0..200 {
+        let resp = c.call(&format!("POLL {id} 100"));
+        assert!(resp.starts_with("OK "), "{resp}");
+        let mut it = resp[3..].split_whitespace();
+        let n: usize = it.next().unwrap().parse().unwrap();
+        let vals: Vec<f32> = it.map(|v| v.parse().unwrap()).collect();
+        assert_eq!(vals.len(), n);
+        assert!(vals.iter().all(|v| v.is_finite()));
+        total += n / CFG.vocab;
+        if total == 8 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(total, 8, "all frames must eventually be served");
+
+    // STATS mentions the processed frames.
+    let resp = c.call("STATS");
+    assert!(resp.contains("frames=8"), "{resp}");
+
+    // CLOSE flushes nothing extra (already drained).
+    let resp = c.call(&format!("CLOSE {id}"));
+    assert!(resp.starts_with("OK 0"), "{resp}");
+
+    // Error path: unknown session.
+    let resp = c.call("POLL 777");
+    assert!(resp.starts_with("ERR"), "{resp}");
+    // Protocol garbage.
+    let resp = c.call("BOGUS 1 2 3");
+    assert!(resp.starts_with("ERR"), "{resp}");
+
+    let resp = c.call("QUIT");
+    assert_eq!(resp, "OK bye");
+
+    stop.store(true, Ordering::Relaxed);
+    join.join().unwrap();
+}
+
+#[test]
+fn concurrent_clients_get_isolated_sessions() {
+    let (port, stop, join) = start_server();
+    let handles: Vec<_> = (0..3)
+        .map(|k| {
+            std::thread::spawn(move || {
+                let mut c = Client::connect(port);
+                let resp = c.call("OPEN");
+                let id: u64 = resp[3..].parse().unwrap();
+                // Feed a distinctive constant stream; poll it back.
+                let mut line = format!("FEED {id}");
+                for _ in 0..16 {
+                    line.push_str(&format!(" {}", k as f32 + 1.0));
+                }
+                assert_eq!(c.call(&line), "OK 4");
+                let mut got = 0;
+                for _ in 0..200 {
+                    let resp = c.call(&format!("POLL {id} 100"));
+                    let n: usize = resp[3..]
+                        .split_whitespace()
+                        .next()
+                        .unwrap()
+                        .parse()
+                        .unwrap();
+                    got += n / CFG.vocab;
+                    if got == 4 {
+                        break;
+                    }
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                assert_eq!(got, 4, "client {k}");
+                c.call(&format!("CLOSE {id}"));
+                c.call("QUIT");
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    stop.store(true, Ordering::Relaxed);
+    join.join().unwrap();
+}
