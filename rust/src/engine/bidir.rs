@@ -10,6 +10,11 @@
 //! Bidirectional models cannot be served incrementally (the backward pass
 //! needs the end of the sequence) — this type is deliberately a
 //! whole-sequence API, unlike the streaming `Engine` trait.
+//!
+//! Each direction is an ordinary engine and therefore owns its own
+//! [`crate::linalg::PackedGemm`] weights: both directions' gate GEMMs run
+//! on the packed SIMD path with the fused epilogue, and packing happens
+//! once per direction at construction (not per sequence).
 
 use crate::engine::Engine;
 

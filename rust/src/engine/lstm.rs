@@ -11,7 +11,7 @@
 //!   measures.
 
 use crate::engine::{check_io, Engine};
-use crate::linalg::{fast_sigmoid, fast_tanh, gemm, gemm_bt, gemv, gemv_acc, SMALL_N_CUTOFF};
+use crate::linalg::{fast_sigmoid, fast_tanh, Epilogue, PackedGemm};
 use crate::models::LstmParams;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -23,7 +23,13 @@ pub enum LstmMode {
 
 #[derive(Debug, Clone)]
 pub struct LstmEngine {
-    params: LstmParams,
+    /// `[4H, D]` input-side weights, panel-packed (bias fused into its
+    /// epilogue; activations cannot fuse — `U @ h` accumulates after).
+    pg_w: PackedGemm,
+    /// `[4H, H]` recurrent weights, panel-packed (always `n = 1`).
+    pg_u: PackedGemm,
+    /// `[4H]` gate bias (the row-major params are dropped after packing).
+    b: Vec<f32>,
     mode: LstmMode,
     hidden: usize,
     input: usize,
@@ -32,10 +38,8 @@ pub struct LstmEngine {
     // --- scratch ---
     /// Per-step gate vector `[4H]`.
     g: Vec<f32>,
-    /// Precompute mode: `[4H, T]` input-side gates.
+    /// Precompute mode: `[4H, T]` input-side gates (bias included).
     gx: Vec<f32>,
-    /// Precompute mode: `[D, T]` transposed input block.
-    xt: Vec<f32>,
 }
 
 impl LstmEngine {
@@ -49,13 +53,16 @@ impl LstmEngine {
                 t
             }
         };
+        let pg_w = PackedGemm::new(params.w.data(), 4 * hidden, input);
+        let pg_u = PackedGemm::new(params.u.data(), 4 * hidden, hidden);
         Self {
             g: vec![0.0; 4 * hidden],
             gx: vec![0.0; 4 * hidden * t_block],
-            xt: vec![0.0; input * t_block],
             h: vec![0.0; hidden],
             c: vec![0.0; hidden],
-            params,
+            pg_w,
+            pg_u,
+            b: params.b,
             mode,
             hidden,
             input,
@@ -93,13 +100,11 @@ impl LstmEngine {
         let (d, h) = (self.input, self.hidden);
         for s in 0..steps {
             let xs = &x[s * d..(s + 1) * d];
-            // g = W @ x_t  (weights fetched every step — the bottleneck)
-            gemv(&mut self.g, self.params.w.data(), xs, 4 * h, d);
+            // g = W @ x_t + b  (weights fetched every step — the
+            // bottleneck; bias fused into the packed store).
+            self.pg_w.matmul(&mut self.g, xs, 1, false, &Epilogue::with_bias(&self.b));
             // g += U @ h_{t-1}
-            gemv_acc(&mut self.g, self.params.u.data(), &self.h, 4 * h, h);
-            for (gv, bv) in self.g.iter_mut().zip(&self.params.b) {
-                *gv += bv;
-            }
+            self.pg_u.matmul(&mut self.g, &self.h, 1, true, &Epilogue::NONE);
             self.gate_step(&mut out[s * h..(s + 1) * h]);
         }
     }
@@ -109,29 +114,25 @@ impl LstmEngine {
         let mut s0 = 0;
         while s0 < steps {
             let t = t_block.min(steps - s0);
-            // Batched input side: GX [4H, t] = W @ X — one weight fetch
-            // for t steps (the only part of LSTM that allows this).
-            if t <= SMALL_N_CUTOFF {
-                gemm_bt(
-                    &mut self.gx[..4 * h * t],
-                    self.params.w.data(),
-                    &x[s0 * d..(s0 + t) * d],
-                    4 * h,
-                    d,
-                    t,
-                );
-            } else {
-                let xt = &mut self.xt[..d * t];
-                crate::linalg::transpose_into(&x[s0 * d..(s0 + t) * d], t, d, xt);
-                gemm(&mut self.gx[..4 * h * t], self.params.w.data(), xt, 4 * h, d, t);
-            }
+            // Batched input side: GX [4H, t] = W @ X + b — one weight
+            // fetch for t steps (the only part of LSTM that allows this),
+            // straight off the time-major frames, bias fused.
+            self.pg_w.matmul(
+                &mut self.gx[..4 * h * t],
+                &x[s0 * d..(s0 + t) * d],
+                t,
+                false,
+                &Epilogue::with_bias(&self.b),
+            );
 
             for s in 0..t {
-                // g = GX[:, s] (strided column copy) + U @ h + b.
-                for r in 0..4 * h {
-                    self.g[r] = self.gx[r * t + s] + self.params.b[r];
+                // g = GX[:, s] (strided column copy; bias already in).
+                let gx = &self.gx[..4 * h * t];
+                for (r, gv) in self.g.iter_mut().enumerate() {
+                    *gv = gx[r * t + s];
                 }
-                gemv_acc(&mut self.g, self.params.u.data(), &self.h, 4 * h, h);
+                // g += U @ h_{t-1}
+                self.pg_u.matmul(&mut self.g, &self.h, 1, true, &Epilogue::NONE);
                 self.gate_step(&mut out[(s0 + s) * h..(s0 + s + 1) * h]);
             }
             s0 += t;
@@ -175,7 +176,7 @@ impl Engine for LstmEngine {
     fn weight_bytes_per_block(&self) -> usize {
         // Per block: W once, plus U once per step in the block.
         let t = self.block_size();
-        (self.params.w.len() + t * self.params.u.len()) * std::mem::size_of::<f32>()
+        (self.pg_w.weight_len() + t * self.pg_u.weight_len()) * std::mem::size_of::<f32>()
     }
 }
 

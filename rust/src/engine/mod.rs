@@ -10,6 +10,13 @@
 //! Engines own all scratch buffers: the per-step hot path performs **zero
 //! heap allocation** after construction (verified by the allocation-free
 //! property test in `rust/tests/engine_invariants.rs`).
+//!
+//! Every engine routes its gate GEMM through a
+//! [`crate::linalg::PackedGemm`] handle built at construction: weights
+//! are repacked into SIMD-friendly panels once, the kernel (AVX2 / NEON /
+//! portable) is chosen by one-time runtime detection, bias + gate
+//! activations are fused into the GEMM store, and the small-`T`
+//! crossover is calibrated per weight shape by a one-shot probe.
 
 pub mod bidir;
 pub mod lstm;

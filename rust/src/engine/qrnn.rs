@@ -1,22 +1,20 @@
 //! QRNN engine with multi-time-step parallelization (paper §3.2, Eq. 3).
 //!
-//! The window-2 "convolution" over `[x_t | x_{t-1}]` becomes two GEMMs per
-//! block (current and shifted-previous input columns) — both still enjoy
-//! the once-per-block weight fetch.
+//! The window-2 "convolution" over `[x_t | x_{t-1}]` becomes two packed
+//! GEMMs per block (current and shifted-previous input frames) — both
+//! still enjoy the once-per-block weight fetch, and the second fuses
+//! bias + gate activations into its accumulate-store.
 
 use crate::engine::{check_io, Engine};
-use crate::linalg::{
-    add_row_bias, fast_sigmoid, fast_tanh, gemm, gemm_acc, gemm_bt, gemm_bt_acc,
-    transpose_into, Matrix, SMALL_N_CUTOFF,
-};
+use crate::linalg::{fast_tanh, Epilogue, PackedGemm};
 use crate::models::QrnnParams;
 
 #[derive(Debug, Clone)]
 pub struct QrnnEngine {
-    /// `[3H, D]` weights applied to the current input x_t.
-    w_cur: Matrix,
-    /// `[3H, D]` weights applied to the previous input x_{t-1}.
-    w_prev: Matrix,
+    /// `[3H, D]` packed weights applied to the current input x_t.
+    pg_cur: PackedGemm,
+    /// `[3H, D]` packed weights applied to the previous input x_{t-1}.
+    pg_prev: PackedGemm,
     b: Vec<f32>,
     t_block: usize,
     hidden: usize,
@@ -26,9 +24,9 @@ pub struct QrnnEngine {
     /// Carried previous input `x_{-1}` for the next block (`[D]`).
     x_carry: Vec<f32>,
     // --- scratch ---
-    xt: Vec<f32>,      // [D, T] current columns
-    xt_prev: Vec<f32>, // [D, T] previous columns (shifted)
-    gates: Vec<f32>,   // [3H, T]
+    /// `[T, D]` shifted previous frames: `[x_carry ; x_0 .. x_{t-2}]`.
+    x_prev: Vec<f32>,
+    gates: Vec<f32>, // [3H, T]
 }
 
 impl QrnnEngine {
@@ -36,21 +34,29 @@ impl QrnnEngine {
         assert!(t_block >= 1, "block size must be >= 1");
         let hidden = params.hidden();
         let input = params.input();
-        // Split the stacked [3H, 2D] weight into contiguous halves once at
-        // construction; the hot path then runs two clean GEMMs.
-        let w_cur = Matrix::from_fn(3 * hidden, input, |r, c| params.w.at(r, c));
-        let w_prev = Matrix::from_fn(3 * hidden, input, |r, c| params.w.at(r, c + input));
+        // Split the stacked [3H, 2D] weight into its two conv taps and
+        // panel-pack each once at construction; the hot path then runs
+        // two packed GEMMs straight off the time-major frames.
+        let mut w_cur = vec![0.0; 3 * hidden * input];
+        let mut w_prev = vec![0.0; 3 * hidden * input];
+        for r in 0..3 * hidden {
+            for c in 0..input {
+                w_cur[r * input + c] = params.w.at(r, c);
+                w_prev[r * input + c] = params.w.at(r, c + input);
+            }
+        }
+        let pg_cur = PackedGemm::new(&w_cur, 3 * hidden, input);
+        let pg_prev = PackedGemm::new(&w_prev, 3 * hidden, input);
         Self {
-            w_cur,
-            w_prev,
+            pg_cur,
+            pg_prev,
             b: params.b.clone(),
             t_block,
             hidden,
             input,
             c: vec![0.0; hidden],
             x_carry: vec![0.0; input],
-            xt: vec![0.0; input * t_block],
-            xt_prev: vec![0.0; input * t_block],
+            x_prev: vec![0.0; input * t_block],
             gates: vec![0.0; 3 * hidden * t_block],
         }
     }
@@ -70,35 +76,26 @@ impl QrnnEngine {
         let (h, d) = (self.hidden, self.input);
         debug_assert!(t >= 1 && t <= self.t_block);
 
+        // The shifted "previous" frames are a contiguous time-major
+        // copy: [carry ; x_0 .. x_{t-2}] — both conv taps then run as
+        // packed GEMMs straight off time-major frames (Eq. 4 applied to
+        // both taps, no transpose).  The second GEMM accumulates into
+        // the first and fuses bias + tanh/sigmoid/sigmoid at its store.
         let gates = &mut self.gates[..3 * h * t];
-        if t <= SMALL_N_CUTOFF {
-            // Small blocks: multi-dot directly on the time-major frames.
-            // The shifted "previous" frames are a contiguous copy:
-            // [carry ; x[0..t-1]].
-            let xp = &mut self.xt_prev[..t * d];
-            xp[..d].copy_from_slice(&self.x_carry);
-            xp[d..t * d].copy_from_slice(&x[..(t - 1) * d]);
-            gemm_bt(gates, self.w_cur.data(), &x[..t * d], 3 * h, d, t);
-            gemm_bt_acc(gates, self.w_prev.data(), xp, 3 * h, d, t);
-        } else {
-            // Current input columns [D, T].
-            let xt = &mut self.xt[..d * t];
-            transpose_into(&x[..t * d], t, d, xt);
-            // Previous input columns: row-wise shift by one step,
-            // injecting the carry from the previous block at column 0.
-            let xt_prev = &mut self.xt_prev[..d * t];
-            for row in 0..d {
-                xt_prev[row * t] = self.x_carry[row];
-                xt_prev[row * t + 1..row * t + t]
-                    .copy_from_slice(&xt[row * t..row * t + t - 1]);
-            }
-            // Two GEMMs (Eq. 4 applied to both conv taps).
-            gemm(gates, self.w_cur.data(), xt, 3 * h, d, t);
-            gemm_acc(gates, self.w_prev.data(), xt_prev, 3 * h, d, t);
-        }
-        add_row_bias(gates, &self.b, 3 * h, t);
+        let xp = &mut self.x_prev[..t * d];
+        xp[..d].copy_from_slice(&self.x_carry);
+        xp[d..t * d].copy_from_slice(&x[..(t - 1) * d]);
+        self.pg_cur.matmul(gates, &x[..t * d], t, false, &Epilogue::NONE);
+        self.pg_prev.matmul(
+            gates,
+            xp,
+            t,
+            true,
+            &Epilogue::fused(&self.b, &QrnnParams::GATE_ACTS),
+        );
 
-        // fo-pooling remainder, unit-outer for contiguous gate rows.
+        // fo-pooling remainder, unit-outer for contiguous gate rows; all
+        // three gate rows arrive pre-activated from the epilogue.
         let (gx, gfo) = gates.split_at(h * t);
         let (gf, go) = gfo.split_at(h * t);
         for i in 0..h {
@@ -107,11 +104,9 @@ impl QrnnEngine {
             let f_row = &gf[i * t..i * t + t];
             let o_row = &go[i * t..i * t + t];
             for s in 0..t {
-                let xhat = fast_tanh(xh_row[s]);
-                let f = fast_sigmoid(f_row[s]);
-                let o = fast_sigmoid(o_row[s]);
-                c = f * c + (1.0 - f) * xhat;
-                out[s * h + i] = o * fast_tanh(c);
+                let f = f_row[s];
+                c = f * c + (1.0 - f) * xh_row[s];
+                out[s * h + i] = o_row[s] * fast_tanh(c);
             }
             self.c[i] = c;
         }
@@ -156,7 +151,7 @@ impl Engine for QrnnEngine {
     }
 
     fn weight_bytes_per_block(&self) -> usize {
-        (self.w_cur.len() + self.w_prev.len()) * std::mem::size_of::<f32>()
+        (self.pg_cur.weight_len() + self.pg_prev.weight_len()) * std::mem::size_of::<f32>()
     }
 }
 

@@ -12,7 +12,9 @@
 //! Weight DRAM traffic drops another **4×** on top of the paper's
 //! multi-time-step amortization — the two effects multiply: at T=32 with
 //! int8, each f32 weight's worth of DRAM traffic serves 128 time steps.
-//! Dequantization happens in registers inside the dot kernel.
+//! Dequantization happens in registers inside the packed panel kernel
+//! (`linalg::PackedQuantGemm`); the per-row scale is fused into the
+//! store epilogue alongside bias and gate activations.
 //!
 //! Accuracy: per-row scaling bounds the quantization error at 0.5 LSB ≈
 //! 0.4% of the row's max weight; the end-to-end output error against the
@@ -20,7 +22,7 @@
 //! useful resolution for realistic weight scales).
 
 use crate::engine::{check_io, Engine};
-use crate::linalg::{add_row_bias, fast_sigmoid, fast_tanh};
+use crate::linalg::{fast_tanh, Epilogue, PackedQuantGemm};
 use crate::models::SruParams;
 
 /// Per-row symmetric int8 quantization of a `[rows, cols]` f32 matrix.
@@ -35,6 +37,12 @@ pub struct QuantMatrix {
 }
 
 impl QuantMatrix {
+    /// Quantize row-by-row.  An **all-zero row gets scale `1.0`**: every
+    /// quantized value in such a row is 0 and dequantizes to exactly
+    /// `0.0` under *any* positive scale, so the choice is arbitrary for
+    /// correctness — `1.0` simply keeps the scale finite and non-zero so
+    /// downstream `q * scale` / error math never divides by or multiplies
+    /// with 0/inf (property-tested below).
     pub fn quantize(data: &[f32], rows: usize, cols: usize) -> Self {
         assert_eq!(data.len(), rows * cols);
         let mut q = vec![0i8; rows * cols];
@@ -87,32 +95,18 @@ impl QuantMatrix {
     }
 }
 
-/// Dot of a quantized row against `n` f32 frames: the weight byte is
-/// loaded once (1/4 the f32 traffic) and used for all frames.
-#[inline]
-fn dot_q(qrow: &[i8], scale: f32, x: &[f32]) -> f32 {
-    debug_assert_eq!(qrow.len(), x.len());
-    let mut acc = [0f32; 8];
-    let chunks = qrow.len() / 8;
-    for i in 0..chunks {
-        let q8 = &qrow[i * 8..i * 8 + 8];
-        let x8 = &x[i * 8..i * 8 + 8];
-        for l in 0..8 {
-            acc[l] += q8[l] as f32 * x8[l];
-        }
-    }
-    let mut s =
-        (acc[0] + acc[4]) + (acc[1] + acc[5]) + (acc[2] + acc[6]) + (acc[3] + acc[7]);
-    for i in chunks * 8..qrow.len() {
-        s += qrow[i] as f32 * x[i];
-    }
-    s * scale
-}
-
 /// SRU engine with int8 weights (same recurrence, same API).
+///
+/// The gate GEMM runs through a [`PackedQuantGemm`]: int8 panels in the
+/// same k-major layout as the f32 engines, each weight byte fetched once
+/// per block and widened in registers, with the per-row dequant scale +
+/// bias + f/r sigmoids all fused into the single store pass.
 #[derive(Debug, Clone)]
 pub struct QuantSruEngine {
-    w: QuantMatrix,
+    /// Panel-packed int8 weights — the only copy the engine retains
+    /// (the intermediate [`QuantMatrix`] is dropped after packing, so
+    /// the resident int8 footprint stays one copy).
+    pq: PackedQuantGemm,
     b3: Vec<f32>,
     t_block: usize,
     hidden: usize,
@@ -127,8 +121,10 @@ impl QuantSruEngine {
         assert_eq!(hidden, params.input(), "SRU requires square weights");
         let mut b3 = vec![0.0; 3 * hidden];
         b3[hidden..].copy_from_slice(&params.b);
+        let w = QuantMatrix::quantize(params.w.data(), 3 * hidden, hidden);
+        let pq = PackedQuantGemm::new(&w.q, &w.scales, 3 * hidden, hidden);
         Self {
-            w: QuantMatrix::quantize(params.w.data(), 3 * hidden, hidden),
+            pq,
             b3,
             t_block,
             hidden,
@@ -137,33 +133,44 @@ impl QuantSruEngine {
         }
     }
 
+    /// Max absolute quantization error vs the original f32 weights,
+    /// computed straight from the panel layout.
     pub fn quant_error(&self, params: &SruParams) -> f32 {
-        self.w.max_error(params.w.data())
+        let (m, k) = (self.pq.m(), self.pq.k());
+        let mut max = 0.0f32;
+        for r in 0..m {
+            for c in 0..k {
+                max = max.max((self.pq.dequant(r, c) - params.w.at(r, c)).abs());
+            }
+        }
+        max
     }
 
     fn forward_block(&mut self, x: &[f32], t: usize, out: &mut [f32]) {
         let h = self.hidden;
         let d = h;
-        // Gate "GEMM": quantized multi-dot over time-major frames — each
-        // int8 weight row fetched once, used for all t frames.
+        // Quantized gate GEMM over time-major frames — each int8 weight
+        // byte fetched once per block; scale, bias and the f/r sigmoids
+        // applied in the store epilogue (xhat rows stay raw, like the
+        // f32 engine).
         let gates = &mut self.gates[..3 * h * t];
-        for r in 0..3 * h {
-            let qrow = &self.w.q[r * d..(r + 1) * d];
-            let scale = self.w.scales[r];
-            for j in 0..t {
-                gates[r * t + j] = dot_q(qrow, scale, &x[j * d..(j + 1) * d]);
-            }
-        }
-        add_row_bias(gates, &self.b3, 3 * h, t);
+        self.pq.matmul(
+            gates,
+            &x[..t * d],
+            t,
+            false,
+            &Epilogue::fused(&self.b3, &SruParams::GATE_ACTS),
+        );
 
-        // Identical fo/highway recurrence to the f32 engine.
+        // Identical fo/highway recurrence to the f32 engine; f/r arrive
+        // pre-sigmoided.
         let (gx, gfr) = gates.split_at(h * t);
         let (gf, gr) = gfr.split_at(h * t);
         for i in 0..h {
             let mut c = self.c[i];
             for s in 0..t {
-                let f = fast_sigmoid(gf[i * t + s]);
-                let r = fast_sigmoid(gr[i * t + s]);
+                let f = gf[i * t + s];
+                let r = gr[i * t + s];
                 c = f * c + (1.0 - f) * gx[i * t + s];
                 out[s * h + i] = r * fast_tanh(c) + (1.0 - r) * x[s * d + i];
             }
@@ -206,7 +213,7 @@ impl Engine for QuantSruEngine {
     }
 
     fn weight_bytes_per_block(&self) -> usize {
-        self.w.weight_bytes()
+        self.pq.weight_bytes()
     }
 }
 
@@ -247,6 +254,18 @@ mod tests {
         let e = QuantSruEngine::new(&p, 4);
         let f32_bytes = 3 * 32 * 32 * 4;
         assert_eq!(e.weight_bytes_per_block(), f32_bytes / 4 + 3 * 32 * 4);
+    }
+
+    #[test]
+    fn engine_quant_error_matches_matrix_oracle() {
+        // The engine reads dequantized values from the panel layout; its
+        // max error must equal the row-major QuantMatrix computation
+        // exactly (same value set, max is order-independent).
+        let p = params(32, 9);
+        let e = QuantSruEngine::new(&p, 2);
+        let q = QuantMatrix::quantize(p.w.data(), 96, 32);
+        assert_eq!(e.quant_error(&p), q.max_error(p.w.data()));
+        assert!(e.quant_error(&p) > 0.0);
     }
 
     #[test]
@@ -305,5 +324,45 @@ mod tests {
         let q = QuantMatrix::quantize(p.w.data(), 24, 8);
         assert_eq!(q.dequant(0, 0), 0.0);
         assert_eq!(q.max_error(p.w.data()), 0.0);
+    }
+
+    #[test]
+    fn zero_rows_and_extreme_rows_quantize_exactly() {
+        // Row 0: all zero (the documented scale-1.0 convention).
+        // Row 1: single extreme positive value among zeros.
+        // Row 2: single extreme negative value among tiny values.
+        // Row 3: uniform tiny values (scale far below 1).
+        let cols = 16;
+        let mut data = vec![0.0f32; 4 * cols];
+        data[cols + 7] = 1000.0;
+        for (i, v) in data[2 * cols..3 * cols].iter_mut().enumerate() {
+            *v = (i as f32 - 8.0) * 1e-6;
+        }
+        data[2 * cols + 3] = -500.0;
+        for v in data[3 * cols..].iter_mut() {
+            *v = 3e-5;
+        }
+        let q = QuantMatrix::quantize(&data, 4, cols);
+
+        // Zero row: scale is exactly 1.0, every value dequantizes to 0.
+        assert_eq!(q.scales[0], 1.0);
+        for c in 0..cols {
+            assert_eq!(q.dequant(0, c), 0.0);
+        }
+        // Spike rows: the extreme maps to +/-127 exactly, zeros stay 0,
+        // and the per-row half-LSB error bound holds.
+        assert_eq!(q.q[cols + 7], 127);
+        assert!((q.dequant(1, 7) - 1000.0).abs() <= 1000.0 / 254.0);
+        assert_eq!(q.dequant(1, 0), 0.0);
+        assert_eq!(q.q[2 * cols + 3], -127);
+        assert!((q.dequant(2, 3) + 500.0).abs() <= 500.0 / 254.0);
+        // The tiny values around a +/-500 spike are crushed to 0 —
+        // that is the per-row scheme's documented resolution limit.
+        assert_eq!(q.dequant(2, 0), 0.0);
+        // Tiny uniform row: scale adapts downward, values survive.
+        assert!(q.scales[3] < 1e-6);
+        assert!((q.dequant(3, 0) - 3e-5).abs() <= 3e-5 / 254.0 + 1e-9);
+        // Global bound.
+        assert!(q.max_error(&data) <= 1000.0 / 254.0 + 1e-6);
     }
 }

@@ -1,25 +1,27 @@
 //! SRU engine with multi-time-step parallelization (paper §3.2, Eq. 2/4).
 
 use crate::engine::{check_io, Engine};
-use crate::linalg::{
-    add_row_bias, fast_sigmoid, fast_tanh, gemm, gemm_bt, transpose_into,
-    SMALL_N_CUTOFF,
-};
+use crate::linalg::{fast_tanh, Epilogue, PackedGemm};
 use crate::models::SruParams;
 
 /// Single-stream SRU inference with block size `t_block`.
+///
+/// The row-major `SruParams` are consumed at construction: only the
+/// packed panels (plus the stacked bias) are retained, so the resident
+/// weight footprint stays one copy.
 #[derive(Debug, Clone)]
 pub struct SruEngine {
-    params: SruParams,
+    /// `[3H, D]` gate weights, panel-packed once at construction; carries
+    /// the dispatched SIMD kernel and the calibrated small-`T` crossover.
+    pg: PackedGemm,
     t_block: usize,
     hidden: usize,
     input: usize,
     /// Recurrent cell state `c` (`[H]`).
     c: Vec<f32>,
     // --- preallocated scratch (no allocation on the hot path) ---
-    /// Transposed input block `[D, T]` (column per step).
-    xt: Vec<f32>,
-    /// Gate pre-activations `[3H, T]` (rows: xhat, f, r).
+    /// Gate matrix `[3H, T]` (rows: raw xhat, sigmoid(f), sigmoid(r) —
+    /// bias and gate activations are fused into the GEMM epilogue).
     gates: Vec<f32>,
     /// Stacked bias `[3H]`: zeros for xhat, then b_f, b_r.
     b3: Vec<f32>,
@@ -36,12 +38,12 @@ impl SruEngine {
         );
         let mut b3 = vec![0.0; 3 * hidden];
         b3[hidden..].copy_from_slice(&params.b);
+        let pg = PackedGemm::new(params.w.data(), 3 * hidden, input);
         Self {
             c: vec![0.0; hidden],
-            xt: vec![0.0; input * t_block],
             gates: vec![0.0; 3 * hidden * t_block],
             b3,
-            params,
+            pg,
             t_block,
             hidden,
             input,
@@ -64,24 +66,23 @@ impl SruEngine {
         let (h, d) = (self.hidden, self.input);
         debug_assert!(t >= 1 && t <= self.t_block);
 
-        // (1) Eq. (4): one GEMM computes all three gates for all t steps.
-        //     Each weight row is fetched from DRAM once per block instead
-        //     of once per step — the paper's entire effect.
+        // (1) Eq. (4): one packed GEMM computes all three gates for all t
+        //     steps — each weight fetched from DRAM once per block (the
+        //     paper's entire effect), streamed unit-stride from the
+        //     panels, with bias + f/r sigmoids fused into the store.
         let gates = &mut self.gates[..3 * h * t];
-        if t <= SMALL_N_CUTOFF {
-            // Small blocks: multi-dot against the time-major frames
-            // directly (no transpose; K-vectorized at any T).
-            gemm_bt(gates, self.params.w.data(), &x[..t * d], 3 * h, d, t);
-        } else {
-            let xt = &mut self.xt[..d * t];
-            transpose_into(&x[..t * d], t, d, xt);
-            gemm(gates, self.params.w.data(), xt, 3 * h, d, t);
-        }
-        add_row_bias(gates, &self.b3, 3 * h, t);
+        self.pg.matmul(
+            gates,
+            &x[..t * d],
+            t,
+            false,
+            &Epilogue::fused(&self.b3, &SruParams::GATE_ACTS),
+        );
 
         // (2) The sequential remainder (element-wise, per hidden unit).
         //     Each unit's c-chain is independent, so we iterate units in
-        //     the outer loop: gate rows are then read contiguously.
+        //     the outer loop: gate rows are then read contiguously.  The
+        //     f/r rows are already sigmoided by the epilogue.
         let (gx, gfr) = gates.split_at(h * t);
         let (gf, gr) = gfr.split_at(h * t);
         for i in 0..h {
@@ -90,8 +91,8 @@ impl SruEngine {
             let f_row = &gf[i * t..i * t + t];
             let r_row = &gr[i * t..i * t + t];
             for s in 0..t {
-                let f = fast_sigmoid(f_row[s]);
-                let r = fast_sigmoid(r_row[s]);
+                let f = f_row[s];
+                let r = r_row[s];
                 c = f * c + (1.0 - f) * xh_row[s];
                 // Highway term uses the raw input (time-major read).
                 out[s * h + i] = r * fast_tanh(c) + (1.0 - r) * x[s * d + i];
@@ -135,7 +136,7 @@ impl Engine for SruEngine {
     }
 
     fn weight_bytes_per_block(&self) -> usize {
-        self.params.w.len() * std::mem::size_of::<f32>()
+        self.pg.weight_len() * std::mem::size_of::<f32>()
     }
 }
 

@@ -7,9 +7,12 @@
 //! caller swaps in and out, so one weight set serves many sessions.
 
 use crate::engine::{Engine, QrnnEngine, SruEngine};
-use crate::linalg::{add_row_bias, gemm, transpose_into, Matrix};
+use crate::linalg::{Act, Epilogue, PackedGemm};
 use crate::models::config::{Arch, StackConfig};
 use crate::models::StackParams;
+
+/// The projection activation, fused into its GEMM epilogue.
+const PROJ_ACTS: [Act; 1] = [Act::Tanh];
 
 /// Per-stream recurrent state: one entry per state tensor, in the same
 /// order as `python/compile/model.py::stack_flat_order` (c per layer,
@@ -41,19 +44,20 @@ impl StreamState {
 /// all sessions via state swap-in/swap-out.
 pub struct NativeStack {
     cfg: StackConfig,
-    proj_w: Matrix,
+    /// `[H, feat]` projection weights, panel-packed (tanh+bias fused).
+    pg_proj: PackedGemm,
     proj_b: Vec<f32>,
-    head_w: Matrix,
+    /// `[vocab, H]` head weights, panel-packed (bias fused).
+    pg_head: PackedGemm,
     head_b: Vec<f32>,
     sru: Vec<SruEngine>,
     qrnn: Vec<QrnnEngine>,
     max_block: usize,
     // scratch
-    xt: Vec<f32>,     // [feat, T]
-    hcur: Vec<f32>,   // [T, H]
-    hnext: Vec<f32>,  // [T, H]
-    proj: Vec<f32>,   // [H, T] projection output (column per step)
-    logit: Vec<f32>,  // [vocab, T]
+    hcur: Vec<f32>,  // [T, H]
+    hnext: Vec<f32>, // [T, H]
+    proj: Vec<f32>,  // [H, T] projection output (column per step)
+    logit: Vec<f32>, // [vocab, T]
 }
 
 impl NativeStack {
@@ -77,15 +81,16 @@ impl NativeStack {
             }
             Arch::Lstm => panic!("stack supports sru/qrnn only"),
         }
+        let pg_proj = PackedGemm::new(params.proj_w.data(), h, cfg.feat);
+        let pg_head = PackedGemm::new(params.head_w.data(), cfg.vocab, h);
         Self {
-            proj_w: params.proj_w,
+            pg_proj,
             proj_b: params.proj_b,
-            head_w: params.head_w,
+            pg_head,
             head_b: params.head_b,
             sru,
             qrnn,
             max_block,
-            xt: vec![0.0; cfg.feat * max_block],
             hcur: vec![0.0; h * max_block],
             hnext: vec![0.0; h * max_block],
             proj: vec![0.0; h * max_block],
@@ -158,18 +163,22 @@ impl NativeStack {
 
         self.load_state(state);
 
-        // Input projection: [H, t] = proj_w @ X^T + b; tanh; then convert
-        // to time-major [t, H] for the recurrent layers.
-        let xt = &mut self.xt[..feat * t];
-        transpose_into(&x[..t * feat], t, feat, xt);
+        // Input projection: [H, t] = tanh(proj_w @ X^T + b), computed by
+        // the packed GEMM straight off the time-major frames with bias
+        // and tanh fused into its store; then convert to time-major
+        // [t, H] for the recurrent layers (a plain transpose copy).
         let proj = &mut self.proj[..h * t];
-        gemm(proj, self.proj_w.data(), xt, h, feat, t);
-        add_row_bias(proj, &self.proj_b, h, t);
+        self.pg_proj.matmul(
+            proj,
+            &x[..t * feat],
+            t,
+            false,
+            &Epilogue::fused(&self.proj_b, &PROJ_ACTS),
+        );
         let hcur = &mut self.hcur[..t * h];
-        // transpose [H, t] -> [t, H] with tanh fused.
         for r in 0..h {
             for s in 0..t {
-                hcur[s * h + r] = proj[r * t + s].tanh();
+                hcur[s * h + r] = proj[r * t + s];
             }
         }
 
@@ -183,12 +192,17 @@ impl NativeStack {
             std::mem::swap(&mut self.hcur, &mut self.hnext);
         }
 
-        // Output head: logits [vocab, t] = head_w @ H^T + b.
-        let ht = &mut self.hnext[..t * h]; // reuse as [H, t] transpose buffer
-        transpose_into(&self.hcur[..t * h], t, h, ht);
+        // Output head: logits [vocab, t] = head_w @ H^T + b — the packed
+        // GEMM consumes the time-major hidden frames directly (the old
+        // [t, H] -> [H, t] transpose is gone), bias fused.
         let logit = &mut self.logit[..vocab * t];
-        gemm(logit, self.head_w.data(), ht, vocab, h, t);
-        add_row_bias(logit, &self.head_b, vocab, t);
+        self.pg_head.matmul(
+            logit,
+            &self.hcur[..t * h],
+            t,
+            false,
+            &Epilogue::with_bias(&self.head_b),
+        );
         for s in 0..t {
             for v in 0..vocab {
                 logits_out[s * vocab + v] = logit[v * t + s];

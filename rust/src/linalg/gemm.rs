@@ -15,6 +15,12 @@
 //! `MR = 4` rows of `A` are processed together; the inner loop runs over
 //! the contiguous `B` row so it auto-vectorizes (verified: produces packed
 //! FMA under `-C target-cpu` defaults; see EXPERIMENTS.md §Perf).
+//!
+//! These row-major kernels are no longer the engine hot path: the packed
+//! SIMD subsystem in [`crate::linalg::pack`] supersedes them there.  They
+//! remain as (1) the loop structure the memsim traffic model mirrors,
+//! (2) the baseline the construction-time crossover probe times against,
+//! and (3) the `gemm_bt` fallback that probe can select at tiny `N`.
 
 /// Rows of A processed per microkernel pass.
 pub const MR: usize = 4;
@@ -67,8 +73,10 @@ pub fn gemm_acc(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usiz
 }
 
 /// Register-tile width (f32 columns held in accumulators per pass).
-/// `MR x NR` = 4x32 f32 accumulators = 8 AVX-512 zmm — fits
-/// the register file with room for the broadcast A values and B loads.
+/// `MR x NR` = 4x16 f32 accumulators = 8 AVX2 ymm (or 4 AVX-512 zmm) —
+/// fits the 16-register ymm file with room for the broadcast A values
+/// and B loads.  (The packed kernels in `linalg::kernels` use taller
+/// row-major-lane tiles instead: 16x6 for AVX2, 16x4 for NEON/portable.)
 pub const NR: usize = 16;
 
 /// 4 rows of A against the full N width for one K-stripe.

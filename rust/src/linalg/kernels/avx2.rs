@@ -1,0 +1,99 @@
+//! AVX2+FMA microkernel: 16-row panels x 6-column register tile.
+//!
+//! Per k step: two 8-lane unit-stride panel loads plus one broadcast per
+//! frame column feed `2 * NR` independent FMA chains — at `NR = 6` that
+//! is 12 ymm accumulators + 2 panel registers + 1 broadcast register,
+//! filling the 16-register ymm file (the classic GEBP shape).  The tile
+//! is spilled to a 384-byte stack buffer once per full-K sweep and the
+//! epilogue-fused store runs from there; at K >= 256 the spill is noise.
+
+use core::arch::x86_64::{
+    _mm256_fmadd_ps, _mm256_loadu_ps, _mm256_set1_ps, _mm256_setzero_ps, _mm256_storeu_ps,
+};
+
+use super::store_tile;
+use crate::linalg::pack::{Epilogue, PACK_MR};
+
+/// Register-tile width (frame columns per microkernel pass).
+pub(crate) const NR: usize = 6;
+
+macro_rules! def_kern {
+    ($name:ident, $nr:literal) => {
+        /// # Safety
+        /// Requires avx2+fma.  `panel` must hold `k * PACK_MR` floats and
+        /// `x` must hold at least `(j0 + $nr) * k` floats.
+        #[target_feature(enable = "avx2,fma")]
+        #[allow(clippy::needless_range_loop, clippy::single_element_loop)]
+        unsafe fn $name(
+            panel: *const f32,
+            x: *const f32,
+            k: usize,
+            j0: usize,
+            tile: &mut [[f32; PACK_MR]; NR],
+        ) {
+            let mut acc0 = [_mm256_setzero_ps(); $nr];
+            let mut acc1 = [_mm256_setzero_ps(); $nr];
+            let mut frames = [x; $nr];
+            for (jj, f) in frames.iter_mut().enumerate() {
+                *f = x.add((j0 + jj) * k);
+            }
+            for kk in 0..k {
+                let a0 = _mm256_loadu_ps(panel.add(kk * PACK_MR));
+                let a1 = _mm256_loadu_ps(panel.add(kk * PACK_MR + 8));
+                for jj in 0..$nr {
+                    let b = _mm256_set1_ps(*frames[jj].add(kk));
+                    acc0[jj] = _mm256_fmadd_ps(a0, b, acc0[jj]);
+                    acc1[jj] = _mm256_fmadd_ps(a1, b, acc1[jj]);
+                }
+            }
+            for jj in 0..$nr {
+                _mm256_storeu_ps(tile[jj].as_mut_ptr(), acc0[jj]);
+                _mm256_storeu_ps(tile[jj].as_mut_ptr().add(8), acc1[jj]);
+            }
+        }
+    };
+}
+
+def_kern!(kern1, 1);
+def_kern!(kern2, 2);
+def_kern!(kern3, 3);
+def_kern!(kern4, 4);
+def_kern!(kern5, 5);
+def_kern!(kern6, 6);
+
+/// # Safety
+/// Requires avx2+fma (guaranteed by the `detect()` gate in the
+/// dispatcher).  Slice sizes are checked by `PackedGemm::matmul`.
+#[target_feature(enable = "avx2,fma")]
+#[allow(clippy::too_many_arguments)]
+pub(crate) unsafe fn matmul(
+    panels: &[f32],
+    c: &mut [f32],
+    x: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    acc: bool,
+    epi: &Epilogue,
+) {
+    debug_assert_eq!(panels.len(), m.div_ceil(PACK_MR) * PACK_MR * k);
+    let mut tile = [[0f32; PACK_MR]; NR];
+    for pi in 0..m.div_ceil(PACK_MR) {
+        let panel = panels[pi * PACK_MR * k..].as_ptr();
+        let xp = x.as_ptr();
+        let mut j0 = 0;
+        while j0 < n {
+            let nr = NR.min(n - j0);
+            match nr {
+                6 => kern6(panel, xp, k, j0, &mut tile),
+                5 => kern5(panel, xp, k, j0, &mut tile),
+                4 => kern4(panel, xp, k, j0, &mut tile),
+                3 => kern3(panel, xp, k, j0, &mut tile),
+                2 => kern2(panel, xp, k, j0, &mut tile),
+                _ => kern1(panel, xp, k, j0, &mut tile),
+            }
+            store_tile(c, &tile, j0, nr, pi * PACK_MR, m, n, acc, None, epi);
+            j0 += nr;
+        }
+    }
+}

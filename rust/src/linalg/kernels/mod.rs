@@ -1,0 +1,138 @@
+//! Runtime-dispatched GEMM microkernels over packed weight panels.
+//!
+//! All kernels share one contract: `A` is packed into `PACK_MR`-row
+//! panels stored k-major (see [`crate::linalg::pack::PackedMatrix`]),
+//! `X` holds `n` time-major frames of length `k` (the engines' natural
+//! input layout — no transpose anywhere), and `C` is `[m, n]` row-major.
+//!
+//! Each kernel computes a `PACK_MR x NR` register tile with SIMD lanes
+//! along the **row** dimension: per k step it issues unit-stride panel
+//! loads plus one broadcast per frame column, so every FMA chain is
+//! independent and the weight stream is purely sequential — the access
+//! pattern the paper's "fetch each weight once per block" argument
+//! wants from the hardware prefetcher.  The finished tile is handed to
+//! [`store_tile`], which fuses the accumulate / dequant-scale / bias /
+//! activation epilogue into the single store pass over `C`.
+//!
+//! Dispatch is decided once per process by [`detect`]:
+//! AVX2+FMA (`is_x86_feature_detected!`) > NEON (aarch64) > portable.
+//! The portable kernel doubles as the correctness oracle for the
+//! intrinsic paths (see `rust/tests/packed_gemm_parity.rs`).
+
+#[cfg(target_arch = "x86_64")]
+pub mod avx2;
+#[cfg(target_arch = "aarch64")]
+pub mod neon;
+pub mod portable;
+
+use std::sync::OnceLock;
+
+use crate::linalg::pack::{Epilogue, PACK_MR};
+
+/// Which microkernel family [`detect`] selected for this process.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Simd {
+    /// x86-64 AVX2 + FMA intrinsics (16x6 register tile).
+    Avx2,
+    /// aarch64 NEON intrinsics (16x4 register tile).
+    Neon,
+    /// Autovectorized fallback (16x4 tile) — also the correctness oracle.
+    Portable,
+}
+
+impl Simd {
+    pub fn name(self) -> &'static str {
+        match self {
+            Simd::Avx2 => "avx2",
+            Simd::Neon => "neon",
+            Simd::Portable => "portable",
+        }
+    }
+}
+
+/// One-time runtime CPU feature detection (cached for the process).
+pub fn detect() -> Simd {
+    static LEVEL: OnceLock<Simd> = OnceLock::new();
+    *LEVEL.get_or_init(|| {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+                return Simd::Avx2;
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            if std::arch::is_aarch64_feature_detected!("neon") {
+                return Simd::Neon;
+            }
+        }
+        Simd::Portable
+    })
+}
+
+/// `c[m, n] (+)= panels @ x^T` with the epilogue fused into the store.
+///
+/// `panels` is the packed form of `A[m, k]`; `x` is `n` time-major
+/// frames of length `k`.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn matmul(
+    simd: Simd,
+    panels: &[f32],
+    c: &mut [f32],
+    x: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    acc: bool,
+    epi: &Epilogue,
+) {
+    match simd {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: an Avx2 request only exists when `detect()` returned it
+        // (PackedGemm::new uses detect(); with_dispatch asserts equality
+        // with detect()), i.e. avx2+fma were verified on this host.
+        Simd::Avx2 => unsafe { avx2::matmul(panels, c, x, m, k, n, acc, epi) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64; `detect()` verifies it.
+        Simd::Neon => unsafe { neon::matmul(panels, c, x, m, k, n, acc, epi) },
+        _ => portable::matmul(panels, c, x, m, k, n, acc, epi),
+    }
+}
+
+/// Store one finished `PACK_MR x nr` register tile into `C`, fusing the
+/// whole epilogue into the only pass over the output:
+///
+/// ```text
+/// C[row, j] = act(tile * scale + bias (+ C[row, j] if acc))
+/// ```
+///
+/// Rows past `m` are panel zero-padding: computed, never stored.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn store_tile(
+    c: &mut [f32],
+    tile: &[[f32; PACK_MR]],
+    j0: usize,
+    nr: usize,
+    row0: usize,
+    m: usize,
+    n: usize,
+    acc: bool,
+    scale: Option<&[f32]>,
+    epi: &Epilogue,
+) {
+    let rows = PACK_MR.min(m - row0);
+    for r in 0..rows {
+        let row = row0 + r;
+        let s = scale.map_or(1.0, |sc| sc[row]);
+        let b = epi.bias.map_or(0.0, |bias| bias[row]);
+        let act = epi.act_for_row(m, row);
+        let crow = &mut c[row * n + j0..row * n + j0 + nr];
+        for (jj, cv) in crow.iter_mut().enumerate() {
+            let mut v = tile[jj][r] * s + b;
+            if acc {
+                v += *cv;
+            }
+            *cv = act.apply(v);
+        }
+    }
+}

@@ -1,0 +1,97 @@
+//! aarch64 NEON microkernel: 16-row panels x 4-column register tile.
+//!
+//! Per k step: four 4-lane unit-stride panel loads plus one scalar frame
+//! load per column feed `4 * NR` independent FMA chains via
+//! `vfmaq_n_f32` — at `NR = 4` that is 16 q accumulators + 4 panel
+//! registers out of the 32-register aarch64 SIMD file.  The embedded ARM
+//! boards the paper targets (Tables 3/4/7/8) are exactly this path.
+
+use core::arch::aarch64::{vdupq_n_f32, vfmaq_n_f32, vld1q_f32, vst1q_f32};
+
+use super::store_tile;
+use crate::linalg::pack::{Epilogue, PACK_MR};
+
+/// Register-tile width (frame columns per microkernel pass).
+pub(crate) const NR: usize = 4;
+
+macro_rules! def_kern {
+    ($name:ident, $nr:literal) => {
+        /// # Safety
+        /// Requires neon.  `panel` must hold `k * PACK_MR` floats and `x`
+        /// must hold at least `(j0 + $nr) * k` floats.
+        #[target_feature(enable = "neon")]
+        #[allow(clippy::needless_range_loop, clippy::single_element_loop)]
+        unsafe fn $name(
+            panel: *const f32,
+            x: *const f32,
+            k: usize,
+            j0: usize,
+            tile: &mut [[f32; PACK_MR]; NR],
+        ) {
+            let zero = vdupq_n_f32(0.0);
+            let mut acc = [[zero; 4]; $nr];
+            let mut frames = [x; $nr];
+            for (jj, f) in frames.iter_mut().enumerate() {
+                *f = x.add((j0 + jj) * k);
+            }
+            for kk in 0..k {
+                let a0 = vld1q_f32(panel.add(kk * PACK_MR));
+                let a1 = vld1q_f32(panel.add(kk * PACK_MR + 4));
+                let a2 = vld1q_f32(panel.add(kk * PACK_MR + 8));
+                let a3 = vld1q_f32(panel.add(kk * PACK_MR + 12));
+                for jj in 0..$nr {
+                    let b = *frames[jj].add(kk);
+                    acc[jj][0] = vfmaq_n_f32(acc[jj][0], a0, b);
+                    acc[jj][1] = vfmaq_n_f32(acc[jj][1], a1, b);
+                    acc[jj][2] = vfmaq_n_f32(acc[jj][2], a2, b);
+                    acc[jj][3] = vfmaq_n_f32(acc[jj][3], a3, b);
+                }
+            }
+            for jj in 0..$nr {
+                for l in 0..4 {
+                    vst1q_f32(tile[jj].as_mut_ptr().add(4 * l), acc[jj][l]);
+                }
+            }
+        }
+    };
+}
+
+def_kern!(kern1, 1);
+def_kern!(kern2, 2);
+def_kern!(kern3, 3);
+def_kern!(kern4, 4);
+
+/// # Safety
+/// Requires neon (baseline on aarch64; verified by `detect()`).  Slice
+/// sizes are checked by `PackedGemm::matmul`.
+#[target_feature(enable = "neon")]
+#[allow(clippy::too_many_arguments)]
+pub(crate) unsafe fn matmul(
+    panels: &[f32],
+    c: &mut [f32],
+    x: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    acc: bool,
+    epi: &Epilogue,
+) {
+    debug_assert_eq!(panels.len(), m.div_ceil(PACK_MR) * PACK_MR * k);
+    let mut tile = [[0f32; PACK_MR]; NR];
+    for pi in 0..m.div_ceil(PACK_MR) {
+        let panel = panels[pi * PACK_MR * k..].as_ptr();
+        let xp = x.as_ptr();
+        let mut j0 = 0;
+        while j0 < n {
+            let nr = NR.min(n - j0);
+            match nr {
+                4 => kern4(panel, xp, k, j0, &mut tile),
+                3 => kern3(panel, xp, k, j0, &mut tile),
+                2 => kern2(panel, xp, k, j0, &mut tile),
+                _ => kern1(panel, xp, k, j0, &mut tile),
+            }
+            store_tile(c, &tile, j0, nr, pi * PACK_MR, m, n, acc, None, epi);
+            j0 += nr;
+        }
+    }
+}

@@ -1,0 +1,115 @@
+//! Portable packed-panel microkernel (16x4 tile) — the fallback path and
+//! the correctness oracle for the intrinsic kernels.
+//!
+//! The inner row loop runs over `PACK_MR` contiguous panel elements with
+//! a broadcast multiplier, the exact shape LLVM's autovectorizer turns
+//! into packed FMA on any SIMD ISA the target baseline provides.  Also
+//! hosts the int8 variant used by the quantized engine (dequantization
+//! happens in registers; the per-row scale is fused into the store).
+
+use super::store_tile;
+use crate::linalg::pack::{Epilogue, PACK_MR};
+
+/// Register-tile width (frame columns per microkernel pass).
+pub(crate) const NR: usize = 4;
+
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn matmul(
+    panels: &[f32],
+    c: &mut [f32],
+    x: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    acc: bool,
+    epi: &Epilogue,
+) {
+    let mut tile = [[0f32; PACK_MR]; NR];
+    for pi in 0..m.div_ceil(PACK_MR) {
+        let panel = &panels[pi * PACK_MR * k..(pi + 1) * PACK_MR * k];
+        let mut j0 = 0;
+        while j0 < n {
+            let nr = NR.min(n - j0);
+            match nr {
+                4 => kern::<4>(panel, x, k, j0, &mut tile),
+                3 => kern::<3>(panel, x, k, j0, &mut tile),
+                2 => kern::<2>(panel, x, k, j0, &mut tile),
+                _ => kern::<1>(panel, x, k, j0, &mut tile),
+            }
+            store_tile(c, &tile, j0, nr, pi * PACK_MR, m, n, acc, None, epi);
+            j0 += nr;
+        }
+    }
+}
+
+fn kern<const NR2: usize>(
+    panel: &[f32],
+    x: &[f32],
+    k: usize,
+    j0: usize,
+    tile: &mut [[f32; PACK_MR]; NR],
+) {
+    let mut acc = [[0f32; PACK_MR]; NR2];
+    for kk in 0..k {
+        let a = &panel[kk * PACK_MR..(kk + 1) * PACK_MR];
+        for (jj, accj) in acc.iter_mut().enumerate() {
+            let bv = x[(j0 + jj) * k + kk];
+            for (dst, &av) in accj.iter_mut().zip(a) {
+                *dst += av * bv;
+            }
+        }
+    }
+    tile[..NR2].copy_from_slice(&acc);
+}
+
+/// Int8 panels: identical tiling, with the `i8 -> f32` widen performed in
+/// registers (weight bytes stream at 1/4 the f32 DRAM traffic).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn matmul_quant(
+    panels: &[i8],
+    scales: &[f32],
+    c: &mut [f32],
+    x: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    acc: bool,
+    epi: &Epilogue,
+) {
+    let mut tile = [[0f32; PACK_MR]; NR];
+    for pi in 0..m.div_ceil(PACK_MR) {
+        let panel = &panels[pi * PACK_MR * k..(pi + 1) * PACK_MR * k];
+        let mut j0 = 0;
+        while j0 < n {
+            let nr = NR.min(n - j0);
+            match nr {
+                4 => kern_q::<4>(panel, x, k, j0, &mut tile),
+                3 => kern_q::<3>(panel, x, k, j0, &mut tile),
+                2 => kern_q::<2>(panel, x, k, j0, &mut tile),
+                _ => kern_q::<1>(panel, x, k, j0, &mut tile),
+            }
+            store_tile(c, &tile, j0, nr, pi * PACK_MR, m, n, acc, Some(scales), epi);
+            j0 += nr;
+        }
+    }
+}
+
+fn kern_q<const NR2: usize>(
+    panel: &[i8],
+    x: &[f32],
+    k: usize,
+    j0: usize,
+    tile: &mut [[f32; PACK_MR]; NR],
+) {
+    let mut acc = [[0f32; PACK_MR]; NR2];
+    for kk in 0..k {
+        let a = &panel[kk * PACK_MR..(kk + 1) * PACK_MR];
+        for (jj, accj) in acc.iter_mut().enumerate() {
+            let bv = x[(j0 + jj) * k + kk];
+            for (dst, &av) in accj.iter_mut().zip(a) {
+                *dst += f32::from(av) * bv;
+            }
+        }
+    }
+    tile[..NR2].copy_from_slice(&acc);
+}

@@ -3,14 +3,35 @@
 //! Single-threaded by design: the paper's experiments measure a single
 //! inference stream on an embedded-class core; determinism also matters
 //! for the golden-output parity tests against the JAX artifacts.
+//!
+//! Two GEMM generations coexist:
+//!
+//! * [`pack`] + [`kernels`] — the engines' hot path: weights repacked
+//!   once at construction into `PACK_MR`-row k-major panels, explicit
+//!   AVX2/NEON microkernels chosen by one-time runtime detection (with a
+//!   portable fallback/oracle), and a fused epilogue that applies bias +
+//!   gate activations to the register tile as it stores — one pass over
+//!   the `[3H, T]` gate matrix instead of three.  `B` operands are the
+//!   engines' time-major frames, so no input transpose exists anymore.
+//! * [`gemm`] — the original row-major blocked kernels.  Still the
+//!   memsim traffic model's reference loop structure, the probe baseline
+//!   for the calibrated small-`N` crossover, and the fallback path when
+//!   that probe finds `gemm_bt` faster on the host.
 
 pub mod fastmath;
 pub mod gemm;
+pub mod kernels;
 pub mod matrix;
+pub mod pack;
 
 pub use fastmath::{fast_exp, fast_sigmoid, fast_tanh};
-pub use gemm::{add_row_bias, dot, gemm, gemm_acc, gemm_bt, gemm_bt_acc, gemm_naive, gemv, gemv_acc, SMALL_N_CUTOFF};
+pub use gemm::{
+    add_row_bias, dot, gemm, gemm_acc, gemm_bt, gemm_bt_acc, gemm_naive, gemv, gemv_acc,
+    SMALL_N_CUTOFF,
+};
+pub use kernels::{detect as detect_simd, Simd};
 pub use matrix::{transpose_into, Matrix};
+pub use pack::{Act, Epilogue, PackedGemm, PackedMatrix, PackedQuantGemm, PACK_MR};
 
 /// Elementwise activations used by every engine.  `sigmoid` and `tanh`
 /// are the scalar hot ops of the recurrence remainder; they operate on

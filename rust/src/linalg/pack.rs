@@ -1,0 +1,535 @@
+//! Packed-weight GEMM with runtime SIMD dispatch and a fused epilogue.
+//!
+//! The paper's entire speedup comes from amortizing weight DRAM traffic
+//! across `T` time steps (Eq. 4): one `[M, K] @ [K, T]` gate GEMM per
+//! block.  This module makes that GEMM stream-friendly:
+//!
+//! * **Panel packing** ([`PackedMatrix`]): the weight matrix is repacked
+//!   **once at engine construction** into `PACK_MR`-row panels stored
+//!   k-major, so the microkernel reads weights with unit stride across
+//!   the whole K sweep — sequential hardware prefetch, one TLB walk per
+//!   page, and SIMD lanes that map directly onto output rows (no
+//!   horizontal reductions anywhere).
+//! * **Runtime dispatch** ([`super::kernels`]): AVX2+FMA and NEON
+//!   intrinsic microkernels selected once per process, with the portable
+//!   kernel as fallback and correctness oracle.
+//! * **Fused epilogue** ([`Epilogue`]): per-row bias and the gate
+//!   activations are applied to the register tile as it is stored,
+//!   eliminating the separate `add_row_bias` pass and the activation
+//!   pass over the `[3H, T]` / `[4H, T]` gate matrix.
+//! * **Calibrated crossover**: a tiny one-shot probe at construction
+//!   times the packed kernel against the row-major multi-dot
+//!   ([`gemm_bt`]) at small `N` and records the per-`(M, K)` crossover,
+//!   replacing the old hardcoded `SMALL_N_CUTOFF = 8` guess.
+//!
+//! `B` operands are **time-major frames** `[N, K]` — the engines'
+//! natural input layout — so the old `[T, D] -> [D, T]` transpose
+//! disappears from the hot path entirely; the microkernel broadcasts
+//! from at most `NR` sequential frame streams instead.
+
+use std::time::Instant;
+
+use crate::linalg::fastmath::{fast_sigmoid, fast_tanh};
+use crate::linalg::gemm::{gemm_bt, gemm_bt_acc};
+use crate::linalg::kernels::{self, Simd};
+
+/// Panel height: rows of `A` interleaved per packed panel.  Shared by
+/// every kernel family (AVX2 reads it as 2 x 8 lanes, NEON as 4 x 4).
+pub const PACK_MR: usize = 16;
+
+/// Activation applied per output element by the fused epilogue.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Act {
+    Ident,
+    Sigmoid,
+    Tanh,
+}
+
+impl Act {
+    #[inline]
+    pub fn apply(self, v: f32) -> f32 {
+        match self {
+            Act::Ident => v,
+            Act::Sigmoid => fast_sigmoid(v),
+            Act::Tanh => fast_tanh(v),
+        }
+    }
+}
+
+/// Fused GEMM epilogue: applied to each output element as the register
+/// tile is stored, so bias + activation cost no extra pass over `C`.
+///
+/// `acts` partitions the `M` rows into `acts.len()` equal segments (the
+/// stacked-gate layout every engine uses: `[xhat; f; r]`, `[f; i; o;
+/// chat]`, ...); an empty slice means identity everywhere.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Epilogue<'a> {
+    /// Per-row bias (`len == m`), added before the activation.
+    pub bias: Option<&'a [f32]>,
+    /// Per-row-segment activations (uniform segments; empty = identity).
+    pub acts: &'a [Act],
+}
+
+impl<'a> Epilogue<'a> {
+    /// No bias, no activation (plain GEMM semantics).
+    pub const NONE: Epilogue<'static> = Epilogue { bias: None, acts: &[] };
+
+    /// Bias only (used where a recurrent term accumulates afterwards,
+    /// e.g. LSTM's `U @ h`, so activations cannot be fused).
+    pub fn with_bias(bias: &'a [f32]) -> Self {
+        Self { bias: Some(bias), acts: &[] }
+    }
+
+    /// Bias + per-segment gate activations — the full fusion.
+    pub fn fused(bias: &'a [f32], acts: &'a [Act]) -> Self {
+        Self { bias: Some(bias), acts }
+    }
+
+    #[inline]
+    pub(crate) fn act_for_row(&self, m: usize, row: usize) -> Act {
+        if self.acts.is_empty() {
+            Act::Ident
+        } else {
+            debug_assert_eq!(m % self.acts.len(), 0, "rows must split into equal act segments");
+            self.acts[row * self.acts.len() / m]
+        }
+    }
+}
+
+/// Repack a row-major `[m, k]` matrix into `ceil(m / PACK_MR)` panels;
+/// within a panel the `PACK_MR` rows are interleaved k-major, so a
+/// kernel sweeping `kk` reads the panel with unit stride.  Rows past `m`
+/// are zero padding (computed by the kernels, never stored).
+fn pack_panels<T: Copy + Default>(a: &[T], m: usize, k: usize) -> Vec<T> {
+    assert_eq!(a.len(), m * k, "pack: A must be [m, k]");
+    let np = m.div_ceil(PACK_MR);
+    let mut out = vec![T::default(); np * PACK_MR * k];
+    for pi in 0..np {
+        let base = pi * PACK_MR * k;
+        for kk in 0..k {
+            for r in 0..PACK_MR {
+                let row = pi * PACK_MR + r;
+                if row < m {
+                    out[base + kk * PACK_MR + r] = a[row * k + kk];
+                }
+            }
+        }
+    }
+    out
+}
+
+/// A weight matrix in panel-major packed layout (see [`pack_panels`]).
+#[derive(Debug, Clone)]
+pub struct PackedMatrix {
+    m: usize,
+    k: usize,
+    data: Vec<f32>,
+}
+
+impl PackedMatrix {
+    pub fn pack(a: &[f32], m: usize, k: usize) -> Self {
+        Self { m, k, data: pack_panels(a, m, k) }
+    }
+
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// The packed panel storage (including zero-padded rows).
+    pub fn panels(&self) -> &[f32] {
+        &self.data
+    }
+}
+
+/// Matrices smaller than this skip the construction probe: the packed
+/// path is used unconditionally (at these sizes everything is cache
+/// resident and the probe would measure noise).
+const PROBE_MIN_ELEMS: usize = 1 << 18;
+const PROBE_REPS: usize = 3;
+
+fn time_min(reps: usize, mut f: impl FnMut()) -> u64 {
+    let mut best = u64::MAX;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        best = best.min(t0.elapsed().as_nanos() as u64);
+    }
+    best
+}
+
+/// One-shot construction-time probe: times the packed kernel against the
+/// row-major multi-dot (`gemm_bt`) at `n = 1, 2, 4, 8` and returns the
+/// largest prefix where the multi-dot wins **decisively** (by more than
+/// `PROBE_MARGIN_PCT`).  Usually 0 on SIMD hosts — the packed kernel
+/// streams weights with unit stride at every `n`.
+///
+/// Trade-off, documented deliberately: a wall-clock probe makes the
+/// selected path (and thus low-order float rounding at `n <= 8`)
+/// host-load-dependent.  The decisive margin + min-of-reps timing keeps
+/// flips to cases where the multi-dot is genuinely faster; results on
+/// either path stay within every parity tolerance (both are exact dot
+/// products modulo summation order — see `packed_gemm_parity.rs`).
+fn probe_bt_cutoff(a: &[f32], packed: &PackedMatrix, simd: Simd) -> usize {
+    const PROBE_MARGIN_PCT: u64 = 10;
+    let (m, k) = (packed.m, packed.k);
+    let mut x = vec![0.0f32; 8 * k];
+    for (i, v) in x.iter_mut().enumerate() {
+        *v = ((i % 17) as f32 - 8.0) * 0.125;
+    }
+    let mut c = vec![0.0f32; m * 8];
+    let mut cutoff = 0;
+    for n in [1usize, 2, 4, 8] {
+        let t_bt = time_min(PROBE_REPS, || {
+            gemm_bt(&mut c[..m * n], a, &x[..n * k], m, k, n);
+        });
+        let t_pk = time_min(PROBE_REPS, || {
+            kernels::matmul(
+                simd,
+                packed.panels(),
+                &mut c[..m * n],
+                &x[..n * k],
+                m,
+                k,
+                n,
+                false,
+                &Epilogue::NONE,
+            );
+        });
+        // The multi-dot must beat the packed kernel by > the margin.
+        if t_bt.saturating_mul(100 + PROBE_MARGIN_PCT) < t_pk.saturating_mul(100) {
+            cutoff = n;
+        } else {
+            break;
+        }
+    }
+    cutoff
+}
+
+/// An engine's handle to one packed weight matrix: owns the panels, the
+/// dispatched SIMD level and the calibrated small-`N` crossover.  Packing
+/// and probing happen once at engine construction; `matmul` is
+/// allocation-free.
+#[derive(Debug, Clone)]
+pub struct PackedGemm {
+    packed: PackedMatrix,
+    simd: Simd,
+    /// `n <= bt_cutoff` uses the retained row-major multi-dot path.
+    bt_cutoff: usize,
+    /// Row-major copy, retained only when the probe found a crossover.
+    row_major: Option<Vec<f32>>,
+}
+
+impl PackedGemm {
+    /// Pack `a[m, k]`, detect the SIMD level and calibrate the crossover.
+    pub fn new(a: &[f32], m: usize, k: usize) -> Self {
+        let simd = kernels::detect();
+        let packed = PackedMatrix::pack(a, m, k);
+        let bt_cutoff = if m * k >= PROBE_MIN_ELEMS {
+            probe_bt_cutoff(a, &packed, simd)
+        } else {
+            0
+        };
+        let row_major = (bt_cutoff > 0).then(|| a.to_vec());
+        Self { packed, simd, bt_cutoff, row_major }
+    }
+
+    /// Bypass probing: fixed SIMD level and crossover.  Used by the
+    /// parity tests (forcing the portable oracle) and the benches.
+    ///
+    /// Soundness: an intrinsic level may only be requested when it is
+    /// the one [`kernels::detect`] verified on this host — asserted here
+    /// so safe callers can never reach an unsupported instruction set.
+    pub fn with_dispatch(a: &[f32], m: usize, k: usize, simd: Simd, bt_cutoff: usize) -> Self {
+        assert!(
+            simd == Simd::Portable || simd == kernels::detect(),
+            "SIMD level {simd:?} not available on this host (detected {:?})",
+            kernels::detect()
+        );
+        let packed = PackedMatrix::pack(a, m, k);
+        let row_major = (bt_cutoff > 0).then(|| a.to_vec());
+        Self { packed, simd, bt_cutoff, row_major }
+    }
+
+    pub fn m(&self) -> usize {
+        self.packed.m
+    }
+
+    pub fn k(&self) -> usize {
+        self.packed.k
+    }
+
+    /// Logical (unpadded) element count — the weight-traffic unit.
+    pub fn weight_len(&self) -> usize {
+        self.packed.m * self.packed.k
+    }
+
+    pub fn simd(&self) -> Simd {
+        self.simd
+    }
+
+    pub fn bt_cutoff(&self) -> usize {
+        self.bt_cutoff
+    }
+
+    /// `c[m, n] = A @ X^T` (or `+=` with `acc`), where `x` holds `n`
+    /// time-major frames of length `k`.  The epilogue is fused into the
+    /// store pass; with `acc` the existing `C` joins the pre-activation
+    /// sum (`C = act(C_old + dot + bias)`), which is what a two-term
+    /// gate GEMM (QRNN) needs.
+    pub fn matmul(&self, c: &mut [f32], x: &[f32], n: usize, acc: bool, epi: &Epilogue) {
+        let (m, k) = (self.packed.m, self.packed.k);
+        assert_eq!(x.len(), n * k, "X must be [n={n}, k={k}]");
+        assert_eq!(c.len(), m * n, "C must be [m={m}, n={n}]");
+        if n == 0 {
+            return;
+        }
+        if n <= self.bt_cutoff {
+            if let Some(a) = &self.row_major {
+                if acc {
+                    gemm_bt_acc(c, a, x, m, k, n);
+                } else {
+                    gemm_bt(c, a, x, m, k, n);
+                }
+                apply_epilogue(c, m, n, epi);
+                return;
+            }
+        }
+        kernels::matmul(self.simd, self.packed.panels(), c, x, m, k, n, acc, epi);
+    }
+}
+
+/// Separate-pass epilogue for the non-fused (`gemm_bt` crossover) path.
+pub(crate) fn apply_epilogue(c: &mut [f32], m: usize, n: usize, epi: &Epilogue) {
+    if epi.bias.is_none() && epi.acts.is_empty() {
+        return;
+    }
+    for r in 0..m {
+        let b = epi.bias.map_or(0.0, |bias| bias[r]);
+        let act = epi.act_for_row(m, r);
+        for v in &mut c[r * n..(r + 1) * n] {
+            *v = act.apply(*v + b);
+        }
+    }
+}
+
+/// Int8 twin of [`PackedGemm`] for the quantized engine: the same panel
+/// layout with `i8` elements, so weight bytes stream at 1/4 the f32
+/// traffic; the per-row dequantization scale is fused into the store
+/// epilogue together with bias and activation.  Portable kernel only for
+/// now — an int8 intrinsic path (e.g. AVX2 `maddubs` / NEON `sdot`) is
+/// future work.
+#[derive(Debug, Clone)]
+pub struct PackedQuantGemm {
+    m: usize,
+    k: usize,
+    panels: Vec<i8>,
+    scales: Vec<f32>,
+}
+
+impl PackedQuantGemm {
+    pub fn new(q: &[i8], scales: &[f32], m: usize, k: usize) -> Self {
+        assert_eq!(scales.len(), m, "one dequant scale per row");
+        Self { m, k, panels: pack_panels(q, m, k), scales }
+    }
+
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Weight bytes (the DRAM-traffic unit): 1 byte per logical element
+    /// plus the f32 scales (padding rows are never fetched usefully).
+    pub fn weight_bytes(&self) -> usize {
+        self.m * self.k + self.scales.len() * 4
+    }
+
+    /// Reconstruct the dequantized f32 value at `(r, c)` straight from
+    /// the panel layout (error analysis / tests — engines keep no second
+    /// row-major copy of the quantized weights).
+    pub fn dequant(&self, r: usize, c: usize) -> f32 {
+        assert!(r < self.m && c < self.k);
+        let (pi, rr) = (r / PACK_MR, r % PACK_MR);
+        f32::from(self.panels[pi * PACK_MR * self.k + c * PACK_MR + rr]) * self.scales[r]
+    }
+
+    /// Same contract as [`PackedGemm::matmul`], with the row scale
+    /// applied before bias/activation: `C = act(dot * scale + bias)`.
+    pub fn matmul(&self, c: &mut [f32], x: &[f32], n: usize, acc: bool, epi: &Epilogue) {
+        assert_eq!(x.len(), n * self.k, "X must be [n={n}, k={}]", self.k);
+        assert_eq!(c.len(), self.m * n, "C must be [m={}, n={n}]", self.m);
+        if n == 0 {
+            return;
+        }
+        kernels::portable::matmul_quant(
+            &self.panels,
+            &self.scales,
+            c,
+            x,
+            self.m,
+            self.k,
+            n,
+            acc,
+            epi,
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::gemm_naive;
+    use crate::util::Rng;
+
+    fn frames_to_cols(x: &[f32], n: usize, k: usize) -> Vec<f32> {
+        let mut b = vec![0.0; k * n];
+        for j in 0..n {
+            for kk in 0..k {
+                b[kk * n + j] = x[j * k + kk];
+            }
+        }
+        b
+    }
+
+    #[test]
+    fn pack_layout_is_kmajor_with_zero_padding() {
+        let (m, k) = (PACK_MR + 3, 5);
+        let a: Vec<f32> = (0..m * k).map(|i| i as f32).collect();
+        let p = PackedMatrix::pack(&a, m, k);
+        assert_eq!(p.panels().len(), 2 * PACK_MR * k);
+        // Panel 0, kk = 2, row 1 == a[1][2].
+        assert_eq!(p.panels()[2 * PACK_MR + 1], a[k + 2]);
+        // Panel 1 holds rows 16..19; rows 19.. are zero padding.
+        assert_eq!(p.panels()[PACK_MR * k + 2], a[PACK_MR * k + 2 * k]);
+        for kk in 0..k {
+            for r in 3..PACK_MR {
+                assert_eq!(p.panels()[PACK_MR * k + kk * PACK_MR + r], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn act_segments_map_rows() {
+        let acts = [Act::Ident, Act::Sigmoid, Act::Tanh];
+        let epi = Epilogue { bias: None, acts: &acts };
+        assert_eq!(epi.act_for_row(12, 0), Act::Ident);
+        assert_eq!(epi.act_for_row(12, 3), Act::Ident);
+        assert_eq!(epi.act_for_row(12, 4), Act::Sigmoid);
+        assert_eq!(epi.act_for_row(12, 11), Act::Tanh);
+        assert_eq!(Epilogue::NONE.act_for_row(12, 7), Act::Ident);
+    }
+
+    #[test]
+    fn portable_matches_naive_with_epilogue() {
+        let mut rng = Rng::new(7);
+        let (m, k, n) = (48, 33, 5);
+        let mut a = vec![0.0; m * k];
+        let mut x = vec![0.0; n * k];
+        rng.fill_normal(&mut a, 0.5);
+        rng.fill_normal(&mut x, 1.0);
+        let bias: Vec<f32> = (0..m).map(|r| r as f32 * 0.01).collect();
+        let acts = [Act::Ident, Act::Sigmoid, Act::Tanh];
+
+        let pg = PackedGemm::with_dispatch(&a, m, k, Simd::Portable, 0);
+        let mut got = vec![0.0; m * n];
+        pg.matmul(&mut got, &x, n, false, &Epilogue::fused(&bias, &acts));
+
+        let b = frames_to_cols(&x, n, k);
+        let mut want = vec![0.0; m * n];
+        gemm_naive(&mut want, &a, &b, m, k, n);
+        apply_epilogue(&mut want, m, n, &Epilogue::fused(&bias, &acts));
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert!((g - w).abs() < 1e-4, "idx {i}: {g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn accumulate_joins_preactivation_sum() {
+        // acc mode must apply act(C_old + dot + bias) — the QRNN contract.
+        let mut rng = Rng::new(9);
+        let (m, k, n) = (PACK_MR, 17, 3);
+        let mut a = vec![0.0; m * k];
+        let mut x = vec![0.0; n * k];
+        rng.fill_normal(&mut a, 0.5);
+        rng.fill_normal(&mut x, 1.0);
+        let bias = vec![0.25f32; m];
+        let acts = [Act::Tanh];
+
+        let pg = PackedGemm::with_dispatch(&a, m, k, Simd::Portable, 0);
+        let mut got = vec![0.5f32; m * n];
+        pg.matmul(&mut got, &x, n, true, &Epilogue::fused(&bias, &acts));
+
+        let b = frames_to_cols(&x, n, k);
+        let mut want = vec![0.0; m * n];
+        gemm_naive(&mut want, &a, &b, m, k, n);
+        for w in want.iter_mut() {
+            *w = fast_tanh(*w + 0.5 + 0.25);
+        }
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-4, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn quant_panels_match_f32_reference() {
+        let (m, k, n) = (24, 19, 6);
+        let mut rng = Rng::new(3);
+        let mut a = vec![0.0; m * k];
+        rng.fill_normal(&mut a, 0.1);
+        // Quantize per row, then compare against the dequantized f32 GEMM.
+        let mut q = vec![0i8; m * k];
+        let mut scales = vec![0.0f32; m];
+        for r in 0..m {
+            let row = &a[r * k..(r + 1) * k];
+            let max = row.iter().fold(0.0f32, |mx, v| mx.max(v.abs()));
+            let s = if max > 0.0 { max / 127.0 } else { 1.0 };
+            scales[r] = s;
+            for (dst, &v) in q[r * k..(r + 1) * k].iter_mut().zip(row) {
+                *dst = (v / s).round().clamp(-127.0, 127.0) as i8;
+            }
+        }
+        let deq: Vec<f32> = (0..m * k).map(|i| f32::from(q[i]) * scales[i / k]).collect();
+
+        let mut x = vec![0.0; n * k];
+        rng.fill_normal(&mut x, 1.0);
+        let pq = PackedQuantGemm::new(&q, &scales, m, k);
+        let mut got = vec![0.0; m * n];
+        pq.matmul(&mut got, &x, n, false, &Epilogue::NONE);
+
+        let b = frames_to_cols(&x, n, k);
+        let mut want = vec![0.0; m * n];
+        gemm_naive(&mut want, &deq, &b, m, k, n);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-4, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn bt_crossover_path_matches_packed_path() {
+        let mut rng = Rng::new(11);
+        let (m, k) = (40, 65);
+        let mut a = vec![0.0; m * k];
+        rng.fill_normal(&mut a, 0.5);
+        let bias: Vec<f32> = (0..m).map(|r| (r % 5) as f32 * 0.1).collect();
+        let acts = [Act::Sigmoid];
+        let packed = PackedGemm::with_dispatch(&a, m, k, Simd::Portable, 0);
+        let crossed = PackedGemm::with_dispatch(&a, m, k, Simd::Portable, 8);
+        for n in [1usize, 4, 8] {
+            let mut x = vec![0.0; n * k];
+            rng.fill_normal(&mut x, 1.0);
+            let mut c1 = vec![0.0; m * n];
+            let mut c2 = vec![0.0; m * n];
+            packed.matmul(&mut c1, &x, n, false, &Epilogue::fused(&bias, &acts));
+            crossed.matmul(&mut c2, &x, n, false, &Epilogue::fused(&bias, &acts));
+            for (g, w) in c1.iter().zip(&c2) {
+                assert!((g - w).abs() < 1e-4, "n={n}: {g} vs {w}");
+            }
+        }
+    }
+}

@@ -1,7 +1,7 @@
 //! Parameter containers for each architecture + loading from weight
 //! bundles exported by `python/compile/aot.py`.
 
-use crate::linalg::Matrix;
+use crate::linalg::{Act, Matrix};
 use crate::models::config::{Arch, ModelConfig, StackConfig};
 use crate::util::Rng;
 use crate::weights::Bundle;
@@ -16,6 +16,11 @@ pub struct SruParams {
 }
 
 impl SruParams {
+    /// Gate-row activation pattern for the fused GEMM epilogue: `xhat`
+    /// stays raw (the recurrence consumes it unactivated), `f` and `r`
+    /// are sigmoid gates.
+    pub const GATE_ACTS: [Act; 3] = [Act::Ident, Act::Sigmoid, Act::Sigmoid];
+
     pub fn hidden(&self) -> usize {
         self.w.rows() / 3
     }
@@ -59,6 +64,10 @@ pub struct QrnnParams {
 }
 
 impl QrnnParams {
+    /// Gate-row activation pattern for the fused GEMM epilogue:
+    /// `xhat -> tanh`, `f`/`o` -> sigmoid (fo-pooling, Eq. 3).
+    pub const GATE_ACTS: [Act; 3] = [Act::Tanh, Act::Sigmoid, Act::Sigmoid];
+
     pub fn hidden(&self) -> usize {
         self.w.rows() / 3
     }
@@ -103,6 +112,10 @@ pub struct LstmParams {
 }
 
 impl LstmParams {
+    // No GATE_ACTS: LSTM activations cannot be fused into the input-side
+    // GEMM epilogue because the recurrent `U @ h_{t-1}` term accumulates
+    // after it; only the bias is fused (see `LstmEngine`).
+
     pub fn hidden(&self) -> usize {
         self.u.cols()
     }

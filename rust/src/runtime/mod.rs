@@ -5,7 +5,16 @@
 //!   weights, the coordinator [`pjrt::PjrtBackend`], and golden-parity
 //!   checks tying the Rust path back to the JAX oracle.
 
+//! The PJRT client itself needs the `xla` and `anyhow` crates, which are
+//! not vendored; the default build substitutes an API-compatible stub
+//! whose entry points return a clear error (enable the `pjrt` cargo
+//! feature — with those crates added to Cargo.toml — for the real path).
+
 pub mod artifacts;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+#[cfg(not(feature = "pjrt"))]
+#[path = "pjrt_stub.rs"]
 pub mod pjrt;
 
 pub use artifacts::{ArtifactDir, ArtifactEntry, TensorSpec};

@@ -1,0 +1,122 @@
+//! Stub PJRT runtime, compiled when the `pjrt` feature is off (the
+//! default).
+//!
+//! The real implementation (`pjrt.rs`) needs the `xla` and `anyhow`
+//! crates, which are not vendored in this repository.  This stub keeps
+//! the full API surface compiling — `mtsrnn parity`, `--backend pjrt`
+//! and the backend-parity tests report a clear "built without pjrt"
+//! error instead of failing to link — so the native engine, coordinator,
+//! server, memsim and every bench build and run dependency-free.
+
+use std::fmt;
+
+use crate::engine::StreamState;
+use crate::models::config::StackConfig;
+use crate::runtime::artifacts::{ArtifactDir, ArtifactEntry};
+
+const MSG: &str = "mtsrnn was built without the `pjrt` feature \
+     (the xla/anyhow crates are not vendored); PJRT execution is unavailable \
+     — use the native backend";
+
+/// Error produced by every stubbed entry point.
+#[derive(Debug, Clone)]
+pub struct PjrtUnavailable;
+
+impl fmt::Display for PjrtUnavailable {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(MSG)
+    }
+}
+
+impl std::error::Error for PjrtUnavailable {}
+
+/// Stub of the shared PJRT CPU client: cannot be constructed.
+pub struct PjrtContext {
+    _never: (),
+}
+
+impl PjrtContext {
+    pub fn cpu() -> Result<Self, PjrtUnavailable> {
+        Err(PjrtUnavailable)
+    }
+
+    pub fn platform(&self) -> String {
+        unreachable!("{}", MSG)
+    }
+}
+
+/// Stub of a compiled stack executable: cannot be constructed.
+pub struct StackExecutable {
+    _never: (),
+}
+
+impl StackExecutable {
+    pub fn load(
+        _ctx: &PjrtContext,
+        _dir: &ArtifactDir,
+        _entry: &ArtifactEntry,
+    ) -> Result<Self, PjrtUnavailable> {
+        Err(PjrtUnavailable)
+    }
+
+    pub fn block(&self) -> usize {
+        unreachable!("{}", MSG)
+    }
+
+    pub fn weight_bytes(&self) -> usize {
+        unreachable!("{}", MSG)
+    }
+}
+
+/// Stub of the multi-variant PJRT backend: `load` always errors, so the
+/// `BlockBackend` methods are unreachable.
+pub struct PjrtBackend {
+    _never: (),
+}
+
+impl PjrtBackend {
+    pub fn load(_dir: &ArtifactDir, _stack_name: &str) -> Result<Self, PjrtUnavailable> {
+        Err(PjrtUnavailable)
+    }
+
+    pub fn platform(&self) -> String {
+        unreachable!("{}", MSG)
+    }
+}
+
+impl crate::coordinator::BlockBackend for PjrtBackend {
+    fn config(&self) -> &StackConfig {
+        unreachable!("{}", MSG)
+    }
+
+    fn block_sizes(&self) -> &[usize] {
+        unreachable!("{}", MSG)
+    }
+
+    fn init_state(&self) -> StreamState {
+        unreachable!("{}", MSG)
+    }
+
+    fn run_block(
+        &mut self,
+        _x: &[f32],
+        _t: usize,
+        _state: &mut StreamState,
+    ) -> Result<Vec<f32>, String> {
+        Err(MSG.to_string())
+    }
+
+    fn weight_bytes_per_block(&self) -> usize {
+        0
+    }
+}
+
+/// Stubbed golden-parity check (see `pjrt.rs` for the real one).
+pub fn layer_parity(_dir: &ArtifactDir, _entry: &ArtifactEntry) -> Result<f32, PjrtUnavailable> {
+    Err(PjrtUnavailable)
+}
+
+/// Stubbed stack-parity check (see `pjrt.rs` for the real one).
+pub fn stack_parity(_dir: &ArtifactDir, _entry: &ArtifactEntry) -> Result<f32, PjrtUnavailable> {
+    Err(PjrtUnavailable)
+}

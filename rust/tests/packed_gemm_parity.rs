@@ -1,0 +1,186 @@
+//! Property tests for the packed SIMD GEMM (`linalg::pack`): whatever
+//! kernel path the host dispatches to must match the naive f64 oracle
+//! across a shape grid covering panel (`PACK_MR`), register-tile (NR)
+//! and K/KC boundaries, including every `N` in `1..=32`, plus the
+//! accumulate and fused-epilogue semantics and the calibrated-crossover
+//! fallback path.
+
+use mtsrnn::linalg::{
+    detect_simd, fast_sigmoid, fast_tanh, gemm_naive, Act, Epilogue, PackedGemm, Simd, PACK_MR,
+};
+use mtsrnn::util::Rng;
+
+/// `[n, k]` time-major frames -> `[k, n]` column layout for the oracle.
+fn frames_to_cols(x: &[f32], n: usize, k: usize) -> Vec<f32> {
+    let mut b = vec![0.0; k * n];
+    for j in 0..n {
+        for kk in 0..k {
+            b[kk * n + j] = x[j * k + kk];
+        }
+    }
+    b
+}
+
+fn tol(k: usize) -> f32 {
+    (1e-3 * (k as f32).sqrt()).max(1e-4)
+}
+
+fn check(m: usize, k: usize, n: usize, simd: Simd, seed: u64) {
+    let mut rng = Rng::new(seed);
+    let mut a = vec![0.0; m * k];
+    let mut x = vec![0.0; n * k];
+    rng.fill_normal(&mut a, 1.0);
+    rng.fill_normal(&mut x, 1.0);
+
+    let pg = PackedGemm::with_dispatch(&a, m, k, simd, 0);
+    let mut got = vec![0.0; m * n];
+    pg.matmul(&mut got, &x, n, false, &Epilogue::NONE);
+
+    let b = frames_to_cols(&x, n, k);
+    let mut want = vec![0.0; m * n];
+    gemm_naive(&mut want, &a, &b, m, k, n);
+
+    let t = tol(k);
+    for (i, (&g, &w)) in got.iter().zip(&want).enumerate() {
+        assert!(
+            (g - w).abs() <= t,
+            "({m},{k},{n}) {simd:?} idx {i}: got {g} want {w}"
+        );
+    }
+}
+
+#[test]
+fn packed_matches_naive_across_grid() {
+    // m spans below / at / above one panel and several panels; k spans
+    // the legacy KC boundary (255/256/257) and tiny K; n sweeps 1..=32,
+    // crossing both the AVX2 (6) and NEON/portable (4) tile widths.
+    let simd = detect_simd();
+    for &m in &[1usize, 5, 15, 16, 17, 48, 53] {
+        for &k in &[1usize, 3, 16, 255, 256, 257] {
+            for n in 1..=32 {
+                check(m, k, n, simd, (m * 100_000 + k * 37 + n) as u64);
+            }
+        }
+    }
+}
+
+#[test]
+fn host_simd_path_matches_portable_oracle() {
+    let simd = detect_simd();
+    let mut rng = Rng::new(0xABCD);
+    for &(m, k, n) in &[(48usize, 129usize, 7usize), (33, 64, 13), (16, 511, 1)] {
+        let mut a = vec![0.0; m * k];
+        let mut x = vec![0.0; n * k];
+        rng.fill_normal(&mut a, 1.0);
+        rng.fill_normal(&mut x, 1.0);
+        let host = PackedGemm::with_dispatch(&a, m, k, simd, 0);
+        let oracle = PackedGemm::with_dispatch(&a, m, k, Simd::Portable, 0);
+        let mut got = vec![0.0; m * n];
+        let mut want = vec![0.0; m * n];
+        host.matmul(&mut got, &x, n, false, &Epilogue::NONE);
+        oracle.matmul(&mut want, &x, n, false, &Epilogue::NONE);
+        for (i, (&g, &w)) in got.iter().zip(&want).enumerate() {
+            assert!(
+                (g - w).abs() <= tol(k),
+                "({m},{k},{n}) {simd:?} vs portable idx {i}: {g} vs {w}"
+            );
+        }
+    }
+}
+
+#[test]
+fn accumulate_and_fused_epilogue_match_reference() {
+    let simd = detect_simd();
+    let mut rng = Rng::new(0xBEEF);
+    let (m, k) = (48usize, 70usize);
+    let mut a = vec![0.0; m * k];
+    rng.fill_normal(&mut a, 0.5);
+    let bias: Vec<f32> = (0..m).map(|r| (r as f32 - 24.0) * 0.01).collect();
+    let acts = [Act::Ident, Act::Sigmoid, Act::Tanh];
+    let pg = PackedGemm::with_dispatch(&a, m, k, simd, 0);
+
+    for n in [1usize, 4, 5, 6, 7, 17, 32] {
+        let mut x = vec![0.0; n * k];
+        rng.fill_normal(&mut x, 1.0);
+        let mut got = vec![0.25f32; m * n];
+        pg.matmul(&mut got, &x, n, true, &Epilogue::fused(&bias, &acts));
+
+        // Reference: naive dot + C_old + bias, then the segment act.
+        let b = frames_to_cols(&x, n, k);
+        let mut want = vec![0.0; m * n];
+        gemm_naive(&mut want, &a, &b, m, k, n);
+        for (i, w) in want.iter_mut().enumerate() {
+            let row = i / n;
+            let pre = *w + 0.25 + bias[row];
+            *w = match acts[row * 3 / m] {
+                Act::Ident => pre,
+                Act::Sigmoid => fast_sigmoid(pre),
+                Act::Tanh => fast_tanh(pre),
+            };
+        }
+        for (i, (&g, &w)) in got.iter().zip(&want).enumerate() {
+            assert!(
+                (g - w).abs() <= tol(k),
+                "n={n} idx {i}: {g} vs {w}"
+            );
+        }
+    }
+}
+
+#[test]
+fn crossover_fallback_agrees_with_packed_path() {
+    // A forced bt_cutoff routes small N through the row-major multi-dot
+    // + separate epilogue; results must agree with the packed path.
+    let simd = detect_simd();
+    let mut rng = Rng::new(0xF00D);
+    let (m, k) = (40usize, 65usize);
+    let mut a = vec![0.0; m * k];
+    rng.fill_normal(&mut a, 0.5);
+    let bias = vec![0.125f32; m];
+    let acts = [Act::Sigmoid];
+    let packed = PackedGemm::with_dispatch(&a, m, k, simd, 0);
+    let crossed = PackedGemm::with_dispatch(&a, m, k, simd, 8);
+    assert_eq!(crossed.bt_cutoff(), 8);
+    for n in [1usize, 2, 8, 9] {
+        let mut x = vec![0.0; n * k];
+        rng.fill_normal(&mut x, 1.0);
+        let mut c1 = vec![0.0; m * n];
+        let mut c2 = vec![0.0; m * n];
+        packed.matmul(&mut c1, &x, n, false, &Epilogue::fused(&bias, &acts));
+        crossed.matmul(&mut c2, &x, n, false, &Epilogue::fused(&bias, &acts));
+        for (i, (&g, &w)) in c1.iter().zip(&c2).enumerate() {
+            assert!((g - w).abs() <= tol(k), "n={n} idx {i}: {g} vs {w}");
+        }
+    }
+}
+
+#[test]
+fn probing_constructor_calibrates_and_stays_correct() {
+    // Big enough to trigger the construction probe; whatever crossover
+    // it picks, results must match the oracle on both sides of it.
+    let (m, k) = (768usize, 512usize);
+    let mut rng = Rng::new(0xCAFE);
+    let mut a = vec![0.0; m * k];
+    rng.fill_normal(&mut a, 0.1);
+    let pg = PackedGemm::new(&a, m, k);
+    assert!(pg.bt_cutoff() <= 8, "probe only scans n <= 8");
+    for n in [1usize, 4, 16] {
+        let mut x = vec![0.0; n * k];
+        rng.fill_normal(&mut x, 1.0);
+        let mut got = vec![0.0; m * n];
+        pg.matmul(&mut got, &x, n, false, &Epilogue::NONE);
+        let b = frames_to_cols(&x, n, k);
+        let mut want = vec![0.0; m * n];
+        gemm_naive(&mut want, &a, &b, m, k, n);
+        for (i, (&g, &w)) in got.iter().zip(&want).enumerate() {
+            assert!((g - w).abs() <= tol(k), "n={n} idx {i}: {g} vs {w}");
+        }
+    }
+}
+
+#[test]
+fn pack_mr_is_shared_by_all_kernels() {
+    // The panel layout is kernel-independent; a sanity pin so a future
+    // tile change cannot silently desync packers and kernels.
+    assert_eq!(PACK_MR, 16);
+}
