@@ -1,0 +1,103 @@
+#!/usr/bin/env python3
+"""Loopback smoke test for `mtsrnn serve --stack <spec>`.
+
+Starts the TCP server with the given stack spec, speaks the wire
+protocol as a client (OPEN / FEED / POLL / CLOSE / QUIT), and asserts a
+full feed->drain round trip: every fed frame must come back as one
+row of `vocab` finite logits.
+
+Usage: serve_roundtrip.py <spec> <port> [binary]
+"""
+
+import socket
+import subprocess
+import sys
+import time
+
+FEAT, VOCAB, FRAMES = 40, 32, 8
+
+
+def connect(port: int, deadline_s: float = 60.0) -> socket.socket:
+    deadline = time.time() + deadline_s
+    while True:
+        try:
+            return socket.create_connection(("127.0.0.1", port), timeout=10)
+        except OSError:
+            if time.time() > deadline:
+                raise
+            time.sleep(0.2)
+
+
+def main() -> None:
+    spec = sys.argv[1]
+    port = int(sys.argv[2])
+    binary = sys.argv[3] if len(sys.argv) > 3 else "./target/release/mtsrnn"
+    proc = subprocess.Popen(
+        [
+            binary,
+            "serve",
+            "--stack",
+            spec,
+            "--port",
+            str(port),
+            "--block",
+            "4",
+            "--max-wait-ms",
+            "5",
+        ],
+        stdout=subprocess.PIPE,
+        stderr=subprocess.STDOUT,
+        text=True,
+    )
+    try:
+        sock = connect(port)
+        sock.settimeout(30)
+        f = sock.makefile("rw", newline="\n")
+
+        def call(line: str) -> str:
+            f.write(line + "\n")
+            f.flush()
+            resp = f.readline().strip()
+            assert resp.startswith("OK"), f"{line.split()[0]} -> {resp!r}"
+            return resp
+
+        sid = call("OPEN").split()[1]
+        frame = " ".join(["0.25"] * FEAT)
+        feed = " ".join([frame] * FRAMES)
+        resp = call(f"FEED {sid} {feed}")
+        assert resp == f"OK {FRAMES}", resp
+
+        got = 0
+        deadline = time.time() + 30
+        while got < FRAMES * VOCAB and time.time() < deadline:
+            parts = call(f"POLL {sid} 1000").split()
+            n = int(parts[1])
+            vals = [float(v) for v in parts[2:]]
+            assert len(vals) == n, f"POLL advertised {n}, sent {len(vals)}"
+            assert all(v == v and abs(v) != float("inf") for v in vals), "non-finite logit"
+            got += n
+            if n == 0:
+                time.sleep(0.05)
+        assert got == FRAMES * VOCAB, f"drained {got} of {FRAMES * VOCAB} logit values"
+
+        call(f"CLOSE {sid}")
+        f.write("QUIT\n")
+        f.flush()
+        print(f"smoke OK: {spec} served {FRAMES} frames x {VOCAB} logits over loopback")
+    except BaseException:
+        proc.terminate()
+        try:
+            out, _ = proc.communicate(timeout=5)
+            print(f"--- server output ---\n{out}", file=sys.stderr)
+        except subprocess.TimeoutExpired:
+            proc.kill()
+        raise
+    proc.terminate()
+    try:
+        proc.communicate(timeout=5)
+    except subprocess.TimeoutExpired:
+        proc.kill()
+
+
+if __name__ == "__main__":
+    main()

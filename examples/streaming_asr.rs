@@ -23,7 +23,7 @@ use mtsrnn::coordinator::{
     BlockBackend, Coordinator, CoordinatorConfig, NativeBackend, PolicyMode,
 };
 use mtsrnn::engine::NativeStack;
-use mtsrnn::models::config::ASR_SRU;
+use mtsrnn::models::config::{StackSpec, ASR_SRU};
 use mtsrnn::models::StackParams;
 use mtsrnn::runtime::{ArtifactDir, PjrtBackend};
 use mtsrnn::util::{Rng, Timer};
@@ -80,8 +80,12 @@ fn main() {
     );
 
     let native = |block: usize| {
-        let params = StackParams::init(&ASR_SRU, &mut Rng::new(2018));
-        NativeBackend::new(NativeStack::new(ASR_SRU, params, block.max(32)))
+        // The composable spec API: `sru:f32:512x4` == the legacy ASR_SRU
+        // stack (try `lstm:f32:512x4` or `sru:q8:512x4` here — any spec
+        // serves through the same coordinator path).
+        let spec = StackSpec::parse("sru:f32:512x4").expect("builtin spec");
+        let params = StackParams::init(&spec, &mut Rng::new(2018)).expect("init params");
+        NativeBackend::new(NativeStack::new(&spec, params, block.max(32)).expect("build stack"))
     };
 
     let (_, _, _, base) = serve_trace("T=1", native(1), PolicyMode::Fixed(1));
@@ -115,8 +119,9 @@ fn main() {
             // JAX-exported bundle into the native engine too.
             let bundle = mtsrnn::weights::Bundle::load(dir.path_of("weights_asr_sru_512x4.bin"))
                 .map_err(|e| e.to_string())?;
-            let params = StackParams::from_bundle(&bundle, &ASR_SRU)?;
-            let native_same = NativeBackend::new(NativeStack::new(ASR_SRU, params, 32));
+            let spec = StackSpec::from_config(&ASR_SRU);
+            let params = StackParams::from_bundle(&bundle, &spec)?;
+            let native_same = NativeBackend::new(NativeStack::new(&spec, params, 32)?);
             let (_, _, _, native_logits) =
                 serve_trace("native*", native_same, PolicyMode::Fixed(32));
             println!(

@@ -205,7 +205,7 @@ class StackConfig(NamedTuple):
     motivating on-device ASR use case in §1.
     """
 
-    arch: str = "sru"  # "sru" | "qrnn"
+    arch: str = "sru"  # "sru" | "qrnn" | "lstm"
     feat: int = 40  # input feature width (e.g. fbank-40)
     hidden: int = 512
     depth: int = 4
@@ -246,14 +246,27 @@ def init_stack(key: jax.Array, cfg: StackConfig) -> dict[str, jax.Array]:
     return params
 
 
+#: Per-arch, per-layer state slot names — THE cross-language layout
+#: contract (mirrored by Rust ``LayerSpec::state_layout`` and the
+#: ``RecurrentLayer`` impls; pinned by tests on both sides).  Every
+#: function that orders or emits per-layer state must read this table,
+#: never hand-roll the order.
+LAYER_STATE_SLOTS: dict[str, tuple[str, ...]] = {
+    "sru": ("c",),
+    "qrnn": ("c", "xprev"),
+    "lstm": ("h", "c"),
+}
+
+
 def stack_init_state(cfg: StackConfig) -> dict[str, jax.Array]:
-    """Zero recurrent state for one stream (what L3 stores per session)."""
+    """Zero recurrent state for one stream (what L3 stores per session),
+    slot order from ``LAYER_STATE_SLOTS``.  All slots are H-sized in the
+    stack (QRNN layers consume H-dim inputs from the layer below)."""
     h = cfg.hidden
     state: dict[str, jax.Array] = {}
     for i in range(cfg.depth):
-        state[f"l{i}_c"] = jnp.zeros((h,), jnp.float32)
-        if cfg.arch == "qrnn":
-            state[f"l{i}_xprev"] = jnp.zeros((h,), jnp.float32)
+        for slot in LAYER_STATE_SLOTS[cfg.arch]:
+            state[f"l{i}_{slot}"] = jnp.zeros((h,), jnp.float32)
     return state
 
 
@@ -278,6 +291,17 @@ def stack_block_step(
                 params[f"l{i}_w"], params[f"l{i}_b"], h, state[f"l{i}_c"]
             )
             new_state[f"l{i}_c"] = c_last
+        elif cfg.arch == "lstm":
+            h, h_last, c_last = lstm_block_step(
+                params[f"l{i}_w"],
+                params[f"l{i}_u"],
+                params[f"l{i}_b"],
+                h,
+                state[f"l{i}_h"],
+                state[f"l{i}_c"],
+            )
+            new_state[f"l{i}_h"] = h_last
+            new_state[f"l{i}_c"] = c_last
         else:
             h, c_last, x_last = qrnn_block_step(
                 params[f"l{i}_w"],
@@ -300,16 +324,21 @@ def stack_block_step(
 
 def stack_flat_order(cfg: StackConfig) -> tuple[list[str], list[str]]:
     """Deterministic flattening order for params and state (shared with the
-    Rust runtime; see rust/src/runtime/artifacts.rs)."""
+    Rust runtime; see rust/src/runtime/artifacts.rs and the Rust
+    ``StackSpec::flat_state_names`` / ``LayerSpec::state_layout``, which
+    this function is the source of truth for)."""
     pnames = ["proj_w", "proj_b"]
     for i in range(cfg.depth):
-        pnames += [f"l{i}_w", f"l{i}_b"]
+        if cfg.arch == "lstm":
+            pnames += [f"l{i}_w", f"l{i}_u", f"l{i}_b"]
+        else:
+            pnames += [f"l{i}_w", f"l{i}_b"]
     pnames += ["head_w", "head_b"]
-    snames = []
-    for i in range(cfg.depth):
-        snames.append(f"l{i}_c")
-        if cfg.arch == "qrnn":
-            snames.append(f"l{i}_xprev")
+    snames = [
+        f"l{i}_{slot}"
+        for i in range(cfg.depth)
+        for slot in LAYER_STATE_SLOTS[cfg.arch]
+    ]
     return pnames, snames
 
 

@@ -235,3 +235,32 @@ def test_stack_param_count_positive_and_consistent():
         params = M.init_stack(jax.random.PRNGKey(0), cfg)
         total = sum(int(np.prod(p.shape)) for p in params.values())
         assert total == cfg.param_count()
+
+
+def test_stack_flat_order_covers_every_layer_kind():
+    """The slot-order contract mirrored by Rust ``LayerSpec::state_layout``
+    (and pinned on the Rust side in tests/stack_api.rs)."""
+    sru = M.StackConfig(arch="sru", feat=8, hidden=16, depth=2, vocab=4)
+    qrnn = M.StackConfig(arch="qrnn", feat=8, hidden=16, depth=2, vocab=4)
+    lstm = M.StackConfig(arch="lstm", feat=8, hidden=16, depth=2, vocab=4)
+    assert M.stack_flat_order(sru)[1] == ["l0_c", "l1_c"]
+    assert M.stack_flat_order(qrnn)[1] == ["l0_c", "l0_xprev", "l1_c", "l1_xprev"]
+    assert M.stack_flat_order(lstm)[1] == ["l0_h", "l0_c", "l1_h", "l1_c"]
+    assert M.stack_flat_order(lstm)[0][2:5] == ["l0_w", "l0_u", "l0_b"]
+    # init_state emits exactly the advertised slots, in order.
+    for cfg in (sru, qrnn, lstm):
+        assert list(M.stack_init_state(cfg)) == M.stack_flat_order(cfg)[1]
+
+
+def test_lstm_stack_block_step_chains():
+    cfg = M.StackConfig(arch="lstm", feat=8, hidden=16, depth=2, vocab=4)
+    params = M.init_stack(jax.random.PRNGKey(0), cfg)
+    total = sum(int(np.prod(p.shape)) for p in params.values())
+    assert total == cfg.param_count()
+    x = _rand(jax.random.PRNGKey(2), 10, cfg.feat)
+    s0 = M.stack_init_state(cfg)
+    full, _ = M.stack_block_step(cfg, params, x, s0)
+    assert full.shape == (10, cfg.vocab)
+    a, s1 = M.stack_block_step(cfg, params, x[:4], s0)
+    b, _ = M.stack_block_step(cfg, params, x[4:], s1)
+    np.testing.assert_allclose(jnp.concatenate([a, b]), full, **TOL)

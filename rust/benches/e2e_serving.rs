@@ -10,14 +10,15 @@ use std::time::Duration;
 
 use mtsrnn::coordinator::{Coordinator, CoordinatorConfig, NativeBackend, PolicyMode};
 use mtsrnn::engine::NativeStack;
-use mtsrnn::models::config::ASR_SRU;
+use mtsrnn::models::config::{StackSpec, ASR_SRU};
 use mtsrnn::models::StackParams;
 use mtsrnn::util::{Rng, Timer};
 use mtsrnn::workload::AsrTrace;
 
 fn run(policy: PolicyMode, label: &str, frames: &[f32]) {
-    let params = StackParams::init(&ASR_SRU, &mut Rng::new(2018));
-    let backend = NativeBackend::new(NativeStack::new(ASR_SRU, params, 32));
+    let spec = StackSpec::from_config(&ASR_SRU);
+    let params = StackParams::init(&spec, &mut Rng::new(2018)).unwrap();
+    let backend = NativeBackend::new(NativeStack::new(&spec, params, 32).unwrap());
     let mut coord = Coordinator::new(
         backend,
         CoordinatorConfig {

@@ -13,7 +13,7 @@ use mtsrnn::linalg::{
     add_row_bias, fast_sigmoid, gemm, gemm_bt, gemv, transpose_into, Act, Epilogue, PackedGemm,
     SMALL_N_CUTOFF,
 };
-use mtsrnn::models::config::{Arch, ModelConfig, ModelSize, StackConfig};
+use mtsrnn::models::config::{Arch, ModelConfig, ModelSize, StackSpec};
 use mtsrnn::models::{SruParams, StackParams};
 use mtsrnn::util::Rng;
 
@@ -145,15 +145,9 @@ fn main() {
 
     println!("-- coordinator dispatch overhead --");
     // Tiny stack: measures coordination cost, not compute.
-    let cfg = StackConfig {
-        arch: Arch::Sru,
-        feat: 8,
-        hidden: 16,
-        depth: 1,
-        vocab: 4,
-    };
-    let params = StackParams::init(&cfg, &mut Rng::new(4));
-    let backend = NativeBackend::new(NativeStack::new(cfg, params, 32));
+    let spec = StackSpec::parse("sru:f32:16x1,feat=8,vocab=4").expect("builtin spec");
+    let params = StackParams::init(&spec, &mut Rng::new(4)).unwrap();
+    let backend = NativeBackend::new(NativeStack::new(&spec, params, 32).unwrap());
     let mut coord = Coordinator::new(
         backend,
         CoordinatorConfig {

@@ -234,6 +234,67 @@ pub fn ablation_quant(size: ModelSize, samples: usize, opts: &BenchOpts) -> Tabl
     t
 }
 
+/// The spec grid exercised by `mtsrnn ablation --exp stacks`, `info`,
+/// and the CI smoke job: every cell kind × precision the composable
+/// stack API serves.
+pub const SERVE_SPECS: [&str; 5] = [
+    "sru:f32:512x4",
+    "sru:q8:512x4",
+    "qrnn:f32:512x4",
+    "lstm:f32:512x4",
+    "sru:f32:512x4,l3=sru:q8",
+];
+
+/// ABL6 (extension): serving-path wall-clock per stack spec — every row
+/// runs through the same `NativeStack` dyn-dispatch path the coordinator
+/// serves, at block size T=16.  The note records each spec's per-block
+/// weight traffic (the int8 rows fetch ~4x less than their f32 twins).
+pub fn stack_spec_serving(samples: usize, opts: &BenchOpts) -> Result<Table, String> {
+    use crate::engine::NativeStack;
+    use crate::models::config::StackSpec;
+    use crate::models::StackParams;
+
+    let t = 16usize;
+    let mut table = Table::new(format!(
+        "ABL6: stack specs through the composable serve API (T={t}, native host)"
+    ));
+    let mut note = String::from("weight bytes/block:");
+    for s in SERVE_SPECS {
+        let spec = StackSpec::parse(s)?;
+        let params = StackParams::init(&spec, &mut Rng::new(WEIGHT_SEED))?;
+        let mut stack = NativeStack::new(&spec, params, t)?;
+        let mut state = stack.init_state();
+        let x = gaussian_frames(&mut Rng::new(7), samples, spec.feat, 1.0);
+        let mut logits = vec![0.0; t * spec.vocab];
+        let m = bench(s, opts, || {
+            // Serve `samples` frames as T-sized blocks, state carried —
+            // the coordinator's steady-state dispatch pattern.
+            let mut s0 = 0;
+            while s0 < samples {
+                let tt = t.min(samples - s0);
+                stack
+                    .run_block(
+                        &x[s0 * spec.feat..(s0 + tt) * spec.feat],
+                        tt,
+                        &mut state,
+                        &mut logits[..tt * spec.vocab],
+                    )
+                    .expect("spec-built stack must serve its own shapes");
+                s0 += tt;
+            }
+        });
+        table.push(s, m.median_ms(), None);
+        note.push_str(&format!(
+            " {}={}K",
+            s,
+            stack.weight_bytes_per_block() / 1024
+        ));
+    }
+    table.compute_speedups(SERVE_SPECS[0]);
+    table.note = note;
+    Ok(table)
+}
+
 /// ABL3: energy per sample vs T (the title's "low power" claim).
 pub fn ablation_energy(arch: Arch, size: ModelSize, samples: usize) -> Table {
     let mut t = Table::new(format!(

@@ -72,16 +72,28 @@ COMMANDS:
   tables     regenerate paper tables        [--exp t1..t8|all] [--samples N]
                                             [--iters N] [--csv]
   figures    regenerate paper figures 5/6   [--fig 5|6|all] [--samples N] [--csv]
-  ablation   run ablations                  --exp dram|lstm-precompute|energy|quant
+  ablation   run ablations                  --exp dram|lstm-precompute|energy|quant|stacks
   simulate   one memsim point               --cpu intel|arm --arch sru|qrnn|lstm
                                             --size small|large --t N [--samples N]
   parity     check artifacts vs JAX goldens [--artifacts DIR] [--filter SUBSTR]
-  serve      streaming TCP server           [--artifacts DIR] [--stack NAME]
+  serve      streaming TCP server           [--artifacts DIR] [--stack SPEC]
                                             [--backend native|pjrt] [--port P]
                                             [--block N | --adaptive]
-                                            [--max-wait-ms N]
+                                            [--max-wait-ms N] [--max-block N]
   info       model/platform inventory
   help       this text
+
+STACK SPECS (native serve; one weight set, any layer kind x precision):
+  <arch>:<prec>:<hidden>x<depth>[,feat=N][,vocab=N][,l<i>=<arch>:<prec>]
+    arch: sru | qrnn | lstm        prec: f32 | q8 (sru only)
+    defaults: feat=40 vocab=32 (the ASR front end)
+  examples:
+    sru:f32:512x4             the served SRU stack (alias: asr_sru_512x4)
+    qrnn:f32:512x4            QRNN stack           (alias: asr_qrnn_512x4)
+    lstm:f32:512x4            LSTM baseline stack
+    sru:q8:512x4              int8 SRU weights (~4x less DRAM per block)
+    sru:f32:512x4,l3=sru:q8   mixed precision: int8 final layer
+  the pjrt backend instead takes AOT artifact stack names (asr_sru_512x4).
 ";
 
 #[cfg(test)]

@@ -31,8 +31,10 @@ pub trait BlockBackend {
         state: &mut StreamState,
     ) -> Result<Vec<f32>, String>;
 
-    /// Weight bytes fetched per block dispatch (power accounting).
-    fn weight_bytes_per_block(&self) -> usize;
+    /// Weight bytes fetched by a dispatch of `t` frames (power
+    /// accounting; `t` matters for cells with per-step weight terms,
+    /// e.g. LSTM's `U @ h`).
+    fn weight_bytes_per_block(&self, t: usize) -> usize;
 }
 
 /// Native-engine backend supporting every block size up to `max_block`.
@@ -68,7 +70,9 @@ impl BlockBackend for NativeBackend {
     }
 
     fn init_state(&self) -> StreamState {
-        StreamState::zeros(self.stack.config())
+        // Derived from the layers' state layouts, not from an arch
+        // switch — mixed and LSTM stacks get the right slots.
+        self.stack.init_state()
     }
 
     fn run_block(
@@ -79,33 +83,35 @@ impl BlockBackend for NativeBackend {
     ) -> Result<Vec<f32>, String> {
         let vocab = self.stack.config().vocab;
         let mut logits = vec![0.0; t * vocab];
-        self.stack.run_block(x, t, state, &mut logits);
+        self.stack.run_block(x, t, state, &mut logits)?;
         Ok(logits)
     }
 
-    fn weight_bytes_per_block(&self) -> usize {
-        let cfg = self.stack.config();
-        cfg.param_count() * std::mem::size_of::<f32>()
+    fn weight_bytes_per_block(&self, t: usize) -> usize {
+        // Delegated to the stack, which sums its layers' own reports —
+        // int8 layers count one byte per weight and LSTM layers count
+        // `U` per actually-dispatched step, so the coordinator metrics
+        // see true per-block DRAM traffic (the old `param_count * 4`
+        // assumed f32 everywhere and could not see precision or `t`).
+        self.stack.weight_bytes_for_block(t)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::models::config::Arch;
+    use crate::models::config::{Arch, LayerSpec, Precision, StackSpec};
     use crate::models::StackParams;
     use crate::util::Rng;
 
+    fn backend_for(spec: &StackSpec, max_block: usize) -> NativeBackend {
+        let params = StackParams::init(spec, &mut Rng::new(0)).unwrap();
+        NativeBackend::new(NativeStack::new(spec, params, max_block).unwrap())
+    }
+
     fn tiny() -> NativeBackend {
-        let cfg = StackConfig {
-            arch: Arch::Sru,
-            feat: 8,
-            hidden: 16,
-            depth: 2,
-            vocab: 4,
-        };
-        let params = StackParams::init(&cfg, &mut Rng::new(0));
-        NativeBackend::new(NativeStack::new(cfg, params, 12))
+        let spec = StackSpec::new(8, 16, 4).with_layers(LayerSpec::f32(Arch::Sru), 2);
+        backend_for(&spec, 12)
     }
 
     #[test]
@@ -121,5 +127,37 @@ mod tests {
         let x = vec![0.1; 4 * 8];
         let logits = b.run_block(&x, 4, &mut st).unwrap();
         assert_eq!(logits.len(), 4 * 4);
+        // Shape problems surface as Err through the trait, not a panic.
+        assert!(b.run_block(&x, 3, &mut st).is_err());
+    }
+
+    #[test]
+    fn weight_bytes_delegate_to_layers() {
+        let f32_spec = StackSpec::new(8, 16, 4).with_layers(LayerSpec::f32(Arch::Sru), 2);
+        let q8_spec = StackSpec::new(8, 16, 4)
+            .with_layers(LayerSpec::new(Arch::Sru, Precision::Q8).unwrap(), 2);
+        let bf = backend_for(&f32_spec, 4);
+        let bq = backend_for(&q8_spec, 4);
+        // int8 stacks must report genuinely smaller per-block traffic —
+        // the old param_count * sizeof(f32) could not see precision.
+        assert!(bq.weight_bytes_per_block(4) < bf.weight_bytes_per_block(4));
+        // And the layer portion shrinks ~4x (scales cost a little).
+        let layer_f32 = 2 * 3 * 16 * 16 * 4;
+        let layer_q8 = 2 * (3 * 16 * 16 + 3 * 16 * 4);
+        assert_eq!(
+            bf.weight_bytes_per_block(4) - layer_f32,
+            bq.weight_bytes_per_block(4) - layer_q8,
+            "proj/head bytes must be identical across precisions"
+        );
+        // SRU/QRNN weights are fetched once per block whatever t is.
+        assert_eq!(bf.weight_bytes_per_block(1), bf.weight_bytes_per_block(4));
+        // LSTM stacks report W + t*U for the *dispatched* t through the
+        // same path — a t=1 dispatch must not be billed at max_block.
+        let lstm_spec = StackSpec::new(8, 16, 4).with_layers(LayerSpec::f32(Arch::Lstm), 1);
+        let bl = backend_for(&lstm_spec, 4);
+        let (w, u) = (4 * 16 * 16 * 4, 4 * 16 * 16 * 4);
+        let fixed = bf.weight_bytes_per_block(4) - layer_f32;
+        assert_eq!(bl.weight_bytes_per_block(4), fixed + w + 4 * u);
+        assert_eq!(bl.weight_bytes_per_block(1), fixed + w + u);
     }
 }

@@ -190,7 +190,7 @@ impl<B: BlockBackend> Coordinator<B> {
             sess.push_ready(&logits);
             let done = Instant::now();
             self.metrics
-                .on_block(t, self.backend.weight_bytes_per_block(), &arrivals, done);
+                .on_block(t, self.backend.weight_bytes_per_block(t), &arrivals, done);
         }
         Ok(blocks.len())
     }
@@ -201,20 +201,14 @@ mod tests {
     use super::*;
     use crate::coordinator::backend::NativeBackend;
     use crate::engine::NativeStack;
-    use crate::models::config::{Arch, StackConfig};
+    use crate::models::config::{Arch, LayerSpec, StackSpec};
     use crate::models::StackParams;
     use crate::util::Rng;
 
     fn coord(policy: PolicyMode, max_wait_ms: u64) -> Coordinator<NativeBackend> {
-        let cfg = StackConfig {
-            arch: Arch::Sru,
-            feat: 8,
-            hidden: 16,
-            depth: 2,
-            vocab: 4,
-        };
-        let params = StackParams::init(&cfg, &mut Rng::new(0));
-        let backend = NativeBackend::new(NativeStack::new(cfg, params, 16));
+        let spec = StackSpec::new(8, 16, 4).with_layers(LayerSpec::f32(Arch::Sru), 2);
+        let params = StackParams::init(&spec, &mut Rng::new(0)).unwrap();
+        let backend = NativeBackend::new(NativeStack::new(&spec, params, 16).unwrap());
         Coordinator::new(
             backend,
             CoordinatorConfig {

@@ -10,8 +10,9 @@
 //!   can cut weight traffic *at most in half*, which the ABL2 ablation
 //!   measures.
 
-use crate::engine::{check_io, Engine};
+use crate::engine::{check_io, Engine, RecurrentLayer};
 use crate::linalg::{fast_sigmoid, fast_tanh, Epilogue, PackedGemm};
+use crate::models::config::StateLayout;
 use crate::models::LstmParams;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -177,6 +178,31 @@ impl Engine for LstmEngine {
         // Per block: W once, plus U once per step in the block.
         let t = self.block_size();
         (self.pg_w.weight_len() + t * self.pg_u.weight_len()) * std::mem::size_of::<f32>()
+    }
+}
+
+impl RecurrentLayer for LstmEngine {
+    fn state_layout(&self) -> StateLayout {
+        StateLayout::new()
+            .slot("h", self.hidden)
+            .slot("c", self.hidden)
+    }
+
+    fn weight_bytes_for_block(&self, t: usize) -> usize {
+        // W once per dispatch, U once per step actually processed — the
+        // Engine figure assumes a full `block_size()` block and would
+        // overstate small dispatches.
+        (self.pg_w.weight_len() + t * self.pg_u.weight_len()) * std::mem::size_of::<f32>()
+    }
+
+    fn load_state(&mut self, slots: &[Vec<f32>]) {
+        self.set_state(&slots[0], &slots[1]);
+    }
+
+    fn save_state(&self, slots: &mut [Vec<f32>]) {
+        let (h, c) = self.state();
+        slots[0].copy_from_slice(h);
+        slots[1].copy_from_slice(c);
     }
 }
 

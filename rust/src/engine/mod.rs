@@ -32,6 +32,9 @@ pub use quant::{QuantMatrix, QuantSruEngine};
 pub use sru::SruEngine;
 pub use stack::{NativeStack, StreamState};
 
+use crate::models::config::{Arch, LayerSpec, Precision, StateLayout};
+use crate::models::LayerParams;
+
 /// A single-stream RNN inference engine.
 ///
 /// `x` is time-major `[steps, input]`; `out` is time-major
@@ -51,6 +54,65 @@ pub trait Engine {
     /// Weight bytes fetched per processed *block* (the DRAM unit the
     /// paper counts; see memsim for the cache-accurate version).
     fn weight_bytes_per_block(&self) -> usize;
+}
+
+/// A stackable single-stream layer: an [`Engine`] whose per-stream
+/// recurrent state can be swapped in and out, so one weight set serves
+/// many sessions through `NativeStack` / the coordinator.
+///
+/// The state is a flat list of slots described by [`StateLayout`]; slot
+/// order is pinned to `python/compile/model.py::stack_flat_order`
+/// (`c` for SRU, `c`+`xprev` for QRNN, `h`+`c` for LSTM).  `load_state`
+/// / `save_state` receive exactly `state_layout().slot_count()` slices
+/// with the advertised lengths — the stack validates shapes before
+/// dispatching, so implementations may index unchecked.
+pub trait RecurrentLayer: Engine {
+    /// Describe this layer's per-stream state slots.
+    fn state_layout(&self) -> StateLayout;
+    /// Load a stream's state (one slice per slot, layout order).
+    fn load_state(&mut self, slots: &[Vec<f32>]);
+    /// Store the current state back (one slice per slot, layout order).
+    fn save_state(&self, slots: &mut [Vec<f32>]);
+    /// Weight bytes fetched for a dispatch of `t` frames.  Defaults to
+    /// the `Engine` per-block figure, which is correct for cells whose
+    /// weights are fetched once per block regardless of `t` (SRU/QRNN);
+    /// cells with a per-step weight term (LSTM's `U @ h`) override it so
+    /// coordinator metrics reflect the actual dispatch size.
+    fn weight_bytes_for_block(&self, _t: usize) -> usize {
+        self.weight_bytes_per_block()
+    }
+}
+
+/// Build a boxed layer for `spec` from its parameters — the single
+/// place where layer kind × precision is dispatched on the engine side
+/// (the params twin is `LayerParams`).  Adding a cell type or precision
+/// means a new `RecurrentLayer` impl plus one arm here; nothing else in
+/// the stack, backend, or coordinator changes.
+pub fn build_layer(
+    spec: &LayerSpec,
+    params: &LayerParams,
+    max_block: usize,
+) -> Result<Box<dyn RecurrentLayer>, String> {
+    match (spec.arch, spec.precision, params) {
+        (Arch::Sru, Precision::F32, LayerParams::Sru(p)) => {
+            Ok(Box::new(SruEngine::new(p.clone(), max_block)))
+        }
+        (Arch::Sru, Precision::Q8, LayerParams::Sru(p)) => {
+            Ok(Box::new(QuantSruEngine::new(p, max_block)))
+        }
+        (Arch::Qrnn, Precision::F32, LayerParams::Qrnn(p)) => {
+            Ok(Box::new(QrnnEngine::new(p.clone(), max_block)))
+        }
+        (Arch::Lstm, Precision::F32, LayerParams::Lstm(p)) => Ok(Box::new(LstmEngine::new(
+            p.clone(),
+            LstmMode::Precompute(max_block),
+        ))),
+        _ => Err(format!(
+            "layer spec {} cannot be built from {} params",
+            spec.name(),
+            params.kind()
+        )),
+    }
 }
 
 /// Validate the common run_sequence contract; panics with a clear message

@@ -5,8 +5,9 @@
 //! still enjoy the once-per-block weight fetch, and the second fuses
 //! bias + gate activations into its accumulate-store.
 
-use crate::engine::{check_io, Engine};
+use crate::engine::{check_io, Engine, RecurrentLayer};
 use crate::linalg::{fast_tanh, Epilogue, PackedGemm};
+use crate::models::config::StateLayout;
 use crate::models::QrnnParams;
 
 #[derive(Debug, Clone)]
@@ -152,6 +153,24 @@ impl Engine for QrnnEngine {
 
     fn weight_bytes_per_block(&self) -> usize {
         (self.pg_cur.weight_len() + self.pg_prev.weight_len()) * std::mem::size_of::<f32>()
+    }
+}
+
+impl RecurrentLayer for QrnnEngine {
+    fn state_layout(&self) -> StateLayout {
+        StateLayout::new()
+            .slot("c", self.hidden)
+            .slot("xprev", self.input)
+    }
+
+    fn load_state(&mut self, slots: &[Vec<f32>]) {
+        self.set_state(&slots[0], &slots[1]);
+    }
+
+    fn save_state(&self, slots: &mut [Vec<f32>]) {
+        let (c, xp) = self.state();
+        slots[0].copy_from_slice(c);
+        slots[1].copy_from_slice(xp);
     }
 }
 

@@ -21,8 +21,9 @@
 //! f32 engine is property-tested below (and is far below the sigmoid's
 //! useful resolution for realistic weight scales).
 
-use crate::engine::{check_io, Engine};
+use crate::engine::{check_io, Engine, RecurrentLayer};
 use crate::linalg::{fast_tanh, Epilogue, PackedQuantGemm};
+use crate::models::config::StateLayout;
 use crate::models::SruParams;
 
 /// Per-row symmetric int8 quantization of a `[rows, cols]` f32 matrix.
@@ -133,6 +134,17 @@ impl QuantSruEngine {
         }
     }
 
+    /// Access the cell state (session state swap in the stack, same
+    /// contract as `SruEngine::state`).
+    pub fn state(&self) -> &[f32] {
+        &self.c
+    }
+
+    pub fn set_state(&mut self, c: &[f32]) {
+        assert_eq!(c.len(), self.hidden);
+        self.c.copy_from_slice(c);
+    }
+
     /// Max absolute quantization error vs the original f32 weights,
     /// computed straight from the panel layout.
     pub fn quant_error(&self, params: &SruParams) -> f32 {
@@ -214,6 +226,22 @@ impl Engine for QuantSruEngine {
 
     fn weight_bytes_per_block(&self) -> usize {
         self.pq.weight_bytes()
+    }
+}
+
+impl RecurrentLayer for QuantSruEngine {
+    fn state_layout(&self) -> StateLayout {
+        // Same recurrence, same state as the f32 SRU: precision changes
+        // the weights only.
+        StateLayout::new().slot("c", self.hidden)
+    }
+
+    fn load_state(&mut self, slots: &[Vec<f32>]) {
+        self.set_state(&slots[0]);
+    }
+
+    fn save_state(&self, slots: &mut [Vec<f32>]) {
+        slots[0].copy_from_slice(self.state());
     }
 }
 

@@ -1,7 +1,8 @@
 //! SRU engine with multi-time-step parallelization (paper §3.2, Eq. 2/4).
 
-use crate::engine::{check_io, Engine};
+use crate::engine::{check_io, Engine, RecurrentLayer};
 use crate::linalg::{fast_tanh, Epilogue, PackedGemm};
+use crate::models::config::StateLayout;
 use crate::models::SruParams;
 
 /// Single-stream SRU inference with block size `t_block`.
@@ -137,6 +138,20 @@ impl Engine for SruEngine {
 
     fn weight_bytes_per_block(&self) -> usize {
         self.pg.weight_len() * std::mem::size_of::<f32>()
+    }
+}
+
+impl RecurrentLayer for SruEngine {
+    fn state_layout(&self) -> StateLayout {
+        StateLayout::new().slot("c", self.hidden)
+    }
+
+    fn load_state(&mut self, slots: &[Vec<f32>]) {
+        self.set_state(&slots[0]);
+    }
+
+    fn save_state(&self, slots: &mut [Vec<f32>]) {
+        slots[0].copy_from_slice(self.state());
     }
 }
 

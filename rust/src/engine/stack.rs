@@ -1,37 +1,49 @@
 //! Native execution of the full served stack (input projection → N
-//! SRU/QRNN layers → output head) — the CPU-engine twin of the AOT
+//! recurrent layers → output head) — the CPU-engine twin of the AOT
 //! `stack_*.hlo.txt` artifacts.
+//!
+//! The stack is *composable*: its layers are `Box<dyn RecurrentLayer>`
+//! built by `engine::build_layer` from a [`StackSpec`] (cell kind ×
+//! weight precision per layer), so SRU, QRNN, LSTM and int8-SRU layers —
+//! in any mix — serve through one code path with no arch branching
+//! anywhere in this file.  Adding a cell type is a `RecurrentLayer`
+//! impl plus a factory arm, not a stack change.
 //!
 //! Designed for the coordinator: the stack itself is stateless across
 //! calls; per-stream recurrent state lives in a [`StreamState`] that the
 //! caller swaps in and out, so one weight set serves many sessions.
+//! Every user-reachable shape/spec problem is a `Result::Err`, never a
+//! panic — `mtsrnn serve` must not abort on a bad request.
 
-use crate::engine::{Engine, QrnnEngine, SruEngine};
+use crate::engine::{build_layer, Engine, RecurrentLayer};
 use crate::linalg::{Act, Epilogue, PackedGemm};
-use crate::models::config::{Arch, StackConfig};
+use crate::models::config::{StackConfig, StackSpec};
 use crate::models::StackParams;
 
 /// The projection activation, fused into its GEMM epilogue.
 const PROJ_ACTS: [Act; 1] = [Act::Tanh];
 
-/// Per-stream recurrent state: one entry per state tensor, in the same
-/// order as `python/compile/model.py::stack_flat_order` (c per layer,
-/// plus x_prev per layer for QRNN).
+/// Per-stream recurrent state: one tensor per layer state slot, in the
+/// same order as `python/compile/model.py::stack_flat_order` — derived
+/// from the layers' `StateLayout`s (`c` per SRU layer, `c` + `xprev`
+/// per QRNN layer, `h` + `c` per LSTM layer).
 #[derive(Debug, Clone, PartialEq)]
 pub struct StreamState {
     pub tensors: Vec<Vec<f32>>,
 }
 
 impl StreamState {
-    pub fn zeros(cfg: &StackConfig) -> Self {
-        let mut tensors = Vec::new();
-        for _ in 0..cfg.depth {
-            tensors.push(vec![0.0; cfg.hidden]);
-            if cfg.arch == Arch::Qrnn {
-                tensors.push(vec![0.0; cfg.hidden]);
-            }
+    /// Zero state with the given slot lengths.
+    pub fn from_lens(lens: &[usize]) -> Self {
+        Self {
+            tensors: lens.iter().map(|&n| vec![0.0; n]).collect(),
         }
-        Self { tensors }
+    }
+
+    /// Zero state for a uniform-arch stack shape (the PJRT artifact
+    /// path); spec-built stacks use [`NativeStack::init_state`].
+    pub fn zeros(cfg: &StackConfig) -> Self {
+        Self::from_lens(&StackSpec::from_config(cfg).state_lens())
     }
 
     /// Bytes of state (session-table sizing in the coordinator).
@@ -43,6 +55,8 @@ impl StreamState {
 /// Native stack engine with a maximum block size; weights shared across
 /// all sessions via state swap-in/swap-out.
 pub struct NativeStack {
+    spec: StackSpec,
+    /// Legacy shape view of `spec` (coordinator/PJRT-compatible).
     cfg: StackConfig,
     /// `[H, feat]` projection weights, panel-packed (tanh+bias fused).
     pg_proj: PackedGemm,
@@ -50,8 +64,13 @@ pub struct NativeStack {
     /// `[vocab, H]` head weights, panel-packed (bias fused).
     pg_head: PackedGemm,
     head_b: Vec<f32>,
-    sru: Vec<SruEngine>,
-    qrnn: Vec<QrnnEngine>,
+    /// The recurrent layers, dyn-dispatched; built by `build_layer`.
+    layers: Vec<Box<dyn RecurrentLayer>>,
+    /// State slots per layer (precomputed from the layouts: the block
+    /// hot path must not allocate or re-derive layouts).
+    layer_slots: Vec<usize>,
+    /// Flat expected slot lengths (state validation + `init_state`).
+    state_lens: Vec<usize>,
     max_block: usize,
     // scratch
     hcur: Vec<f32>,  // [T, H]
@@ -61,42 +80,76 @@ pub struct NativeStack {
 }
 
 impl NativeStack {
-    pub fn new(cfg: StackConfig, params: StackParams, max_block: usize) -> Self {
-        assert!(max_block >= 1);
-        let h = cfg.hidden;
-        let mut sru = Vec::new();
-        let mut qrnn = Vec::new();
-        match cfg.arch {
-            Arch::Sru => {
-                assert_eq!(params.sru_layers.len(), cfg.depth);
-                for lp in &params.sru_layers {
-                    sru.push(SruEngine::new(lp.clone(), max_block));
-                }
-            }
-            Arch::Qrnn => {
-                assert_eq!(params.qrnn_layers.len(), cfg.depth);
-                for lp in &params.qrnn_layers {
-                    qrnn.push(QrnnEngine::new(lp.clone(), max_block));
-                }
-            }
-            Arch::Lstm => panic!("stack supports sru/qrnn only"),
+    pub fn new(spec: &StackSpec, params: StackParams, max_block: usize) -> Result<Self, String> {
+        spec.validate()?;
+        if max_block < 1 {
+            return Err("max_block must be >= 1".into());
         }
-        let pg_proj = PackedGemm::new(params.proj_w.data(), h, cfg.feat);
-        let pg_head = PackedGemm::new(params.head_w.data(), cfg.vocab, h);
-        Self {
+        let (h, feat, vocab) = (spec.hidden, spec.feat, spec.vocab);
+        if params.layers.len() != spec.depth() {
+            return Err(format!(
+                "params carry {} layers, spec {} has {}",
+                params.layers.len(),
+                spec.name(),
+                spec.depth()
+            ));
+        }
+        if params.proj_w.rows() != h || params.proj_w.cols() != feat || params.proj_b.len() != h {
+            return Err(format!(
+                "projection params {}x{}/b{} do not match spec {}x{feat}",
+                params.proj_w.rows(),
+                params.proj_w.cols(),
+                params.proj_b.len(),
+                h
+            ));
+        }
+        let head_ok = params.head_w.rows() == vocab
+            && params.head_w.cols() == h
+            && params.head_b.len() == vocab;
+        if !head_ok {
+            return Err(format!(
+                "head params {}x{}/b{} do not match spec {vocab}x{h}",
+                params.head_w.rows(),
+                params.head_w.cols(),
+                params.head_b.len()
+            ));
+        }
+        let mut layers: Vec<Box<dyn RecurrentLayer>> = Vec::with_capacity(spec.depth());
+        for (i, (ls, lp)) in spec.layers.iter().zip(&params.layers).enumerate() {
+            lp.shape_check(h).map_err(|e| format!("layer {i}: {e}"))?;
+            layers.push(build_layer(ls, lp, max_block).map_err(|e| format!("layer {i}: {e}"))?);
+        }
+        let mut layer_slots = Vec::with_capacity(layers.len());
+        let mut state_lens = Vec::new();
+        for l in &layers {
+            let layout = l.state_layout();
+            layer_slots.push(layout.slot_count());
+            for s in &layout.slots {
+                state_lens.push(s.len);
+            }
+        }
+        let pg_proj = PackedGemm::new(params.proj_w.data(), h, feat);
+        let pg_head = PackedGemm::new(params.head_w.data(), vocab, h);
+        Ok(Self {
+            cfg: spec.config(),
+            spec: spec.clone(),
             pg_proj,
             proj_b: params.proj_b,
             pg_head,
             head_b: params.head_b,
-            sru,
-            qrnn,
+            layers,
+            layer_slots,
+            state_lens,
             max_block,
             hcur: vec![0.0; h * max_block],
             hnext: vec![0.0; h * max_block],
             proj: vec![0.0; h * max_block],
-            logit: vec![0.0; cfg.vocab * max_block],
-            cfg,
-        }
+            logit: vec![0.0; vocab * max_block],
+        })
+    }
+
+    pub fn spec(&self) -> &StackSpec {
+        &self.spec
     }
 
     pub fn config(&self) -> &StackConfig {
@@ -107,43 +160,69 @@ impl NativeStack {
         self.max_block
     }
 
+    /// Fresh zero state matching this stack's layer layouts.
+    pub fn init_state(&self) -> StreamState {
+        StreamState::from_lens(&self.state_lens)
+    }
+
+    /// Weight bytes fetched for a full `max_block`-sized dispatch.
+    pub fn weight_bytes_per_block(&self) -> usize {
+        self.weight_bytes_for_block(self.max_block)
+    }
+
+    /// Weight bytes fetched for a dispatch of `t` frames, summed over
+    /// projection, layers (each reporting its own precision and
+    /// per-step terms: int8 layers count one byte per weight, LSTM
+    /// layers count `U` once per step) and head — the coordinator's
+    /// DRAM-traffic unit.
+    pub fn weight_bytes_for_block(&self, t: usize) -> usize {
+        let fixed =
+            (self.pg_proj.weight_len() + self.pg_head.weight_len()) * std::mem::size_of::<f32>();
+        fixed
+            + self
+                .layers
+                .iter()
+                .map(|l| l.weight_bytes_for_block(t))
+                .sum::<usize>()
+    }
+
+    fn check_state(&self, state: &StreamState) -> Result<(), String> {
+        if state.tensors.len() != self.state_lens.len() {
+            return Err(format!(
+                "stream state has {} tensors, stack {} expects {}",
+                state.tensors.len(),
+                self.spec.name(),
+                self.state_lens.len()
+            ));
+        }
+        for (i, (t, &n)) in state.tensors.iter().zip(&self.state_lens).enumerate() {
+            if t.len() != n {
+                return Err(format!(
+                    "stream state tensor {i} has len {}, expected {n}",
+                    t.len()
+                ));
+            }
+        }
+        Ok(())
+    }
+
     /// Load a stream's recurrent state into the layer engines.
     fn load_state(&mut self, state: &StreamState) {
         let mut idx = 0;
-        match self.cfg.arch {
-            Arch::Sru => {
-                for e in &mut self.sru {
-                    e.set_state(&state.tensors[idx]);
-                    idx += 1;
-                }
-            }
-            _ => {
-                for e in &mut self.qrnn {
-                    e.set_state(&state.tensors[idx], &state.tensors[idx + 1]);
-                    idx += 2;
-                }
-            }
+        for (li, layer) in self.layers.iter_mut().enumerate() {
+            let n = self.layer_slots[li];
+            layer.load_state(&state.tensors[idx..idx + n]);
+            idx += n;
         }
     }
 
     /// Store the layer engines' state back into the stream's state.
     fn save_state(&self, state: &mut StreamState) {
         let mut idx = 0;
-        match self.cfg.arch {
-            Arch::Sru => {
-                for e in &self.sru {
-                    state.tensors[idx].copy_from_slice(e.state());
-                    idx += 1;
-                }
-            }
-            _ => {
-                for e in &self.qrnn {
-                    let (c, xp) = e.state();
-                    state.tensors[idx].copy_from_slice(c);
-                    state.tensors[idx + 1].copy_from_slice(xp);
-                    idx += 2;
-                }
-            }
+        for (li, layer) in self.layers.iter().enumerate() {
+            let n = self.layer_slots[li];
+            layer.save_state(&mut state.tensors[idx..idx + n]);
+            idx += n;
         }
     }
 
@@ -155,11 +234,24 @@ impl NativeStack {
         t: usize,
         state: &mut StreamState,
         logits_out: &mut [f32],
-    ) {
+    ) -> Result<(), String> {
         let (feat, h, vocab) = (self.cfg.feat, self.cfg.hidden, self.cfg.vocab);
-        assert!(t >= 1 && t <= self.max_block, "block size {t}");
-        assert_eq!(x.len(), t * feat, "x must be [t, feat]");
-        assert_eq!(logits_out.len(), t * vocab, "logits must be [t, vocab]");
+        if t < 1 || t > self.max_block {
+            return Err(format!(
+                "block size {t} outside 1..={}",
+                self.max_block
+            ));
+        }
+        if x.len() != t * feat {
+            return Err(format!("x has len {}, must be [t={t}, feat={feat}]", x.len()));
+        }
+        if logits_out.len() != t * vocab {
+            return Err(format!(
+                "logits buffer has len {}, must be [t={t}, vocab={vocab}]",
+                logits_out.len()
+            ));
+        }
+        self.check_state(state)?;
 
         self.load_state(state);
 
@@ -182,19 +274,17 @@ impl NativeStack {
             }
         }
 
-        // Recurrent layers.
-        for li in 0..self.cfg.depth {
+        // Recurrent layers — dyn dispatch, no kind branching: every
+        // layer consumes/produces time-major `[t, H]` frames.
+        for li in 0..self.layers.len() {
             let hnext = &mut self.hnext[..t * h];
-            match self.cfg.arch {
-                Arch::Sru => self.sru[li].run_sequence(&self.hcur[..t * h], t, hnext),
-                _ => self.qrnn[li].run_sequence(&self.hcur[..t * h], t, hnext),
-            }
+            self.layers[li].run_sequence(&self.hcur[..t * h], t, hnext);
             std::mem::swap(&mut self.hcur, &mut self.hnext);
         }
 
         // Output head: logits [vocab, t] = head_w @ H^T + b — the packed
-        // GEMM consumes the time-major hidden frames directly (the old
-        // [t, H] -> [H, t] transpose is gone), bias fused.
+        // GEMM consumes the time-major hidden frames directly, bias
+        // fused.
         let logit = &mut self.logit[..vocab * t];
         self.pg_head.matmul(
             logit,
@@ -210,52 +300,49 @@ impl NativeStack {
         }
 
         self.save_state(state);
+        Ok(())
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::models::config::ASR_SRU;
+    use crate::models::config::{Arch, LayerSpec, Precision, ASR_SRU};
     use crate::util::Rng;
 
-    fn tiny_cfg(arch: Arch) -> StackConfig {
-        StackConfig {
-            arch,
-            feat: 8,
-            hidden: 16,
-            depth: 2,
-            vocab: 4,
-        }
+    fn tiny_spec(arch: Arch) -> StackSpec {
+        StackSpec::new(8, 16, 4).with_layers(LayerSpec::f32(arch), 2)
     }
 
     #[test]
     fn block_sizes_agree() {
-        for arch in [Arch::Sru, Arch::Qrnn] {
-            let cfg = tiny_cfg(arch);
-            let params = StackParams::init(&cfg, &mut Rng::new(42));
+        // LSTM stacks — impossible pre-refactor — go through the same
+        // dyn path as SRU/QRNN.
+        for arch in [Arch::Sru, Arch::Qrnn, Arch::Lstm] {
+            let spec = tiny_spec(arch);
+            let params = StackParams::init(&spec, &mut Rng::new(42)).unwrap();
             let steps = 11;
-            let mut x = vec![0.0; steps * cfg.feat];
+            let mut x = vec![0.0; steps * spec.feat];
             Rng::new(1).fill_normal(&mut x, 1.0);
 
             // Reference: block size = whole sequence.
-            let mut full = NativeStack::new(cfg, params.clone(), steps);
-            let mut st_full = StreamState::zeros(&cfg);
-            let mut want = vec![0.0; steps * cfg.vocab];
-            full.run_block(&x, steps, &mut st_full, &mut want);
+            let mut full = NativeStack::new(&spec, params.clone(), steps).unwrap();
+            let mut st_full = full.init_state();
+            let mut want = vec![0.0; steps * spec.vocab];
+            full.run_block(&x, steps, &mut st_full, &mut want).unwrap();
 
             // Chunked: 4+4+3 through a max_block=4 stack.
-            let mut chunked = NativeStack::new(cfg, params, 4);
-            let mut st = StreamState::zeros(&cfg);
-            let mut got = vec![0.0; steps * cfg.vocab];
+            let mut chunked = NativeStack::new(&spec, params, 4).unwrap();
+            let mut st = chunked.init_state();
+            let mut got = vec![0.0; steps * spec.vocab];
             let mut s = 0;
             while s < steps {
                 let t = 4.min(steps - s);
                 let (xs, os) = (
-                    &x[s * cfg.feat..(s + t) * cfg.feat],
-                    &mut got[s * cfg.vocab..(s + t) * cfg.vocab],
+                    &x[s * spec.feat..(s + t) * spec.feat],
+                    &mut got[s * spec.vocab..(s + t) * spec.vocab],
                 );
-                chunked.run_block(xs, t, &mut st, os);
+                chunked.run_block(xs, t, &mut st, os).unwrap();
                 s += t;
             }
             for (i, (g, w)) in got.iter().zip(&want).enumerate() {
@@ -273,49 +360,55 @@ mod tests {
     #[test]
     fn sessions_are_isolated() {
         // Two streams interleaved through one engine must behave as if
-        // each had its own engine — the state-swap contract.
-        let cfg = tiny_cfg(Arch::Sru);
-        let params = StackParams::init(&cfg, &mut Rng::new(7));
-        let mut eng = NativeStack::new(cfg, params.clone(), 4);
+        // each had its own engine — the state-swap contract.  Run it
+        // through a mixed-precision stack so the int8 layer's state swap
+        // is exercised too.
+        let spec = tiny_spec(Arch::Sru)
+            .with_layer(LayerSpec::new(Arch::Sru, Precision::Q8).unwrap());
+        let params = StackParams::init(&spec, &mut Rng::new(7)).unwrap();
+        let mut eng = NativeStack::new(&spec, params.clone(), 4).unwrap();
 
-        let mut xa = vec![0.0; 8 * cfg.feat];
-        let mut xb = vec![0.0; 8 * cfg.feat];
+        let mut xa = vec![0.0; 8 * spec.feat];
+        let mut xb = vec![0.0; 8 * spec.feat];
         Rng::new(2).fill_normal(&mut xa, 1.0);
         Rng::new(3).fill_normal(&mut xb, 1.0);
 
         // Interleaved A/B blocks.
-        let mut sa = StreamState::zeros(&cfg);
-        let mut sb = StreamState::zeros(&cfg);
-        let mut la = vec![0.0; 8 * cfg.vocab];
-        let mut lb = vec![0.0; 8 * cfg.vocab];
+        let mut sa = eng.init_state();
+        let mut sb = eng.init_state();
+        let mut la = vec![0.0; 8 * spec.vocab];
+        let mut lb = vec![0.0; 8 * spec.vocab];
         for blk in 0..2 {
             let r = blk * 4;
             eng.run_block(
-                &xa[r * cfg.feat..(r + 4) * cfg.feat],
+                &xa[r * spec.feat..(r + 4) * spec.feat],
                 4,
                 &mut sa,
-                &mut la[r * cfg.vocab..(r + 4) * cfg.vocab],
-            );
+                &mut la[r * spec.vocab..(r + 4) * spec.vocab],
+            )
+            .unwrap();
             eng.run_block(
-                &xb[r * cfg.feat..(r + 4) * cfg.feat],
+                &xb[r * spec.feat..(r + 4) * spec.feat],
                 4,
                 &mut sb,
-                &mut lb[r * cfg.vocab..(r + 4) * cfg.vocab],
-            );
+                &mut lb[r * spec.vocab..(r + 4) * spec.vocab],
+            )
+            .unwrap();
         }
 
         // Solo run of stream A.
-        let mut solo = NativeStack::new(cfg, params, 4);
-        let mut ss = StreamState::zeros(&cfg);
-        let mut want = vec![0.0; 8 * cfg.vocab];
+        let mut solo = NativeStack::new(&spec, params, 4).unwrap();
+        let mut ss = solo.init_state();
+        let mut want = vec![0.0; 8 * spec.vocab];
         for blk in 0..2 {
             let r = blk * 4;
             solo.run_block(
-                &xa[r * cfg.feat..(r + 4) * cfg.feat],
+                &xa[r * spec.feat..(r + 4) * spec.feat],
                 4,
                 &mut ss,
-                &mut want[r * cfg.vocab..(r + 4) * cfg.vocab],
-            );
+                &mut want[r * spec.vocab..(r + 4) * spec.vocab],
+            )
+            .unwrap();
         }
         for (g, w) in la.iter().zip(&want) {
             assert!((g - w).abs() < 1e-5, "interleaving changed stream A");
@@ -326,5 +419,59 @@ mod tests {
     fn state_bytes() {
         let st = StreamState::zeros(&ASR_SRU);
         assert_eq!(st.bytes(), 4 * 512 * 4);
+        // Spec-derived state matches the legacy config-derived one.
+        let spec = StackSpec::from_config(&ASR_SRU);
+        let params = StackParams::init(&spec, &mut Rng::new(0)).unwrap();
+        let stack = NativeStack::new(&spec, params, 2).unwrap();
+        assert_eq!(stack.init_state(), st);
+        assert_eq!(spec.state_bytes(), st.bytes());
+    }
+
+    #[test]
+    fn bad_shapes_and_specs_are_errors_not_panics() {
+        let spec = tiny_spec(Arch::Sru);
+        let params = StackParams::init(&spec, &mut Rng::new(4)).unwrap();
+
+        // Params from one spec cannot build a different-kind stack.
+        let lstm_spec = tiny_spec(Arch::Lstm);
+        assert!(NativeStack::new(&lstm_spec, params.clone(), 4).is_err());
+        assert!(NativeStack::new(&spec, params.clone(), 0).is_err());
+
+        let mut stack = NativeStack::new(&spec, params, 4).unwrap();
+        let mut st = stack.init_state();
+        let mut logits = vec![0.0; 2 * spec.vocab];
+        let x = vec![0.0; 2 * spec.feat];
+        // Block size out of range.
+        assert!(stack.run_block(&x, 0, &mut st, &mut logits).is_err());
+        let x9 = vec![0.0; 9 * spec.feat];
+        let mut l9 = vec![0.0; 9 * spec.vocab];
+        assert!(stack.run_block(&x9, 9, &mut st, &mut l9).is_err());
+        // Wrong input/output lengths.
+        assert!(stack.run_block(&x[1..], 2, &mut st, &mut logits).is_err());
+        assert!(stack
+            .run_block(&x, 2, &mut st, &mut logits[1..])
+            .is_err());
+        // Wrong state shape (e.g. a state from another stack kind).
+        let mut bad = StreamState::from_lens(&[16]);
+        assert!(stack.run_block(&x, 2, &mut bad, &mut logits).is_err());
+        // After all those rejections the stack still works.
+        stack.run_block(&x, 2, &mut st, &mut logits).unwrap();
+    }
+
+    #[test]
+    fn quant_stack_weight_bytes_shrink() {
+        let f32_spec = tiny_spec(Arch::Sru);
+        let q8_spec = StackSpec::new(8, 16, 4)
+            .with_layers(LayerSpec::new(Arch::Sru, Precision::Q8).unwrap(), 2);
+        let pf = StackParams::init(&f32_spec, &mut Rng::new(5)).unwrap();
+        let pq = StackParams::init(&q8_spec, &mut Rng::new(5)).unwrap();
+        let sf = NativeStack::new(&f32_spec, pf, 4).unwrap();
+        let sq = NativeStack::new(&q8_spec, pq, 4).unwrap();
+        // proj/head stay f32 in both; the layer bytes drop ~4x.
+        assert!(sq.weight_bytes_per_block() < sf.weight_bytes_per_block());
+        let fixed = sf.weight_bytes_per_block()
+            - 2 * (3 * 16 * 16 * 4); // two f32 sru layers, no panel padding at 3H=48
+        let q8_layer = 3 * 16 * 16 + 3 * 16 * 4; // int8 weights + f32 scales
+        assert_eq!(sq.weight_bytes_per_block(), fixed + 2 * q8_layer);
     }
 }

@@ -8,14 +8,14 @@ use std::time::Duration;
 
 use mtsrnn::bench::tables::{
     ablation_dram, ablation_energy, ablation_lstm_precompute, ablation_quant, cpu_by_name,
-    figure_series, generate_table, sim_ms, PAPER_TABLES,
+    figure_series, generate_table, sim_ms, stack_spec_serving, PAPER_TABLES, SERVE_SPECS,
 };
 use mtsrnn::bench::{ascii_plot, write_report, BenchOpts};
 use mtsrnn::cli::{Args, USAGE};
 use mtsrnn::coordinator::{Coordinator, CoordinatorConfig, NativeBackend, PolicyMode};
 use mtsrnn::engine::NativeStack;
 use mtsrnn::memsim::{simulate, SimConfig};
-use mtsrnn::models::config::{Arch, ModelConfig, ModelSize, ASR_QRNN, ASR_SRU};
+use mtsrnn::models::config::{Arch, ModelConfig, ModelSize, StackSpec, ASR_QRNN, ASR_SRU};
 use mtsrnn::models::StackParams;
 use mtsrnn::runtime::{layer_parity, stack_parity, ArtifactDir, PjrtBackend};
 use mtsrnn::server;
@@ -121,6 +121,7 @@ fn cmd_ablation(args: &Args) -> Result<(), String> {
         }
         "energy" => ablation_energy(Arch::Sru, ModelSize::Large, samples),
         "quant" => ablation_quant(ModelSize::Small, samples.min(512), &bench_opts(args)?),
+        "stacks" => stack_spec_serving(samples.min(512), &bench_opts(args)?)?,
         other => return Err(format!("unknown ablation {other:?}")),
     };
     println!("{}", table.render());
@@ -230,20 +231,22 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
 
     match args.get_or("backend", "native") {
         "native" => {
-            let stack_cfg = match args.get_or("stack", "asr_sru_512x4") {
-                "asr_sru_512x4" => ASR_SRU,
-                "asr_qrnn_512x4" => ASR_QRNN,
-                other => return Err(format!("unknown --stack {other:?}")),
-            };
-            let params = StackParams::init(&stack_cfg, &mut Rng::new(2018));
-            let max_block = 32;
-            let backend = NativeBackend::new(NativeStack::new(stack_cfg, params, max_block));
-            let coordinator = Coordinator::new(backend, cfg);
+            // `--stack` takes the composable spec grammar
+            // (`<arch>:<prec>:<hidden>x<depth>`, see USAGE); the legacy
+            // artifact names remain valid aliases.
+            let spec = StackSpec::parse(args.get_or("stack", "sru:f32:512x4"))?;
+            let params = StackParams::init(&spec, &mut Rng::new(2018))?;
+            let max_block = args.get_usize("max-block", 32)?;
+            let stack = NativeStack::new(&spec, params, max_block)?;
             println!(
-                "backend=native stack={} params={}",
-                stack_cfg.name(),
-                stack_cfg.param_count()
+                "backend=native stack={} params={} weight_bytes/block={} state_bytes/stream={}",
+                spec.name(),
+                spec.param_count(),
+                stack.weight_bytes_per_block(),
+                spec.state_bytes()
             );
+            let backend = NativeBackend::new(stack);
+            let coordinator = Coordinator::new(backend, cfg);
             let handle = server::spawn_inference(coordinator, tick);
             server::serve(listener, handle, stop).map_err(|e| e.to_string())
         }
@@ -288,7 +291,7 @@ fn cmd_info() -> Result<(), String> {
             );
         }
     }
-    println!("\nServed stacks:");
+    println!("\nServed stacks (legacy configs):");
     for cfg in [ASR_SRU, ASR_QRNN] {
         println!(
             "  {:<16} feat {} hidden {} depth {} vocab {}  params {}",
@@ -299,6 +302,18 @@ fn cmd_info() -> Result<(), String> {
             cfg.vocab,
             cfg.param_count()
         );
+    }
+    println!("\nStack specs (native serve, `--stack <spec>`):");
+    for s in SERVE_SPECS {
+        match StackSpec::parse(s) {
+            Ok(spec) => println!(
+                "  {:<16} params {:>9}  state {:>6} B/stream",
+                spec.name(),
+                spec.param_count(),
+                spec.state_bytes()
+            ),
+            Err(e) => return Err(format!("builtin spec {s:?}: {e}")),
+        }
     }
     println!("\nSimulated platforms: intel (i7-3930K), arm (Denver2)");
     let quick = sim_ms(

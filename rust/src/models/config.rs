@@ -161,6 +161,378 @@ pub const ASR_QRNN: StackConfig = StackConfig {
     vocab: 32,
 };
 
+/// Default feature/vocab dims of the served ASR front end — what a spec
+/// gets when `feat=`/`vocab=` options are omitted (matches [`ASR_SRU`]).
+pub const ASR_FEAT: usize = 40;
+pub const ASR_VOCAB: usize = 32;
+
+/// Numeric precision of a layer's weights.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Precision {
+    F32,
+    /// Per-row symmetric int8 (see `engine::quant`).
+    Q8,
+}
+
+impl Precision {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::Q8 => "q8",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Precision> {
+        match s {
+            "f32" => Some(Precision::F32),
+            "q8" => Some(Precision::Q8),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Precision {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// One named per-stream state tensor of a recurrent layer.
+///
+/// `name` is the suffix of the flat python name `l{i}_{name}` — the
+/// slot order of a stack is pinned to
+/// `python/compile/model.py::stack_flat_order`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StateSlot {
+    pub name: &'static str,
+    /// Element count (f32 values).
+    pub len: usize,
+}
+
+/// Ordered per-stream state slots of one layer.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct StateLayout {
+    pub slots: Vec<StateSlot>,
+}
+
+impl StateLayout {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Builder: append a slot.
+    pub fn slot(mut self, name: &'static str, len: usize) -> Self {
+        self.slots.push(StateSlot { name, len });
+        self
+    }
+
+    pub fn slot_count(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn total_len(&self) -> usize {
+        self.slots.iter().map(|s| s.len).sum()
+    }
+
+    /// Bytes of state (session-table sizing in the coordinator).
+    pub fn bytes(&self) -> usize {
+        self.total_len() * std::mem::size_of::<f32>()
+    }
+}
+
+/// One layer of a [`StackSpec`]: cell kind + weight precision.  The two
+/// axes are orthogonal (Lei et al. 1709.02755; Rezk et al. 1908.07062) —
+/// every valid combination is a spec, not a new stack type.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct LayerSpec {
+    pub arch: Arch,
+    pub precision: Precision,
+}
+
+impl LayerSpec {
+    /// Validating constructor: int8 weights exist only for SRU (the
+    /// paper's §4 quantization result); other combinations are errors,
+    /// not panics.
+    pub fn new(arch: Arch, precision: Precision) -> Result<LayerSpec, String> {
+        if precision == Precision::Q8 && arch != Arch::Sru {
+            return Err(format!(
+                "precision q8 is only available for sru layers (got {arch}:q8)"
+            ));
+        }
+        Ok(LayerSpec { arch, precision })
+    }
+
+    /// Shorthand for the always-valid f32 variant of any arch.
+    pub fn f32(arch: Arch) -> LayerSpec {
+        LayerSpec {
+            arch,
+            precision: Precision::F32,
+        }
+    }
+
+    /// Parse `"<arch>:<prec>"`, e.g. `sru:f32`, `sru:q8`, `lstm:f32`.
+    pub fn parse(s: &str) -> Result<LayerSpec, String> {
+        let (a, p) = s
+            .split_once(':')
+            .ok_or_else(|| format!("layer spec {s:?} must be <arch>:<prec> (e.g. sru:f32)"))?;
+        let arch = Arch::parse(a)
+            .ok_or_else(|| format!("layer spec {s:?}: unknown arch {a:?} (sru|qrnn|lstm)"))?;
+        let precision = Precision::parse(p)
+            .ok_or_else(|| format!("layer spec {s:?}: unknown precision {p:?} (f32|q8)"))?;
+        LayerSpec::new(arch, precision)
+    }
+
+    pub fn name(&self) -> String {
+        format!("{}:{}", self.arch, self.precision)
+    }
+
+    /// Per-stream state slots of this layer kind, in the order of
+    /// `python/compile/model.py::stack_flat_order`: SRU keeps `c`, QRNN
+    /// `c` then `xprev`, LSTM `h` then `c`.  Precision does not change
+    /// the state (int8 applies to weights only).
+    pub fn state_layout(&self, hidden: usize) -> StateLayout {
+        match self.arch {
+            Arch::Sru => StateLayout::new().slot("c", hidden),
+            Arch::Qrnn => StateLayout::new().slot("c", hidden).slot("xprev", hidden),
+            Arch::Lstm => StateLayout::new().slot("h", hidden).slot("c", hidden),
+        }
+    }
+
+    /// Trainable parameters of one square (`input == hidden`) layer.
+    pub fn param_count(&self, hidden: usize) -> usize {
+        ModelConfig {
+            arch: self.arch,
+            hidden,
+            input: hidden,
+        }
+        .param_count()
+    }
+}
+
+/// Composable served-stack description: projection `feat -> hidden`,
+/// then one [`LayerSpec`] per recurrent layer, then head
+/// `hidden -> vocab`.  Built programmatically or parsed from the textual
+/// grammar:
+///
+/// ```text
+/// <arch>:<prec>:<hidden>x<depth>[,feat=N][,vocab=N][,l<i>=<arch>:<prec>]
+/// ```
+///
+/// Examples: `sru:f32:512x4` (the ASR_SRU stack), `lstm:f32:512x4`,
+/// `sru:q8:512x4` (int8 weights), `sru:f32:512x4,l3=sru:q8` (mixed
+/// precision: int8 final layer).  The artifact-style names
+/// `asr_sru_512x4` / `asr_qrnn_512x4` are accepted as aliases.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StackSpec {
+    pub feat: usize,
+    pub hidden: usize,
+    pub vocab: usize,
+    pub layers: Vec<LayerSpec>,
+}
+
+impl StackSpec {
+    /// Start a spec with no layers; add them with
+    /// [`with_layer`](Self::with_layer) / [`with_layers`](Self::with_layers).
+    pub fn new(feat: usize, hidden: usize, vocab: usize) -> StackSpec {
+        StackSpec {
+            feat,
+            hidden,
+            vocab,
+            layers: Vec::new(),
+        }
+    }
+
+    /// Builder: append one layer.
+    pub fn with_layer(mut self, layer: LayerSpec) -> StackSpec {
+        self.layers.push(layer);
+        self
+    }
+
+    /// Builder: append `n` identical layers.
+    pub fn with_layers(mut self, layer: LayerSpec, n: usize) -> StackSpec {
+        for _ in 0..n {
+            self.layers.push(layer);
+        }
+        self
+    }
+
+    /// A `depth`-deep single-kind stack with the ASR feat/vocab dims —
+    /// what the base grammar `arch:prec:HxD` denotes.
+    pub fn uniform(
+        arch: Arch,
+        precision: Precision,
+        hidden: usize,
+        depth: usize,
+    ) -> Result<StackSpec, String> {
+        let layer = LayerSpec::new(arch, precision)?;
+        let spec = StackSpec::new(ASR_FEAT, hidden, ASR_VOCAB).with_layers(layer, depth);
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// The uniform-f32 spec equivalent of a legacy [`StackConfig`].
+    pub fn from_config(cfg: &StackConfig) -> StackSpec {
+        StackSpec::new(cfg.feat, cfg.hidden, cfg.vocab)
+            .with_layers(LayerSpec::f32(cfg.arch), cfg.depth)
+    }
+
+    /// Parse the textual grammar (see the type docs for examples).
+    pub fn parse(s: &str) -> Result<StackSpec, String> {
+        // Artifact-style aliases kept for CLI/doc compatibility.
+        match s {
+            "asr_sru_512x4" => return StackSpec::uniform(Arch::Sru, Precision::F32, 512, 4),
+            "asr_qrnn_512x4" => return StackSpec::uniform(Arch::Qrnn, Precision::F32, 512, 4),
+            _ => {}
+        }
+        let mut parts = s.split(',');
+        let base = parts.next().unwrap_or_default();
+        let seg: Vec<&str> = base.split(':').collect();
+        if seg.len() != 3 {
+            return Err(format!(
+                "stack spec {s:?}: base must be <arch>:<prec>:<hidden>x<depth> (e.g. sru:f32:512x4)"
+            ));
+        }
+        let layer = LayerSpec::parse(&format!("{}:{}", seg[0], seg[1]))?;
+        let (h, d) = seg[2].split_once('x').ok_or_else(|| {
+            format!("stack spec {s:?}: dims {:?} must be <hidden>x<depth>", seg[2])
+        })?;
+        let hidden: usize = h
+            .parse()
+            .map_err(|e| format!("stack spec {s:?}: hidden: {e}"))?;
+        let depth: usize = d
+            .parse()
+            .map_err(|e| format!("stack spec {s:?}: depth: {e}"))?;
+        let mut spec = StackSpec::new(ASR_FEAT, hidden, ASR_VOCAB).with_layers(layer, depth);
+        for opt in parts {
+            if let Some(v) = opt.strip_prefix("feat=") {
+                spec.feat = v.parse().map_err(|e| format!("stack spec {s:?}: feat: {e}"))?;
+            } else if let Some(v) = opt.strip_prefix("vocab=") {
+                spec.vocab = v
+                    .parse()
+                    .map_err(|e| format!("stack spec {s:?}: vocab: {e}"))?;
+            } else if let Some(rest) = opt.strip_prefix('l') {
+                let (idx, ls) = rest
+                    .split_once('=')
+                    .ok_or_else(|| format!("stack spec {s:?}: bad option {opt:?}"))?;
+                let i: usize = idx
+                    .parse()
+                    .map_err(|e| format!("stack spec {s:?}: layer index: {e}"))?;
+                if i >= spec.layers.len() {
+                    return Err(format!(
+                        "stack spec {s:?}: l{i} out of range (depth {})",
+                        spec.layers.len()
+                    ));
+                }
+                spec.layers[i] = LayerSpec::parse(ls)?;
+            } else {
+                return Err(format!("stack spec {s:?}: unknown option {opt:?}"));
+            }
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Structural validation — every error a `serve --stack` user can
+    /// cause surfaces here as a message, never as a panic.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.layers.is_empty() {
+            return Err("stack spec has no layers (depth must be >= 1)".into());
+        }
+        if self.feat == 0 || self.hidden == 0 || self.vocab == 0 {
+            return Err(format!(
+                "stack spec {}: feat/hidden/vocab must all be >= 1",
+                self.name()
+            ));
+        }
+        for l in &self.layers {
+            // Re-check combinations for hand-built specs.
+            LayerSpec::new(l.arch, l.precision)?;
+        }
+        Ok(())
+    }
+
+    pub fn depth(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Canonical spec string; `parse(name())` round-trips.
+    pub fn name(&self) -> String {
+        let base = self
+            .layers
+            .first()
+            .copied()
+            .unwrap_or(LayerSpec {
+                arch: Arch::Sru,
+                precision: Precision::F32,
+            });
+        let mut out = format!("{}:{}x{}", base.name(), self.hidden, self.layers.len());
+        if self.feat != ASR_FEAT {
+            out.push_str(&format!(",feat={}", self.feat));
+        }
+        if self.vocab != ASR_VOCAB {
+            out.push_str(&format!(",vocab={}", self.vocab));
+        }
+        for (i, l) in self.layers.iter().enumerate() {
+            if *l != base {
+                out.push_str(&format!(",l{i}={}", l.name()));
+            }
+        }
+        out
+    }
+
+    /// Legacy shape view (`arch` = first layer's kind; meaningful only
+    /// for uniform stacks — the PJRT artifact path and display code).
+    pub fn config(&self) -> StackConfig {
+        StackConfig {
+            arch: self.layers.first().map(|l| l.arch).unwrap_or(Arch::Sru),
+            feat: self.feat,
+            hidden: self.hidden,
+            depth: self.layers.len(),
+            vocab: self.vocab,
+        }
+    }
+
+    pub fn param_count(&self) -> usize {
+        let h = self.hidden;
+        let layers: usize = self.layers.iter().map(|l| l.param_count(h)).sum();
+        self.feat * h + h + layers + h * self.vocab + self.vocab
+    }
+
+    /// Flat per-stream state slot lengths, layer by layer.
+    pub fn state_lens(&self) -> Vec<usize> {
+        let mut out = Vec::new();
+        for l in &self.layers {
+            for s in &l.state_layout(self.hidden).slots {
+                out.push(s.len);
+            }
+        }
+        out
+    }
+
+    /// Flat python-side state names (`l{i}_{slot}`), the exact order of
+    /// `python/compile/model.py::stack_flat_order`'s `snames`.
+    pub fn flat_state_names(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        for (i, l) in self.layers.iter().enumerate() {
+            for s in &l.state_layout(self.hidden).slots {
+                out.push(format!("l{i}_{}", s.name));
+            }
+        }
+        out
+    }
+
+    /// Bytes of per-stream state (session-table sizing).
+    pub fn state_bytes(&self) -> usize {
+        self.state_lens().iter().sum::<usize>() * std::mem::size_of::<f32>()
+    }
+}
+
+impl fmt::Display for StackSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.name())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -216,5 +588,119 @@ mod tests {
         let h = 512usize;
         let expect = 40 * h + h + 4 * (3 * h * h + 2 * h) + h * 32 + 32;
         assert_eq!(ASR_SRU.param_count(), expect);
+    }
+
+    #[test]
+    fn spec_parse_base_grammar() {
+        let s = StackSpec::parse("sru:f32:512x4").unwrap();
+        assert_eq!(s.hidden, 512);
+        assert_eq!(s.depth(), 4);
+        assert_eq!(s.feat, ASR_FEAT);
+        assert_eq!(s.vocab, ASR_VOCAB);
+        assert!(s
+            .layers
+            .iter()
+            .all(|l| l.arch == Arch::Sru && l.precision == Precision::F32));
+        // Same param count as the legacy config it mirrors.
+        assert_eq!(s.param_count(), ASR_SRU.param_count());
+        assert_eq!(s.config(), ASR_SRU);
+    }
+
+    #[test]
+    fn spec_aliases_match_legacy_configs() {
+        assert_eq!(
+            StackSpec::parse("asr_sru_512x4").unwrap(),
+            StackSpec::parse("sru:f32:512x4").unwrap()
+        );
+        assert_eq!(
+            StackSpec::parse("asr_qrnn_512x4").unwrap(),
+            StackSpec::parse("qrnn:f32:512x4").unwrap()
+        );
+        assert_eq!(StackSpec::from_config(&ASR_QRNN).config(), ASR_QRNN);
+    }
+
+    #[test]
+    fn spec_options_and_overrides() {
+        let s = StackSpec::parse("sru:f32:64x4,feat=8,vocab=5,l3=sru:q8").unwrap();
+        assert_eq!((s.feat, s.vocab), (8, 5));
+        assert_eq!(s.layers[0].precision, Precision::F32);
+        assert_eq!(s.layers[3].precision, Precision::Q8);
+        // Canonical name round-trips.
+        assert_eq!(StackSpec::parse(&s.name()).unwrap(), s);
+        let uniform = StackSpec::parse("lstm:f32:32x2").unwrap();
+        assert_eq!(uniform.name(), "lstm:f32:32x2");
+        assert_eq!(StackSpec::parse(&uniform.name()).unwrap(), uniform);
+    }
+
+    #[test]
+    fn spec_rejects_bad_input() {
+        for bad in [
+            "",
+            "sru",
+            "sru:f32",
+            "sru:f32:512",
+            "gru:f32:512x4",
+            "sru:q4:512x4",
+            "lstm:q8:512x4",   // q8 is sru-only
+            "qrnn:q8:512x4",   // q8 is sru-only
+            "sru:f32:0x4",     // hidden must be >= 1
+            "sru:f32:512x0",   // depth must be >= 1
+            "sru:f32:512x4,l9=sru:q8", // override out of range
+            "sru:f32:512x4,bogus=1",
+            "sru:f32:512x4,feat=x",
+        ] {
+            assert!(StackSpec::parse(bad).is_err(), "{bad:?} should not parse");
+        }
+        assert!(LayerSpec::new(Arch::Lstm, Precision::Q8).is_err());
+    }
+
+    #[test]
+    fn state_layouts_follow_python_flat_order() {
+        // Mirrors python/compile/model.py::stack_flat_order: c per layer,
+        // +xprev for qrnn; h then c for lstm.
+        let h = 16;
+        assert_eq!(
+            LayerSpec::f32(Arch::Sru).state_layout(h).slots,
+            vec![StateSlot { name: "c", len: h }]
+        );
+        assert_eq!(
+            LayerSpec::new(Arch::Sru, Precision::Q8).unwrap().state_layout(h),
+            LayerSpec::f32(Arch::Sru).state_layout(h),
+            "precision must not change the state layout"
+        );
+        assert_eq!(
+            LayerSpec::f32(Arch::Qrnn).state_layout(h).slots,
+            vec![
+                StateSlot { name: "c", len: h },
+                StateSlot { name: "xprev", len: h }
+            ]
+        );
+        assert_eq!(
+            LayerSpec::f32(Arch::Lstm).state_layout(h).slots,
+            vec![
+                StateSlot { name: "h", len: h },
+                StateSlot { name: "c", len: h }
+            ]
+        );
+        let spec = StackSpec::parse("qrnn:f32:8x2").unwrap();
+        assert_eq!(
+            spec.flat_state_names(),
+            vec!["l0_c", "l0_xprev", "l1_c", "l1_xprev"]
+        );
+        assert_eq!(spec.state_lens(), vec![8, 8, 8, 8]);
+        assert_eq!(spec.state_bytes(), 4 * 4 * 8);
+    }
+
+    #[test]
+    fn mixed_spec_validates_and_counts() {
+        let s = StackSpec::new(8, 32, 4)
+            .with_layers(LayerSpec::f32(Arch::Sru), 2)
+            .with_layer(LayerSpec::new(Arch::Sru, Precision::Q8).unwrap());
+        s.validate().unwrap();
+        assert_eq!(s.depth(), 3);
+        // Param count: q8 quantizes the same f32 master weights.
+        let layer = 3 * 32 * 32 + 2 * 32;
+        assert_eq!(s.param_count(), 8 * 32 + 32 + 3 * layer + 32 * 4 + 4);
+        assert!(StackSpec::new(8, 32, 4).validate().is_err(), "no layers");
     }
 }

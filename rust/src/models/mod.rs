@@ -7,5 +7,8 @@
 pub mod config;
 pub mod params;
 
-pub use config::{Arch, ModelConfig, ModelSize, StackConfig, ASR_QRNN, ASR_SRU};
-pub use params::{LstmParams, QrnnParams, SruParams, StackParams};
+pub use config::{
+    Arch, LayerSpec, ModelConfig, ModelSize, Precision, StackConfig, StackSpec, StateLayout,
+    StateSlot, ASR_FEAT, ASR_QRNN, ASR_SRU, ASR_VOCAB,
+};
+pub use params::{LayerParams, LstmParams, QrnnParams, SruParams, StackParams};

@@ -2,7 +2,7 @@
 //! bundles exported by `python/compile/aot.py`.
 
 use crate::linalg::{Act, Matrix};
-use crate::models::config::{Arch, ModelConfig, StackConfig};
+use crate::models::config::{Arch, LayerSpec, ModelConfig, StackSpec};
 use crate::util::Rng;
 use crate::weights::Bundle;
 
@@ -154,64 +154,128 @@ impl LstmParams {
     }
 }
 
+/// Parameters of one stack layer.  The variant is chosen per layer by
+/// its [`LayerSpec`] — there is no stack-wide arch switch anywhere in
+/// stack construction; this enum is the single kind-dispatch point on
+/// the params side (its engine twin is `engine::build_layer`).
+///
+/// Weight precision is *not* part of the params: an int8 layer quantizes
+/// the same f32 master weights at engine construction, so `sru:f32` and
+/// `sru:q8` share one `LayerParams::Sru`.
+#[derive(Debug, Clone)]
+pub enum LayerParams {
+    Sru(SruParams),
+    Qrnn(QrnnParams),
+    Lstm(LstmParams),
+}
+
+impl LayerParams {
+    /// Fresh seeded parameters for a square (`input == hidden`) layer.
+    pub fn init(spec: &LayerSpec, hidden: usize, rng: &mut Rng) -> LayerParams {
+        let cfg = ModelConfig {
+            arch: spec.arch,
+            hidden,
+            input: hidden,
+        };
+        match spec.arch {
+            Arch::Sru => LayerParams::Sru(SruParams::init(&cfg, rng)),
+            Arch::Qrnn => LayerParams::Qrnn(QrnnParams::init(&cfg, rng)),
+            Arch::Lstm => LayerParams::Lstm(LstmParams::init(&cfg, rng)),
+        }
+    }
+
+    /// Load one layer's tensors from a (scoped) weight bundle.
+    pub fn from_bundle(
+        bundle: &Bundle,
+        spec: &LayerSpec,
+        hidden: usize,
+    ) -> Result<LayerParams, String> {
+        let cfg = ModelConfig {
+            arch: spec.arch,
+            hidden,
+            input: hidden,
+        };
+        Ok(match spec.arch {
+            Arch::Sru => LayerParams::Sru(SruParams::from_bundle(bundle, &cfg)?),
+            Arch::Qrnn => LayerParams::Qrnn(QrnnParams::from_bundle(bundle, &cfg)?),
+            Arch::Lstm => LayerParams::Lstm(LstmParams::from_bundle(bundle, &cfg)?),
+        })
+    }
+
+    pub fn kind(&self) -> &'static str {
+        match self {
+            LayerParams::Sru(_) => "sru",
+            LayerParams::Qrnn(_) => "qrnn",
+            LayerParams::Lstm(_) => "lstm",
+        }
+    }
+
+    /// `(hidden, input)` dims of the carried tensors.
+    pub fn dims(&self) -> (usize, usize) {
+        match self {
+            LayerParams::Sru(p) => (p.hidden(), p.input()),
+            LayerParams::Qrnn(p) => (p.hidden(), p.input()),
+            LayerParams::Lstm(p) => (p.hidden(), p.input()),
+        }
+    }
+
+    /// Stack layers must be square; reported as an error, not a panic.
+    pub fn shape_check(&self, hidden: usize) -> Result<(), String> {
+        let (h, d) = self.dims();
+        if h != hidden || d != hidden {
+            return Err(format!(
+                "{} layer params are {h}x{d}, stack needs {hidden}x{hidden}",
+                self.kind()
+            ));
+        }
+        Ok(())
+    }
+}
+
 /// Full served stack: projection, recurrent layers, head.
 #[derive(Debug, Clone)]
 pub struct StackParams {
     pub proj_w: Matrix, // [H, feat]
     pub proj_b: Vec<f32>,
-    /// Per-layer SRU or QRNN params (arch from the config).
-    pub sru_layers: Vec<SruParams>,
-    pub qrnn_layers: Vec<QrnnParams>,
+    /// Per-layer parameters, one entry per `StackSpec` layer.
+    pub layers: Vec<LayerParams>,
     pub head_w: Matrix, // [vocab, H]
     pub head_b: Vec<f32>,
 }
 
 impl StackParams {
-    pub fn init(cfg: &StackConfig, rng: &mut Rng) -> Self {
-        let layer_cfg = ModelConfig {
-            arch: cfg.arch,
-            hidden: cfg.hidden,
-            input: cfg.hidden,
-        };
-        let (mut sru_layers, mut qrnn_layers) = (Vec::new(), Vec::new());
-        let proj_w = Matrix::glorot(cfg.hidden, cfg.feat, rng);
-        for _ in 0..cfg.depth {
-            match cfg.arch {
-                Arch::Sru => sru_layers.push(SruParams::init(&layer_cfg, rng)),
-                Arch::Qrnn => qrnn_layers.push(QrnnParams::init(&layer_cfg, rng)),
-                Arch::Lstm => panic!("stack supports sru/qrnn only"),
-            }
+    /// Seeded init for a validated spec.  RNG draw order is
+    /// projection → layers (in order) → head, matching the historical
+    /// arch-matched init so seeded weights stay reproducible.
+    pub fn init(spec: &StackSpec, rng: &mut Rng) -> Result<StackParams, String> {
+        spec.validate()?;
+        let proj_w = Matrix::glorot(spec.hidden, spec.feat, rng);
+        let mut layers = Vec::with_capacity(spec.depth());
+        for ls in &spec.layers {
+            layers.push(LayerParams::init(ls, spec.hidden, rng));
         }
-        Self {
+        Ok(StackParams {
             proj_w,
-            proj_b: vec![0.0; cfg.hidden],
-            sru_layers,
-            qrnn_layers,
-            head_w: Matrix::glorot(cfg.vocab, cfg.hidden, rng),
-            head_b: vec![0.0; cfg.vocab],
-        }
+            proj_b: vec![0.0; spec.hidden],
+            layers,
+            head_w: Matrix::glorot(spec.vocab, spec.hidden, rng),
+            head_b: vec![0.0; spec.vocab],
+        })
     }
 
-    pub fn from_bundle(bundle: &Bundle, cfg: &StackConfig) -> Result<Self, String> {
-        let layer_cfg = ModelConfig {
-            arch: cfg.arch,
-            hidden: cfg.hidden,
-            input: cfg.hidden,
-        };
-        let (mut sru_layers, mut qrnn_layers) = (Vec::new(), Vec::new());
-        for i in 0..cfg.depth {
+    /// Load from a weight bundle exported by `python/compile/aot.py`
+    /// (tensor names follow `stack_flat_order`).
+    pub fn from_bundle(bundle: &Bundle, spec: &StackSpec) -> Result<StackParams, String> {
+        spec.validate()?;
+        let mut layers = Vec::with_capacity(spec.depth());
+        for (i, ls) in spec.layers.iter().enumerate() {
             let sub = bundle.scoped(&format!("l{i}_"));
-            match cfg.arch {
-                Arch::Sru => sru_layers.push(SruParams::from_bundle(&sub, &layer_cfg)?),
-                Arch::Qrnn => qrnn_layers.push(QrnnParams::from_bundle(&sub, &layer_cfg)?),
-                Arch::Lstm => return Err("stack supports sru/qrnn only".into()),
-            }
+            layers.push(LayerParams::from_bundle(&sub, ls, spec.hidden)?);
         }
-        Ok(Self {
+        Ok(StackParams {
             proj_w: bundle.matrix("proj_w")?,
             proj_b: bundle.vector("proj_b")?,
-            sru_layers,
-            qrnn_layers,
+            layers,
             head_w: bundle.matrix("head_w")?,
             head_b: bundle.vector("head_b")?,
         })
@@ -248,10 +312,60 @@ mod tests {
     #[test]
     fn stack_init_layer_count() {
         let mut rng = Rng::new(0);
-        let p = StackParams::init(&ASR_SRU, &mut rng);
-        assert_eq!(p.sru_layers.len(), 4);
-        assert!(p.qrnn_layers.is_empty());
+        let spec = StackSpec::from_config(&ASR_SRU);
+        let p = StackParams::init(&spec, &mut rng).unwrap();
+        assert_eq!(p.layers.len(), 4);
+        assert!(p
+            .layers
+            .iter()
+            .all(|l| matches!(l, LayerParams::Sru(_))));
         assert_eq!(p.proj_w.rows(), 512);
         assert_eq!(p.head_w.rows(), 32);
+    }
+
+    #[test]
+    fn stack_init_covers_every_layer_kind() {
+        let mut rng = Rng::new(1);
+        let spec = StackSpec::new(4, 8, 3)
+            .with_layer(LayerSpec::f32(Arch::Sru))
+            .with_layer(LayerSpec::f32(Arch::Qrnn))
+            .with_layer(LayerSpec::f32(Arch::Lstm));
+        let p = StackParams::init(&spec, &mut rng).unwrap();
+        assert_eq!(p.layers.len(), 3);
+        assert_eq!(p.layers[0].kind(), "sru");
+        assert_eq!(p.layers[1].kind(), "qrnn");
+        assert_eq!(p.layers[2].kind(), "lstm");
+        for l in &p.layers {
+            l.shape_check(8).unwrap();
+            assert!(l.shape_check(16).is_err());
+        }
+        // Bad spec surfaces as Err, never a panic.
+        assert!(StackParams::init(&StackSpec::new(4, 8, 3), &mut rng).is_err());
+    }
+
+    #[test]
+    fn stack_init_rng_order_matches_legacy_seed() {
+        // Projection → layers → head draw order is part of the serving
+        // contract (seeded weights must be stable across the refactor):
+        // drawing by hand in that order must reproduce StackParams::init.
+        let spec = StackSpec::from_config(&ASR_SRU);
+        let p = StackParams::init(&spec, &mut Rng::new(2018)).unwrap();
+        let mut rng = Rng::new(2018);
+        let proj_w = crate::linalg::Matrix::glorot(512, 40, &mut rng);
+        assert_eq!(p.proj_w.data(), proj_w.data());
+        let layer_cfg = ModelConfig {
+            arch: Arch::Sru,
+            hidden: 512,
+            input: 512,
+        };
+        for l in &p.layers {
+            let want = SruParams::init(&layer_cfg, &mut rng);
+            match l {
+                LayerParams::Sru(got) => assert_eq!(got.w.data(), want.w.data()),
+                other => panic!("unexpected layer kind {}", other.kind()),
+            }
+        }
+        let head_w = crate::linalg::Matrix::glorot(32, 512, &mut rng);
+        assert_eq!(p.head_w.data(), head_w.data());
     }
 }

@@ -235,7 +235,9 @@ impl crate::coordinator::BlockBackend for PjrtBackend {
         Ok(logits)
     }
 
-    fn weight_bytes_per_block(&self) -> usize {
+    fn weight_bytes_per_block(&self, _t: usize) -> usize {
+        // Artifact stacks are SRU/QRNN: weights are fetched once per
+        // dispatch regardless of `t`.
         self.variants
             .values()
             .next()

@@ -106,7 +106,7 @@ impl crate::coordinator::BlockBackend for PjrtBackend {
         Err(MSG.to_string())
     }
 
-    fn weight_bytes_per_block(&self) -> usize {
+    fn weight_bytes_per_block(&self, _t: usize) -> usize {
         0
     }
 }

@@ -8,7 +8,7 @@
 
 use mtsrnn::coordinator::BlockBackend;
 use mtsrnn::engine::{NativeStack, StreamState};
-use mtsrnn::models::config::{Arch, StackConfig};
+use mtsrnn::models::config::{Arch, StackConfig, StackSpec};
 use mtsrnn::models::StackParams;
 use mtsrnn::runtime::{ArtifactDir, PjrtBackend};
 use mtsrnn::util::Rng;
@@ -36,9 +36,10 @@ fn native_and_pjrt_agree_on_stack_logits() {
 
     // Native stack from the SAME exported weights.
     let bundle = Bundle::load(dir.path_of(&format!("weights_{name}.bin"))).unwrap();
-    let params = StackParams::from_bundle(&bundle, &cfg).unwrap();
+    let spec = StackSpec::from_config(&cfg);
+    let params = StackParams::from_bundle(&bundle, &spec).unwrap();
     let max_block = *pjrt.block_sizes().last().unwrap();
-    let mut native = NativeStack::new(cfg, params, max_block);
+    let mut native = NativeStack::new(&spec, params, max_block).unwrap();
 
     let mut rng = Rng::new(99);
     let mut pjrt_state = pjrt.init_state();
@@ -52,7 +53,9 @@ fn native_and_pjrt_agree_on_stack_logits() {
         let pjrt_logits = pjrt.run_block(&x, t, &mut pjrt_state).expect("pjrt run");
 
         let mut native_logits = vec![0.0; t * cfg.vocab];
-        native.run_block(&x, t, &mut native_state, &mut native_logits);
+        native
+            .run_block(&x, t, &mut native_state, &mut native_logits)
+            .expect("native run");
 
         let max_d = pjrt_logits
             .iter()

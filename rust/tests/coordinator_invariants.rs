@@ -14,7 +14,7 @@ use mtsrnn::coordinator::{
     BlockBackend, Coordinator, CoordinatorConfig, NativeBackend, PolicyMode,
 };
 use mtsrnn::engine::{NativeStack, StreamState};
-use mtsrnn::models::config::{Arch, StackConfig};
+use mtsrnn::models::config::{Arch, StackConfig, StackSpec};
 use mtsrnn::models::StackParams;
 use mtsrnn::util::Rng;
 
@@ -26,10 +26,15 @@ const CFG: StackConfig = StackConfig {
     vocab: 4,
 };
 
+fn native_backend() -> NativeBackend {
+    let spec = StackSpec::from_config(&CFG);
+    let params = StackParams::init(&spec, &mut Rng::new(7)).unwrap();
+    NativeBackend::new(NativeStack::new(&spec, params, 32).unwrap())
+}
+
 fn coordinator(policy: PolicyMode, max_wait_ms: u64) -> Coordinator<NativeBackend> {
-    let params = StackParams::init(&CFG, &mut Rng::new(7));
     Coordinator::new(
-        NativeBackend::new(NativeStack::new(CFG, params, 32)),
+        native_backend(),
         CoordinatorConfig {
             policy,
             max_wait: Duration::from_millis(max_wait_ms),
@@ -153,16 +158,15 @@ impl BlockBackend for FlakyBackend {
         }
         self.inner.run_block(x, t, state)
     }
-    fn weight_bytes_per_block(&self) -> usize {
-        self.inner.weight_bytes_per_block()
+    fn weight_bytes_per_block(&self, t: usize) -> usize {
+        self.inner.weight_bytes_per_block(t)
     }
 }
 
 #[test]
 fn backend_failure_is_reported_and_recoverable() {
-    let params = StackParams::init(&CFG, &mut Rng::new(7));
     let backend = FlakyBackend {
-        inner: NativeBackend::new(NativeStack::new(CFG, params, 32)),
+        inner: native_backend(),
         fail_next: std::cell::Cell::new(false),
     };
     let mut c = Coordinator::new(

@@ -10,7 +10,7 @@ use std::time::Duration;
 
 use mtsrnn::coordinator::{Coordinator, CoordinatorConfig, NativeBackend, PolicyMode};
 use mtsrnn::engine::NativeStack;
-use mtsrnn::models::config::{Arch, StackConfig};
+use mtsrnn::models::config::{Arch, StackConfig, StackSpec};
 use mtsrnn::models::StackParams;
 use mtsrnn::server;
 use mtsrnn::util::Rng;
@@ -24,8 +24,9 @@ const CFG: StackConfig = StackConfig {
 };
 
 fn start_server() -> (u16, Arc<AtomicBool>, std::thread::JoinHandle<()>) {
-    let params = StackParams::init(&CFG, &mut Rng::new(3));
-    let backend = NativeBackend::new(NativeStack::new(CFG, params, 8));
+    let spec = StackSpec::from_config(&CFG);
+    let params = StackParams::init(&spec, &mut Rng::new(3)).unwrap();
+    let backend = NativeBackend::new(NativeStack::new(&spec, params, 8).unwrap());
     let coordinator = Coordinator::new(
         backend,
         CoordinatorConfig {

@@ -1,0 +1,365 @@
+//! Composable stack API contract tests:
+//!
+//! 1. `StreamState` slot order is pinned to
+//!    `python/compile/model.py::stack_flat_order` for every layer kind
+//!    (the engines' `StateLayout`s, the `LayerSpec` descriptors and the
+//!    python source of truth must all agree).
+//! 2. A state snapshot fully captures a stream: resuming another stack
+//!    instance from the snapshot continues the stream exactly.
+//! 3. The dyn-dispatched `NativeStack` matches a hand-composed pipeline
+//!    of the seed per-layer engines at T ∈ {1, 4, 16} for every spec
+//!    kind — f32/q8 × SRU/QRNN/LSTM plus a mixed-precision stack.
+//! 4. LSTM and int8-SRU stacks serve end-to-end through the coordinator
+//!    (the configurations the arch-matched stack could not express).
+
+use std::time::Duration;
+
+use mtsrnn::coordinator::{Coordinator, CoordinatorConfig, NativeBackend, PolicyMode};
+use mtsrnn::engine::{
+    Engine, LstmEngine, LstmMode, NativeStack, QrnnEngine, QuantSruEngine, RecurrentLayer,
+    SruEngine,
+};
+use mtsrnn::linalg::{Act, Epilogue, PackedGemm};
+use mtsrnn::models::config::{Arch, LayerSpec, Precision, StackSpec};
+use mtsrnn::models::{LayerParams, StackParams};
+use mtsrnn::util::Rng;
+
+const HIDDEN: usize = 24;
+
+fn spec_of(s: &str) -> StackSpec {
+    StackSpec::parse(s).expect("test spec")
+}
+
+/// The spec grid under test: every kind × precision, plus mixed.
+fn all_specs() -> Vec<StackSpec> {
+    [
+        "sru:f32:24x2,feat=8,vocab=5",
+        "qrnn:f32:24x2,feat=8,vocab=5",
+        "lstm:f32:24x2,feat=8,vocab=5",
+        "sru:q8:24x2,feat=8,vocab=5",
+        "sru:f32:24x3,feat=8,vocab=5,l2=sru:q8",
+    ]
+    .into_iter()
+    .map(spec_of)
+    .collect()
+}
+
+// -----------------------------------------------------------------------
+// 1. Layout pinning against python stack_flat_order
+// -----------------------------------------------------------------------
+
+#[test]
+fn state_slot_order_pins_python_stack_flat_order() {
+    // Expected snames from python/compile/model.py::stack_flat_order for
+    // depth-2 stacks of each arch (pinned literally — if either side
+    // changes, this test and its python twin
+    // (test_stack_flat_order_covers_every_layer_kind) must both move).
+    let cases: [(&str, Vec<&str>); 4] = [
+        ("sru:f32:24x2,feat=8,vocab=5", vec!["l0_c", "l1_c"]),
+        (
+            "qrnn:f32:24x2,feat=8,vocab=5",
+            vec!["l0_c", "l0_xprev", "l1_c", "l1_xprev"],
+        ),
+        (
+            "lstm:f32:24x2,feat=8,vocab=5",
+            vec!["l0_h", "l0_c", "l1_h", "l1_c"],
+        ),
+        ("sru:q8:24x2,feat=8,vocab=5", vec!["l0_c", "l1_c"]),
+    ];
+    for (s, want) in cases {
+        let spec = spec_of(s);
+        assert_eq!(spec.flat_state_names(), want, "{s}");
+        // And every slot is H-sized at these shapes.
+        assert!(spec.state_lens().iter().all(|&n| n == HIDDEN), "{s}");
+    }
+}
+
+#[test]
+fn engine_layouts_agree_with_layer_specs() {
+    // The engines' own StateLayouts are the stack's ground truth; they
+    // must match the LayerSpec descriptors the spec layer advertises.
+    let mut rng = Rng::new(3);
+    let sru_p = match LayerParams::init(&LayerSpec::f32(Arch::Sru), HIDDEN, &mut rng) {
+        LayerParams::Sru(p) => p,
+        _ => unreachable!(),
+    };
+    let qrnn_p = match LayerParams::init(&LayerSpec::f32(Arch::Qrnn), HIDDEN, &mut rng) {
+        LayerParams::Qrnn(p) => p,
+        _ => unreachable!(),
+    };
+    let lstm_p = match LayerParams::init(&LayerSpec::f32(Arch::Lstm), HIDDEN, &mut rng) {
+        LayerParams::Lstm(p) => p,
+        _ => unreachable!(),
+    };
+
+    let sru = SruEngine::new(sru_p.clone(), 4);
+    let quant = QuantSruEngine::new(&sru_p, 4);
+    let qrnn = QrnnEngine::new(qrnn_p, 4);
+    let lstm = LstmEngine::new(lstm_p, LstmMode::Precompute(4));
+
+    assert_eq!(
+        sru.state_layout(),
+        LayerSpec::f32(Arch::Sru).state_layout(HIDDEN)
+    );
+    assert_eq!(
+        quant.state_layout(),
+        LayerSpec::new(Arch::Sru, Precision::Q8)
+            .unwrap()
+            .state_layout(HIDDEN)
+    );
+    assert_eq!(
+        qrnn.state_layout(),
+        LayerSpec::f32(Arch::Qrnn).state_layout(HIDDEN)
+    );
+    assert_eq!(
+        lstm.state_layout(),
+        LayerSpec::f32(Arch::Lstm).state_layout(HIDDEN)
+    );
+}
+
+// -----------------------------------------------------------------------
+// 2. StreamState round trip
+// -----------------------------------------------------------------------
+
+#[test]
+fn stream_state_round_trips_across_stack_instances() {
+    for spec in all_specs() {
+        let params = StackParams::init(&spec, &mut Rng::new(17)).unwrap();
+        let mut a = NativeStack::new(&spec, params.clone(), 4).unwrap();
+        let mut st = a.init_state();
+        assert_eq!(
+            st.tensors.iter().map(|t| t.len()).collect::<Vec<_>>(),
+            spec.state_lens(),
+            "{}: init_state must follow the spec layout",
+            spec.name()
+        );
+
+        let steps = 12;
+        let mut x = vec![0.0; steps * spec.feat];
+        Rng::new(23).fill_normal(&mut x, 1.0);
+
+        // Run the first 8 frames on stack A, snapshot the state.
+        let mut l1 = vec![0.0; 8 * spec.vocab];
+        a.run_block(&x[..4 * spec.feat], 4, &mut st, &mut l1[..4 * spec.vocab])
+            .unwrap();
+        a.run_block(
+            &x[4 * spec.feat..8 * spec.feat],
+            4,
+            &mut st,
+            &mut l1[4 * spec.vocab..],
+        )
+        .unwrap();
+        let snapshot = st.clone();
+
+        // Continue on A...
+        let mut tail_a = vec![0.0; 4 * spec.vocab];
+        a.run_block(&x[8 * spec.feat..], 4, &mut st, &mut tail_a)
+            .unwrap();
+
+        // ...and on a fresh stack B resumed from the snapshot: the
+        // serialized state must be the complete stream position.
+        let mut b = NativeStack::new(&spec, params, 4).unwrap();
+        let mut st_b = snapshot;
+        let mut tail_b = vec![0.0; 4 * spec.vocab];
+        b.run_block(&x[8 * spec.feat..], 4, &mut st_b, &mut tail_b)
+            .unwrap();
+
+        for (i, (p, q)) in tail_a.iter().zip(&tail_b).enumerate() {
+            assert!(
+                (p - q).abs() < 1e-6,
+                "{}: resumed stream diverged at {i}: {p} vs {q}",
+                spec.name()
+            );
+        }
+    }
+}
+
+// -----------------------------------------------------------------------
+// 3. Dyn-dispatch stack vs hand-composed per-layer engines
+// -----------------------------------------------------------------------
+
+/// Reference pipeline: projection GEMM → seed per-layer engines
+/// (run_sequence keeps their internal state across chunks) → head GEMM.
+/// This is the pre-refactor execution recipe, composed by hand.
+fn run_reference(
+    spec: &StackSpec,
+    params: &StackParams,
+    x: &[f32],
+    steps: usize,
+    t: usize,
+) -> Vec<f32> {
+    let (h, feat, vocab) = (spec.hidden, spec.feat, spec.vocab);
+    let pg_proj = PackedGemm::new(params.proj_w.data(), h, feat);
+    let pg_head = PackedGemm::new(params.head_w.data(), vocab, h);
+    let mut layers: Vec<Box<dyn Engine>> = Vec::new();
+    for (ls, lp) in spec.layers.iter().zip(&params.layers) {
+        layers.push(match (ls.precision, lp) {
+            (Precision::F32, LayerParams::Sru(p)) => {
+                Box::new(SruEngine::new(p.clone(), t)) as Box<dyn Engine>
+            }
+            (Precision::Q8, LayerParams::Sru(p)) => {
+                Box::new(QuantSruEngine::new(p, t)) as Box<dyn Engine>
+            }
+            (_, LayerParams::Qrnn(p)) => Box::new(QrnnEngine::new(p.clone(), t)) as Box<dyn Engine>,
+            (_, LayerParams::Lstm(p)) => {
+                Box::new(LstmEngine::new(p.clone(), LstmMode::Precompute(t))) as Box<dyn Engine>
+            }
+        });
+    }
+    let proj_acts = [Act::Tanh];
+    let mut logits = vec![0.0; steps * vocab];
+    let mut proj = vec![0.0; h * t];
+    let mut hcur = vec![0.0; t * h];
+    let mut hnext = vec![0.0; t * h];
+    let mut lg = vec![0.0; vocab * t];
+    let mut s0 = 0;
+    while s0 < steps {
+        let tt = t.min(steps - s0);
+        pg_proj.matmul(
+            &mut proj[..h * tt],
+            &x[s0 * feat..(s0 + tt) * feat],
+            tt,
+            false,
+            &Epilogue::fused(&params.proj_b, &proj_acts),
+        );
+        for r in 0..h {
+            for s in 0..tt {
+                hcur[s * h + r] = proj[r * tt + s];
+            }
+        }
+        for l in layers.iter_mut() {
+            l.run_sequence(&hcur[..tt * h], tt, &mut hnext[..tt * h]);
+            std::mem::swap(&mut hcur, &mut hnext);
+        }
+        pg_head.matmul(
+            &mut lg[..vocab * tt],
+            &hcur[..tt * h],
+            tt,
+            false,
+            &Epilogue::with_bias(&params.head_b),
+        );
+        for s in 0..tt {
+            for v in 0..vocab {
+                logits[(s0 + s) * vocab + v] = lg[v * tt + s];
+            }
+        }
+        s0 += tt;
+    }
+    logits
+}
+
+#[test]
+fn dyn_stack_matches_per_layer_engines_at_t_1_4_16() {
+    let steps = 20;
+    for spec in all_specs() {
+        let params = StackParams::init(&spec, &mut Rng::new(29)).unwrap();
+        let mut x = vec![0.0; steps * spec.feat];
+        Rng::new(31).fill_normal(&mut x, 1.0);
+
+        for t in [1usize, 4, 16] {
+            let want = run_reference(&spec, &params, &x, steps, t);
+
+            let mut stack = NativeStack::new(&spec, params.clone(), t).unwrap();
+            let mut st = stack.init_state();
+            let mut got = vec![0.0; steps * spec.vocab];
+            let mut s0 = 0;
+            while s0 < steps {
+                let tt = t.min(steps - s0);
+                stack
+                    .run_block(
+                        &x[s0 * spec.feat..(s0 + tt) * spec.feat],
+                        tt,
+                        &mut st,
+                        &mut got[s0 * spec.vocab..(s0 + tt) * spec.vocab],
+                    )
+                    .unwrap();
+                s0 += tt;
+            }
+            for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert!(
+                    (g - w).abs() < 1e-5,
+                    "{} T={t} idx {i}: {g} vs {w}",
+                    spec.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn q8_stack_tracks_f32_within_documented_tolerance() {
+    // The documented q8 serving tolerance (EXPERIMENTS.md §Serving):
+    // per-logit |Δ| < 0.5, mean |Δ| < 0.05 at these shapes.
+    let f32_spec = spec_of("sru:f32:24x2,feat=8,vocab=5");
+    let q8_spec = spec_of("sru:q8:24x2,feat=8,vocab=5");
+    let params = StackParams::init(&f32_spec, &mut Rng::new(41)).unwrap();
+    let steps = 24;
+    let mut x = vec![0.0; steps * f32_spec.feat];
+    Rng::new(43).fill_normal(&mut x, 1.0);
+
+    // Same f32 master weights; the q8 stack quantizes at construction.
+    let want = run_reference(&f32_spec, &params, &x, steps, 8);
+    let got = run_reference(&q8_spec, &params, &x, steps, 8);
+    let mut mad = 0.0f64;
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        let d = (g - w).abs();
+        mad += d as f64;
+        assert!(d < 0.5, "idx {i}: q8 {g} vs f32 {w}");
+    }
+    mad /= want.len() as f64;
+    assert!(mad < 0.05, "mean abs deviation {mad}");
+}
+
+// -----------------------------------------------------------------------
+// 4. LSTM and int8 stacks serve end-to-end through the coordinator
+// -----------------------------------------------------------------------
+
+fn serve_through_coordinator(spec: &StackSpec, x: &[f32], frames: usize) -> Vec<f32> {
+    let params = StackParams::init(spec, &mut Rng::new(11)).unwrap();
+    let backend = NativeBackend::new(NativeStack::new(spec, params, 16).unwrap());
+    let mut c = Coordinator::new(
+        backend,
+        CoordinatorConfig {
+            policy: PolicyMode::Fixed(8),
+            max_wait: Duration::ZERO,
+            max_sessions: 4,
+        },
+    );
+    let id = c.open().unwrap();
+    let mut out = Vec::new();
+    // Odd-sized chunks force mixed block decompositions.
+    for chunk in x.chunks(5 * spec.feat) {
+        c.feed(id, chunk).unwrap();
+        c.tick().unwrap();
+        out.extend(c.drain(id, usize::MAX).unwrap());
+    }
+    out.extend(c.close(id).unwrap());
+    assert_eq!(out.len(), frames * spec.vocab);
+    out
+}
+
+#[test]
+fn lstm_and_q8_stacks_serve_end_to_end() {
+    let frames = 26;
+    for s in [
+        "lstm:f32:24x2,feat=8,vocab=5",
+        "sru:q8:24x2,feat=8,vocab=5",
+        "sru:f32:24x3,feat=8,vocab=5,l2=sru:q8",
+    ] {
+        let spec = spec_of(s);
+        let mut x = vec![0.0; frames * spec.feat];
+        Rng::new(47).fill_normal(&mut x, 1.0);
+        let got = serve_through_coordinator(&spec, &x, frames);
+
+        // Ground truth: the same spec's per-layer engines at T=1 with
+        // the same seeded weights.
+        let params = StackParams::init(&spec, &mut Rng::new(11)).unwrap();
+        let want = run_reference(&spec, &params, &x, frames, 1);
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert!(
+                (g - w).abs() < 2e-4,
+                "{s}: coordinator-served logit {i}: {g} vs {w}"
+            );
+        }
+    }
+}
