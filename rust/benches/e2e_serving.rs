@@ -8,7 +8,7 @@
 
 use std::time::Duration;
 
-use mtsrnn::coordinator::{Coordinator, CoordinatorConfig, NativeBackend, PolicyMode};
+use mtsrnn::coordinator::{BatchMode, Coordinator, CoordinatorConfig, NativeBackend, PolicyMode};
 use mtsrnn::engine::NativeStack;
 use mtsrnn::models::config::{StackSpec, ASR_SRU};
 use mtsrnn::models::StackParams;
@@ -25,6 +25,7 @@ fn run(policy: PolicyMode, label: &str, frames: &[f32]) {
             policy,
             max_wait: Duration::from_millis(80),
             max_sessions: 4,
+            batching: BatchMode::Auto,
         },
     );
     let id = coord.open().unwrap();
@@ -55,9 +56,10 @@ fn main() {
     let mut trace = AsrTrace::new(ASR_SRU.feat, 11);
     let frames = trace.frames(n);
     println!(
-        "E2E serving: {} ({} params), {n} speech-like frames\n",
+        "E2E serving: {} ({} params), {n} speech-like frames, {} pool threads (MTSRNN_THREADS / --threads; 1 = legacy single-core)\n",
         ASR_SRU.name(),
-        ASR_SRU.param_count()
+        ASR_SRU.param_count(),
+        mtsrnn::linalg::pool::threads()
     );
     for (policy, label) in [
         (PolicyMode::Fixed(1), "fixed T=1"),

@@ -6,18 +6,37 @@
 
 use std::time::Duration;
 
-use mtsrnn::bench::{bench, print_measurement, BenchOpts};
-use mtsrnn::coordinator::{Coordinator, CoordinatorConfig, NativeBackend, PolicyMode};
+use mtsrnn::bench::{bench, print_measurement, write_report, BenchOpts};
+use mtsrnn::coordinator::{BatchMode, Coordinator, CoordinatorConfig, NativeBackend, PolicyMode};
 use mtsrnn::engine::{Engine, NativeStack, SruEngine};
+use mtsrnn::linalg::pool;
 use mtsrnn::linalg::{
     add_row_bias, fast_sigmoid, gemm, gemm_bt, gemv, transpose_into, Act, Epilogue, PackedGemm,
     SMALL_N_CUTOFF,
 };
 use mtsrnn::models::config::{Arch, ModelConfig, ModelSize, StackSpec};
 use mtsrnn::models::{SruParams, StackParams};
-use mtsrnn::util::Rng;
+use mtsrnn::util::{Rng, Timer};
 
 fn main() {
+    // MTSRNN_BENCH_ONLY=threads runs just the thread-scaling sweep
+    // (what the CI smoke job uses to publish BENCH_threads.json).
+    if std::env::var("MTSRNN_BENCH_ONLY").as_deref() == Ok("threads") {
+        let opts = BenchOpts {
+            warmup_iters: 1,
+            measure_iters: 3,
+            max_seconds: 20.0,
+        };
+        threads_sweep(&opts);
+        return;
+    }
+    // The per-kernel sections below are *per-core* comparisons (packed
+    // vs legacy pipeline): keep them single-threaded unless the user
+    // pinned a pool size explicitly.  The closing threads_sweep section
+    // measures the multicore path at threads in {1, 2, 4, 8}.
+    if std::env::var("MTSRNN_THREADS").is_err() {
+        pool::set_threads(1);
+    }
     let opts = BenchOpts {
         warmup_iters: 2,
         measure_iters: 7,
@@ -154,6 +173,7 @@ fn main() {
             policy: PolicyMode::Fixed(32),
             max_wait: Duration::from_millis(100),
             max_sessions: 4,
+            batching: BatchMode::Auto,
         },
     );
     let id = coord.open().unwrap();
@@ -169,9 +189,114 @@ fn main() {
         meas.median_ns / 32.0
     );
 
+    threads_sweep(&opts);
+
     println!(
         "-- ModelSize sanity: {:?} weights {} MiB --",
         ModelSize::Large,
         ModelConfig::paper(Arch::Sru, ModelSize::Large).weight_bytes() / (1024 * 1024)
     );
+}
+
+/// Serve `frames` speech-like frames through a fresh 512x4 SRU-stack
+/// coordinator with `streams` concurrent sessions (fused batching on for
+/// multi-stream so a tick shares one weight stream across sessions).
+/// Returns frames per second.
+fn serve_fps(frames_per_stream: usize, streams: usize) -> f64 {
+    let spec = StackSpec::parse("sru:f32:512x4").expect("builtin spec");
+    let params = StackParams::init(&spec, &mut Rng::new(2018)).unwrap();
+    let backend = NativeBackend::new(NativeStack::new(&spec, params, 32).unwrap());
+    let mut coord = Coordinator::new(
+        backend,
+        CoordinatorConfig {
+            policy: PolicyMode::Fixed(16),
+            max_wait: Duration::from_millis(80),
+            max_sessions: streams.max(1),
+            batching: BatchMode::Auto,
+        },
+    );
+    let feat = spec.feat;
+    let ids: Vec<_> = (0..streams).map(|_| coord.open().unwrap()).collect();
+    let traces: Vec<Vec<f32>> = (0..streams)
+        .map(|k| {
+            let mut x = vec![0.0; frames_per_stream * feat];
+            Rng::new(90 + k as u64).fill_normal(&mut x, 1.0);
+            x
+        })
+        .collect();
+    let timer = Timer::start();
+    let mut out = 0usize;
+    let chunk = 16 * feat;
+    let mut off = 0;
+    while off < frames_per_stream * feat {
+        let end = (off + chunk).min(frames_per_stream * feat);
+        for (k, &id) in ids.iter().enumerate() {
+            coord.feed(id, &traces[k][off..end]).unwrap();
+        }
+        coord.tick().unwrap();
+        for &id in &ids {
+            out += coord.drain(id, usize::MAX).unwrap().len() / spec.vocab;
+        }
+        off = end;
+    }
+    for &id in &ids {
+        out += coord.close(id).unwrap().len() / spec.vocab;
+    }
+    let wall_s = timer.elapsed_ms() / 1e3;
+    assert_eq!(out, frames_per_stream * streams, "frames lost in serve bench");
+    out as f64 / wall_s
+}
+
+/// Thread-scaling sweep at paper shapes: parallel packed GEMM GFLOP/s,
+/// single-stream wavefront serving, and 4-stream fused serving, at
+/// threads in {1, 2, 4, 8}.  Emits `bench_out/BENCH_threads.json` —
+/// the artifact the multicore acceptance gate reads (>= 1.5x serving
+/// throughput at 4 threads on the 512x4 SRU stack).
+fn threads_sweep(opts: &BenchOpts) {
+    println!("-- thread scaling: M-split GEMM + wavefront + fused cross-session serving --");
+    let mut rng = Rng::new(21);
+    // SRU-large gate shape [3072, 1024] x T=16 (the M-split unit).
+    let (m, k, t) = (3072usize, 1024usize, 16usize);
+    let mut w = vec![0.0; m * k];
+    rng.fill_normal(&mut w, 0.05);
+    let pg = PackedGemm::new(&w, m, k);
+    let mut x = vec![0.0; t * k];
+    rng.fill_normal(&mut x, 1.0);
+    let mut c = vec![0.0; m * t];
+    let bias = vec![0.1f32; m];
+    let acts = [Act::Ident, Act::Sigmoid, Act::Sigmoid];
+
+    let mut points: Vec<(usize, f64, f64, f64)> = Vec::new();
+    for &nt in &[1usize, 2, 4, 8] {
+        pool::set_threads(nt);
+        let meas = bench(&format!("packed {m}x{k}x{t} @{nt}t"), opts, || {
+            pg.matmul(&mut c, &x, t, false, &Epilogue::fused(&bias, &acts));
+        });
+        let gflops = 2.0 * (m * k * t) as f64 / meas.median_ns;
+        let fps1 = serve_fps(512, 1);
+        let fps4 = serve_fps(256, 4);
+        println!(
+            "  threads={nt}  gemm {gflops:>7.2} GFLOP/s | serve 1-stream {fps1:>8.0} f/s | 4-stream fused {fps4:>8.0} f/s"
+        );
+        points.push((nt, gflops, fps1, fps4));
+    }
+    pool::set_threads(1);
+
+    let base = points[0];
+    let mut json = String::from(
+        "{\n  \"bench\": \"threads_sweep\",\n  \"stack\": \"sru:f32:512x4\",\n  \"gemm_shape\": [3072, 1024, 16],\n  \"points\": [\n",
+    );
+    for (i, &(nt, gflops, fps1, fps4)) in points.iter().enumerate() {
+        let sep = if i + 1 < points.len() { "," } else { "" };
+        json.push_str(&format!(
+            "    {{\"threads\": {nt}, \"gemm_gflops\": {gflops:.2}, \"serve_fps\": {fps1:.1}, \"serve_fps_4stream\": {fps4:.1}, \"serve_speedup\": {:.3}, \"serve_speedup_4stream\": {:.3}}}{sep}\n",
+            fps1 / base.2,
+            fps4 / base.3,
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    match write_report("BENCH_threads.json", &json) {
+        Ok(p) => println!("  wrote {}", p.display()),
+        Err(e) => println!("  could not write BENCH_threads.json: {e}"),
+    }
 }

@@ -75,13 +75,26 @@ COMMANDS:
   ablation   run ablations                  --exp dram|lstm-precompute|energy|quant|stacks
   simulate   one memsim point               --cpu intel|arm --arch sru|qrnn|lstm
                                             --size small|large --t N [--samples N]
+                                            [--cores N]
   parity     check artifacts vs JAX goldens [--artifacts DIR] [--filter SUBSTR]
   serve      streaming TCP server           [--artifacts DIR] [--stack SPEC]
                                             [--backend native|pjrt] [--port P]
                                             [--block N | --adaptive]
                                             [--max-wait-ms N] [--max-block N]
+                                            [--batch auto|on|off]
   info       model/platform inventory
   help       this text
+
+GLOBAL OPTIONS:
+  --threads N    worker-pool size for any command (serve, tables,
+                 ablation, benches...).  Default: MTSRNN_THREADS env,
+                 else all available cores.  1 = the exact single-threaded
+                 legacy path; any N is bit-identical (the pool only
+                 partitions work across cores, it never splits a
+                 reduction).
+  --batch MODE   (serve, native backend) cross-session fusing of ready
+                 blocks into one N = B*T dispatch per tick: auto (fuse
+                 whenever the pool has >1 thread, the default), on, off.
 
 STACK SPECS (native serve; one weight set, any layer kind x precision):
   <arch>:<prec>:<hidden>x<depth>[,feat=N][,vocab=N][,l<i>=<arch>:<prec>]

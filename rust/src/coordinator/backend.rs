@@ -35,6 +35,39 @@ pub trait BlockBackend {
     /// accounting; `t` matters for cells with per-step weight terms,
     /// e.g. LSTM's `U @ h`).
     fn weight_bytes_per_block(&self, t: usize) -> usize;
+
+    /// True when [`BlockBackend::run_batch`] genuinely fuses streams
+    /// into shared-weight GEMMs (one weight fetch serves the whole
+    /// batch).  The coordinator only takes its batched tick path when
+    /// this holds — the default per-stream fallback would add nothing.
+    fn supports_batch(&self) -> bool {
+        false
+    }
+
+    /// Run a fused cross-session batch: `x` holds `segs[i]` frames for
+    /// stream `i` concatenated stream-major, `states[i]` is stream `i`'s
+    /// recurrent state; returns all logits concatenated in the same
+    /// order.  Must equal running the segments back-to-back through
+    /// `run_block` — which is exactly what this default does (the parity
+    /// baseline for backends without a fused path).
+    fn run_batch(
+        &mut self,
+        x: &[f32],
+        segs: &[usize],
+        states: &mut [StreamState],
+    ) -> Result<Vec<f32>, String> {
+        let feat = self.config().feat;
+        let vocab = self.config().vocab;
+        let n: usize = segs.iter().sum();
+        let mut out = Vec::with_capacity(n * vocab);
+        let mut off = 0;
+        for (i, &t) in segs.iter().enumerate() {
+            let logits = self.run_block(&x[off * feat..(off + t) * feat], t, &mut states[i])?;
+            out.extend_from_slice(&logits);
+            off += t;
+        }
+        Ok(out)
+    }
 }
 
 /// Native-engine backend supporting every block size up to `max_block`.
@@ -94,6 +127,30 @@ impl BlockBackend for NativeBackend {
         // see true per-block DRAM traffic (the old `param_count * 4`
         // assumed f32 everywhere and could not see precision or `t`).
         self.stack.weight_bytes_for_block(t)
+    }
+
+    fn supports_batch(&self) -> bool {
+        // Fused only when provably bit-identical to per-stream
+        // execution: a stack whose probe calibrated a small-N kernel
+        // crossover could change a GEMM's path (and thus low-order
+        // rounding) with the fused width, making logits depend on how
+        // streams were grouped into a tick.  Such stacks serve
+        // per-session instead.
+        self.stack.batch_is_bit_exact()
+    }
+
+    fn run_batch(
+        &mut self,
+        x: &[f32],
+        segs: &[usize],
+        states: &mut [StreamState],
+    ) -> Result<Vec<f32>, String> {
+        let vocab = self.stack.config().vocab;
+        let n: usize = segs.iter().sum();
+        let mut logits = vec![0.0; n * vocab];
+        let mut refs: Vec<&mut StreamState> = states.iter_mut().collect();
+        self.stack.run_batch(x, segs, &mut refs, &mut logits)?;
+        Ok(logits)
     }
 }
 

@@ -9,10 +9,15 @@
 //! sizes.  Zero-padding partial blocks would corrupt the recurrent state,
 //! so a partial block of `p` frames is covered exactly by a greedy sum of
 //! supported sizes (e.g. p=13 with sizes {1,2,4,8,16} → 8+4+1).
+//!
+//! One tick's decisions across all sessions form a [`TickPlan`].  On a
+//! multicore host the coordinator fuses a batchable plan into a single
+//! `N = Σ segments` dispatch — one weight stream from DRAM serving every
+//! ready session — instead of executing the entries one by one.
 
 use std::time::{Duration, Instant};
 
-use crate::coordinator::session::Session;
+use crate::coordinator::session::{Session, SessionId};
 
 /// What to run for one session right now.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -45,6 +50,35 @@ pub fn decompose_block(frames: usize, sizes: &[usize]) -> Vec<usize> {
         rest -= s;
     }
     out
+}
+
+/// The ready set of one coordinator tick: every session the batcher
+/// deemed dispatchable, in session order, with its decided blocks.
+///
+/// With cross-session batching the whole plan fuses into one backend
+/// dispatch (`segments()` gives the per-stream frame counts of that
+/// `N = Σ segments` call); without it each entry executes on its own.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct TickPlan {
+    pub entries: Vec<(SessionId, Dispatch)>,
+}
+
+impl TickPlan {
+    /// A fused dispatch needs at least two ready streams — with one (or
+    /// none) the per-session path is identical and cheaper.
+    pub fn is_batchable(&self) -> bool {
+        self.entries.len() >= 2
+    }
+
+    /// Per-stream fused segment lengths, in entry order.
+    pub fn segments(&self) -> Vec<usize> {
+        self.entries.iter().map(|(_, d)| d.total_frames()).collect()
+    }
+
+    /// Frames across the whole plan (the `N` of the fused dispatch).
+    pub fn total_frames(&self) -> usize {
+        self.entries.iter().map(|(_, d)| d.total_frames()).sum()
+    }
 }
 
 /// The dispatch policy.
@@ -177,6 +211,18 @@ mod tests {
         let s = session_with(0, 3);
         assert!(b.decide(&s, SIZES, Instant::now()).is_none());
         assert!(b.flush(&s, SIZES).is_none());
+    }
+
+    #[test]
+    fn tick_plan_segments_and_batchability() {
+        let mut plan = TickPlan::default();
+        assert!(!plan.is_batchable());
+        plan.entries.push((1, Dispatch { blocks: vec![16] }));
+        assert!(!plan.is_batchable(), "one stream gains nothing from fusing");
+        plan.entries.push((2, Dispatch { blocks: vec![8, 4, 1] }));
+        assert!(plan.is_batchable());
+        assert_eq!(plan.segments(), vec![16, 13]);
+        assert_eq!(plan.total_frames(), 29);
     }
 
     #[test]

@@ -1,20 +1,41 @@
 //! The coordinator: session table + batcher + policy + backend, driven by
 //! `feed` / `tick` / `drain` calls.
 //!
-//! Threading model: the coordinator is single-threaded by design (PJRT
-//! executables and the native engine both live on one inference thread);
-//! the TCP server wraps it in a mutex and a ticker thread.  This mirrors
-//! the paper's setting — one embedded core serving one user's streams —
-//! and keeps execution deterministic.
+//! Threading model: the coordinator runs on one inference thread (PJRT
+//! executables live there; the TCP server wraps it in a mutex and a
+//! ticker thread) and fans compute out through the process worker pool:
+//! the native backend's GEMMs M-split across cores, the stack wavefronts
+//! its layer chain, and — with [`BatchMode`] — a tick fuses the ready
+//! set of B streams into one `N = B·T` GEMM per layer, so one weight
+//! stream from DRAM serves every session in the tick.  All of it is
+//! bit-deterministic: with `MTSRNN_THREADS=1` execution is the exact
+//! legacy single-core path.
 
 use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::backend::BlockBackend;
-use crate::coordinator::batcher::Batcher;
+use crate::coordinator::batcher::{Batcher, TickPlan};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::policy::{AdaptivePolicy, PolicyMode};
 use crate::coordinator::session::{Session, SessionId};
+use crate::engine::StreamState;
+use crate::linalg::pool;
+
+/// When a tick may fuse many streams' ready blocks into one batched
+/// dispatch (requires a backend with a genuinely fused path — see
+/// `BlockBackend::supports_batch`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BatchMode {
+    /// Batch whenever the worker pool has more than one thread — the
+    /// default: single-threaded runs keep the exact legacy per-session
+    /// path, multicore runs share weight streams across sessions.
+    Auto,
+    /// Always batch (parity tests pin this to exercise the fused path).
+    On,
+    /// Never batch (per-session dispatch loop, whatever the pool size).
+    Off,
+}
 
 /// Tunables for the coordinator.
 #[derive(Debug, Clone)]
@@ -25,6 +46,8 @@ pub struct CoordinatorConfig {
     pub max_wait: Duration,
     /// Maximum live sessions (embedded memory budget).
     pub max_sessions: usize,
+    /// Cross-session batching of ready blocks within a tick.
+    pub batching: BatchMode,
 }
 
 impl Default for CoordinatorConfig {
@@ -33,6 +56,7 @@ impl Default for CoordinatorConfig {
             policy: PolicyMode::Fixed(16),
             max_wait: Duration::from_millis(100),
             max_sessions: 64,
+            batching: BatchMode::Auto,
         }
     }
 }
@@ -133,13 +157,26 @@ impl<B: BlockBackend> Coordinator<B> {
             .ok_or_else(|| format!("no such session {id}"))
     }
 
+    /// True when this tick may fuse ready streams into one dispatch.
+    fn batching_enabled(&self) -> bool {
+        match self.cfg.batching {
+            BatchMode::On => self.backend.supports_batch(),
+            BatchMode::Off => false,
+            BatchMode::Auto => self.backend.supports_batch() && pool::threads_hint() > 1,
+        }
+    }
+
     /// Run the dispatch loop once: for every session, execute whatever
-    /// the batcher deems ready.  Returns the number of blocks run.
+    /// the batcher deems ready.  With batching enabled and at least two
+    /// ready streams, the whole ready set fuses into **one** backend
+    /// dispatch (one weight stream serves all sessions in the tick);
+    /// otherwise each session executes its own blocks.  Returns the
+    /// number of dispatches run.
     pub fn tick(&mut self) -> Result<usize, String> {
         let now = Instant::now();
         let sizes: Vec<usize> = self.backend.block_sizes().to_vec();
         let ids: Vec<SessionId> = self.sessions.keys().copied().collect();
-        let mut ran = 0;
+        let mut plan = TickPlan::default();
         for id in ids {
             // Recompute target per session from current backlog.
             let backlog = self.sessions[&id].pending_frames();
@@ -150,8 +187,15 @@ impl<B: BlockBackend> Coordinator<B> {
                 batcher.decide(sess, &sizes, now)
             };
             if let Some(d) = dispatch {
-                ran += self.execute(id, &d.blocks)?;
+                plan.entries.push((id, d));
             }
+        }
+        if plan.is_batchable() && self.batching_enabled() {
+            return self.execute_batch(&plan);
+        }
+        let mut ran = 0;
+        for (id, dispatch) in &plan.entries {
+            ran += self.execute(*id, &dispatch.blocks)?;
         }
         Ok(ran)
     }
@@ -171,6 +215,98 @@ impl<B: BlockBackend> Coordinator<B> {
             Some(d) => self.execute(id, &d.blocks),
             None => Ok(0),
         }
+    }
+
+    /// Execute the planned ready set as fused dispatches: gather each
+    /// stream's frames and state, run `N = Σ tᵢ` batches through the
+    /// backend (projection, gate and head weights each streamed from
+    /// DRAM once per dispatch for all sessions), then scatter logits
+    /// and states back.  Bit-identical to per-session execution.
+    ///
+    /// Memory bound: each stream contributes at most the backend's
+    /// largest block size per dispatch, and large backlogs drain as a
+    /// loop of such bounded dispatches within the tick — one fused
+    /// dispatch never materializes an unbounded backlog (the batch
+    /// scratch in the stack grows to the largest `N` seen and is
+    /// reused, so the transient stays `O(max_sessions · max_block)`).
+    ///
+    /// Error contract (same as the per-session path's failing block):
+    /// frames already handed to a failing dispatch are lost, but every
+    /// stream's recurrent state is restored, so the sessions keep
+    /// serving.
+    fn execute_batch(&mut self, plan: &TickPlan) -> Result<usize, String> {
+        let vocab = self.backend.config().vocab;
+        let seg_cap = self
+            .backend
+            .block_sizes()
+            .last()
+            .copied()
+            .unwrap_or(1)
+            .max(1);
+        // Frames still owed per planned session.
+        let mut remaining = plan.segments();
+        let mut dispatches = 0usize;
+        loop {
+            let mut ids = Vec::new();
+            let mut segs = Vec::new();
+            let mut x = Vec::new();
+            let mut arrivals = Vec::new();
+            let mut states: Vec<StreamState> = Vec::new();
+            for ((id, _), rem) in plan.entries.iter().zip(remaining.iter_mut()) {
+                let t = (*rem).min(seg_cap);
+                if t == 0 {
+                    continue;
+                }
+                *rem -= t;
+                // Plan ids were read from `self.sessions` under this
+                // same exclusive borrow; nothing can have removed them.
+                let sess = self
+                    .sessions
+                    .get_mut(id)
+                    .expect("session vanished mid-tick");
+                let (xi, arr) = sess.take_frames(t);
+                x.extend_from_slice(&xi);
+                ids.push(*id);
+                segs.push(t);
+                arrivals.push(arr);
+                // Lend the state to the backend; restored below whether
+                // the dispatch succeeds or fails.
+                states.push(std::mem::replace(
+                    &mut sess.state,
+                    StreamState { tensors: Vec::new() },
+                ));
+            }
+            if segs.is_empty() {
+                break;
+            }
+            let result = self.backend.run_batch(&x, &segs, &mut states);
+            for (i, id) in ids.iter().enumerate() {
+                let sess = self.sessions.get_mut(id).expect("session vanished mid-tick");
+                sess.state = std::mem::replace(
+                    &mut states[i],
+                    StreamState { tensors: Vec::new() },
+                );
+            }
+            let logits = result?;
+            let done = Instant::now();
+            let total: usize = segs.iter().sum();
+            debug_assert_eq!(logits.len(), total * vocab);
+            let mut off = 0;
+            for (id, &t) in ids.iter().zip(&segs) {
+                let sess = self.sessions.get_mut(id).unwrap();
+                sess.push_ready(&logits[off * vocab..(off + t) * vocab]);
+                off += t;
+            }
+            // One weight fetch served this whole dispatch.
+            self.metrics.on_batch(
+                &segs,
+                self.backend.weight_bytes_per_block(total),
+                &arrivals,
+                done,
+            );
+            dispatches += 1;
+        }
+        Ok(dispatches)
     }
 
     /// Execute a sequence of exact-size blocks for one session.
@@ -206,6 +342,14 @@ mod tests {
     use crate::util::Rng;
 
     fn coord(policy: PolicyMode, max_wait_ms: u64) -> Coordinator<NativeBackend> {
+        coord_batched(policy, max_wait_ms, BatchMode::Auto)
+    }
+
+    fn coord_batched(
+        policy: PolicyMode,
+        max_wait_ms: u64,
+        batching: BatchMode,
+    ) -> Coordinator<NativeBackend> {
         let spec = StackSpec::new(8, 16, 4).with_layers(LayerSpec::f32(Arch::Sru), 2);
         let params = StackParams::init(&spec, &mut Rng::new(0)).unwrap();
         let backend = NativeBackend::new(NativeStack::new(&spec, params, 16).unwrap());
@@ -215,6 +359,7 @@ mod tests {
                 policy,
                 max_wait: Duration::from_millis(max_wait_ms),
                 max_sessions: 4,
+                batching,
             },
         )
     }
@@ -303,6 +448,56 @@ mod tests {
         for (a, b) in seq.iter().zip(&adaptive) {
             assert!((a - b).abs() < 1e-4);
         }
+    }
+
+    #[test]
+    fn batched_tick_matches_per_session_ticks() {
+        // The cross-session fused dispatch must be invisible in the
+        // numbers: same logits as the per-session loop, bit-for-bit.
+        let mut streams = Vec::new();
+        for k in 0..3u64 {
+            let mut x = vec![0.0; 16 * 8];
+            Rng::new(50 + k).fill_normal(&mut x, 1.0);
+            streams.push(x);
+        }
+        let run = |mode: BatchMode| -> Vec<Vec<f32>> {
+            let mut c = coord_batched(PolicyMode::Fixed(4), 0, mode);
+            let ids: Vec<_> = streams.iter().map(|_| c.open().unwrap()).collect();
+            for (k, &id) in ids.iter().enumerate() {
+                c.feed(id, &streams[k]).unwrap();
+            }
+            c.tick().unwrap();
+            ids.iter().map(|&id| c.drain(id, usize::MAX).unwrap()).collect()
+        };
+        let fused = run(BatchMode::On);
+        let solo = run(BatchMode::Off);
+        for (k, (f, s)) in fused.iter().zip(&solo).enumerate() {
+            assert_eq!(f.len(), 16 * 4, "stream {k} logits missing");
+            for (i, (a, b)) in f.iter().zip(s.iter()).enumerate() {
+                assert!(
+                    a.to_bits() == b.to_bits(),
+                    "stream {k} idx {i}: batched {a} != per-session {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn batched_ticks_carry_state_across_ticks() {
+        // States lent to the fused dispatch must come back: a second
+        // batched tick continues every stream where the first left off.
+        let mut c = coord_batched(PolicyMode::Fixed(4), 0, BatchMode::On);
+        let a = c.open().unwrap();
+        let b = c.open().unwrap();
+        c.feed(a, &vec![0.1; 4 * 8]).unwrap();
+        c.feed(b, &vec![0.2; 4 * 8]).unwrap();
+        c.tick().unwrap();
+        // Both sessions still serve after the batch.
+        c.feed(a, &vec![0.3; 4 * 8]).unwrap();
+        c.feed(b, &vec![0.4; 4 * 8]).unwrap();
+        c.tick().unwrap();
+        assert_eq!(c.ready_frames(a).unwrap(), 8);
+        assert_eq!(c.ready_frames(b).unwrap(), 8);
     }
 
     #[test]

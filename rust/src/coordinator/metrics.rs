@@ -56,6 +56,42 @@ impl Metrics {
         }
     }
 
+    /// Account one fused cross-session batch: `segs[i]` frames for
+    /// stream `i` (with matching per-stream `arrivals`), one weight
+    /// fetch of `weight_bytes` serving all `Σ segs` frames.  The fused
+    /// dispatch counts as a single "block" of `N = Σ segs` frames —
+    /// `mean_block` then reports the true amortization unit, and
+    /// `traffic_reduction` credits the cross-stream sharing on top of
+    /// the cross-time sharing (same `bytes × frames` t1 approximation
+    /// as [`Metrics::on_block`]).
+    pub fn on_batch(
+        &mut self,
+        segs: &[usize],
+        weight_bytes: usize,
+        arrivals: &[Vec<Instant>],
+        done: Instant,
+    ) {
+        let n: usize = segs.iter().sum();
+        self.blocks_dispatched += 1;
+        self.frames_in_blocks += n as u64;
+        self.weight_bytes_fetched += weight_bytes as u64;
+        self.weight_bytes_t1 += (weight_bytes * n) as u64;
+        match self.block_size_counts.iter_mut().find(|(s, _)| *s == n) {
+            Some((_, c)) => *c += 1,
+            None => {
+                self.block_size_counts.push((n, 1));
+                self.block_size_counts.sort_unstable();
+            }
+        }
+        for arr in arrivals {
+            self.frames_processed += arr.len() as u64;
+            for &a in arr {
+                let us = done.duration_since(a).as_secs_f64() * 1e6;
+                self.latency_us.record(us);
+            }
+        }
+    }
+
     /// Mean dispatched block size.
     pub fn mean_block(&self) -> f64 {
         if self.blocks_dispatched == 0 {
@@ -121,6 +157,20 @@ mod tests {
         // Reduction: t1 traffic = 16*1000 + 4*1000 = 20000; actual 2000.
         assert!((m.traffic_reduction() - 10.0).abs() < 1e-9);
         assert_eq!(m.block_size_counts, vec![(4, 1), (16, 1)]);
+    }
+
+    #[test]
+    fn batch_accounting_credits_shared_weight_stream() {
+        let mut m = Metrics::new();
+        let now = Instant::now();
+        let done = now + Duration::from_millis(1);
+        // Three streams, 4 frames each, one 1000-byte weight stream.
+        m.on_batch(&[4, 4, 4], 1000, &[vec![now; 4], vec![now; 4], vec![now; 4]], done);
+        assert_eq!(m.blocks_dispatched, 1);
+        assert_eq!(m.frames_processed, 12);
+        assert!((m.mean_block() - 12.0).abs() < 1e-9);
+        // t1 traffic = 12 * 1000 vs one fused fetch of 1000.
+        assert!((m.traffic_reduction() - 12.0).abs() < 1e-9);
     }
 
     #[test]

@@ -3,10 +3,14 @@
 //!
 //! A classic request router batches *across* streams (server-style batch
 //! processing, which the paper's §1 rules out for on-device use).  This
-//! coordinator instead batches **across time within each stream**: frames
+//! coordinator batches **across time within each stream**: frames
 //! accumulate per session until a block of `T` is ready (or a latency
 //! deadline expires), then one block inference runs — weights fetched
-//! once per `T` frames.
+//! once per `T` frames.  On a multicore host it additionally fuses the
+//! tick's ready set of `B` streams into one `N = B·T` dispatch
+//! (`BatchMode`), so the *same* weight fetch also serves every session —
+//! the two amortizations multiply, and the worker pool turns the fused
+//! GEMMs loose on all cores.
 //!
 //! Pieces:
 //! * [`backend`] — `BlockBackend` trait (native engine or PJRT runtime).
@@ -25,8 +29,8 @@ pub mod policy;
 pub mod session;
 
 pub use backend::{BlockBackend, NativeBackend};
-pub use batcher::{decompose_block, Batcher, Dispatch};
-pub use core::{Coordinator, CoordinatorConfig};
+pub use batcher::{decompose_block, Batcher, Dispatch, TickPlan};
+pub use core::{BatchMode, Coordinator, CoordinatorConfig};
 pub use metrics::Metrics;
 pub use policy::{AdaptivePolicy, PolicyMode};
 pub use session::{Session, SessionId};

@@ -204,6 +204,56 @@ impl RecurrentLayer for LstmEngine {
         slots[0].copy_from_slice(h);
         slots[1].copy_from_slice(c);
     }
+
+    fn min_wavefront_width(&self) -> usize {
+        // `U @ h` always runs at n = 1 (path fixed whatever the width);
+        // only the input-side precompute GEMM constrains sub-blocking.
+        self.pg_w.min_packed_n()
+    }
+
+    /// Batched §3.1 precompute across all streams: `GX = W @ X + b` runs
+    /// once for `N = Σ segs` frames (the only LSTM term that can share a
+    /// weight stream), then each stream's strictly sequential
+    /// `U @ h_{t-1}` recurrence replays on its own column window.
+    fn run_segments(
+        &mut self,
+        x: &[f32],
+        segs: &[usize],
+        states: &mut [&mut [Vec<f32>]],
+        out: &mut [f32],
+    ) {
+        let (h, d) = (self.hidden, self.input);
+        let n: usize = segs.iter().sum();
+        check_io(x, n, d, out, h);
+        if self.gx.len() < 4 * h * n {
+            self.gx.resize(4 * h * n, 0.0);
+        }
+        self.pg_w.matmul(
+            &mut self.gx[..4 * h * n],
+            &x[..n * d],
+            n,
+            false,
+            &Epilogue::with_bias(&self.b),
+        );
+        let mut off = 0;
+        for (&t, st) in segs.iter().zip(states.iter_mut()) {
+            self.h.copy_from_slice(&st[0]);
+            self.c.copy_from_slice(&st[1]);
+            for s in 0..t {
+                let j = off + s;
+                // g = GX[:, j] (strided column copy; bias already in).
+                let gx = &self.gx[..4 * h * n];
+                for (r, gv) in self.g.iter_mut().enumerate() {
+                    *gv = gx[r * n + j];
+                }
+                self.pg_u.matmul(&mut self.g, &self.h, 1, true, &Epilogue::NONE);
+                self.gate_step(&mut out[j * h..(j + 1) * h]);
+            }
+            st[0].copy_from_slice(&self.h);
+            st[1].copy_from_slice(&self.c);
+            off += t;
+        }
+    }
 }
 
 #[cfg(test)]

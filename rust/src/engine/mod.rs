@@ -7,9 +7,11 @@
 //! (`linalg::gemm`, weights fetched once per block), and only the cheap
 //! element-wise recurrence runs strictly sequentially.
 //!
-//! Engines own all scratch buffers: the per-step hot path performs **zero
-//! heap allocation** after construction (verified by the allocation-free
-//! property test in `rust/tests/engine_invariants.rs`).
+//! Engines own all scratch buffers: with `MTSRNN_THREADS=1` the per-step
+//! hot path performs **zero heap allocation** after construction; the
+//! multicore path adds only a small fixed job header per pool dispatch
+//! (and batched `run_segments` grows its gate scratch once to the
+//! largest batch seen, then reuses it).
 //!
 //! Every engine routes its gate GEMM through a
 //! [`crate::linalg::PackedGemm`] handle built at construction: weights
@@ -66,7 +68,12 @@ pub trait Engine {
 /// / `save_state` receive exactly `state_layout().slot_count()` slices
 /// with the advertised lengths — the stack validates shapes before
 /// dispatching, so implementations may index unchecked.
-pub trait RecurrentLayer: Engine {
+///
+/// `Send` is a supertrait: layers cross threads twice — moved with the
+/// stack onto the server's inference thread, and driven by worker-pool
+/// threads during the stack's wavefront schedule (each layer owned by
+/// exactly one task at a time).
+pub trait RecurrentLayer: Engine + Send {
     /// Describe this layer's per-stream state slots.
     fn state_layout(&self) -> StateLayout;
     /// Load a stream's state (one slice per slot, layout order).
@@ -80,6 +87,45 @@ pub trait RecurrentLayer: Engine {
     /// coordinator metrics reflect the actual dispatch size.
     fn weight_bytes_for_block(&self, _t: usize) -> usize {
         self.weight_bytes_per_block()
+    }
+
+    /// Smallest time-block this layer may be subdivided into without
+    /// changing which GEMM path runs (see `PackedGemm::min_packed_n`).
+    /// The stack's wavefront scheduler takes the max over all layers, so
+    /// sub-blocking stays bit-identical to full-block execution.
+    fn min_wavefront_width(&self) -> usize {
+        1
+    }
+
+    /// Cross-session batched execution: `x` holds the frames of many
+    /// streams concatenated stream-major (`segs[i]` frames for stream
+    /// `i`, all of this layer's width), `states[i]` is stream `i`'s slot
+    /// slice for this layer, and `out` receives all hidden frames in the
+    /// same concatenated order.
+    ///
+    /// The default is the per-stream loop — correct for any layer, and
+    /// the parity baseline.  The cell engines override it with a single
+    /// `N = Σ segs` gate GEMM followed by per-stream recurrences, so one
+    /// weight stream from DRAM serves every session in the batch (the
+    /// coordinator's cross-session amortization on top of the paper's
+    /// cross-time amortization).  Overrides must be *bit-identical* to
+    /// this loop: the gate GEMM per-element reduction is width-
+    /// independent, so fusing widths is exact.
+    fn run_segments(
+        &mut self,
+        x: &[f32],
+        segs: &[usize],
+        states: &mut [&mut [Vec<f32>]],
+        out: &mut [f32],
+    ) {
+        let (d, h) = (self.input(), self.hidden());
+        let mut off = 0;
+        for (&t, st) in segs.iter().zip(states.iter_mut()) {
+            self.load_state(st);
+            self.run_sequence(&x[off * d..(off + t) * d], t, &mut out[off * h..(off + t) * h]);
+            self.save_state(st);
+            off += t;
+        }
     }
 }
 

@@ -172,6 +172,69 @@ impl RecurrentLayer for QrnnEngine {
         slots[0].copy_from_slice(c);
         slots[1].copy_from_slice(xp);
     }
+
+    fn min_wavefront_width(&self) -> usize {
+        self.pg_cur.min_packed_n().max(self.pg_prev.min_packed_n())
+    }
+
+    /// Batched two-tap gate GEMMs across all streams.  The shifted
+    /// "previous" frames are built per segment (each stream's window-2
+    /// convolution must see *its own* carry, never a neighbour's last
+    /// frame), then both taps run as single `N`-wide GEMMs — each weight
+    /// matrix streamed once for the whole batch.
+    fn run_segments(
+        &mut self,
+        x: &[f32],
+        segs: &[usize],
+        states: &mut [&mut [Vec<f32>]],
+        out: &mut [f32],
+    ) {
+        let (h, d) = (self.hidden, self.input);
+        let n: usize = segs.iter().sum();
+        check_io(x, n, d, out, h);
+        if self.gates.len() < 3 * h * n {
+            self.gates.resize(3 * h * n, 0.0);
+        }
+        if self.x_prev.len() < n * d {
+            self.x_prev.resize(n * d, 0.0);
+        }
+        let xp = &mut self.x_prev[..n * d];
+        let mut off = 0;
+        for (&t, st) in segs.iter().zip(states.iter()) {
+            let seg = &mut xp[off * d..(off + t) * d];
+            seg[..d].copy_from_slice(&st[1]);
+            seg[d..].copy_from_slice(&x[off * d..(off + t - 1) * d]);
+            off += t;
+        }
+        let gates = &mut self.gates[..3 * h * n];
+        self.pg_cur.matmul(gates, &x[..n * d], n, false, &Epilogue::NONE);
+        self.pg_prev.matmul(
+            gates,
+            xp,
+            n,
+            true,
+            &Epilogue::fused(&self.b, &QrnnParams::GATE_ACTS),
+        );
+        let (gx, gfo) = gates.split_at(h * n);
+        let (gf, go) = gfo.split_at(h * n);
+        let mut off = 0;
+        for (&t, st) in segs.iter().zip(states.iter_mut()) {
+            let (c_slot, xc_slot) = st.split_at_mut(1);
+            let c_slot = &mut c_slot[0];
+            for i in 0..h {
+                let mut c = c_slot[i];
+                for s in 0..t {
+                    let j = off + s;
+                    let f = gf[i * n + j];
+                    c = f * c + (1.0 - f) * gx[i * n + j];
+                    out[j * h + i] = go[i * n + j] * fast_tanh(c);
+                }
+                c_slot[i] = c;
+            }
+            xc_slot[0].copy_from_slice(&x[(off + t - 1) * d..(off + t) * d]);
+            off += t;
+        }
+    }
 }
 
 #[cfg(test)]

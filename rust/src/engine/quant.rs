@@ -243,6 +243,54 @@ impl RecurrentLayer for QuantSruEngine {
     fn save_state(&self, slots: &mut [Vec<f32>]) {
         slots[0].copy_from_slice(self.state());
     }
+
+    // min_wavefront_width stays 1: PackedQuantGemm has a single kernel
+    // path at every `n`, so any sub-block width is bit-exact.
+
+    /// Batched int8 gate GEMM across all streams: each weight *byte*
+    /// leaves DRAM once per batch, serving `N = Σ segs` frames — the
+    /// quantization 4x and the batching multiply.
+    fn run_segments(
+        &mut self,
+        x: &[f32],
+        segs: &[usize],
+        states: &mut [&mut [Vec<f32>]],
+        out: &mut [f32],
+    ) {
+        let h = self.hidden;
+        let d = h;
+        let n: usize = segs.iter().sum();
+        check_io(x, n, d, out, h);
+        if self.gates.len() < 3 * h * n {
+            self.gates.resize(3 * h * n, 0.0);
+        }
+        let gates = &mut self.gates[..3 * h * n];
+        self.pq.matmul(
+            gates,
+            &x[..n * d],
+            n,
+            false,
+            &Epilogue::fused(&self.b3, &SruParams::GATE_ACTS),
+        );
+        let (gx, gfr) = gates.split_at(h * n);
+        let (gf, gr) = gfr.split_at(h * n);
+        let mut off = 0;
+        for (&t, st) in segs.iter().zip(states.iter_mut()) {
+            let c_slot = &mut st[0];
+            for i in 0..h {
+                let mut c = c_slot[i];
+                for s in 0..t {
+                    let j = off + s;
+                    let f = gf[i * n + j];
+                    let r = gr[i * n + j];
+                    c = f * c + (1.0 - f) * gx[i * n + j];
+                    out[j * h + i] = r * fast_tanh(c) + (1.0 - r) * x[j * d + i];
+                }
+                c_slot[i] = c;
+            }
+            off += t;
+        }
+    }
 }
 
 #[cfg(test)]

@@ -153,6 +153,56 @@ impl RecurrentLayer for SruEngine {
     fn save_state(&self, slots: &mut [Vec<f32>]) {
         slots[0].copy_from_slice(self.state());
     }
+
+    fn min_wavefront_width(&self) -> usize {
+        self.pg.min_packed_n()
+    }
+
+    /// Batched gate GEMM across all streams: one weight stream from DRAM
+    /// serves `N = Σ segs` frames, then each stream's c-recurrence runs
+    /// on its own column window.  Bit-identical to the per-stream loop
+    /// (the gate dot products are width-independent).
+    fn run_segments(
+        &mut self,
+        x: &[f32],
+        segs: &[usize],
+        states: &mut [&mut [Vec<f32>]],
+        out: &mut [f32],
+    ) {
+        let (h, d) = (self.hidden, self.input);
+        let n: usize = segs.iter().sum();
+        check_io(x, n, d, out, h);
+        // The batch can exceed t_block * 3H: grow once, reuse after.
+        if self.gates.len() < 3 * h * n {
+            self.gates.resize(3 * h * n, 0.0);
+        }
+        let gates = &mut self.gates[..3 * h * n];
+        self.pg.matmul(
+            gates,
+            &x[..n * d],
+            n,
+            false,
+            &Epilogue::fused(&self.b3, &SruParams::GATE_ACTS),
+        );
+        let (gx, gfr) = gates.split_at(h * n);
+        let (gf, gr) = gfr.split_at(h * n);
+        let mut off = 0;
+        for (&t, st) in segs.iter().zip(states.iter_mut()) {
+            let c_slot = &mut st[0];
+            for i in 0..h {
+                let mut c = c_slot[i];
+                for s in 0..t {
+                    let j = off + s;
+                    let f = gf[i * n + j];
+                    let r = gr[i * n + j];
+                    c = f * c + (1.0 - f) * gx[i * n + j];
+                    out[j * h + i] = r * fast_tanh(c) + (1.0 - r) * x[j * d + i];
+                }
+                c_slot[i] = c;
+            }
+            off += t;
+        }
+    }
 }
 
 #[cfg(test)]

@@ -15,13 +15,30 @@
 //! Every user-reachable shape/spec problem is a `Result::Err`, never a
 //! panic — `mtsrnn serve` must not abort on a bad request.
 
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
 use crate::engine::{build_layer, Engine, RecurrentLayer};
-use crate::linalg::{Act, Epilogue, PackedGemm};
+use crate::linalg::pool::{self, SendPtr, ThreadPool};
+use crate::linalg::{transpose_into, Act, Epilogue, PackedGemm};
 use crate::models::config::{StackConfig, StackSpec};
 use crate::models::StackParams;
 
 /// The projection activation, fused into its GEMM epilogue.
 const PROJ_ACTS: [Act; 1] = [Act::Tanh];
+
+/// Wavefront schedule shape for a `t`-frame block over `depth` layers
+/// whose minimum tolerated sub-GEMM width is `wmin`: `Some((w, nsub))`
+/// with `nsub` sub-blocks of width `w`, the last absorbing the `t % w`
+/// remainder (widths `w..2w-1`).  Every sub-block — tail included — is
+/// therefore `>= wmin`, so each sub-GEMM takes the same kernel path as
+/// the full-width GEMM and the pipeline stays bit-identical to serial
+/// execution.  `None` when fewer than two sub-blocks fit.
+fn wavefront_shape(t: usize, depth: usize, wmin: usize) -> Option<(usize, usize)> {
+    let w = wmin.max(t.div_ceil(depth));
+    let nsub = t / w;
+    (nsub >= 2).then_some((w, nsub))
+}
 
 /// Per-stream recurrent state: one tensor per layer state slot, in the
 /// same order as `python/compile/model.py::stack_flat_order` — derived
@@ -72,11 +89,24 @@ pub struct NativeStack {
     /// Flat expected slot lengths (state validation + `init_state`).
     state_lens: Vec<usize>,
     max_block: usize,
+    /// Smallest wavefront sub-block width every layer tolerates without
+    /// changing its GEMM path (max over `min_wavefront_width`).
+    wave_min: usize,
     // scratch
     hcur: Vec<f32>,  // [T, H]
     hnext: Vec<f32>, // [T, H]
     proj: Vec<f32>,  // [H, T] projection output (column per step)
     logit: Vec<f32>, // [vocab, T]
+    /// Wavefront inter-layer frame buffers: `wave[l]` holds layer `l`'s
+    /// input frames (`wave[0]` = projected input, `wave[depth]` = final
+    /// hidden frames), each `[max_block, H]`.
+    wave: Vec<Vec<f32>>,
+    // Cross-session batch scratch (grown on demand to `N = Σ segs`
+    // frames, then reused — the per-tick batch size is workload-driven).
+    bproj: Vec<f32>,  // [H, N]
+    bcur: Vec<f32>,   // [N, H]
+    bnext: Vec<f32>,  // [N, H]
+    blogit: Vec<f32>, // [vocab, N]
 }
 
 impl NativeStack {
@@ -130,6 +160,11 @@ impl NativeStack {
         }
         let pg_proj = PackedGemm::new(params.proj_w.data(), h, feat);
         let pg_head = PackedGemm::new(params.head_w.data(), vocab, h);
+        let wave_min = layers
+            .iter()
+            .map(|l| l.min_wavefront_width())
+            .max()
+            .unwrap_or(1);
         Ok(Self {
             cfg: spec.config(),
             spec: spec.clone(),
@@ -141,10 +176,18 @@ impl NativeStack {
             layer_slots,
             state_lens,
             max_block,
+            wave_min,
             hcur: vec![0.0; h * max_block],
             hnext: vec![0.0; h * max_block],
             proj: vec![0.0; h * max_block],
             logit: vec![0.0; vocab * max_block],
+            // Allocated on first wavefront use: the single-threaded
+            // deployment never needs these buffers.
+            wave: Vec::new(),
+            bproj: Vec::new(),
+            bcur: Vec::new(),
+            bnext: Vec::new(),
+            blogit: Vec::new(),
         })
     }
 
@@ -163,6 +206,17 @@ impl NativeStack {
     /// Fresh zero state matching this stack's layer layouts.
     pub fn init_state(&self) -> StreamState {
         StreamState::from_lens(&self.state_lens)
+    }
+
+    /// True when fusing arbitrary widths through this stack is
+    /// bit-identical to per-stream execution: no GEMM may switch kernel
+    /// path with `n`, i.e. every probed small-`N` crossover is 0 (the
+    /// overwhelmingly common case — the probe keeps the packed kernel
+    /// unless the row-major multi-dot wins decisively).  The coordinator
+    /// only offers cross-session batching when this holds, so logits
+    /// never depend on how streams happened to be fused into a tick.
+    pub fn batch_is_bit_exact(&self) -> bool {
+        self.pg_proj.bt_cutoff() == 0 && self.pg_head.bt_cutoff() == 0 && self.wave_min == 1
     }
 
     /// Weight bytes fetched for a full `max_block`-sized dispatch.
@@ -257,8 +311,9 @@ impl NativeStack {
 
         // Input projection: [H, t] = tanh(proj_w @ X^T + b), computed by
         // the packed GEMM straight off the time-major frames with bias
-        // and tanh fused into its store; then convert to time-major
-        // [t, H] for the recurrent layers (a plain transpose copy).
+        // and tanh fused into its store (M-split across the pool when
+        // worthwhile); then convert to time-major [t, H] for the
+        // recurrent layers (a plain transpose copy).
         let proj = &mut self.proj[..h * t];
         self.pg_proj.matmul(
             proj,
@@ -267,20 +322,51 @@ impl NativeStack {
             false,
             &Epilogue::fused(&self.proj_b, &PROJ_ACTS),
         );
-        let hcur = &mut self.hcur[..t * h];
-        for r in 0..h {
-            for s in 0..t {
-                hcur[s * h + r] = proj[r * t + s];
+
+        // Wavefront schedule: with >1 pool threads and >=2 layers, split
+        // the block into sub-blocks of width `w` and pipeline the layer
+        // chain — layer `l` processes sub-block `s` while layer `l+1`
+        // processes `s-1`, overlapping the dependent chain across cores.
+        // `w` honours every layer's `min_wavefront_width`, so each
+        // sub-GEMM takes the same kernel path as the full-width GEMM and
+        // the result stays bit-identical to the serial loop.
+        let depth = self.layers.len();
+        let wavefront = if depth >= 2 && t >= 2 && !pool::in_worker() && pool::threads_hint() > 1
+        {
+            match wavefront_shape(t, depth, self.wave_min) {
+                Some((w, nsub)) => {
+                    let p = pool::current();
+                    (p.threads() > 1).then_some((p, w, nsub))
+                }
+                None => None,
+            }
+        } else {
+            None
+        };
+
+        let used_wavefront = wavefront.is_some();
+        if let Some((p, w, nsub)) = wavefront {
+            if self.wave.len() != depth + 1 {
+                self.wave = (0..=depth).map(|_| vec![0.0; h * self.max_block]).collect();
+            }
+            transpose_into(&self.proj[..h * t], h, t, &mut self.wave[0][..t * h]);
+            self.run_wavefront(t, w, nsub, &p);
+        } else {
+            // Serial layer loop — the exact legacy path (each layer's
+            // gate GEMM may still M-split internally when the pool has
+            // threads; that partitioning is bit-exact).
+            transpose_into(proj, h, t, &mut self.hcur[..t * h]);
+            for li in 0..self.layers.len() {
+                let hnext = &mut self.hnext[..t * h];
+                self.layers[li].run_sequence(&self.hcur[..t * h], t, hnext);
+                std::mem::swap(&mut self.hcur, &mut self.hnext);
             }
         }
-
-        // Recurrent layers — dyn dispatch, no kind branching: every
-        // layer consumes/produces time-major `[t, H]` frames.
-        for li in 0..self.layers.len() {
-            let hnext = &mut self.hnext[..t * h];
-            self.layers[li].run_sequence(&self.hcur[..t * h], t, hnext);
-            std::mem::swap(&mut self.hcur, &mut self.hnext);
-        }
+        let hframes = if used_wavefront {
+            &self.wave[depth][..t * h]
+        } else {
+            &self.hcur[..t * h]
+        };
 
         // Output head: logits [vocab, t] = head_w @ H^T + b — the packed
         // GEMM consumes the time-major hidden frames directly, bias
@@ -288,18 +374,186 @@ impl NativeStack {
         let logit = &mut self.logit[..vocab * t];
         self.pg_head.matmul(
             logit,
-            &self.hcur[..t * h],
+            hframes,
             t,
             false,
             &Epilogue::with_bias(&self.head_b),
         );
-        for s in 0..t {
-            for v in 0..vocab {
-                logits_out[s * vocab + v] = logit[v * t + s];
-            }
-        }
+        transpose_into(logit, vocab, t, logits_out);
 
         self.save_state(state);
+        Ok(())
+    }
+
+    /// Execute the layer chain as a wavefront over `nsub` sub-blocks of
+    /// width `w` (the last absorbs the `t % w` remainder, so no
+    /// sub-block falls below the layers' minimum width): pool task `l`
+    /// owns layer `l` exclusively, consuming
+    /// `wave[l]` and producing `wave[l + 1]` sub-block by sub-block.
+    /// Task `l` may start sub-block `s` as soon as task `l - 1` has
+    /// published it (`progress` counters, Release/Acquire), so up to
+    /// `depth` layers run concurrently on the anti-diagonal.  Weight
+    /// locality: each core keeps re-streaming *its own* layer's packed
+    /// panels (LLC-resident across sub-blocks) instead of all cores
+    /// marching through every layer's weights.
+    ///
+    /// `wave[0]` must already hold the `t` projected input frames.
+    fn run_wavefront(&mut self, t: usize, w: usize, nsub: usize, pool: &ThreadPool) {
+        let depth = self.layers.len();
+        let h = self.cfg.hidden;
+        // progress[l] = sub-blocks of wave[l] published; the input is
+        // fully available before any task starts.
+        let progress: Vec<AtomicUsize> = (0..=depth)
+            .map(|l| AtomicUsize::new(if l == 0 { nsub } else { 0 }))
+            .collect();
+        let layers_base = SendPtr(self.layers.as_mut_ptr());
+        let bufs: Vec<SendPtr<f32>> = self
+            .wave
+            .iter_mut()
+            .map(|b| SendPtr(b.as_mut_ptr()))
+            .collect();
+        let progress = &progress;
+        pool.run(depth, move |li| {
+            // SAFETY: task index `li` is claimed by exactly one thread,
+            // which makes it the sole owner of layer `li` and the sole
+            // writer of `wave[li + 1]` for the duration of the job; the
+            // Acquire load below orders its reads of `wave[li]` after
+            // the producer's Release publish, and the pool's join orders
+            // everything before the caller resumes.
+            let layer = unsafe { &mut *layers_base.get().add(li) };
+            let inp = bufs[li];
+            let outp = bufs[li + 1];
+            let r = catch_unwind(AssertUnwindSafe(|| {
+                for si in 0..nsub {
+                    let mut spins = 0u32;
+                    while progress[li].load(Ordering::Acquire) <= si {
+                        spins += 1;
+                        if spins > 10_000 {
+                            std::thread::yield_now();
+                        } else {
+                            std::hint::spin_loop();
+                        }
+                    }
+                    let s0 = si * w;
+                    // The last sub-block absorbs the remainder, keeping
+                    // every width >= the layers' minimum.
+                    let sl = if si + 1 == nsub { t - s0 } else { w };
+                    let x = unsafe { std::slice::from_raw_parts(inp.get().add(s0 * h), sl * h) };
+                    let out = unsafe {
+                        std::slice::from_raw_parts_mut(outp.get().add(s0 * h), sl * h)
+                    };
+                    layer.run_sequence(x, sl, out);
+                    progress[li + 1].store(si + 1, Ordering::Release);
+                }
+            }));
+            if let Err(payload) = r {
+                // Unblock downstream consumers before propagating, so a
+                // panicking layer cannot wedge the pipeline; the pool
+                // re-raises on the calling thread after the join.
+                progress[li + 1].store(nsub, Ordering::Release);
+                resume_unwind(payload);
+            }
+        });
+    }
+
+    /// Run one fused cross-session batch: `x` holds `segs[i]` frames for
+    /// stream `i`, concatenated stream-major (`N = Σ segs` frames
+    /// total); `states[i]` is stream `i`'s recurrent state;
+    /// `logits_out` receives `[N, vocab]` in the same order.
+    ///
+    /// Projection, every layer's gate GEMM, and the head each run
+    /// **once** over all `N` frames — one weight stream from DRAM serves
+    /// every session in the tick — while the per-stream recurrences
+    /// scatter/gather through each stream's own `StreamState`.  Results
+    /// are bit-identical to running the streams back-to-back through
+    /// [`NativeStack::run_block`].  Segments may exceed `max_block`
+    /// (batch scratch grows on demand and is then reused).
+    pub fn run_batch(
+        &mut self,
+        x: &[f32],
+        segs: &[usize],
+        states: &mut [&mut StreamState],
+        logits_out: &mut [f32],
+    ) -> Result<(), String> {
+        let (feat, h, vocab) = (self.cfg.feat, self.cfg.hidden, self.cfg.vocab);
+        if segs.is_empty() {
+            return Err("batch must contain at least one stream".into());
+        }
+        if segs.iter().any(|&t| t == 0) {
+            return Err("batch segments must be non-empty".into());
+        }
+        if states.len() != segs.len() {
+            return Err(format!(
+                "batch has {} segments but {} states",
+                segs.len(),
+                states.len()
+            ));
+        }
+        let n: usize = segs.iter().sum();
+        if x.len() != n * feat {
+            return Err(format!(
+                "x has len {}, must be [N={n}, feat={feat}]",
+                x.len()
+            ));
+        }
+        if logits_out.len() != n * vocab {
+            return Err(format!(
+                "logits buffer has len {}, must be [N={n}, vocab={vocab}]",
+                logits_out.len()
+            ));
+        }
+        for st in states.iter() {
+            self.check_state(st)?;
+        }
+        if self.bproj.len() < h * n {
+            self.bproj.resize(h * n, 0.0);
+            self.bcur.resize(h * n, 0.0);
+            self.bnext.resize(h * n, 0.0);
+        }
+        if self.blogit.len() < vocab * n {
+            self.blogit.resize(vocab * n, 0.0);
+        }
+
+        // Fused projection over all streams' frames.
+        let proj = &mut self.bproj[..h * n];
+        self.pg_proj.matmul(
+            proj,
+            &x[..n * feat],
+            n,
+            false,
+            &Epilogue::fused(&self.proj_b, &PROJ_ACTS),
+        );
+        transpose_into(proj, h, n, &mut self.bcur[..n * h]);
+
+        // Layers: one N-wide gate GEMM each, per-stream recurrences with
+        // state scattered/gathered straight in the streams' slots.
+        let mut idx = 0;
+        for li in 0..self.layers.len() {
+            let nslots = self.layer_slots[li];
+            let mut slot_refs: Vec<&mut [Vec<f32>]> = states
+                .iter_mut()
+                .map(|st| &mut st.tensors[idx..idx + nslots])
+                .collect();
+            self.layers[li].run_segments(
+                &self.bcur[..n * h],
+                segs,
+                &mut slot_refs,
+                &mut self.bnext[..n * h],
+            );
+            std::mem::swap(&mut self.bcur, &mut self.bnext);
+            idx += nslots;
+        }
+
+        // Fused head over all streams' hidden frames.
+        let logit = &mut self.blogit[..vocab * n];
+        self.pg_head.matmul(
+            logit,
+            &self.bcur[..n * h],
+            n,
+            false,
+            &Epilogue::with_bias(&self.head_b),
+        );
+        transpose_into(logit, vocab, n, logits_out);
         Ok(())
     }
 }
@@ -312,6 +566,32 @@ mod tests {
 
     fn tiny_spec(arch: Arch) -> StackSpec {
         StackSpec::new(8, 16, 4).with_layers(LayerSpec::f32(arch), 2)
+    }
+
+    #[test]
+    fn wavefront_shape_never_undercuts_min_width() {
+        // Every sub-block (the tail absorbs the remainder) must be
+        // >= wmin and the widths must sum to t — the bit-exactness
+        // precondition for sub-blocking a probed (bt_cutoff > 0) stack.
+        for t in 1..=64usize {
+            for depth in 1..=6 {
+                for wmin in 1..=9 {
+                    let Some((w, nsub)) = wavefront_shape(t, depth, wmin) else {
+                        continue;
+                    };
+                    assert!(nsub >= 2);
+                    assert!(w >= wmin, "t={t} depth={depth} wmin={wmin}");
+                    let tail = t - (nsub - 1) * w;
+                    assert!(tail >= w, "tail {tail} below w: t={t} w={w} nsub={nsub}");
+                    assert!(tail < 2 * w, "tail should have split: t={t} w={w}");
+                }
+            }
+        }
+        // The probed-crossover example from review: wmin=5, depth=4,
+        // t=16 → three sub-blocks 5+5+6, never a 1-wide tail.
+        assert_eq!(wavefront_shape(16, 4, 5), Some((5, 3)));
+        // Too small to pipeline → serial.
+        assert_eq!(wavefront_shape(4, 4, 5), None);
     }
 
     #[test]

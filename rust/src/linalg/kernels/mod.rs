@@ -86,16 +86,41 @@ pub(crate) fn matmul(
     acc: bool,
     epi: &Epilogue,
 ) {
+    matmul_range(simd, panels, c, 0, x, m, k, n, acc, epi, 0, m.div_ceil(PACK_MR));
+}
+
+/// Panel-range variant of [`matmul`]: computes only panels `p0..p1`
+/// (output rows `p0 * PACK_MR .. min(p1 * PACK_MR, m)`).  `c` is the
+/// caller's *sub-slice* for exactly those rows and `crow0 = p0 *
+/// PACK_MR` is the absolute row index of `c[0]` (bias / scale /
+/// activation lookups stay absolute).  This is the unit the worker pool
+/// steals: disjoint panel ranges write disjoint `c` sub-slices, so the
+/// multicore result is bit-identical to the serial full-range sweep.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn matmul_range(
+    simd: Simd,
+    panels: &[f32],
+    c: &mut [f32],
+    crow0: usize,
+    x: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    acc: bool,
+    epi: &Epilogue,
+    p0: usize,
+    p1: usize,
+) {
     match simd {
         #[cfg(target_arch = "x86_64")]
         // SAFETY: an Avx2 request only exists when `detect()` returned it
         // (PackedGemm::new uses detect(); with_dispatch asserts equality
         // with detect()), i.e. avx2+fma were verified on this host.
-        Simd::Avx2 => unsafe { avx2::matmul(panels, c, x, m, k, n, acc, epi) },
+        Simd::Avx2 => unsafe { avx2::matmul(panels, c, crow0, x, m, k, n, acc, epi, p0, p1) },
         #[cfg(target_arch = "aarch64")]
         // SAFETY: NEON is baseline on aarch64; `detect()` verifies it.
-        Simd::Neon => unsafe { neon::matmul(panels, c, x, m, k, n, acc, epi) },
-        _ => portable::matmul(panels, c, x, m, k, n, acc, epi),
+        Simd::Neon => unsafe { neon::matmul(panels, c, crow0, x, m, k, n, acc, epi, p0, p1) },
+        _ => portable::matmul(panels, c, crow0, x, m, k, n, acc, epi, p0, p1),
     }
 }
 
@@ -106,10 +131,16 @@ pub(crate) fn matmul(
 /// C[row, j] = act(tile * scale + bias (+ C[row, j] if acc))
 /// ```
 ///
+/// `c` may be a row sub-slice of the full output: `crow0` is the
+/// absolute row index of `c[0]` (0 for a full-matrix sweep), while
+/// `row0`/`m` stay absolute so bias, scale and the activation segment
+/// map are unchanged under panel-range parallel execution.
+///
 /// Rows past `m` are panel zero-padding: computed, never stored.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn store_tile(
     c: &mut [f32],
+    crow0: usize,
     tile: &[[f32; PACK_MR]],
     j0: usize,
     nr: usize,
@@ -126,7 +157,7 @@ pub(crate) fn store_tile(
         let s = scale.map_or(1.0, |sc| sc[row]);
         let b = epi.bias.map_or(0.0, |bias| bias[row]);
         let act = epi.act_for_row(m, row);
-        let crow = &mut c[row * n + j0..row * n + j0 + nr];
+        let crow = &mut c[(row - crow0) * n + j0..(row - crow0) * n + j0 + nr];
         for (jj, cv) in crow.iter_mut().enumerate() {
             let mut v = tile[jj][r] * s + b;
             if acc {

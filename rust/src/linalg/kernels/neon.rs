@@ -61,6 +61,9 @@ def_kern!(kern2, 2);
 def_kern!(kern3, 3);
 def_kern!(kern4, 4);
 
+/// `c` covers rows `crow0..` of the output; `p0..p1` is the panel range
+/// to compute (full sweep: `crow0 = 0`, `p0 = 0`, `p1 = ceil(m / MR)`).
+///
 /// # Safety
 /// Requires neon (baseline on aarch64; verified by `detect()`).  Slice
 /// sizes are checked by `PackedGemm::matmul`.
@@ -69,16 +72,19 @@ def_kern!(kern4, 4);
 pub(crate) unsafe fn matmul(
     panels: &[f32],
     c: &mut [f32],
+    crow0: usize,
     x: &[f32],
     m: usize,
     k: usize,
     n: usize,
     acc: bool,
     epi: &Epilogue,
+    p0: usize,
+    p1: usize,
 ) {
     debug_assert_eq!(panels.len(), m.div_ceil(PACK_MR) * PACK_MR * k);
     let mut tile = [[0f32; PACK_MR]; NR];
-    for pi in 0..m.div_ceil(PACK_MR) {
+    for pi in p0..p1 {
         let panel = panels[pi * PACK_MR * k..].as_ptr();
         let xp = x.as_ptr();
         let mut j0 = 0;
@@ -90,7 +96,7 @@ pub(crate) unsafe fn matmul(
                 2 => kern2(panel, xp, k, j0, &mut tile),
                 _ => kern1(panel, xp, k, j0, &mut tile),
             }
-            store_tile(c, &tile, j0, nr, pi * PACK_MR, m, n, acc, None, epi);
+            store_tile(c, crow0, &tile, j0, nr, pi * PACK_MR, m, n, acc, None, epi);
             j0 += nr;
         }
     }

@@ -13,19 +13,24 @@ use crate::linalg::pack::{Epilogue, PACK_MR};
 /// Register-tile width (frame columns per microkernel pass).
 pub(crate) const NR: usize = 4;
 
+/// `c` covers rows `crow0..` of the output; `p0..p1` is the panel range
+/// to compute (full sweep: `crow0 = 0`, `p0 = 0`, `p1 = ceil(m / MR)`).
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn matmul(
     panels: &[f32],
     c: &mut [f32],
+    crow0: usize,
     x: &[f32],
     m: usize,
     k: usize,
     n: usize,
     acc: bool,
     epi: &Epilogue,
+    p0: usize,
+    p1: usize,
 ) {
     let mut tile = [[0f32; PACK_MR]; NR];
-    for pi in 0..m.div_ceil(PACK_MR) {
+    for pi in p0..p1 {
         let panel = &panels[pi * PACK_MR * k..(pi + 1) * PACK_MR * k];
         let mut j0 = 0;
         while j0 < n {
@@ -36,7 +41,7 @@ pub(crate) fn matmul(
                 2 => kern::<2>(panel, x, k, j0, &mut tile),
                 _ => kern::<1>(panel, x, k, j0, &mut tile),
             }
-            store_tile(c, &tile, j0, nr, pi * PACK_MR, m, n, acc, None, epi);
+            store_tile(c, crow0, &tile, j0, nr, pi * PACK_MR, m, n, acc, None, epi);
             j0 += nr;
         }
     }
@@ -63,21 +68,25 @@ fn kern<const NR2: usize>(
 }
 
 /// Int8 panels: identical tiling, with the `i8 -> f32` widen performed in
-/// registers (weight bytes stream at 1/4 the f32 DRAM traffic).
+/// registers (weight bytes stream at 1/4 the f32 DRAM traffic).  Same
+/// panel-range contract as [`matmul`].
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn matmul_quant(
     panels: &[i8],
     scales: &[f32],
     c: &mut [f32],
+    crow0: usize,
     x: &[f32],
     m: usize,
     k: usize,
     n: usize,
     acc: bool,
     epi: &Epilogue,
+    p0: usize,
+    p1: usize,
 ) {
     let mut tile = [[0f32; PACK_MR]; NR];
-    for pi in 0..m.div_ceil(PACK_MR) {
+    for pi in p0..p1 {
         let panel = &panels[pi * PACK_MR * k..(pi + 1) * PACK_MR * k];
         let mut j0 = 0;
         while j0 < n {
@@ -88,7 +97,7 @@ pub(crate) fn matmul_quant(
                 2 => kern_q::<2>(panel, x, k, j0, &mut tile),
                 _ => kern_q::<1>(panel, x, k, j0, &mut tile),
             }
-            store_tile(c, &tile, j0, nr, pi * PACK_MR, m, n, acc, Some(scales), epi);
+            store_tile(c, crow0, &tile, j0, nr, pi * PACK_MR, m, n, acc, Some(scales), epi);
             j0 += nr;
         }
     }

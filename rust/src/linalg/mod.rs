@@ -1,8 +1,12 @@
 //! Dense linear algebra substrate (the paper's MKL/OpenBLAS substitute).
 //!
-//! Single-threaded by design: the paper's experiments measure a single
-//! inference stream on an embedded-class core; determinism also matters
-//! for the golden-output parity tests against the JAX artifacts.
+//! Deterministic at any core count: the paper's experiments measure a
+//! single inference stream on an embedded-class core, and the golden
+//! parity tests against the JAX artifacts need reproducible floats — so
+//! the multicore path ([`pool`]) only ever *partitions* output rows
+//! across cores (one weight stream, shared via the LLC); it never splits
+//! a reduction.  `MTSRNN_THREADS=1` is the exact legacy single-threaded
+//! path, and any thread count produces bit-identical results.
 //!
 //! Two GEMM generations coexist:
 //!
@@ -23,6 +27,7 @@ pub mod gemm;
 pub mod kernels;
 pub mod matrix;
 pub mod pack;
+pub mod pool;
 
 pub use fastmath::{fast_exp, fast_sigmoid, fast_tanh};
 pub use gemm::{
@@ -32,6 +37,7 @@ pub use gemm::{
 pub use kernels::{detect as detect_simd, Simd};
 pub use matrix::{transpose_into, Matrix};
 pub use pack::{Act, Epilogue, PackedGemm, PackedMatrix, PackedQuantGemm, PACK_MR};
+pub use pool::ThreadPool;
 
 /// Elementwise activations used by every engine.  `sigmoid` and `tanh`
 /// are the scalar hot ops of the recurrence remainder; they operate on

@@ -26,12 +26,22 @@
 //! natural input layout — so the old `[T, D] -> [D, T]` transpose
 //! disappears from the hot path entirely; the microkernel broadcasts
 //! from at most `NR` sequential frame streams instead.
+//!
+//! Large GEMMs additionally fan out across the process worker pool
+//! ([`super::pool`]): the `M` dimension splits at `PACK_MR` (panel)
+//! granularity with panel-level work stealing, each core streaming its
+//! own disjoint weight panels while sharing the `X` frames through the
+//! LLC.  Row partitioning never reorders any per-element reduction, so
+//! multicore results are bit-identical to the single-thread sweep.
 
+use std::collections::BTreeMap;
+use std::sync::{Mutex, OnceLock};
 use std::time::Instant;
 
 use crate::linalg::fastmath::{fast_sigmoid, fast_tanh};
 use crate::linalg::gemm::{gemm_bt, gemm_bt_acc};
 use crate::linalg::kernels::{self, Simd};
+use crate::linalg::pool::{self, SendPtr, PAR_MIN_WORK};
 
 /// Panel height: rows of `A` interleaved per packed panel.  Shared by
 /// every kernel family (AVX2 reads it as 2 x 8 lanes, NEON as 4 x 4).
@@ -209,6 +219,58 @@ fn probe_bt_cutoff(a: &[f32], packed: &PackedMatrix, simd: Simd) -> usize {
     cutoff
 }
 
+/// Process-wide cache of probed crossovers, keyed by `(m, k)` shape.
+///
+/// The probe is a wall-clock measurement, so per-instance probing would
+/// (a) race its timing against concurrent worker threads and (b) let two
+/// engines of the same shape calibrate to *different* crossovers — a
+/// nondeterminism parity tests cannot tolerate.  Instead the first
+/// construction of a shape probes **under the lock** (construction-time
+/// only, never on a hot path) and every later construction — from any
+/// thread — reads the cached value.
+fn cached_bt_cutoff(a: &[f32], packed: &PackedMatrix, simd: Simd) -> usize {
+    static CACHE: OnceLock<Mutex<BTreeMap<(usize, usize), usize>>> = OnceLock::new();
+    let cache = CACHE.get_or_init(|| Mutex::new(BTreeMap::new()));
+    let mut map = cache.lock().unwrap();
+    *map.entry((packed.m, packed.k))
+        .or_insert_with(|| probe_bt_cutoff(a, packed, simd))
+}
+
+/// Fan one GEMM's output rows out across the process pool at `PACK_MR`
+/// (panel) granularity: `kernel(csub, row0, pi)` computes panel `pi`
+/// (absolute first row `row0`) into `csub`, its disjoint row sub-slice
+/// of `c`.  Returns `false` — leaving `c` untouched — when the call
+/// should stay serial (too little work, single-thread pool, or already
+/// inside a pool task).  Shared by the f32 and int8 matmuls so the
+/// guard chain and the unsafe row partitioning exist exactly once.
+fn par_split_rows(
+    m: usize,
+    k: usize,
+    n: usize,
+    c: &mut [f32],
+    kernel: impl Fn(&mut [f32], usize, usize) + Sync,
+) -> bool {
+    let np = m.div_ceil(PACK_MR);
+    if np < 2 || m * k * n < PAR_MIN_WORK || pool::in_worker() || pool::threads_hint() <= 1 {
+        return false;
+    }
+    let p = pool::current();
+    if p.threads() <= 1 {
+        return false;
+    }
+    let cbase = SendPtr(c.as_mut_ptr());
+    p.run(np, |pi| {
+        let row0 = pi * PACK_MR;
+        let rows = PACK_MR.min(m - row0);
+        // SAFETY: panel `pi` owns exactly output rows [row0, row0+rows)
+        // — a contiguous region of `c` disjoint from every other task's
+        // — and the pool joins all tasks before this function returns.
+        let csub = unsafe { std::slice::from_raw_parts_mut(cbase.get().add(row0 * n), rows * n) };
+        kernel(csub, row0, pi);
+    });
+    true
+}
+
 /// An engine's handle to one packed weight matrix: owns the panels, the
 /// dispatched SIMD level and the calibrated small-`N` crossover.  Packing
 /// and probing happen once at engine construction; `matmul` is
@@ -229,7 +291,7 @@ impl PackedGemm {
         let simd = kernels::detect();
         let packed = PackedMatrix::pack(a, m, k);
         let bt_cutoff = if m * k >= PROBE_MIN_ELEMS {
-            probe_bt_cutoff(a, &packed, simd)
+            cached_bt_cutoff(a, &packed, simd)
         } else {
             0
         };
@@ -275,11 +337,28 @@ impl PackedGemm {
         self.bt_cutoff
     }
 
+    /// Smallest `n` at which the packed-panel kernel (rather than the
+    /// `gemm_bt` crossover path) is guaranteed to run.  Sub-block
+    /// schedulers (the stack's wavefront) must not split a block that
+    /// runs packed into pieces that would run `gemm_bt` — the two paths
+    /// differ in low-order rounding, which would break the bit-exactness
+    /// of multicore vs single-thread execution.
+    pub fn min_packed_n(&self) -> usize {
+        self.bt_cutoff + 1
+    }
+
     /// `c[m, n] = A @ X^T` (or `+=` with `acc`), where `x` holds `n`
     /// time-major frames of length `k`.  The epilogue is fused into the
     /// store pass; with `acc` the existing `C` joins the pre-activation
     /// sum (`C = act(C_old + dot + bias)`), which is what a two-term
     /// gate GEMM (QRNN) needs.
+    ///
+    /// Large calls are split across the process worker pool by row
+    /// panel: every core streams its own disjoint `PACK_MR`-row panels
+    /// (so each weight byte still leaves DRAM once, shared through the
+    /// LLC) and writes its own disjoint `C` rows.  Each output element
+    /// is produced by the exact same k-ordered FMA chain as the serial
+    /// sweep, so the result is **bit-identical** at any thread count.
     pub fn matmul(&self, c: &mut [f32], x: &[f32], n: usize, acc: bool, epi: &Epilogue) {
         let (m, k) = (self.packed.m, self.packed.k);
         assert_eq!(x.len(), n * k, "X must be [n={n}, k={k}]");
@@ -298,7 +377,13 @@ impl PackedGemm {
                 return;
             }
         }
-        kernels::matmul(self.simd, self.packed.panels(), c, x, m, k, n, acc, epi);
+        let (simd, panels) = (self.simd, self.packed.panels());
+        let fanned = par_split_rows(m, k, n, c, |csub, row0, pi| {
+            kernels::matmul_range(simd, panels, csub, row0, x, m, k, n, acc, epi, pi, pi + 1);
+        });
+        if !fanned {
+            kernels::matmul(simd, panels, c, x, m, k, n, acc, epi);
+        }
     }
 }
 
@@ -333,7 +418,12 @@ pub struct PackedQuantGemm {
 impl PackedQuantGemm {
     pub fn new(q: &[i8], scales: &[f32], m: usize, k: usize) -> Self {
         assert_eq!(scales.len(), m, "one dequant scale per row");
-        Self { m, k, panels: pack_panels(q, m, k), scales }
+        Self {
+            m,
+            k,
+            panels: pack_panels(q, m, k),
+            scales: scales.to_vec(),
+        }
     }
 
     pub fn m(&self) -> usize {
@@ -361,23 +451,25 @@ impl PackedQuantGemm {
 
     /// Same contract as [`PackedGemm::matmul`], with the row scale
     /// applied before bias/activation: `C = act(dot * scale + bias)`.
+    /// Splits across the worker pool by row panel exactly like the f32
+    /// path (disjoint rows, bit-identical at any thread count).
     pub fn matmul(&self, c: &mut [f32], x: &[f32], n: usize, acc: bool, epi: &Epilogue) {
-        assert_eq!(x.len(), n * self.k, "X must be [n={n}, k={}]", self.k);
-        assert_eq!(c.len(), self.m * n, "C must be [m={}, n={n}]", self.m);
+        let (m, k) = (self.m, self.k);
+        assert_eq!(x.len(), n * k, "X must be [n={n}, k={k}]");
+        assert_eq!(c.len(), m * n, "C must be [m={m}, n={n}]");
         if n == 0 {
             return;
         }
-        kernels::portable::matmul_quant(
-            &self.panels,
-            &self.scales,
-            c,
-            x,
-            self.m,
-            self.k,
-            n,
-            acc,
-            epi,
-        );
+        let (panels, scales) = (self.panels.as_slice(), self.scales.as_slice());
+        let fanned = par_split_rows(m, k, n, c, |csub, row0, pi| {
+            kernels::portable::matmul_quant(
+                panels, scales, csub, row0, x, m, k, n, acc, epi, pi, pi + 1,
+            );
+        });
+        if !fanned {
+            let np = m.div_ceil(PACK_MR);
+            kernels::portable::matmul_quant(panels, scales, c, 0, x, m, k, n, acc, epi, 0, np);
+        }
     }
 }
 

@@ -1,0 +1,413 @@
+//! Persistent worker pool for multicore execution (std-only, no rayon).
+//!
+//! The paper amortizes one DRAM read of the weights over `T` time steps;
+//! on a multicore CPU the same weights can additionally be shared across
+//! cores through the LLC, multiplying the arithmetic done per byte
+//! streamed (the E-PUR weight-locality argument in software).  This pool
+//! is how every hot path gets at those cores:
+//!
+//! * [`ThreadPool::run`] executes `count` index-addressed tasks across
+//!   the workers plus the calling thread.  Idle workers *steal* the next
+//!   task index from a shared atomic counter, so panels of very uneven
+//!   cost (e.g. the zero-padded tail panel) cannot straggle a static
+//!   partition.
+//! * Determinism: the pool assigns *which thread* runs a task, never
+//!   *what* the task computes — callers split work into disjoint output
+//!   regions (row panels, pipeline stages), so results are bit-identical
+//!   to serial execution regardless of scheduling.  This is asserted by
+//!   `rust/tests/parallel_parity.rs`.
+//! * Re-entrancy: `run` called from inside a worker task executes inline
+//!   and serially ([`in_worker`]).  Wavefront layer tasks therefore run
+//!   their GEMMs single-threaded instead of deadlocking the pool.
+//! * Panics in tasks are caught, the remaining tasks still drain (so no
+//!   caller or sibling deadlocks), and the panic is re-raised on the
+//!   calling thread after the join.  The pool stays usable afterwards.
+//!
+//! One process-wide pool ([`current`]) is shared by all engines.  Its
+//! size resolves as: explicit [`set_threads`] (the CLI's `--threads`) >
+//! `MTSRNN_THREADS` env > `std::thread::available_parallelism()`.
+//! `threads == 1` means no workers exist and every `run` is an inline
+//! serial loop — the exact legacy single-threaded path.
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Below this many multiply-adds a GEMM is not worth dispatching to the
+/// pool: wake + join costs a few microseconds, which only pays for
+/// itself once the kernel runs at least that long.
+pub const PAR_MIN_WORK: usize = 1 << 14;
+
+/// A raw pointer that may cross threads.  Used by callers of
+/// [`ThreadPool::run`] to hand each task its *disjoint* slice of a
+/// shared output buffer; the pool's join provides the happens-before
+/// edge back to the caller.
+#[derive(Debug, Clone, Copy)]
+pub struct SendPtr<T>(pub *mut T);
+
+// SAFETY: SendPtr is a plain address; the *callers* guarantee that
+// concurrent tasks only touch disjoint regions behind it.
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    pub fn get(self) -> *mut T {
+        self.0
+    }
+}
+
+/// One posted parallel job: an erased task closure plus the claim /
+/// completion counters the workers share.
+struct Job {
+    /// Borrowed from the `run` caller; valid until `remaining == 0`,
+    /// which `run` awaits before returning.
+    func: *const (dyn Fn(usize) + Sync),
+    /// Next unclaimed task index (the steal counter).
+    next: AtomicUsize,
+    /// Tasks not yet finished (claimed or not).
+    remaining: AtomicUsize,
+    count: usize,
+    /// First task panic's payload, re-raised on the calling thread
+    /// after the join so the original message survives multicore runs.
+    panic_payload: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+    gen: u64,
+}
+
+// SAFETY: `func` is only dereferenced for claimed task indices, all of
+// which complete before `run` returns and drops the closure.
+unsafe impl Send for Job {}
+unsafe impl Sync for Job {}
+
+struct Slot {
+    job: Option<Arc<Job>>,
+    gen: u64,
+    shutdown: bool,
+}
+
+struct Shared {
+    slot: Mutex<Slot>,
+    /// Workers wait here for a new job generation.
+    work_cv: Condvar,
+    /// `run` waits here for `remaining == 0`.
+    done_cv: Condvar,
+}
+
+/// Persistent worker pool; `threads - 1` parked worker threads (the
+/// calling thread is always the `threads`-th participant).
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    threads: usize,
+}
+
+thread_local! {
+    static IN_WORKER: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+/// True while the current thread is executing a pool task.  Parallel
+/// helpers consult this to run inline instead of re-entering the pool.
+pub fn in_worker() -> bool {
+    IN_WORKER.with(|c| c.get())
+}
+
+impl ThreadPool {
+    /// Pool with `threads` total participants (min 1).  `threads - 1`
+    /// worker threads are spawned; they park on a condvar between jobs.
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            slot: Mutex::new(Slot {
+                job: None,
+                gen: 0,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let workers = (1..threads)
+            .map(|i| {
+                let sh = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("mtsrnn-w{i}"))
+                    .spawn(move || worker_loop(&sh))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        Self {
+            shared,
+            workers,
+            threads,
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f(0..count)` across the workers + the calling thread and
+    /// wait for all of them.  Tasks are claimed one index at a time from
+    /// a shared counter (panel-level stealing).  Serial inline when the
+    /// pool has one thread, there is one task, or the caller is itself a
+    /// pool task (re-entrancy).  Panics in any task are re-raised here
+    /// after every task has drained.
+    pub fn run<F: Fn(usize) + Sync>(&self, count: usize, f: F) {
+        self.run_dyn(count, &f)
+    }
+
+    fn run_dyn(&self, count: usize, f: &(dyn Fn(usize) + Sync)) {
+        if count == 0 {
+            return;
+        }
+        if self.threads <= 1 || count == 1 || in_worker() {
+            for ti in 0..count {
+                f(ti);
+            }
+            return;
+        }
+        // Erase the closure's borrow lifetime for storage in the job
+        // header (the field's trait-object pointer defaults to
+        // `'static`).  SAFETY: `run_dyn` does not return until
+        // `remaining == 0`, and workers only dereference `func` for
+        // claimed task indices, so the borrow outlives every use.
+        let func: &'static (dyn Fn(usize) + Sync) = unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(f)
+        };
+        let job = {
+            let mut slot = self.shared.slot.lock().unwrap();
+            slot.gen += 1;
+            let job = Arc::new(Job {
+                func,
+                next: AtomicUsize::new(0),
+                remaining: AtomicUsize::new(count),
+                count,
+                panic_payload: Mutex::new(None),
+                gen: slot.gen,
+            });
+            slot.job = Some(job.clone());
+            self.shared.work_cv.notify_all();
+            job
+        };
+        // The caller participates like any worker.
+        run_tasks(&self.shared, &job);
+        let mut slot = self.shared.slot.lock().unwrap();
+        while job.remaining.load(Ordering::Acquire) != 0 {
+            slot = self.shared.done_cv.wait(slot).unwrap();
+        }
+        // Clear the slot so late-waking workers don't rescan a dead job.
+        if slot.job.as_ref().is_some_and(|j| Arc::ptr_eq(j, &job)) {
+            slot.job = None;
+        }
+        drop(slot);
+        if let Some(payload) = job.panic_payload.lock().unwrap().take() {
+            resume_unwind(payload);
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut slot = self.shared.slot.lock().unwrap();
+            slot.shutdown = true;
+            self.shared.work_cv.notify_all();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    let mut seen_gen = 0u64;
+    loop {
+        let job = {
+            let mut slot = shared.slot.lock().unwrap();
+            loop {
+                if slot.shutdown {
+                    return;
+                }
+                if let Some(j) = &slot.job {
+                    if j.gen != seen_gen {
+                        break j.clone();
+                    }
+                }
+                slot = shared.work_cv.wait(slot).unwrap();
+            }
+        };
+        seen_gen = job.gen;
+        run_tasks(shared, &job);
+    }
+}
+
+/// Claim and execute tasks until the job's counter is exhausted.
+fn run_tasks(shared: &Shared, job: &Job) {
+    IN_WORKER.with(|c| c.set(true));
+    loop {
+        let ti = job.next.fetch_add(1, Ordering::Relaxed);
+        if ti >= job.count {
+            break;
+        }
+        // SAFETY: `remaining > 0` (this claim is unfinished), so `run`
+        // has not returned and the closure is still alive.
+        let f = unsafe { &*job.func };
+        if let Err(payload) = catch_unwind(AssertUnwindSafe(|| f(ti))) {
+            // Keep the FIRST payload (later ones are usually cascade).
+            let mut slot = job.panic_payload.lock().unwrap();
+            if slot.is_none() {
+                *slot = Some(payload);
+            }
+        }
+        // AcqRel: publishes this task's writes to whoever observes 0.
+        if job.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+            let _guard = shared.slot.lock().unwrap();
+            shared.done_cv.notify_all();
+        }
+    }
+    IN_WORKER.with(|c| c.set(false));
+}
+
+// ---------------------------------------------------------------------
+// Process-wide pool
+// ---------------------------------------------------------------------
+
+static GLOBAL: Mutex<Option<Arc<ThreadPool>>> = Mutex::new(None);
+
+/// Lock-free snapshot of the process pool's size (0 = not yet built).
+/// Hot paths consult this before deciding to parallelize, so a
+/// single-threaded process never touches the `GLOBAL` mutex per GEMM.
+static THREADS_HINT: AtomicUsize = AtomicUsize::new(0);
+
+fn default_threads() -> usize {
+    match std::env::var("MTSRNN_THREADS") {
+        Ok(v) => match v.trim().parse::<usize>() {
+            Ok(n) if n >= 1 => n,
+            _ => {
+                eprintln!("warning: invalid MTSRNN_THREADS={v:?}, using available cores");
+                available_cores()
+            }
+        },
+        Err(_) => available_cores(),
+    }
+}
+
+fn available_cores() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// The process-wide pool (created on first use; see module docs for how
+/// its size resolves).  Callers hold the returned `Arc` only for the
+/// duration of one operation, so [`set_threads`] can swap the pool.
+pub fn current() -> Arc<ThreadPool> {
+    let mut g = GLOBAL.lock().unwrap();
+    let pool = g
+        .get_or_insert_with(|| Arc::new(ThreadPool::new(default_threads())))
+        .clone();
+    THREADS_HINT.store(pool.threads(), Ordering::Relaxed);
+    pool
+}
+
+/// Replace the process-wide pool with one of `n` threads (the CLI's
+/// `--threads`, and the benches' thread-scaling sweeps).  The old pool's
+/// workers shut down once its last in-flight operation finishes.
+pub fn set_threads(n: usize) {
+    let n = n.max(1);
+    let mut g = GLOBAL.lock().unwrap();
+    if !g.as_ref().is_some_and(|p| p.threads() == n) {
+        *g = Some(Arc::new(ThreadPool::new(n)));
+    }
+    THREADS_HINT.store(n, Ordering::Relaxed);
+}
+
+/// Thread count of the process-wide pool.
+pub fn threads() -> usize {
+    current().threads()
+}
+
+/// Cheap (lock-free) thread-count check for hot paths; builds the pool
+/// on first call, then never locks again until `set_threads`.
+pub fn threads_hint() -> usize {
+    match THREADS_HINT.load(Ordering::Relaxed) {
+        0 => current().threads(),
+        n => n,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_tasks_run_exactly_once() {
+        let pool = ThreadPool::new(4);
+        let hits: Vec<AtomicUsize> = (0..1000).map(|_| AtomicUsize::new(0)).collect();
+        pool.run(hits.len(), |ti| {
+            hits[ti].fetch_add(1, Ordering::Relaxed);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "task {i}");
+        }
+    }
+
+    #[test]
+    fn single_thread_pool_runs_inline() {
+        let pool = ThreadPool::new(1);
+        assert_eq!(pool.threads(), 1);
+        let sum = AtomicUsize::new(0);
+        pool.run(10, |ti| {
+            sum.fetch_add(ti, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 45);
+    }
+
+    #[test]
+    fn nested_run_executes_serially_inline() {
+        let pool = ThreadPool::new(4);
+        let count = AtomicUsize::new(0);
+        pool.run(3, |_| {
+            assert!(in_worker());
+            // Re-entrant run must not deadlock — it runs inline.
+            pool.run(5, |_| {
+                count.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert!(!in_worker());
+        assert_eq!(count.load(Ordering::Relaxed), 15);
+    }
+
+    #[test]
+    fn panic_propagates_and_pool_survives() {
+        let pool = ThreadPool::new(4);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(16, |ti| {
+                if ti == 7 {
+                    panic!("injected");
+                }
+            });
+        }));
+        assert!(r.is_err(), "task panic must reach the caller");
+        // The pool is still functional afterwards.
+        let ok = AtomicUsize::new(0);
+        pool.run(8, |_| {
+            ok.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(ok.load(Ordering::Relaxed), 8);
+    }
+
+    #[test]
+    fn drop_shuts_down_workers() {
+        let pool = ThreadPool::new(4);
+        pool.run(4, |_| {});
+        drop(pool); // must not hang
+    }
+
+    #[test]
+    fn global_pool_resizes() {
+        set_threads(2);
+        assert_eq!(threads(), 2);
+        set_threads(1);
+        assert_eq!(threads(), 1);
+    }
+}

@@ -12,7 +12,7 @@ use mtsrnn::bench::tables::{
 };
 use mtsrnn::bench::{ascii_plot, write_report, BenchOpts};
 use mtsrnn::cli::{Args, USAGE};
-use mtsrnn::coordinator::{Coordinator, CoordinatorConfig, NativeBackend, PolicyMode};
+use mtsrnn::coordinator::{BatchMode, Coordinator, CoordinatorConfig, NativeBackend, PolicyMode};
 use mtsrnn::engine::NativeStack;
 use mtsrnn::memsim::{simulate, SimConfig};
 use mtsrnn::models::config::{Arch, ModelConfig, ModelSize, StackSpec, ASR_QRNN, ASR_SRU};
@@ -29,6 +29,17 @@ fn main() {
             std::process::exit(2);
         }
     };
+    // Global: --threads N overrides MTSRNN_THREADS / detected cores for
+    // the process worker pool (1 = exact single-threaded legacy path).
+    if let Some(v) = args.get("threads") {
+        match v.parse::<usize>() {
+            Ok(n) if n >= 1 => mtsrnn::linalg::pool::set_threads(n),
+            _ => {
+                eprintln!("error: --threads must be a positive integer, got {v:?}");
+                std::process::exit(2);
+            }
+        }
+    }
     let code = match args.command.as_str() {
         "tables" => cmd_tables(&args),
         "figures" => cmd_figures(&args),
@@ -142,11 +153,16 @@ fn cmd_simulate(args: &Args) -> Result<(), String> {
         .ok_or_else(|| format!("unknown --size {:?}", args.get_or("size", "small")))?;
     let t = args.get_usize("t", 16)?;
     let samples = args.get_usize("samples", 1024)?;
+    let cores = args.get_usize("cores", 1)?;
+    if cores < 1 {
+        return Err("--cores must be >= 1".into());
+    }
     let mut cfg = SimConfig::paper(cpu, ModelConfig::paper(arch, size), t);
     cfg.samples = samples;
+    cfg.cores = cores;
     let r = simulate(&cfg);
     println!("platform            {}", cpu.name);
-    println!("model               {arch} {size:?} T={t} ({samples} samples)");
+    println!("model               {arch} {size:?} T={t} cores={cores} ({samples} samples)");
     println!("predicted time      {:.3} ms", r.millis());
     println!("  compute cycles    {:.3e}", r.compute_cycles);
     println!("  memory cycles     {:.3e}", r.memory_cycles);
@@ -218,10 +234,17 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     } else {
         PolicyMode::Fixed(args.get_usize("block", 16)?)
     };
+    let batching = match args.get_or("batch", "auto") {
+        "auto" => BatchMode::Auto,
+        "on" => BatchMode::On,
+        "off" => BatchMode::Off,
+        other => return Err(format!("unknown --batch {other:?} (auto|on|off)")),
+    };
     let cfg = CoordinatorConfig {
         policy,
         max_wait: Duration::from_millis(args.get_usize("max-wait-ms", 100)? as u64),
         max_sessions: args.get_usize("max-sessions", 64)?,
+        batching,
     };
     let listener =
         TcpListener::bind(("127.0.0.1", port as u16)).map_err(|e| format!("bind: {e}"))?;
@@ -239,11 +262,13 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
             let max_block = args.get_usize("max-block", 32)?;
             let stack = NativeStack::new(&spec, params, max_block)?;
             println!(
-                "backend=native stack={} params={} weight_bytes/block={} state_bytes/stream={}",
+                "backend=native stack={} params={} weight_bytes/block={} state_bytes/stream={} threads={} batch={:?}",
                 spec.name(),
                 spec.param_count(),
                 stack.weight_bytes_per_block(),
-                spec.state_bytes()
+                spec.state_bytes(),
+                mtsrnn::linalg::pool::threads(),
+                batching
             );
             let backend = NativeBackend::new(stack);
             let coordinator = Coordinator::new(backend, cfg);
@@ -315,6 +340,11 @@ fn cmd_info() -> Result<(), String> {
             Err(e) => return Err(format!("builtin spec {s:?}: {e}")),
         }
     }
+    println!(
+        "\nExecution: {} pool threads (--threads / MTSRNN_THREADS), simd={}",
+        mtsrnn::linalg::pool::threads(),
+        mtsrnn::linalg::detect_simd().name()
+    );
     println!("\nSimulated platforms: intel (i7-3930K), arm (Denver2)");
     let quick = sim_ms(
         mtsrnn::memsim::ARM_DENVER2,

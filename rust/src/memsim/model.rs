@@ -30,6 +30,15 @@ pub struct SimConfig {
     /// Blocks replayed through the cache sim after warmup; the rest are
     /// extrapolated from the measured steady state.
     pub measure_blocks: usize,
+    /// Cores sharing the last-level cache.  Models the engine's M-split
+    /// execution: the gate GEMMs' row panels partition across cores, so
+    /// every weight byte still leaves DRAM exactly once (streamed into
+    /// the shared LLC and consumed by whichever core owns the panel) —
+    /// the memory side of the model is core-count-invariant while the
+    /// GEMM compute term divides by `cores`.  The strictly sequential
+    /// recurrence remainder (transcendentals) stays serial — the model's
+    /// Amdahl fraction.
+    pub cores: usize,
 }
 
 impl SimConfig {
@@ -40,6 +49,7 @@ impl SimConfig {
             t_block,
             samples: crate::models::config::PAPER_SAMPLES,
             measure_blocks: 2,
+            cores: 1,
         }
     }
 }
@@ -162,10 +172,16 @@ pub fn simulate(cfg: &SimConfig) -> SimReport {
 
     // Compute term: GEMM-shaped FLOPs at the block-size-dependent
     // efficiency (ramps from GEMV-like at T=1 to the asymptote; see
-    // CpuSpec::gemm_efficiency_at), plus scalar transcendentals.
+    // CpuSpec::gemm_efficiency_at), plus scalar transcendentals.  The
+    // GEMM part divides across `cores` (disjoint row panels, one shared
+    // weight stream through the LLC); the sequential remainder does not.
+    // Memory cycles are untouched by `cores`: the whole multicore
+    // argument is that extra cores add arithmetic per byte streamed, not
+    // extra bytes.
     let eff = spec.gemm_efficiency_at(t);
+    let cores = cfg.cores.max(1) as f64;
     let compute_cycles_measured =
-        flops / (spec.flops_per_cycle * eff) + transc * spec.transcendental_cycles;
+        flops / (spec.flops_per_cycle * eff * cores) + transc * spec.transcendental_cycles;
 
     let compute_cycles = compute_cycles_measured * scale;
     let memory_cycles = mem_cycles_measured * scale;
@@ -257,6 +273,57 @@ mod tests {
             "{} vs {}",
             t1.energy_per_sample_joules,
             t32.energy_per_sample_joules
+        );
+    }
+
+    #[test]
+    fn cores_share_one_weight_stream() {
+        // The multicore premise: DRAM traffic per sample is invariant in
+        // the core count (weights partition, they are not duplicated).
+        let mut c1 = SimConfig::paper(
+            ARM_DENVER2,
+            ModelConfig::paper(Arch::Sru, ModelSize::Large),
+            32,
+        );
+        c1.samples = 256;
+        let mut c4 = c1;
+        c4.cores = 4;
+        let r1 = simulate(&c1);
+        let r4 = simulate(&c4);
+        assert!(
+            (r1.dram_bytes_per_sample - r4.dram_bytes_per_sample).abs() < 1e-6,
+            "{} vs {}",
+            r1.dram_bytes_per_sample,
+            r4.dram_bytes_per_sample
+        );
+        // More cores never hurt (compute term shrinks, memory unchanged).
+        assert!(r4.seconds <= r1.seconds + 1e-12);
+    }
+
+    #[test]
+    fn cores_divide_gemm_compute_not_memory() {
+        // 4 cores must cut the compute term well past half (the GEMM
+        // FLOPs dominate the serial transcendental remainder at T=32)
+        // while leaving the memory term untouched — cores multiply
+        // arithmetic per byte streamed, they never add or remove bytes.
+        let model = ModelConfig::paper(Arch::Sru, ModelSize::Small);
+        let at = |cores: usize| {
+            let mut c = SimConfig::paper(INTEL_I7_3930K, model, 32);
+            c.samples = 256;
+            c.cores = cores;
+            simulate(&c)
+        };
+        let r1 = at(1);
+        let r4 = at(4);
+        assert!(
+            r4.compute_cycles < r1.compute_cycles / 2.0,
+            "compute term should drop >2x: {:.3e} vs {:.3e}",
+            r1.compute_cycles,
+            r4.compute_cycles
+        );
+        assert!(
+            (r4.memory_cycles - r1.memory_cycles).abs() < 1e-6 * r1.memory_cycles.max(1.0),
+            "memory term must be core-count-invariant"
         );
     }
 

@@ -107,11 +107,71 @@ pub fn bandwidth_sweep(
         .collect()
 }
 
+/// One point of the shared-LLC multicore sweep.
+#[derive(Debug, Clone, Copy)]
+pub struct CorePoint {
+    pub cores: usize,
+    /// Predicted speedup over the 1-core run at the same `T`.
+    pub speedup: f64,
+    /// DRAM bytes per sample — invariant in `cores` by construction
+    /// (cores partition the weight stream through the shared LLC; they
+    /// never duplicate it), reported so callers can see that.
+    pub dram_bytes_per_sample: f64,
+}
+
+/// Sweep the shared-LLC core count at fixed block size `t`: how much
+/// arithmetic the platform can stack on top of one weight stream.  This
+/// is the memsim twin of the engine's M-split + wavefront execution
+/// (`mtsrnn simulate --cores`, and the threads sweep in
+/// `benches/microbench.rs` measures the real thing).
+pub fn core_sweep(
+    base: CpuSpec,
+    model: ModelConfig,
+    t: usize,
+    cores: &[usize],
+    samples: usize,
+) -> Vec<CorePoint> {
+    let mut one = SimConfig::paper(base, model, t);
+    one.samples = samples;
+    let r_one = simulate(&one);
+    cores
+        .iter()
+        .map(|&c| {
+            let mut cfg = one;
+            cfg.cores = c;
+            let r = simulate(&cfg);
+            CorePoint {
+                cores: c,
+                speedup: r_one.seconds / r.seconds,
+                dram_bytes_per_sample: r.dram_bytes_per_sample,
+            }
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::memsim::cpu::ARM_DENVER2;
     use crate::models::config::{Arch, ModelSize};
+
+    #[test]
+    fn core_sweep_is_monotone_with_constant_traffic() {
+        let model = ModelConfig::paper(Arch::Sru, ModelSize::Small);
+        let pts = core_sweep(ARM_DENVER2, model, 32, &[1, 2, 4, 8], 256);
+        assert_eq!(pts.len(), 4);
+        assert!((pts[0].speedup - 1.0).abs() < 1e-9, "1 core is the baseline");
+        for w in pts.windows(2) {
+            assert!(
+                w[1].speedup >= w[0].speedup - 1e-9,
+                "speedup must not regress with cores"
+            );
+            assert!(
+                (w[1].dram_bytes_per_sample - w[0].dram_bytes_per_sample).abs() < 1e-6,
+                "weight stream must be shared, not duplicated"
+            );
+        }
+    }
 
     #[test]
     fn small_llc_benefits_more() {

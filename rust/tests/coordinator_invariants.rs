@@ -11,7 +11,7 @@
 use std::time::Duration;
 
 use mtsrnn::coordinator::{
-    BlockBackend, Coordinator, CoordinatorConfig, NativeBackend, PolicyMode,
+    BatchMode, BlockBackend, Coordinator, CoordinatorConfig, NativeBackend, PolicyMode,
 };
 use mtsrnn::engine::{NativeStack, StreamState};
 use mtsrnn::models::config::{Arch, StackConfig, StackSpec};
@@ -39,6 +39,7 @@ fn coordinator(policy: PolicyMode, max_wait_ms: u64) -> Coordinator<NativeBacken
             policy,
             max_wait: Duration::from_millis(max_wait_ms),
             max_sessions: 16,
+            batching: BatchMode::Auto,
         },
     )
 }
@@ -175,6 +176,7 @@ fn backend_failure_is_reported_and_recoverable() {
             policy: PolicyMode::Fixed(4),
             max_wait: Duration::from_millis(0),
             max_sessions: 4,
+            batching: BatchMode::Auto,
         },
     );
     let id = c.open().unwrap();

@@ -1,0 +1,285 @@
+//! Multicore execution parity — the subsystem's core guarantee:
+//!
+//! 1. **Bit-exactness across thread counts.**  The pool only partitions
+//!    work (M-split GEMM panels, wavefront layer tasks, fused batch
+//!    segments); it never splits a reduction, so every logit and every
+//!    state float is bit-identical at any `MTSRNN_THREADS`.  Verified
+//!    for all four layer kinds at block sizes T ∈ {1, 4, 16}.
+//! 2. **Batched B·T parity.**  One fused `run_batch` over many streams
+//!    equals running the streams back-to-back through `run_block`.
+//! 3. **Pool robustness.**  Shutdown joins cleanly; a panicking task
+//!    reaches the caller without wedging or poisoning the pool.
+//!
+//! Tests that flip the process-wide pool size hold `POOL_LOCK` so the
+//! comparison genuinely runs the intended path even with the default
+//! multithreaded test harness.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use mtsrnn::engine::{NativeStack, StreamState};
+use mtsrnn::linalg::pool::{self, ThreadPool};
+use mtsrnn::linalg::{Act, Epilogue, PackedGemm, PackedQuantGemm};
+use mtsrnn::models::config::{Arch, LayerSpec, Precision, StackSpec};
+use mtsrnn::models::StackParams;
+use mtsrnn::util::Rng;
+
+static POOL_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock_pool() -> std::sync::MutexGuard<'static, ()> {
+    // A panicking sibling test must not wedge the others.
+    POOL_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// The four served layer kinds, each as a 3-deep 64-wide stack (big
+/// enough that the gate GEMMs cross the pool's work threshold and the
+/// wavefront engages at depth >= 2).
+fn specs() -> Vec<StackSpec> {
+    vec![
+        StackSpec::new(24, 64, 12).with_layers(LayerSpec::f32(Arch::Sru), 3),
+        StackSpec::new(24, 64, 12)
+            .with_layers(LayerSpec::new(Arch::Sru, Precision::Q8).unwrap(), 3),
+        StackSpec::new(24, 64, 12).with_layers(LayerSpec::f32(Arch::Qrnn), 3),
+        StackSpec::new(24, 64, 12).with_layers(LayerSpec::f32(Arch::Lstm), 3),
+    ]
+}
+
+/// Run `frames` frames through a fresh stack in chunks of `t_chunk`,
+/// returning all logits and the final stream state.
+fn run_stream(
+    spec: &StackSpec,
+    t_chunk: usize,
+    x: &[f32],
+    frames: usize,
+) -> (Vec<f32>, StreamState) {
+    let params = StackParams::init(spec, &mut Rng::new(7)).unwrap();
+    let mut stack = NativeStack::new(spec, params, 16).unwrap();
+    let mut state = stack.init_state();
+    let mut logits = vec![0.0; frames * spec.vocab];
+    let mut s = 0;
+    while s < frames {
+        let t = t_chunk.min(frames - s);
+        let (xs, os) = (
+            &x[s * spec.feat..(s + t) * spec.feat],
+            &mut logits[s * spec.vocab..(s + t) * spec.vocab],
+        );
+        stack.run_block(xs, t, &mut state, os).unwrap();
+        s += t;
+    }
+    (logits, state)
+}
+
+fn assert_bits_equal(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            x.to_bits() == y.to_bits(),
+            "{what}: idx {i}: {x} ({:#010x}) vs {y} ({:#010x})",
+            x.to_bits(),
+            y.to_bits()
+        );
+    }
+}
+
+#[test]
+fn all_layer_kinds_bit_exact_across_thread_counts() {
+    let _guard = lock_pool();
+    let frames = 37;
+    for spec in specs() {
+        let mut x = vec![0.0; frames * spec.feat];
+        Rng::new(13).fill_normal(&mut x, 1.0);
+        for t_chunk in [1usize, 4, 16] {
+            pool::set_threads(1);
+            let (want, want_state) = run_stream(&spec, t_chunk, &x, frames);
+            pool::set_threads(4);
+            let (got, got_state) = run_stream(&spec, t_chunk, &x, frames);
+            let what = format!("{} T={t_chunk}", spec.name());
+            assert_bits_equal(&got, &want, &format!("{what} logits"));
+            assert_eq!(got_state.tensors.len(), want_state.tensors.len());
+            for (g, w) in got_state.tensors.iter().zip(&want_state.tensors) {
+                assert_bits_equal(g, w, &format!("{what} state"));
+            }
+        }
+    }
+    pool::set_threads(1);
+}
+
+#[test]
+fn batched_bt_path_matches_per_stream_loop() {
+    // One fused run_batch over B streams == B separate run_block
+    // streams, bit for bit, for every layer kind (including a segment
+    // longer than max_block — the batch path has no block ceiling).
+    let segs = [7usize, 16, 4, 21];
+    for spec in specs() {
+        let params = StackParams::init(&spec, &mut Rng::new(7)).unwrap();
+        let n: usize = segs.iter().sum();
+        let mut x = vec![0.0; n * spec.feat];
+        Rng::new(29).fill_normal(&mut x, 1.0);
+
+        // Fused batch.
+        let mut batch_stack = NativeStack::new(&spec, params.clone(), 16).unwrap();
+        let mut states: Vec<StreamState> =
+            (0..segs.len()).map(|_| batch_stack.init_state()).collect();
+        let mut refs: Vec<&mut StreamState> = states.iter_mut().collect();
+        let mut got = vec![0.0; n * spec.vocab];
+        batch_stack
+            .run_batch(&x, &segs, &mut refs, &mut got)
+            .unwrap();
+
+        // Per-stream loop through run_block (chunked to max_block).
+        let mut solo_stack = NativeStack::new(&spec, params, 16).unwrap();
+        let mut off = 0;
+        for (si, &t) in segs.iter().enumerate() {
+            let xs = &x[off * spec.feat..(off + t) * spec.feat];
+            let mut state = solo_stack.init_state();
+            let mut want = vec![0.0; t * spec.vocab];
+            let mut s = 0;
+            while s < t {
+                let step = 16.min(t - s);
+                solo_stack
+                    .run_block(
+                        &xs[s * spec.feat..(s + step) * spec.feat],
+                        step,
+                        &mut state,
+                        &mut want[s * spec.vocab..(s + step) * spec.vocab],
+                    )
+                    .unwrap();
+                s += step;
+            }
+            let what = format!("{} stream {si}", spec.name());
+            assert_bits_equal(
+                &got[off * spec.vocab..(off + t) * spec.vocab],
+                &want,
+                &format!("{what} logits"),
+            );
+            for (g, w) in states[si].tensors.iter().zip(&state.tensors) {
+                assert_bits_equal(g, w, &format!("{what} state"));
+            }
+            off += t;
+        }
+    }
+}
+
+#[test]
+fn run_batch_rejects_bad_shapes() {
+    let spec = StackSpec::new(8, 16, 4).with_layers(LayerSpec::f32(Arch::Sru), 2);
+    let params = StackParams::init(&spec, &mut Rng::new(1)).unwrap();
+    let mut stack = NativeStack::new(&spec, params, 8).unwrap();
+    let mut st1 = stack.init_state();
+    let mut st2 = stack.init_state();
+    let x = vec![0.0; 8 * spec.feat];
+    let mut logits = vec![0.0; 8 * spec.vocab];
+
+    // Empty batch, empty segment, seg/state mismatch, wrong x len,
+    // wrong logits len, wrong state shape — all errors, no panic.
+    let mut refs: Vec<&mut StreamState> = vec![];
+    assert!(stack.run_batch(&[], &[], &mut refs, &mut []).is_err());
+    let mut refs: Vec<&mut StreamState> = vec![&mut st1];
+    assert!(stack.run_batch(&x, &[0], &mut refs, &mut logits).is_err());
+    let mut refs: Vec<&mut StreamState> = vec![&mut st1];
+    assert!(stack.run_batch(&x, &[4, 4], &mut refs, &mut logits).is_err());
+    let mut refs: Vec<&mut StreamState> = vec![&mut st1, &mut st2];
+    assert!(stack
+        .run_batch(&x[1..], &[4, 4], &mut refs, &mut logits)
+        .is_err());
+    let mut refs: Vec<&mut StreamState> = vec![&mut st1, &mut st2];
+    assert!(stack
+        .run_batch(&x, &[4, 4], &mut refs, &mut logits[1..])
+        .is_err());
+    let mut bad = StreamState::from_lens(&[3]);
+    let mut refs: Vec<&mut StreamState> = vec![&mut st1, &mut bad];
+    assert!(stack.run_batch(&x, &[4, 4], &mut refs, &mut logits).is_err());
+    // Still serves after all the rejections.
+    let mut refs: Vec<&mut StreamState> = vec![&mut st1, &mut st2];
+    stack.run_batch(&x, &[4, 4], &mut refs, &mut logits).unwrap();
+}
+
+#[test]
+fn packed_gemm_parallel_matches_serial_bitwise() {
+    let _guard = lock_pool();
+    let (m, k, n) = (256usize, 128usize, 16usize);
+    let mut rng = Rng::new(3);
+    let mut a = vec![0.0; m * k];
+    let mut x = vec![0.0; n * k];
+    rng.fill_normal(&mut a, 0.3);
+    rng.fill_normal(&mut x, 1.0);
+    let bias: Vec<f32> = (0..m).map(|r| (r % 7) as f32 * 0.05).collect();
+    let acts = [Act::Ident, Act::Sigmoid];
+    let pg = PackedGemm::new(&a, m, k);
+
+    pool::set_threads(1);
+    let mut want = vec![0.0; m * n];
+    pg.matmul(&mut want, &x, n, false, &Epilogue::fused(&bias, &acts));
+    pool::set_threads(4);
+    let mut got = vec![0.0; m * n];
+    pg.matmul(&mut got, &x, n, false, &Epilogue::fused(&bias, &acts));
+    assert_bits_equal(&got, &want, "f32 gemm");
+
+    // Int8 path.
+    let q: Vec<i8> = (0..m * k).map(|i| ((i * 37) % 255) as i8).collect();
+    let scales: Vec<f32> = (0..m).map(|r| 0.01 + (r % 5) as f32 * 0.002).collect();
+    let pq = PackedQuantGemm::new(&q, &scales, m, k);
+    pool::set_threads(1);
+    let mut wantq = vec![0.0; m * n];
+    pq.matmul(&mut wantq, &x, n, false, &Epilogue::fused(&bias, &acts));
+    pool::set_threads(4);
+    let mut gotq = vec![0.0; m * n];
+    pq.matmul(&mut gotq, &x, n, false, &Epilogue::fused(&bias, &acts));
+    assert_bits_equal(&gotq, &wantq, "int8 gemm");
+    pool::set_threads(1);
+}
+
+// ---------------------------------------------------------------------
+// Pool robustness
+// ---------------------------------------------------------------------
+
+#[test]
+fn pool_runs_every_task_once_and_shuts_down() {
+    let pool = ThreadPool::new(4);
+    let hits: Vec<AtomicUsize> = (0..513).map(|_| AtomicUsize::new(0)).collect();
+    pool.run(hits.len(), |ti| {
+        hits[ti].fetch_add(1, Ordering::Relaxed);
+    });
+    for (i, h) in hits.iter().enumerate() {
+        assert_eq!(h.load(Ordering::Relaxed), 1, "task {i}");
+    }
+    drop(pool); // joins workers; must not hang the test
+}
+
+#[test]
+fn pool_panic_reaches_caller_and_pool_survives() {
+    let pool = ThreadPool::new(4);
+    let before = AtomicUsize::new(0);
+    let r = catch_unwind(AssertUnwindSafe(|| {
+        pool.run(32, |ti| {
+            before.fetch_add(1, Ordering::Relaxed);
+            if ti == 13 {
+                panic!("injected task failure");
+            }
+        });
+    }));
+    assert!(r.is_err(), "the task panic must propagate to the caller");
+    // Every task was still drained (claimed exactly once) and the pool
+    // keeps working afterwards.
+    assert_eq!(before.load(Ordering::Relaxed), 32);
+    let after = AtomicUsize::new(0);
+    pool.run(8, |_| {
+        after.fetch_add(1, Ordering::Relaxed);
+    });
+    assert_eq!(after.load(Ordering::Relaxed), 8);
+}
+
+#[test]
+fn pool_nested_run_is_serial_not_deadlocked() {
+    let pool = ThreadPool::new(3);
+    let count = AtomicUsize::new(0);
+    pool.run(6, |_| {
+        assert!(pool::in_worker());
+        pool.run(4, |_| {
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+    });
+    assert_eq!(count.load(Ordering::Relaxed), 24);
+    assert!(!pool::in_worker());
+}

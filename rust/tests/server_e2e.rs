@@ -8,7 +8,7 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
-use mtsrnn::coordinator::{Coordinator, CoordinatorConfig, NativeBackend, PolicyMode};
+use mtsrnn::coordinator::{BatchMode, Coordinator, CoordinatorConfig, NativeBackend, PolicyMode};
 use mtsrnn::engine::NativeStack;
 use mtsrnn::models::config::{Arch, StackConfig, StackSpec};
 use mtsrnn::models::StackParams;
@@ -33,6 +33,7 @@ fn start_server() -> (u16, Arc<AtomicBool>, std::thread::JoinHandle<()>) {
             policy: PolicyMode::Fixed(4),
             max_wait: Duration::from_millis(10),
             max_sessions: 8,
+            batching: BatchMode::Auto,
         },
     );
     let handle = server::spawn_inference(coordinator, Duration::from_millis(2));

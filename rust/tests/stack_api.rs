@@ -14,7 +14,7 @@
 
 use std::time::Duration;
 
-use mtsrnn::coordinator::{Coordinator, CoordinatorConfig, NativeBackend, PolicyMode};
+use mtsrnn::coordinator::{BatchMode, Coordinator, CoordinatorConfig, NativeBackend, PolicyMode};
 use mtsrnn::engine::{
     Engine, LstmEngine, LstmMode, NativeStack, QrnnEngine, QuantSruEngine, RecurrentLayer,
     SruEngine,
@@ -323,6 +323,7 @@ fn serve_through_coordinator(spec: &StackSpec, x: &[f32], frames: usize) -> Vec<
             policy: PolicyMode::Fixed(8),
             max_wait: Duration::ZERO,
             max_sessions: 4,
+            batching: BatchMode::Auto,
         },
     );
     let id = c.open().unwrap();
