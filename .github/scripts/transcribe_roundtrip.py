@@ -1,0 +1,138 @@
+#!/usr/bin/env python3
+"""Serve-level golden conformance: `mtsrnn serve --batch auto` must
+transcribe a golden fixture's frame stream bit-identically to the python
+reference — the acceptance check of the streaming-ASR scenario, run over
+real TCP against the release binary.
+
+Reads a stack fixture from rust/tests/golden/ (spec, seed, block, input
+frames, expected transcript), starts the server with exactly those
+settings, speaks OPEN / DECODE / FEED / TRANSCRIBE final / POLL, and
+asserts:
+
+* the transcript token sequence equals the fixture's, exactly;
+* every drained logit is within the fixture's tolerance.
+
+Usage: transcribe_roundtrip.py <fixture.json> <port> [threads] [binary]
+"""
+
+import json
+import socket
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+
+def connect(port: int, deadline_s: float = 60.0) -> socket.socket:
+    deadline = time.time() + deadline_s
+    while True:
+        try:
+            return socket.create_connection(("127.0.0.1", port), timeout=10)
+        except OSError:
+            if time.time() > deadline:
+                raise
+            time.sleep(0.2)
+
+
+def main() -> None:
+    fixture = Path(sys.argv[1])
+    port = int(sys.argv[2])
+    threads = sys.argv[3] if len(sys.argv) > 3 else "1"
+    binary = sys.argv[4] if len(sys.argv) > 4 else "./target/release/mtsrnn"
+    fx = json.loads(fixture.read_text())
+    feat, vocab, frames, block = fx["feat"], fx["vocab"], fx["frames"], fx["block"]
+
+    proc = subprocess.Popen(
+        [
+            binary,
+            "serve",
+            "--stack",
+            fx["spec"],
+            "--seed",
+            str(fx["seed"]),
+            "--port",
+            str(port),
+            "--block",
+            str(block),
+            # Cap dispatch size at the chunk too: a backlog must drain
+            # as [block]*k dispatches, never one bigger fused block.
+            "--max-block",
+            str(block),
+            # Deadline far away: dispatches are exactly [block] * k, so a
+            # bidir stack's chunking matches the fixture's reference.
+            "--max-wait-ms",
+            "100000",
+            "--batch",
+            "auto",
+            "--threads",
+            threads,
+        ],
+        stdout=subprocess.PIPE,
+        stderr=subprocess.STDOUT,
+        text=True,
+    )
+    try:
+        sock = connect(port)
+        sock.settimeout(30)
+        f = sock.makefile("rw", newline="\n")
+
+        def call(line: str) -> str:
+            f.write(line + "\n")
+            f.flush()
+            resp = f.readline().strip()
+            assert resp.startswith("OK"), f"{line.split()[0]} -> {resp!r}"
+            return resp
+
+        sid = call("OPEN").split()[1]
+        call(f"DECODE {sid} greedy")
+        # Feed whole blocks so each dispatch is one fixture chunk.
+        x = fx["x"]
+        for s in range(0, frames, block):
+            vals = x[s * feat : (s + block) * feat]
+            call(f"FEED {sid} " + " ".join(repr(v) for v in vals))
+
+        resp = call(f"TRANSCRIBE {sid} final").split()
+        n = int(resp[1])
+        toks = [int(t) for t in resp[2:]]
+        assert len(toks) == n
+        assert toks == fx["tokens"], (
+            f"transcript mismatch for {fx['spec']} (threads={threads}):\n"
+            f"  served : {toks}\n  python : {fx['tokens']}"
+        )
+
+        got = []
+        deadline = time.time() + 30
+        while len(got) < frames * vocab and time.time() < deadline:
+            parts = call(f"POLL {sid} 1000").split()
+            got.extend(float(v) for v in parts[2:])
+            if int(parts[1]) == 0:
+                time.sleep(0.05)
+        assert len(got) == frames * vocab, f"drained {len(got)} logit values"
+        tol = fx["tolerance"]
+        worst = max(abs(g - w) for g, w in zip(got, fx["logits"]))
+        assert worst <= tol, f"logit drift {worst} > {tol}"
+
+        call(f"CLOSE {sid}")
+        f.write("QUIT\n")
+        f.flush()
+        print(
+            f"transcribe OK: {fx['spec']} threads={threads} — "
+            f"{n} tokens bit-identical to python, max logit diff {worst:.2e}"
+        )
+    except BaseException:
+        proc.terminate()
+        try:
+            out, _ = proc.communicate(timeout=5)
+            print(f"--- server output ---\n{out}", file=sys.stderr)
+        except subprocess.TimeoutExpired:
+            proc.kill()
+        raise
+    proc.terminate()
+    try:
+        proc.communicate(timeout=5)
+    except subprocess.TimeoutExpired:
+        proc.kill()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,109 @@
+"""Reference CTC decoders mirroring ``rust/src/decode/`` at token level.
+
+Same conventions: blank = class 0, per-frame log-softmax posteriors,
+argmax ties toward the lowest index, beam ordering (score desc, prefix
+asc).  Scores are float (f64 here vs f32 in Rust), so fixtures compare
+tokens exactly and scores within tolerance.
+
+numpy-only (no JAX): runs in the CI fixture-drift job and offline.
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+BLANK = 0
+
+
+def log_softmax(frame: np.ndarray) -> np.ndarray:
+    z = frame.astype(np.float64)
+    z = z - z.max()
+    return z - math.log(np.exp(z).sum())
+
+
+def greedy(logits: np.ndarray) -> tuple[list[int], float]:
+    """logits: [T, V] -> (tokens, best-path log-prob)."""
+    tokens: list[int] = []
+    prev = BLANK
+    score = 0.0
+    for frame in logits:
+        lp = log_softmax(frame)
+        k = int(np.argmax(lp))  # ties -> lowest index, like the Rust loop
+        score += float(lp[k])
+        if k != BLANK and k != prev:
+            tokens.append(k)
+        prev = k
+    return tokens, score
+
+
+def _log_add(a: float, b: float) -> float:
+    if a == -math.inf:
+        return b
+    if b == -math.inf:
+        return a
+    hi, lo = (a, b) if a >= b else (b, a)
+    return hi + math.log1p(math.exp(lo - hi))
+
+
+def beam(logits: np.ndarray, width: int) -> tuple[list[int], float]:
+    """Prefix beam search, mirroring ``decode::CtcBeam``: prefixes carry
+    (blank-ended, symbol-ended) log-mass; merge by prefix; prune to the
+    top ``width`` by total score with prefix-ascending tie-break."""
+    vocab = logits.shape[1]
+    beam_set: list[tuple[tuple[int, ...], float, float]] = [((), 0.0, -math.inf)]
+    for frame in logits:
+        lp = log_softmax(frame)
+        nxt: dict[tuple[int, ...], list[float]] = {}
+
+        def entry(prefix: tuple[int, ...]) -> list[float]:
+            return nxt.setdefault(prefix, [-math.inf, -math.inf])
+
+        for prefix, p_b, p_nb in beam_set:
+            total = _log_add(p_b, p_nb)
+            e = entry(prefix)
+            e[0] = _log_add(e[0], total + float(lp[BLANK]))
+            if prefix:
+                e[1] = _log_add(e[1], p_nb + float(lp[prefix[-1]]))
+            for k in range(1, vocab):
+                add = p_b + float(lp[k]) if prefix and prefix[-1] == k else total + float(lp[k])
+                if add == -math.inf:
+                    continue
+                ek = entry(prefix + (k,))
+                ek[1] = _log_add(ek[1], add)
+        cands = sorted(
+            ((prefix, pb, pnb) for prefix, (pb, pnb) in nxt.items()),
+            key=lambda c: (-_log_add(c[1], c[2]), c[0]),
+        )
+        beam_set = cands[:width]
+    prefix, p_b, p_nb = beam_set[0]
+    return list(prefix), _log_add(p_b, p_nb)
+
+
+def _self_check() -> None:
+    v = 4
+
+    def frames(labels):
+        out = np.zeros((len(labels), v), dtype=np.float32)
+        for s, k in enumerate(labels):
+            out[s, k] = 8.0
+        return out
+
+    toks, score = greedy(frames([1, 1, 0, 1, 2, 2, 0, 0, 3]))
+    assert toks == [1, 1, 2, 3], toks
+    assert score < 0.0
+    btoks, _ = beam(frames([1, 1, 0, 1, 2, 2, 0, 0, 3]), 4)
+    assert btoks == [1, 1, 2, 3], btoks
+    # The prefix-merge case pinned in the Rust beam tests: two frames of
+    # p(a)=.6/p(b)=.4 (no blank mass) -> prefix "a" (mass .36) beats the
+    # best path "ab" (.24).
+    f = np.log(np.array([[1e-13, 0.6, 0.4, 1e-13]] * 2, dtype=np.float64))
+    btoks, bscore = beam(f, 8)
+    assert btoks == [1], btoks
+    assert abs(math.exp(bscore) - 0.36) < 1e-3
+
+
+if __name__ == "__main__":
+    _self_check()
+    print("ctc_ref self-check OK")

@@ -1,0 +1,234 @@
+#!/usr/bin/env python3
+"""Golden-vector fixture generator for the cross-language conformance
+suite (``rust/tests/decode_golden.rs``).
+
+Emits JSON fixtures into ``rust/tests/golden/``:
+
+* ``decode_greedy.json`` / ``decode_beam.json`` — synthetic peaked CTC
+  posterior streams (logits embedded) with the reference transcripts and
+  scores from ``ctc_ref``.  Token sequences must match the Rust decoders
+  exactly; scores within tolerance (f32 vs f64 arithmetic).
+* ``stack_sru_greedy.json`` / ``stack_bidir_greedy.json`` — end-to-end:
+  a seeded stack (weights re-derived bit-exactly in Rust via the
+  ``rng_ref`` mirror; probes embedded to catch mirror drift), embedded
+  input frames, reference logits (tolerance compare) and the greedy
+  transcript (exact compare).  The generator enforces a per-frame top-2
+  logit margin of 25x the comparison tolerance; since the Rust test
+  first asserts every logit within that tolerance, a passing logit
+  check plus the enforced margin makes every greedy argmax flip-proof:
+  transcripts are bit-identical by construction, which is what the
+  serve-level conformance test asserts.
+
+Determinism: output is byte-stable for a given source tree, so CI
+regenerates and fails on drift (``--check``).
+
+Usage:
+  python3 python/compile/make_fixtures.py [--out rust/tests/golden] [--check]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+from pathlib import Path
+
+import numpy as np
+
+try:
+    from compile import ctc_ref, ref_stack, rng_ref
+except ImportError:  # run as a plain script from python/compile/
+    import ctc_ref
+    import ref_stack
+    import rng_ref
+
+F32 = np.float32
+
+# Comparison tolerance for float payloads (logits, scores) on the Rust
+# side; transcripts must match exactly.
+TOLERANCE = 2e-4
+# Minimum per-frame top-2 logit gap in the stack fixtures: 25x the
+# tolerance.  The Rust test asserts logits within TOLERANCE first, and
+# a margin > 2x TOLERANCE already makes the argmax flip-proof, so this
+# gives >10x headroom on top while staying findable by the seed scan
+# (the min of 24 random gaps is small on a random-weight head).
+MIN_MARGIN = 25 * TOLERANCE
+
+
+def f32_list(a: np.ndarray) -> list[float]:
+    """Exact f32 values as JSON numbers (f32 -> f64 is lossless; Rust
+    parses f64 and casts back)."""
+    return [float(F32(v)) for v in np.asarray(a, dtype=F32).reshape(-1)]
+
+
+def stable_score(x: float) -> float:
+    """Scores come out of f64 transcendentals (log/exp), whose last ulp
+    can differ across libm builds — full-precision repr would make the
+    byte-exact --check flaky across environments.  Rust compares scores
+    at 1e-2 tolerance, so 6 decimals is far more precision than needed
+    and byte-stable everywhere."""
+    return round(float(x), 6)
+
+
+def emission(vocab: int, tokens: int, margin: float, seed: int) -> tuple[np.ndarray, list[int]]:
+    """Peaked synthetic CTC emission with a known transcript (python
+    twin of ``workload::CtcEmission`` in spirit; values are embedded so
+    no bit-mirroring is needed)."""
+    rng = rng_ref.Rng(seed)
+    target = [1 + rng.below(vocab - 1) for _ in range(tokens)]
+    labels: list[int] = []
+    for i, tok in enumerate(target):
+        if i > 0 and target[i - 1] == tok and (labels and labels[-1] != 0):
+            labels.append(0)
+        for _ in range(1 + rng.below(3)):
+            labels.append(tok)
+        for _ in range(rng.below(3)):
+            labels.append(0)
+    logits = np.array(
+        [[rng.normal() for _ in range(vocab)] for _ in range(len(labels))], dtype=F32
+    )
+    for s, k in enumerate(labels):
+        logits[s, k] = margin
+    return logits, target
+
+
+def decode_fixtures() -> dict[str, dict]:
+    vocab = 8
+    g_logits, g_target = emission(vocab, 16, 8.0, seed=101)
+    g_tokens, g_score = ctc_ref.greedy(g_logits)
+    assert g_tokens == g_target, "greedy must recover the synthetic target"
+    greedy_fx = {
+        "kind": "decode",
+        "decoder": "greedy",
+        "vocab": vocab,
+        "frames": int(g_logits.shape[0]),
+        "logits": f32_list(g_logits),
+        "tokens": g_tokens,
+        "score": stable_score(g_score),
+        "tolerance": TOLERANCE,
+    }
+
+    b_logits, b_target = emission(vocab, 12, 8.0, seed=202)
+    widths = [1, 2, 4]
+    beams = []
+    for w in widths:
+        toks, score = ctc_ref.beam(b_logits, w)
+        assert toks == b_target, f"beam width {w} must recover the target"
+        beams.append({"width": w, "tokens": toks, "score": stable_score(score)})
+    gb_tokens, _ = ctc_ref.greedy(b_logits)
+    assert beams[0]["tokens"] == gb_tokens, "beam@1 == greedy on peaked input"
+    beam_fx = {
+        "kind": "decode",
+        "decoder": "beam",
+        "vocab": vocab,
+        "frames": int(b_logits.shape[0]),
+        "logits": f32_list(b_logits),
+        "beams": beams,
+        "tolerance": TOLERANCE,
+    }
+    return {"decode_greedy.json": greedy_fx, "decode_beam.json": beam_fx}
+
+
+def top2_margin(logits: np.ndarray) -> float:
+    s = np.sort(logits, axis=1)
+    return float((s[:, -1] - s[:, -2]).min())
+
+
+def stack_fixture(name: str, spec: str, layer_kinds: list[str]) -> dict:
+    feat, hidden, vocab = 8, 16, 6
+    seed = 2018  # the serve default — fixtures drive `serve --seed 2018`
+    block, frames = 8, 24
+    stack = ref_stack.Stack.init(feat, hidden, vocab, layer_kinds, seed)
+
+    # Scan frame seeds until every frame's top-2 logit margin clears
+    # MIN_MARGIN — greedy transcripts are then stable under cross-impl
+    # logit noise, making the serve-level compare bit-exact.
+    for frame_seed in range(1, 200):
+        rng = rng_ref.Rng(seed ^ (0xF00D + frame_seed))
+        x = np.array(
+            [[rng.normal() for _ in range(feat)] for _ in range(frames)], dtype=F32
+        )
+        logits = stack.run_chunked(x, block)
+        if top2_margin(logits) >= MIN_MARGIN:
+            break
+    else:
+        raise RuntimeError(f"{name}: no frame seed cleared margin {MIN_MARGIN}")
+
+    tokens, score = ctc_ref.greedy(logits)
+    return {
+        "kind": "stack",
+        "spec": spec,
+        "seed": seed,
+        "block": block,
+        "feat": feat,
+        "hidden": hidden,
+        "vocab": vocab,
+        "frames": frames,
+        "frame_seed": frame_seed,
+        "margin": stable_score(top2_margin(logits)),
+        "x": f32_list(x),
+        "logits": f32_list(logits),
+        "tokens": tokens,
+        "score": stable_score(score),
+        "tolerance": TOLERANCE,
+        # Bit-exact probes of the mirrored weight init: if these
+        # mismatch in Rust, the RNG mirror drifted (fail loudly before
+        # any float-tolerance comparison muddies the signal).
+        "weight_probe": {
+            "proj_w": f32_list(stack.proj_w.reshape(-1)[:4]),
+            "head_w": f32_list(stack.head_w.reshape(-1)[:4]),
+        },
+    }
+
+
+def build_all() -> dict[str, dict]:
+    out = decode_fixtures()
+    out["stack_sru_greedy.json"] = stack_fixture(
+        "stack_sru_greedy", "sru:f32:16x2,feat=8,vocab=6", ["sru", "sru"]
+    )
+    out["stack_bidir_greedy.json"] = stack_fixture(
+        "stack_bidir_greedy", "sru:f32:bi:16x2,feat=8,vocab=6", ["sru:bi", "sru:bi"]
+    )
+    return out
+
+
+def render(fx: dict) -> str:
+    return json.dumps(fx, indent=1, sort_keys=True) + "\n"
+
+
+def main() -> int:
+    rng_ref.self_check()
+    ap = argparse.ArgumentParser()
+    repo = Path(__file__).resolve().parents[2]
+    ap.add_argument("--out", default=str(repo / "rust" / "tests" / "golden"))
+    ap.add_argument(
+        "--check",
+        action="store_true",
+        help="regenerate and fail on any drift from the checked-in fixtures",
+    )
+    args = ap.parse_args()
+    out_dir = Path(args.out)
+    fixtures = build_all()
+    if args.check:
+        drift = []
+        for fname, fx in fixtures.items():
+            path = out_dir / fname
+            want = render(fx)
+            got = path.read_text() if path.exists() else None
+            if got != want:
+                drift.append(fname)
+        if drift:
+            print(f"FIXTURE DRIFT: {drift} — regenerate with make_fixtures.py")
+            return 1
+        print(f"{len(fixtures)} golden fixtures match the python reference")
+        return 0
+    out_dir.mkdir(parents=True, exist_ok=True)
+    for fname, fx in fixtures.items():
+        (out_dir / fname).write_text(render(fx))
+        print(f"wrote {out_dir / fname}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -250,7 +250,10 @@ def init_stack(key: jax.Array, cfg: StackConfig) -> dict[str, jax.Array]:
 #: contract (mirrored by Rust ``LayerSpec::state_layout`` and the
 #: ``RecurrentLayer`` impls; pinned by tests on both sides).  Every
 #: function that orders or emits per-layer state must read this table,
-#: never hand-roll the order.
+#: never hand-roll the order.  Chunked-bidirectional layers (Rust
+#: ``:bi`` modifier, ``ref_stack.BidirSruLayer``) persist the *forward*
+#: direction's slots only: the backward direction restarts from zero on
+#: every dispatched chunk, so it carries nothing between blocks.
 LAYER_STATE_SLOTS: dict[str, tuple[str, ...]] = {
     "sru": ("c",),
     "qrnn": ("c", "xprev"),

@@ -1,0 +1,160 @@
+"""numpy float32 reference of the Rust ``NativeStack`` — the oracle for
+the golden-vector conformance suite.
+
+Mirrors, to float tolerance (the GEMM accumulation order and the Rust
+fastmath sigmoid/tanh differ at ~1e-6):
+
+* seeded weight init: the exact ``StackParams::init`` draw chain
+  (projection → layers in order → head; bidir layers draw fwd then bwd)
+  through the bit-exact RNG mirror in ``rng_ref`` — weights ARE
+  bit-identical, only the forward arithmetic is approximate;
+* the stack forward: proj ``tanh(W x + b)`` → SRU layers (optionally
+  chunked-bidirectional) → head ``W h + b``;
+* chunked-bidir semantics: one dispatched block = one chunk; forward
+  direction streams across chunks, backward restarts from zero per
+  chunk, outputs merge by elementwise sum (``engine::ChunkedBidir``).
+
+Slot order stays pinned to ``model.py::LAYER_STATE_SLOTS`` / Rust
+``LayerSpec::state_layout``: a bidir layer's persistent state is its
+forward direction's only.
+
+Only the SRU cell is implemented — the fixtures cover the acceptance
+stacks (uni SRU + chunked-bidir SRU); other cells are cross-checked by
+the in-Rust property tests.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+try:
+    from compile import rng_ref
+except ImportError:  # run as a plain script from python/compile/
+    import rng_ref
+
+F32 = np.float32
+
+
+def sigmoid(x: np.ndarray) -> np.ndarray:
+    # Computed in f64 then rounded — within 1e-6 of Rust fast_sigmoid.
+    return (1.0 / (1.0 + np.exp(-x.astype(np.float64)))).astype(F32)
+
+
+@dataclass
+class SruLayer:
+    w: np.ndarray  # [3H, H]
+    b: np.ndarray  # [2H] (forget, reset)
+
+    @staticmethod
+    def init(hidden: int, rng: rng_ref.Rng) -> "SruLayer":
+        b = np.zeros(2 * hidden, dtype=F32)
+        b[:hidden] = 1.0  # forget bias (matches SruParams::init)
+        return SruLayer(w=rng_ref.glorot(3 * hidden, hidden, rng), b=b)
+
+    def forward(self, x: np.ndarray, c: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """x: [T, H] time-major, c: [H] -> (out [T, H], c_last [H])."""
+        h = self.w.shape[0] // 3
+        g = (self.w.astype(np.float64) @ x.T.astype(np.float64)).astype(F32)  # [3H, T]
+        xhat = g[:h]
+        f = sigmoid(g[h : 2 * h] + self.b[:h, None])
+        r = sigmoid(g[2 * h :] + self.b[h:, None])
+        t_steps = x.shape[0]
+        out = np.zeros((t_steps, h), dtype=F32)
+        c = c.astype(F32).copy()
+        for s in range(t_steps):
+            c = F32(1.0) * (f[:, s] * c + (F32(1.0) - f[:, s]) * xhat[:, s])
+            out[s] = r[:, s] * np.tanh(c) + (F32(1.0) - r[:, s]) * x[s]
+        return out, c
+
+
+@dataclass
+class BidirSruLayer:
+    """Chunked-bidirectional SRU: fwd streams, bwd restarts per chunk."""
+
+    fwd: SruLayer
+    bwd: SruLayer
+
+    @staticmethod
+    def init(hidden: int, rng: rng_ref.Rng) -> "BidirSruLayer":
+        # Draw order fwd then bwd — LayerParams::init's contract.
+        f = SruLayer.init(hidden, rng)
+        b = SruLayer.init(hidden, rng)
+        return BidirSruLayer(fwd=f, bwd=b)
+
+    def forward(self, x: np.ndarray, c: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """One call = one chunk.  Persistent state is the fwd c only."""
+        h = x.shape[1]
+        fwd_out, c_last = self.fwd.forward(x, c)
+        bwd_out, _ = self.bwd.forward(x[::-1], np.zeros(h, dtype=F32))
+        return (fwd_out + bwd_out[::-1]).astype(F32), c_last
+
+
+@dataclass
+class Stack:
+    """proj -> layers -> head, built from a spec-shaped description."""
+
+    feat: int
+    hidden: int
+    vocab: int
+    proj_w: np.ndarray
+    proj_b: np.ndarray
+    layers: list
+    head_w: np.ndarray
+    head_b: np.ndarray
+
+    @staticmethod
+    def init(feat: int, hidden: int, vocab: int, layer_kinds: list[str], seed: int) -> "Stack":
+        """``layer_kinds``: 'sru' or 'sru:bi' per layer.  Draw order is
+        projection → layers → head (StackParams::init)."""
+        rng = rng_ref.Rng(seed)
+        proj_w = rng_ref.glorot(hidden, feat, rng)
+        layers = []
+        for kind in layer_kinds:
+            if kind == "sru":
+                layers.append(SruLayer.init(hidden, rng))
+            elif kind == "sru:bi":
+                layers.append(BidirSruLayer.init(hidden, rng))
+            else:
+                raise ValueError(f"unsupported layer kind {kind!r}")
+        head_w = rng_ref.glorot(vocab, hidden, rng)
+        return Stack(
+            feat=feat,
+            hidden=hidden,
+            vocab=vocab,
+            proj_w=proj_w,
+            proj_b=np.zeros(hidden, dtype=F32),
+            layers=layers,
+            head_w=head_w,
+            head_b=np.zeros(vocab, dtype=F32),
+        )
+
+    def init_state(self) -> list[np.ndarray]:
+        # One c slot per layer (fwd only for bidir) — stack_flat_order.
+        return [np.zeros(self.hidden, dtype=F32) for _ in self.layers]
+
+    def run_block(self, x: np.ndarray, state: list[np.ndarray]) -> np.ndarray:
+        """One dispatched block (= one bidir chunk): x [T, feat] ->
+        logits [T, vocab]; mutates ``state`` in place."""
+        h = np.tanh(
+            (self.proj_w.astype(np.float64) @ x.T.astype(np.float64)).astype(F32)
+            + self.proj_b[:, None]
+        ).T.astype(F32)
+        for i, layer in enumerate(self.layers):
+            h, state[i] = layer.forward(h, state[i])
+        logits = (
+            (self.head_w.astype(np.float64) @ h.T.astype(np.float64)).astype(F32)
+            + self.head_b[:, None]
+        ).T
+        return logits.astype(F32)
+
+    def run_chunked(self, x: np.ndarray, block: int) -> np.ndarray:
+        """Process [T, feat] frames in dispatches of ``block`` (the last
+        may be short), exactly like the coordinator's Fixed(block)
+        policy with the whole utterance pre-fed."""
+        state = self.init_state()
+        outs = []
+        for s in range(0, x.shape[0], block):
+            outs.append(self.run_block(x[s : s + block], state))
+        return np.concatenate(outs, axis=0)

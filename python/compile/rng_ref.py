@@ -1,0 +1,124 @@
+"""Bit-exact Python mirror of ``rust/src/util/prng.rs``.
+
+The golden-vector conformance suite (``make_fixtures.py``) must produce
+the *same weights* the Rust engine builds from a seed, so this module
+reimplements SplitMix64 + Xoshiro256** + the f32 uniform/Glorot draw
+chain with the exact same rounding steps:
+
+* integer state is plain Python ints masked to 64 bits (wraparound math
+  is exact);
+* ``uniform()`` is ``(next_u64() >> 11) * 2**-53`` in f64 — exact in
+  both languages;
+* ``uniform_in``/``glorot`` round through float32 at the same points the
+  Rust code does (``numpy.float32`` scalar ops are IEEE-754 single ops).
+
+Weight init never touches ``normal()`` (Box–Muller's ``ln``/``cos``
+could differ by an ulp across libms), so the mirrored chain is exact —
+``tests/decode_golden.rs`` asserts bit-equality on weight probes.
+
+numpy-only on purpose: the fixture generator must run without JAX (CI
+drift check, offline containers).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+_MASK = (1 << 64) - 1
+
+
+class SplitMix64:
+    def __init__(self, seed: int):
+        self.state = seed & _MASK
+
+    def next_u64(self) -> int:
+        self.state = (self.state + 0x9E3779B97F4A7C15) & _MASK
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & _MASK
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & _MASK
+        return (z ^ (z >> 31)) & _MASK
+
+
+def _rotl(x: int, k: int) -> int:
+    return ((x << k) | (x >> (64 - k))) & _MASK
+
+
+class Rng:
+    """Xoshiro256** seeded via SplitMix64, as in the Rust crate."""
+
+    def __init__(self, seed: int):
+        sm = SplitMix64(seed)
+        self.s = [sm.next_u64() for _ in range(4)]
+
+    def next_u64(self) -> int:
+        s = self.s
+        result = (_rotl((s[1] * 5) & _MASK, 7) * 9) & _MASK
+        t = (s[1] << 17) & _MASK
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = _rotl(s[3], 45)
+        return result
+
+    def uniform(self) -> float:
+        """Uniform f64 in [0, 1) — exact (dyadic rational)."""
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def uniform_in(self, lo: np.float32, hi: np.float32) -> np.float32:
+        """Uniform f32 in [lo, hi), rounding exactly like the Rust code:
+        ``lo + (hi - lo) * (uniform() as f32)``."""
+        lo = np.float32(lo)
+        hi = np.float32(hi)
+        u = np.float32(self.uniform())  # f64 -> f32 round-to-nearest
+        return np.float32(lo + np.float32(hi - lo) * u)
+
+    def fill_uniform(self, n: int, lo: np.float32, hi: np.float32) -> np.ndarray:
+        return np.array([self.uniform_in(lo, hi) for _ in range(n)], dtype=np.float32)
+
+    def below(self, n: int) -> int:
+        """Lemire's method, as in Rust ``Rng::below``."""
+        return (self.next_u64() * n) >> 64
+
+    def normal(self) -> float:
+        """Box–Muller (f64), mirroring Rust ``Rng::normal``.  NOT
+        guaranteed bit-exact across libms (ln/cos) — use only for values
+        that get *embedded* in fixtures, never re-derived in Rust."""
+        import math
+        import sys
+
+        while True:
+            u1 = self.uniform()
+            if u1 <= sys.float_info.min:
+                continue
+            u2 = self.uniform()
+            r = math.sqrt(-2.0 * math.log(u1))
+            return np.float32(r * math.cos(2.0 * math.pi * u2))
+
+
+def glorot(rows: int, cols: int, rng: Rng) -> np.ndarray:
+    """Mirror of ``Matrix::glorot``: scale = sqrt(6/(rows+cols)) in f32,
+    row-major fill of uniform_in(-scale, scale)."""
+    scale = np.sqrt(np.float32(6.0) / np.float32(rows + cols)).astype(np.float32)
+    return rng.fill_uniform(rows * cols, np.float32(-scale), scale).reshape(rows, cols)
+
+
+def self_check() -> None:
+    """The reference vectors pinned in rust/src/util/prng.rs tests."""
+    sm = SplitMix64(1234567)
+    got = [sm.next_u64() for _ in range(3)]
+    want = [6457827717110365317, 3203168211198807973, 9817491932198370423]
+    assert got == want, f"splitmix drifted: {got}"
+    a = Rng(42)
+    b = Rng(42)
+    assert [a.next_u64() for _ in range(8)] == [b.next_u64() for _ in range(8)]
+    r = Rng(7)
+    for _ in range(1000):
+        u = r.uniform()
+        assert 0.0 <= u < 1.0
+
+
+if __name__ == "__main__":
+    self_check()
+    print("rng_ref self-check OK")

@@ -9,6 +9,7 @@
 use std::time::Duration;
 
 use mtsrnn::coordinator::{BatchMode, Coordinator, CoordinatorConfig, NativeBackend, PolicyMode};
+use mtsrnn::decode::DecoderSpec;
 use mtsrnn::engine::NativeStack;
 use mtsrnn::models::config::{StackSpec, ASR_SRU};
 use mtsrnn::models::StackParams;
@@ -51,6 +52,55 @@ fn run(policy: PolicyMode, label: &str, frames: &[f32]) {
     );
 }
 
+/// Frames in → transcript out through the coordinator + decoder: the
+/// full ASR scenario at block size `t`.  Reports decoded frames/sec and
+/// time-to-first-partial — the time from the first feed until the first
+/// block's logits have reached the decoder (for `:bi` stacks, `t` is
+/// also the bidirectional lookahead, so this is the latency the chunking
+/// exists to bound).
+fn run_transcribe(spec_str: &str, t: usize, frames: &[f32]) {
+    let spec = StackSpec::parse(spec_str).unwrap();
+    let params = StackParams::init(&spec, &mut Rng::new(2018)).unwrap();
+    let backend = NativeBackend::new(NativeStack::new(&spec, params, t.max(1)).unwrap());
+    let mut coord = Coordinator::new(
+        backend,
+        CoordinatorConfig {
+            policy: PolicyMode::Fixed(t),
+            max_wait: Duration::from_millis(80),
+            max_sessions: 4,
+            batching: BatchMode::Auto,
+        },
+    );
+    let id = coord.open().unwrap();
+    coord.set_decoder(id, DecoderSpec::Greedy).unwrap();
+    let n = frames.len() / spec.feat;
+    let timer = Timer::start();
+    let mut first_partial_ms: Option<f64> = None;
+    for chunk in frames.chunks(t * spec.feat) {
+        coord.feed(id, chunk).unwrap();
+        coord.tick().unwrap();
+        if first_partial_ms.is_none() {
+            if let Ok(toks) = coord.transcript(id, false) {
+                if !toks.is_empty() {
+                    first_partial_ms = Some(timer.elapsed_ms());
+                }
+            }
+        }
+    }
+    let toks = coord.transcript(id, true).unwrap();
+    let wall = timer.elapsed_ms();
+    println!(
+        "{spec_str:<18} T={t:<3} {:>8.1} ms wall  {:>7.0} frames/s  ttfp {:>8}  {} tokens",
+        wall,
+        n as f64 / (wall / 1e3),
+        match first_partial_ms {
+            Some(ms) => format!("{ms:.2} ms"),
+            None => "n/a".into(),
+        },
+        toks.len()
+    );
+}
+
 fn main() {
     let n = 2000;
     let mut trace = AsrTrace::new(ASR_SRU.feat, 11);
@@ -69,5 +119,15 @@ fn main() {
         (PolicyMode::Adaptive, "adaptive"),
     ] {
         run(policy, label, &frames);
+    }
+
+    println!(
+        "\nTranscribe e2e (frames -> transcript, greedy CTC; ttfp = time to first partial):"
+    );
+    let short = &frames[..512 * ASR_SRU.feat];
+    for spec in ["sru:f32:512x4", "sru:f32:bi:512x4"] {
+        for t in [1usize, 4, 16] {
+            run_transcribe(spec, t, short);
+        }
     }
 }

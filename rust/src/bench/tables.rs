@@ -237,12 +237,15 @@ pub fn ablation_quant(size: ModelSize, samples: usize, opts: &BenchOpts) -> Tabl
 /// The spec grid exercised by `mtsrnn ablation --exp stacks`, `info`,
 /// and the CI smoke job: every cell kind × precision the composable
 /// stack API serves.
-pub const SERVE_SPECS: [&str; 5] = [
+pub const SERVE_SPECS: [&str; 6] = [
     "sru:f32:512x4",
     "sru:q8:512x4",
     "qrnn:f32:512x4",
     "lstm:f32:512x4",
     "sru:f32:512x4,l3=sru:q8",
+    // Chunked-bidirectional: two direction engines per layer (2x the
+    // gate GEMM work and weight traffic per block), lookahead = T.
+    "sru:f32:bi:512x4",
 ];
 
 /// ABL6 (extension): serving-path wall-clock per stack spec — every row

@@ -81,7 +81,9 @@ COMMANDS:
                                             [--backend native|pjrt] [--port P]
                                             [--block N | --adaptive]
                                             [--max-wait-ms N] [--max-block N]
-                                            [--batch auto|on|off]
+                                            [--batch auto|on|off] [--seed N]
+  decode     offline streaming transcription [--stack SPEC] [--decoder D]
+             (frames -> logits -> CTC)       [--frames N] [--block N] [--seed N]
   info       model/platform inventory
   help       this text
 
@@ -97,8 +99,11 @@ GLOBAL OPTIONS:
                  whenever the pool has >1 thread, the default), on, off.
 
 STACK SPECS (native serve; one weight set, any layer kind x precision):
-  <arch>:<prec>:<hidden>x<depth>[,feat=N][,vocab=N][,l<i>=<arch>:<prec>]
+  <arch>:<prec>[:bi]:<hidden>x<depth>[,feat=N][,vocab=N][,l<i>=<arch>:<prec>[:bi]]
     arch: sru | qrnn | lstm        prec: f32 | q8 (sru only)
+    :bi = chunked-bidirectional layer: fwd+bwd engines per dispatched
+          block, outputs summed; the block size bounds the lookahead,
+          so bidir stacks serve with bounded latency (serve --block N)
     defaults: feat=40 vocab=32 (the ASR front end)
   examples:
     sru:f32:512x4             the served SRU stack (alias: asr_sru_512x4)
@@ -106,7 +111,18 @@ STACK SPECS (native serve; one weight set, any layer kind x precision):
     lstm:f32:512x4            LSTM baseline stack
     sru:q8:512x4              int8 SRU weights (~4x less DRAM per block)
     sru:f32:512x4,l3=sru:q8   mixed precision: int8 final layer
+    sru:f32:bi:512x4          chunked-bidir SRU stack (lookahead = block)
   the pjrt backend instead takes AOT artifact stack names (asr_sru_512x4).
+
+TRANSCRIBE MODE (serve, native backend):
+  DECODE <id> [greedy|beam[:W]]   attach a streaming CTC decoder to a
+                                  session (before its first FEED)
+  TRANSCRIBE <id> [final]         poll the partial transcript; `final`
+                                  flushes pending frames first
+  class 0 is the CTC blank; transcripts are class indices.
+  `decode` runs the same pipeline offline: synthetic acoustic frames ->
+  stack blocks -> incremental CTC decode, reporting frames/s and
+  time-to-first-partial (--decoder greedy | beam | beam:<width>).
 ";
 
 #[cfg(test)]

@@ -19,6 +19,7 @@ use crate::coordinator::batcher::{Batcher, TickPlan};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::policy::{AdaptivePolicy, PolicyMode};
 use crate::coordinator::session::{Session, SessionId};
+use crate::decode::DecoderSpec;
 use crate::engine::StreamState;
 use crate::linalg::pool;
 
@@ -157,6 +158,30 @@ impl<B: BlockBackend> Coordinator<B> {
             .ok_or_else(|| format!("no such session {id}"))
     }
 
+    /// Attach a streaming CTC decoder to a stream (transcribe mode).
+    /// Must happen before any of the stream's frames are computed.
+    pub fn set_decoder(&mut self, id: SessionId, spec: DecoderSpec) -> Result<(), String> {
+        let vocab = self.backend.config().vocab;
+        let sess = self
+            .sessions
+            .get_mut(&id)
+            .ok_or_else(|| format!("no such session {id}"))?;
+        sess.attach_decoder(spec.build(vocab)?)
+    }
+
+    /// The stream's partial transcript.  With `finalize`, pending frames
+    /// are flushed through the engine first, so the transcript covers
+    /// every frame fed so far.
+    pub fn transcript(&mut self, id: SessionId, finalize: bool) -> Result<Vec<usize>, String> {
+        if finalize {
+            self.flush_session(id)?;
+        }
+        self.sessions
+            .get(&id)
+            .ok_or_else(|| format!("no such session {id}"))?
+            .transcript()
+    }
+
     /// True when this tick may fuse ready streams into one dispatch.
     fn batching_enabled(&self) -> bool {
         match self.cfg.batching {
@@ -230,10 +255,12 @@ impl<B: BlockBackend> Coordinator<B> {
     /// scratch in the stack grows to the largest `N` seen and is
     /// reused, so the transient stays `O(max_sessions · max_block)`).
     ///
-    /// Error contract (same as the per-session path's failing block):
-    /// frames already handed to a failing dispatch are lost, but every
-    /// stream's recurrent state is restored, so the sessions keep
-    /// serving.
+    /// Error contract: if the gather phase fails (nothing computed),
+    /// states are restored AND the dequeued frames are requeued, so the
+    /// tick is a no-op.  If the backend dispatch itself fails, frames
+    /// already handed to it are lost (their numbers are undefined) but
+    /// every stream's recurrent state is restored — same as the
+    /// per-session path's failing block — so the sessions keep serving.
     fn execute_batch(&mut self, plan: &TickPlan) -> Result<usize, String> {
         let vocab = self.backend.config().vocab;
         let seg_cap = self
@@ -252,6 +279,10 @@ impl<B: BlockBackend> Coordinator<B> {
             let mut x = Vec::new();
             let mut arrivals = Vec::new();
             let mut states: Vec<StreamState> = Vec::new();
+            // Gather phase: a failure here (a coordinator bug, e.g. a
+            // plan that outruns a session's queue) must not strand the
+            // states already lent out — restore them, then report.
+            let mut gather_err: Option<String> = None;
             for ((id, _), rem) in plan.entries.iter().zip(remaining.iter_mut()) {
                 let t = (*rem).min(seg_cap);
                 if t == 0 {
@@ -260,11 +291,17 @@ impl<B: BlockBackend> Coordinator<B> {
                 *rem -= t;
                 // Plan ids were read from `self.sessions` under this
                 // same exclusive borrow; nothing can have removed them.
-                let sess = self
-                    .sessions
-                    .get_mut(id)
-                    .expect("session vanished mid-tick");
-                let (xi, arr) = sess.take_frames(t);
+                let Some(sess) = self.sessions.get_mut(id) else {
+                    gather_err = Some(format!("session {id} vanished mid-tick"));
+                    break;
+                };
+                let (xi, arr) = match sess.take_frames(t) {
+                    Ok(v) => v,
+                    Err(e) => {
+                        gather_err = Some(e);
+                        break;
+                    }
+                };
                 x.extend_from_slice(&xi);
                 ids.push(*id);
                 segs.push(t);
@@ -276,25 +313,35 @@ impl<B: BlockBackend> Coordinator<B> {
                     StreamState { tensors: Vec::new() },
                 ));
             }
+            if let Some(e) = gather_err {
+                // The backend never ran: restore states AND hand the
+                // already-dequeued frames back (front of the queue, in
+                // order), so no stream silently skips frames.
+                self.restore_states(&ids, &mut states);
+                let feat = self.backend.config().feat;
+                let mut off = 0;
+                for ((id, &t), arr) in ids.iter().zip(&segs).zip(&arrivals) {
+                    if let Some(sess) = self.sessions.get_mut(id) {
+                        sess.requeue_frames(&x[off * feat..(off + t) * feat], arr);
+                    }
+                    off += t;
+                }
+                return Err(e);
+            }
             if segs.is_empty() {
                 break;
             }
             let result = self.backend.run_batch(&x, &segs, &mut states);
-            for (i, id) in ids.iter().enumerate() {
-                let sess = self.sessions.get_mut(id).expect("session vanished mid-tick");
-                sess.state = std::mem::replace(
-                    &mut states[i],
-                    StreamState { tensors: Vec::new() },
-                );
-            }
+            self.restore_states(&ids, &mut states);
             let logits = result?;
             let done = Instant::now();
             let total: usize = segs.iter().sum();
             debug_assert_eq!(logits.len(), total * vocab);
             let mut off = 0;
             for (id, &t) in ids.iter().zip(&segs) {
-                let sess = self.sessions.get_mut(id).unwrap();
-                sess.push_ready(&logits[off * vocab..(off + t) * vocab]);
+                if let Some(sess) = self.sessions.get_mut(id) {
+                    sess.push_ready(&logits[off * vocab..(off + t) * vocab]);
+                }
                 off += t;
             }
             // One weight fetch served this whole dispatch.
@@ -309,18 +356,27 @@ impl<B: BlockBackend> Coordinator<B> {
         Ok(dispatches)
     }
 
+    /// Put lent-out stream states back into their sessions (whether the
+    /// batch dispatch succeeded or not — sessions must keep serving).
+    fn restore_states(&mut self, ids: &[SessionId], states: &mut [StreamState]) {
+        for (i, id) in ids.iter().enumerate() {
+            if let Some(sess) = self.sessions.get_mut(id) {
+                sess.state =
+                    std::mem::replace(&mut states[i], StreamState { tensors: Vec::new() });
+            }
+        }
+    }
+
     /// Execute a sequence of exact-size blocks for one session.
     fn execute(&mut self, id: SessionId, blocks: &[usize]) -> Result<usize, String> {
         for &t in blocks {
-            let (x, arrivals) = {
-                let sess = self
-                    .sessions
-                    .get_mut(&id)
-                    .ok_or_else(|| format!("no such session {id}"))?;
-                sess.take_frames(t)
-            };
-            // Run outside the session borrow (backend needs &mut self).
-            let sess = self.sessions.get_mut(&id).unwrap();
+            let sess = self
+                .sessions
+                .get_mut(&id)
+                .ok_or_else(|| format!("no such session {id}"))?;
+            let (x, arrivals) = sess.take_frames(t)?;
+            // `sess` borrows only the `sessions` field, so the backend
+            // (a sibling field) can run under the same borrow.
             let logits = self.backend.run_block(&x, t, &mut sess.state)?;
             debug_assert_eq!(logits.len(), t * self.backend.config().vocab);
             sess.push_ready(&logits);
@@ -498,6 +554,34 @@ mod tests {
         c.tick().unwrap();
         assert_eq!(c.ready_frames(a).unwrap(), 8);
         assert_eq!(c.ready_frames(b).unwrap(), 8);
+    }
+
+    #[test]
+    fn transcribe_mode_round_trip() {
+        use crate::decode::DecoderSpec;
+        let mut c = coord(PolicyMode::Fixed(4), 0);
+        let id = c.open().unwrap();
+        // Decoder must attach before frames are computed.
+        c.set_decoder(id, DecoderSpec::Greedy).unwrap();
+        assert!(c.set_decoder(id, DecoderSpec::Greedy).is_err(), "double");
+        assert!(c.set_decoder(99, DecoderSpec::Greedy).is_err());
+        let mut x = vec![0.0; 10 * 8];
+        Rng::new(13).fill_normal(&mut x, 1.0);
+        c.feed(id, &x).unwrap();
+        c.tick().unwrap();
+        // Partial transcript is available mid-stream; final flushes the
+        // remaining 2 frames through the engine first.
+        let partial = c.transcript(id, false).unwrap();
+        let fin = c.transcript(id, true).unwrap();
+        assert!(fin.len() >= partial.len(), "final covers every frame");
+        assert_eq!(c.ready_frames(id).unwrap(), 10, "logits still pollable");
+        // Late attach on a stream that already computed frames fails.
+        let id2 = c.open().unwrap();
+        c.feed(id2, &x).unwrap();
+        c.tick().unwrap();
+        assert!(c.set_decoder(id2, DecoderSpec::Greedy).is_err());
+        // Transcript without a decoder is a typed error.
+        assert!(c.transcript(id2, false).is_err());
     }
 
     #[test]

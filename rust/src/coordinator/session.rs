@@ -1,9 +1,15 @@
-//! Per-stream session: recurrent state, pending input frames, and the
-//! delivered-output queue.
+//! Per-stream session: recurrent state, pending input frames, the
+//! delivered-output queue, and (for transcribe-mode streams) the
+//! streaming CTC decoder state.
+//!
+//! Everything here runs on the serve request path, so user-reachable
+//! problems are typed `Result` errors, never panics — a malformed
+//! request must not kill the serve loop.
 
 use std::collections::VecDeque;
 use std::time::Instant;
 
+use crate::decode::CtcDecoder;
 use crate::engine::StreamState;
 
 pub type SessionId = u64;
@@ -20,6 +26,13 @@ pub struct Session {
     arrivals: VecDeque<Instant>,
     /// Completed logits awaiting pickup (flat, `vocab` floats per frame).
     ready: VecDeque<f32>,
+    /// Streaming decoder for transcribe-mode streams: fed every computed
+    /// logit frame as it is produced, carries the hypothesis across
+    /// blocks.  `None` for plain logit streams.
+    decoder: Option<Box<dyn CtcDecoder>>,
+    /// First decoder failure, if any (surfaced on the next transcript
+    /// request instead of poisoning the serve loop).
+    decode_error: Option<String>,
     pub feat: usize,
     pub vocab: usize,
     pub frames_in: u64,
@@ -35,6 +48,8 @@ impl Session {
             pending: VecDeque::new(),
             arrivals: VecDeque::new(),
             ready: VecDeque::new(),
+            decoder: None,
+            decode_error: None,
             feat,
             vocab,
             frames_in: 0,
@@ -72,25 +87,48 @@ impl Session {
     }
 
     /// Dequeue exactly `t` frames into a flat `[t, feat]` buffer, along
-    /// with their arrival times (latency accounting).
-    pub fn take_frames(&mut self, t: usize) -> (Vec<f32>, Vec<Instant>) {
-        assert!(t <= self.pending_frames(), "not enough pending frames");
-        let mut x = Vec::with_capacity(t * self.feat);
-        for _ in 0..t * self.feat {
-            x.push(self.pending.pop_front().unwrap());
+    /// with their arrival times (latency accounting).  A request for
+    /// more frames than are pending is a (coordinator bug) error, not a
+    /// panic — the serve loop must outlive it.
+    pub fn take_frames(&mut self, t: usize) -> Result<(Vec<f32>, Vec<Instant>), String> {
+        if t > self.pending_frames() {
+            return Err(format!(
+                "dispatch asked for {t} frames but session {} has {} pending",
+                self.id,
+                self.pending_frames()
+            ));
         }
-        let mut arr = Vec::with_capacity(t);
-        for _ in 0..t {
-            arr.push(self.arrivals.pop_front().unwrap());
-        }
-        (x, arr)
+        let x: Vec<f32> = self.pending.drain(..t * self.feat).collect();
+        let arr: Vec<Instant> = self.arrivals.drain(..t).collect();
+        Ok((x, arr))
     }
 
-    /// Deliver computed logits (`t * vocab` floats).
+    /// Put frames taken by [`take_frames`](Self::take_frames) back at
+    /// the *front* of the queue, preserving order and arrival times —
+    /// for a dispatch that was abandoned before the backend ran, so
+    /// nothing was computed and nothing need be lost.
+    pub fn requeue_frames(&mut self, x: &[f32], arrivals: &[Instant]) {
+        debug_assert_eq!(x.len(), arrivals.len() * self.feat);
+        for &v in x.iter().rev() {
+            self.pending.push_front(v);
+        }
+        for &a in arrivals.iter().rev() {
+            self.arrivals.push_front(a);
+        }
+    }
+
+    /// Deliver computed logits (`t * vocab` floats): queue them for
+    /// pickup and feed the stream's decoder, if one is attached.
     pub fn push_ready(&mut self, logits: &[f32]) {
         debug_assert_eq!(logits.len() % self.vocab, 0);
         self.ready.extend(logits.iter().copied());
         self.frames_out += (logits.len() / self.vocab) as u64;
+        if let Some(dec) = &mut self.decoder {
+            if let Err(e) = dec.step(logits) {
+                // Keep serving; report on the next TRANSCRIBE.
+                self.decode_error.get_or_insert(e);
+            }
+        }
     }
 
     /// Pop up to `max_frames` completed frames of logits.
@@ -103,11 +141,52 @@ impl Session {
     pub fn ready_frames(&self) -> usize {
         self.ready.len() / self.vocab
     }
+
+    /// Attach a streaming decoder (transcribe mode).  Rejected once
+    /// frames have already been computed — the transcript would silently
+    /// miss them.
+    pub fn attach_decoder(&mut self, decoder: Box<dyn CtcDecoder>) -> Result<(), String> {
+        if self.decoder.is_some() {
+            return Err(format!("session {} already has a decoder", self.id));
+        }
+        if self.frames_out > 0 {
+            return Err(format!(
+                "session {} already computed {} frames; attach the decoder before feeding",
+                self.id, self.frames_out
+            ));
+        }
+        self.decoder = Some(decoder);
+        Ok(())
+    }
+
+    pub fn has_decoder(&self) -> bool {
+        self.decoder.is_some()
+    }
+
+    /// Current partial transcript (tokens emitted so far).
+    pub fn transcript(&self) -> Result<Vec<usize>, String> {
+        if let Some(e) = &self.decode_error {
+            return Err(format!("decoder failed: {e}"));
+        }
+        match &self.decoder {
+            Some(d) => Ok(d.partial().to_vec()),
+            None => Err(format!(
+                "session {} has no decoder (send DECODE before TRANSCRIBE)",
+                self.id
+            )),
+        }
+    }
+
+    /// Decoder progress/score for stats: `(frames_decoded, score)`.
+    pub fn decode_progress(&self) -> Option<(u64, f32)> {
+        self.decoder.as_ref().map(|d| (d.frames_decoded(), d.score()))
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::decode::DecoderSpec;
     use crate::engine::StreamState;
 
     fn sess() -> Session {
@@ -127,7 +206,7 @@ mod tests {
         let now = Instant::now();
         s.push_frames(&[1., 2., 3., 4., 5., 6.], now).unwrap();
         assert_eq!(s.pending_frames(), 2);
-        let (x, arr) = s.take_frames(1);
+        let (x, arr) = s.take_frames(1).unwrap();
         assert_eq!(x, vec![1., 2., 3.]);
         assert_eq!(arr.len(), 1);
         assert_eq!(s.pending_frames(), 1);
@@ -154,9 +233,57 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "not enough pending")]
-    fn take_more_than_pending_panics() {
+    fn requeue_restores_order_and_arrivals() {
         let mut s = sess();
-        s.take_frames(1);
+        let t0 = Instant::now();
+        let frames = [1., 2., 3., 4., 5., 6., 7., 8., 9.];
+        s.push_frames(&frames, t0).unwrap();
+        let (x, arr) = s.take_frames(2).unwrap();
+        assert_eq!(s.pending_frames(), 1);
+        // Abandoned dispatch: hand the frames back, then take again —
+        // the stream must see the exact original order and timestamps.
+        s.requeue_frames(&x, &arr);
+        assert_eq!(s.pending_frames(), 3);
+        assert_eq!(s.oldest_arrival(), Some(t0));
+        let (x2, _) = s.take_frames(3).unwrap();
+        assert_eq!(x2, vec![1., 2., 3., 4., 5., 6., 7., 8., 9.]);
+    }
+
+    #[test]
+    fn take_more_than_pending_is_an_error_not_a_panic() {
+        let mut s = sess();
+        assert!(s.take_frames(1).is_err());
+        // The session still serves after the rejected dispatch.
+        s.push_frames(&[1., 2., 3.], Instant::now()).unwrap();
+        assert!(s.take_frames(1).is_ok());
+    }
+
+    #[test]
+    fn decoder_rides_the_ready_queue() {
+        let mut s = sess();
+        let dec = DecoderSpec::Greedy.build(2).unwrap();
+        s.attach_decoder(dec).unwrap();
+        assert!(s.has_decoder());
+        // Frame posteriors: symbol 1 twice then blank — transcript "1".
+        s.push_ready(&[0.0, 5.0, 0.0, 5.0]);
+        s.push_ready(&[5.0, 0.0]);
+        assert_eq!(s.transcript().unwrap(), vec![1]);
+        assert_eq!(s.decode_progress().unwrap().0, 3);
+        // Logits still pollable alongside the transcript.
+        assert_eq!(s.ready_frames(), 3);
+    }
+
+    #[test]
+    fn decoder_attach_rules() {
+        let mut s = sess();
+        assert!(s.transcript().is_err(), "no decoder yet");
+        let dec = DecoderSpec::Greedy.build(2).unwrap();
+        s.attach_decoder(dec).unwrap();
+        let again = s.attach_decoder(DecoderSpec::Greedy.build(2).unwrap());
+        assert!(again.is_err(), "double attach");
+        let mut late = sess();
+        late.push_ready(&[0.0, 1.0]);
+        let late_attach = late.attach_decoder(DecoderSpec::Greedy.build(2).unwrap());
+        assert!(late_attach.is_err(), "frames already computed");
     }
 }

@@ -1,0 +1,266 @@
+//! CTC prefix beam search (Graves 2012 / Hannun 2014 style, no language
+//! model): hypotheses are *prefixes* (not alignment paths), each carrying
+//! the summed probability of every path that collapses to it, split into
+//! blank-ended (`p_b`) and symbol-ended (`p_nb`) mass so repeats merge
+//! correctly.
+//!
+//! Streaming: the beam is the decoder state, carried across logit slabs
+//! of any size; feeding frame-by-frame is bit-identical to feeding the
+//! whole utterance at once.
+//!
+//! Determinism: candidate expansion iterates the beam in its stored
+//! (score-desc, prefix-asc) order, merges through a `BTreeMap` (sorted
+//! by prefix, no hash randomness), and pruning is a stable sort with the
+//! prefix as tie-break — so scores accumulate in one fixed order and the
+//! decode is reproducible bit-for-bit across runs and thread counts, and
+//! token-exact against `python/compile/ctc_ref.py`.
+
+use std::collections::BTreeMap;
+
+use crate::decode::{log_add, log_softmax, CtcDecoder, BLANK};
+
+/// One beam entry: a collapsed prefix with its path mass split by how
+/// the paths end (blank vs. the prefix's last symbol).
+#[derive(Debug, Clone)]
+struct Hyp {
+    prefix: Vec<usize>,
+    /// Log-mass of paths ending in blank.
+    p_b: f32,
+    /// Log-mass of paths ending in the prefix's last symbol.
+    p_nb: f32,
+}
+
+impl Hyp {
+    fn total(&self) -> f32 {
+        log_add(self.p_b, self.p_nb)
+    }
+}
+
+/// Streaming CTC prefix beam search decoder.
+#[derive(Debug, Clone)]
+pub struct CtcBeam {
+    vocab: usize,
+    width: usize,
+    /// Sorted by total score descending (prefix ascending on ties).
+    beam: Vec<Hyp>,
+    frames: u64,
+    /// Scratch: per-frame log-softmax.
+    lp: Vec<f32>,
+}
+
+impl CtcBeam {
+    pub fn new(vocab: usize, width: usize) -> Self {
+        assert!(vocab >= 2, "ctc needs blank + at least one symbol");
+        assert!(width >= 1, "beam width must be >= 1");
+        Self {
+            vocab,
+            width,
+            beam: vec![Hyp {
+                prefix: Vec::new(),
+                p_b: 0.0, // log 1: the empty prefix before any frame
+                p_nb: f32::NEG_INFINITY,
+            }],
+            frames: 0,
+            lp: vec![0.0; vocab],
+        }
+    }
+
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Log of the total probability mass the beam still tracks.  Starts
+    /// at 0 (mass 1); transitions conserve mass and pruning discards it,
+    /// so this is non-increasing over frames — the "prefix probabilities
+    /// monotone" invariant checked by `tests/bidir_parity.rs`.
+    pub fn mass(&self) -> f32 {
+        let mut m = f32::NEG_INFINITY;
+        for h in &self.beam {
+            m = log_add(m, h.total());
+        }
+        m
+    }
+
+    fn advance(&mut self) {
+        // Merge candidates by prefix: (p_b, p_nb) per prefix.
+        let mut next: BTreeMap<Vec<usize>, (f32, f32)> = BTreeMap::new();
+        const NINF: (f32, f32) = (f32::NEG_INFINITY, f32::NEG_INFINITY);
+        for hyp in &self.beam {
+            let total = hyp.total();
+            // Stay on this prefix via a blank frame...
+            let e = next.entry(hyp.prefix.clone()).or_insert(NINF);
+            e.0 = log_add(e.0, total + self.lp[BLANK]);
+            // ...or via a repeat of its last symbol (symbol-ended paths
+            // only: a repeat after a blank would emit a new token).
+            if let Some(&last) = hyp.prefix.last() {
+                e.1 = log_add(e.1, hyp.p_nb + self.lp[last]);
+            }
+            // Extend with every non-blank symbol.
+            for k in 1..self.vocab {
+                let add = if hyp.prefix.last() == Some(&k) {
+                    // Same symbol again only extends across a blank.
+                    hyp.p_b + self.lp[k]
+                } else {
+                    total + self.lp[k]
+                };
+                if add == f32::NEG_INFINITY {
+                    continue;
+                }
+                let mut np = Vec::with_capacity(hyp.prefix.len() + 1);
+                np.extend_from_slice(&hyp.prefix);
+                np.push(k);
+                let e = next.entry(np).or_insert(NINF);
+                e.1 = log_add(e.1, add);
+            }
+        }
+        // Prune to the top `width` prefixes.  The map iterates prefix-
+        // ascending; the stable sort by score descending therefore
+        // breaks score ties toward the lexicographically smaller prefix.
+        let mut cands: Vec<Hyp> = next
+            .into_iter()
+            .map(|(prefix, (p_b, p_nb))| Hyp { prefix, p_b, p_nb })
+            .collect();
+        cands.sort_by(|a, b| b.total().total_cmp(&a.total()));
+        cands.truncate(self.width);
+        self.beam = cands;
+    }
+}
+
+impl CtcDecoder for CtcBeam {
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    fn step(&mut self, logits: &[f32]) -> Result<(), String> {
+        if logits.is_empty() || logits.len() % self.vocab != 0 {
+            return Err(format!(
+                "logit slab of len {} is not a whole number of {}-class frames",
+                logits.len(),
+                self.vocab
+            ));
+        }
+        for frame in logits.chunks_exact(self.vocab) {
+            log_softmax(frame, &mut self.lp);
+            self.advance();
+            self.frames += 1;
+        }
+        Ok(())
+    }
+
+    fn partial(&self) -> &[usize] {
+        &self.beam[0].prefix
+    }
+
+    fn score(&self) -> f32 {
+        self.beam[0].total()
+    }
+
+    fn frames_decoded(&self) -> u64 {
+        self.frames
+    }
+
+    fn reset(&mut self) {
+        self.beam = vec![Hyp {
+            prefix: Vec::new(),
+            p_b: 0.0,
+            p_nb: f32::NEG_INFINITY,
+        }];
+        self.frames = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn frames(vocab: usize, labels: &[usize]) -> Vec<f32> {
+        let mut out = vec![0.0; labels.len() * vocab];
+        for (s, &k) in labels.iter().enumerate() {
+            out[s * vocab + k] = 8.0;
+        }
+        out
+    }
+
+    #[test]
+    fn peaked_frames_decode_like_greedy_collapse() {
+        let mut d = CtcBeam::new(4, 4);
+        // a a _ a b b _ _ c  ->  a a b c
+        d.step(&frames(4, &[1, 1, 0, 1, 2, 2, 0, 0, 3])).unwrap();
+        assert_eq!(d.partial(), &[1, 1, 2, 3]);
+    }
+
+    #[test]
+    fn repeat_merging_beats_the_best_path() {
+        // Two frames, no blank mass: p(a)=0.6, p(b)=0.4 each.  The best
+        // *path* "ab" has mass 0.24, but prefix "a" sums paths {aa}=0.36
+        // — prefix search must prefer "a".  (ln-space inputs via logits
+        // that softmax to exactly those probabilities.)
+        let f = |pa: f32, pb: f32| vec![-30.0f32, pa.ln(), pb.ln()];
+        let mut d = CtcBeam::new(3, 8);
+        let mut slab = f(0.6, 0.4);
+        slab.extend(f(0.6, 0.4));
+        d.step(&slab).unwrap();
+        assert_eq!(d.partial(), &[1]);
+        // Mass of "a" ≈ 0.36 (plus negligible blank leakage).
+        assert!((d.score().exp() - 0.36).abs() < 1e-3, "{}", d.score().exp());
+    }
+
+    #[test]
+    fn incremental_equals_one_shot_bitwise() {
+        let labels = [2usize, 0, 1, 1, 0, 3, 3, 2, 0, 1, 2, 0];
+        let all = frames(5, &labels);
+        let mut one = CtcBeam::new(5, 4);
+        one.step(&all).unwrap();
+        let mut inc = CtcBeam::new(5, 4);
+        for f in all.chunks(5 * 5) {
+            inc.step(f).unwrap();
+        }
+        assert_eq!(one.partial(), inc.partial());
+        assert_eq!(one.score().to_bits(), inc.score().to_bits());
+        assert_eq!(one.mass().to_bits(), inc.mass().to_bits());
+    }
+
+    #[test]
+    fn beam_mass_is_monotone_nonincreasing() {
+        let labels = [1usize, 2, 2, 0, 3, 1, 0, 0, 2, 3, 3, 1];
+        let all = frames(4, &labels);
+        let mut d = CtcBeam::new(4, 2); // narrow: pruning really drops mass
+        let mut prev = d.mass();
+        assert_eq!(prev, 0.0, "initial mass is 1");
+        for f in all.chunks_exact(4) {
+            d.step(f).unwrap();
+            let m = d.mass();
+            assert!(m <= prev + 1e-5, "mass grew: {prev} -> {m}");
+            assert!(m <= 1e-6, "tracked mass cannot exceed 1");
+            prev = m;
+        }
+    }
+
+    #[test]
+    fn width_caps_the_beam() {
+        let labels = [1usize, 2, 3, 1, 2, 3];
+        let all = frames(4, &labels);
+        let mut d = CtcBeam::new(4, 3);
+        d.step(&all).unwrap();
+        assert!(d.beam.len() <= 3);
+    }
+
+    #[test]
+    fn bad_slab_is_an_error() {
+        let mut d = CtcBeam::new(3, 2);
+        assert!(d.step(&[0.0; 5]).is_err());
+        assert!(d.step(&[]).is_err());
+        assert_eq!(d.frames_decoded(), 0);
+    }
+
+    #[test]
+    fn reset_restores_the_empty_beam() {
+        let mut d = CtcBeam::new(3, 2);
+        d.step(&frames(3, &[1, 2])).unwrap();
+        assert!(!d.partial().is_empty());
+        d.reset();
+        assert!(d.partial().is_empty());
+        assert_eq!(d.mass(), 0.0);
+        assert_eq!(d.frames_decoded(), 0);
+    }
+}

@@ -1,0 +1,168 @@
+//! CTC greedy (best-path) decoding: per-frame argmax, then collapse
+//! repeats and drop blanks.  O(V) per frame, no state beyond the last
+//! frame's label — the cheapest decoder, and the parity baseline for the
+//! beam search (`beam@width=1` must agree on peaked posteriors).
+
+use crate::decode::{log_softmax, CtcDecoder, BLANK};
+
+/// Streaming greedy CTC decoder.
+///
+/// The partial hypothesis is **append-only**: once a token is emitted it
+/// never changes, so clients may render partials incrementally.
+#[derive(Debug, Clone)]
+pub struct CtcGreedy {
+    vocab: usize,
+    /// Label of the previous frame (blank at utterance start).
+    prev: usize,
+    tokens: Vec<usize>,
+    /// Sum of per-frame best log-posteriors (best-path score).
+    logp: f32,
+    frames: u64,
+    /// Scratch: per-frame log-softmax.
+    lp: Vec<f32>,
+}
+
+impl CtcGreedy {
+    pub fn new(vocab: usize) -> Self {
+        assert!(vocab >= 2, "ctc needs blank + at least one symbol");
+        Self {
+            vocab,
+            prev: BLANK,
+            tokens: Vec::new(),
+            logp: 0.0,
+            frames: 0,
+            lp: vec![0.0; vocab],
+        }
+    }
+}
+
+impl CtcDecoder for CtcGreedy {
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    fn step(&mut self, logits: &[f32]) -> Result<(), String> {
+        if logits.is_empty() || logits.len() % self.vocab != 0 {
+            return Err(format!(
+                "logit slab of len {} is not a whole number of {}-class frames",
+                logits.len(),
+                self.vocab
+            ));
+        }
+        for frame in logits.chunks_exact(self.vocab) {
+            log_softmax(frame, &mut self.lp);
+            // Argmax, ties toward the lowest index (matches np.argmax in
+            // the Python reference).
+            let mut best = 0usize;
+            for (k, &v) in self.lp.iter().enumerate().skip(1) {
+                if v > self.lp[best] {
+                    best = k;
+                }
+            }
+            self.logp += self.lp[best];
+            if best != BLANK && best != self.prev {
+                self.tokens.push(best);
+            }
+            self.prev = best;
+            self.frames += 1;
+        }
+        Ok(())
+    }
+
+    fn partial(&self) -> &[usize] {
+        &self.tokens
+    }
+
+    fn score(&self) -> f32 {
+        self.logp
+    }
+
+    fn frames_decoded(&self) -> u64 {
+        self.frames
+    }
+
+    fn reset(&mut self) {
+        self.prev = BLANK;
+        self.tokens.clear();
+        self.logp = 0.0;
+        self.frames = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Logit frames where label `k` gets +8 and the rest 0 — argmax is
+    /// unambiguous, so the expected collapse is by construction.
+    fn frames(vocab: usize, labels: &[usize]) -> Vec<f32> {
+        let mut out = vec![0.0; labels.len() * vocab];
+        for (s, &k) in labels.iter().enumerate() {
+            out[s * vocab + k] = 8.0;
+        }
+        out
+    }
+
+    #[test]
+    fn collapses_repeats_and_blanks() {
+        let mut d = CtcGreedy::new(4);
+        // a a _ a b b _ _ c  ->  a a b c
+        d.step(&frames(4, &[1, 1, 0, 1, 2, 2, 0, 0, 3])).unwrap();
+        assert_eq!(d.partial(), &[1, 1, 2, 3]);
+        assert_eq!(d.frames_decoded(), 9);
+        assert!(d.score() < 0.0, "log-prob of a real path is negative");
+    }
+
+    #[test]
+    fn incremental_equals_one_shot() {
+        let labels = [1usize, 0, 2, 2, 0, 1, 1, 3, 0, 3];
+        let all = frames(5, &labels);
+        let mut one = CtcGreedy::new(5);
+        one.step(&all).unwrap();
+        let mut inc = CtcGreedy::new(5);
+        for f in all.chunks(5 * 3) {
+            inc.step(f).unwrap();
+        }
+        assert_eq!(one.partial(), inc.partial());
+        assert_eq!(one.score().to_bits(), inc.score().to_bits());
+    }
+
+    #[test]
+    fn partial_is_append_only() {
+        let labels = [1usize, 2, 0, 3, 1, 0, 2];
+        let all = frames(4, &labels);
+        let mut d = CtcGreedy::new(4);
+        let mut last: Vec<usize> = Vec::new();
+        for f in all.chunks_exact(4) {
+            d.step(f).unwrap();
+            assert!(
+                d.partial().starts_with(&last),
+                "greedy partial retracted: {last:?} -> {:?}",
+                d.partial()
+            );
+            last = d.partial().to_vec();
+        }
+    }
+
+    #[test]
+    fn reset_restarts_the_utterance() {
+        let mut d = CtcGreedy::new(3);
+        d.step(&frames(3, &[1, 2])).unwrap();
+        d.reset();
+        assert!(d.partial().is_empty());
+        assert_eq!(d.frames_decoded(), 0);
+        // A leading repeat of the pre-reset label must re-emit.
+        d.step(&frames(3, &[2])).unwrap();
+        assert_eq!(d.partial(), &[2]);
+    }
+
+    #[test]
+    fn bad_slab_is_an_error_and_state_is_untouched() {
+        let mut d = CtcGreedy::new(3);
+        assert!(d.step(&[0.0; 4]).is_err());
+        assert!(d.step(&[]).is_err());
+        assert_eq!(d.frames_decoded(), 0);
+        d.step(&frames(3, &[1])).unwrap();
+        assert_eq!(d.partial(), &[1]);
+    }
+}

@@ -1,0 +1,227 @@
+//! CTC decoding — the subsystem that turns the stack's logit stream into
+//! transcripts, completing the frames-in → transcript-out ASR scenario
+//! the paper motivates (§1 on-device speech recognition; the embedded-RNN
+//! surveys treat decoding as part of the inference budget).
+//!
+//! Both decoders are **streaming**: they consume block-sized logit slabs
+//! as the coordinator produces them (`[t, vocab]` per call, any `t`),
+//! carry their hypothesis state across calls, and expose a stable
+//! partial-hypothesis API — feeding frame-by-frame is exactly equivalent
+//! to feeding the whole utterance at once (property-tested in
+//! `tests/bidir_parity.rs`).
+//!
+//! Conventions (shared with `python/compile/ctc_ref.py`, the golden
+//! reference):
+//! * class 0 is the CTC blank;
+//! * per-frame posteriors are the log-softmax of the incoming logits;
+//! * ties break toward the lowest class index, and the beam orders
+//!   prefixes deterministically, so decode results are bit-reproducible
+//!   across runs, thread counts, and the Python reference.
+
+pub mod beam;
+pub mod greedy;
+
+pub use beam::CtcBeam;
+pub use greedy::CtcGreedy;
+
+/// The CTC blank class (shared with the Python reference generator).
+pub const BLANK: usize = 0;
+
+/// A streaming CTC decoder: consumes logit slabs incrementally, carries
+/// hypothesis state across blocks.
+///
+/// `Send` because decoders live inside coordinator sessions, which move
+/// onto the server's inference thread; `Debug` so sessions stay
+/// debuggable.
+pub trait CtcDecoder: Send + std::fmt::Debug {
+    /// Output alphabet size (including the blank at index [`BLANK`]).
+    fn vocab(&self) -> usize;
+
+    /// Consume a slab of `logits.len() / vocab` frames of raw logits
+    /// (time-major `[t, vocab]`).  Every user-reachable shape problem is
+    /// an `Err`, never a panic — this runs on the serve request path.
+    fn step(&mut self, logits: &[f32]) -> Result<(), String>;
+
+    /// Current best (partial) hypothesis, blank/repeat-collapsed.
+    fn partial(&self) -> &[usize];
+
+    /// Total log-probability of the current best hypothesis (greedy: the
+    /// best single alignment path; beam: the prefix's summed paths).
+    fn score(&self) -> f32;
+
+    /// Frames consumed so far.
+    fn frames_decoded(&self) -> u64;
+
+    /// Forget everything (new utterance).
+    fn reset(&mut self);
+}
+
+/// Which decoder to attach to a stream — the parse/build point shared by
+/// the `DECODE` wire request and the `decode` CLI subcommand.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DecoderSpec {
+    Greedy,
+    Beam { width: usize },
+}
+
+impl DecoderSpec {
+    /// Parse `"greedy"` or `"beam"`/`"beam:<width>"`.
+    pub fn parse(s: &str) -> Result<DecoderSpec, String> {
+        match s {
+            "greedy" => Ok(DecoderSpec::Greedy),
+            "beam" => Ok(DecoderSpec::Beam { width: 8 }),
+            other => {
+                if let Some(w) = other.strip_prefix("beam:") {
+                    let width: usize = w
+                        .parse()
+                        .map_err(|e| format!("decoder spec {s:?}: width: {e}"))?;
+                    if width < 1 {
+                        return Err(format!("decoder spec {s:?}: width must be >= 1"));
+                    }
+                    Ok(DecoderSpec::Beam { width })
+                } else {
+                    Err(format!(
+                        "unknown decoder {s:?} (greedy | beam | beam:<width>)"
+                    ))
+                }
+            }
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            DecoderSpec::Greedy => "greedy".into(),
+            DecoderSpec::Beam { width } => format!("beam:{width}"),
+        }
+    }
+
+    /// Build the decoder for a `vocab`-class output head.
+    pub fn build(&self, vocab: usize) -> Result<Box<dyn CtcDecoder>, String> {
+        if vocab < 2 {
+            return Err(format!(
+                "ctc decoding needs vocab >= 2 (blank + one symbol), got {vocab}"
+            ));
+        }
+        Ok(match *self {
+            DecoderSpec::Greedy => Box::new(CtcGreedy::new(vocab)),
+            DecoderSpec::Beam { width } => Box::new(CtcBeam::new(vocab, width)),
+        })
+    }
+}
+
+/// Render transcript tokens for humans: classes 1–26 map to `a`–`z`
+/// (the 32-class ASR head's letter range), anything else prints as
+/// `<k>`.  Display-only — the wire protocol and fixtures carry raw
+/// indices.
+pub fn render_tokens(tokens: &[usize]) -> String {
+    let mut s = String::with_capacity(tokens.len());
+    for &t in tokens {
+        match t {
+            1..=26 => s.push((b'a' + (t - 1) as u8) as char),
+            other => s.push_str(&format!("<{other}>")),
+        }
+    }
+    s
+}
+
+/// Log-softmax of one frame of logits into `out` (both length `vocab`).
+/// Max-subtracted for stability; plain libm transcendentals — decode is
+/// a per-frame O(V) epilogue, not a GEMM hot path, and the Python
+/// reference must match within float tolerance.
+pub(crate) fn log_softmax(logits: &[f32], out: &mut [f32]) {
+    let m = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f32;
+    for (o, &z) in out.iter_mut().zip(logits) {
+        let e = z - m;
+        *o = e;
+        sum += e.exp();
+    }
+    let lse = sum.ln();
+    for o in out.iter_mut() {
+        *o -= lse;
+    }
+}
+
+/// log(exp(a) + exp(b)) without overflow; handles -inf identities.
+pub(crate) fn log_add(a: f32, b: f32) -> f32 {
+    if a == f32::NEG_INFINITY {
+        return b;
+    }
+    if b == f32::NEG_INFINITY {
+        return a;
+    }
+    let (hi, lo) = if a >= b { (a, b) } else { (b, a) };
+    hi + (lo - hi).exp().ln_1p()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_parse_round_trip() {
+        assert_eq!(DecoderSpec::parse("greedy").unwrap(), DecoderSpec::Greedy);
+        assert_eq!(
+            DecoderSpec::parse("beam").unwrap(),
+            DecoderSpec::Beam { width: 8 }
+        );
+        assert_eq!(
+            DecoderSpec::parse("beam:3").unwrap(),
+            DecoderSpec::Beam { width: 3 }
+        );
+        for s in [
+            DecoderSpec::Greedy,
+            DecoderSpec::Beam { width: 5 },
+        ] {
+            assert_eq!(DecoderSpec::parse(&s.name()).unwrap(), s);
+        }
+        for bad in ["", "viterbi", "beam:", "beam:0", "beam:x"] {
+            assert!(DecoderSpec::parse(bad).is_err(), "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn build_rejects_tiny_vocab() {
+        assert!(DecoderSpec::Greedy.build(1).is_err());
+        assert!(DecoderSpec::Greedy.build(2).is_ok());
+    }
+
+    #[test]
+    fn token_rendering() {
+        assert_eq!(render_tokens(&[1, 2, 26]), "abz");
+        assert_eq!(render_tokens(&[1, 30, 2]), "a<30>b");
+        assert_eq!(render_tokens(&[]), "");
+    }
+
+    #[test]
+    fn log_softmax_normalizes() {
+        let z = [1.0f32, 2.0, 3.0, -1.0];
+        let mut lp = [0.0f32; 4];
+        log_softmax(&z, &mut lp);
+        let total: f32 = lp.iter().map(|v| v.exp()).sum();
+        assert!((total - 1.0).abs() < 1e-6, "{total}");
+        assert!(lp.iter().all(|&v| v <= 0.0));
+        // Invariant under shifts.
+        let zs: Vec<f32> = z.iter().map(|v| v + 100.0).collect();
+        let mut lps = [0.0f32; 4];
+        log_softmax(&zs, &mut lps);
+        for (a, b) in lp.iter().zip(&lps) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn log_add_matches_direct() {
+        for (a, b) in [(0.0f32, 0.0), (-1.0, -2.0), (-30.0, -0.5), (-3.0, -3.0)] {
+            let want = (a.exp() + b.exp()).ln();
+            let got = log_add(a, b);
+            assert!((got - want).abs() < 1e-6, "{a} {b}: {got} vs {want}");
+        }
+        assert_eq!(log_add(f32::NEG_INFINITY, -2.0), -2.0);
+        assert_eq!(log_add(-2.0, f32::NEG_INFINITY), -2.0);
+        assert_eq!(
+            log_add(f32::NEG_INFINITY, f32::NEG_INFINITY),
+            f32::NEG_INFINITY
+        );
+    }
+}

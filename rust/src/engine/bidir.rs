@@ -2,21 +2,27 @@
 //! be constructed by combining two RNNs operating at different
 //! directions").
 //!
-//! For *offline* single-stream workloads (the acceptor / encoder cases)
-//! both directions see the whole sequence, so multi-time-step blocks
-//! apply to each direction independently; outputs are concatenated
-//! per-step: `y_t = [fwd_t ; bwd_t]`.
+//! Two constructions live here:
 //!
-//! Bidirectional models cannot be served incrementally (the backward pass
-//! needs the end of the sequence) — this type is deliberately a
-//! whole-sequence API, unlike the streaming `Engine` trait.
+//! * [`BiDir`] — the *offline* whole-sequence form (acceptor / encoder
+//!   cases): both directions see the entire sequence and outputs are
+//!   concatenated per step, `y_t = [fwd_t ; bwd_t]`.  Deliberately a
+//!   whole-sequence API: the backward pass needs the end of the
+//!   sequence, so this form cannot be served incrementally.
+//! * [`ChunkedBidir`] — the *servable* form: a [`RecurrentLayer`] whose
+//!   backward direction runs over each dispatched block ("chunk") in
+//!   isolation, so lookahead — and therefore serving latency — is
+//!   bounded by the block size.  Within a chunk the backward features
+//!   are exactly the whole-sequence ones for a sequence ending at the
+//!   chunk boundary (`tests/bidir_parity.rs` pins this bitwise).
 //!
 //! Each direction is an ordinary engine and therefore owns its own
 //! [`crate::linalg::PackedGemm`] weights: both directions' gate GEMMs run
 //! on the packed SIMD path with the fused epilogue, and packing happens
 //! once per direction at construction (not per sequence).
 
-use crate::engine::Engine;
+use crate::engine::{check_io, Engine, RecurrentLayer};
+use crate::models::config::StateLayout;
 
 /// Two engines of identical geometry run in opposite directions.
 pub struct BiDir<E: Engine> {
@@ -88,6 +94,161 @@ impl<E: Engine> BiDir<E> {
         let blocks_b = steps.div_ceil(self.bwd.block_size());
         per_block_f * blocks_f + per_block_b * blocks_b
     }
+}
+
+/// How far [`ChunkedBidir`]'s `min_wavefront_width` pushes the stack's
+/// sub-blocking threshold: effectively infinite, so (a) the wavefront
+/// scheduler never splits a dispatched block (a sub-block would shrink
+/// the backward direction's chunk and change the numbers), and (b)
+/// `NativeStack::batch_is_bit_exact` reports false, keeping the
+/// coordinator on the per-session dispatch path where every stream's
+/// chunk is exactly its own dispatch.  `usize::MAX / 4` leaves headroom
+/// for the scheduler's arithmetic.
+const CHUNK_ATOMIC: usize = usize::MAX / 4;
+
+/// Chunked-bidirectional [`RecurrentLayer`] (the `:bi` layer modifier):
+/// two full `H -> H` engines of the same kind run in opposite directions
+/// over each *call*, and their outputs merge by elementwise sum, so the
+/// layer keeps the stack's uniform width and composes with any
+/// neighbour.
+///
+/// Semantics — unlike every other engine, the call granularity matters:
+///
+/// * the **forward** direction streams normally (state carried across
+///   calls; this layer's persistent state *is* the forward state);
+/// * the **backward** direction is reset at the start of every call and
+///   scans the call's frames from the end — each `run_sequence` call is
+///   one lookahead chunk.
+///
+/// Served through `NativeStack`, one coordinator dispatch = one chunk:
+/// `serve --block N` bounds the bidirectional lookahead (and the added
+/// latency) to `N` frames.  A sequence processed as one single call is
+/// bit-identical to whole-sequence [`BiDir`] execution with summed
+/// halves.
+pub struct ChunkedBidir {
+    fwd: Box<dyn RecurrentLayer>,
+    bwd: Box<dyn RecurrentLayer>,
+    /// Scratch (grown on demand, then reused).
+    rev_x: Vec<f32>,
+    fwd_out: Vec<f32>,
+    bwd_out: Vec<f32>,
+}
+
+impl ChunkedBidir {
+    /// Wrap two direction engines of identical square geometry.
+    pub fn new(
+        fwd: Box<dyn RecurrentLayer>,
+        bwd: Box<dyn RecurrentLayer>,
+    ) -> Result<ChunkedBidir, String> {
+        if fwd.hidden() != bwd.hidden() || fwd.input() != bwd.input() {
+            return Err(format!(
+                "bidir direction geometry mismatch: fwd {}x{}, bwd {}x{}",
+                fwd.hidden(),
+                fwd.input(),
+                bwd.hidden(),
+                bwd.input()
+            ));
+        }
+        if fwd.hidden() != fwd.input() {
+            return Err(format!(
+                "bidir directions must be square (stack layers are H -> H), got {}x{}",
+                fwd.hidden(),
+                fwd.input()
+            ));
+        }
+        Ok(ChunkedBidir {
+            fwd,
+            bwd,
+            rev_x: Vec::new(),
+            fwd_out: Vec::new(),
+            bwd_out: Vec::new(),
+        })
+    }
+}
+
+impl Engine for ChunkedBidir {
+    fn arch(&self) -> &'static str {
+        "bidir"
+    }
+
+    fn hidden(&self) -> usize {
+        self.fwd.hidden()
+    }
+
+    fn input(&self) -> usize {
+        self.fwd.input()
+    }
+
+    fn block_size(&self) -> usize {
+        self.fwd.block_size()
+    }
+
+    /// One call = one chunk: forward streams on from its carried state,
+    /// backward scans these `steps` frames from the end (fresh state),
+    /// outputs sum per step.
+    fn run_sequence(&mut self, x: &[f32], steps: usize, out: &mut [f32]) {
+        let (d, h) = (self.input(), self.hidden());
+        check_io(x, steps, d, out, h);
+        if self.rev_x.len() < steps * d {
+            self.rev_x.resize(steps * d, 0.0);
+            self.fwd_out.resize(steps * h, 0.0);
+            self.bwd_out.resize(steps * h, 0.0);
+        }
+        self.fwd.run_sequence(x, steps, &mut self.fwd_out[..steps * h]);
+        for s in 0..steps {
+            self.rev_x[s * d..(s + 1) * d]
+                .copy_from_slice(&x[(steps - 1 - s) * d..(steps - s) * d]);
+        }
+        self.bwd.reset();
+        let rev = &self.rev_x[..steps * d];
+        self.bwd.run_sequence(rev, steps, &mut self.bwd_out[..steps * h]);
+        for s in 0..steps {
+            let f = &self.fwd_out[s * h..(s + 1) * h];
+            let b = &self.bwd_out[(steps - 1 - s) * h..(steps - s) * h];
+            for (o, (&fv, &bv)) in out[s * h..(s + 1) * h].iter_mut().zip(f.iter().zip(b)) {
+                *o = fv + bv;
+            }
+        }
+    }
+
+    fn reset(&mut self) {
+        self.fwd.reset();
+        self.bwd.reset();
+    }
+
+    fn weight_bytes_per_block(&self) -> usize {
+        self.fwd.weight_bytes_per_block() + self.bwd.weight_bytes_per_block()
+    }
+}
+
+impl RecurrentLayer for ChunkedBidir {
+    /// Only the forward direction persists across chunks — the backward
+    /// direction restarts per call, so the layer's session state layout
+    /// equals its unidirectional twin's (pinned in config tests).
+    fn state_layout(&self) -> StateLayout {
+        self.fwd.state_layout()
+    }
+
+    fn load_state(&mut self, slots: &[Vec<f32>]) {
+        self.fwd.load_state(slots);
+    }
+
+    fn save_state(&self, slots: &mut [Vec<f32>]) {
+        self.fwd.save_state(slots);
+    }
+
+    fn weight_bytes_for_block(&self, t: usize) -> usize {
+        self.fwd.weight_bytes_for_block(t) + self.bwd.weight_bytes_for_block(t)
+    }
+
+    /// A chunk must never be subdivided — the backward direction's
+    /// context is the chunk.  See [`CHUNK_ATOMIC`].
+    fn min_wavefront_width(&self) -> usize {
+        CHUNK_ATOMIC
+    }
+
+    // `run_segments` keeps the default per-stream loop: each stream's
+    // segment is exactly its own dispatch, i.e. its own chunk.
 }
 
 #[cfg(test)]
@@ -178,5 +339,143 @@ mod tests {
         let bi = BiDir::new(f, b);
         let one_dir = 3 * 8 * 8 * 4; // [3H, D] f32
         assert_eq!(bi.weight_bytes_per_sequence(8), 2 * 2 * one_dir);
+    }
+
+    fn chunked(h: usize, t: usize, seeds: (u64, u64)) -> ChunkedBidir {
+        let cfg = ModelConfig {
+            arch: Arch::Sru,
+            hidden: h,
+            input: h,
+        };
+        let f = SruParams::init(&cfg, &mut Rng::new(seeds.0));
+        let b = SruParams::init(&cfg, &mut Rng::new(seeds.1));
+        ChunkedBidir::new(
+            Box::new(SruEngine::new(f, t)),
+            Box::new(SruEngine::new(b, t)),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn one_call_matches_whole_sequence_bidir_summed() {
+        // A single ChunkedBidir call IS a whole-sequence bidirectional
+        // pass; merged by sum it must match BiDir bit-for-bit.
+        let (h, steps) = (16, 13);
+        let mut x = vec![0.0; steps * h];
+        Rng::new(8).fill_normal(&mut x, 1.0);
+
+        let (f, b) = engines(h, 4);
+        let mut whole = BiDir::new(f, b);
+        let mut cat = vec![0.0; steps * 2 * h];
+        whole.run_sequence(&x, steps, &mut cat);
+
+        let mut ch = chunked(h, 4, (1, 2)); // same seeds as engines()
+        let mut got = vec![0.0; steps * h];
+        ch.run_sequence(&x, steps, &mut got);
+        for s in 0..steps {
+            for i in 0..h {
+                let want = cat[s * 2 * h + i] + cat[s * 2 * h + h + i];
+                let g = got[s * h + i];
+                assert_eq!(g.to_bits(), want.to_bits(), "step {s} unit {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn forward_streams_backward_restarts_per_chunk() {
+        // Chunked execution (two calls of 6) must equal: forward over
+        // all 12 frames in one engine, backward run per-chunk from zero
+        // state — the reference composition from raw engines.
+        let (h, steps, chunk) = (12, 12, 6);
+        let mut x = vec![0.0; steps * h];
+        Rng::new(21).fill_normal(&mut x, 1.0);
+
+        let mut ch = chunked(h, 3, (5, 6));
+        let mut got = vec![0.0; steps * h];
+        for c0 in (0..steps).step_by(chunk) {
+            let t = chunk.min(steps - c0);
+            let (xs, os) = (&x[c0 * h..(c0 + t) * h], &mut got[c0 * h..(c0 + t) * h]);
+            ch.run_sequence(xs, t, os);
+        }
+
+        let cfg = ModelConfig {
+            arch: Arch::Sru,
+            hidden: h,
+            input: h,
+        };
+        let mut fwd = SruEngine::new(SruParams::init(&cfg, &mut Rng::new(5)), 3);
+        let mut fwd_out = vec![0.0; steps * h];
+        fwd.run_sequence(&x, steps, &mut fwd_out);
+        let mut bwd = SruEngine::new(SruParams::init(&cfg, &mut Rng::new(6)), 3);
+        for c0 in (0..steps).step_by(chunk) {
+            let t = chunk.min(steps - c0);
+            let mut rev = vec![0.0; t * h];
+            for s in 0..t {
+                rev[s * h..(s + 1) * h]
+                    .copy_from_slice(&x[(c0 + t - 1 - s) * h..(c0 + t - s) * h]);
+            }
+            bwd.reset();
+            let mut bo = vec![0.0; t * h];
+            bwd.run_sequence(&rev, t, &mut bo);
+            for s in 0..t {
+                for i in 0..h {
+                    let want = fwd_out[(c0 + s) * h + i] + bo[(t - 1 - s) * h + i];
+                    let g = got[(c0 + s) * h + i];
+                    assert_eq!(g.to_bits(), want.to_bits(), "frame {} unit {i}", c0 + s);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_state_is_forward_only_and_round_trips() {
+        let mut ch = chunked(8, 2, (3, 4));
+        let layout = ch.state_layout();
+        assert_eq!(layout.slot_count(), 1, "sru fwd: just c");
+        assert_eq!(layout.slots[0].len, 8);
+        let mut x = vec![0.0; 4 * 8];
+        Rng::new(9).fill_normal(&mut x, 1.0);
+        let mut out = vec![0.0; 4 * 8];
+        ch.run_sequence(&x, 4, &mut out);
+        let mut slots = vec![vec![0.0; 8]];
+        ch.save_state(&mut slots);
+        assert!(slots[0].iter().any(|&v| v != 0.0));
+        // Re-loading the saved state and re-running the next chunk is
+        // deterministic (bwd state is transient by construction).
+        let mut out_a = vec![0.0; 4 * 8];
+        ch.load_state(&slots);
+        ch.run_sequence(&x, 4, &mut out_a);
+        let mut out_b = vec![0.0; 4 * 8];
+        ch.load_state(&slots);
+        ch.run_sequence(&x, 4, &mut out_b);
+        assert_eq!(out_a, out_b);
+    }
+
+    #[test]
+    fn chunked_rejects_mismatched_directions() {
+        let cfg8 = ModelConfig {
+            arch: Arch::Sru,
+            hidden: 8,
+            input: 8,
+        };
+        let cfg16 = ModelConfig {
+            arch: Arch::Sru,
+            hidden: 16,
+            input: 16,
+        };
+        let f = SruEngine::new(SruParams::init(&cfg8, &mut Rng::new(0)), 2);
+        let b = SruEngine::new(SruParams::init(&cfg16, &mut Rng::new(1)), 2);
+        assert!(ChunkedBidir::new(Box::new(f), Box::new(b)).is_err());
+    }
+
+    #[test]
+    fn chunk_is_atomic_for_the_wavefront() {
+        let ch = chunked(8, 2, (1, 2));
+        // Large enough that any wavefront shape computation degenerates
+        // to the serial path, with headroom for its arithmetic.
+        assert!(ch.min_wavefront_width() > usize::MAX / 8);
+        let one_dir = 3 * 8 * 8 * 4;
+        assert_eq!(ch.weight_bytes_per_block(), 2 * one_dir);
+        assert_eq!(ch.weight_bytes_for_block(1), 2 * one_dir);
     }
 }

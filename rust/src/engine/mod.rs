@@ -27,7 +27,7 @@ pub mod quant;
 pub mod sru;
 pub mod stack;
 
-pub use bidir::BiDir;
+pub use bidir::{BiDir, ChunkedBidir};
 pub use lstm::{LstmEngine, LstmMode};
 pub use qrnn::QrnnEngine;
 pub use quant::{QuantMatrix, QuantSruEngine};
@@ -139,6 +139,24 @@ pub fn build_layer(
     params: &LayerParams,
     max_block: usize,
 ) -> Result<Box<dyn RecurrentLayer>, String> {
+    if spec.bidir {
+        // A bidir layer is two ordinary direction layers of the same
+        // kind wrapped in ChunkedBidir — recursion keeps every cell ×
+        // precision combination available in both directions for free.
+        let uni = spec.direction();
+        return match params {
+            LayerParams::Bidir(f, b) => {
+                let fwd = build_layer(&uni, f, max_block)?;
+                let bwd = build_layer(&uni, b, max_block)?;
+                Ok(Box::new(ChunkedBidir::new(fwd, bwd)?))
+            }
+            other => Err(format!(
+                "layer spec {} cannot be built from {} params",
+                spec.name(),
+                other.kind()
+            )),
+        };
+    }
     match (spec.arch, spec.precision, params) {
         (Arch::Sru, Precision::F32, LayerParams::Sru(p)) => {
             Ok(Box::new(SruEngine::new(p.clone(), max_block)))

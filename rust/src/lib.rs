@@ -21,6 +21,7 @@
 pub mod bench;
 pub mod cli;
 pub mod coordinator;
+pub mod decode;
 pub mod engine;
 pub mod linalg;
 pub mod memsim;

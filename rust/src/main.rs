@@ -13,6 +13,7 @@ use mtsrnn::bench::tables::{
 use mtsrnn::bench::{ascii_plot, write_report, BenchOpts};
 use mtsrnn::cli::{Args, USAGE};
 use mtsrnn::coordinator::{BatchMode, Coordinator, CoordinatorConfig, NativeBackend, PolicyMode};
+use mtsrnn::decode::{render_tokens, CtcDecoder, DecoderSpec};
 use mtsrnn::engine::NativeStack;
 use mtsrnn::memsim::{simulate, SimConfig};
 use mtsrnn::models::config::{Arch, ModelConfig, ModelSize, StackSpec, ASR_QRNN, ASR_SRU};
@@ -47,6 +48,7 @@ fn main() {
         "simulate" => cmd_simulate(&args),
         "parity" => cmd_parity(&args),
         "serve" => cmd_serve(&args),
+        "decode" => cmd_decode(&args),
         "info" => cmd_info(),
         "help" | "--help" | "-h" => {
             println!("{USAGE}");
@@ -227,6 +229,70 @@ fn cmd_parity(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+/// Offline streaming-transcription pipeline: synthetic acoustic frames →
+/// native stack blocks → incremental CTC decode.  The block size is the
+/// streaming chunk (and, for `:bi` stacks, the bidirectional lookahead);
+/// reports frames/sec and time-to-first-partial — the e2e numbers the
+/// transcribe bench sweeps over T.
+fn cmd_decode(args: &Args) -> Result<(), String> {
+    let spec = StackSpec::parse(args.get_or("stack", "sru:f32:512x4"))?;
+    let seed = args.get_usize("seed", 2018)? as u64;
+    let nframes = args.get_usize("frames", 512)?;
+    let block = args.get_usize("block", 16)?;
+    if nframes < 1 || block < 1 {
+        return Err("--frames and --block must be >= 1".into());
+    }
+    let dec_spec = DecoderSpec::parse(args.get_or("decoder", "greedy"))?;
+    let params = StackParams::init(&spec, &mut Rng::new(seed))?;
+    let mut stack = NativeStack::new(&spec, params, block)?;
+    let mut decoder = dec_spec.build(spec.vocab)?;
+    let mut trace = mtsrnn::workload::AsrTrace::new(spec.feat, seed ^ 0xA5);
+    let x = trace.frames(nframes);
+
+    println!(
+        "decode: stack={} decoder={} frames={nframes} block={block} threads={}",
+        spec.name(),
+        dec_spec.name(),
+        mtsrnn::linalg::pool::threads()
+    );
+    let mut state = stack.init_state();
+    let mut logits = vec![0.0; block * spec.vocab];
+    let timer = mtsrnn::util::Timer::start();
+    let mut first_partial_ms: Option<f64> = None;
+    let mut s = 0;
+    while s < nframes {
+        let t = block.min(nframes - s);
+        stack.run_block(
+            &x[s * spec.feat..(s + t) * spec.feat],
+            t,
+            &mut state,
+            &mut logits[..t * spec.vocab],
+        )?;
+        decoder.step(&logits[..t * spec.vocab])?;
+        if first_partial_ms.is_none() && !decoder.partial().is_empty() {
+            first_partial_ms = Some(timer.elapsed_ms());
+        }
+        s += t;
+    }
+    let wall = timer.elapsed_ms();
+    let toks = decoder.partial().to_vec();
+    println!(
+        "{nframes} frames in {wall:.1} ms  ({:.0} frames/s)  time-to-first-partial {}",
+        nframes as f64 / (wall / 1e3),
+        match first_partial_ms {
+            Some(ms) => format!("{ms:.2} ms"),
+            None => "n/a (no tokens)".into(),
+        }
+    );
+    println!(
+        "transcript ({} tokens, score {:.2}): {}",
+        toks.len(),
+        decoder.score(),
+        render_tokens(&toks)
+    );
+    Ok(())
+}
+
 fn cmd_serve(args: &Args) -> Result<(), String> {
     let port = args.get_usize("port", 7433)?;
     let policy = if args.has("adaptive") {
@@ -258,7 +324,8 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
             // (`<arch>:<prec>:<hidden>x<depth>`, see USAGE); the legacy
             // artifact names remain valid aliases.
             let spec = StackSpec::parse(args.get_or("stack", "sru:f32:512x4"))?;
-            let params = StackParams::init(&spec, &mut Rng::new(2018))?;
+            let seed = args.get_usize("seed", 2018)? as u64;
+            let params = StackParams::init(&spec, &mut Rng::new(seed))?;
             let max_block = args.get_usize("max-block", 32)?;
             let stack = NativeStack::new(&spec, params, max_block)?;
             println!(

@@ -240,13 +240,25 @@ impl StateLayout {
     }
 }
 
-/// One layer of a [`StackSpec`]: cell kind + weight precision.  The two
-/// axes are orthogonal (Lei et al. 1709.02755; Rezk et al. 1908.07062) —
-/// every valid combination is a spec, not a new stack type.
+/// One layer of a [`StackSpec`]: cell kind + weight precision +
+/// directionality.  The axes are orthogonal (Lei et al. 1709.02755;
+/// Rezk et al. 1908.07062; paper §2.1 for the bidirectional
+/// construction) — every valid combination is a spec, not a new stack
+/// type.
+///
+/// A `bidir` layer runs two full `H -> H` engines of the same kind in
+/// opposite directions over each dispatched block ("chunk") and merges
+/// their outputs by elementwise sum, so the layer stays `H -> H` and
+/// composes with any neighbour.  The forward direction streams across
+/// chunks like any layer; the backward direction restarts per chunk, so
+/// its lookahead — and the serving latency — is bounded by the block
+/// size (see `engine::ChunkedBidir`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct LayerSpec {
     pub arch: Arch,
     pub precision: Precision,
+    /// Chunked-bidirectional layer (two directions, summed outputs).
+    pub bidir: bool,
 }
 
 impl LayerSpec {
@@ -259,7 +271,11 @@ impl LayerSpec {
                 "precision q8 is only available for sru layers (got {arch}:q8)"
             ));
         }
-        Ok(LayerSpec { arch, precision })
+        Ok(LayerSpec {
+            arch,
+            precision,
+            bidir: false,
+        })
     }
 
     /// Shorthand for the always-valid f32 variant of any arch.
@@ -267,29 +283,58 @@ impl LayerSpec {
         LayerSpec {
             arch,
             precision: Precision::F32,
+            bidir: false,
         }
     }
 
-    /// Parse `"<arch>:<prec>"`, e.g. `sru:f32`, `sru:q8`, `lstm:f32`.
+    /// Builder: the chunked-bidirectional variant of this layer.
+    pub fn bi(mut self) -> LayerSpec {
+        self.bidir = true;
+        self
+    }
+
+    /// The unidirectional spec of one direction of a bidir layer (the
+    /// recursion step used by `engine::build_layer` / `LayerParams`).
+    pub fn direction(&self) -> LayerSpec {
+        LayerSpec {
+            bidir: false,
+            ..*self
+        }
+    }
+
+    /// Parse `"<arch>:<prec>[:bi]"`, e.g. `sru:f32`, `sru:q8`,
+    /// `lstm:f32`, `sru:f32:bi`.
     pub fn parse(s: &str) -> Result<LayerSpec, String> {
-        let (a, p) = s
-            .split_once(':')
-            .ok_or_else(|| format!("layer spec {s:?} must be <arch>:<prec> (e.g. sru:f32)"))?;
+        let (base, bidir) = match s.strip_suffix(":bi") {
+            Some(b) => (b, true),
+            None => (s, false),
+        };
+        let (a, p) = base.split_once(':').ok_or_else(|| {
+            format!("layer spec {s:?} must be <arch>:<prec>[:bi] (e.g. sru:f32)")
+        })?;
         let arch = Arch::parse(a)
             .ok_or_else(|| format!("layer spec {s:?}: unknown arch {a:?} (sru|qrnn|lstm)"))?;
         let precision = Precision::parse(p)
             .ok_or_else(|| format!("layer spec {s:?}: unknown precision {p:?} (f32|q8)"))?;
-        LayerSpec::new(arch, precision)
+        let spec = LayerSpec::new(arch, precision)?;
+        Ok(if bidir { spec.bi() } else { spec })
     }
 
     pub fn name(&self) -> String {
-        format!("{}:{}", self.arch, self.precision)
+        if self.bidir {
+            format!("{}:{}:bi", self.arch, self.precision)
+        } else {
+            format!("{}:{}", self.arch, self.precision)
+        }
     }
 
     /// Per-stream state slots of this layer kind, in the order of
     /// `python/compile/model.py::stack_flat_order`: SRU keeps `c`, QRNN
     /// `c` then `xprev`, LSTM `h` then `c`.  Precision does not change
-    /// the state (int8 applies to weights only).
+    /// the state (int8 applies to weights only), and neither does
+    /// `bidir`: only the forward direction streams across blocks — the
+    /// backward direction restarts from zero state on every chunk, so it
+    /// carries nothing between dispatches.
     pub fn state_layout(&self, hidden: usize) -> StateLayout {
         match self.arch {
             Arch::Sru => StateLayout::new().slot("c", hidden),
@@ -298,14 +343,20 @@ impl LayerSpec {
         }
     }
 
-    /// Trainable parameters of one square (`input == hidden`) layer.
+    /// Trainable parameters of one square (`input == hidden`) layer
+    /// (both directions for a bidir layer).
     pub fn param_count(&self, hidden: usize) -> usize {
-        ModelConfig {
+        let one = ModelConfig {
             arch: self.arch,
             hidden,
             input: hidden,
         }
-        .param_count()
+        .param_count();
+        if self.bidir {
+            2 * one
+        } else {
+            one
+        }
     }
 }
 
@@ -315,13 +366,16 @@ impl LayerSpec {
 /// grammar:
 ///
 /// ```text
-/// <arch>:<prec>:<hidden>x<depth>[,feat=N][,vocab=N][,l<i>=<arch>:<prec>]
+/// <arch>:<prec>[:bi]:<hidden>x<depth>[,feat=N][,vocab=N][,l<i>=<arch>:<prec>[:bi]]
 /// ```
 ///
 /// Examples: `sru:f32:512x4` (the ASR_SRU stack), `lstm:f32:512x4`,
 /// `sru:q8:512x4` (int8 weights), `sru:f32:512x4,l3=sru:q8` (mixed
-/// precision: int8 final layer).  The artifact-style names
-/// `asr_sru_512x4` / `asr_qrnn_512x4` are accepted as aliases.
+/// precision: int8 final layer), `sru:f32:bi:512x4` (chunked
+/// bidirectional — fwd+bwd per dispatched block, summed),
+/// `sru:f32:512x4,l0=sru:f32:bi` (bidir first layer only).  The
+/// artifact-style names `asr_sru_512x4` / `asr_qrnn_512x4` are accepted
+/// as aliases.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct StackSpec {
     pub feat: usize,
@@ -387,14 +441,21 @@ impl StackSpec {
         let mut parts = s.split(',');
         let base = parts.next().unwrap_or_default();
         let seg: Vec<&str> = base.split(':').collect();
-        if seg.len() != 3 {
-            return Err(format!(
-                "stack spec {s:?}: base must be <arch>:<prec>:<hidden>x<depth> (e.g. sru:f32:512x4)"
-            ));
-        }
-        let layer = LayerSpec::parse(&format!("{}:{}", seg[0], seg[1]))?;
-        let (h, d) = seg[2].split_once('x').ok_or_else(|| {
-            format!("stack spec {s:?}: dims {:?} must be <hidden>x<depth>", seg[2])
+        // Base is <arch>:<prec>:<dims> or <arch>:<prec>:bi:<dims>.
+        let (layer, dims) = match seg.len() {
+            3 => (LayerSpec::parse(&format!("{}:{}", seg[0], seg[1]))?, seg[2]),
+            4 if seg[2] == "bi" => (
+                LayerSpec::parse(&format!("{}:{}:bi", seg[0], seg[1]))?,
+                seg[3],
+            ),
+            _ => {
+                return Err(format!(
+                    "stack spec {s:?}: base must be <arch>:<prec>[:bi]:<hidden>x<depth> (e.g. sru:f32:512x4)"
+                ))
+            }
+        };
+        let (h, d) = dims.split_once('x').ok_or_else(|| {
+            format!("stack spec {s:?}: dims {dims:?} must be <hidden>x<depth>")
         })?;
         let hidden: usize = h
             .parse()
@@ -461,10 +522,7 @@ impl StackSpec {
             .layers
             .first()
             .copied()
-            .unwrap_or(LayerSpec {
-                arch: Arch::Sru,
-                precision: Precision::F32,
-            });
+            .unwrap_or_else(|| LayerSpec::f32(Arch::Sru));
         let mut out = format!("{}:{}x{}", base.name(), self.hidden, self.layers.len());
         if self.feat != ASR_FEAT {
             out.push_str(&format!(",feat={}", self.feat));
@@ -689,6 +747,34 @@ mod tests {
         );
         assert_eq!(spec.state_lens(), vec![8, 8, 8, 8]);
         assert_eq!(spec.state_bytes(), 4 * 4 * 8);
+    }
+
+    #[test]
+    fn bidir_grammar_and_accounting() {
+        // Base-grammar bidir stack.
+        let s = StackSpec::parse("sru:f32:bi:64x2,feat=8,vocab=5").unwrap();
+        assert!(s.layers.iter().all(|l| l.bidir));
+        assert_eq!(s.name(), "sru:f32:bi:64x2,feat=8,vocab=5");
+        assert_eq!(StackSpec::parse(&s.name()).unwrap(), s);
+        // Per-layer override.
+        let m = StackSpec::parse("sru:f32:64x2,l0=sru:f32:bi").unwrap();
+        assert!(m.layers[0].bidir && !m.layers[1].bidir);
+        assert_eq!(StackSpec::parse(&m.name()).unwrap(), m);
+        // Two directions double the layer params; proj/head unchanged.
+        let uni = StackSpec::parse("sru:f32:64x2,feat=8,vocab=5").unwrap();
+        let layer = 3 * 64 * 64 + 2 * 64;
+        assert_eq!(s.param_count(), uni.param_count() + 2 * layer);
+        // State layout: forward direction only (bwd restarts per chunk),
+        // so bidir is invisible to the session table and python order.
+        assert_eq!(s.state_lens(), uni.state_lens());
+        assert_eq!(s.flat_state_names(), uni.flat_state_names());
+        // q8 directions are legal (sru only), lstm:q8:bi still rejected.
+        assert!(LayerSpec::parse("sru:q8:bi").unwrap().bidir);
+        assert!(LayerSpec::parse("lstm:q8:bi").is_err());
+        assert!(StackSpec::parse("sru:f32:bix:64x2").is_err());
+        // direction() strips the flag and nothing else.
+        let bi = LayerSpec::parse("sru:q8:bi").unwrap();
+        assert_eq!(bi.direction(), LayerSpec::parse("sru:q8").unwrap());
     }
 
     #[test]

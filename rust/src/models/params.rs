@@ -167,11 +167,23 @@ pub enum LayerParams {
     Sru(SruParams),
     Qrnn(QrnnParams),
     Lstm(LstmParams),
+    /// Chunked-bidirectional layer: forward then backward direction,
+    /// each an ordinary (non-bidir) layer of the same kind.
+    Bidir(Box<LayerParams>, Box<LayerParams>),
 }
 
 impl LayerParams {
     /// Fresh seeded parameters for a square (`input == hidden`) layer.
+    /// Bidir layers draw forward then backward — the order is part of
+    /// the seeded-weights contract mirrored by
+    /// `python/compile/ref_stack.py`.
     pub fn init(spec: &LayerSpec, hidden: usize, rng: &mut Rng) -> LayerParams {
+        if spec.bidir {
+            let uni = spec.direction();
+            let fwd = LayerParams::init(&uni, hidden, rng);
+            let bwd = LayerParams::init(&uni, hidden, rng);
+            return LayerParams::Bidir(Box::new(fwd), Box::new(bwd));
+        }
         let cfg = ModelConfig {
             arch: spec.arch,
             hidden,
@@ -184,12 +196,19 @@ impl LayerParams {
         }
     }
 
-    /// Load one layer's tensors from a (scoped) weight bundle.
+    /// Load one layer's tensors from a (scoped) weight bundle.  Bidir
+    /// directions live under `fwd_` / `bwd_` sub-scopes.
     pub fn from_bundle(
         bundle: &Bundle,
         spec: &LayerSpec,
         hidden: usize,
     ) -> Result<LayerParams, String> {
+        if spec.bidir {
+            let uni = spec.direction();
+            let fwd = LayerParams::from_bundle(&bundle.scoped("fwd_"), &uni, hidden)?;
+            let bwd = LayerParams::from_bundle(&bundle.scoped("bwd_"), &uni, hidden)?;
+            return Ok(LayerParams::Bidir(Box::new(fwd), Box::new(bwd)));
+        }
         let cfg = ModelConfig {
             arch: spec.arch,
             hidden,
@@ -207,6 +226,7 @@ impl LayerParams {
             LayerParams::Sru(_) => "sru",
             LayerParams::Qrnn(_) => "qrnn",
             LayerParams::Lstm(_) => "lstm",
+            LayerParams::Bidir(..) => "bidir",
         }
     }
 
@@ -216,11 +236,16 @@ impl LayerParams {
             LayerParams::Sru(p) => (p.hidden(), p.input()),
             LayerParams::Qrnn(p) => (p.hidden(), p.input()),
             LayerParams::Lstm(p) => (p.hidden(), p.input()),
+            LayerParams::Bidir(fwd, _) => fwd.dims(),
         }
     }
 
     /// Stack layers must be square; reported as an error, not a panic.
     pub fn shape_check(&self, hidden: usize) -> Result<(), String> {
+        if let LayerParams::Bidir(fwd, bwd) = self {
+            fwd.shape_check(hidden)?;
+            return bwd.shape_check(hidden);
+        }
         let (h, d) = self.dims();
         if h != hidden || d != hidden {
             return Err(format!(
@@ -341,6 +366,37 @@ mod tests {
         }
         // Bad spec surfaces as Err, never a panic.
         assert!(StackParams::init(&StackSpec::new(4, 8, 3), &mut rng).is_err());
+    }
+
+    #[test]
+    fn bidir_init_draws_fwd_then_bwd() {
+        let spec = LayerSpec::f32(Arch::Sru).bi();
+        let p = LayerParams::init(&spec, 8, &mut Rng::new(5));
+        let LayerParams::Bidir(fwd, bwd) = &p else {
+            panic!("expected bidir params, got {}", p.kind());
+        };
+        // Hand-drawing two uni layers from the same seed must reproduce
+        // both directions (the python fixture generator relies on this).
+        let mut rng = Rng::new(5);
+        let uni = spec.direction();
+        let want_f = LayerParams::init(&uni, 8, &mut rng);
+        let want_b = LayerParams::init(&uni, 8, &mut rng);
+        match (&**fwd, &want_f, &**bwd, &want_b) {
+            (
+                LayerParams::Sru(f),
+                LayerParams::Sru(wf),
+                LayerParams::Sru(b),
+                LayerParams::Sru(wb),
+            ) => {
+                assert_eq!(f.w.data(), wf.w.data());
+                assert_eq!(b.w.data(), wb.w.data());
+                assert_ne!(f.w.data(), b.w.data(), "directions share no weights");
+            }
+            _ => panic!("expected sru directions"),
+        }
+        p.shape_check(8).unwrap();
+        assert!(p.shape_check(16).is_err());
+        assert_eq!(p.dims(), (8, 8));
     }
 
     #[test]

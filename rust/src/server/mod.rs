@@ -6,6 +6,10 @@
 //! OPEN                          -> OK <session-id>
 //! FEED <id> <f0> <f1> ...       -> OK <n-frames-accepted>
 //! POLL <id> <max-frames>        -> OK <n> <v0> <v1> ...   (logits)
+//! DECODE <id> [greedy|beam[:W]] -> OK 0                   (transcribe mode;
+//!                                   attach before the first FEED)
+//! TRANSCRIBE <id> [final]       -> OK <n> <tok0> ...      (partial transcript;
+//!                                   `final` flushes pending frames first)
 //! CLOSE <id>                    -> OK <n> <v0> ...        (final flush)
 //! STATS                         -> OK <summary line>
 //! QUIT                          -> OK bye
@@ -89,6 +93,16 @@ pub fn inference_loop<B: BlockBackend>(
                     Ok(v) => Response::Logits(v),
                     Err(e) => Response::Err(e),
                 },
+                Request::Decode(id, spec) => match coordinator.set_decoder(id, spec) {
+                    Ok(()) => Response::Accepted(0),
+                    Err(e) => Response::Err(e),
+                },
+                Request::Transcribe(id, finalize) => {
+                    match coordinator.transcript(id, finalize) {
+                        Ok(toks) => Response::Tokens(toks),
+                        Err(e) => Response::Err(e),
+                    }
+                }
                 Request::Close(id) => match coordinator.close(id) {
                     Ok(v) => Response::Logits(v),
                     Err(e) => Response::Err(e),

@@ -1,12 +1,21 @@
 //! Wire protocol: text lines ⇄ typed requests/responses.
+//!
+//! Every malformed line becomes a typed `Err` string (never a panic):
+//! this module is the first stop of the serve request path.
 
 use crate::coordinator::SessionId;
+use crate::decode::DecoderSpec;
 
 #[derive(Debug, Clone, PartialEq)]
 pub enum Request {
     Open,
     Feed(SessionId, Vec<f32>),
     Poll(SessionId, usize),
+    /// Attach a streaming CTC decoder to a session (transcribe mode).
+    Decode(SessionId, DecoderSpec),
+    /// Fetch the partial transcript; `final` (bool) first flushes the
+    /// session's pending frames so the transcript covers everything fed.
+    Transcribe(SessionId, bool),
     Close(SessionId),
     Stats,
 }
@@ -16,6 +25,9 @@ pub enum Response {
     Opened(SessionId),
     Accepted(usize),
     Logits(Vec<f32>),
+    /// Transcript tokens (class indices; 0 is the CTC blank and never
+    /// appears here).
+    Tokens(Vec<usize>),
     Stats(String),
     Err(String),
 }
@@ -45,6 +57,27 @@ pub fn parse_line(line: &str) -> Result<Request, String> {
                 .map_err(|e| format!("bad max: {e}"))?;
             Ok(Request::Poll(id, max))
         }
+        "DECODE" => {
+            let id = parse_id(it.next())?;
+            let spec = DecoderSpec::parse(it.next().unwrap_or("greedy"))?;
+            if let Some(extra) = it.next() {
+                return Err(format!("unexpected DECODE argument {extra:?}"));
+            }
+            Ok(Request::Decode(id, spec))
+        }
+        "TRANSCRIBE" => {
+            let id = parse_id(it.next())?;
+            let finalize = match it.next() {
+                None => false,
+                Some("final") => true,
+                Some(other) => {
+                    return Err(format!(
+                        "unexpected TRANSCRIBE argument {other:?} (only \"final\")"
+                    ))
+                }
+            };
+            Ok(Request::Transcribe(id, finalize))
+        }
         "CLOSE" => Ok(Request::Close(parse_id(it.next())?)),
         other => Err(format!("unknown command {other:?}")),
     }
@@ -71,6 +104,14 @@ impl Response {
                 }
                 s
             }
+            Response::Tokens(toks) => {
+                let mut s = format!("OK {}", toks.len());
+                for t in toks {
+                    s.push(' ');
+                    s.push_str(&t.to_string());
+                }
+                s
+            }
             Response::Stats(line) => format!("OK {line}"),
             Response::Err(e) => format!("ERR {e}"),
         }
@@ -92,6 +133,26 @@ mod tests {
         assert_eq!(parse_line("POLL 7 16").unwrap(), Request::Poll(7, 16));
         assert_eq!(parse_line("POLL 7").unwrap(), Request::Poll(7, 1_000_000));
         assert_eq!(parse_line("CLOSE 2").unwrap(), Request::Close(2));
+        assert_eq!(
+            parse_line("DECODE 3 greedy").unwrap(),
+            Request::Decode(3, DecoderSpec::Greedy)
+        );
+        assert_eq!(
+            parse_line("DECODE 3").unwrap(),
+            Request::Decode(3, DecoderSpec::Greedy)
+        );
+        assert_eq!(
+            parse_line("DECODE 3 beam:4").unwrap(),
+            Request::Decode(3, DecoderSpec::Beam { width: 4 })
+        );
+        assert_eq!(
+            parse_line("TRANSCRIBE 3").unwrap(),
+            Request::Transcribe(3, false)
+        );
+        assert_eq!(
+            parse_line("TRANSCRIBE 3 final").unwrap(),
+            Request::Transcribe(3, true)
+        );
     }
 
     #[test]
@@ -103,6 +164,12 @@ mod tests {
         assert!(parse_line("FEED 1").is_err());
         assert!(parse_line("FEED 1 abc").is_err());
         assert!(parse_line("POLL").is_err());
+        assert!(parse_line("DECODE").is_err());
+        assert!(parse_line("DECODE 1 viterbi").is_err());
+        assert!(parse_line("DECODE 1 beam:0").is_err());
+        assert!(parse_line("DECODE 1 greedy extra").is_err());
+        assert!(parse_line("TRANSCRIBE").is_err());
+        assert!(parse_line("TRANSCRIBE 1 partial").is_err());
     }
 
     #[test]
@@ -114,6 +181,8 @@ mod tests {
             "OK 2 1 -0.5"
         );
         assert_eq!(Response::Err("nope".into()).encode(), "ERR nope");
+        assert_eq!(Response::Tokens(vec![3, 1, 4]).encode(), "OK 3 3 1 4");
+        assert_eq!(Response::Tokens(vec![]).encode(), "OK 0");
     }
 
     #[test]

@@ -11,6 +11,9 @@
 //!   correlation of real acoustic features.
 //! * [`TokenStream`] — integer token ids with a Zipf-ish distribution for
 //!   the text/sentiment acceptor example (embedded via a fixed table).
+//! * [`CtcEmission`] — a synthetic CTC posterior stream with a known
+//!   ground-truth transcript, for exercising the decode subsystem
+//!   (property tests, decoder benches) without a trained model.
 
 use crate::util::Rng;
 
@@ -147,6 +150,77 @@ impl TokenStream {
     }
 }
 
+/// Synthetic CTC emission: a random target token sequence rendered as a
+/// frame-level logit stream a CTC decoder can recover exactly.
+///
+/// Alignment model: each target token occupies 1–3 frames, optionally
+/// followed by 0–2 blank frames; consecutive *equal* tokens always get a
+/// separating blank (otherwise they would collapse).  Per frame, the
+/// aligned label's logit is `margin` and every other class draws
+/// `N(0, 1)` — posteriors are peaked, so greedy decoding (and any beam)
+/// recovers the target, with enough per-frame noise to exercise real
+/// score arithmetic.
+#[derive(Debug)]
+pub struct CtcEmission {
+    vocab: usize,
+    target: Vec<usize>,
+    logits: Vec<f32>,
+}
+
+impl CtcEmission {
+    /// `vocab` classes (class 0 = blank), `tokens` target symbols,
+    /// seeded; `margin` is the aligned-label logit (≥ 6.0 keeps the
+    /// argmax unambiguous against the N(0,1) distractors).
+    pub fn new(vocab: usize, tokens: usize, margin: f32, seed: u64) -> Self {
+        assert!(vocab >= 2, "ctc needs blank + at least one symbol");
+        let mut rng = Rng::new(seed);
+        let mut target = Vec::with_capacity(tokens);
+        for _ in 0..tokens {
+            target.push(1 + rng.below(vocab as u64 - 1) as usize);
+        }
+        let mut labels: Vec<usize> = Vec::new();
+        for (i, &tok) in target.iter().enumerate() {
+            if i > 0 && target[i - 1] == tok && *labels.last().unwrap_or(&0) != 0 {
+                labels.push(0); // mandatory blank between equal tokens
+            }
+            for _ in 0..1 + rng.below(3) {
+                labels.push(tok);
+            }
+            for _ in 0..rng.below(3) {
+                labels.push(0);
+            }
+        }
+        let mut logits = vec![0.0; labels.len() * vocab];
+        rng.fill_normal(&mut logits, 1.0);
+        for (s, &k) in labels.iter().enumerate() {
+            logits[s * vocab + k] = margin;
+        }
+        Self {
+            vocab,
+            target,
+            logits,
+        }
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    /// Ground-truth transcript.
+    pub fn target(&self) -> &[usize] {
+        &self.target
+    }
+
+    /// Frame-level logits, time-major `[frames, vocab]`.
+    pub fn logits(&self) -> &[f32] {
+        &self.logits
+    }
+
+    pub fn frames(&self) -> usize {
+        self.logits.len() / self.vocab
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -195,6 +269,23 @@ mod tests {
         }
         assert!(counts[0] > counts[10], "head token should dominate");
         assert!(counts[0] > counts[50] * 5);
+    }
+
+    #[test]
+    fn ctc_emission_is_decodable_and_deterministic() {
+        use crate::decode::{CtcDecoder, CtcGreedy};
+        for seed in [1u64, 7, 42] {
+            let e = CtcEmission::new(6, 12, 8.0, seed);
+            assert_eq!(e.target().len(), 12);
+            assert!(e.frames() >= 12, "at least one frame per token");
+            assert!(e.target().iter().all(|&t| t >= 1 && t < 6), "no blanks");
+            let mut d = CtcGreedy::new(6);
+            d.step(e.logits()).unwrap();
+            assert_eq!(d.partial(), e.target(), "seed {seed}");
+            // Deterministic.
+            let e2 = CtcEmission::new(6, 12, 8.0, seed);
+            assert_eq!(e.logits(), e2.logits());
+        }
     }
 
     #[test]

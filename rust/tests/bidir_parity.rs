@@ -1,0 +1,283 @@
+//! Property tests for the chunked-bidir execution path and the decoder
+//! invariants, all driven by the `util/prng` generator.
+//!
+//! Bidir contract (paper §2.1 + the chunked serving construction):
+//! a `ChunkedBidir` call over `t` frames is exactly a whole-sequence
+//! [`BiDir`] pass over those frames with summed halves — so within a
+//! chunk's valid region the new path inherits PR 3's bit-exactness.
+//! Across chunks only the forward direction carries state.
+//!
+//! Decoder invariants: `greedy ≡ beam@width=1` on peaked posteriors,
+//! beam mass monotone non-increasing (pruning only discards
+//! probability), and streaming ≡ one-shot bitwise.
+
+use mtsrnn::decode::{CtcBeam, CtcDecoder, CtcGreedy};
+use mtsrnn::engine::{BiDir, ChunkedBidir, Engine, NativeStack, QrnnEngine, SruEngine};
+use mtsrnn::models::config::{Arch, ModelConfig, StackSpec};
+use mtsrnn::models::{QrnnParams, SruParams, StackParams};
+use mtsrnn::util::Rng;
+use mtsrnn::workload::CtcEmission;
+
+fn sru(h: usize, t: usize, seed: u64) -> SruEngine {
+    let cfg = ModelConfig {
+        arch: Arch::Sru,
+        hidden: h,
+        input: h,
+    };
+    SruEngine::new(SruParams::init(&cfg, &mut Rng::new(seed)), t)
+}
+
+fn qrnn(h: usize, t: usize, seed: u64) -> QrnnEngine {
+    let cfg = ModelConfig {
+        arch: Arch::Qrnn,
+        hidden: h,
+        input: h,
+    };
+    QrnnEngine::new(QrnnParams::init(&cfg, &mut Rng::new(seed)), t)
+}
+
+/// One-call ChunkedBidir == whole-sequence BiDir (summed halves),
+/// bitwise, across random shapes and both stackable cell kinds.
+#[test]
+fn chunked_equals_whole_sequence_bidir_within_a_chunk() {
+    let mut shapes = Rng::new(0xB1D1);
+    for case in 0..12u64 {
+        let h = 4 + 4 * shapes.below(6) as usize; // 4..24
+        let steps = 1 + shapes.below(20) as usize; // 1..20
+        let tb = 1 + shapes.below(8) as usize; // engine block size
+        let qrnn_case = case % 2 == 1;
+
+        let mut x = vec![0.0; steps * h];
+        Rng::new(100 + case).fill_normal(&mut x, 1.0);
+        let (mut cat, mut got) = (vec![0.0; steps * 2 * h], vec![0.0; steps * h]);
+        if qrnn_case {
+            let mut whole = BiDir::new(qrnn(h, tb, 1 + case), qrnn(h, tb, 2 + case));
+            whole.run_sequence(&x, steps, &mut cat);
+            let mut ch = ChunkedBidir::new(
+                Box::new(qrnn(h, tb, 1 + case)),
+                Box::new(qrnn(h, tb, 2 + case)),
+            )
+            .unwrap();
+            ch.run_sequence(&x, steps, &mut got);
+        } else {
+            let mut whole = BiDir::new(sru(h, tb, 1 + case), sru(h, tb, 2 + case));
+            whole.run_sequence(&x, steps, &mut cat);
+            let mut ch = ChunkedBidir::new(
+                Box::new(sru(h, tb, 1 + case)),
+                Box::new(sru(h, tb, 2 + case)),
+            )
+            .unwrap();
+            ch.run_sequence(&x, steps, &mut got);
+        }
+        for s in 0..steps {
+            for i in 0..h {
+                let want = cat[s * 2 * h + i] + cat[s * 2 * h + h + i];
+                let g = got[s * h + i];
+                assert_eq!(
+                    g.to_bits(),
+                    want.to_bits(),
+                    "case {case} (qrnn={qrnn_case}) h={h} steps={steps} tb={tb} s={s} i={i}"
+                );
+            }
+        }
+    }
+}
+
+/// Multi-chunk streams: forward state carries across chunks exactly
+/// (equal to one uninterrupted forward pass), backward context is the
+/// chunk — checked against a reference composed from raw engines.
+#[test]
+fn multi_chunk_reference_parity_random_chunkings() {
+    let mut shapes = Rng::new(0xC0DE);
+    for case in 0..8u64 {
+        let h = 8 + 4 * shapes.below(3) as usize;
+        let steps = 10 + shapes.below(30) as usize;
+        let mut x = vec![0.0; steps * h];
+        Rng::new(500 + case).fill_normal(&mut x, 1.0);
+
+        // Random chunk split of `steps`.
+        let mut chunks = Vec::new();
+        let mut rest = steps;
+        while rest > 0 {
+            let c = (1 + shapes.below(9) as usize).min(rest);
+            chunks.push(c);
+            rest -= c;
+        }
+
+        let mut ch =
+            ChunkedBidir::new(Box::new(sru(h, 4, 31 + case)), Box::new(sru(h, 4, 32 + case)))
+                .unwrap();
+        let mut got = vec![0.0; steps * h];
+        let mut off = 0;
+        for &c in &chunks {
+            ch.run_sequence(
+                &x[off * h..(off + c) * h],
+                c,
+                &mut got[off * h..(off + c) * h],
+            );
+            off += c;
+        }
+
+        // Reference: one uninterrupted forward pass + per-chunk backward
+        // passes from zero state.
+        let mut fwd = sru(h, 4, 31 + case);
+        let mut fwd_out = vec![0.0; steps * h];
+        fwd.run_sequence(&x, steps, &mut fwd_out);
+        let mut bwd = sru(h, 4, 32 + case);
+        let mut off = 0;
+        for &c in &chunks {
+            let mut rev = vec![0.0; c * h];
+            for s in 0..c {
+                rev[s * h..(s + 1) * h]
+                    .copy_from_slice(&x[(off + c - 1 - s) * h..(off + c - s) * h]);
+            }
+            bwd.reset();
+            let mut bo = vec![0.0; c * h];
+            bwd.run_sequence(&rev, c, &mut bo);
+            for s in 0..c {
+                for i in 0..h {
+                    let want = fwd_out[(off + s) * h + i] + bo[(c - 1 - s) * h + i];
+                    let g = got[(off + s) * h + i];
+                    assert_eq!(
+                        g.to_bits(),
+                        want.to_bits(),
+                        "case {case} chunks {chunks:?} frame {} unit {i}",
+                        off + s
+                    );
+                }
+            }
+            off += c;
+        }
+    }
+}
+
+/// Stack-level semantics: for a unidirectional stack the dispatch split
+/// is invisible; for a chunked-bidir stack the chunk *is* the lookahead,
+/// so different chunkings legitimately produce different logits.
+#[test]
+fn chunk_size_matters_exactly_when_bidir() {
+    let run = |spec_str: &str, blocks: &[usize]| -> Vec<f32> {
+        let spec = StackSpec::parse(spec_str).unwrap();
+        let params = StackParams::init(&spec, &mut Rng::new(7)).unwrap();
+        let steps: usize = blocks.iter().sum();
+        let mut stack = NativeStack::new(&spec, params, steps).unwrap();
+        let mut state = stack.init_state();
+        let mut x = vec![0.0; steps * spec.feat];
+        Rng::new(77).fill_normal(&mut x, 1.0);
+        let mut out = vec![0.0; steps * spec.vocab];
+        let mut off = 0;
+        for &b in blocks {
+            stack
+                .run_block(
+                    &x[off * spec.feat..(off + b) * spec.feat],
+                    b,
+                    &mut state,
+                    &mut out[off * spec.vocab..(off + b) * spec.vocab],
+                )
+                .unwrap();
+            off += b;
+        }
+        out
+    };
+    for spec in ["sru:f32:16x2,feat=8,vocab=6", "sru:f32:bi:16x2,feat=8,vocab=6"] {
+        let fine = run(spec, &[6, 6, 6]);
+        let coarse = run(spec, &[18]);
+        let max_d = fine
+            .iter()
+            .zip(&coarse)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        if spec.contains(":bi") {
+            assert!(
+                max_d > 1e-3,
+                "bidir lookahead must depend on the chunking (max diff {max_d})"
+            );
+        } else {
+            assert!(
+                max_d < 1e-4,
+                "uni stacks must be dispatch-split invariant (max diff {max_d})"
+            );
+        }
+    }
+}
+
+/// greedy ≡ beam@width=1 on peaked posteriors, for many seeds, and both
+/// recover the generator's ground-truth transcript.
+#[test]
+fn greedy_equals_beam_width_one_on_peaked_posteriors() {
+    for seed in 0..20u64 {
+        let e = CtcEmission::new(6, 10, 8.0, seed);
+        let mut g = CtcGreedy::new(6);
+        g.step(e.logits()).unwrap();
+        let mut b1 = CtcBeam::new(6, 1);
+        b1.step(e.logits()).unwrap();
+        assert_eq!(g.partial(), b1.partial(), "seed {seed}");
+        assert_eq!(g.partial(), e.target(), "seed {seed}: target recovery");
+        for width in [2usize, 4, 8] {
+            let mut b = CtcBeam::new(6, width);
+            b.step(e.logits()).unwrap();
+            assert_eq!(b.partial(), e.target(), "seed {seed} width {width}");
+        }
+    }
+}
+
+/// The tracked probability mass of the beam is monotone non-increasing
+/// frame over frame — on arbitrary (non-peaked) posteriors, where
+/// pruning genuinely discards mass.
+#[test]
+fn beam_mass_monotone_on_random_posteriors() {
+    for seed in 0..6u64 {
+        let vocab = 5;
+        let frames = 40;
+        let mut logits = vec![0.0; frames * vocab];
+        Rng::new(900 + seed).fill_normal(&mut logits, 2.0);
+        let mut d = CtcBeam::new(vocab, 3);
+        let mut prev = d.mass();
+        assert_eq!(prev, 0.0);
+        for f in logits.chunks_exact(vocab) {
+            d.step(f).unwrap();
+            let m = d.mass();
+            assert!(
+                m <= prev + 1e-5,
+                "seed {seed}: mass grew {prev} -> {m} at frame {}",
+                d.frames_decoded()
+            );
+            prev = m;
+        }
+        assert!(prev < 0.0, "40 random frames must have lost some mass");
+    }
+}
+
+/// Streaming ≡ one-shot, bitwise, for both decoders on random
+/// posteriors and random slab boundaries.
+#[test]
+fn streaming_equals_one_shot_bitwise() {
+    let mut slabs = Rng::new(0x51AB);
+    for seed in 0..6u64 {
+        let vocab = 7;
+        let frames = 30;
+        let mut logits = vec![0.0; frames * vocab];
+        Rng::new(700 + seed).fill_normal(&mut logits, 1.5);
+
+        let mut g_one = CtcGreedy::new(vocab);
+        g_one.step(&logits).unwrap();
+        let mut b_one = CtcBeam::new(vocab, 4);
+        b_one.step(&logits).unwrap();
+
+        let mut g_inc = CtcGreedy::new(vocab);
+        let mut b_inc = CtcBeam::new(vocab, 4);
+        let mut off = 0;
+        while off < frames {
+            let t = (1 + slabs.below(7) as usize).min(frames - off);
+            let slab = &logits[off * vocab..(off + t) * vocab];
+            g_inc.step(slab).unwrap();
+            b_inc.step(slab).unwrap();
+            off += t;
+        }
+        assert_eq!(g_one.partial(), g_inc.partial(), "seed {seed}");
+        assert_eq!(g_one.score().to_bits(), g_inc.score().to_bits());
+        assert_eq!(b_one.partial(), b_inc.partial(), "seed {seed}");
+        assert_eq!(b_one.score().to_bits(), b_inc.score().to_bits());
+        assert_eq!(b_one.mass().to_bits(), b_inc.mass().to_bits());
+    }
+}

@@ -1,0 +1,216 @@
+//! Cross-language golden-vector conformance suite.
+//!
+//! Fixtures in `tests/golden/` are emitted by
+//! `python/compile/make_fixtures.py` (numpy reference; CI regenerates
+//! them and fails on drift).  Contract:
+//!
+//! * **weights** — bit-identical: the fixture's probe values must match
+//!   the seeded `StackParams::init` chain exactly (the python `rng_ref`
+//!   module mirrors the crate's Xoshiro256** draw-for-draw);
+//! * **transcripts** (token sequences) — bit-identical: the fixture
+//!   generator enforces a per-frame argmax margin far above the float
+//!   tolerance, so any correct implementation must produce the same
+//!   tokens;
+//! * **logits / scores** — within the fixture's tolerance (GEMM
+//!   accumulation order and fastmath transcendentals differ ~1e-6).
+//!
+//! The stack fixtures run through the full serving path — coordinator
+//! with `--batch auto` semantics, DECODE-before-FEED, TRANSCRIBE final
+//! — for both the unidirectional SRU stack and the chunked-bidir stack,
+//! exactly the acceptance scenario.  CI runs this file at
+//! MTSRNN_THREADS=1 and 4; PR 3's bit-exactness guarantee (and the
+//! chunk-atomicity of bidir layers) makes both thread counts identical.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use mtsrnn::coordinator::{BatchMode, Coordinator, CoordinatorConfig, NativeBackend, PolicyMode};
+use mtsrnn::decode::{CtcBeam, CtcDecoder, CtcGreedy, DecoderSpec};
+use mtsrnn::engine::NativeStack;
+use mtsrnn::models::config::StackSpec;
+use mtsrnn::models::StackParams;
+use mtsrnn::util::{Json, Rng};
+
+fn load(name: &str) -> Json {
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/golden")
+        .join(name);
+    let text = std::fs::read_to_string(&path).unwrap_or_else(|e| {
+        panic!(
+            "read {}: {e} (regenerate with make_fixtures.py)",
+            path.display()
+        )
+    });
+    Json::parse(&text).unwrap_or_else(|e| panic!("{name}: {e}"))
+}
+
+fn f32s(j: &Json, key: &str) -> Vec<f32> {
+    j.get(key)
+        .and_then(Json::as_arr)
+        .unwrap_or_else(|| panic!("fixture missing array {key:?}"))
+        .iter()
+        .map(|v| v.as_f64().expect("number") as f32)
+        .collect()
+}
+
+fn tokens(j: &Json, key: &str) -> Vec<usize> {
+    j.get(key)
+        .and_then(Json::as_arr)
+        .unwrap_or_else(|| panic!("fixture missing array {key:?}"))
+        .iter()
+        .map(|v| v.as_usize().expect("token index"))
+        .collect()
+}
+
+fn f64_field(j: &Json, key: &str) -> f64 {
+    j.get(key)
+        .and_then(Json::as_f64)
+        .unwrap_or_else(|| panic!("fixture missing {key:?}"))
+}
+
+#[test]
+fn greedy_decoder_matches_python_reference() {
+    let fx = load("decode_greedy.json");
+    let vocab = fx.usize_field("vocab").unwrap();
+    let logits = f32s(&fx, "logits");
+    let want = tokens(&fx, "tokens");
+    let want_score = f64_field(&fx, "score") as f32;
+
+    // One-shot.
+    let mut d = CtcGreedy::new(vocab);
+    d.step(&logits).unwrap();
+    assert_eq!(d.partial(), want.as_slice(), "greedy transcript drifted");
+    assert!(
+        (d.score() - want_score).abs() < 1e-2,
+        "score {} vs reference {want_score}",
+        d.score()
+    );
+
+    // Incremental in uneven slabs — same transcript, same score bits.
+    let mut inc = CtcGreedy::new(vocab);
+    for slab in logits.chunks(vocab * 5) {
+        inc.step(slab).unwrap();
+    }
+    assert_eq!(inc.partial(), want.as_slice());
+    assert_eq!(inc.score().to_bits(), d.score().to_bits());
+}
+
+#[test]
+fn beam_decoder_matches_python_reference_at_all_widths() {
+    let fx = load("decode_beam.json");
+    let vocab = fx.usize_field("vocab").unwrap();
+    let logits = f32s(&fx, "logits");
+    let beams = fx.get("beams").and_then(Json::as_arr).expect("beams");
+    assert!(!beams.is_empty());
+    for entry in beams {
+        let width = entry.usize_field("width").unwrap();
+        let want = tokens(entry, "tokens");
+        let want_score = f64_field(entry, "score") as f32;
+        let mut d = CtcBeam::new(vocab, width);
+        d.step(&logits).unwrap();
+        assert_eq!(
+            d.partial(),
+            want.as_slice(),
+            "beam width {width} transcript drifted"
+        );
+        assert!(
+            (d.score() - want_score).abs() < 1e-2,
+            "width {width}: score {} vs reference {want_score}",
+            d.score()
+        );
+    }
+}
+
+/// Serve one stack fixture through the coordinator (the `serve --batch
+/// auto` configuration) and assert the acceptance contract: logits
+/// within tolerance, transcript bit-identical.
+fn serve_fixture(name: &str) {
+    let fx = load(name);
+    let spec = StackSpec::parse(fx.str_field("spec").unwrap()).unwrap();
+    let seed = fx.usize_field("seed").unwrap() as u64;
+    let block = fx.usize_field("block").unwrap();
+    let vocab = fx.usize_field("vocab").unwrap();
+    let feat = fx.usize_field("feat").unwrap();
+    let nframes = fx.usize_field("frames").unwrap();
+    let x = f32s(&fx, "x");
+    let want_logits = f32s(&fx, "logits");
+    let want_tokens = tokens(&fx, "tokens");
+    let tol = f64_field(&fx, "tolerance") as f32;
+    assert_eq!(x.len(), nframes * feat);
+    assert_eq!(want_logits.len(), nframes * vocab);
+
+    let params = StackParams::init(&spec, &mut Rng::new(seed)).unwrap();
+    // Weight probes: bit-exact or the python RNG mirror drifted — fail
+    // loudly here, before tolerance comparisons muddy the diagnosis.
+    let probe = fx.get("weight_probe").expect("weight_probe");
+    for (got, want) in params.proj_w.data()[..4].iter().zip(f32s(probe, "proj_w")) {
+        assert_eq!(
+            got.to_bits(),
+            want.to_bits(),
+            "proj_w probe mismatch: python rng_ref mirror drifted from util::Rng"
+        );
+    }
+    for (got, want) in params.head_w.data()[..4].iter().zip(f32s(probe, "head_w")) {
+        assert_eq!(got.to_bits(), want.to_bits(), "head_w probe mismatch");
+    }
+
+    // The full serving path: coordinator with batch auto, decoder
+    // attached before the first feed, fixed block policy = the fixture's
+    // chunk size, deadline far away so dispatches are exactly [block]*.
+    let run = |feed_all_at_once: bool| -> (Vec<f32>, Vec<usize>) {
+        let params = StackParams::init(&spec, &mut Rng::new(seed)).unwrap();
+        let backend = NativeBackend::new(NativeStack::new(&spec, params, block).unwrap());
+        let mut coord = Coordinator::new(
+            backend,
+            CoordinatorConfig {
+                policy: PolicyMode::Fixed(block),
+                max_wait: Duration::from_secs(100),
+                max_sessions: 4,
+                batching: BatchMode::Auto,
+            },
+        );
+        let id = coord.open().unwrap();
+        coord.set_decoder(id, DecoderSpec::Greedy).unwrap();
+        if feed_all_at_once {
+            coord.feed(id, &x).unwrap();
+            coord.tick().unwrap();
+        } else {
+            for chunk in x.chunks(block * feat) {
+                coord.feed(id, chunk).unwrap();
+                coord.tick().unwrap();
+            }
+        }
+        let toks = coord.transcript(id, true).unwrap();
+        let logits = coord.drain(id, usize::MAX).unwrap();
+        (logits, toks)
+    };
+
+    for all_at_once in [true, false] {
+        let (logits, toks) = run(all_at_once);
+        assert_eq!(logits.len(), want_logits.len(), "{name}: logit count");
+        let mut max_d = 0.0f32;
+        for (i, (g, w)) in logits.iter().zip(&want_logits).enumerate() {
+            let d = (g - w).abs();
+            assert!(
+                d <= tol,
+                "{name}: logit {i} off by {d} ({g} vs {w}, tol {tol})"
+            );
+            max_d = max_d.max(d);
+        }
+        assert_eq!(
+            toks, want_tokens,
+            "{name}: transcript must be bit-identical to the python \
+             reference (feed_all_at_once={all_at_once}, max logit diff {max_d})"
+        );
+    }
+}
+
+#[test]
+fn served_sru_stack_matches_python_fixture() {
+    serve_fixture("stack_sru_greedy.json");
+}
+
+#[test]
+fn served_chunked_bidir_stack_matches_python_fixture() {
+    serve_fixture("stack_bidir_greedy.json");
+}

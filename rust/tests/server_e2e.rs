@@ -131,6 +131,88 @@ fn full_session_over_tcp() {
 }
 
 #[test]
+fn transcribe_session_over_tcp() {
+    let (port, stop, join) = start_server();
+    let mut c = Client::connect(port);
+
+    let resp = c.call("OPEN");
+    let id: u64 = resp[3..].parse().unwrap();
+    assert_eq!(c.call(&format!("DECODE {id} greedy")), "OK 0");
+
+    // Feed 8 frames; `TRANSCRIBE final` flushes and returns tokens.
+    let mut frames = String::new();
+    for i in 0..32 {
+        frames.push_str(&format!(" {}", (i as f32) * 0.3 - 4.0));
+    }
+    assert_eq!(c.call(&format!("FEED {id}{frames}")), "OK 8");
+    let resp = c.call(&format!("TRANSCRIBE {id} final"));
+    assert!(resp.starts_with("OK "), "{resp}");
+    let mut it = resp[3..].split_whitespace();
+    let n: usize = it.next().unwrap().parse().unwrap();
+    let toks: Vec<usize> = it.map(|t| t.parse().unwrap()).collect();
+    assert_eq!(toks.len(), n);
+    assert!(toks.iter().all(|&t| t >= 1 && t < CFG.vocab), "no blanks");
+    // Partial polls are stable (greedy transcripts never retract).
+    let resp2 = c.call(&format!("TRANSCRIBE {id}"));
+    assert_eq!(resp, resp2, "no new frames, same transcript");
+
+    c.call(&format!("CLOSE {id}"));
+    c.call("QUIT");
+    stop.store(true, Ordering::Relaxed);
+    join.join().unwrap();
+}
+
+#[test]
+fn malformed_transcribe_requests_cannot_kill_the_serve_loop() {
+    let (port, stop, join) = start_server();
+    let mut c = Client::connect(port);
+
+    let id: u64 = c.call("OPEN")[3..].parse().unwrap();
+
+    // Every malformed / out-of-order request must come back as ERR —
+    // and the server must still serve afterwards.
+    for bad in [
+        format!("TRANSCRIBE {id}"),          // no decoder attached
+        "TRANSCRIBE 999 final".to_string(),  // unknown session
+        "TRANSCRIBE".to_string(),            // missing id
+        format!("TRANSCRIBE {id} partial"),  // unknown argument
+        "DECODE 999 greedy".to_string(),     // unknown session
+        format!("DECODE {id} viterbi"),      // unknown decoder
+        format!("DECODE {id} beam:0"),       // invalid width
+        format!("DECODE {id} beam:x"),       // unparsable width
+        format!("FEED {id} 1 2 3"),          // ragged (feat=4)
+        format!("FEED {id} nan-ish x"),      // unparsable floats
+    ] {
+        let resp = c.call(&bad);
+        assert!(resp.starts_with("ERR"), "{bad:?} -> {resp}");
+    }
+
+    // Valid transcribe flow still works on the same connection/session.
+    assert_eq!(c.call(&format!("DECODE {id} beam:2")), "OK 0");
+    // Attaching twice is a typed error.
+    let resp = c.call(&format!("DECODE {id} greedy"));
+    assert!(resp.starts_with("ERR"), "{resp}");
+    assert_eq!(c.call(&format!("FEED {id} 1 2 3 4")), "OK 1");
+    let resp = c.call(&format!("TRANSCRIBE {id} final"));
+    assert!(resp.starts_with("OK "), "{resp}");
+    // A decoder cannot attach once frames were computed.
+    let id2: u64 = c.call("OPEN")[3..].parse().unwrap();
+    assert_eq!(c.call(&format!("FEED {id2} 1 2 3 4")), "OK 1");
+    let resp = c.call(&format!("TRANSCRIBE {id2} final"));
+    assert!(resp.starts_with("ERR"), "{resp}");
+    let resp = c.call(&format!("DECODE {id2} greedy"));
+    assert!(resp.starts_with("ERR"), "late attach: {resp}");
+
+    // The plain logit path is untouched by all of the above.
+    let resp = c.call(&format!("POLL {id2} 100"));
+    assert!(resp.starts_with("OK "), "{resp}");
+
+    c.call("QUIT");
+    stop.store(true, Ordering::Relaxed);
+    join.join().unwrap();
+}
+
+#[test]
 fn concurrent_clients_get_isolated_sessions() {
     let (port, stop, join) = start_server();
     let handles: Vec<_> = (0..3)

@@ -204,6 +204,12 @@ fn run_reference(
             (_, LayerParams::Lstm(p)) => {
                 Box::new(LstmEngine::new(p.clone(), LstmMode::Precompute(t))) as Box<dyn Engine>
             }
+            (_, LayerParams::Bidir(..)) => {
+                // Chunked-bidir layers have their own reference parity
+                // suite (tests/bidir_parity.rs + tests/decode_golden.rs);
+                // this hand-composed recipe covers unidirectional specs.
+                unreachable!("run_reference is for unidirectional specs")
+            }
         });
     }
     let proj_acts = [Act::Tanh];
