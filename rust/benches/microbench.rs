@@ -8,27 +8,40 @@ use std::time::Duration;
 
 use mtsrnn::bench::{bench, print_measurement, write_report, BenchOpts};
 use mtsrnn::coordinator::{BatchMode, Coordinator, CoordinatorConfig, NativeBackend, PolicyMode};
-use mtsrnn::engine::{Engine, NativeStack, SruEngine};
+use mtsrnn::engine::{Engine, NativeStack, QuantMatrix, SruEngine};
 use mtsrnn::linalg::pool;
 use mtsrnn::linalg::{
     add_row_bias, fast_sigmoid, gemm, gemm_bt, gemv, transpose_into, Act, Epilogue, PackedGemm,
-    SMALL_N_CUTOFF,
+    PackedQuantGemm, QuantScratch, SMALL_N_CUTOFF,
 };
 use mtsrnn::models::config::{Arch, ModelConfig, ModelSize, StackSpec};
 use mtsrnn::models::{SruParams, StackParams};
 use mtsrnn::util::{Rng, Timer};
 
 fn main() {
-    // MTSRNN_BENCH_ONLY=threads runs just the thread-scaling sweep
-    // (what the CI smoke job uses to publish BENCH_threads.json).
-    if std::env::var("MTSRNN_BENCH_ONLY").as_deref() == Ok("threads") {
-        let opts = BenchOpts {
-            warmup_iters: 1,
-            measure_iters: 3,
-            max_seconds: 20.0,
-        };
-        threads_sweep(&opts);
-        return;
+    // MTSRNN_BENCH_ONLY=threads|quant runs just that sweep (what the CI
+    // smoke job uses to publish BENCH_threads.json / BENCH_quant.json).
+    match std::env::var("MTSRNN_BENCH_ONLY").as_deref() {
+        Ok("threads") => {
+            let opts = BenchOpts {
+                warmup_iters: 1,
+                measure_iters: 3,
+                max_seconds: 20.0,
+            };
+            threads_sweep(&opts);
+            return;
+        }
+        Ok("quant") => {
+            pool::set_threads(1);
+            let opts = BenchOpts {
+                warmup_iters: 1,
+                measure_iters: 5,
+                max_seconds: 30.0,
+            };
+            quant_sweep(&opts);
+            return;
+        }
+        _ => {}
     }
     // The per-kernel sections below are *per-core* comparisons (packed
     // vs legacy pipeline): keep them single-threaded unless the user
@@ -189,6 +202,7 @@ fn main() {
         meas.median_ns / 32.0
     );
 
+    quant_sweep(&opts);
     threads_sweep(&opts);
 
     println!(
@@ -196,6 +210,108 @@ fn main() {
         ModelSize::Large,
         ModelConfig::paper(Arch::Sru, ModelSize::Large).weight_bytes() / (1024 * 1024)
     );
+}
+
+/// Quantized-GEMM sweep at the paper's SRU gate shapes plus the
+/// acceptance shape `[2048, 512]`: full gate computation (GEMM + fused
+/// scale/bias/activation epilogue) through the f32 packed kernel, the q8
+/// widening path (int8 storage, f32 compute) and the q8q integer path
+/// (dynamic activation quantization + i32 kernels + fused dequant — the
+/// quantization cost is *inside* the timed region, as it is on the
+/// serving hot path), at T in {1, 4, 16}.  Emits
+/// `bench_out/BENCH_quant.json`; the acceptance record is the
+/// q8q-vs-f32 ratio at `[2048, 512] x T=16` (target >= 1.5x — see
+/// EXPERIMENTS.md §Quant-compute for the analysis if the host misses
+/// it).  Single-threaded: this compares kernels per core, not scaling.
+fn quant_sweep(opts: &BenchOpts) {
+    println!("-- int8 compute: f32 vs q8 (widening) vs q8q (integer kernels) --");
+    let mut rng = Rng::new(33);
+    let acts = [Act::Ident, Act::Sigmoid, Act::Sigmoid];
+    let mut points: Vec<(usize, usize, usize, f64, f64, f64)> = Vec::new();
+    for &(m, k) in &[(1536usize, 512usize), (2048, 512), (3072, 1024)] {
+        let mut w = vec![0.0; m * k];
+        rng.fill_normal(&mut w, 0.05);
+        let pg = PackedGemm::new(&w, m, k);
+        let q = QuantMatrix::quantize(&w, m, k);
+        let pq8 = PackedQuantGemm::new(q.q(), q.row_scales(), m, k);
+        let pq8q = PackedQuantGemm::new_q8q(q.q(), q.row_scales(), m, k);
+        let mut scratch = QuantScratch::new();
+        let bias = vec![0.1f32; m];
+        println!(
+            "  W[{m},{k}]  simd={} bt_cutoff={} int_cutoff={}",
+            pg.simd().name(),
+            pg.bt_cutoff(),
+            pq8q.int_cutoff()
+        );
+        for &t in &[1usize, 4, 16] {
+            let mut x = vec![0.0; t * k];
+            rng.fill_normal(&mut x, 1.0);
+            let mut c = vec![0.0; m * t];
+            // The 3-segment gate epilogue requires M to split into equal
+            // activation segments; the [2048, 512] acceptance shape is
+            // not 3H-shaped, so it times the bias-only epilogue instead
+            // (identical work on all three paths either way).
+            let epi = if m % acts.len() == 0 {
+                Epilogue::fused(&bias, &acts)
+            } else {
+                Epilogue::with_bias(&bias)
+            };
+            let mf = bench(&format!("f32 {m}x{k}x{t}"), opts, || {
+                pg.matmul(&mut c, &x, t, false, &epi);
+            });
+            let m8 = bench(&format!("q8 {m}x{k}x{t}"), opts, || {
+                pq8.matmul(&mut c, &x, t, false, &epi);
+            });
+            let m8q = bench(&format!("q8q {m}x{k}x{t}"), opts, || {
+                pq8q.matmul_q8q(&mut c, &x, t, false, &epi, &mut scratch);
+            });
+            let flops = 2.0 * (m * k * t) as f64;
+            let (gf, g8, g8q) = (
+                flops / mf.median_ns,
+                flops / m8.median_ns,
+                flops / m8q.median_ns,
+            );
+            let wb_f32 = (m * k * 4) as f64 / t as f64;
+            let wb_q8 = (m * k + m * 4) as f64 / t as f64;
+            println!(
+                "  T={t:<3} f32 {gf:>7.2} | q8 {g8:>7.2} | q8q {g8q:>7.2} GFLOP/s-eq | q8q/f32 {:>5.2}x | wbytes/step f32 {wb_f32:>9.0} q8 {wb_q8:>9.0}",
+                g8q / gf
+            );
+            points.push((m, k, t, gf, g8, g8q));
+        }
+    }
+    let target = points.iter().find(|&&(m, k, t, ..)| (m, k, t) == (2048, 512, 16));
+    let mut json = String::from("{\n  \"bench\": \"quant_sweep\",\n  \"points\": [\n");
+    for (i, &(m, k, t, gf, g8, g8q)) in points.iter().enumerate() {
+        let sep = if i + 1 < points.len() { "," } else { "" };
+        json.push_str(&format!(
+            "    {{\"m\": {m}, \"k\": {k}, \"t\": {t}, \"f32_gflops\": {gf:.2}, \"q8_gflops\": {g8:.2}, \"q8q_gflops\": {g8q:.2}, \"q8q_vs_f32\": {:.3}, \"weight_bytes_per_step_f32\": {:.0}, \"weight_bytes_per_step_q8\": {:.0}}}{sep}\n",
+            g8q / gf,
+            (m * k * 4) as f64 / t as f64,
+            (m * k + m * 4) as f64 / t as f64,
+        ));
+    }
+    json.push_str("  ],\n");
+    if let Some(&(_, _, _, gf, _, g8q)) = target {
+        json.push_str(&format!(
+            "  \"acceptance\": {{\"shape\": [2048, 512, 16], \"required_q8q_vs_f32\": 1.5, \"achieved\": {:.3}, \"met\": {}}}\n",
+            g8q / gf,
+            g8q / gf >= 1.5
+        ));
+        println!(
+            "  acceptance [2048,512]xT=16: q8q/f32 = {:.2}x (target 1.5x, {})",
+            g8q / gf,
+            if g8q / gf >= 1.5 { "MET" } else { "MISSED — see EXPERIMENTS.md §Quant-compute" }
+        );
+    } else {
+        json.push_str("  \"acceptance\": null\n");
+    }
+    json.push('}');
+    json.push('\n');
+    match write_report("BENCH_quant.json", &json) {
+        Ok(p) => println!("  wrote {}", p.display()),
+        Err(e) => println!("  could not write BENCH_quant.json: {e}"),
+    }
 }
 
 /// Serve `frames` speech-like frames through a fresh 512x4 SRU-stack

@@ -196,14 +196,20 @@ pub fn ablation_lstm_precompute(size: ModelSize, samples: usize, opts: &BenchOpt
     t
 }
 
-/// ABL5 (extension): int8 weight quantization x multi-time-step — the
-/// two traffic reductions multiply.  Native wall-clock + traffic ratio.
+/// ABL5 (extension): int8 quantization x multi-time-step.  Three rows
+/// per T: f32, `int8` (q8: int8 *storage*, f32 compute — the traffic
+/// cut) and `int8x8` (q8q: quantized activations + integer kernels —
+/// traffic cut × integer MAC rate).  The note carries the memsim
+/// *prediction* for the same split (traffic-only vs traffic+compute) so
+/// the measured speedups can be compared against the model — see
+/// EXPERIMENTS.md §Quant-compute.
 pub fn ablation_quant(size: ModelSize, samples: usize, opts: &BenchOpts) -> Table {
     use crate::engine::{Engine, QuantSruEngine, SruEngine};
+    use crate::memsim::SimPrec;
     let cfg = ModelConfig::paper(Arch::Sru, size);
     let params = crate::models::SruParams::init(&cfg, &mut Rng::new(WEIGHT_SEED));
     let mut t = Table::new(format!(
-        "ABL5: int8 weights x multi-time-step (SRU {size:?}, native host)"
+        "ABL5: int8 weights & compute x multi-time-step (SRU {size:?}, native host)"
     ));
     let mut x = gaussian_frames(&mut Rng::new(7), samples, cfg.input, 1.0);
     x.truncate(samples * cfg.input);
@@ -221,15 +227,34 @@ pub fn ablation_quant(size: ModelSize, samples: usize, opts: &BenchOpts) -> Tabl
             qe.run_sequence(&x, samples, &mut out);
         });
         t.push(format!("int8-T{tb}"), m.median_ms(), None);
+        let mut qqe = QuantSruEngine::new_q8q(&params, tb);
+        let m = bench(&format!("int8x8-{tb}"), opts, || {
+            qqe.reset();
+            qqe.run_sequence(&x, samples, &mut out);
+        });
+        t.push(format!("int8x8-T{tb}"), m.median_ms(), None);
     }
     t.compute_speedups("f32-T1");
     let f32_bytes = 3 * cfg.hidden * cfg.input * 4;
     let q = QuantSruEngine::new(&params, 1);
+    // Model prediction at T=32 on the simulated Intel host: how much the
+    // traffic cut alone buys (q8) vs traffic + integer MACs (q8q).
+    let predict = |prec: SimPrec| {
+        let mut c = SimConfig::paper(INTEL_I7_3930K, cfg, 32);
+        c.samples = samples.min(256);
+        c.precision = prec;
+        simulate(&c).seconds
+    };
+    let base = predict(SimPrec::F32);
     t.note = format!(
-        "weight bytes/block: f32 {} KiB vs int8 {} KiB (x{:.1} traffic cut, multiplies with T)",
+        "weight bytes/block: f32 {} KiB vs int8 {} KiB (x{:.1} traffic cut, multiplies with T); \
+         memsim T=32 prediction (intel): q8 {:.2}x, q8q {:.2}x vs f32 — \
+         compare with the measured int8/int8x8 rows (EXPERIMENTS.md §Quant-compute)",
         f32_bytes / 1024,
         q.weight_bytes_per_block() / 1024,
-        f32_bytes as f64 / q.weight_bytes_per_block() as f64
+        f32_bytes as f64 / q.weight_bytes_per_block() as f64,
+        base / predict(SimPrec::Q8),
+        base / predict(SimPrec::Q8Q),
     );
     t
 }
@@ -237,9 +262,12 @@ pub fn ablation_quant(size: ModelSize, samples: usize, opts: &BenchOpts) -> Tabl
 /// The spec grid exercised by `mtsrnn ablation --exp stacks`, `info`,
 /// and the CI smoke job: every cell kind × precision the composable
 /// stack API serves.
-pub const SERVE_SPECS: [&str; 6] = [
+pub const SERVE_SPECS: [&str; 7] = [
     "sru:f32:512x4",
     "sru:q8:512x4",
+    // q8q: quantized activations + integer gate kernels — the lowest
+    // bytes-and-ops point of the grid.
+    "sru:q8q:512x4",
     "qrnn:f32:512x4",
     "lstm:f32:512x4",
     "sru:f32:512x4,l3=sru:q8",

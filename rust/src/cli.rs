@@ -75,7 +75,7 @@ COMMANDS:
   ablation   run ablations                  --exp dram|lstm-precompute|energy|quant|stacks
   simulate   one memsim point               --cpu intel|arm --arch sru|qrnn|lstm
                                             --size small|large --t N [--samples N]
-                                            [--cores N]
+                                            [--cores N] [--precision f32|q8|q8q]
   parity     check artifacts vs JAX goldens [--artifacts DIR] [--filter SUBSTR]
   serve      streaming TCP server           [--artifacts DIR] [--stack SPEC]
                                             [--backend native|pjrt] [--port P]
@@ -100,7 +100,7 @@ GLOBAL OPTIONS:
 
 STACK SPECS (native serve; one weight set, any layer kind x precision):
   <arch>:<prec>[:bi]:<hidden>x<depth>[,feat=N][,vocab=N][,l<i>=<arch>:<prec>[:bi]]
-    arch: sru | qrnn | lstm        prec: f32 | q8 (sru only)
+    arch: sru | qrnn | lstm        prec: f32 | q8 | q8q (q8/q8q sru only)
     :bi = chunked-bidirectional layer: fwd+bwd engines per dispatched
           block, outputs summed; the block size bounds the lookahead,
           so bidir stacks serve with bounded latency (serve --block N)
@@ -110,9 +110,24 @@ STACK SPECS (native serve; one weight set, any layer kind x precision):
     qrnn:f32:512x4            QRNN stack           (alias: asr_qrnn_512x4)
     lstm:f32:512x4            LSTM baseline stack
     sru:q8:512x4              int8 SRU weights (~4x less DRAM per block)
+    sru:q8q:512x4             int8 weights AND activations: gate GEMMs run
+                              on integer kernels (i32 accumulate, dequant
+                              fused into the store) — the q8 traffic cut
+                              plus ~2x the per-instruction MAC rate
     sru:f32:512x4,l3=sru:q8   mixed precision: int8 final layer
     sru:f32:bi:512x4          chunked-bidir SRU stack (lookahead = block)
   the pjrt backend instead takes AOT artifact stack names (asr_sru_512x4).
+
+  precision guidance: q8 quantizes weights per row (error <= 0.4% of each
+  row's max weight) and never touches activations — use it whenever DRAM
+  bandwidth is the bottleneck (large models, small T).  q8q additionally
+  derives one symmetric scale per time step from each input block at
+  dispatch time (dynamic: no calibration data needed) and quantizes the
+  activations with it, which adds a bounded ~0.4%-of-frame-max error per
+  step but roughly doubles GEMM arithmetic throughput — use it when T is
+  large enough that the gate GEMM is compute-bound; verify accuracy with
+  the q8q tolerance tests (tests/quant_kernel_parity.rs) before shipping.
+  MTSRNN_FORCE_PORTABLE=1 pins all kernels to the portable fallback.
 
 TRANSCRIBE MODE (serve, native backend):
   DECODE <id> [greedy|beam[:W]]   attach a streaming CTC decoder to a

@@ -28,8 +28,10 @@ use crate::models::config::StateLayout;
 pub struct BiDir<E: Engine> {
     fwd: E,
     bwd: E,
-    /// Scratch for the reversed input / backward outputs.
+    /// Scratch for the reversed input / per-direction outputs (grown on
+    /// demand, then reused — no per-call allocation on the hot path).
     rev_x: Vec<f32>,
+    fwd_out: Vec<f32>,
     bwd_out: Vec<f32>,
 }
 
@@ -41,6 +43,7 @@ impl<E: Engine> BiDir<E> {
             fwd,
             bwd,
             rev_x: Vec::new(),
+            fwd_out: Vec::new(),
             bwd_out: Vec::new(),
         }
     }
@@ -66,21 +69,26 @@ impl<E: Engine> BiDir<E> {
         self.fwd.reset();
         self.bwd.reset();
 
-        // Forward direction writes directly into the left half.
-        self.rev_x.resize(steps * d, 0.0);
-        self.bwd_out.resize(steps * h, 0.0);
-        let mut fwd_out = vec![0.0; steps * h];
-        self.fwd.run_sequence(x, steps, &mut fwd_out);
+        // Forward direction first (scratch grows once, then is reused).
+        if self.rev_x.len() < steps * d {
+            self.rev_x.resize(steps * d, 0.0);
+        }
+        if self.fwd_out.len() < steps * h {
+            self.fwd_out.resize(steps * h, 0.0);
+            self.bwd_out.resize(steps * h, 0.0);
+        }
+        self.fwd.run_sequence(x, steps, &mut self.fwd_out[..steps * h]);
 
         // Backward: reverse frames, run, un-reverse outputs.
         for s in 0..steps {
             self.rev_x[s * d..(s + 1) * d]
                 .copy_from_slice(&x[(steps - 1 - s) * d..(steps - s) * d]);
         }
-        self.bwd.run_sequence(&self.rev_x, steps, &mut self.bwd_out);
+        let rev = &self.rev_x[..steps * d];
+        self.bwd.run_sequence(rev, steps, &mut self.bwd_out[..steps * h]);
 
         for s in 0..steps {
-            out[s * 2 * h..s * 2 * h + h].copy_from_slice(&fwd_out[s * h..(s + 1) * h]);
+            out[s * 2 * h..s * 2 * h + h].copy_from_slice(&self.fwd_out[s * h..(s + 1) * h]);
             out[s * 2 * h + h..(s + 1) * 2 * h]
                 .copy_from_slice(&self.bwd_out[(steps - 1 - s) * h..(steps - s) * h]);
         }

@@ -22,7 +22,7 @@
 //! useful resolution for realistic weight scales).
 
 use crate::engine::{check_io, Engine, RecurrentLayer};
-use crate::linalg::{fast_tanh, Epilogue, PackedQuantGemm};
+use crate::linalg::{fast_tanh, Epilogue, PackedQuantGemm, QuantScratch};
 use crate::models::config::StateLayout;
 use crate::models::SruParams;
 
@@ -83,6 +83,16 @@ impl QuantMatrix {
         self.q[r * self.cols + c] as f32 * self.scales[r]
     }
 
+    /// Raw quantized weights, row-major (benches / packing).
+    pub fn q(&self) -> &[i8] {
+        &self.q
+    }
+
+    /// Per-row dequantization scales.
+    pub fn row_scales(&self) -> &[f32] {
+        &self.scales
+    }
+
     /// Max absolute quantization error vs the original matrix.
     pub fn max_error(&self, original: &[f32]) -> f32 {
         assert_eq!(original.len(), self.q.len());
@@ -98,32 +108,58 @@ impl QuantMatrix {
 
 /// SRU engine with int8 weights (same recurrence, same API).
 ///
-/// The gate GEMM runs through a [`PackedQuantGemm`]: int8 panels in the
-/// same k-major layout as the f32 engines, each weight byte fetched once
-/// per block and widened in registers, with the per-row dequant scale +
-/// bias + f/r sigmoids all fused into the single store pass.
+/// Two precisions share this engine:
+///
+/// * **`q8`** ([`QuantSruEngine::new`]): int8 *storage* — each weight
+///   byte is fetched once per block and widened to f32 in registers,
+///   with the per-row dequant scale + bias + f/r sigmoids all fused
+///   into the single store pass.
+/// * **`q8q`** ([`QuantSruEngine::new_q8q`]): int8 *compute* — the
+///   input block is additionally quantized per time step (one dynamic
+///   symmetric scale per column of `B[K, T]`), the gate GEMM
+///   accumulates in exact i32 integer arithmetic, and f32 appears only
+///   in the dequant epilogue.  The engine owns the [`QuantScratch`], so
+///   the hot path allocates nothing after the first dispatch.
 #[derive(Debug, Clone)]
 pub struct QuantSruEngine {
     /// Panel-packed int8 weights — the only copy the engine retains
     /// (the intermediate [`QuantMatrix`] is dropped after packing, so
-    /// the resident int8 footprint stays one copy).
+    /// the resident int8 footprint stays one copy per layout).
     pq: PackedQuantGemm,
     b3: Vec<f32>,
     t_block: usize,
     hidden: usize,
     c: Vec<f32>,
     gates: Vec<f32>,
+    /// True = q8q (quantized activations, integer kernels).
+    q8q: bool,
+    /// Activation-quantization scratch (q8q only; reused per dispatch).
+    scratch: QuantScratch,
 }
 
 impl QuantSruEngine {
+    /// Weights-only int8 (`q8`).
     pub fn new(params: &SruParams, t_block: usize) -> Self {
+        Self::build(params, t_block, false)
+    }
+
+    /// Quantized-activation int8 (`q8q`): true integer compute.
+    pub fn new_q8q(params: &SruParams, t_block: usize) -> Self {
+        Self::build(params, t_block, true)
+    }
+
+    fn build(params: &SruParams, t_block: usize, q8q: bool) -> Self {
         assert!(t_block >= 1);
         let hidden = params.hidden();
         assert_eq!(hidden, params.input(), "SRU requires square weights");
         let mut b3 = vec![0.0; 3 * hidden];
         b3[hidden..].copy_from_slice(&params.b);
         let w = QuantMatrix::quantize(params.w.data(), 3 * hidden, hidden);
-        let pq = PackedQuantGemm::new(&w.q, &w.scales, 3 * hidden, hidden);
+        let pq = if q8q {
+            PackedQuantGemm::new_q8q(&w.q, &w.scales, 3 * hidden, hidden)
+        } else {
+            PackedQuantGemm::new(&w.q, &w.scales, 3 * hidden, hidden)
+        };
         Self {
             pq,
             b3,
@@ -131,6 +167,21 @@ impl QuantSruEngine {
             hidden,
             c: vec![0.0; hidden],
             gates: vec![0.0; 3 * hidden * t_block],
+            q8q,
+            scratch: QuantScratch::new(),
+        }
+    }
+
+    /// The gate GEMM for `t` frames of `x`, routed through the mode's
+    /// path — the one place the q8/q8q split exists on the hot path.
+    fn gate_gemm(&mut self, x: &[f32], t: usize) {
+        let h = self.hidden;
+        let gates = &mut self.gates[..3 * h * t];
+        let epi = Epilogue::fused(&self.b3, &SruParams::GATE_ACTS);
+        if self.q8q {
+            self.pq.matmul_q8q(gates, &x[..t * h], t, false, &epi, &mut self.scratch);
+        } else {
+            self.pq.matmul(gates, &x[..t * h], t, false, &epi);
         }
     }
 
@@ -162,20 +213,15 @@ impl QuantSruEngine {
         let h = self.hidden;
         let d = h;
         // Quantized gate GEMM over time-major frames — each int8 weight
-        // byte fetched once per block; scale, bias and the f/r sigmoids
-        // applied in the store epilogue (xhat rows stay raw, like the
-        // f32 engine).
-        let gates = &mut self.gates[..3 * h * t];
-        self.pq.matmul(
-            gates,
-            &x[..t * d],
-            t,
-            false,
-            &Epilogue::fused(&self.b3, &SruParams::GATE_ACTS),
-        );
+        // byte fetched once per block; scale(s), bias and the f/r
+        // sigmoids applied in the store epilogue (xhat rows stay raw,
+        // like the f32 engine).  q8q additionally quantizes the frames
+        // per time step and accumulates in integer arithmetic.
+        self.gate_gemm(x, t);
 
         // Identical fo/highway recurrence to the f32 engine; f/r arrive
         // pre-sigmoided.
+        let gates = &self.gates[..3 * h * t];
         let (gx, gfr) = gates.split_at(h * t);
         let (gf, gr) = gfr.split_at(h * t);
         for i in 0..h {
@@ -193,7 +239,11 @@ impl QuantSruEngine {
 
 impl Engine for QuantSruEngine {
     fn arch(&self) -> &'static str {
-        "sru-int8"
+        if self.q8q {
+            "sru-int8x8"
+        } else {
+            "sru-int8"
+        }
     }
 
     fn hidden(&self) -> usize {
@@ -244,12 +294,25 @@ impl RecurrentLayer for QuantSruEngine {
         slots[0].copy_from_slice(self.state());
     }
 
-    // min_wavefront_width stays 1: PackedQuantGemm has a single kernel
-    // path at every `n`, so any sub-block width is bit-exact.
+    /// q8 keeps width 1: the widening path has a single kernel at every
+    /// `n`, so any sub-block width is bit-exact.  q8q honours the probed
+    /// integer-vs-widening crossover — sub-blocks must never cross it,
+    /// or the GEMM would flip numeric paths with the width.  Column-wise
+    /// activation quantization itself is width-independent (each frame's
+    /// scale depends only on that frame), so above the crossover q8q is
+    /// bit-exact under any decomposition.
+    fn min_wavefront_width(&self) -> usize {
+        if self.q8q {
+            self.pq.min_int_n()
+        } else {
+            1
+        }
+    }
 
     /// Batched int8 gate GEMM across all streams: each weight *byte*
     /// leaves DRAM once per batch, serving `N = Σ segs` frames — the
-    /// quantization 4x and the batching multiply.
+    /// quantization 4x and the batching multiply (and the q8q integer
+    /// kernel's per-instruction MAC rate rides on top).
     fn run_segments(
         &mut self,
         x: &[f32],
@@ -264,14 +327,8 @@ impl RecurrentLayer for QuantSruEngine {
         if self.gates.len() < 3 * h * n {
             self.gates.resize(3 * h * n, 0.0);
         }
-        let gates = &mut self.gates[..3 * h * n];
-        self.pq.matmul(
-            gates,
-            &x[..n * d],
-            n,
-            false,
-            &Epilogue::fused(&self.b3, &SruParams::GATE_ACTS),
-        );
+        self.gate_gemm(x, n);
+        let gates = &self.gates[..3 * h * n];
         let (gx, gfr) = gates.split_at(h * n);
         let (gf, gr) = gfr.split_at(h * n);
         let mut off = 0;

@@ -641,10 +641,11 @@ mod tests {
     fn sessions_are_isolated() {
         // Two streams interleaved through one engine must behave as if
         // each had its own engine — the state-swap contract.  Run it
-        // through a mixed-precision stack so the int8 layer's state swap
-        // is exercised too.
+        // through a mixed-precision stack so both int8 layers' (q8 and
+        // q8q) state swaps are exercised too.
         let spec = tiny_spec(Arch::Sru)
-            .with_layer(LayerSpec::new(Arch::Sru, Precision::Q8).unwrap());
+            .with_layer(LayerSpec::new(Arch::Sru, Precision::Q8).unwrap())
+            .with_layer(LayerSpec::new(Arch::Sru, Precision::Q8Q).unwrap());
         let params = StackParams::init(&spec, &mut Rng::new(7)).unwrap();
         let mut eng = NativeStack::new(&spec, params.clone(), 4).unwrap();
 

@@ -51,9 +51,17 @@ impl Simd {
 }
 
 /// One-time runtime CPU feature detection (cached for the process).
+///
+/// `MTSRNN_FORCE_PORTABLE=1` (any value but `0`/empty) pins the process
+/// to the portable kernels regardless of host features — CI uses it to
+/// keep the fallback paths covered on x86 runners, and it doubles as an
+/// escape hatch on hosts with broken feature detection.
 pub fn detect() -> Simd {
     static LEVEL: OnceLock<Simd> = OnceLock::new();
     *LEVEL.get_or_init(|| {
+        if std::env::var("MTSRNN_FORCE_PORTABLE").is_ok_and(|v| !v.is_empty() && v != "0") {
+            return Simd::Portable;
+        }
         #[cfg(target_arch = "x86_64")]
         {
             if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
@@ -121,6 +129,71 @@ pub(crate) fn matmul_range(
         // SAFETY: NEON is baseline on aarch64; `detect()` verifies it.
         Simd::Neon => unsafe { neon::matmul(panels, c, crow0, x, m, k, n, acc, epi, p0, p1) },
         _ => portable::matmul(panels, c, crow0, x, m, k, n, acc, epi, p0, p1),
+    }
+}
+
+/// q8q integer GEMM over pair-interleaved i8 panels (see
+/// `pack::pack_panels_q8q` for the layout): `c32[m, n] = panels @ xq^T`
+/// with pure i32 accumulation — **no f32 anywhere**.  `xq` holds `n`
+/// quantized frames of length `kp` (i8); `qpair` is the same data as
+/// packed i16 pairs (the AVX2 broadcast form).  Because every product is
+/// exact and integer addition is associative, all three kernel families
+/// produce bit-identical accumulators, and disjoint panel ranges make
+/// the pool-fanned sweep bit-identical to the serial one.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn matmul_q8q(
+    simd: Simd,
+    qpanels: &[i8],
+    c32: &mut [i32],
+    crow0: usize,
+    xq: &[i8],
+    qpair: &[i32],
+    m: usize,
+    kp: usize,
+    n: usize,
+    p0: usize,
+    p1: usize,
+) {
+    // Each architecture consumes one broadcast form; keep both names
+    // live so neither cfg arm trips unused-variable lints.
+    let _ = (&xq, &qpair);
+    match simd {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: an Avx2 request only exists when `detect()` returned
+        // it (new_q8q uses detect(); with_dispatch_q8q asserts equality
+        // with detect()), i.e. avx2 was verified on this host.
+        Simd::Avx2 => unsafe { avx2::matmul_q8q(qpanels, c32, crow0, qpair, m, kp, n, p0, p1) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64; `detect()` verifies it.
+        Simd::Neon => unsafe { neon::matmul_q8q(qpanels, c32, crow0, xq, m, kp, n, p0, p1) },
+        _ => portable::matmul_q8q(qpanels, c32, crow0, xq, m, kp, n, p0, p1),
+    }
+}
+
+/// Store one finished `PACK_MR x nr` i32 register tile into the raw
+/// accumulator block (same sub-slice/absolute-row contract as
+/// [`store_tile`]; no epilogue — dequantization happens in
+/// `pack::dequant_rows`, the single shared f32 touch point).
+/// (Used by the intrinsic kernels; the portable kernel stores per
+/// column, hence the dead-code allowance on intrinsic-free targets.)
+#[allow(clippy::too_many_arguments, dead_code)]
+pub(crate) fn store_tile_i32(
+    c32: &mut [i32],
+    crow0: usize,
+    tile: &[[i32; PACK_MR]],
+    j0: usize,
+    nr: usize,
+    row0: usize,
+    m: usize,
+    n: usize,
+) {
+    let rows = PACK_MR.min(m - row0);
+    for r in 0..rows {
+        let row = row0 + r;
+        let crow = &mut c32[(row - crow0) * n + j0..(row - crow0) * n + j0 + nr];
+        for (jj, cv) in crow.iter_mut().enumerate() {
+            *cv = tile[jj][r];
+        }
     }
 }
 

@@ -6,9 +6,12 @@
 //! registers out of the 32-register aarch64 SIMD file.  The embedded ARM
 //! boards the paper targets (Tables 3/4/7/8) are exactly this path.
 
-use core::arch::aarch64::{vdupq_n_f32, vfmaq_n_f32, vld1q_f32, vst1q_f32};
+use core::arch::aarch64::{
+    vdup_n_u16, vdupq_n_f32, vdupq_n_s32, vfmaq_n_f32, vld1_s8, vld1q_f32, vmull_s8, vpadalq_s16,
+    vreinterpret_s8_u16, vst1q_f32, vst1q_s32,
+};
 
-use super::store_tile;
+use super::{store_tile, store_tile_i32};
 use crate::linalg::pack::{Epilogue, PACK_MR};
 
 /// Register-tile width (frame columns per microkernel pass).
@@ -97,6 +100,107 @@ pub(crate) unsafe fn matmul(
                 _ => kern1(panel, xp, k, j0, &mut tile),
             }
             store_tile(c, crow0, &tile, j0, nr, pi * PACK_MR, m, n, acc, None, epi);
+            j0 += nr;
+        }
+    }
+}
+
+macro_rules! def_kern_q8q {
+    ($name:ident, $nr:literal) => {
+        /// q8q integer microkernel (widening i16 dot): per k-pair, each
+        /// 8-byte panel quarter (4 rows × 2 k, pair-interleaved) goes
+        /// through one `vmull_s8` against the broadcast `[x0, x1]` i8
+        /// pair and one `vpadalq_s16` pairwise add-accumulate into i32
+        /// lanes — 8 MACs per multiply instruction vs 4 for f32
+        /// `vfmaq`, and exact i32 arithmetic throughout (i8·i8 products
+        /// fit i16, the pairwise sum widens to i32 before accumulation,
+        /// so nothing ever saturates).  An `sdot`-based variant (4× MACs
+        /// per instruction, needs the `dotprod` feature + a k-quad
+        /// layout) remains future work; it would stay bit-compatible
+        /// since i32 accumulation is order-independent.
+        ///
+        /// # Safety
+        /// Requires neon.  `panel` must hold `kp * PACK_MR` bytes in the
+        /// pair-interleaved q8q layout and `xq` at least
+        /// `(j0 + $nr) * kp` bytes.
+        #[target_feature(enable = "neon")]
+        #[allow(clippy::needless_range_loop, clippy::single_element_loop)]
+        unsafe fn $name(
+            panel: *const i8,
+            xq: *const i8,
+            kp: usize,
+            j0: usize,
+            tile: &mut [[i32; PACK_MR]; NR],
+        ) {
+            let zero = vdupq_n_s32(0);
+            let mut acc = [[zero; 4]; $nr];
+            let mut frames = [xq; $nr];
+            for (jj, f) in frames.iter_mut().enumerate() {
+                *f = xq.add((j0 + jj) * kp);
+            }
+            for g in 0..kp / 2 {
+                let w0 = vld1_s8(panel.add(g * 32));
+                let w1 = vld1_s8(panel.add(g * 32 + 8));
+                let w2 = vld1_s8(panel.add(g * 32 + 16));
+                let w3 = vld1_s8(panel.add(g * 32 + 24));
+                for jj in 0..$nr {
+                    // [x0, x1] repeated four times as an i8x8 vector.
+                    let pair = (frames[jj].add(2 * g) as *const u16).read_unaligned();
+                    let xp = vreinterpret_s8_u16(vdup_n_u16(pair));
+                    acc[jj][0] = vpadalq_s16(acc[jj][0], vmull_s8(w0, xp));
+                    acc[jj][1] = vpadalq_s16(acc[jj][1], vmull_s8(w1, xp));
+                    acc[jj][2] = vpadalq_s16(acc[jj][2], vmull_s8(w2, xp));
+                    acc[jj][3] = vpadalq_s16(acc[jj][3], vmull_s8(w3, xp));
+                }
+            }
+            for jj in 0..$nr {
+                for l in 0..4 {
+                    vst1q_s32(tile[jj].as_mut_ptr().add(4 * l), acc[jj][l]);
+                }
+            }
+        }
+    };
+}
+
+def_kern_q8q!(kq1, 1);
+def_kern_q8q!(kq2, 2);
+def_kern_q8q!(kq3, 3);
+def_kern_q8q!(kq4, 4);
+
+/// q8q integer GEMM over pair-interleaved panels; same panel-range /
+/// sub-slice contract as [`matmul`], writing raw i32 accumulators.
+///
+/// # Safety
+/// Requires neon (baseline on aarch64; verified by `detect()`).  Slice
+/// sizes are checked by `PackedQuantGemm::matmul_q8q`.
+#[target_feature(enable = "neon")]
+#[allow(clippy::too_many_arguments)]
+pub(crate) unsafe fn matmul_q8q(
+    qpanels: &[i8],
+    c32: &mut [i32],
+    crow0: usize,
+    xq: &[i8],
+    m: usize,
+    kp: usize,
+    n: usize,
+    p0: usize,
+    p1: usize,
+) {
+    debug_assert_eq!(qpanels.len(), m.div_ceil(PACK_MR) * PACK_MR * kp);
+    let mut tile = [[0i32; PACK_MR]; NR];
+    for pi in p0..p1 {
+        let panel = qpanels[pi * PACK_MR * kp..].as_ptr();
+        let xp = xq.as_ptr();
+        let mut j0 = 0;
+        while j0 < n {
+            let nr = NR.min(n - j0);
+            match nr {
+                4 => kq4(panel, xp, kp, j0, &mut tile),
+                3 => kq3(panel, xp, kp, j0, &mut tile),
+                2 => kq2(panel, xp, kp, j0, &mut tile),
+                _ => kq1(panel, xp, kp, j0, &mut tile),
+            }
+            store_tile_i32(c32, crow0, &tile, j0, nr, pi * PACK_MR, m, n);
             j0 += nr;
         }
     }

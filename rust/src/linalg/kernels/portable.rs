@@ -122,3 +122,46 @@ fn kern_q<const NR2: usize>(
     }
     tile[..NR2].copy_from_slice(&acc);
 }
+
+/// q8q integer kernel over the *pair-interleaved* i8 panel layout (see
+/// `pack::pack_panels_q8q`): pure i32 multiply-accumulate, one column at
+/// a time — the reference the intrinsic kernels must match **bit for
+/// bit** (exact integer arithmetic makes the accumulation order
+/// irrelevant, so each family is free to tile differently).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn matmul_q8q(
+    qpanels: &[i8],
+    c32: &mut [i32],
+    crow0: usize,
+    xq: &[i8],
+    m: usize,
+    kp: usize,
+    n: usize,
+    p0: usize,
+    p1: usize,
+) {
+    for pi in p0..p1 {
+        let panel = &qpanels[pi * PACK_MR * kp..(pi + 1) * PACK_MR * kp];
+        let row0 = pi * PACK_MR;
+        let rows = PACK_MR.min(m - row0);
+        for j in 0..n {
+            let frame = &xq[j * kp..(j + 1) * kp];
+            let mut acc = [0i32; PACK_MR];
+            for g in 0..kp / 2 {
+                let grp = &panel[g * 32..(g + 1) * 32];
+                let x0 = i32::from(frame[2 * g]);
+                let x1 = i32::from(frame[2 * g + 1]);
+                for half in 0..2 {
+                    for ri in 0..8 {
+                        let w0 = i32::from(grp[half * 16 + ri * 2]);
+                        let w1 = i32::from(grp[half * 16 + ri * 2 + 1]);
+                        acc[half * 8 + ri] += w0 * x0 + w1 * x1;
+                    }
+                }
+            }
+            for (rl, &av) in acc.iter().enumerate().take(rows) {
+                c32[(row0 - crow0 + rl) * n + j] = av;
+            }
+        }
+    }
+}

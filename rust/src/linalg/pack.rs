@@ -155,6 +155,157 @@ impl PackedMatrix {
     }
 }
 
+/// Largest `K` the q8q integer path accepts: with `|w| <= 127` and
+/// `|x| <= 127` per product, the i32 accumulator magnitude is bounded by
+/// `K * 127 * 127`, so any `K` below this can never overflow — the
+/// precondition for the "bit-identical across kernels and thread counts"
+/// guarantee (integer addition is exact and associative).
+pub(crate) const Q8_MAX_K: usize = (i32::MAX as usize) / (127 * 127);
+
+/// Repack a row-major `[m, k]` int8 matrix into the q8q *pair-interleaved*
+/// panel layout the integer microkernels consume.  Returns the panels and
+/// `kp` (`k` rounded up to even; the pad column is zero, contributing
+/// exactly 0 to every integer dot product).
+///
+/// Per `PACK_MR`-row panel, per k-pair `g` (`kk = 2g`), 32 bytes:
+///
+/// ```text
+/// [ r0@kk, r0@kk+1, r1@kk, r1@kk+1, ..., r7@kk, r7@kk+1 |   (bytes 0..16)
+///   r8@kk, r8@kk+1, ...,               r15@kk, r15@kk+1 ]   (bytes 16..32)
+/// ```
+///
+/// AVX2 widens each 16-byte half to sixteen i16 lanes and feeds
+/// `madd_epi16` directly (i32 lane `l` = row `l`'s two-product partial
+/// sum); NEON feeds 8-byte quarters to `vmull_s8` + `vpadalq_s16` (one
+/// i32 lane per row); the portable kernel indexes the same bytes
+/// scalar-wise.  All three accumulate the identical exact i32 sum.
+fn pack_panels_q8q(q: &[i8], m: usize, k: usize) -> (Vec<i8>, usize) {
+    assert_eq!(q.len(), m * k, "pack: Q must be [m, k]");
+    let kp = k.next_multiple_of(2);
+    let np = m.div_ceil(PACK_MR);
+    let mut out = vec![0i8; np * PACK_MR * kp];
+    for pi in 0..np {
+        let base = pi * PACK_MR * kp;
+        for g in 0..kp / 2 {
+            let kk = 2 * g;
+            for r in 0..PACK_MR {
+                let row = pi * PACK_MR + r;
+                if row >= m {
+                    continue;
+                }
+                let dst = base + g * 32 + (r / 8) * 16 + (r % 8) * 2;
+                out[dst] = q[row * k + kk];
+                if kk + 1 < k {
+                    out[dst + 1] = q[row * k + kk + 1];
+                }
+            }
+        }
+    }
+    (out, kp)
+}
+
+/// Caller-owned scratch for the q8q (quantized-activation) GEMM path.
+///
+/// Everything the dynamic quantization and the integer kernels need
+/// between dispatches lives here — quantized frames, per-column scales
+/// and the raw i32 accumulator block — so the hot path performs **zero
+/// heap allocation** after the first dispatch at each size (buffers grow
+/// once to the largest shape seen, then are reused).  Engines own one
+/// and thread it through every [`PackedQuantGemm::matmul_q8q`] call.
+#[derive(Debug, Clone, Default)]
+pub struct QuantScratch {
+    /// Quantized activation frames `[n, kp]`, i8 (zero k-padding).
+    qx: Vec<i8>,
+    /// AVX2 broadcast form: per frame, `kp / 2` sign-extended i16 pairs
+    /// packed little-endian into one i32 each (`x_{2g} | x_{2g+1} << 16`).
+    qpair: Vec<i32>,
+    /// Per-column (per-time-step) symmetric dequantization scales.
+    cscale: Vec<f32>,
+    /// Raw `[m, n]` i32 accumulators (dequantized into `C` per panel
+    /// range, so each task's stripe is still cache-hot at dequant time).
+    acc: Vec<i32>,
+}
+
+impl QuantScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The per-column scales of the most recent quantization (tests /
+    /// error analysis).
+    pub fn col_scales(&self) -> &[f32] {
+        &self.cscale
+    }
+}
+
+/// Dynamically quantize `n` time-major frames of length `k` to i8 with
+/// one symmetric scale per frame (= per column of the logical `B[K, N]`
+/// operand): `s_j = max_kk |x[j][kk]| / 127`, `q = round(x / s_j)`.
+/// An all-zero frame gets scale 1.0 (same convention as
+/// [`crate::engine::QuantMatrix`]: every value quantizes to exactly 0).
+fn quantize_frames(x: &[f32], n: usize, k: usize, kp: usize, scratch: &mut QuantScratch) {
+    if scratch.qx.len() < n * kp {
+        scratch.qx.resize(n * kp, 0);
+        scratch.qpair.resize(n * (kp / 2), 0);
+    }
+    if scratch.cscale.len() < n {
+        scratch.cscale.resize(n, 0.0);
+    }
+    for j in 0..n {
+        let frame = &x[j * k..(j + 1) * k];
+        let max = frame.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        let s = if max > 0.0 { max / 127.0 } else { 1.0 };
+        scratch.cscale[j] = s;
+        let q = &mut scratch.qx[j * kp..(j + 1) * kp];
+        for (dst, &v) in q.iter_mut().zip(frame) {
+            *dst = (v / s).round().clamp(-127.0, 127.0) as i8;
+        }
+        q[k..].fill(0);
+        let pairs = &mut scratch.qpair[j * (kp / 2)..(j + 1) * (kp / 2)];
+        for (g, p) in pairs.iter_mut().enumerate() {
+            let x0 = q[2 * g] as i16 as u16 as u32;
+            let x1 = q[2 * g + 1] as i16 as u16 as u32;
+            *p = (x0 | (x1 << 16)) as i32;
+        }
+    }
+}
+
+/// Dequantize a row stripe of raw i32 accumulators into `C`, fusing the
+/// whole epilogue: `C = act(acc_i32 * row_scale * col_scale + bias
+/// (+ C_old if acc))`.  This is the **only** place q8q integer results
+/// meet f32 — shared by every kernel family and both the serial and the
+/// pool-fanned sweeps, so the f32 rounding sequence is identical
+/// everywhere and bit-exact parity reduces to exact i32 equality.
+#[allow(clippy::too_many_arguments)]
+fn dequant_rows(
+    c: &mut [f32],
+    crow0: usize,
+    c32: &[i32],
+    rows: usize,
+    m: usize,
+    n: usize,
+    acc_mode: bool,
+    row_scales: &[f32],
+    col_scales: &[f32],
+    epi: &Epilogue,
+) {
+    for rl in 0..rows {
+        let row = crow0 + rl;
+        let s = row_scales[row];
+        let b = epi.bias.map_or(0.0, |bias| bias[row]);
+        let act = epi.act_for_row(m, row);
+        let src = &c32[rl * n..(rl + 1) * n];
+        let dst = &mut c[rl * n..(rl + 1) * n];
+        for ((cv, &av), &cs) in dst.iter_mut().zip(src).zip(&col_scales[..n]) {
+            let mut v = av as f32 * (s * cs) + b;
+            if acc_mode {
+                v += *cv;
+            }
+            *cv = act.apply(v);
+        }
+    }
+}
+
 /// Matrices smaller than this skip the construction probe: the packed
 /// path is used unconditionally (at these sizes everything is cache
 /// resident and the probe would measure noise).
@@ -401,28 +552,118 @@ pub(crate) fn apply_epilogue(c: &mut [f32], m: usize, n: usize, epi: &Epilogue) 
     }
 }
 
-/// Int8 twin of [`PackedGemm`] for the quantized engine: the same panel
-/// layout with `i8` elements, so weight bytes stream at 1/4 the f32
-/// traffic; the per-row dequantization scale is fused into the store
-/// epilogue together with bias and activation.  Portable kernel only for
-/// now — an int8 intrinsic path (e.g. AVX2 `maddubs` / NEON `sdot`) is
-/// future work.
+/// Int8 twin of [`PackedGemm`] for the quantized engines.  Two modes:
+///
+/// * **Weights-only (`q8`)**: int8 panels in the same k-major layout as
+///   the f32 engines, each weight byte fetched once per block and
+///   *widened to f32 in registers* — 1/4 the weight DRAM traffic, f32
+///   arithmetic.  This is [`PackedQuantGemm::matmul`].
+/// * **Quantized activations (`q8q`)**: the activation block is
+///   dynamically quantized per column (per time step) to i8, the dot
+///   products accumulate in **i32 integer arithmetic** end to end, and
+///   f32 appears only in the fused dequant epilogue
+///   (`C = act(acc * row_scale * col_scale + bias)`).  This is
+///   [`PackedQuantGemm::matmul_q8q`]; kernels are runtime-dispatched
+///   (AVX2 `madd_epi16` on sign-extended pairs, NEON `vmull_s8` +
+///   `vpadalq_s16`, portable scalar i32) and — because integer addition
+///   is exact and associative — produce **bit-identical** i32
+///   accumulators on every dispatch target and at every thread count.
+///
+/// Why `madd_epi16` on sign-extended i8 rather than the classic
+/// `maddubs_epi16` u8×i8 pairing: `maddubs` *saturates* its i16 pair
+/// sums (reachable with |w|, |x| ≤ 127 once activations are offset to
+/// unsigned), which would make the result depend on the kernel family —
+/// the exact-parity contract above is worth the one extra widening per
+/// 32 weights.
 #[derive(Debug, Clone)]
 pub struct PackedQuantGemm {
     m: usize,
     k: usize,
+    /// k-major i8 panels (widening path).  Empty on q8q handles whose
+    /// probe found `int_cutoff == 0`: the fallback is unreachable then,
+    /// and dropping the copy keeps the resident footprint at one byte
+    /// per weight.
     panels: Vec<i8>,
+    /// Pair-interleaved i8 panels (integer path; empty in q8 mode).
+    qpanels: Vec<i8>,
+    /// `k` rounded up to even (integer-panel stride; 0 in q8 mode).
+    kp: usize,
     scales: Vec<f32>,
+    simd: Simd,
+    /// `n <= int_cutoff` routes q8q calls through the widening fallback
+    /// (probed at construction, like [`PackedGemm::bt_cutoff`]).
+    int_cutoff: usize,
 }
 
 impl PackedQuantGemm {
+    /// Weights-only mode (`q8`): int8 storage, f32 compute.
     pub fn new(q: &[i8], scales: &[f32], m: usize, k: usize) -> Self {
         assert_eq!(scales.len(), m, "one dequant scale per row");
         Self {
             m,
             k,
             panels: pack_panels(q, m, k),
+            qpanels: Vec::new(),
+            kp: 0,
             scales: scales.to_vec(),
+            simd: kernels::detect(),
+            int_cutoff: 0,
+        }
+    }
+
+    /// Quantized-activation mode (`q8q`): packs the integer-kernel panel
+    /// layout alongside the widening one, dispatches the SIMD level once
+    /// and probes the integer-vs-widening crossover (measured, not
+    /// assumed — cached per `(m, k)` like the f32 probe).
+    ///
+    /// When the crossover comes back 0 (the usual case) the widening
+    /// panels are unreachable on the hot path and are **dropped**, so
+    /// the resident int8 footprint stays one copy — the point of int8 on
+    /// footprint-constrained targets.  `with_dispatch_q8q` keeps both
+    /// (the parity tests compare the two paths explicitly).
+    pub fn new_q8q(q: &[i8], scales: &[f32], m: usize, k: usize) -> Self {
+        let mut pq = Self::with_dispatch_q8q(q, scales, m, k, kernels::detect(), 0);
+        if m * k >= PROBE_MIN_ELEMS {
+            pq.int_cutoff = cached_int_cutoff(&pq);
+        }
+        if pq.int_cutoff == 0 {
+            pq.panels = Vec::new();
+        }
+        pq
+    }
+
+    /// q8q constructor with a fixed SIMD level and crossover (parity
+    /// tests and benches).  Same soundness rule as
+    /// [`PackedGemm::with_dispatch`]: an intrinsic level may only be
+    /// requested when [`kernels::detect`] verified it on this host.
+    pub fn with_dispatch_q8q(
+        q: &[i8],
+        scales: &[f32],
+        m: usize,
+        k: usize,
+        simd: Simd,
+        int_cutoff: usize,
+    ) -> Self {
+        assert_eq!(scales.len(), m, "one dequant scale per row");
+        assert!(
+            simd == Simd::Portable || simd == kernels::detect(),
+            "SIMD level {simd:?} not available on this host (detected {:?})",
+            kernels::detect()
+        );
+        assert!(
+            k <= Q8_MAX_K,
+            "q8q supports K up to {Q8_MAX_K} (i32 accumulator bound), got {k}"
+        );
+        let (qpanels, kp) = pack_panels_q8q(q, m, k);
+        Self {
+            m,
+            k,
+            panels: pack_panels(q, m, k),
+            qpanels,
+            kp,
+            scales: scales.to_vec(),
+            simd,
+            int_cutoff,
         }
     }
 
@@ -441,22 +682,54 @@ impl PackedQuantGemm {
     }
 
     /// Reconstruct the dequantized f32 value at `(r, c)` straight from
-    /// the panel layout (error analysis / tests — engines keep no second
-    /// row-major copy of the quantized weights).
+    /// whichever panel layout is resident (error analysis / tests —
+    /// engines keep no second row-major copy of the quantized weights).
     pub fn dequant(&self, r: usize, c: usize) -> f32 {
         assert!(r < self.m && c < self.k);
         let (pi, rr) = (r / PACK_MR, r % PACK_MR);
-        f32::from(self.panels[pi * PACK_MR * self.k + c * PACK_MR + rr]) * self.scales[r]
+        let q = if self.panels.is_empty() {
+            // q8q handle whose widening panels were dropped: read the
+            // pair-interleaved integer layout instead.
+            let base = pi * PACK_MR * self.kp + (c / 2) * 32;
+            self.qpanels[base + (rr / 8) * 16 + (rr % 8) * 2 + c % 2]
+        } else {
+            self.panels[pi * PACK_MR * self.k + c * PACK_MR + rr]
+        };
+        f32::from(q) * self.scales[r]
     }
 
-    /// Same contract as [`PackedGemm::matmul`], with the row scale
-    /// applied before bias/activation: `C = act(dot * scale + bias)`.
-    /// Splits across the worker pool by row panel exactly like the f32
-    /// path (disjoint rows, bit-identical at any thread count).
+    /// Whether this handle was built for the q8q integer path.
+    pub fn quantizes_activations(&self) -> bool {
+        !self.qpanels.is_empty()
+    }
+
+    /// Probed integer-vs-widening crossover (`0` = integer path at every
+    /// `n`).
+    pub fn int_cutoff(&self) -> usize {
+        self.int_cutoff
+    }
+
+    /// Smallest `n` at which the q8q integer kernel is guaranteed to run
+    /// (the widening fallback below it computes different low-order
+    /// numerics — sub-block schedulers must not cross this boundary).
+    pub fn min_int_n(&self) -> usize {
+        self.int_cutoff + 1
+    }
+
+    /// Weight-only (widening) GEMM — same contract as
+    /// [`PackedGemm::matmul`], with the row scale applied before
+    /// bias/activation: `C = act(dot * scale + bias)`.  Splits across
+    /// the worker pool by row panel exactly like the f32 path (disjoint
+    /// rows, bit-identical at any thread count).
     pub fn matmul(&self, c: &mut [f32], x: &[f32], n: usize, acc: bool, epi: &Epilogue) {
         let (m, k) = (self.m, self.k);
         assert_eq!(x.len(), n * k, "X must be [n={n}, k={k}]");
         assert_eq!(c.len(), m * n, "C must be [m={m}, n={n}]");
+        assert!(
+            !self.panels.is_empty(),
+            "widening panels were dropped (q8q handle with int_cutoff = 0 \
+             never takes this path)"
+        );
         if n == 0 {
             return;
         }
@@ -471,6 +744,157 @@ impl PackedQuantGemm {
             kernels::portable::matmul_quant(panels, scales, c, 0, x, m, k, n, acc, epi, 0, np);
         }
     }
+
+    /// Quantized-activation GEMM: dynamic per-column i8 quantization of
+    /// `x`, integer (i32) accumulation in the dispatched microkernel,
+    /// dequant + bias + activation fused into the store.  **No f32
+    /// multiply touches the inner loop.**  `scratch` is caller-owned and
+    /// reused across dispatches (zero hot-path allocation after the
+    /// first call at each size).
+    ///
+    /// `n <= int_cutoff` (probed at construction) falls back to the
+    /// widening path — different low-order numerics, same tolerance
+    /// class; callers that need width-invariant bits gate on
+    /// [`Self::min_int_n`].  Large calls M-split across the worker pool
+    /// (disjoint row panels; i32 accumulation is exact, so results stay
+    /// bit-identical at any thread count).
+    pub fn matmul_q8q(
+        &self,
+        c: &mut [f32],
+        x: &[f32],
+        n: usize,
+        acc: bool,
+        epi: &Epilogue,
+        scratch: &mut QuantScratch,
+    ) {
+        assert!(
+            self.quantizes_activations(),
+            "matmul_q8q requires a PackedQuantGemm built with new_q8q"
+        );
+        let (m, k) = (self.m, self.k);
+        assert_eq!(x.len(), n * k, "X must be [n={n}, k={k}]");
+        assert_eq!(c.len(), m * n, "C must be [m={m}, n={n}]");
+        if n == 0 {
+            return;
+        }
+        if n <= self.int_cutoff {
+            self.matmul(c, x, n, acc, epi);
+            return;
+        }
+        self.matmul_int(c, x, n, acc, epi, scratch);
+    }
+
+    /// The integer path body (no crossover check — the probe times this
+    /// directly against the widening path).
+    fn matmul_int(
+        &self,
+        c: &mut [f32],
+        x: &[f32],
+        n: usize,
+        acc: bool,
+        epi: &Epilogue,
+        scratch: &mut QuantScratch,
+    ) {
+        let (m, k, kp) = (self.m, self.k, self.kp);
+        quantize_frames(x, n, k, kp, scratch);
+        if scratch.acc.len() < m * n {
+            scratch.acc.resize(m * n, 0);
+        }
+        let QuantScratch { qx, qpair, cscale, acc: acc32 } = scratch;
+        let (qx, qpair, cscale) = (&qx[..n * kp], &qpair[..n * (kp / 2)], &cscale[..n]);
+        let (simd, qpanels, scales) = (self.simd, self.qpanels.as_slice(), self.scales.as_slice());
+        let acc_base = SendPtr(acc32.as_mut_ptr());
+        let fanned = par_split_rows(m, k, n, c, |csub, row0, pi| {
+            let rows = PACK_MR.min(m - row0);
+            // SAFETY: panel `pi` owns i32 accumulator rows
+            // [row0, row0 + rows) — disjoint from every other task's —
+            // and the pool joins before `matmul_int` returns.
+            let c32 =
+                unsafe { std::slice::from_raw_parts_mut(acc_base.get().add(row0 * n), rows * n) };
+            kernels::matmul_q8q(simd, qpanels, c32, row0, qx, qpair, m, kp, n, pi, pi + 1);
+            dequant_rows(csub, row0, c32, rows, m, n, acc, scales, cscale, epi);
+        });
+        if !fanned {
+            let np = m.div_ceil(PACK_MR);
+            let c32 = &mut acc32[..m * n];
+            kernels::matmul_q8q(simd, qpanels, c32, 0, qx, qpair, m, kp, n, 0, np);
+            dequant_rows(c, 0, c32, m, m, n, acc, scales, cscale, epi);
+        }
+    }
+
+    /// Raw integer GEMM: quantize `x` and write the exact `[m, n]` i32
+    /// accumulators (no dequant, serial sweep).  The parity tests'
+    /// ground truth — "bit-identical across dispatch targets" is
+    /// asserted on these values directly.
+    pub fn matmul_i32(&self, c32: &mut [i32], x: &[f32], n: usize, scratch: &mut QuantScratch) {
+        assert!(
+            self.quantizes_activations(),
+            "matmul_i32 requires a PackedQuantGemm built with new_q8q"
+        );
+        let (m, k, kp) = (self.m, self.k, self.kp);
+        assert_eq!(x.len(), n * k, "X must be [n={n}, k={k}]");
+        assert_eq!(c32.len(), m * n, "C must be [m={m}, n={n}]");
+        if n == 0 {
+            return;
+        }
+        quantize_frames(x, n, k, kp, scratch);
+        let np = m.div_ceil(PACK_MR);
+        kernels::matmul_q8q(
+            self.simd,
+            &self.qpanels,
+            c32,
+            0,
+            &scratch.qx[..n * kp],
+            &scratch.qpair[..n * (kp / 2)],
+            m,
+            kp,
+            n,
+            0,
+            np,
+        );
+    }
+}
+
+/// One-shot construction-time probe for the q8q path: times the integer
+/// kernel (dynamic quantization included — it is part of every q8q
+/// dispatch) against the widening fallback at `n = 1, 2, 4, 8` and
+/// returns the largest prefix where widening wins decisively.  Usually 0
+/// on SIMD hosts: the integer kernel does twice the multiplies per
+/// instruction and streams the same byte count.
+fn probe_int_cutoff(pq: &PackedQuantGemm) -> usize {
+    const PROBE_MARGIN_PCT: u64 = 10;
+    let (m, k) = (pq.m, pq.k);
+    let mut x = vec![0.0f32; 8 * k];
+    for (i, v) in x.iter_mut().enumerate() {
+        *v = ((i % 17) as f32 - 8.0) * 0.125;
+    }
+    let mut c = vec![0.0f32; m * 8];
+    let mut scratch = QuantScratch::new();
+    let mut cutoff = 0;
+    for n in [1usize, 2, 4, 8] {
+        let t_widen = time_min(PROBE_REPS, || {
+            pq.matmul(&mut c[..m * n], &x[..n * k], n, false, &Epilogue::NONE);
+        });
+        let t_int = time_min(PROBE_REPS, || {
+            pq.matmul_int(&mut c[..m * n], &x[..n * k], n, false, &Epilogue::NONE, &mut scratch);
+        });
+        if t_widen.saturating_mul(100 + PROBE_MARGIN_PCT) < t_int.saturating_mul(100) {
+            cutoff = n;
+        } else {
+            break;
+        }
+    }
+    cutoff
+}
+
+/// Process-wide cache of probed q8q crossovers, keyed by `(m, k)` — the
+/// same determinism argument as [`cached_bt_cutoff`]: two engines of one
+/// shape must never calibrate to different paths.
+fn cached_int_cutoff(pq: &PackedQuantGemm) -> usize {
+    static CACHE: OnceLock<Mutex<BTreeMap<(usize, usize), usize>>> = OnceLock::new();
+    let cache = CACHE.get_or_init(|| Mutex::new(BTreeMap::new()));
+    let mut map = cache.lock().unwrap();
+    *map.entry((pq.m, pq.k)).or_insert_with(|| probe_int_cutoff(pq))
 }
 
 #[cfg(test)]
@@ -600,6 +1024,170 @@ mod tests {
         for (g, w) in got.iter().zip(&want) {
             assert!((g - w).abs() < 1e-4, "{g} vs {w}");
         }
+    }
+
+    #[test]
+    fn q8q_panel_layout_pairs_and_padding() {
+        // m = 17 rows (one full panel + 1), k = 5 (odd -> kp = 6 with a
+        // zero pad column).  Check the pair-interleaved placement.
+        let (m, k) = (PACK_MR + 1, 5);
+        let q: Vec<i8> = (0..m * k).map(|i| (i % 127) as i8).collect();
+        let (panels, kp) = pack_panels_q8q(&q, m, k);
+        assert_eq!(kp, 6);
+        assert_eq!(panels.len(), 2 * PACK_MR * kp);
+        let at = |pi: usize, g: usize, r: usize, o: usize| {
+            panels[pi * PACK_MR * kp + g * 32 + (r / 8) * 16 + (r % 8) * 2 + o]
+        };
+        // Panel 0: row 3, kk = 2 -> group 1, offset 0; kk = 3 -> offset 1.
+        assert_eq!(at(0, 1, 3, 0), q[3 * k + 2]);
+        assert_eq!(at(0, 1, 3, 1), q[3 * k + 3]);
+        // Row 11 lives in the second 16-byte half of each group.
+        assert_eq!(at(0, 0, 11, 0), q[11 * k]);
+        // kk = 4 pairs with the zero pad column (kk = 5 >= k).
+        assert_eq!(at(0, 2, 0, 0), q[4]);
+        assert_eq!(at(0, 2, 0, 1), 0);
+        // Panel 1 holds row 16; rows 17.. are zero padding.
+        assert_eq!(at(1, 0, 0, 0), q[PACK_MR * k]);
+        assert_eq!(at(1, 0, 1, 0), 0);
+    }
+
+    #[test]
+    fn q8q_matmul_matches_scalar_integer_oracle() {
+        // The full q8q pipeline (dynamic per-column quantization ->
+        // integer kernel -> fused dequant) against a from-scratch scalar
+        // reference that re-derives the quantization independently.
+        let (m, k, n) = (24usize, 19usize, 6usize);
+        let mut rng = Rng::new(3);
+        let mut a = vec![0.0; m * k];
+        rng.fill_normal(&mut a, 0.1);
+        let mut q = vec![0i8; m * k];
+        let mut scales = vec![0.0f32; m];
+        for r in 0..m {
+            let row = &a[r * k..(r + 1) * k];
+            let max = row.iter().fold(0.0f32, |mx, v| mx.max(v.abs()));
+            let s = if max > 0.0 { max / 127.0 } else { 1.0 };
+            scales[r] = s;
+            for (dst, &v) in q[r * k..(r + 1) * k].iter_mut().zip(row) {
+                *dst = (v / s).round().clamp(-127.0, 127.0) as i8;
+            }
+        }
+        let mut x = vec![0.0; n * k];
+        rng.fill_normal(&mut x, 1.0);
+
+        let pq = PackedQuantGemm::with_dispatch_q8q(&q, &scales, m, k, Simd::Portable, 0);
+        let bias: Vec<f32> = (0..m).map(|r| r as f32 * 0.01).collect();
+        let mut got = vec![0.0; m * n];
+        let mut scratch = QuantScratch::new();
+        pq.matmul_q8q(&mut got, &x, n, false, &Epilogue::with_bias(&bias), &mut scratch);
+
+        for j in 0..n {
+            let frame = &x[j * k..(j + 1) * k];
+            let max = frame.iter().fold(0.0f32, |mx, v| mx.max(v.abs()));
+            let sx = if max > 0.0 { max / 127.0 } else { 1.0 };
+            assert_eq!(scratch.col_scales()[j], sx);
+            let xq: Vec<i32> = frame
+                .iter()
+                .map(|&v| (v / sx).round().clamp(-127.0, 127.0) as i32)
+                .collect();
+            for r in 0..m {
+                let acc: i32 = (0..k).map(|c| i32::from(q[r * k + c]) * xq[c]).sum();
+                let want = acc as f32 * (scales[r] * sx) + bias[r];
+                let g = got[r * n + j];
+                let tol = 1e-5 * want.abs().max(1.0);
+                assert!((g - want).abs() <= tol, "({r},{j}): {g} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn q8q_crossover_routes_small_n_to_widening_path() {
+        let (m, k) = (32usize, 21usize);
+        let mut rng = Rng::new(13);
+        let mut a = vec![0.0; m * k];
+        rng.fill_normal(&mut a, 0.2);
+        let mut q = vec![0i8; m * k];
+        let mut scales = vec![0.0f32; m];
+        for r in 0..m {
+            let row = &a[r * k..(r + 1) * k];
+            let max = row.iter().fold(0.0f32, |mx, v| mx.max(v.abs()));
+            let s = if max > 0.0 { max / 127.0 } else { 1.0 };
+            scales[r] = s;
+            for (dst, &v) in q[r * k..(r + 1) * k].iter_mut().zip(row) {
+                *dst = (v / s).round().clamp(-127.0, 127.0) as i8;
+            }
+        }
+        let crossed = PackedQuantGemm::with_dispatch_q8q(&q, &scales, m, k, Simd::Portable, 2);
+        assert_eq!(crossed.int_cutoff(), 2);
+        assert_eq!(crossed.min_int_n(), 3);
+        let plain = PackedQuantGemm::new(&q, &scales, m, k);
+        let mut scratch = QuantScratch::new();
+        for n in [1usize, 2] {
+            // Below the crossover: q8q must take the widening path and
+            // match it bitwise (exact same code runs).
+            let mut x = vec![0.0; n * k];
+            rng.fill_normal(&mut x, 1.0);
+            let mut via_q8q = vec![0.0; m * n];
+            let mut via_widen = vec![0.0; m * n];
+            crossed.matmul_q8q(&mut via_q8q, &x, n, false, &Epilogue::NONE, &mut scratch);
+            plain.matmul(&mut via_widen, &x, n, false, &Epilogue::NONE);
+            assert_eq!(via_q8q, via_widen, "n={n} must route to widening");
+        }
+        // Above it: integer path, close to (but generally not equal to)
+        // the widening result.
+        let n = 4;
+        let mut x = vec![0.0; n * k];
+        rng.fill_normal(&mut x, 1.0);
+        let mut via_q8q = vec![0.0; m * n];
+        let mut via_widen = vec![0.0; m * n];
+        crossed.matmul_q8q(&mut via_q8q, &x, n, false, &Epilogue::NONE, &mut scratch);
+        plain.matmul(&mut via_widen, &x, n, false, &Epilogue::NONE);
+        for (g, w) in via_q8q.iter().zip(&via_widen) {
+            assert!((g - w).abs() < 0.1, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn q8q_drops_widening_panels_and_dequant_still_reads() {
+        // Below the probe threshold `int_cutoff` is 0, so `new_q8q`
+        // drops the widening copy; `dequant` must fall back to the
+        // pair-interleaved layout and `matmul_q8q` must serve every n.
+        let (m, k) = (PACK_MR + 3, 5);
+        let q: Vec<i8> = (0..m * k).map(|i| ((i * 7) % 255) as u8 as i8).collect();
+        let scales: Vec<f32> = (0..m).map(|r| 0.01 + r as f32 * 1e-3).collect();
+        let pq = PackedQuantGemm::new_q8q(&q, &scales, m, k);
+        assert!(pq.quantizes_activations());
+        assert_eq!(pq.int_cutoff(), 0);
+        for r in [0usize, 7, m - 1] {
+            for c in [0usize, 2, k - 1] {
+                assert_eq!(pq.dequant(r, c), f32::from(q[r * k + c]) * scales[r]);
+            }
+        }
+        let x = vec![0.5f32; k];
+        let mut out = vec![0.0; m];
+        let mut scratch = QuantScratch::new();
+        pq.matmul_q8q(&mut out, &x, 1, false, &Epilogue::NONE, &mut scratch);
+        assert!(out.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn quantize_frames_zero_and_padding_conventions() {
+        let (n, k) = (2usize, 3usize);
+        let kp = 4;
+        let x = [0.0f32, 0.0, 0.0, 2.0, -4.0, 1.0];
+        let mut s = QuantScratch::new();
+        quantize_frames(&x, n, k, kp, &mut s);
+        // Zero frame: scale 1.0, all-zero quants.
+        assert_eq!(s.cscale[0], 1.0);
+        assert_eq!(&s.qx[..kp], &[0i8, 0, 0, 0]);
+        // Second frame: max 4 -> scale 4/127; -4 maps to -127 exactly;
+        // the kp pad byte stays 0.
+        assert_eq!(s.cscale[1], 4.0 / 127.0);
+        assert_eq!(s.qx[kp + 1], -127);
+        assert_eq!(s.qx[kp + 3], 0);
+        // qpair packs little-endian i16 pairs.
+        let x0 = s.qx[kp] as i16 as u16 as u32;
+        let x1 = s.qx[kp + 1] as i16 as u16 as u32;
+        assert_eq!(s.qpair[kp / 2] as u32, x0 | (x1 << 16));
     }
 
     #[test]

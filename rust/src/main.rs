@@ -159,12 +159,21 @@ fn cmd_simulate(args: &Args) -> Result<(), String> {
     if cores < 1 {
         return Err("--cores must be >= 1".into());
     }
+    let prec_str = args.get_or("precision", "f32");
+    let precision = mtsrnn::memsim::SimPrec::parse(prec_str)
+        .ok_or_else(|| format!("unknown --precision {prec_str:?} (f32|q8|q8q)"))?;
+    if precision != mtsrnn::memsim::SimPrec::F32 && arch != Arch::Sru {
+        return Err(format!("--precision {prec_str} is sru-only (got --arch {arch})"));
+    }
     let mut cfg = SimConfig::paper(cpu, ModelConfig::paper(arch, size), t);
     cfg.samples = samples;
     cfg.cores = cores;
+    cfg.precision = precision;
     let r = simulate(&cfg);
     println!("platform            {}", cpu.name);
-    println!("model               {arch} {size:?} T={t} cores={cores} ({samples} samples)");
+    println!(
+        "model               {arch}:{prec_str} {size:?} T={t} cores={cores} ({samples} samples)"
+    );
     println!("predicted time      {:.3} ms", r.millis());
     println!("  compute cycles    {:.3e}", r.compute_cycles);
     println!("  memory cycles     {:.3e}", r.memory_cycles);

@@ -36,6 +36,12 @@ pub struct CpuSpec {
     pub gemv_efficiency: f64,
     /// Cycles per scalar transcendental (sigmoid/tanh via libm).
     pub transcendental_cycles: f64,
+    /// Int8 MAC throughput relative to f32 FMA throughput (the q8q
+    /// integer-kernel compute axis): AVX2 `madd_epi16` retires 16 MACs
+    /// per instruction vs 8 f32 MACs per FMA on the same ports → 2.0;
+    /// NEON `vmull_s8` + `vpadalq_s16` likewise doubles the per-
+    /// instruction MAC count over `vfmaq_f32`.
+    pub int8_mac_ratio: f64,
     pub line_size: usize,
     pub l1: CacheSpec,
     pub l2: CacheSpec,
@@ -83,6 +89,9 @@ pub const INTEL_I7_3930K: CpuSpec = CpuSpec {
     gemm_half_n: 6.0,
     gemv_efficiency: 0.067,
     transcendental_cycles: 12.0,
+    // SSE4/AVX2-class pmaddwd: 2x the f32 MAC rate (no VNNI on SNB-E;
+    // the ratio models the madd_epi16 kernel this repo actually ships).
+    int8_mac_ratio: 2.0,
     line_size: 64,
     l1: CacheSpec {
         size_bytes: 32 * 1024,
@@ -124,6 +133,8 @@ pub const ARM_DENVER2: CpuSpec = CpuSpec {
     gemm_half_n: 2.5,
     gemv_efficiency: 0.10,
     transcendental_cycles: 18.0,
+    // NEON widening i16 dot (vmull_s8 + vpadalq_s16): 2x f32 vfmaq.
+    int8_mac_ratio: 2.0,
     line_size: 64,
     l1: CacheSpec {
         size_bytes: 32 * 1024,

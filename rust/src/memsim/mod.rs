@@ -22,5 +22,5 @@ pub mod trace;
 pub use cache::Cache;
 pub use cpu::{CpuSpec, ARM_DENVER2, INTEL_I7_3930K};
 pub use hierarchy::{AccessCounts, Hierarchy, Served};
-pub use model::{simulate, SimConfig, SimReport, COMPUTE_PJ_PER_FLOP};
+pub use model::{simulate, SimConfig, SimPrec, SimReport, COMPUTE_PJ_PER_FLOP};
 pub use sweep::{bandwidth_sweep, core_sweep, llc_sweep, CorePoint, SweepPoint};

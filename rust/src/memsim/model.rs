@@ -11,12 +11,47 @@
 use crate::memsim::cpu::CpuSpec;
 use crate::memsim::hierarchy::{AccessCounts, Hierarchy};
 use crate::memsim::trace::{
-    trace_elementwise, trace_gemm, trace_gemv, trace_transpose, Layout,
+    trace_elementwise, trace_gemm, trace_gemm_w, trace_gemv, trace_transpose, Layout,
 };
 use crate::models::config::{Arch, ModelConfig};
 
 /// Compute energy per f32 FLOP (pJ) — ALU + register file, CACTI-class.
 pub const COMPUTE_PJ_PER_FLOP: f64 = 1.5;
+
+/// Numeric precision of the simulated engine — the model's
+/// bytes-and-ops axis.  `Q8` shrinks the *traffic* (1-byte weights);
+/// `Q8Q` additionally runs the gate GEMM MACs at the platform's
+/// [`CpuSpec::int8_mac_ratio`] integer throughput — separating the two
+/// is what lets `ablation --exp quant` predict how much of the q8q
+/// speedup is bandwidth and how much is arithmetic.  SRU only (mirrors
+/// the engine: q8/q8q are SRU precisions); other archs ignore it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimPrec {
+    F32,
+    /// Int8 weights, f32 compute (the widening path).
+    Q8,
+    /// Int8 weights + dynamically quantized activations, integer MACs.
+    Q8Q,
+}
+
+impl SimPrec {
+    /// Weight element size in bytes.
+    fn weight_bytes(self) -> u64 {
+        match self {
+            SimPrec::F32 => 4,
+            SimPrec::Q8 | SimPrec::Q8Q => 1,
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<SimPrec> {
+        match s {
+            "f32" => Some(SimPrec::F32),
+            "q8" => Some(SimPrec::Q8),
+            "q8q" => Some(SimPrec::Q8Q),
+            _ => None,
+        }
+    }
+}
 
 /// One simulation request.
 #[derive(Debug, Clone, Copy)]
@@ -39,6 +74,8 @@ pub struct SimConfig {
     /// recurrence remainder (transcendentals) stays serial — the model's
     /// Amdahl fraction.
     pub cores: usize,
+    /// Engine precision (see [`SimPrec`]; SRU only).
+    pub precision: SimPrec,
 }
 
 impl SimConfig {
@@ -50,6 +87,7 @@ impl SimConfig {
             samples: crate::models::config::PAPER_SAMPLES,
             measure_blocks: 2,
             cores: 1,
+            precision: SimPrec::F32,
         }
     }
 }
@@ -74,21 +112,42 @@ impl SimReport {
     }
 }
 
-/// Replay one block's access stream. Returns the FLOPs and transcendental
-/// counts of the block (for the compute term).
-fn trace_block(h: &mut Hierarchy, lay: &Layout, model: &ModelConfig, t: usize) -> (f64, f64) {
+/// Replay one block's access stream.  Returns the block's `(gemm_flops,
+/// aux_flops, transcendentals)` for the compute term — GEMM/GEMV MACs
+/// are kept separate from the element-wise remainder so the Q8Q integer
+/// MAC rate applies only to the arithmetic that actually runs on the
+/// integer kernels.
+fn trace_block(
+    h: &mut Hierarchy,
+    lay: &Layout,
+    model: &ModelConfig,
+    t: usize,
+    prec: SimPrec,
+) -> (f64, f64, f64) {
     let (hd, d) = (model.hidden, model.input);
     match model.arch {
         Arch::Sru => {
             // transpose x -> xt, gates = W @ xt (+bias), scan.
             trace_transpose(h, lay.x, lay.xt, t, d);
-            trace_gemm(h, lay.weights, lay.xt, lay.gates, 3 * hd, d, t);
+            // Int8 precisions stream 1 weight byte per element (plus a
+            // per-row f32 scale pass, counted separately below).
+            trace_gemm_w(h, lay.weights, lay.xt, lay.gates, 3 * hd, d, t, prec.weight_bytes());
+            if prec != SimPrec::F32 {
+                trace_elementwise(h, &[lay.weights2], &[], 3 * hd);
+            }
             // Scan: read 3 gate rows + x, write out; carry state.
             trace_elementwise(h, &[lay.gates, lay.x], &[lay.out], hd * t * 3 / 2);
             trace_elementwise(h, &[lay.state], &[lay.state], hd);
-            let flops = 2.0 * (3 * hd * d * t) as f64 + 8.0 * (hd * t) as f64;
+            let gemm = 2.0 * (3 * hd * d * t) as f64;
+            let mut aux = 8.0 * (hd * t) as f64;
+            if prec == SimPrec::Q8Q {
+                // Dynamic per-column activation quantization: an
+                // abs-max + scale pass over the [d, t] input block —
+                // f32 work, so it stays in the aux term.
+                aux += 3.0 * (d * t) as f64;
+            }
             let transc = 3.0 * (hd * t) as f64; // 2 sigmoid + 1 tanh
-            (flops, transc)
+            (gemm, aux, transc)
         }
         Arch::Qrnn => {
             trace_transpose(h, lay.x, lay.xt, t, d);
@@ -106,9 +165,10 @@ fn trace_block(h: &mut Hierarchy, lay: &Layout, model: &ModelConfig, t: usize) -
             );
             trace_elementwise(h, &[lay.gates], &[lay.out], hd * t * 3 / 2);
             trace_elementwise(h, &[lay.state], &[lay.state], hd);
-            let flops = 2.0 * (2 * 3 * hd * d * t) as f64 + 8.0 * (hd * t) as f64;
+            let gemm = 2.0 * (2 * 3 * hd * d * t) as f64;
+            let aux = 8.0 * (hd * t) as f64;
             let transc = 4.0 * (hd * t) as f64; // sig f, sig o, tanh xhat, tanh c
-            (flops, transc)
+            (gemm, aux, transc)
         }
         Arch::Lstm => {
             // Precompute mode when t > 1 (§3.1); classic per-step when t=1.
@@ -116,28 +176,29 @@ fn trace_block(h: &mut Hierarchy, lay: &Layout, model: &ModelConfig, t: usize) -
                 trace_transpose(h, lay.x, lay.xt, t, d);
                 trace_gemm(h, lay.weights, lay.xt, lay.gates, 4 * hd, d, t);
             }
-            let mut flops = if t > 1 {
+            let mut gemm = if t > 1 {
                 2.0 * (4 * hd * d * t) as f64
             } else {
                 0.0
             };
+            let mut aux = 0.0;
             for _s in 0..t {
                 if t == 1 {
                     // W @ x_t every step (no precompute).
                     trace_gemv(h, lay.weights, lay.x, lay.gates, 4 * hd, d);
-                    flops += 2.0 * (4 * hd * d) as f64;
+                    gemm += 2.0 * (4 * hd * d) as f64;
                 } else {
                     // Strided read of the GX column.
                     trace_elementwise(h, &[lay.gates], &[], 4 * hd);
                 }
                 // U @ h_{t-1}: the irreducible per-step weight stream.
                 trace_gemv(h, lay.weights2, lay.state, lay.gates + 0x40_0000, 4 * hd, hd);
-                flops += 2.0 * (4 * hd * hd) as f64;
+                gemm += 2.0 * (4 * hd * hd) as f64;
                 trace_elementwise(h, &[lay.gates + 0x40_0000], &[lay.out, lay.state], hd * 2);
-                flops += 10.0 * hd as f64;
+                aux += 10.0 * hd as f64;
             }
             let transc = 5.0 * (hd * t) as f64; // 3 sigmoid + 2 tanh per step
-            (flops, transc)
+            (gemm, aux, transc)
         }
     }
 }
@@ -154,14 +215,16 @@ pub fn simulate(cfg: &SimConfig) -> SimReport {
 
     // Warmup: populate the hierarchy (cold-start effects are a rounding
     // error over 1,024 samples and the paper times warm loops).
-    trace_block(&mut h, &lay, &cfg.model, t);
+    trace_block(&mut h, &lay, &cfg.model, t, cfg.precision);
     h.reset_counters();
 
-    let mut flops = 0.0;
+    let mut gemm_flops = 0.0;
+    let mut aux_flops = 0.0;
     let mut transc = 0.0;
     for _ in 0..measured {
-        let (f, tr) = trace_block(&mut h, &lay, &cfg.model, t);
-        flops += f;
+        let (g, a, tr) = trace_block(&mut h, &lay, &cfg.model, t, cfg.precision);
+        gemm_flops += g;
+        aux_flops += a;
         transc += tr;
     }
 
@@ -180,15 +243,26 @@ pub fn simulate(cfg: &SimConfig) -> SimReport {
     // extra bytes.
     let eff = spec.gemm_efficiency_at(t);
     let cores = cfg.cores.max(1) as f64;
-    let compute_cycles_measured =
-        flops / (spec.flops_per_cycle * eff * cores) + transc * spec.transcendental_cycles;
+    // Q8Q runs the GEMM MACs on the integer kernels — `int8_mac_ratio`
+    // more arithmetic per cycle at the same efficiency curve.  Only the
+    // GEMM term gets the ratio: the element-wise remainder (and Q8Q's
+    // quantization pass) stays f32.  Q8 only shrinks bytes (widening
+    // path computes in f32), so its compute terms are the f32 ones.
+    let mac_ratio = if cfg.precision == SimPrec::Q8Q {
+        spec.int8_mac_ratio
+    } else {
+        1.0
+    };
+    let compute_cycles_measured = gemm_flops / (spec.flops_per_cycle * eff * cores * mac_ratio)
+        + aux_flops / (spec.flops_per_cycle * eff * cores)
+        + transc * spec.transcendental_cycles;
 
     let compute_cycles = compute_cycles_measured * scale;
     let memory_cycles = mem_cycles_measured * scale;
     let cycles = compute_cycles.max(memory_cycles);
     let seconds = spec.cycles_to_seconds(cycles);
 
-    let compute_energy = flops * scale * COMPUTE_PJ_PER_FLOP * 1e-12;
+    let compute_energy = (gemm_flops + aux_flops) * scale * COMPUTE_PJ_PER_FLOP * 1e-12;
     let energy = energy_measured * scale + compute_energy;
 
     SimReport {
@@ -325,6 +399,38 @@ mod tests {
             (r4.memory_cycles - r1.memory_cycles).abs() < 1e-6 * r1.memory_cycles.max(1.0),
             "memory term must be core-count-invariant"
         );
+    }
+
+    #[test]
+    fn quant_precisions_split_traffic_and_compute() {
+        // The bytes-and-ops axis: Q8 cuts DRAM traffic ~4x vs F32 but
+        // keeps the f32 compute term; Q8Q matches Q8's traffic exactly
+        // (same access stream) and runs the GEMM MACs at the int8 rate.
+        let model = ModelConfig::paper(Arch::Sru, ModelSize::Large);
+        let at = |prec: SimPrec| {
+            let mut c = SimConfig::paper(ARM_DENVER2, model, 32);
+            c.samples = 256;
+            c.precision = prec;
+            simulate(&c)
+        };
+        let f = at(SimPrec::F32);
+        let q = at(SimPrec::Q8);
+        let qq = at(SimPrec::Q8Q);
+        let traffic_ratio = f.dram_bytes_per_sample / q.dram_bytes_per_sample;
+        assert!(traffic_ratio > 3.0, "q8 traffic cut {traffic_ratio:.2}");
+        assert!(
+            (q.dram_bytes_per_sample - qq.dram_bytes_per_sample).abs()
+                < 1e-9 * q.dram_bytes_per_sample,
+            "q8 and q8q stream identical bytes"
+        );
+        assert!(
+            qq.compute_cycles < q.compute_cycles * 0.7,
+            "int8 MACs must cut the compute term: {:.3e} vs {:.3e}",
+            qq.compute_cycles,
+            q.compute_cycles
+        );
+        assert!(qq.seconds <= q.seconds + 1e-12);
+        assert!(q.seconds <= f.seconds + 1e-12);
     }
 
     #[test]

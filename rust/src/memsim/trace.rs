@@ -46,8 +46,25 @@ impl Default for Layout {
 /// Loop structure mirrors `linalg::gemm::gemm_acc`: K-stripes of `KC`,
 /// `MR`-row stripes of A, inner traversal of the contiguous B row.
 pub fn trace_gemm(h: &mut Hierarchy, a: u64, b: u64, c: u64, m: usize, k: usize, n: usize) {
+    trace_gemm_w(h, a, b, c, m, k, n, F);
+}
+
+/// [`trace_gemm`] with an explicit weight (`A`) element size in bytes —
+/// the int8 precision axis: a q8/q8q engine streams 1 byte per weight
+/// where the f32 engine streams 4, while `B`/`C` traffic is unchanged.
+#[allow(clippy::too_many_arguments)]
+pub fn trace_gemm_w(
+    h: &mut Hierarchy,
+    a: u64,
+    b: u64,
+    c: u64,
+    m: usize,
+    k: usize,
+    n: usize,
+    wf: u64,
+) {
     if n == 1 {
-        trace_gemv(h, a, b, c, m, k);
+        trace_gemv_w(h, a, b, c, m, k, wf);
         return;
     }
     let ls = h.line_size() as u64;
@@ -61,8 +78,8 @@ pub fn trace_gemm(h: &mut Hierarchy, a: u64, b: u64, c: u64, m: usize, k: usize,
             // A elements: rows i..i+mr, columns k0..k0+kc, read once each
             // (each element is then reused n times from a register).
             for r in 0..mr {
-                let row_base = a + ((i + r) * k64 + k0) * F;
-                h.access_range(row_base, kc * F);
+                let row_base = a + ((i + r) * k64 + k0) * wf;
+                h.access_range(row_base, kc * wf);
             }
             // B rows k0..k0+kc: each traversed once per A-stripe — this
             // is the stream that must stay cache-resident for the GEMM
@@ -87,9 +104,14 @@ pub fn trace_gemm(h: &mut Hierarchy, a: u64, b: u64, c: u64, m: usize, k: usize,
 /// row streamed exactly once, `x` re-read per row (cache-resident), one
 /// `y` write per row.
 pub fn trace_gemv(h: &mut Hierarchy, a: u64, x: u64, y: u64, m: usize, k: usize) {
+    trace_gemv_w(h, a, x, y, m, k, F);
+}
+
+/// [`trace_gemv`] with an explicit weight element size in bytes.
+pub fn trace_gemv_w(h: &mut Hierarchy, a: u64, x: u64, y: u64, m: usize, k: usize, wf: u64) {
     let (m64, k64) = (m as u64, k as u64);
     for r in 0..m64 {
-        h.access_range(a + r * k64 * F, k64 * F);
+        h.access_range(a + r * k64 * wf, k64 * wf);
         h.access_range(x, k64 * F);
         h.access_range(y + r * F, F);
     }

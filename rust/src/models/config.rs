@@ -166,12 +166,21 @@ pub const ASR_QRNN: StackConfig = StackConfig {
 pub const ASR_FEAT: usize = 40;
 pub const ASR_VOCAB: usize = 32;
 
-/// Numeric precision of a layer's weights.
+/// Numeric precision of a layer.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Precision {
     F32,
-    /// Per-row symmetric int8 (see `engine::quant`).
+    /// Per-row symmetric int8 *weights*; activations and arithmetic stay
+    /// f32 (see `engine::quant`) — 1/4 the weight DRAM traffic.
     Q8,
+    /// Int8 weights **and** dynamically quantized activations: the gate
+    /// GEMM runs on integer microkernels end to end (one symmetric scale
+    /// per time step, i32 accumulation, dequant fused into the store) —
+    /// the traffic cut of [`Precision::Q8`] plus the 2× integer MAC
+    /// rate.  The dynamic scales cost one extra pass over each input
+    /// block and a bounded extra quantization error (~0.4% of each
+    /// frame's max activation).
+    Q8Q,
 }
 
 impl Precision {
@@ -179,6 +188,7 @@ impl Precision {
         match self {
             Precision::F32 => "f32",
             Precision::Q8 => "q8",
+            Precision::Q8Q => "q8q",
         }
     }
 
@@ -186,6 +196,7 @@ impl Precision {
         match s {
             "f32" => Some(Precision::F32),
             "q8" => Some(Precision::Q8),
+            "q8q" => Some(Precision::Q8Q),
             _ => None,
         }
     }
@@ -262,13 +273,13 @@ pub struct LayerSpec {
 }
 
 impl LayerSpec {
-    /// Validating constructor: int8 weights exist only for SRU (the
-    /// paper's §4 quantization result); other combinations are errors,
-    /// not panics.
+    /// Validating constructor: int8 precisions (q8, q8q) exist only for
+    /// SRU (the paper's §4 quantization result); other combinations are
+    /// errors, not panics.
     pub fn new(arch: Arch, precision: Precision) -> Result<LayerSpec, String> {
-        if precision == Precision::Q8 && arch != Arch::Sru {
+        if precision != Precision::F32 && arch != Arch::Sru {
             return Err(format!(
-                "precision q8 is only available for sru layers (got {arch}:q8)"
+                "precision {precision} is only available for sru layers (got {arch}:{precision})"
             ));
         }
         Ok(LayerSpec {
@@ -315,7 +326,7 @@ impl LayerSpec {
         let arch = Arch::parse(a)
             .ok_or_else(|| format!("layer spec {s:?}: unknown arch {a:?} (sru|qrnn|lstm)"))?;
         let precision = Precision::parse(p)
-            .ok_or_else(|| format!("layer spec {s:?}: unknown precision {p:?} (f32|q8)"))?;
+            .ok_or_else(|| format!("layer spec {s:?}: unknown precision {p:?} (f32|q8|q8q)"))?;
         let spec = LayerSpec::new(arch, precision)?;
         Ok(if bidir { spec.bi() } else { spec })
     }
@@ -331,7 +342,9 @@ impl LayerSpec {
     /// Per-stream state slots of this layer kind, in the order of
     /// `python/compile/model.py::stack_flat_order`: SRU keeps `c`, QRNN
     /// `c` then `xprev`, LSTM `h` then `c`.  Precision does not change
-    /// the state (int8 applies to weights only), and neither does
+    /// the state (q8 quantizes weights only; q8q's activation
+    /// quantization is transient per dispatch — the carried state stays
+    /// f32), and neither does
     /// `bidir`: only the forward direction streams across blocks — the
     /// backward direction restarts from zero state on every chunk, so it
     /// carries nothing between dispatches.
@@ -370,7 +383,8 @@ impl LayerSpec {
 /// ```
 ///
 /// Examples: `sru:f32:512x4` (the ASR_SRU stack), `lstm:f32:512x4`,
-/// `sru:q8:512x4` (int8 weights), `sru:f32:512x4,l3=sru:q8` (mixed
+/// `sru:q8:512x4` (int8 weights), `sru:q8q:512x4` (int8 weights *and*
+/// activations — integer gate GEMMs), `sru:f32:512x4,l3=sru:q8` (mixed
 /// precision: int8 final layer), `sru:f32:bi:512x4` (chunked
 /// bidirectional — fwd+bwd per dispatched block, summed),
 /// `sru:f32:512x4,l0=sru:f32:bi` (bidir first layer only).  The
@@ -685,6 +699,13 @@ mod tests {
         assert_eq!(s.layers[3].precision, Precision::Q8);
         // Canonical name round-trips.
         assert_eq!(StackSpec::parse(&s.name()).unwrap(), s);
+        // q8q: base grammar and per-layer override both round-trip.
+        let qq = StackSpec::parse("sru:q8q:64x2").unwrap();
+        assert!(qq.layers.iter().all(|l| l.precision == Precision::Q8Q));
+        assert_eq!(StackSpec::parse(&qq.name()).unwrap(), qq);
+        let mixed = StackSpec::parse("sru:f32:64x4,l3=sru:q8q").unwrap();
+        assert_eq!(mixed.layers[3].precision, Precision::Q8Q);
+        assert_eq!(StackSpec::parse(&mixed.name()).unwrap(), mixed);
         let uniform = StackSpec::parse("lstm:f32:32x2").unwrap();
         assert_eq!(uniform.name(), "lstm:f32:32x2");
         assert_eq!(StackSpec::parse(&uniform.name()).unwrap(), uniform);
@@ -701,6 +722,8 @@ mod tests {
             "sru:q4:512x4",
             "lstm:q8:512x4",   // q8 is sru-only
             "qrnn:q8:512x4",   // q8 is sru-only
+            "lstm:q8q:512x4",  // q8q is sru-only
+            "qrnn:q8q:512x4",  // q8q is sru-only
             "sru:f32:0x4",     // hidden must be >= 1
             "sru:f32:512x0",   // depth must be >= 1
             "sru:f32:512x4,l9=sru:q8", // override out of range
@@ -725,6 +748,11 @@ mod tests {
             LayerSpec::new(Arch::Sru, Precision::Q8).unwrap().state_layout(h),
             LayerSpec::f32(Arch::Sru).state_layout(h),
             "precision must not change the state layout"
+        );
+        assert_eq!(
+            LayerSpec::new(Arch::Sru, Precision::Q8Q).unwrap().state_layout(h),
+            LayerSpec::f32(Arch::Sru).state_layout(h),
+            "q8q must not change the state layout either"
         );
         assert_eq!(
             LayerSpec::f32(Arch::Qrnn).state_layout(h).slots,

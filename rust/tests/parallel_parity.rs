@@ -32,14 +32,19 @@ fn lock_pool() -> std::sync::MutexGuard<'static, ()> {
     POOL_LOCK.lock().unwrap_or_else(|e| e.into_inner())
 }
 
-/// The four served layer kinds, each as a 3-deep 64-wide stack (big
-/// enough that the gate GEMMs cross the pool's work threshold and the
-/// wavefront engages at depth >= 2).
+/// The served layer kind × precision grid, each as a 3-deep 64-wide
+/// stack (big enough that the gate GEMMs cross the pool's work
+/// threshold and the wavefront engages at depth >= 2).
 fn specs() -> Vec<StackSpec> {
     vec![
         StackSpec::new(24, 64, 12).with_layers(LayerSpec::f32(Arch::Sru), 3),
         StackSpec::new(24, 64, 12)
             .with_layers(LayerSpec::new(Arch::Sru, Precision::Q8).unwrap(), 3),
+        // q8q: integer gate kernels — exact i32 accumulation makes the
+        // M-split / wavefront / batch paths bit-identical by
+        // construction; asserted here like every other kind.
+        StackSpec::new(24, 64, 12)
+            .with_layers(LayerSpec::new(Arch::Sru, Precision::Q8Q).unwrap(), 3),
         StackSpec::new(24, 64, 12).with_layers(LayerSpec::f32(Arch::Qrnn), 3),
         StackSpec::new(24, 64, 12).with_layers(LayerSpec::f32(Arch::Lstm), 3),
     ]

@@ -1,0 +1,359 @@
+//! q8q integer-kernel parity — the subsystem's core guarantees:
+//!
+//! 1. **Bit-identical i32 accumulators across dispatch targets.**  The
+//!    integer dot products are exact, and integer addition is
+//!    associative, so the portable, AVX2 and NEON kernels must agree
+//!    *bit for bit* on the raw `[m, n]` i32 block — not within a
+//!    tolerance.  The fused f32 outputs then agree bitwise too, because
+//!    dequantization is one shared code path.
+//! 2. **Bit-identical across thread counts.**  The M-split only
+//!    partitions rows; verified at `MTSRNN_THREADS` 1 vs 4.
+//! 3. **Accuracy.**  The activation-quantization error of a single gate
+//!    GEMM obeys the derived per-row bound; the end-to-end q8q engine
+//!    and stack stay within the int8 tolerance class of their f32 twins
+//!    at T in {1, 4, 16}.
+//! 4. **Serving.**  A `sru:q8q:512x4` stack round-trips through the
+//!    coordinator.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use mtsrnn::coordinator::{BatchMode, Coordinator, CoordinatorConfig, NativeBackend, PolicyMode};
+use mtsrnn::engine::{Engine, NativeStack, QuantMatrix, QuantSruEngine, SruEngine};
+use mtsrnn::linalg::pool;
+use mtsrnn::linalg::{detect_simd, Act, Epilogue, PackedQuantGemm, QuantScratch, Simd};
+use mtsrnn::models::config::{Arch, ModelConfig, StackSpec};
+use mtsrnn::models::{SruParams, StackParams};
+use mtsrnn::util::Rng;
+
+static POOL_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock_pool() -> std::sync::MutexGuard<'static, ()> {
+    POOL_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Per-row int8 weights + scales for a seeded random `[m, k]` matrix.
+fn quantized(m: usize, k: usize, seed: u64) -> (QuantMatrix, Vec<f32>) {
+    let mut w = vec![0.0; m * k];
+    Rng::new(seed).fill_normal(&mut w, 0.5);
+    (QuantMatrix::quantize(&w, m, k), w)
+}
+
+fn assert_bits_equal(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            x.to_bits() == y.to_bits(),
+            "{what}: idx {i}: {x} ({:#010x}) vs {y} ({:#010x})",
+            x.to_bits(),
+            y.to_bits()
+        );
+    }
+}
+
+// -----------------------------------------------------------------------
+// 1. Exact i32 / bitwise f32 parity across kernel dispatch targets
+// -----------------------------------------------------------------------
+
+#[test]
+fn i32_accumulators_bit_identical_across_dispatch() {
+    // Grid crosses panel (16), register-tile (AVX2's 6 / NEON's 4) and
+    // k-pair boundaries (odd k exercises the zero pad column).
+    let host = detect_simd();
+    for &m in &[1usize, 15, 16, 17, 48] {
+        for &k in &[1usize, 2, 7, 16, 63, 256] {
+            for n in 1..=13 {
+                let (q, _) = quantized(m, k, (m * 1000 + k * 13 + n) as u64);
+                let mut x = vec![0.0; n * k];
+                Rng::new((n * 31 + k) as u64).fill_normal(&mut x, 1.0);
+
+                let hq = PackedQuantGemm::with_dispatch_q8q(q.q(), q.row_scales(), m, k, host, 0);
+                let pq = PackedQuantGemm::with_dispatch_q8q(
+                    q.q(),
+                    q.row_scales(),
+                    m,
+                    k,
+                    Simd::Portable,
+                    0,
+                );
+                let mut scratch = QuantScratch::new();
+                let mut got = vec![0i32; m * n];
+                let mut want = vec![0i32; m * n];
+                hq.matmul_i32(&mut got, &x, n, &mut scratch);
+                pq.matmul_i32(&mut want, &x, n, &mut scratch);
+                assert_eq!(got, want, "({m},{k},{n}) {host:?} vs portable i32");
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_outputs_bit_identical_across_dispatch() {
+    // With identical i32 accumulators and one shared dequant epilogue,
+    // the f32 outputs (scale * colscale + bias + activation) must agree
+    // bitwise too — including the accumulate mode.
+    let host = detect_simd();
+    let (m, k) = (48usize, 70usize);
+    let (q, _) = quantized(m, k, 0xD15B);
+    let bias: Vec<f32> = (0..m).map(|r| (r as f32 - 24.0) * 0.01).collect();
+    let acts = [Act::Ident, Act::Sigmoid, Act::Tanh];
+    let hq = PackedQuantGemm::with_dispatch_q8q(q.q(), q.row_scales(), m, k, host, 0);
+    let pq = PackedQuantGemm::with_dispatch_q8q(q.q(), q.row_scales(), m, k, Simd::Portable, 0);
+    let mut scratch = QuantScratch::new();
+    for n in [1usize, 3, 6, 7, 16] {
+        let mut x = vec![0.0; n * k];
+        Rng::new(n as u64).fill_normal(&mut x, 1.0);
+        for acc in [false, true] {
+            let mut got = vec![0.25f32; m * n];
+            let mut want = vec![0.25f32; m * n];
+            let epi = Epilogue::fused(&bias, &acts);
+            hq.matmul_q8q(&mut got, &x, n, acc, &epi, &mut scratch);
+            pq.matmul_q8q(&mut want, &x, n, acc, &epi, &mut scratch);
+            assert_bits_equal(&got, &want, &format!("n={n} acc={acc}"));
+        }
+    }
+}
+
+// -----------------------------------------------------------------------
+// 2. Bit-identical across thread counts {1, 4}
+// -----------------------------------------------------------------------
+
+#[test]
+fn q8q_bit_identical_across_thread_counts() {
+    let _guard = lock_pool();
+    // Big enough that m*k*n crosses PAR_MIN_WORK and many panels exist.
+    let (m, k, n) = (512usize, 256usize, 16usize);
+    let (q, _) = quantized(m, k, 0x7EAD);
+    let pq = PackedQuantGemm::new_q8q(q.q(), q.row_scales(), m, k);
+    let mut x = vec![0.0; n * k];
+    Rng::new(5).fill_normal(&mut x, 1.0);
+    let bias = vec![0.05f32; m];
+    let epi = Epilogue::fused(&bias, &[Act::Ident, Act::Sigmoid, Act::Sigmoid]);
+    let mut scratch = QuantScratch::new();
+
+    pool::set_threads(1);
+    let mut serial = vec![0.0f32; m * n];
+    pq.matmul_q8q(&mut serial, &x, n, false, &epi, &mut scratch);
+
+    pool::set_threads(4);
+    let mut par = vec![0.0f32; m * n];
+    pq.matmul_q8q(&mut par, &x, n, false, &epi, &mut scratch);
+    pool::set_threads(1);
+
+    assert_bits_equal(&serial, &par, "threads 1 vs 4");
+}
+
+// -----------------------------------------------------------------------
+// 3. Accuracy: derived bound for one GEMM, tolerance end to end
+// -----------------------------------------------------------------------
+
+#[test]
+fn activation_quant_error_within_derived_bound() {
+    // Isolate the *activation* quantization error: compare the q8q
+    // integer GEMM against the widening path (same int8 weights, exact
+    // f32 activations).  For output (r, j):
+    //
+    //   |q8q - widen| <= sum_kk |w_deq[r][kk]| * |x - x_hat|
+    //                 <= (sx_j / 2) * rowsum_abs(w_deq[r])
+    //
+    // since dynamic symmetric quantization bounds each element's error
+    // by half an LSB (sx_j = max|x_j| / 127).  A small absolute slack
+    // covers f32 summation rounding on the widening side.
+    let (m, k, n) = (48usize, 129usize, 8usize);
+    let (q, _) = quantized(m, k, 0xACC);
+    let pq = PackedQuantGemm::with_dispatch_q8q(q.q(), q.row_scales(), m, k, detect_simd(), 0);
+    let mut x = vec![0.0; n * k];
+    Rng::new(9).fill_normal(&mut x, 1.5);
+    let mut scratch = QuantScratch::new();
+    let mut got = vec![0.0f32; m * n];
+    pq.matmul_q8q(&mut got, &x, n, false, &Epilogue::NONE, &mut scratch);
+    let mut want = vec![0.0f32; m * n];
+    pq.matmul(&mut want, &x, n, false, &Epilogue::NONE);
+
+    for r in 0..m {
+        let rowsum: f32 = (0..k).map(|c| pq.dequant(r, c).abs()).sum();
+        for j in 0..n {
+            let frame = &x[j * k..(j + 1) * k];
+            let sx = frame.iter().fold(0.0f32, |mx, v| mx.max(v.abs())) / 127.0;
+            let bound = 0.5 * sx * rowsum + 1e-3;
+            let d = (got[r * n + j] - want[r * n + j]).abs();
+            assert!(d <= bound, "({r},{j}): err {d} > bound {bound}");
+        }
+    }
+}
+
+#[test]
+fn q8q_engine_close_to_f32_engine() {
+    // End-to-end: the q8q engine's outputs stay in the int8 tolerance
+    // class of the f32 SRU across block sizes.  (The recurrence folds
+    // the per-gate bound above through sigmoids — Lipschitz 1/4 — and
+    // the highway term, so the empirical thresholds mirror the q8 test
+    // with headroom for the extra activation-quant term.)
+    let h = 48;
+    let cfg = ModelConfig {
+        arch: Arch::Sru,
+        hidden: h,
+        input: h,
+    };
+    let p = SruParams::init(&cfg, &mut Rng::new(3));
+    let steps = 33;
+    let mut x = vec![0.0; steps * h];
+    Rng::new(4).fill_normal(&mut x, 1.0);
+
+    let mut f32e = SruEngine::new(p.clone(), 16);
+    let mut want = vec![0.0; steps * h];
+    f32e.run_sequence(&x, steps, &mut want);
+
+    for t in [1usize, 4, 16] {
+        let mut qe = QuantSruEngine::new_q8q(&p, t);
+        assert_eq!(qe.arch(), "sru-int8x8");
+        let mut got = vec![0.0; steps * h];
+        qe.run_sequence(&x, steps, &mut got);
+        let mut mad = 0.0f64;
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            let d = (g - w).abs();
+            mad += d as f64;
+            assert!(d < 0.25, "T={t} idx {i}: {g} vs {w}");
+        }
+        mad /= (steps * h) as f64;
+        assert!(mad < 0.02, "T={t}: mean abs deviation {mad}");
+    }
+}
+
+#[test]
+fn q8q_block_decomposition_is_bitwise_invariant() {
+    // Per-column quantization depends only on that column's frame, and
+    // the integer dot per column is width-independent — so with the
+    // integer path active at every width (int_cutoff = 0, guaranteed
+    // below the probe threshold at this size), any block decomposition
+    // produces bit-identical outputs.  This is the q8q analog of the
+    // f32 "block sizes agree" equivalence, but *exact*.
+    let h = 48;
+    let cfg = ModelConfig {
+        arch: Arch::Sru,
+        hidden: h,
+        input: h,
+    };
+    let p = SruParams::init(&cfg, &mut Rng::new(8));
+    let steps = 21;
+    let mut x = vec![0.0; steps * h];
+    Rng::new(6).fill_normal(&mut x, 1.0);
+
+    let mut one = QuantSruEngine::new_q8q(&p, 1);
+    let mut a = vec![0.0; steps * h];
+    one.run_sequence(&x, steps, &mut a);
+
+    let mut big = QuantSruEngine::new_q8q(&p, 16);
+    let mut b = vec![0.0; steps * h];
+    big.run_sequence(&x, steps, &mut b);
+
+    assert_bits_equal(&a, &b, "T=1 vs T=16 q8q");
+}
+
+#[test]
+fn q8q_stack_logits_close_to_f32() {
+    // Same f32 master weights; the q8q stack quantizes at construction
+    // and quantizes activations per dispatch.  Tolerances follow the q8
+    // stack test (stack_api.rs) — the activation term adds error of the
+    // same order as the weight term.
+    let f32_spec = StackSpec::parse("sru:f32:24x2,feat=8,vocab=5").unwrap();
+    let q8q_spec = StackSpec::parse("sru:q8q:24x2,feat=8,vocab=5").unwrap();
+    let params = StackParams::init(&f32_spec, &mut Rng::new(41)).unwrap();
+    let steps = 24;
+    let mut x = vec![0.0; steps * f32_spec.feat];
+    Rng::new(43).fill_normal(&mut x, 1.0);
+
+    for t in [1usize, 4, 16] {
+        let run = |spec: &StackSpec| {
+            let mut stack = NativeStack::new(spec, params.clone(), t).unwrap();
+            let mut state = stack.init_state();
+            let mut logits = vec![0.0; steps * spec.vocab];
+            let mut s = 0;
+            while s < steps {
+                let tt = t.min(steps - s);
+                stack
+                    .run_block(
+                        &x[s * spec.feat..(s + tt) * spec.feat],
+                        tt,
+                        &mut state,
+                        &mut logits[s * spec.vocab..(s + tt) * spec.vocab],
+                    )
+                    .unwrap();
+                s += tt;
+            }
+            logits
+        };
+        let want = run(&f32_spec);
+        let got = run(&q8q_spec);
+        let mut mad = 0.0f64;
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            let d = (g - w).abs();
+            mad += d as f64;
+            assert!(d < 0.5, "T={t} idx {i}: q8q {g} vs f32 {w}");
+        }
+        mad /= want.len() as f64;
+        assert!(mad < 0.05, "T={t}: mean abs deviation {mad}");
+    }
+}
+
+// -----------------------------------------------------------------------
+// 4. Coordinator serve round-trip on the full-size q8q stack
+// -----------------------------------------------------------------------
+
+#[test]
+fn q8q_512x4_serves_through_coordinator() {
+    let spec = StackSpec::parse("sru:q8q:512x4").unwrap();
+    let params = StackParams::init(&spec, &mut Rng::new(11)).unwrap();
+    let backend = NativeBackend::new(NativeStack::new(&spec, params.clone(), 16).unwrap());
+    let mut c = Coordinator::new(
+        backend,
+        CoordinatorConfig {
+            policy: PolicyMode::Fixed(8),
+            max_wait: Duration::ZERO,
+            max_sessions: 4,
+            batching: BatchMode::Auto,
+        },
+    );
+    let frames = 26;
+    let mut x = vec![0.0; frames * spec.feat];
+    Rng::new(47).fill_normal(&mut x, 1.0);
+    let id = c.open().unwrap();
+    let mut got = Vec::new();
+    // Odd-sized chunks force mixed block decompositions.
+    for chunk in x.chunks(5 * spec.feat) {
+        c.feed(id, chunk).unwrap();
+        c.tick().unwrap();
+        got.extend(c.drain(id, usize::MAX).unwrap());
+    }
+    got.extend(c.close(id).unwrap());
+    assert_eq!(got.len(), frames * spec.vocab);
+    assert!(got.iter().all(|v| v.is_finite()), "logits must be finite");
+
+    // Ground truth: the f32 twin of the same weights through a direct
+    // stack run — q8q stays in the int8 tolerance class end to end.
+    let f32_spec = StackSpec::parse("sru:f32:512x4").unwrap();
+    let mut stack = NativeStack::new(&f32_spec, params, 16).unwrap();
+    let mut state = stack.init_state();
+    let mut want = vec![0.0; frames * spec.vocab];
+    let mut s = 0;
+    while s < frames {
+        let tt = 8.min(frames - s);
+        stack
+            .run_block(
+                &x[s * spec.feat..(s + tt) * spec.feat],
+                tt,
+                &mut state,
+                &mut want[s * spec.vocab..(s + tt) * spec.vocab],
+            )
+            .unwrap();
+        s += tt;
+    }
+    let mut mad = 0.0f64;
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        let d = (g - w).abs();
+        mad += d as f64;
+        assert!(d < 0.5, "logit {i}: q8q {g} vs f32 {w}");
+    }
+    mad /= want.len() as f64;
+    assert!(mad < 0.05, "mean abs deviation {mad}");
+}

@@ -200,6 +200,9 @@ fn run_reference(
             (Precision::Q8, LayerParams::Sru(p)) => {
                 Box::new(QuantSruEngine::new(p, t)) as Box<dyn Engine>
             }
+            (Precision::Q8Q, LayerParams::Sru(p)) => {
+                Box::new(QuantSruEngine::new_q8q(p, t)) as Box<dyn Engine>
+            }
             (_, LayerParams::Qrnn(p)) => Box::new(QrnnEngine::new(p.clone(), t)) as Box<dyn Engine>,
             (_, LayerParams::Lstm(p)) => {
                 Box::new(LstmEngine::new(p.clone(), LstmMode::Precompute(t))) as Box<dyn Engine>
