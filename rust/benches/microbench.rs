@@ -14,9 +14,11 @@ use mtsrnn::linalg::{
     add_row_bias, fast_sigmoid, gemm, gemm_bt, gemv, transpose_into, Act, Epilogue, PackedGemm,
     PackedQuantGemm, QuantScratch, SMALL_N_CUTOFF,
 };
+use mtsrnn::memsim::{simulate, SimConfig, SimPrec, INTEL_I7_3930K};
 use mtsrnn::models::config::{Arch, ModelConfig, ModelSize, StackSpec};
 use mtsrnn::models::{SruParams, StackParams};
 use mtsrnn::util::{Rng, Timer};
+use mtsrnn::weights::prune::prune_blocks;
 
 fn main() {
     // MTSRNN_BENCH_ONLY=threads|quant runs just that sweep (what the CI
@@ -212,36 +214,74 @@ fn main() {
     );
 }
 
-/// Quantized-GEMM sweep at the paper's SRU gate shapes plus the
+/// One measured cell of the quant sweep: GFLOP/s-equivalents for every
+/// precision/density row at one `(m, k, t)` shape.  Sparse rows are
+/// credited the *dense* flop count, so the block-skip win shows up as
+/// throughput and all rows stay directly comparable.
+struct QuantPoint {
+    m: usize,
+    k: usize,
+    t: usize,
+    gf: f64,
+    g8: f64,
+    g8q: f64,
+    g4: f64,
+    gd50: f64,
+    gd25: f64,
+}
+
+/// Quantized/sparse-GEMM sweep at the paper's SRU gate shapes plus the
 /// acceptance shape `[2048, 512]`: full gate computation (GEMM + fused
 /// scale/bias/activation epilogue) through the f32 packed kernel, the q8
-/// widening path (int8 storage, f32 compute) and the q8q integer path
+/// widening path (int8 storage, f32 compute), the q8q integer path
 /// (dynamic activation quantization + i32 kernels + fused dequant — the
 /// quantization cost is *inside* the timed region, as it is on the
-/// serving hot path), at T in {1, 4, 16}.  Emits
-/// `bench_out/BENCH_quant.json`; the acceptance record is the
-/// q8q-vs-f32 ratio at `[2048, 512] x T=16` (target >= 1.5x — see
-/// EXPERIMENTS.md §Quant-compute for the analysis if the host misses
-/// it).  Single-threaded: this compares kernels per core, not scaling.
+/// serving hot path), the q4 nibble-packed integer path (half of q8q's
+/// weight stream), and the q8q path over block-pruned weights at
+/// densities {1.0, 0.5, 0.25} (d=1.0 IS the dense q8q row — the pruned
+/// rows skip whole `PACK_MR x SPARSE_KB` panels at dispatch), at T in
+/// {1, 4, 16}.  Emits `bench_out/BENCH_quant.json` with memsim-predicted
+/// speedups alongside the measurements; the acceptance records are the
+/// q8q-vs-f32 ratio at `[2048, 512] x T=16` (target >= 1.5x) plus
+/// q4-vs-q8q and d0.5-vs-q8q at the same shape (each must beat q8q —
+/// see EXPERIMENTS.md §Sub-byte-and-sparse if the host misses one).
+/// Single-threaded: this compares kernels per core, not scaling.
 fn quant_sweep(opts: &BenchOpts) {
-    println!("-- int8 compute: f32 vs q8 (widening) vs q8q (integer kernels) --");
+    println!("-- sub-byte & sparse compute: f32 | q8 | q8q | q4 | q8q@d{{0.5,0.25}} --");
     let mut rng = Rng::new(33);
     let acts = [Act::Ident, Act::Sigmoid, Act::Sigmoid];
-    let mut points: Vec<(usize, usize, usize, f64, f64, f64)> = Vec::new();
+    let mut points: Vec<QuantPoint> = Vec::new();
     for &(m, k) in &[(1536usize, 512usize), (2048, 512), (3072, 1024)] {
         let mut w = vec![0.0; m * k];
         rng.fill_normal(&mut w, 0.05);
+        // Density rows: the same weights magnitude-pruned at the kernels'
+        // PACK_MR x SPARSE_KB skip granularity; the exact-zero blocks
+        // survive quantization, so the pack-time PanelMask sees them.
+        let mut w50 = w.clone();
+        prune_blocks(&mut w50, m, k, 0.5);
+        let mut w25 = w.clone();
+        prune_blocks(&mut w25, m, k, 0.25);
         let pg = PackedGemm::new(&w, m, k);
         let q = QuantMatrix::quantize(&w, m, k);
         let pq8 = PackedQuantGemm::new(q.q(), q.row_scales(), m, k);
         let pq8q = PackedQuantGemm::new_q8q(q.q(), q.row_scales(), m, k);
+        let q4 = QuantMatrix::quantize_q4(&w, m, k);
+        let pq4 = PackedQuantGemm::new_q4(q4.q(), q4.row_scales(), m, k);
+        let q50 = QuantMatrix::quantize(&w50, m, k);
+        let pq50 = PackedQuantGemm::new_q8q(q50.q(), q50.row_scales(), m, k);
+        let q25 = QuantMatrix::quantize(&w25, m, k);
+        let pq25 = PackedQuantGemm::new_q8q(q25.q(), q25.row_scales(), m, k);
         let mut scratch = QuantScratch::new();
         let bias = vec![0.1f32; m];
         println!(
-            "  W[{m},{k}]  simd={} bt_cutoff={} int_cutoff={}",
+            "  W[{m},{k}]  simd={} bt_cutoff={} int_cutoff={} | resident KiB q8q {} q4 {} | packed density d50 {:.2} d25 {:.2}",
             pg.simd().name(),
             pg.bt_cutoff(),
-            pq8q.int_cutoff()
+            pq8q.int_cutoff(),
+            pq8q.weight_bytes() / 1024,
+            pq4.weight_bytes() / 1024,
+            pq50.density(),
+            pq25.density(),
         );
         for &t in &[1usize, 4, 16] {
             let mut x = vec![0.0; t * k];
@@ -250,7 +290,7 @@ fn quant_sweep(opts: &BenchOpts) {
             // The 3-segment gate epilogue requires M to split into equal
             // activation segments; the [2048, 512] acceptance shape is
             // not 3H-shaped, so it times the bias-only epilogue instead
-            // (identical work on all three paths either way).
+            // (identical work on every path either way).
             let epi = if m % acts.len() == 0 {
                 Epilogue::fused(&bias, &acts)
             } else {
@@ -265,44 +305,113 @@ fn quant_sweep(opts: &BenchOpts) {
             let m8q = bench(&format!("q8q {m}x{k}x{t}"), opts, || {
                 pq8q.matmul_q8q(&mut c, &x, t, false, &epi, &mut scratch);
             });
+            let m4 = bench(&format!("q4 {m}x{k}x{t}"), opts, || {
+                pq4.matmul_q4(&mut c, &x, t, false, &epi, &mut scratch);
+            });
+            let md50 = bench(&format!("q8q-d0.5 {m}x{k}x{t}"), opts, || {
+                pq50.matmul_q8q(&mut c, &x, t, false, &epi, &mut scratch);
+            });
+            let md25 = bench(&format!("q8q-d0.25 {m}x{k}x{t}"), opts, || {
+                pq25.matmul_q8q(&mut c, &x, t, false, &epi, &mut scratch);
+            });
             let flops = 2.0 * (m * k * t) as f64;
-            let (gf, g8, g8q) = (
-                flops / mf.median_ns,
-                flops / m8.median_ns,
-                flops / m8q.median_ns,
-            );
-            let wb_f32 = (m * k * 4) as f64 / t as f64;
-            let wb_q8 = (m * k + m * 4) as f64 / t as f64;
+            let p = QuantPoint {
+                m,
+                k,
+                t,
+                gf: flops / mf.median_ns,
+                g8: flops / m8.median_ns,
+                g8q: flops / m8q.median_ns,
+                g4: flops / m4.median_ns,
+                gd50: flops / md50.median_ns,
+                gd25: flops / md25.median_ns,
+            };
             println!(
-                "  T={t:<3} f32 {gf:>7.2} | q8 {g8:>7.2} | q8q {g8q:>7.2} GFLOP/s-eq | q8q/f32 {:>5.2}x | wbytes/step f32 {wb_f32:>9.0} q8 {wb_q8:>9.0}",
-                g8q / gf
+                "  T={t:<3} f32 {:>6.2} | q8 {:>6.2} | q8q {:>6.2} | q4 {:>6.2} | d.50 {:>6.2} | d.25 {:>6.2} GFLOP/s-eq | q8q/f32 {:>4.2}x q4/q8q {:>4.2}x d.50/q8q {:>4.2}x",
+                p.gf, p.g8, p.g8q, p.g4, p.gd50, p.gd25,
+                p.g8q / p.gf,
+                p.g4 / p.g8q,
+                p.gd50 / p.g8q,
             );
-            points.push((m, k, t, gf, g8, g8q));
+            points.push(p);
         }
     }
-    let target = points.iter().find(|&&(m, k, t, ..)| (m, k, t) == (2048, 512, 16));
-    let mut json = String::from("{\n  \"bench\": \"quant_sweep\",\n  \"points\": [\n");
-    for (i, &(m, k, t, gf, g8, g8q)) in points.iter().enumerate() {
+
+    // Memsim predictions for the same axis at the SRU-small gate shape
+    // (hidden 512, T=16, simulated Intel host): what the cache model
+    // says each precision/density point should buy over f32.  Recorded
+    // next to the measurements so predicted-vs-measured drift is part of
+    // the artifact trail (EXPERIMENTS.md §Sub-byte-and-sparse).
+    let predict = |prec: SimPrec, density: f64| {
+        let cfg = ModelConfig {
+            arch: Arch::Sru,
+            hidden: 512,
+            input: 512,
+        };
+        let mut c = SimConfig::paper(INTEL_I7_3930K, cfg, 16);
+        c.samples = 256;
+        c.precision = prec;
+        c.density = density;
+        simulate(&c).seconds
+    };
+    let base = predict(SimPrec::F32, 1.0);
+    let (p8, p8q, p4, pd50, pd25) = (
+        base / predict(SimPrec::Q8, 1.0),
+        base / predict(SimPrec::Q8Q, 1.0),
+        base / predict(SimPrec::Q4, 1.0),
+        base / predict(SimPrec::Q8Q, 0.5),
+        base / predict(SimPrec::Q8Q, 0.25),
+    );
+    println!(
+        "  memsim prediction (intel, sru-small, T=16) vs f32: q8 {p8:.2}x q8q {p8q:.2}x q4 {p4:.2}x q8q@d0.5 {pd50:.2}x q8q@d0.25 {pd25:.2}x"
+    );
+
+    let mut json = String::from(
+        "{\n  \"bench\": \"quant_sweep\",\n  \"densities\": [1.0, 0.5, 0.25],\n  \"points\": [\n",
+    );
+    for (i, p) in points.iter().enumerate() {
         let sep = if i + 1 < points.len() { "," } else { "" };
         json.push_str(&format!(
-            "    {{\"m\": {m}, \"k\": {k}, \"t\": {t}, \"f32_gflops\": {gf:.2}, \"q8_gflops\": {g8:.2}, \"q8q_gflops\": {g8q:.2}, \"q8q_vs_f32\": {:.3}, \"weight_bytes_per_step_f32\": {:.0}, \"weight_bytes_per_step_q8\": {:.0}}}{sep}\n",
-            g8q / gf,
-            (m * k * 4) as f64 / t as f64,
-            (m * k + m * 4) as f64 / t as f64,
+            "    {{\"m\": {}, \"k\": {}, \"t\": {}, \"f32_gflops\": {:.2}, \"q8_gflops\": {:.2}, \"q8q_gflops\": {:.2}, \"q4_gflops\": {:.2}, \"q8q_d0.5_gflops\": {:.2}, \"q8q_d0.25_gflops\": {:.2}, \"q8q_vs_f32\": {:.3}, \"q4_vs_q8q\": {:.3}, \"d0.5_vs_q8q\": {:.3}, \"weight_bytes_per_step_f32\": {:.0}, \"weight_bytes_per_step_q8\": {:.0}, \"weight_bytes_per_step_q4\": {:.0}}}{sep}\n",
+            p.m, p.k, p.t, p.gf, p.g8, p.g8q, p.g4, p.gd50, p.gd25,
+            p.g8q / p.gf,
+            p.g4 / p.g8q,
+            p.gd50 / p.g8q,
+            (p.m * p.k * 4) as f64 / p.t as f64,
+            (p.m * p.k + p.m * 4) as f64 / p.t as f64,
+            ((p.m * p.k).div_ceil(2) + p.m * 4) as f64 / p.t as f64,
         ));
     }
     json.push_str("  ],\n");
-    if let Some(&(_, _, _, gf, _, g8q)) = target {
-        json.push_str(&format!(
-            "  \"acceptance\": {{\"shape\": [2048, 512, 16], \"required_q8q_vs_f32\": 1.5, \"achieved\": {:.3}, \"met\": {}}}\n",
-            g8q / gf,
-            g8q / gf >= 1.5
-        ));
-        println!(
-            "  acceptance [2048,512]xT=16: q8q/f32 = {:.2}x (target 1.5x, {})",
-            g8q / gf,
-            if g8q / gf >= 1.5 { "MET" } else { "MISSED — see EXPERIMENTS.md §Quant-compute" }
-        );
+    json.push_str(&format!(
+        "  \"memsim_predicted_speedup_vs_f32\": {{\"cpu\": \"intel\", \"shape\": \"sru-small\", \"t\": 16, \"q8\": {p8:.3}, \"q8q\": {p8q:.3}, \"q4\": {p4:.3}, \"q8q_d0.5\": {pd50:.3}, \"q8q_d0.25\": {pd25:.3}}},\n"
+    ));
+    let target = points
+        .iter()
+        .find(|p| (p.m, p.k, p.t) == (2048, 512, 16));
+    if let Some(p) = target {
+        let checks = [
+            ("q8q_vs_f32", p.g8q / p.gf, 1.5),
+            ("q4_vs_q8q", p.g4 / p.g8q, 1.0),
+            ("q8q_d0.5_vs_q8q", p.gd50 / p.g8q, 1.0),
+        ];
+        json.push_str("  \"acceptance\": [\n");
+        for (i, &(name, achieved, required)) in checks.iter().enumerate() {
+            let sep = if i + 1 < checks.len() { "," } else { "" };
+            json.push_str(&format!(
+                "    {{\"shape\": [2048, 512, 16], \"metric\": \"{name}\", \"required\": {required}, \"achieved\": {achieved:.3}, \"met\": {}}}{sep}\n",
+                achieved >= required
+            ));
+            println!(
+                "  acceptance [2048,512]xT=16: {name} = {achieved:.2}x (target {required}x, {})",
+                if achieved >= required {
+                    "MET"
+                } else {
+                    "MISSED — see EXPERIMENTS.md §Sub-byte-and-sparse"
+                }
+            );
+        }
+        json.push_str("  ]\n");
     } else {
         json.push_str("  \"acceptance\": null\n");
     }

@@ -196,20 +196,28 @@ pub fn ablation_lstm_precompute(size: ModelSize, samples: usize, opts: &BenchOpt
     t
 }
 
-/// ABL5 (extension): int8 quantization x multi-time-step.  Three rows
+/// ABL5 (extension): quantization & sparsity x multi-time-step.  Rows
 /// per T: f32, `int8` (q8: int8 *storage*, f32 compute — the traffic
-/// cut) and `int8x8` (q8q: quantized activations + integer kernels —
-/// traffic cut × integer MAC rate).  The note carries the memsim
-/// *prediction* for the same split (traffic-only vs traffic+compute) so
+/// cut), `int8x8` (q8q: quantized activations + integer kernels —
+/// traffic cut × integer MAC rate), `int4` (q4: nibble-packed weights —
+/// q8q's integer pipeline at half the weight stream) and `int8x8-d0.5`
+/// (q8q over 0.5-density block-pruned weights — the `PanelMask` skip
+/// path).  The note carries the memsim *prediction* for every split so
 /// the measured speedups can be compared against the model — see
-/// EXPERIMENTS.md §Quant-compute.
+/// EXPERIMENTS.md §Quant-compute and §Sub-byte-and-sparse.
 pub fn ablation_quant(size: ModelSize, samples: usize, opts: &BenchOpts) -> Table {
     use crate::engine::{Engine, QuantSruEngine, SruEngine};
     use crate::memsim::SimPrec;
+    use crate::weights::prune::prune_blocks;
     let cfg = ModelConfig::paper(Arch::Sru, size);
     let params = crate::models::SruParams::init(&cfg, &mut Rng::new(WEIGHT_SEED));
+    let mut sparse = params.clone();
+    {
+        let (m, k) = (sparse.w.rows(), sparse.w.cols());
+        prune_blocks(sparse.w.data_mut(), m, k, 0.5);
+    }
     let mut t = Table::new(format!(
-        "ABL5: int8 weights & compute x multi-time-step (SRU {size:?}, native host)"
+        "ABL5: quantized & sparse weights x multi-time-step (SRU {size:?}, native host)"
     ));
     let mut x = gaussian_frames(&mut Rng::new(7), samples, cfg.input, 1.0);
     x.truncate(samples * cfg.input);
@@ -233,28 +241,45 @@ pub fn ablation_quant(size: ModelSize, samples: usize, opts: &BenchOpts) -> Tabl
             qqe.run_sequence(&x, samples, &mut out);
         });
         t.push(format!("int8x8-T{tb}"), m.median_ms(), None);
+        let mut q4e = QuantSruEngine::new_q4(&params, tb);
+        let m = bench(&format!("int4-{tb}"), opts, || {
+            q4e.reset();
+            q4e.run_sequence(&x, samples, &mut out);
+        });
+        t.push(format!("int4-T{tb}"), m.median_ms(), None);
+        let mut spe = QuantSruEngine::new_q8q(&sparse, tb);
+        let m = bench(&format!("int8x8-d0.5-{tb}"), opts, || {
+            spe.reset();
+            spe.run_sequence(&x, samples, &mut out);
+        });
+        t.push(format!("int8x8-d0.5-T{tb}"), m.median_ms(), None);
     }
     t.compute_speedups("f32-T1");
     let f32_bytes = 3 * cfg.hidden * cfg.input * 4;
     let q = QuantSruEngine::new(&params, 1);
+    let q4 = QuantSruEngine::new_q4(&params, 1);
     // Model prediction at T=32 on the simulated Intel host: how much the
-    // traffic cut alone buys (q8) vs traffic + integer MACs (q8q).
-    let predict = |prec: SimPrec| {
+    // traffic cut alone buys (q8) vs traffic + integer MACs (q8q) vs the
+    // sub-byte and sparse streams (q4, d=0.5).
+    let predict = |prec: SimPrec, density: f64| {
         let mut c = SimConfig::paper(INTEL_I7_3930K, cfg, 32);
         c.samples = samples.min(256);
         c.precision = prec;
+        c.density = density;
         simulate(&c).seconds
     };
-    let base = predict(SimPrec::F32);
+    let base = predict(SimPrec::F32, 1.0);
     t.note = format!(
-        "weight bytes/block: f32 {} KiB vs int8 {} KiB (x{:.1} traffic cut, multiplies with T); \
-         memsim T=32 prediction (intel): q8 {:.2}x, q8q {:.2}x vs f32 — \
-         compare with the measured int8/int8x8 rows (EXPERIMENTS.md §Quant-compute)",
+        "weight bytes/block: f32 {} KiB vs int8 {} KiB vs int4 {} KiB (traffic cut multiplies with T); \
+         memsim T=32 prediction (intel): q8 {:.2}x, q8q {:.2}x, q4 {:.2}x, q8q@d0.5 {:.2}x vs f32 — \
+         compare with the measured rows (EXPERIMENTS.md §Quant-compute, §Sub-byte-and-sparse)",
         f32_bytes / 1024,
         q.weight_bytes_per_block() / 1024,
-        f32_bytes as f64 / q.weight_bytes_per_block() as f64,
-        base / predict(SimPrec::Q8),
-        base / predict(SimPrec::Q8Q),
+        q4.weight_bytes_per_block() / 1024,
+        base / predict(SimPrec::Q8, 1.0),
+        base / predict(SimPrec::Q8Q, 1.0),
+        base / predict(SimPrec::Q4, 1.0),
+        base / predict(SimPrec::Q8Q, 0.5),
     );
     t
 }
@@ -262,12 +287,14 @@ pub fn ablation_quant(size: ModelSize, samples: usize, opts: &BenchOpts) -> Tabl
 /// The spec grid exercised by `mtsrnn ablation --exp stacks`, `info`,
 /// and the CI smoke job: every cell kind × precision the composable
 /// stack API serves.
-pub const SERVE_SPECS: [&str; 7] = [
+pub const SERVE_SPECS: [&str; 8] = [
     "sru:f32:512x4",
     "sru:q8:512x4",
-    // q8q: quantized activations + integer gate kernels — the lowest
-    // bytes-and-ops point of the grid.
+    // q8q: quantized activations + integer gate kernels.
     "sru:q8q:512x4",
+    // q4: nibble-packed weights — the lowest bytes-and-ops point of
+    // the grid (half of q8q's weight stream).
+    "sru:q4:512x4",
     "qrnn:f32:512x4",
     "lstm:f32:512x4",
     "sru:f32:512x4,l3=sru:q8",

@@ -75,7 +75,9 @@ COMMANDS:
   ablation   run ablations                  --exp dram|lstm-precompute|energy|quant|stacks
   simulate   one memsim point               --cpu intel|arm --arch sru|qrnn|lstm
                                             --size small|large --t N [--samples N]
-                                            [--cores N] [--precision f32|q8|q8q]
+                                            [--cores N] [--precision f32|q8|q8q|q4]
+                                            [--density D]  (0 < D <= 1, block
+                                            sparsity of the gate weights)
   parity     check artifacts vs JAX goldens [--artifacts DIR] [--filter SUBSTR]
   serve      streaming TCP server           [--artifacts DIR] [--stack SPEC]
                                             [--backend native|pjrt] [--port P]
@@ -100,7 +102,7 @@ GLOBAL OPTIONS:
 
 STACK SPECS (native serve; one weight set, any layer kind x precision):
   <arch>:<prec>[:bi]:<hidden>x<depth>[,feat=N][,vocab=N][,l<i>=<arch>:<prec>[:bi]]
-    arch: sru | qrnn | lstm        prec: f32 | q8 | q8q (q8/q8q sru only)
+    arch: sru | qrnn | lstm        prec: f32 | q8 | q8q | q4 (int sru only)
     :bi = chunked-bidirectional layer: fwd+bwd engines per dispatched
           block, outputs summed; the block size bounds the lookahead,
           so bidir stacks serve with bounded latency (serve --block N)
@@ -114,6 +116,9 @@ STACK SPECS (native serve; one weight set, any layer kind x precision):
                               on integer kernels (i32 accumulate, dequant
                               fused into the store) — the q8 traffic cut
                               plus ~2x the per-instruction MAC rate
+    sru:q4:512x4              4-bit nibble-packed weights on the integer
+                              kernels: half of q8q's weight bytes (~8x
+                              less DRAM than f32 per block)
     sru:f32:512x4,l3=sru:q8   mixed precision: int8 final layer
     sru:f32:bi:512x4          chunked-bidir SRU stack (lookahead = block)
   the pjrt backend instead takes AOT artifact stack names (asr_sru_512x4).
@@ -127,7 +132,13 @@ STACK SPECS (native serve; one weight set, any layer kind x precision):
   step but roughly doubles GEMM arithmetic throughput — use it when T is
   large enough that the gate GEMM is compute-bound; verify accuracy with
   the q8q tolerance tests (tests/quant_kernel_parity.rs) before shipping.
-  MTSRNN_FORCE_PORTABLE=1 pins all kernels to the portable fallback.
+  q4 packs two signed 4-bit weights per byte (one scale per output row,
+  error <= ~7% of each row's max weight) on the same integer kernels —
+  the lowest bytes-per-weight point; only for stacks validated against
+  the q4 tolerance tests (tests/q4_sparse_parity.rs).  Block-sparse
+  weights (weights/prune.rs zeroes whole 16x32 blocks) compose with any
+  precision: zero blocks are skipped at dispatch, bit-identically to
+  running them.  MTSRNN_FORCE_PORTABLE=1 pins all kernels to portable.
 
 TRANSCRIBE MODE (serve, native backend):
   DECODE <id> [greedy|beam[:W]]   attach a streaming CTC decoder to a

@@ -167,6 +167,9 @@ pub fn build_layer(
         (Arch::Sru, Precision::Q8Q, LayerParams::Sru(p)) => {
             Ok(Box::new(QuantSruEngine::new_q8q(p, max_block)))
         }
+        (Arch::Sru, Precision::Q4, LayerParams::Sru(p)) => {
+            Ok(Box::new(QuantSruEngine::new_q4(p, max_block)))
+        }
         (Arch::Qrnn, Precision::F32, LayerParams::Qrnn(p)) => {
             Ok(Box::new(QrnnEngine::new(p.clone(), max_block)))
         }

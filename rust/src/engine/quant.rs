@@ -65,6 +65,35 @@ impl QuantMatrix {
         }
     }
 
+    /// Per-row symmetric **int4** quantization: same scheme with
+    /// `s_r = max_k |w[r][k]| / 7` and values clamped to `[-7, 7]` so
+    /// every weight fits a signed nibble (two per byte in the
+    /// `pack_panels_q4` panel layout).  The scale group stays one whole
+    /// output row, matching q8/q8q: that is what lets the q4 path reuse
+    /// the single fused dequant epilogue and keep the exact-i32
+    /// accumulation contract — finer k-group scales would force a
+    /// second f32 rescale pass per group inside the kernel.
+    pub fn quantize_q4(data: &[f32], rows: usize, cols: usize) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        let mut q = vec![0i8; rows * cols];
+        let mut scales = vec![0.0f32; rows];
+        for r in 0..rows {
+            let row = &data[r * cols..(r + 1) * cols];
+            let max = row.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+            let s = if max > 0.0 { max / 7.0 } else { 1.0 };
+            scales[r] = s;
+            for (dst, &v) in q[r * cols..(r + 1) * cols].iter_mut().zip(row) {
+                *dst = (v / s).round().clamp(-7.0, 7.0) as i8;
+            }
+        }
+        Self {
+            rows,
+            cols,
+            q,
+            scales,
+        }
+    }
+
     pub fn rows(&self) -> usize {
         self.rows
     }
@@ -106,9 +135,20 @@ impl QuantMatrix {
     }
 }
 
-/// SRU engine with int8 weights (same recurrence, same API).
+/// Which quantized path a [`QuantSruEngine`] runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum QuantMode {
+    /// int8 storage, widening f32 compute.
+    Q8,
+    /// int8 storage, dynamic activation quantization, i32 compute.
+    Q8q,
+    /// int4 (nibble-packed) storage, same integer compute as q8q.
+    Q4,
+}
+
+/// SRU engine with sub-f32 weights (same recurrence, same API).
 ///
-/// Two precisions share this engine:
+/// Three precisions share this engine:
 ///
 /// * **`q8`** ([`QuantSruEngine::new`]): int8 *storage* — each weight
 ///   byte is fetched once per block and widened to f32 in registers,
@@ -120,45 +160,58 @@ impl QuantMatrix {
 ///   accumulates in exact i32 integer arithmetic, and f32 appears only
 ///   in the dequant epilogue.  The engine owns the [`QuantScratch`], so
 ///   the hot path allocates nothing after the first dispatch.
+/// * **`q4`** ([`QuantSruEngine::new_q4`]): int4 weights, two per byte
+///   — the q8q integer pipeline over nibble-packed panels, halving the
+///   weight stream again (8× below f32).  Coarser weights, same exact
+///   i32 accumulation; accuracy is property-tested below.
 #[derive(Debug, Clone)]
 pub struct QuantSruEngine {
-    /// Panel-packed int8 weights — the only copy the engine retains
+    /// Panel-packed quantized weights — the only copy the engine retains
     /// (the intermediate [`QuantMatrix`] is dropped after packing, so
-    /// the resident int8 footprint stays one copy per layout).
+    /// the resident quantized footprint stays one copy per layout).
     pq: PackedQuantGemm,
     b3: Vec<f32>,
     t_block: usize,
     hidden: usize,
     c: Vec<f32>,
     gates: Vec<f32>,
-    /// True = q8q (quantized activations, integer kernels).
-    q8q: bool,
-    /// Activation-quantization scratch (q8q only; reused per dispatch).
+    /// Which quantized path runs the gate GEMM.
+    mode: QuantMode,
+    /// Activation-quantization scratch (q8q/q4; reused per dispatch).
     scratch: QuantScratch,
 }
 
 impl QuantSruEngine {
     /// Weights-only int8 (`q8`).
     pub fn new(params: &SruParams, t_block: usize) -> Self {
-        Self::build(params, t_block, false)
+        Self::build(params, t_block, QuantMode::Q8)
     }
 
     /// Quantized-activation int8 (`q8q`): true integer compute.
     pub fn new_q8q(params: &SruParams, t_block: usize) -> Self {
-        Self::build(params, t_block, true)
+        Self::build(params, t_block, QuantMode::Q8q)
     }
 
-    fn build(params: &SruParams, t_block: usize, q8q: bool) -> Self {
+    /// Nibble-packed int4 weights (`q4`): integer compute over half the
+    /// weight bytes of q8.
+    pub fn new_q4(params: &SruParams, t_block: usize) -> Self {
+        Self::build(params, t_block, QuantMode::Q4)
+    }
+
+    fn build(params: &SruParams, t_block: usize, mode: QuantMode) -> Self {
         assert!(t_block >= 1);
         let hidden = params.hidden();
         assert_eq!(hidden, params.input(), "SRU requires square weights");
         let mut b3 = vec![0.0; 3 * hidden];
         b3[hidden..].copy_from_slice(&params.b);
-        let w = QuantMatrix::quantize(params.w.data(), 3 * hidden, hidden);
-        let pq = if q8q {
-            PackedQuantGemm::new_q8q(&w.q, &w.scales, 3 * hidden, hidden)
-        } else {
-            PackedQuantGemm::new(&w.q, &w.scales, 3 * hidden, hidden)
+        let w = match mode {
+            QuantMode::Q4 => QuantMatrix::quantize_q4(params.w.data(), 3 * hidden, hidden),
+            _ => QuantMatrix::quantize(params.w.data(), 3 * hidden, hidden),
+        };
+        let pq = match mode {
+            QuantMode::Q8 => PackedQuantGemm::new(&w.q, &w.scales, 3 * hidden, hidden),
+            QuantMode::Q8q => PackedQuantGemm::new_q8q(&w.q, &w.scales, 3 * hidden, hidden),
+            QuantMode::Q4 => PackedQuantGemm::new_q4(&w.q, &w.scales, 3 * hidden, hidden),
         };
         Self {
             pq,
@@ -167,21 +220,25 @@ impl QuantSruEngine {
             hidden,
             c: vec![0.0; hidden],
             gates: vec![0.0; 3 * hidden * t_block],
-            q8q,
+            mode,
             scratch: QuantScratch::new(),
         }
     }
 
     /// The gate GEMM for `t` frames of `x`, routed through the mode's
-    /// path — the one place the q8/q8q split exists on the hot path.
+    /// path — the one place the precision split exists on the hot path.
     fn gate_gemm(&mut self, x: &[f32], t: usize) {
         let h = self.hidden;
         let gates = &mut self.gates[..3 * h * t];
         let epi = Epilogue::fused(&self.b3, &SruParams::GATE_ACTS);
-        if self.q8q {
-            self.pq.matmul_q8q(gates, &x[..t * h], t, false, &epi, &mut self.scratch);
-        } else {
-            self.pq.matmul(gates, &x[..t * h], t, false, &epi);
+        match self.mode {
+            QuantMode::Q8 => self.pq.matmul(gates, &x[..t * h], t, false, &epi),
+            QuantMode::Q8q => {
+                self.pq.matmul_q8q(gates, &x[..t * h], t, false, &epi, &mut self.scratch)
+            }
+            QuantMode::Q4 => {
+                self.pq.matmul_q4(gates, &x[..t * h], t, false, &epi, &mut self.scratch)
+            }
         }
     }
 
@@ -239,10 +296,10 @@ impl QuantSruEngine {
 
 impl Engine for QuantSruEngine {
     fn arch(&self) -> &'static str {
-        if self.q8q {
-            "sru-int8x8"
-        } else {
-            "sru-int8"
+        match self.mode {
+            QuantMode::Q8 => "sru-int8",
+            QuantMode::Q8q => "sru-int8x8",
+            QuantMode::Q4 => "sru-int4",
         }
     }
 
@@ -295,17 +352,17 @@ impl RecurrentLayer for QuantSruEngine {
     }
 
     /// q8 keeps width 1: the widening path has a single kernel at every
-    /// `n`, so any sub-block width is bit-exact.  q8q honours the probed
-    /// integer-vs-widening crossover — sub-blocks must never cross it,
-    /// or the GEMM would flip numeric paths with the width.  Column-wise
-    /// activation quantization itself is width-independent (each frame's
-    /// scale depends only on that frame), so above the crossover q8q is
-    /// bit-exact under any decomposition.
+    /// `n`, so any sub-block width is bit-exact.  q8q and q4 honour the
+    /// probed integer-vs-widening crossover — sub-blocks must never
+    /// cross it, or the GEMM would flip numeric paths with the width.
+    /// Column-wise activation quantization itself is width-independent
+    /// (each frame's scale depends only on that frame), so above the
+    /// crossover the integer modes are bit-exact under any
+    /// decomposition.
     fn min_wavefront_width(&self) -> usize {
-        if self.q8q {
-            self.pq.min_int_n()
-        } else {
-            1
+        match self.mode {
+            QuantMode::Q8 => 1,
+            QuantMode::Q8q | QuantMode::Q4 => self.pq.min_int_n(),
         }
     }
 
@@ -387,6 +444,68 @@ mod tests {
         let e = QuantSruEngine::new(&p, 4);
         let f32_bytes = 3 * 32 * 32 * 4;
         assert_eq!(e.weight_bytes_per_block(), f32_bytes / 4 + 3 * 32 * 4);
+    }
+
+    #[test]
+    fn q4_weight_bytes_are_exactly_half_of_q8() {
+        // The acceptance bar: q4 panels resident at half the q8 bytes
+        // for the same shape.  Both modes carry identical f32 scale
+        // vectors (one per output row), so subtracting them isolates
+        // the streamed panel bytes.
+        let p = params(32, 2);
+        let scales_bytes = 3 * 32 * 4;
+        let q8 = QuantSruEngine::new(&p, 4);
+        let q4 = QuantSruEngine::new_q4(&p, 4);
+        let q8_panel = q8.weight_bytes_per_block() - scales_bytes;
+        let q4_panel = q4.weight_bytes_per_block() - scales_bytes;
+        assert_eq!(q8_panel, 3 * 32 * 32);
+        assert_eq!(q4_panel * 2, q8_panel);
+    }
+
+    #[test]
+    fn q4_quantization_error_bounded_by_half_lsb() {
+        let p = params(64, 11);
+        let q = QuantMatrix::quantize_q4(p.w.data(), 192, 64);
+        // Per row: error <= scale/2 = max|w_r| / 14.
+        for r in 0..192 {
+            let row = p.w.row(r);
+            let max = row.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+            for c in 0..64 {
+                let err = (q.dequant(r, c) - row[c]).abs();
+                assert!(err <= max / 14.0 + 1e-7, "row {r} col {c}: {err}");
+                assert!(q.q[r * 64 + c].abs() <= 7);
+            }
+        }
+    }
+
+    #[test]
+    fn q4_outputs_close_to_f32_engine() {
+        // 4-bit weights are deliberately coarse; the recurrence still
+        // tracks the f32 engine within a loose per-element bound and a
+        // tight mean deviation (the errors are zero-mean rounding).
+        let h = 48;
+        let p = params(h, 13);
+        let steps = 33;
+        let mut x = vec![0.0; steps * h];
+        Rng::new(14).fill_normal(&mut x, 1.0);
+
+        let mut f32e = SruEngine::new(p.clone(), 16);
+        let mut want = vec![0.0; steps * h];
+        f32e.run_sequence(&x, steps, &mut want);
+
+        let mut q = QuantSruEngine::new_q4(&p, 16);
+        assert_eq!(q.arch(), "sru-int4");
+        let mut got = vec![0.0; steps * h];
+        q.run_sequence(&x, steps, &mut got);
+
+        let mut mad = 0.0f64;
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            let d = (g - w).abs();
+            mad += d as f64;
+            assert!(d < 0.5, "idx {i}: {g} vs {w}");
+        }
+        mad /= (steps * h) as f64;
+        assert!(mad < 0.05, "mean abs deviation {mad}");
     }
 
     #[test]

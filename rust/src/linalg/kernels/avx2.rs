@@ -9,12 +9,14 @@
 
 use core::arch::x86_64::{
     __m128i, __m256i, _mm256_add_epi32, _mm256_cvtepi8_epi16, _mm256_fmadd_ps, _mm256_loadu_ps,
-    _mm256_madd_epi16, _mm256_set1_epi32, _mm256_set1_ps, _mm256_setzero_ps, _mm256_setzero_si256,
-    _mm256_storeu_ps, _mm256_storeu_si256, _mm_loadu_si128,
+    _mm256_madd_epi16, _mm256_permute2x128_si256, _mm256_set1_epi32, _mm256_set1_ps,
+    _mm256_setzero_ps, _mm256_setzero_si256, _mm256_slli_epi16, _mm256_srai_epi16,
+    _mm256_storeu_ps, _mm256_storeu_si256, _mm256_unpackhi_epi16, _mm256_unpacklo_epi16,
+    _mm_loadu_si128,
 };
 
-use super::{store_tile, store_tile_i32};
-use crate::linalg::pack::{Epilogue, PACK_MR};
+use super::{kb_active, store_tile, store_tile_i32};
+use crate::linalg::pack::{Epilogue, PACK_MR, SPARSE_KB};
 
 /// Register-tile width (frame columns per microkernel pass).
 pub(crate) const NR: usize = 6;
@@ -31,6 +33,7 @@ macro_rules! def_kern {
             x: *const f32,
             k: usize,
             j0: usize,
+            pm: Option<&[u64]>,
             tile: &mut [[f32; PACK_MR]; NR],
         ) {
             let mut acc0 = [_mm256_setzero_ps(); $nr];
@@ -39,14 +42,24 @@ macro_rules! def_kern {
             for (jj, f) in frames.iter_mut().enumerate() {
                 *f = x.add((j0 + jj) * k);
             }
-            for kk in 0..k {
-                let a0 = _mm256_loadu_ps(panel.add(kk * PACK_MR));
-                let a1 = _mm256_loadu_ps(panel.add(kk * PACK_MR + 8));
-                for jj in 0..$nr {
-                    let b = _mm256_set1_ps(*frames[jj].add(kk));
-                    acc0[jj] = _mm256_fmadd_ps(a0, b, acc0[jj]);
-                    acc1[jj] = _mm256_fmadd_ps(a1, b, acc1[jj]);
+            // K walks in SPARSE_KB chunks; skipping an inactive (all
+            // exactly zero) block keeps the surviving FMA chain in
+            // order, so the result matches the dense sweep bitwise.
+            let mut kb0 = 0usize;
+            while kb0 < k {
+                let ke = (kb0 + SPARSE_KB).min(k);
+                if kb_active(pm, kb0 / SPARSE_KB) {
+                    for kk in kb0..ke {
+                        let a0 = _mm256_loadu_ps(panel.add(kk * PACK_MR));
+                        let a1 = _mm256_loadu_ps(panel.add(kk * PACK_MR + 8));
+                        for jj in 0..$nr {
+                            let b = _mm256_set1_ps(*frames[jj].add(kk));
+                            acc0[jj] = _mm256_fmadd_ps(a0, b, acc0[jj]);
+                            acc1[jj] = _mm256_fmadd_ps(a1, b, acc1[jj]);
+                        }
+                    }
                 }
+                kb0 = ke;
             }
             for jj in 0..$nr {
                 _mm256_storeu_ps(tile[jj].as_mut_ptr(), acc0[jj]);
@@ -81,6 +94,7 @@ pub(crate) unsafe fn matmul(
     n: usize,
     acc: bool,
     epi: &Epilogue,
+    pm_all: Option<(&[u64], usize)>,
     p0: usize,
     p1: usize,
 ) {
@@ -88,17 +102,18 @@ pub(crate) unsafe fn matmul(
     let mut tile = [[0f32; PACK_MR]; NR];
     for pi in p0..p1 {
         let panel = panels[pi * PACK_MR * k..].as_ptr();
+        let pm = pm_all.map(|(bits, wpp)| &bits[pi * wpp..(pi + 1) * wpp]);
         let xp = x.as_ptr();
         let mut j0 = 0;
         while j0 < n {
             let nr = NR.min(n - j0);
             match nr {
-                6 => kern6(panel, xp, k, j0, &mut tile),
-                5 => kern5(panel, xp, k, j0, &mut tile),
-                4 => kern4(panel, xp, k, j0, &mut tile),
-                3 => kern3(panel, xp, k, j0, &mut tile),
-                2 => kern2(panel, xp, k, j0, &mut tile),
-                _ => kern1(panel, xp, k, j0, &mut tile),
+                6 => kern6(panel, xp, k, j0, pm, &mut tile),
+                5 => kern5(panel, xp, k, j0, pm, &mut tile),
+                4 => kern4(panel, xp, k, j0, pm, &mut tile),
+                3 => kern3(panel, xp, k, j0, pm, &mut tile),
+                2 => kern2(panel, xp, k, j0, pm, &mut tile),
+                _ => kern1(panel, xp, k, j0, pm, &mut tile),
             }
             store_tile(c, crow0, &tile, j0, nr, pi * PACK_MR, m, n, acc, None, epi);
             j0 += nr;
@@ -128,6 +143,7 @@ macro_rules! def_kern_q8q {
             qpair: *const i32,
             kp: usize,
             j0: usize,
+            pm: Option<&[u64]>,
             tile: &mut [[i32; PACK_MR]; NR],
         ) {
             let mut lo = [_mm256_setzero_si256(); $nr];
@@ -136,15 +152,28 @@ macro_rules! def_kern_q8q {
             for (jj, f) in frames.iter_mut().enumerate() {
                 *f = qpair.add((j0 + jj) * (kp / 2));
             }
-            for g in 0..kp / 2 {
-                let w0 = _mm256_cvtepi8_epi16(_mm_loadu_si128(panel.add(g * 32) as *const __m128i));
-                let w1 =
-                    _mm256_cvtepi8_epi16(_mm_loadu_si128(panel.add(g * 32 + 16) as *const __m128i));
-                for jj in 0..$nr {
-                    let b = _mm256_set1_epi32(*frames[jj].add(g));
-                    lo[jj] = _mm256_add_epi32(lo[jj], _mm256_madd_epi16(w0, b));
-                    hi[jj] = _mm256_add_epi32(hi[jj], _mm256_madd_epi16(w1, b));
+            // Pair loop chunked at SPARSE_KB / 2 pairs per sparse
+            // block; skipping is exact (i32) so results stay
+            // bit-identical to the dense sweep.
+            let mut g0 = 0usize;
+            while g0 < kp / 2 {
+                let ge = (g0 + SPARSE_KB / 2).min(kp / 2);
+                if kb_active(pm, g0 / (SPARSE_KB / 2)) {
+                    for g in g0..ge {
+                        let w0 = _mm256_cvtepi8_epi16(_mm_loadu_si128(
+                            panel.add(g * 32) as *const __m128i
+                        ));
+                        let w1 = _mm256_cvtepi8_epi16(_mm_loadu_si128(
+                            panel.add(g * 32 + 16) as *const __m128i,
+                        ));
+                        for jj in 0..$nr {
+                            let b = _mm256_set1_epi32(*frames[jj].add(g));
+                            lo[jj] = _mm256_add_epi32(lo[jj], _mm256_madd_epi16(w0, b));
+                            hi[jj] = _mm256_add_epi32(hi[jj], _mm256_madd_epi16(w1, b));
+                        }
+                    }
                 }
+                g0 = ge;
             }
             for jj in 0..$nr {
                 _mm256_storeu_si256(tile[jj].as_mut_ptr() as *mut __m256i, lo[jj]);
@@ -177,6 +206,7 @@ pub(crate) unsafe fn matmul_q8q(
     m: usize,
     kp: usize,
     n: usize,
+    pm_all: Option<(&[u64], usize)>,
     p0: usize,
     p1: usize,
 ) {
@@ -184,17 +214,136 @@ pub(crate) unsafe fn matmul_q8q(
     let mut tile = [[0i32; PACK_MR]; NR];
     for pi in p0..p1 {
         let panel = qpanels[pi * PACK_MR * kp..].as_ptr();
+        let pm = pm_all.map(|(bits, wpp)| &bits[pi * wpp..(pi + 1) * wpp]);
         let qp = qpair.as_ptr();
         let mut j0 = 0;
         while j0 < n {
             let nr = NR.min(n - j0);
             match nr {
-                6 => kq6(panel, qp, kp, j0, &mut tile),
-                5 => kq5(panel, qp, kp, j0, &mut tile),
-                4 => kq4(panel, qp, kp, j0, &mut tile),
-                3 => kq3(panel, qp, kp, j0, &mut tile),
-                2 => kq2(panel, qp, kp, j0, &mut tile),
-                _ => kq1(panel, qp, kp, j0, &mut tile),
+                6 => kq6(panel, qp, kp, j0, pm, &mut tile),
+                5 => kq5(panel, qp, kp, j0, pm, &mut tile),
+                4 => kq4(panel, qp, kp, j0, pm, &mut tile),
+                3 => kq3(panel, qp, kp, j0, pm, &mut tile),
+                2 => kq2(panel, qp, kp, j0, pm, &mut tile),
+                _ => kq1(panel, qp, kp, j0, pm, &mut tile),
+            }
+            store_tile_i32(c32, crow0, &tile, j0, nr, pi * PACK_MR, m, n);
+            j0 += nr;
+        }
+    }
+}
+
+macro_rules! def_kern_q4 {
+    ($name:ident, $nr:literal) => {
+        /// q4 integer microkernel: per k-pair, one 16-byte load carries
+        /// **32 weights** (two signed nibbles per byte).  The byte
+        /// vector sign-extends to i16 lanes once (`cvtepi8_epi16`);
+        /// `slli 12 / srai 12` recovers the low nibble and `srai 4` the
+        /// high one (the widened lane's top bits already replicate the
+        /// high nibble's sign), then one `unpacklo/hi_epi16` pair
+        /// rebuilds the `[w_{2g}, w_{2g+1}]` i16 pairing `madd_epi16`
+        /// wants — same multiply throughput as q8q at half the weight
+        /// bytes per k step, and exact i32 accumulation throughout
+        /// (|pair sum| <= 2 * 7 * 127, nothing saturates).
+        ///
+        /// `unpack` interleaves per 128-bit lane, so the accumulators
+        /// come out row-permuted — `acc_a` holds rows 0-3 / 8-11 and
+        /// `acc_b` rows 4-7 / 12-15; one `permute2x128` pair at store
+        /// time restores panel row order.
+        ///
+        /// # Safety
+        /// Requires avx2.  `panel` must hold `kp * PACK_MR / 2` bytes in
+        /// the nibble-packed q4 layout and `qpair` at least
+        /// `(j0 + $nr) * kp / 2` packed pairs.
+        #[target_feature(enable = "avx2")]
+        #[allow(clippy::needless_range_loop, clippy::single_element_loop)]
+        unsafe fn $name(
+            panel: *const u8,
+            qpair: *const i32,
+            kp: usize,
+            j0: usize,
+            pm: Option<&[u64]>,
+            tile: &mut [[i32; PACK_MR]; NR],
+        ) {
+            let mut acc_a = [_mm256_setzero_si256(); $nr];
+            let mut acc_b = [_mm256_setzero_si256(); $nr];
+            let mut frames = [qpair; $nr];
+            for (jj, f) in frames.iter_mut().enumerate() {
+                *f = qpair.add((j0 + jj) * (kp / 2));
+            }
+            let mut g0 = 0usize;
+            while g0 < kp / 2 {
+                let ge = (g0 + SPARSE_KB / 2).min(kp / 2);
+                if kb_active(pm, g0 / (SPARSE_KB / 2)) {
+                    for g in g0..ge {
+                        let raw = _mm_loadu_si128(panel.add(g * 16) as *const __m128i);
+                        let v = _mm256_cvtepi8_epi16(raw);
+                        let lo = _mm256_srai_epi16(_mm256_slli_epi16(v, 12), 12);
+                        let hi = _mm256_srai_epi16(v, 4);
+                        let pa = _mm256_unpacklo_epi16(lo, hi);
+                        let pb = _mm256_unpackhi_epi16(lo, hi);
+                        for jj in 0..$nr {
+                            let b = _mm256_set1_epi32(*frames[jj].add(g));
+                            acc_a[jj] = _mm256_add_epi32(acc_a[jj], _mm256_madd_epi16(pa, b));
+                            acc_b[jj] = _mm256_add_epi32(acc_b[jj], _mm256_madd_epi16(pb, b));
+                        }
+                    }
+                }
+                g0 = ge;
+            }
+            for jj in 0..$nr {
+                let r07 = _mm256_permute2x128_si256(acc_a[jj], acc_b[jj], 0x20);
+                let r8f = _mm256_permute2x128_si256(acc_a[jj], acc_b[jj], 0x31);
+                _mm256_storeu_si256(tile[jj].as_mut_ptr() as *mut __m256i, r07);
+                _mm256_storeu_si256(tile[jj].as_mut_ptr().add(8) as *mut __m256i, r8f);
+            }
+        }
+    };
+}
+
+def_kern_q4!(k41, 1);
+def_kern_q4!(k42, 2);
+def_kern_q4!(k43, 3);
+def_kern_q4!(k44, 4);
+def_kern_q4!(k45, 5);
+def_kern_q4!(k46, 6);
+
+/// q4 integer GEMM over nibble-packed panels; same panel-range /
+/// sub-slice contract as [`matmul`], writing raw i32 accumulators.
+///
+/// # Safety
+/// Requires avx2 (guaranteed by the `detect()` gate in the dispatcher).
+/// Slice sizes are checked by `PackedQuantGemm::matmul_q4`.
+#[target_feature(enable = "avx2")]
+#[allow(clippy::too_many_arguments)]
+pub(crate) unsafe fn matmul_q4(
+    q4panels: &[u8],
+    c32: &mut [i32],
+    crow0: usize,
+    qpair: &[i32],
+    m: usize,
+    kp: usize,
+    n: usize,
+    pm_all: Option<(&[u64], usize)>,
+    p0: usize,
+    p1: usize,
+) {
+    debug_assert_eq!(q4panels.len(), m.div_ceil(PACK_MR) * (PACK_MR / 2) * kp);
+    let mut tile = [[0i32; PACK_MR]; NR];
+    for pi in p0..p1 {
+        let panel = q4panels[pi * (PACK_MR / 2) * kp..].as_ptr();
+        let pm = pm_all.map(|(bits, wpp)| &bits[pi * wpp..(pi + 1) * wpp]);
+        let qp = qpair.as_ptr();
+        let mut j0 = 0;
+        while j0 < n {
+            let nr = NR.min(n - j0);
+            match nr {
+                6 => k46(panel, qp, kp, j0, pm, &mut tile),
+                5 => k45(panel, qp, kp, j0, pm, &mut tile),
+                4 => k44(panel, qp, kp, j0, pm, &mut tile),
+                3 => k43(panel, qp, kp, j0, pm, &mut tile),
+                2 => k42(panel, qp, kp, j0, pm, &mut tile),
+                _ => k41(panel, qp, kp, j0, pm, &mut tile),
             }
             store_tile_i32(c32, crow0, &tile, j0, nr, pi * PACK_MR, m, n);
             j0 += nr;

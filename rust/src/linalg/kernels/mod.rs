@@ -29,6 +29,20 @@ use std::sync::OnceLock;
 
 use crate::linalg::pack::{Epilogue, PACK_MR};
 
+/// Sparse-block test shared by every kernel family: block `kb` of the
+/// current panel is active (must be computed) unless the panel's mask
+/// words clear its bit.  `None` means dense — the branch is trivially
+/// predictable and costs nothing in the k loop.  Inlined into the
+/// microkernels' chunked k sweeps; see `pack::PanelMask` for the exact
+/// skip-soundness argument.
+#[inline(always)]
+pub(crate) fn kb_active(pm: Option<&[u64]>, kb: usize) -> bool {
+    match pm {
+        None => true,
+        Some(w) => (w[kb >> 6] >> (kb & 63)) & 1 != 0,
+    }
+}
+
 /// Which microkernel family [`detect`] selected for this process.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Simd {
@@ -81,7 +95,8 @@ pub fn detect() -> Simd {
 /// `c[m, n] (+)= panels @ x^T` with the epilogue fused into the store.
 ///
 /// `panels` is the packed form of `A[m, k]`; `x` is `n` time-major
-/// frames of length `k`.
+/// frames of length `k`.  `pm_all` is the block-sparsity bitmap in
+/// `PanelMask::for_kernels` form (`None` = dense).
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn matmul(
     simd: Simd,
@@ -93,8 +108,9 @@ pub(crate) fn matmul(
     n: usize,
     acc: bool,
     epi: &Epilogue,
+    pm_all: Option<(&[u64], usize)>,
 ) {
-    matmul_range(simd, panels, c, 0, x, m, k, n, acc, epi, 0, m.div_ceil(PACK_MR));
+    matmul_range(simd, panels, c, 0, x, m, k, n, acc, epi, pm_all, 0, m.div_ceil(PACK_MR));
 }
 
 /// Panel-range variant of [`matmul`]: computes only panels `p0..p1`
@@ -116,6 +132,7 @@ pub(crate) fn matmul_range(
     n: usize,
     acc: bool,
     epi: &Epilogue,
+    pm_all: Option<(&[u64], usize)>,
     p0: usize,
     p1: usize,
 ) {
@@ -124,11 +141,15 @@ pub(crate) fn matmul_range(
         // SAFETY: an Avx2 request only exists when `detect()` returned it
         // (PackedGemm::new uses detect(); with_dispatch asserts equality
         // with detect()), i.e. avx2+fma were verified on this host.
-        Simd::Avx2 => unsafe { avx2::matmul(panels, c, crow0, x, m, k, n, acc, epi, p0, p1) },
+        Simd::Avx2 => unsafe {
+            avx2::matmul(panels, c, crow0, x, m, k, n, acc, epi, pm_all, p0, p1)
+        },
         #[cfg(target_arch = "aarch64")]
         // SAFETY: NEON is baseline on aarch64; `detect()` verifies it.
-        Simd::Neon => unsafe { neon::matmul(panels, c, crow0, x, m, k, n, acc, epi, p0, p1) },
-        _ => portable::matmul(panels, c, crow0, x, m, k, n, acc, epi, p0, p1),
+        Simd::Neon => unsafe {
+            neon::matmul(panels, c, crow0, x, m, k, n, acc, epi, pm_all, p0, p1)
+        },
+        _ => portable::matmul(panels, c, crow0, x, m, k, n, acc, epi, pm_all, p0, p1),
     }
 }
 
@@ -151,6 +172,7 @@ pub(crate) fn matmul_q8q(
     m: usize,
     kp: usize,
     n: usize,
+    pm_all: Option<(&[u64], usize)>,
     p0: usize,
     p1: usize,
 ) {
@@ -162,11 +184,56 @@ pub(crate) fn matmul_q8q(
         // SAFETY: an Avx2 request only exists when `detect()` returned
         // it (new_q8q uses detect(); with_dispatch_q8q asserts equality
         // with detect()), i.e. avx2 was verified on this host.
-        Simd::Avx2 => unsafe { avx2::matmul_q8q(qpanels, c32, crow0, qpair, m, kp, n, p0, p1) },
+        Simd::Avx2 => unsafe {
+            avx2::matmul_q8q(qpanels, c32, crow0, qpair, m, kp, n, pm_all, p0, p1)
+        },
         #[cfg(target_arch = "aarch64")]
         // SAFETY: NEON is baseline on aarch64; `detect()` verifies it.
-        Simd::Neon => unsafe { neon::matmul_q8q(qpanels, c32, crow0, xq, m, kp, n, p0, p1) },
-        _ => portable::matmul_q8q(qpanels, c32, crow0, xq, m, kp, n, p0, p1),
+        Simd::Neon => unsafe {
+            neon::matmul_q8q(qpanels, c32, crow0, xq, m, kp, n, pm_all, p0, p1)
+        },
+        _ => portable::matmul_q8q(qpanels, c32, crow0, xq, m, kp, n, pm_all, p0, p1),
+    }
+}
+
+/// q4 integer GEMM over nibble-packed panels (see
+/// `pack::pack_panels_q4` for the layout): `c32[m, n] = panels @ xq^T`
+/// with in-register nibble unpack and pure i32 accumulation — the q8q
+/// contract (exact, order-independent, bit-identical across kernel
+/// families and thread counts) at **half** the weight byte stream.
+/// `xq`/`qpair` are the same quantized activation forms q8q consumes.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn matmul_q4(
+    simd: Simd,
+    q4panels: &[u8],
+    c32: &mut [i32],
+    crow0: usize,
+    xq: &[i8],
+    qpair: &[i32],
+    m: usize,
+    kp: usize,
+    n: usize,
+    pm_all: Option<(&[u64], usize)>,
+    p0: usize,
+    p1: usize,
+) {
+    // Each architecture consumes one broadcast form; keep both names
+    // live so neither cfg arm trips unused-variable lints.
+    let _ = (&xq, &qpair);
+    match simd {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: an Avx2 request only exists when `detect()` returned
+        // it (new_q4 uses detect(); with_dispatch_q4 asserts equality
+        // with detect()), i.e. avx2 was verified on this host.
+        Simd::Avx2 => unsafe {
+            avx2::matmul_q4(q4panels, c32, crow0, qpair, m, kp, n, pm_all, p0, p1)
+        },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64; `detect()` verifies it.
+        Simd::Neon => unsafe {
+            neon::matmul_q4(q4panels, c32, crow0, xq, m, kp, n, pm_all, p0, p1)
+        },
+        _ => portable::matmul_q4(q4panels, c32, crow0, xq, m, kp, n, pm_all, p0, p1),
     }
 }
 

@@ -7,12 +7,13 @@
 //! boards the paper targets (Tables 3/4/7/8) are exactly this path.
 
 use core::arch::aarch64::{
-    vdup_n_u16, vdupq_n_f32, vdupq_n_s32, vfmaq_n_f32, vld1_s8, vld1q_f32, vmull_s8, vpadalq_s16,
-    vreinterpret_s8_u16, vst1q_f32, vst1q_s32,
+    vdup_n_u16, vdupq_n_f32, vdupq_n_s32, vfmaq_n_f32, vget_high_s8, vget_low_s8, vld1_s8,
+    vld1q_f32, vld1q_s8, vmull_s8, vpadalq_s16, vreinterpret_s8_u16, vshlq_n_s8, vshrq_n_s8,
+    vst1q_f32, vst1q_s32, vzip1q_s8, vzip2q_s8,
 };
 
-use super::{store_tile, store_tile_i32};
-use crate::linalg::pack::{Epilogue, PACK_MR};
+use super::{kb_active, store_tile, store_tile_i32};
+use crate::linalg::pack::{Epilogue, PACK_MR, SPARSE_KB};
 
 /// Register-tile width (frame columns per microkernel pass).
 pub(crate) const NR: usize = 4;
@@ -29,6 +30,7 @@ macro_rules! def_kern {
             x: *const f32,
             k: usize,
             j0: usize,
+            pm: Option<&[u64]>,
             tile: &mut [[f32; PACK_MR]; NR],
         ) {
             let zero = vdupq_n_f32(0.0);
@@ -37,18 +39,28 @@ macro_rules! def_kern {
             for (jj, f) in frames.iter_mut().enumerate() {
                 *f = x.add((j0 + jj) * k);
             }
-            for kk in 0..k {
-                let a0 = vld1q_f32(panel.add(kk * PACK_MR));
-                let a1 = vld1q_f32(panel.add(kk * PACK_MR + 4));
-                let a2 = vld1q_f32(panel.add(kk * PACK_MR + 8));
-                let a3 = vld1q_f32(panel.add(kk * PACK_MR + 12));
-                for jj in 0..$nr {
-                    let b = *frames[jj].add(kk);
-                    acc[jj][0] = vfmaq_n_f32(acc[jj][0], a0, b);
-                    acc[jj][1] = vfmaq_n_f32(acc[jj][1], a1, b);
-                    acc[jj][2] = vfmaq_n_f32(acc[jj][2], a2, b);
-                    acc[jj][3] = vfmaq_n_f32(acc[jj][3], a3, b);
+            // K walks in SPARSE_KB chunks; skipping an all-zero block
+            // leaves the surviving FMA chain identical to the dense
+            // sweep, so sparse output is bitwise-equal to dense.
+            let mut kb0 = 0usize;
+            while kb0 < k {
+                let ke = (kb0 + SPARSE_KB).min(k);
+                if kb_active(pm, kb0 / SPARSE_KB) {
+                    for kk in kb0..ke {
+                        let a0 = vld1q_f32(panel.add(kk * PACK_MR));
+                        let a1 = vld1q_f32(panel.add(kk * PACK_MR + 4));
+                        let a2 = vld1q_f32(panel.add(kk * PACK_MR + 8));
+                        let a3 = vld1q_f32(panel.add(kk * PACK_MR + 12));
+                        for jj in 0..$nr {
+                            let b = *frames[jj].add(kk);
+                            acc[jj][0] = vfmaq_n_f32(acc[jj][0], a0, b);
+                            acc[jj][1] = vfmaq_n_f32(acc[jj][1], a1, b);
+                            acc[jj][2] = vfmaq_n_f32(acc[jj][2], a2, b);
+                            acc[jj][3] = vfmaq_n_f32(acc[jj][3], a3, b);
+                        }
+                    }
                 }
+                kb0 = ke;
             }
             for jj in 0..$nr {
                 for l in 0..4 {
@@ -66,6 +78,7 @@ def_kern!(kern4, 4);
 
 /// `c` covers rows `crow0..` of the output; `p0..p1` is the panel range
 /// to compute (full sweep: `crow0 = 0`, `p0 = 0`, `p1 = ceil(m / MR)`).
+/// `pm_all` is the block-sparsity bitmap (`None` = dense).
 ///
 /// # Safety
 /// Requires neon (baseline on aarch64; verified by `detect()`).  Slice
@@ -82,6 +95,7 @@ pub(crate) unsafe fn matmul(
     n: usize,
     acc: bool,
     epi: &Epilogue,
+    pm_all: Option<(&[u64], usize)>,
     p0: usize,
     p1: usize,
 ) {
@@ -89,15 +103,16 @@ pub(crate) unsafe fn matmul(
     let mut tile = [[0f32; PACK_MR]; NR];
     for pi in p0..p1 {
         let panel = panels[pi * PACK_MR * k..].as_ptr();
+        let pm = pm_all.map(|(bits, wpp)| &bits[pi * wpp..(pi + 1) * wpp]);
         let xp = x.as_ptr();
         let mut j0 = 0;
         while j0 < n {
             let nr = NR.min(n - j0);
             match nr {
-                4 => kern4(panel, xp, k, j0, &mut tile),
-                3 => kern3(panel, xp, k, j0, &mut tile),
-                2 => kern2(panel, xp, k, j0, &mut tile),
-                _ => kern1(panel, xp, k, j0, &mut tile),
+                4 => kern4(panel, xp, k, j0, pm, &mut tile),
+                3 => kern3(panel, xp, k, j0, pm, &mut tile),
+                2 => kern2(panel, xp, k, j0, pm, &mut tile),
+                _ => kern1(panel, xp, k, j0, pm, &mut tile),
             }
             store_tile(c, crow0, &tile, j0, nr, pi * PACK_MR, m, n, acc, None, epi);
             j0 += nr;
@@ -130,6 +145,7 @@ macro_rules! def_kern_q8q {
             xq: *const i8,
             kp: usize,
             j0: usize,
+            pm: Option<&[u64]>,
             tile: &mut [[i32; PACK_MR]; NR],
         ) {
             let zero = vdupq_n_s32(0);
@@ -138,20 +154,29 @@ macro_rules! def_kern_q8q {
             for (jj, f) in frames.iter_mut().enumerate() {
                 *f = xq.add((j0 + jj) * kp);
             }
-            for g in 0..kp / 2 {
-                let w0 = vld1_s8(panel.add(g * 32));
-                let w1 = vld1_s8(panel.add(g * 32 + 8));
-                let w2 = vld1_s8(panel.add(g * 32 + 16));
-                let w3 = vld1_s8(panel.add(g * 32 + 24));
-                for jj in 0..$nr {
-                    // [x0, x1] repeated four times as an i8x8 vector.
-                    let pair = (frames[jj].add(2 * g) as *const u16).read_unaligned();
-                    let xp = vreinterpret_s8_u16(vdup_n_u16(pair));
-                    acc[jj][0] = vpadalq_s16(acc[jj][0], vmull_s8(w0, xp));
-                    acc[jj][1] = vpadalq_s16(acc[jj][1], vmull_s8(w1, xp));
-                    acc[jj][2] = vpadalq_s16(acc[jj][2], vmull_s8(w2, xp));
-                    acc[jj][3] = vpadalq_s16(acc[jj][3], vmull_s8(w3, xp));
+            // Pair loop chunked at SPARSE_KB / 2 pairs per block; for
+            // odd k the pad pair shares the last real block's bit.
+            let mut g0 = 0usize;
+            while g0 < kp / 2 {
+                let ge = (g0 + SPARSE_KB / 2).min(kp / 2);
+                if kb_active(pm, g0 / (SPARSE_KB / 2)) {
+                    for g in g0..ge {
+                        let w0 = vld1_s8(panel.add(g * 32));
+                        let w1 = vld1_s8(panel.add(g * 32 + 8));
+                        let w2 = vld1_s8(panel.add(g * 32 + 16));
+                        let w3 = vld1_s8(panel.add(g * 32 + 24));
+                        for jj in 0..$nr {
+                            // [x0, x1] repeated four times as an i8x8 vector.
+                            let pair = (frames[jj].add(2 * g) as *const u16).read_unaligned();
+                            let xp = vreinterpret_s8_u16(vdup_n_u16(pair));
+                            acc[jj][0] = vpadalq_s16(acc[jj][0], vmull_s8(w0, xp));
+                            acc[jj][1] = vpadalq_s16(acc[jj][1], vmull_s8(w1, xp));
+                            acc[jj][2] = vpadalq_s16(acc[jj][2], vmull_s8(w2, xp));
+                            acc[jj][3] = vpadalq_s16(acc[jj][3], vmull_s8(w3, xp));
+                        }
+                    }
                 }
+                g0 = ge;
             }
             for jj in 0..$nr {
                 for l in 0..4 {
@@ -183,6 +208,7 @@ pub(crate) unsafe fn matmul_q8q(
     m: usize,
     kp: usize,
     n: usize,
+    pm_all: Option<(&[u64], usize)>,
     p0: usize,
     p1: usize,
 ) {
@@ -190,15 +216,127 @@ pub(crate) unsafe fn matmul_q8q(
     let mut tile = [[0i32; PACK_MR]; NR];
     for pi in p0..p1 {
         let panel = qpanels[pi * PACK_MR * kp..].as_ptr();
+        let pm = pm_all.map(|(bits, wpp)| &bits[pi * wpp..(pi + 1) * wpp]);
         let xp = xq.as_ptr();
         let mut j0 = 0;
         while j0 < n {
             let nr = NR.min(n - j0);
             match nr {
-                4 => kq4(panel, xp, kp, j0, &mut tile),
-                3 => kq3(panel, xp, kp, j0, &mut tile),
-                2 => kq2(panel, xp, kp, j0, &mut tile),
-                _ => kq1(panel, xp, kp, j0, &mut tile),
+                4 => kq4(panel, xp, kp, j0, pm, &mut tile),
+                3 => kq3(panel, xp, kp, j0, pm, &mut tile),
+                2 => kq2(panel, xp, kp, j0, pm, &mut tile),
+                _ => kq1(panel, xp, kp, j0, pm, &mut tile),
+            }
+            store_tile_i32(c32, crow0, &tile, j0, nr, pi * PACK_MR, m, n);
+            j0 += nr;
+        }
+    }
+}
+
+macro_rules! def_kern_q4 {
+    ($name:ident, $nr:literal) => {
+        /// q4 integer microkernel: per k-pair, one 16-byte load carries
+        /// **32 weights** (two signed nibbles per byte).  `vshl/vshr`
+        /// by 4 sign-extend the low and high nibbles into two i8x16
+        /// vectors whose byte `r` holds `w_{2g}` / `w_{2g+1}` for panel
+        /// row `r`; `vzip1q/vzip2q` interleave them back into the
+        /// pair-adjacent byte order the q8q quarters use, so the same
+        /// `vmull_s8` + `vpadalq_s16` widening dot applies unchanged —
+        /// half the weight bytes per k step, exact i32 accumulation
+        /// (|w| <= 7, nothing saturates).
+        ///
+        /// # Safety
+        /// Requires neon.  `panel` must hold `kp * PACK_MR / 2` bytes in
+        /// the nibble-packed q4 layout and `xq` at least
+        /// `(j0 + $nr) * kp` bytes.
+        #[target_feature(enable = "neon")]
+        #[allow(clippy::needless_range_loop, clippy::single_element_loop)]
+        unsafe fn $name(
+            panel: *const u8,
+            xq: *const i8,
+            kp: usize,
+            j0: usize,
+            pm: Option<&[u64]>,
+            tile: &mut [[i32; PACK_MR]; NR],
+        ) {
+            let zero = vdupq_n_s32(0);
+            let mut acc = [[zero; 4]; $nr];
+            let mut frames = [xq; $nr];
+            for (jj, f) in frames.iter_mut().enumerate() {
+                *f = xq.add((j0 + jj) * kp);
+            }
+            let mut g0 = 0usize;
+            while g0 < kp / 2 {
+                let ge = (g0 + SPARSE_KB / 2).min(kp / 2);
+                if kb_active(pm, g0 / (SPARSE_KB / 2)) {
+                    for g in g0..ge {
+                        let raw = vld1q_s8(panel.add(g * 16) as *const i8);
+                        let lo = vshrq_n_s8::<4>(vshlq_n_s8::<4>(raw));
+                        let hi = vshrq_n_s8::<4>(raw);
+                        // Rows 0-7 / 8-15, bytes pair-interleaved
+                        // [w0_r, w1_r] exactly like the q8q layout.
+                        let pa = vzip1q_s8(lo, hi);
+                        let pb = vzip2q_s8(lo, hi);
+                        for jj in 0..$nr {
+                            let pair = (frames[jj].add(2 * g) as *const u16).read_unaligned();
+                            let xp = vreinterpret_s8_u16(vdup_n_u16(pair));
+                            acc[jj][0] = vpadalq_s16(acc[jj][0], vmull_s8(vget_low_s8(pa), xp));
+                            acc[jj][1] = vpadalq_s16(acc[jj][1], vmull_s8(vget_high_s8(pa), xp));
+                            acc[jj][2] = vpadalq_s16(acc[jj][2], vmull_s8(vget_low_s8(pb), xp));
+                            acc[jj][3] = vpadalq_s16(acc[jj][3], vmull_s8(vget_high_s8(pb), xp));
+                        }
+                    }
+                }
+                g0 = ge;
+            }
+            for jj in 0..$nr {
+                for l in 0..4 {
+                    vst1q_s32(tile[jj].as_mut_ptr().add(4 * l), acc[jj][l]);
+                }
+            }
+        }
+    };
+}
+
+def_kern_q4!(k41, 1);
+def_kern_q4!(k42, 2);
+def_kern_q4!(k43, 3);
+def_kern_q4!(k44, 4);
+
+/// q4 integer GEMM over nibble-packed panels; same panel-range /
+/// sub-slice contract as [`matmul`], writing raw i32 accumulators.
+///
+/// # Safety
+/// Requires neon (baseline on aarch64; verified by `detect()`).  Slice
+/// sizes are checked by `PackedQuantGemm::matmul_q4`.
+#[target_feature(enable = "neon")]
+#[allow(clippy::too_many_arguments)]
+pub(crate) unsafe fn matmul_q4(
+    q4panels: &[u8],
+    c32: &mut [i32],
+    crow0: usize,
+    xq: &[i8],
+    m: usize,
+    kp: usize,
+    n: usize,
+    pm_all: Option<(&[u64], usize)>,
+    p0: usize,
+    p1: usize,
+) {
+    debug_assert_eq!(q4panels.len(), m.div_ceil(PACK_MR) * (PACK_MR / 2) * kp);
+    let mut tile = [[0i32; PACK_MR]; NR];
+    for pi in p0..p1 {
+        let panel = q4panels[pi * (PACK_MR / 2) * kp..].as_ptr();
+        let pm = pm_all.map(|(bits, wpp)| &bits[pi * wpp..(pi + 1) * wpp]);
+        let xp = xq.as_ptr();
+        let mut j0 = 0;
+        while j0 < n {
+            let nr = NR.min(n - j0);
+            match nr {
+                4 => k44(panel, xp, kp, j0, pm, &mut tile),
+                3 => k43(panel, xp, kp, j0, pm, &mut tile),
+                2 => k42(panel, xp, kp, j0, pm, &mut tile),
+                _ => k41(panel, xp, kp, j0, pm, &mut tile),
             }
             store_tile_i32(c32, crow0, &tile, j0, nr, pi * PACK_MR, m, n);
             j0 += nr;

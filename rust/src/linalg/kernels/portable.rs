@@ -7,14 +7,16 @@
 //! hosts the int8 variant used by the quantized engine (dequantization
 //! happens in registers; the per-row scale is fused into the store).
 
-use super::store_tile;
-use crate::linalg::pack::{Epilogue, PACK_MR};
+use super::{kb_active, store_tile};
+use crate::linalg::pack::{Epilogue, PACK_MR, SPARSE_KB};
 
 /// Register-tile width (frame columns per microkernel pass).
 pub(crate) const NR: usize = 4;
 
 /// `c` covers rows `crow0..` of the output; `p0..p1` is the panel range
 /// to compute (full sweep: `crow0 = 0`, `p0 = 0`, `p1 = ceil(m / MR)`).
+/// `pm_all` is the block-sparsity bitmap (`None` = dense); each panel's
+/// mask words ride next to its pointer into the kernel.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn matmul(
     panels: &[f32],
@@ -26,20 +28,22 @@ pub(crate) fn matmul(
     n: usize,
     acc: bool,
     epi: &Epilogue,
+    pm_all: Option<(&[u64], usize)>,
     p0: usize,
     p1: usize,
 ) {
     let mut tile = [[0f32; PACK_MR]; NR];
     for pi in p0..p1 {
         let panel = &panels[pi * PACK_MR * k..(pi + 1) * PACK_MR * k];
+        let pm = pm_all.map(|(bits, wpp)| &bits[pi * wpp..(pi + 1) * wpp]);
         let mut j0 = 0;
         while j0 < n {
             let nr = NR.min(n - j0);
             match nr {
-                4 => kern::<4>(panel, x, k, j0, &mut tile),
-                3 => kern::<3>(panel, x, k, j0, &mut tile),
-                2 => kern::<2>(panel, x, k, j0, &mut tile),
-                _ => kern::<1>(panel, x, k, j0, &mut tile),
+                4 => kern::<4>(panel, x, k, j0, pm, &mut tile),
+                3 => kern::<3>(panel, x, k, j0, pm, &mut tile),
+                2 => kern::<2>(panel, x, k, j0, pm, &mut tile),
+                _ => kern::<1>(panel, x, k, j0, pm, &mut tile),
             }
             store_tile(c, crow0, &tile, j0, nr, pi * PACK_MR, m, n, acc, None, epi);
             j0 += nr;
@@ -52,17 +56,29 @@ fn kern<const NR2: usize>(
     x: &[f32],
     k: usize,
     j0: usize,
+    pm: Option<&[u64]>,
     tile: &mut [[f32; PACK_MR]; NR],
 ) {
     let mut acc = [[0f32; PACK_MR]; NR2];
-    for kk in 0..k {
-        let a = &panel[kk * PACK_MR..(kk + 1) * PACK_MR];
-        for (jj, accj) in acc.iter_mut().enumerate() {
-            let bv = x[(j0 + jj) * k + kk];
-            for (dst, &av) in accj.iter_mut().zip(a) {
-                *dst += av * bv;
+    // K walks in SPARSE_KB chunks; an inactive block's weights are all
+    // exactly zero, so skipping its k-range changes no accumulator (the
+    // in-order chunking keeps the surviving FMA chain identical to the
+    // dense sweep — bitwise, not just tolerably).
+    let mut kb0 = 0;
+    while kb0 < k {
+        let ke = (kb0 + SPARSE_KB).min(k);
+        if kb_active(pm, kb0 / SPARSE_KB) {
+            for kk in kb0..ke {
+                let a = &panel[kk * PACK_MR..(kk + 1) * PACK_MR];
+                for (jj, accj) in acc.iter_mut().enumerate() {
+                    let bv = x[(j0 + jj) * k + kk];
+                    for (dst, &av) in accj.iter_mut().zip(a) {
+                        *dst += av * bv;
+                    }
+                }
             }
         }
+        kb0 = ke;
     }
     tile[..NR2].copy_from_slice(&acc);
 }
@@ -82,20 +98,22 @@ pub(crate) fn matmul_quant(
     n: usize,
     acc: bool,
     epi: &Epilogue,
+    pm_all: Option<(&[u64], usize)>,
     p0: usize,
     p1: usize,
 ) {
     let mut tile = [[0f32; PACK_MR]; NR];
     for pi in p0..p1 {
         let panel = &panels[pi * PACK_MR * k..(pi + 1) * PACK_MR * k];
+        let pm = pm_all.map(|(bits, wpp)| &bits[pi * wpp..(pi + 1) * wpp]);
         let mut j0 = 0;
         while j0 < n {
             let nr = NR.min(n - j0);
             match nr {
-                4 => kern_q::<4>(panel, x, k, j0, &mut tile),
-                3 => kern_q::<3>(panel, x, k, j0, &mut tile),
-                2 => kern_q::<2>(panel, x, k, j0, &mut tile),
-                _ => kern_q::<1>(panel, x, k, j0, &mut tile),
+                4 => kern_q::<4>(panel, x, k, j0, pm, &mut tile),
+                3 => kern_q::<3>(panel, x, k, j0, pm, &mut tile),
+                2 => kern_q::<2>(panel, x, k, j0, pm, &mut tile),
+                _ => kern_q::<1>(panel, x, k, j0, pm, &mut tile),
             }
             store_tile(c, crow0, &tile, j0, nr, pi * PACK_MR, m, n, acc, Some(scales), epi);
             j0 += nr;
@@ -108,17 +126,25 @@ fn kern_q<const NR2: usize>(
     x: &[f32],
     k: usize,
     j0: usize,
+    pm: Option<&[u64]>,
     tile: &mut [[f32; PACK_MR]; NR],
 ) {
     let mut acc = [[0f32; PACK_MR]; NR2];
-    for kk in 0..k {
-        let a = &panel[kk * PACK_MR..(kk + 1) * PACK_MR];
-        for (jj, accj) in acc.iter_mut().enumerate() {
-            let bv = x[(j0 + jj) * k + kk];
-            for (dst, &av) in accj.iter_mut().zip(a) {
-                *dst += f32::from(av) * bv;
+    let mut kb0 = 0;
+    while kb0 < k {
+        let ke = (kb0 + SPARSE_KB).min(k);
+        if kb_active(pm, kb0 / SPARSE_KB) {
+            for kk in kb0..ke {
+                let a = &panel[kk * PACK_MR..(kk + 1) * PACK_MR];
+                for (jj, accj) in acc.iter_mut().enumerate() {
+                    let bv = x[(j0 + jj) * k + kk];
+                    for (dst, &av) in accj.iter_mut().zip(a) {
+                        *dst += f32::from(av) * bv;
+                    }
+                }
             }
         }
+        kb0 = ke;
     }
     tile[..NR2].copy_from_slice(&acc);
 }
@@ -137,27 +163,88 @@ pub(crate) fn matmul_q8q(
     m: usize,
     kp: usize,
     n: usize,
+    pm_all: Option<(&[u64], usize)>,
     p0: usize,
     p1: usize,
 ) {
     for pi in p0..p1 {
         let panel = &qpanels[pi * PACK_MR * kp..(pi + 1) * PACK_MR * kp];
+        let pm = pm_all.map(|(bits, wpp)| &bits[pi * wpp..(pi + 1) * wpp]);
         let row0 = pi * PACK_MR;
         let rows = PACK_MR.min(m - row0);
         for j in 0..n {
             let frame = &xq[j * kp..(j + 1) * kp];
             let mut acc = [0i32; PACK_MR];
-            for g in 0..kp / 2 {
-                let grp = &panel[g * 32..(g + 1) * 32];
-                let x0 = i32::from(frame[2 * g]);
-                let x1 = i32::from(frame[2 * g + 1]);
-                for half in 0..2 {
-                    for ri in 0..8 {
-                        let w0 = i32::from(grp[half * 16 + ri * 2]);
-                        let w1 = i32::from(grp[half * 16 + ri * 2 + 1]);
-                        acc[half * 8 + ri] += w0 * x0 + w1 * x1;
+            // Pair loop chunked at SPARSE_KB / 2 pairs per block; for
+            // odd k the pad pair shares the last real block's bit.
+            let mut g0 = 0;
+            while g0 < kp / 2 {
+                let ge = (g0 + SPARSE_KB / 2).min(kp / 2);
+                if kb_active(pm, g0 / (SPARSE_KB / 2)) {
+                    for g in g0..ge {
+                        let grp = &panel[g * 32..(g + 1) * 32];
+                        let x0 = i32::from(frame[2 * g]);
+                        let x1 = i32::from(frame[2 * g + 1]);
+                        for half in 0..2 {
+                            for ri in 0..8 {
+                                let w0 = i32::from(grp[half * 16 + ri * 2]);
+                                let w1 = i32::from(grp[half * 16 + ri * 2 + 1]);
+                                acc[half * 8 + ri] += w0 * x0 + w1 * x1;
+                            }
+                        }
                     }
                 }
+                g0 = ge;
+            }
+            for (rl, &av) in acc.iter().enumerate().take(rows) {
+                c32[(row0 - crow0 + rl) * n + j] = av;
+            }
+        }
+    }
+}
+
+/// q4 integer kernel over the *nibble-packed* panel layout (see
+/// `pack::pack_panels_q4`): per k-pair group, byte `r` splits into two
+/// sign-extended nibbles in plain scalar code — the reference the
+/// intrinsic q4 kernels must match **bit for bit** (exact i32
+/// arithmetic; |w| <= 7, |x| <= 127 never overflows).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn matmul_q4(
+    q4panels: &[u8],
+    c32: &mut [i32],
+    crow0: usize,
+    xq: &[i8],
+    m: usize,
+    kp: usize,
+    n: usize,
+    pm_all: Option<(&[u64], usize)>,
+    p0: usize,
+    p1: usize,
+) {
+    for pi in p0..p1 {
+        let panel = &q4panels[pi * (PACK_MR / 2) * kp..(pi + 1) * (PACK_MR / 2) * kp];
+        let pm = pm_all.map(|(bits, wpp)| &bits[pi * wpp..(pi + 1) * wpp]);
+        let row0 = pi * PACK_MR;
+        let rows = PACK_MR.min(m - row0);
+        for j in 0..n {
+            let frame = &xq[j * kp..(j + 1) * kp];
+            let mut acc = [0i32; PACK_MR];
+            let mut g0 = 0;
+            while g0 < kp / 2 {
+                let ge = (g0 + SPARSE_KB / 2).min(kp / 2);
+                if kb_active(pm, g0 / (SPARSE_KB / 2)) {
+                    for g in g0..ge {
+                        let grp = &panel[g * 16..(g + 1) * 16];
+                        let x0 = i32::from(frame[2 * g]);
+                        let x1 = i32::from(frame[2 * g + 1]);
+                        for (r, &b) in grp.iter().enumerate() {
+                            let w0 = i32::from(((b << 4) as i8) >> 4);
+                            let w1 = i32::from((b as i8) >> 4);
+                            acc[r] += w0 * x0 + w1 * x1;
+                        }
+                    }
+                }
+                g0 = ge;
             }
             for (rl, &av) in acc.iter().enumerate().take(rows) {
                 c32[(row0 - crow0 + rl) * n + j] = av;

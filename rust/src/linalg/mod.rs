@@ -36,7 +36,10 @@ pub use gemm::{
 };
 pub use kernels::{detect as detect_simd, Simd};
 pub use matrix::{transpose_into, Matrix};
-pub use pack::{Act, Epilogue, PackedGemm, PackedMatrix, PackedQuantGemm, QuantScratch, PACK_MR};
+pub use pack::{
+    Act, Epilogue, PackedGemm, PackedMatrix, PackedQuantGemm, PanelMask, QuantScratch, PACK_MR,
+    SPARSE_KB,
+};
 pub use pool::ThreadPool;
 
 /// Elementwise activations used by every engine.  `sigmoid` and `tanh`

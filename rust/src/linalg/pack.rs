@@ -47,6 +47,13 @@ use crate::linalg::pool::{self, SendPtr, PAR_MIN_WORK};
 /// every kernel family (AVX2 reads it as 2 x 8 lanes, NEON as 4 x 4).
 pub const PACK_MR: usize = 16;
 
+/// Sparse-block width along `K`: the block-sparsity bitmap
+/// ([`PanelMask`]) records zero blocks of `PACK_MR x SPARSE_KB` weights,
+/// and the kernels skip a whole block's k-range when its bit is clear.
+/// Must stay even — the integer kernels walk K in pairs and chunk their
+/// pair loop at `SPARSE_KB / 2`.
+pub const SPARSE_KB: usize = 32;
+
 /// Activation applied per output element by the fused epilogue.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Act {
@@ -155,6 +162,114 @@ impl PackedMatrix {
     }
 }
 
+/// Block-sparsity bitmap over one packed matrix: one bit per
+/// `PACK_MR x SPARSE_KB` weight block (panel granularity along `M`,
+/// `SPARSE_KB` columns along `K`).  A **set** bit marks an *active*
+/// block; a clear bit certifies that every stored weight in the block is
+/// exactly zero, so the kernels skip the block's entire k-range at
+/// dispatch — those weight bytes are never fetched and their
+/// multiply-accumulates never issue.  Composes with every panel layout
+/// (f32, q8/q8q, q4): the mask is built from the logical operand, and
+/// each driver sub-slices the per-panel words next to the panel pointer.
+///
+/// The mask is an **exact** optimization: only blocks whose every weight
+/// is literally zero (`+0.0` bit pattern for f32, `0` for int) are
+/// cleared, so skipping changes no arithmetic result — the integer
+/// accumulators are bit-identical by exactness, and the f32 FMA chain
+/// only ever drops `+0.0 * x` terms.  Accuracy loss happens (on purpose,
+/// and measurably) in the *pruning* pass that zeroes blocks
+/// (`weights::prune`), never here.  Skipping is also bit-identical
+/// across thread counts for free: the pool already splits work at panel
+/// granularity, and the mask only removes k-chunks *within* one panel's
+/// serial sweep.
+#[derive(Debug, Clone)]
+pub struct PanelMask {
+    /// Blocks along K per panel (`ceil(k / SPARSE_KB)`).
+    nkb: usize,
+    /// Bitmap words per panel (`ceil(nkb / 64)`).
+    words_per_panel: usize,
+    /// `np * words_per_panel` words; block `kb` of panel `pi` is bit
+    /// `bits[pi * words_per_panel + kb / 64] >> (kb % 64) & 1`.
+    bits: Vec<u64>,
+    /// Active (set) blocks over all panels.
+    active: usize,
+    /// Total blocks (`np * nkb`).
+    total: usize,
+}
+
+impl PanelMask {
+    /// Scan a row-major `[m, k]` operand and record its zero blocks.
+    /// Returns `None` when every block is active, so a dense matrix
+    /// carries no mask at all and takes byte-for-byte the code path it
+    /// always did.
+    pub fn build<T: Copy>(
+        a: &[T],
+        m: usize,
+        k: usize,
+        is_zero: impl Fn(T) -> bool,
+    ) -> Option<Self> {
+        assert_eq!(a.len(), m * k, "mask: A must be [m, k]");
+        let np = m.div_ceil(PACK_MR);
+        let nkb = k.div_ceil(SPARSE_KB);
+        let words_per_panel = nkb.div_ceil(64);
+        let mut bits = vec![0u64; np * words_per_panel];
+        let mut active = 0usize;
+        for pi in 0..np {
+            let rows = PACK_MR.min(m - pi * PACK_MR);
+            for kb in 0..nkb {
+                let k0 = kb * SPARSE_KB;
+                let k1 = (k0 + SPARSE_KB).min(k);
+                let zero = (0..rows).all(|r| {
+                    let row = pi * PACK_MR + r;
+                    a[row * k + k0..row * k + k1].iter().all(|&v| is_zero(v))
+                });
+                if !zero {
+                    bits[pi * words_per_panel + kb / 64] |= 1u64 << (kb % 64);
+                    active += 1;
+                }
+            }
+        }
+        let total = np * nkb;
+        (active < total).then_some(Self { nkb, words_per_panel, bits, active, total })
+    }
+
+    /// Mask over an f32 operand.  Only the literal `+0.0` bit pattern
+    /// counts as zero — skipping a `-0.0` weight could flip a `-0.0`
+    /// accumulator to `+0.0` — and the pruning pass writes `+0.0`.
+    pub fn from_f32(a: &[f32], m: usize, k: usize) -> Option<Self> {
+        Self::build(a, m, k, |v| v.to_bits() == 0)
+    }
+
+    /// Mask over an int8 operand (quantized weights; q8 and q4 alike).
+    pub fn from_i8(q: &[i8], m: usize, k: usize) -> Option<Self> {
+        Self::build(q, m, k, |v| v == 0)
+    }
+
+    /// Fraction of blocks that are active — the compute and weight
+    /// traffic actually performed, relative to dense.
+    pub fn density(&self) -> f64 {
+        self.active as f64 / self.total as f64
+    }
+
+    pub fn active_blocks(&self) -> usize {
+        self.active
+    }
+
+    pub fn total_blocks(&self) -> usize {
+        self.total
+    }
+
+    pub fn blocks_per_panel(&self) -> usize {
+        self.nkb
+    }
+
+    /// `(bits, words_per_panel)` in the form the kernel dispatchers
+    /// consume (per-panel sub-slicing happens in the arch drivers).
+    pub(crate) fn for_kernels(&self) -> (&[u64], usize) {
+        (&self.bits, self.words_per_panel)
+    }
+}
+
 /// Largest `K` the q8q integer path accepts: with `|w| <= 127` and
 /// `|x| <= 127` per product, the i32 accumulator magnitude is bounded by
 /// `K * 127 * 127`, so any `K` below this can never overflow — the
@@ -198,6 +313,51 @@ fn pack_panels_q8q(q: &[i8], m: usize, k: usize) -> (Vec<i8>, usize) {
                 if kk + 1 < k {
                     out[dst + 1] = q[row * k + kk + 1];
                 }
+            }
+        }
+    }
+    (out, kp)
+}
+
+/// Largest `K` the q4 integer path accepts: `|w| <= 7` and `|x| <= 127`
+/// bound the i32 accumulator magnitude by `K * 7 * 127` — the same
+/// overflow-freedom argument as [`Q8_MAX_K`], ~18x roomier.
+pub(crate) const Q4_MAX_K: usize = (i32::MAX as usize) / (7 * 127);
+
+/// Repack a row-major `[m, k]` *4-bit* matrix (values in `[-7, 7]`,
+/// stored one-per-i8) into the q4 nibble-packed pair-interleaved panel
+/// layout.  Per `PACK_MR`-row panel, per k-pair `g` (`kk = 2g`), **16
+/// bytes**, where byte `r` carries row `r`'s two weights as signed
+/// nibbles:
+///
+/// ```text
+/// byte r = (w(r, kk) & 0x0F) | (w(r, kk + 1) << 4)      r = 0..16
+/// ```
+///
+/// Exactly half the bytes of the q8q layout for the same shape — the
+/// point of q4: the resident weight stream halves, so Eq. 4's per-block
+/// DRAM amortization wins twice as hard — while keeping the same k-pair
+/// step, so the integer kernels share the `qx`/`qpair` activation forms
+/// with q8q unchanged.  Returns the panels and `kp` (`k` rounded up to
+/// even; pad nibbles are zero, contributing exactly 0 to every dot).
+fn pack_panels_q4(q: &[i8], m: usize, k: usize) -> (Vec<u8>, usize) {
+    assert_eq!(q.len(), m * k, "pack: Q must be [m, k]");
+    let kp = k.next_multiple_of(2);
+    let np = m.div_ceil(PACK_MR);
+    let mut out = vec![0u8; np * (PACK_MR / 2) * kp];
+    for pi in 0..np {
+        let base = pi * (PACK_MR / 2) * kp;
+        for g in 0..kp / 2 {
+            let kk = 2 * g;
+            for r in 0..PACK_MR {
+                let row = pi * PACK_MR + r;
+                if row >= m {
+                    continue;
+                }
+                let w0 = q[row * k + kk];
+                let w1 = if kk + 1 < k { q[row * k + kk + 1] } else { 0 };
+                debug_assert!((-7..=7).contains(&w0) && (-7..=7).contains(&w1));
+                out[base + g * 16 + r] = (w0 as u8 & 0x0F) | ((w1 as u8) << 4);
             }
         }
     }
@@ -358,6 +518,7 @@ fn probe_bt_cutoff(a: &[f32], packed: &PackedMatrix, simd: Simd) -> usize {
                 n,
                 false,
                 &Epilogue::NONE,
+                None,
             );
         });
         // The multi-dot must beat the packed kernel by > the margin.
@@ -370,21 +531,40 @@ fn probe_bt_cutoff(a: &[f32], packed: &PackedMatrix, simd: Simd) -> usize {
     cutoff
 }
 
-/// Process-wide cache of probed crossovers, keyed by `(m, k)` shape.
+/// Which crossover a registry entry calibrates: the f32
+/// packed-vs-`gemm_bt` probe, or the integer-vs-widening probe of one
+/// of the quantized precisions.  Part of the registry key, so one
+/// `(m, k)` shape carries an independent cutoff per precision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+enum ProbeKind {
+    BtF32,
+    IntQ8q,
+    IntQ4,
+}
+
+/// Process-wide registry of probed crossovers, keyed by `(kind, m, k)`.
 ///
 /// The probe is a wall-clock measurement, so per-instance probing would
 /// (a) race its timing against concurrent worker threads and (b) let two
 /// engines of the same shape calibrate to *different* crossovers — a
 /// nondeterminism parity tests cannot tolerate.  Instead the first
-/// construction of a shape probes **under the lock** (construction-time
-/// only, never on a hot path) and every later construction — from any
-/// thread — reads the cached value.
-fn cached_bt_cutoff(a: &[f32], packed: &PackedMatrix, simd: Simd) -> usize {
-    static CACHE: OnceLock<Mutex<BTreeMap<(usize, usize), usize>>> = OnceLock::new();
+/// construction of a `(kind, shape)` probes **under the lock**
+/// (construction-time only, never on a hot path) and every later
+/// construction — from any thread — reads the cached value.  One
+/// registry for all probe kinds makes "measured once per shape per
+/// precision" a structural property instead of a convention spread over
+/// per-call-site statics.
+fn cached_cutoff(kind: ProbeKind, m: usize, k: usize, probe: impl FnOnce() -> usize) -> usize {
+    static CACHE: OnceLock<Mutex<BTreeMap<(ProbeKind, usize, usize), usize>>> = OnceLock::new();
     let cache = CACHE.get_or_init(|| Mutex::new(BTreeMap::new()));
     let mut map = cache.lock().unwrap();
-    *map.entry((packed.m, packed.k))
-        .or_insert_with(|| probe_bt_cutoff(a, packed, simd))
+    *map.entry((kind, m, k)).or_insert_with(probe)
+}
+
+fn cached_bt_cutoff(a: &[f32], packed: &PackedMatrix, simd: Simd) -> usize {
+    cached_cutoff(ProbeKind::BtF32, packed.m, packed.k, || {
+        probe_bt_cutoff(a, packed, simd)
+    })
 }
 
 /// Fan one GEMM's output rows out across the process pool at `PACK_MR`
@@ -434,6 +614,9 @@ pub struct PackedGemm {
     bt_cutoff: usize,
     /// Row-major copy, retained only when the probe found a crossover.
     row_major: Option<Vec<f32>>,
+    /// Block-sparsity bitmap, auto-detected at pack time (`None` =
+    /// fully dense; see [`PanelMask`]).
+    mask: Option<PanelMask>,
 }
 
 impl PackedGemm {
@@ -447,7 +630,8 @@ impl PackedGemm {
             0
         };
         let row_major = (bt_cutoff > 0).then(|| a.to_vec());
-        Self { packed, simd, bt_cutoff, row_major }
+        let mask = PanelMask::from_f32(a, m, k);
+        Self { packed, simd, bt_cutoff, row_major, mask }
     }
 
     /// Bypass probing: fixed SIMD level and crossover.  Used by the
@@ -464,7 +648,8 @@ impl PackedGemm {
         );
         let packed = PackedMatrix::pack(a, m, k);
         let row_major = (bt_cutoff > 0).then(|| a.to_vec());
-        Self { packed, simd, bt_cutoff, row_major }
+        let mask = PanelMask::from_f32(a, m, k);
+        Self { packed, simd, bt_cutoff, row_major, mask }
     }
 
     pub fn m(&self) -> usize {
@@ -486,6 +671,19 @@ impl PackedGemm {
 
     pub fn bt_cutoff(&self) -> usize {
         self.bt_cutoff
+    }
+
+    /// Fraction of `PACK_MR x SPARSE_KB` weight blocks that are active
+    /// (1.0 when dense — no mask resident at all).
+    pub fn density(&self) -> f64 {
+        self.mask.as_ref().map_or(1.0, PanelMask::density)
+    }
+
+    /// Drop the sparsity mask: every block computes, including the
+    /// all-zero ones.  Exists for the parity tests, which assert the
+    /// skip path against this dense-with-zeros sweep bitwise.
+    pub fn force_dense(&mut self) {
+        self.mask = None;
     }
 
     /// Smallest `n` at which the packed-panel kernel (rather than the
@@ -528,12 +726,16 @@ impl PackedGemm {
                 return;
             }
         }
+        // The gemm_bt path above ignores the mask: the multi-dot reads
+        // the row-major copy directly, and its zero terms cost what they
+        // always did (only ever taken at tiny n).
         let (simd, panels) = (self.simd, self.packed.panels());
+        let pm_all = self.mask.as_ref().map(PanelMask::for_kernels);
         let fanned = par_split_rows(m, k, n, c, |csub, row0, pi| {
-            kernels::matmul_range(simd, panels, csub, row0, x, m, k, n, acc, epi, pi, pi + 1);
+            kernels::matmul_range(simd, panels, csub, row0, x, m, k, n, acc, epi, pm_all, pi, pi + 1);
         });
         if !fanned {
-            kernels::matmul(simd, panels, c, x, m, k, n, acc, epi);
+            kernels::matmul(simd, panels, c, x, m, k, n, acc, epi, pm_all);
         }
     }
 }
@@ -579,19 +781,26 @@ pub(crate) fn apply_epilogue(c: &mut [f32], m: usize, n: usize, epi: &Epilogue) 
 pub struct PackedQuantGemm {
     m: usize,
     k: usize,
-    /// k-major i8 panels (widening path).  Empty on q8q handles whose
+    /// k-major i8 panels (widening path).  Empty on q8q/q4 handles whose
     /// probe found `int_cutoff == 0`: the fallback is unreachable then,
     /// and dropping the copy keeps the resident footprint at one byte
-    /// per weight.
+    /// (q8q) / one nibble (q4) per weight.
     panels: Vec<i8>,
-    /// Pair-interleaved i8 panels (integer path; empty in q8 mode).
+    /// Pair-interleaved i8 panels (q8q integer path; empty otherwise).
     qpanels: Vec<i8>,
+    /// Nibble-packed panels (q4 integer path; empty otherwise).  Half
+    /// the bytes of `qpanels` for the same shape.
+    q4panels: Vec<u8>,
     /// `k` rounded up to even (integer-panel stride; 0 in q8 mode).
     kp: usize,
+    /// Block-sparsity bitmap over the quantized operand, shared by every
+    /// resident panel layout (`None` = dense; see [`PanelMask`]).
+    mask: Option<PanelMask>,
     scales: Vec<f32>,
     simd: Simd,
-    /// `n <= int_cutoff` routes q8q calls through the widening fallback
-    /// (probed at construction, like [`PackedGemm::bt_cutoff`]).
+    /// `n <= int_cutoff` routes q8q/q4 calls through the widening
+    /// fallback (probed at construction, like [`PackedGemm::bt_cutoff`];
+    /// q4 handles store their own probe kind's value here).
     int_cutoff: usize,
 }
 
@@ -604,7 +813,9 @@ impl PackedQuantGemm {
             k,
             panels: pack_panels(q, m, k),
             qpanels: Vec::new(),
+            q4panels: Vec::new(),
             kp: 0,
+            mask: PanelMask::from_i8(q, m, k),
             scales: scales.to_vec(),
             simd: kernels::detect(),
             int_cutoff: 0,
@@ -660,7 +871,69 @@ impl PackedQuantGemm {
             k,
             panels: pack_panels(q, m, k),
             qpanels,
+            q4panels: Vec::new(),
             kp,
+            mask: PanelMask::from_i8(q, m, k),
+            scales: scales.to_vec(),
+            simd,
+            int_cutoff,
+        }
+    }
+
+    /// q4 mode: signed 4-bit weights (values in `[-7, 7]`) packed two
+    /// per byte — **exactly half the resident weight bytes of q8** for
+    /// the same shape — with dynamically quantized activations and exact
+    /// i32 accumulation end to end, like q8q.  One dequant scale per
+    /// output row, applied by the same fused dequant epilogue
+    /// ([`dequant_rows`]).  Probes its own integer-vs-widening crossover
+    /// (the q4 kernel pays an in-register unpack per byte that q8q does
+    /// not) and drops the widening copy when unreachable.
+    pub fn new_q4(q: &[i8], scales: &[f32], m: usize, k: usize) -> Self {
+        let mut pq = Self::with_dispatch_q4(q, scales, m, k, kernels::detect(), 0);
+        if m * k >= PROBE_MIN_ELEMS {
+            pq.int_cutoff = cached_int_cutoff(&pq);
+        }
+        if pq.int_cutoff == 0 {
+            pq.panels = Vec::new();
+        }
+        pq
+    }
+
+    /// q4 constructor with a fixed SIMD level and crossover (parity
+    /// tests and benches); keeps the widening panels regardless of the
+    /// crossover so both paths stay comparable.  Same soundness rule as
+    /// [`PackedGemm::with_dispatch`].
+    pub fn with_dispatch_q4(
+        q: &[i8],
+        scales: &[f32],
+        m: usize,
+        k: usize,
+        simd: Simd,
+        int_cutoff: usize,
+    ) -> Self {
+        assert_eq!(scales.len(), m, "one dequant scale per row");
+        assert!(
+            simd == Simd::Portable || simd == kernels::detect(),
+            "SIMD level {simd:?} not available on this host (detected {:?})",
+            kernels::detect()
+        );
+        assert!(
+            k <= Q4_MAX_K,
+            "q4 supports K up to {Q4_MAX_K} (i32 accumulator bound), got {k}"
+        );
+        assert!(
+            q.iter().all(|&v| (-7..=7).contains(&v)),
+            "q4 weights must lie in [-7, 7]"
+        );
+        let (q4panels, kp) = pack_panels_q4(q, m, k);
+        Self {
+            m,
+            k,
+            panels: pack_panels(q, m, k),
+            qpanels: Vec::new(),
+            q4panels,
+            kp,
+            mask: PanelMask::from_i8(q, m, k),
             scales: scales.to_vec(),
             simd,
             int_cutoff,
@@ -675,10 +948,26 @@ impl PackedQuantGemm {
         self.k
     }
 
-    /// Weight bytes (the DRAM-traffic unit): 1 byte per logical element
-    /// plus the f32 scales (padding rows are never fetched usefully).
+    /// Streamed weight panel bytes per block (the DRAM-traffic unit,
+    /// before scales): one byte per logical element for q8/q8q, half a
+    /// byte for q4, scaled by the block-sparse density — skipped blocks
+    /// are never fetched, so their bytes never cross the bus.
+    pub fn panel_weight_bytes(&self) -> usize {
+        let dense = if self.is_q4() {
+            (self.m * self.k).div_ceil(2)
+        } else {
+            self.m * self.k
+        };
+        match &self.mask {
+            None => dense,
+            Some(pm) => (dense as f64 * pm.density()).round() as usize,
+        }
+    }
+
+    /// Weight bytes (the DRAM-traffic unit): streamed panel bytes plus
+    /// the f32 scales (padding rows are never fetched usefully).
     pub fn weight_bytes(&self) -> usize {
-        self.m * self.k + self.scales.len() * 4
+        self.panel_weight_bytes() + self.scales.len() * 4
     }
 
     /// Reconstruct the dequantized f32 value at `(r, c)` straight from
@@ -687,20 +976,48 @@ impl PackedQuantGemm {
     pub fn dequant(&self, r: usize, c: usize) -> f32 {
         assert!(r < self.m && c < self.k);
         let (pi, rr) = (r / PACK_MR, r % PACK_MR);
-        let q = if self.panels.is_empty() {
+        let q = if !self.panels.is_empty() {
+            self.panels[pi * PACK_MR * self.k + c * PACK_MR + rr]
+        } else if self.is_q4() {
+            // q4 handle whose widening panels were dropped: decode the
+            // signed nibble from the packed layout.
+            let b = self.q4panels[pi * (PACK_MR / 2) * self.kp + (c / 2) * 16 + rr];
+            if c % 2 == 0 {
+                ((b << 4) as i8) >> 4
+            } else {
+                (b as i8) >> 4
+            }
+        } else {
             // q8q handle whose widening panels were dropped: read the
             // pair-interleaved integer layout instead.
             let base = pi * PACK_MR * self.kp + (c / 2) * 32;
             self.qpanels[base + (rr / 8) * 16 + (rr % 8) * 2 + c % 2]
-        } else {
-            self.panels[pi * PACK_MR * self.k + c * PACK_MR + rr]
         };
         f32::from(q) * self.scales[r]
     }
 
-    /// Whether this handle was built for the q8q integer path.
+    /// Whether this handle was built for an integer (quantized
+    /// activation) path — q8q or q4.
     pub fn quantizes_activations(&self) -> bool {
-        !self.qpanels.is_empty()
+        !self.qpanels.is_empty() || !self.q4panels.is_empty()
+    }
+
+    /// Whether this handle packs 4-bit (nibble) weight panels.
+    pub fn is_q4(&self) -> bool {
+        !self.q4panels.is_empty()
+    }
+
+    /// Fraction of `PACK_MR x SPARSE_KB` weight blocks that are active
+    /// (1.0 when dense — no mask resident at all).
+    pub fn density(&self) -> f64 {
+        self.mask.as_ref().map_or(1.0, PanelMask::density)
+    }
+
+    /// Drop the sparsity mask: every block computes, including the
+    /// all-zero ones.  Exists for the parity tests, which assert the
+    /// skip path against this dense-with-zeros sweep bitwise.
+    pub fn force_dense(&mut self) {
+        self.mask = None;
     }
 
     /// Probed integer-vs-widening crossover (`0` = integer path at every
@@ -734,14 +1051,17 @@ impl PackedQuantGemm {
             return;
         }
         let (panels, scales) = (self.panels.as_slice(), self.scales.as_slice());
+        let pm_all = self.mask.as_ref().map(PanelMask::for_kernels);
         let fanned = par_split_rows(m, k, n, c, |csub, row0, pi| {
             kernels::portable::matmul_quant(
-                panels, scales, csub, row0, x, m, k, n, acc, epi, pi, pi + 1,
+                panels, scales, csub, row0, x, m, k, n, acc, epi, pm_all, pi, pi + 1,
             );
         });
         if !fanned {
             let np = m.div_ceil(PACK_MR);
-            kernels::portable::matmul_quant(panels, scales, c, 0, x, m, k, n, acc, epi, 0, np);
+            kernels::portable::matmul_quant(
+                panels, scales, c, 0, x, m, k, n, acc, epi, pm_all, 0, np,
+            );
         }
     }
 
@@ -769,7 +1089,7 @@ impl PackedQuantGemm {
     ) {
         assert!(
             self.quantizes_activations(),
-            "matmul_q8q requires a PackedQuantGemm built with new_q8q"
+            "matmul_q8q requires a PackedQuantGemm built with new_q8q or new_q4"
         );
         let (m, k) = (self.m, self.k);
         assert_eq!(x.len(), n * k, "X must be [n={n}, k={k}]");
@@ -782,6 +1102,23 @@ impl PackedQuantGemm {
             return;
         }
         self.matmul_int(c, x, n, acc, epi, scratch);
+    }
+
+    /// q4 integer GEMM — same contract as [`Self::matmul_q8q`] (dynamic
+    /// per-column activation quantization, exact i32 accumulation, fused
+    /// dequant epilogue, widening fallback below the probed crossover),
+    /// over nibble-packed panels at **half** the weight traffic.
+    pub fn matmul_q4(
+        &self,
+        c: &mut [f32],
+        x: &[f32],
+        n: usize,
+        acc: bool,
+        epi: &Epilogue,
+        scratch: &mut QuantScratch,
+    ) {
+        assert!(self.is_q4(), "matmul_q4 requires a PackedQuantGemm built with new_q4");
+        self.matmul_q8q(c, x, n, acc, epi, scratch);
     }
 
     /// The integer path body (no crossover check — the probe times this
@@ -802,7 +1139,10 @@ impl PackedQuantGemm {
         }
         let QuantScratch { qx, qpair, cscale, acc: acc32 } = scratch;
         let (qx, qpair, cscale) = (&qx[..n * kp], &qpair[..n * (kp / 2)], &cscale[..n]);
-        let (simd, qpanels, scales) = (self.simd, self.qpanels.as_slice(), self.scales.as_slice());
+        let (simd, scales) = (self.simd, self.scales.as_slice());
+        let (qpanels, q4panels) = (self.qpanels.as_slice(), self.q4panels.as_slice());
+        let q4 = self.is_q4();
+        let pm_all = self.mask.as_ref().map(PanelMask::for_kernels);
         let acc_base = SendPtr(acc32.as_mut_ptr());
         let fanned = par_split_rows(m, k, n, c, |csub, row0, pi| {
             let rows = PACK_MR.min(m - row0);
@@ -811,13 +1151,21 @@ impl PackedQuantGemm {
             // and the pool joins before `matmul_int` returns.
             let c32 =
                 unsafe { std::slice::from_raw_parts_mut(acc_base.get().add(row0 * n), rows * n) };
-            kernels::matmul_q8q(simd, qpanels, c32, row0, qx, qpair, m, kp, n, pi, pi + 1);
+            if q4 {
+                kernels::matmul_q4(simd, q4panels, c32, row0, qx, qpair, m, kp, n, pm_all, pi, pi + 1);
+            } else {
+                kernels::matmul_q8q(simd, qpanels, c32, row0, qx, qpair, m, kp, n, pm_all, pi, pi + 1);
+            }
             dequant_rows(csub, row0, c32, rows, m, n, acc, scales, cscale, epi);
         });
         if !fanned {
             let np = m.div_ceil(PACK_MR);
             let c32 = &mut acc32[..m * n];
-            kernels::matmul_q8q(simd, qpanels, c32, 0, qx, qpair, m, kp, n, 0, np);
+            if q4 {
+                kernels::matmul_q4(simd, q4panels, c32, 0, qx, qpair, m, kp, n, pm_all, 0, np);
+            } else {
+                kernels::matmul_q8q(simd, qpanels, c32, 0, qx, qpair, m, kp, n, pm_all, 0, np);
+            }
             dequant_rows(c, 0, c32, m, m, n, acc, scales, cscale, epi);
         }
     }
@@ -829,7 +1177,7 @@ impl PackedQuantGemm {
     pub fn matmul_i32(&self, c32: &mut [i32], x: &[f32], n: usize, scratch: &mut QuantScratch) {
         assert!(
             self.quantizes_activations(),
-            "matmul_i32 requires a PackedQuantGemm built with new_q8q"
+            "matmul_i32 requires a PackedQuantGemm built with new_q8q or new_q4"
         );
         let (m, k, kp) = (self.m, self.k, self.kp);
         assert_eq!(x.len(), n * k, "X must be [n={n}, k={k}]");
@@ -839,19 +1187,17 @@ impl PackedQuantGemm {
         }
         quantize_frames(x, n, k, kp, scratch);
         let np = m.div_ceil(PACK_MR);
-        kernels::matmul_q8q(
-            self.simd,
-            &self.qpanels,
-            c32,
-            0,
-            &scratch.qx[..n * kp],
-            &scratch.qpair[..n * (kp / 2)],
-            m,
-            kp,
-            n,
-            0,
-            np,
-        );
+        let pm_all = self.mask.as_ref().map(PanelMask::for_kernels);
+        let (qx, qpair) = (&scratch.qx[..n * kp], &scratch.qpair[..n * (kp / 2)]);
+        if self.is_q4() {
+            kernels::matmul_q4(
+                self.simd, &self.q4panels, c32, 0, qx, qpair, m, kp, n, pm_all, 0, np,
+            );
+        } else {
+            kernels::matmul_q8q(
+                self.simd, &self.qpanels, c32, 0, qx, qpair, m, kp, n, pm_all, 0, np,
+            );
+        }
     }
 }
 
@@ -887,14 +1233,12 @@ fn probe_int_cutoff(pq: &PackedQuantGemm) -> usize {
     cutoff
 }
 
-/// Process-wide cache of probed q8q crossovers, keyed by `(m, k)` — the
-/// same determinism argument as [`cached_bt_cutoff`]: two engines of one
-/// shape must never calibrate to different paths.
+/// Registry wrapper for the integer-vs-widening probe; the handle's
+/// panel layout picks the probe kind (q4 and q8q calibrate separately —
+/// the q4 kernel has different unpack cost per byte).
 fn cached_int_cutoff(pq: &PackedQuantGemm) -> usize {
-    static CACHE: OnceLock<Mutex<BTreeMap<(usize, usize), usize>>> = OnceLock::new();
-    let cache = CACHE.get_or_init(|| Mutex::new(BTreeMap::new()));
-    let mut map = cache.lock().unwrap();
-    *map.entry((pq.m, pq.k)).or_insert_with(|| probe_int_cutoff(pq))
+    let kind = if pq.is_q4() { ProbeKind::IntQ4 } else { ProbeKind::IntQ8q };
+    cached_cutoff(kind, pq.m, pq.k, || probe_int_cutoff(pq))
 }
 
 #[cfg(test)]
@@ -1188,6 +1532,214 @@ mod tests {
         let x0 = s.qx[kp] as i16 as u16 as u32;
         let x1 = s.qx[kp + 1] as i16 as u16 as u32;
         assert_eq!(s.qpair[kp / 2] as u32, x0 | (x1 << 16));
+    }
+
+    #[test]
+    fn q4_panel_layout_nibbles_and_padding() {
+        // m = 17 rows (one full panel + 1), k = 5 (odd -> kp = 6 with a
+        // zero pad nibble).  Check signed-nibble placement.
+        let (m, k) = (PACK_MR + 1, 5);
+        let q: Vec<i8> = (0..m * k).map(|i| (i % 15) as i8 - 7).collect();
+        let (panels, kp) = pack_panels_q4(&q, m, k);
+        assert_eq!(kp, 6);
+        assert_eq!(panels.len(), 2 * (PACK_MR / 2) * kp);
+        let nib = |pi: usize, g: usize, r: usize, o: usize| -> i8 {
+            let b = panels[pi * (PACK_MR / 2) * kp + g * 16 + r];
+            if o == 0 {
+                ((b << 4) as i8) >> 4
+            } else {
+                (b as i8) >> 4
+            }
+        };
+        // Panel 0: row 3, kk = 2 -> group 1, lo nibble; kk = 3 -> hi.
+        assert_eq!(nib(0, 1, 3, 0), q[3 * k + 2]);
+        assert_eq!(nib(0, 1, 3, 1), q[3 * k + 3]);
+        // kk = 4 pairs with the zero pad column (kk = 5 >= k).
+        assert_eq!(nib(0, 2, 0, 0), q[4]);
+        assert_eq!(nib(0, 2, 0, 1), 0);
+        // Panel 1 holds row 16; rows 17.. are zero padding.
+        assert_eq!(nib(1, 0, 0, 0), q[PACK_MR * k]);
+        assert_eq!(nib(1, 0, 1, 0), 0);
+    }
+
+    fn quantize_rows_q4(a: &[f32], m: usize, k: usize) -> (Vec<i8>, Vec<f32>) {
+        let mut q = vec![0i8; m * k];
+        let mut scales = vec![0.0f32; m];
+        for r in 0..m {
+            let row = &a[r * k..(r + 1) * k];
+            let max = row.iter().fold(0.0f32, |mx, v| mx.max(v.abs()));
+            let s = if max > 0.0 { max / 7.0 } else { 1.0 };
+            scales[r] = s;
+            for (dst, &v) in q[r * k..(r + 1) * k].iter_mut().zip(row) {
+                *dst = (v / s).round().clamp(-7.0, 7.0) as i8;
+            }
+        }
+        (q, scales)
+    }
+
+    #[test]
+    fn q4_matmul_matches_scalar_integer_oracle() {
+        // Full q4 pipeline (dynamic per-column activation quantization ->
+        // nibble-unpack integer kernel -> fused dequant) against a
+        // from-scratch scalar reference.
+        let (m, k, n) = (24usize, 19usize, 6usize);
+        let mut rng = Rng::new(5);
+        let mut a = vec![0.0; m * k];
+        rng.fill_normal(&mut a, 0.1);
+        let (q, scales) = quantize_rows_q4(&a, m, k);
+        let mut x = vec![0.0; n * k];
+        rng.fill_normal(&mut x, 1.0);
+
+        let pq = PackedQuantGemm::with_dispatch_q4(&q, &scales, m, k, Simd::Portable, 0);
+        assert!(pq.is_q4() && pq.quantizes_activations());
+        let bias: Vec<f32> = (0..m).map(|r| r as f32 * 0.01).collect();
+        let mut got = vec![0.0; m * n];
+        let mut scratch = QuantScratch::new();
+        pq.matmul_q4(&mut got, &x, n, false, &Epilogue::with_bias(&bias), &mut scratch);
+
+        for j in 0..n {
+            let frame = &x[j * k..(j + 1) * k];
+            let max = frame.iter().fold(0.0f32, |mx, v| mx.max(v.abs()));
+            let sx = if max > 0.0 { max / 127.0 } else { 1.0 };
+            let xq: Vec<i32> = frame
+                .iter()
+                .map(|&v| (v / sx).round().clamp(-127.0, 127.0) as i32)
+                .collect();
+            for r in 0..m {
+                let acc: i32 = (0..k).map(|c| i32::from(q[r * k + c]) * xq[c]).sum();
+                let want = acc as f32 * (scales[r] * sx) + bias[r];
+                let g = got[r * n + j];
+                let tol = 1e-5 * want.abs().max(1.0);
+                assert!((g - want).abs() <= tol, "({r},{j}): {g} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn q4_dequant_reads_nibble_panels_and_bytes_are_half() {
+        let (m, k) = (PACK_MR + 3, 8);
+        let q: Vec<i8> = (0..m * k).map(|i| (i % 15) as i8 - 7).collect();
+        let scales: Vec<f32> = (0..m).map(|r| 0.01 + r as f32 * 1e-3).collect();
+        let mut pq4 = PackedQuantGemm::with_dispatch_q4(&q, &scales, m, k, Simd::Portable, 0);
+        // Simulate the dropped-widening-panels state of new_q4.
+        pq4.panels = Vec::new();
+        for r in [0usize, 7, m - 1] {
+            for c in [0usize, 3, k - 1] {
+                assert_eq!(pq4.dequant(r, c), f32::from(q[r * k + c]) * scales[r]);
+            }
+        }
+        let pq8 = PackedQuantGemm::with_dispatch_q8q(&q, &scales, m, k, Simd::Portable, 0);
+        // The test matrix has a few scattered zeros but no zero block.
+        assert_eq!(pq4.density(), 1.0);
+        assert_eq!(pq4.panel_weight_bytes(), m * k / 2);
+        assert_eq!(pq8.panel_weight_bytes(), m * k);
+        assert_eq!(
+            pq4.weight_bytes() - scales.len() * 4,
+            (pq8.weight_bytes() - scales.len() * 4) / 2
+        );
+    }
+
+    #[test]
+    fn panel_mask_records_zero_blocks_and_dense_is_none() {
+        let (m, k) = (PACK_MR * 2, SPARSE_KB * 3 + 5);
+        let mut a = vec![1.0f32; m * k];
+        assert!(PanelMask::from_f32(&a, m, k).is_none(), "dense -> no mask");
+        // Zero panel 1's block 2 (rows 16.., k in [64, 96)) and panel
+        // 0's ragged tail block 3 (k in [96, 101)).
+        for r in PACK_MR..m {
+            for kk in 2 * SPARSE_KB..3 * SPARSE_KB {
+                a[r * k + kk] = 0.0;
+            }
+        }
+        for r in 0..PACK_MR {
+            for kk in 3 * SPARSE_KB..k {
+                a[r * k + kk] = 0.0;
+            }
+        }
+        let pm = PanelMask::from_f32(&a, m, k).expect("two zero blocks");
+        assert_eq!(pm.blocks_per_panel(), 4);
+        assert_eq!(pm.total_blocks(), 8);
+        assert_eq!(pm.active_blocks(), 6);
+        assert!((pm.density() - 0.75).abs() < 1e-12);
+        let (bits, wpp) = pm.for_kernels();
+        assert_eq!(wpp, 1);
+        assert_eq!(bits[0] & 0b1111, 0b0111); // panel 0: block 3 clear
+        assert_eq!(bits[1] & 0b1111, 0b1011); // panel 1: block 2 clear
+        // A -0.0 weight keeps its block active (skip must stay exact).
+        let mut b = a.clone();
+        b[PACK_MR * k + 2 * SPARSE_KB] = -0.0;
+        let pm2 = PanelMask::from_f32(&b, m, k).expect("still one zero block");
+        assert_eq!(pm2.active_blocks(), 7);
+    }
+
+    #[test]
+    fn sparse_skip_matches_dense_with_zeros_bitwise_f32() {
+        // The skipped blocks hold exact zeros, so the masked sweep must
+        // reproduce the dense sweep bit for bit.
+        let (m, k, n) = (PACK_MR * 2 + 3, SPARSE_KB * 2 + 7, 5);
+        let mut rng = Rng::new(21);
+        let mut a = vec![0.0; m * k];
+        rng.fill_normal(&mut a, 0.5);
+        for r in 0..m {
+            for kk in SPARSE_KB..2 * SPARSE_KB {
+                a[r * k + kk] = 0.0;
+            }
+        }
+        let mut x = vec![0.0; n * k];
+        rng.fill_normal(&mut x, 1.0);
+        let bias: Vec<f32> = (0..m).map(|r| (r % 3) as f32 * 0.1).collect();
+        let acts = [Act::Sigmoid];
+        let sparse = PackedGemm::with_dispatch(&a, m, k, Simd::Portable, 0);
+        assert!(sparse.density() < 1.0);
+        let mut dense = sparse.clone();
+        dense.force_dense();
+        let mut c1 = vec![0.0; m * n];
+        let mut c2 = vec![0.0; m * n];
+        sparse.matmul(&mut c1, &x, n, false, &Epilogue::fused(&bias, &acts));
+        dense.matmul(&mut c2, &x, n, false, &Epilogue::fused(&bias, &acts));
+        for (g, w) in c1.iter().zip(&c2) {
+            assert_eq!(g.to_bits(), w.to_bits(), "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn sparse_skip_matches_dense_with_zeros_q8q_and_q4_i32() {
+        let (m, k, n) = (PACK_MR * 2, SPARSE_KB * 2, 4);
+        let mut q = vec![0i8; m * k];
+        for (i, v) in q.iter_mut().enumerate() {
+            *v = ((i * 5) % 15) as i8 - 7;
+        }
+        // Zero panel 0's block 1 and panel 1's block 0.
+        for r in 0..PACK_MR {
+            for kk in SPARSE_KB..k {
+                q[r * k + kk] = 0;
+            }
+        }
+        for r in PACK_MR..m {
+            for kk in 0..SPARSE_KB {
+                q[r * k + kk] = 0;
+            }
+        }
+        let scales = vec![0.02f32; m];
+        let mut x = vec![0.0; n * k];
+        let mut rng = Rng::new(33);
+        rng.fill_normal(&mut x, 1.0);
+        let mut scratch = QuantScratch::new();
+        for q4 in [false, true] {
+            let sparse = if q4 {
+                PackedQuantGemm::with_dispatch_q4(&q, &scales, m, k, Simd::Portable, 0)
+            } else {
+                PackedQuantGemm::with_dispatch_q8q(&q, &scales, m, k, Simd::Portable, 0)
+            };
+            assert!((sparse.density() - 0.5).abs() < 1e-12);
+            let mut dense = sparse.clone();
+            dense.force_dense();
+            let mut c1 = vec![0i32; m * n];
+            let mut c2 = vec![0i32; m * n];
+            sparse.matmul_i32(&mut c1, &x, n, &mut scratch);
+            dense.matmul_i32(&mut c2, &x, n, &mut scratch);
+            assert_eq!(c1, c2, "q4={q4}: skip must be exact");
+        }
     }
 
     #[test]

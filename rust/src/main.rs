@@ -161,18 +161,29 @@ fn cmd_simulate(args: &Args) -> Result<(), String> {
     }
     let prec_str = args.get_or("precision", "f32");
     let precision = mtsrnn::memsim::SimPrec::parse(prec_str)
-        .ok_or_else(|| format!("unknown --precision {prec_str:?} (f32|q8|q8q)"))?;
+        .ok_or_else(|| format!("unknown --precision {prec_str:?} (f32|q8|q8q|q4)"))?;
     if precision != mtsrnn::memsim::SimPrec::F32 && arch != Arch::Sru {
         return Err(format!("--precision {prec_str} is sru-only (got --arch {arch})"));
     }
+    let density = match args.get("density") {
+        None => 1.0,
+        Some(v) => {
+            let d: f64 = v.parse().map_err(|e| format!("--density: {e}"))?;
+            if !(d > 0.0 && d <= 1.0) {
+                return Err(format!("--density must be in (0, 1], got {d}"));
+            }
+            d
+        }
+    };
     let mut cfg = SimConfig::paper(cpu, ModelConfig::paper(arch, size), t);
     cfg.samples = samples;
     cfg.cores = cores;
     cfg.precision = precision;
+    cfg.density = density;
     let r = simulate(&cfg);
     println!("platform            {}", cpu.name);
     println!(
-        "model               {arch}:{prec_str} {size:?} T={t} cores={cores} ({samples} samples)"
+        "model               {arch}:{prec_str} d={density} {size:?} T={t} cores={cores} ({samples} samples)"
     );
     println!("predicted time      {:.3} ms", r.millis());
     println!("  compute cycles    {:.3e}", r.compute_cycles);

@@ -11,7 +11,7 @@
 use crate::memsim::cpu::CpuSpec;
 use crate::memsim::hierarchy::{AccessCounts, Hierarchy};
 use crate::memsim::trace::{
-    trace_elementwise, trace_gemm, trace_gemm_w, trace_gemv, trace_transpose, Layout,
+    trace_elementwise, trace_gemm, trace_gemm_wb, trace_gemv, trace_transpose, Layout,
 };
 use crate::models::config::{Arch, ModelConfig};
 
@@ -32,14 +32,19 @@ pub enum SimPrec {
     Q8,
     /// Int8 weights + dynamically quantized activations, integer MACs.
     Q8Q,
+    /// Int4 weights (two per byte) + quantized activations, integer
+    /// MACs — half the weight stream of Q8Q, same arithmetic model.
+    Q4,
 }
 
 impl SimPrec {
-    /// Weight element size in bytes.
-    fn weight_bytes(self) -> u64 {
+    /// Weight element size in **bits** — the sub-byte axis: q4 packs
+    /// two weights per streamed byte.
+    fn weight_bits(self) -> u64 {
         match self {
-            SimPrec::F32 => 4,
-            SimPrec::Q8 | SimPrec::Q8Q => 1,
+            SimPrec::F32 => 32,
+            SimPrec::Q8 | SimPrec::Q8Q => 8,
+            SimPrec::Q4 => 4,
         }
     }
 
@@ -48,6 +53,7 @@ impl SimPrec {
             "f32" => Some(SimPrec::F32),
             "q8" => Some(SimPrec::Q8),
             "q8q" => Some(SimPrec::Q8Q),
+            "q4" => Some(SimPrec::Q4),
             _ => None,
         }
     }
@@ -76,6 +82,12 @@ pub struct SimConfig {
     pub cores: usize,
     /// Engine precision (see [`SimPrec`]; SRU only).
     pub precision: SimPrec,
+    /// Block-sparsity density of the gate weights in `[0, 1]` (1.0 =
+    /// dense).  Models the `PanelMask` skip path: only the active
+    /// fraction of the weight stream leaves DRAM, and only its MACs
+    /// run — `B`/`C` traffic and the element-wise remainder are
+    /// unchanged.  SRU only, like `precision`.
+    pub density: f64,
 }
 
 impl SimConfig {
@@ -88,6 +100,7 @@ impl SimConfig {
             measure_blocks: 2,
             cores: 1,
             precision: SimPrec::F32,
+            density: 1.0,
         }
     }
 }
@@ -123,24 +136,38 @@ fn trace_block(
     model: &ModelConfig,
     t: usize,
     prec: SimPrec,
+    density: f64,
 ) -> (f64, f64, f64) {
     let (hd, d) = (model.hidden, model.input);
     match model.arch {
         Arch::Sru => {
             // transpose x -> xt, gates = W @ xt (+bias), scan.
             trace_transpose(h, lay.x, lay.xt, t, d);
-            // Int8 precisions stream 1 weight byte per element (plus a
-            // per-row f32 scale pass, counted separately below).
-            trace_gemm_w(h, lay.weights, lay.xt, lay.gates, 3 * hd, d, t, prec.weight_bytes());
+            // Quantized precisions stream 8 or 4 weight bits per element
+            // (plus a per-row f32 scale pass, counted separately below);
+            // block sparsity streams only the active fraction.
+            trace_gemm_wb(
+                h,
+                lay.weights,
+                lay.xt,
+                lay.gates,
+                3 * hd,
+                d,
+                t,
+                prec.weight_bits(),
+                density,
+            );
             if prec != SimPrec::F32 {
                 trace_elementwise(h, &[lay.weights2], &[], 3 * hd);
             }
             // Scan: read 3 gate rows + x, write out; carry state.
             trace_elementwise(h, &[lay.gates, lay.x], &[lay.out], hd * t * 3 / 2);
             trace_elementwise(h, &[lay.state], &[lay.state], hd);
-            let gemm = 2.0 * (3 * hd * d * t) as f64;
+            // Skipped blocks run no MACs: the GEMM term scales with the
+            // active fraction (the kernels skip at dispatch).
+            let gemm = 2.0 * (3 * hd * d * t) as f64 * density;
             let mut aux = 8.0 * (hd * t) as f64;
-            if prec == SimPrec::Q8Q {
+            if matches!(prec, SimPrec::Q8Q | SimPrec::Q4) {
                 // Dynamic per-column activation quantization: an
                 // abs-max + scale pass over the [d, t] input block —
                 // f32 work, so it stays in the aux term.
@@ -215,14 +242,14 @@ pub fn simulate(cfg: &SimConfig) -> SimReport {
 
     // Warmup: populate the hierarchy (cold-start effects are a rounding
     // error over 1,024 samples and the paper times warm loops).
-    trace_block(&mut h, &lay, &cfg.model, t, cfg.precision);
+    trace_block(&mut h, &lay, &cfg.model, t, cfg.precision, cfg.density);
     h.reset_counters();
 
     let mut gemm_flops = 0.0;
     let mut aux_flops = 0.0;
     let mut transc = 0.0;
     for _ in 0..measured {
-        let (g, a, tr) = trace_block(&mut h, &lay, &cfg.model, t, cfg.precision);
+        let (g, a, tr) = trace_block(&mut h, &lay, &cfg.model, t, cfg.precision, cfg.density);
         gemm_flops += g;
         aux_flops += a;
         transc += tr;
@@ -243,12 +270,14 @@ pub fn simulate(cfg: &SimConfig) -> SimReport {
     // extra bytes.
     let eff = spec.gemm_efficiency_at(t);
     let cores = cfg.cores.max(1) as f64;
-    // Q8Q runs the GEMM MACs on the integer kernels — `int8_mac_ratio`
-    // more arithmetic per cycle at the same efficiency curve.  Only the
-    // GEMM term gets the ratio: the element-wise remainder (and Q8Q's
-    // quantization pass) stays f32.  Q8 only shrinks bytes (widening
-    // path computes in f32), so its compute terms are the f32 ones.
-    let mac_ratio = if cfg.precision == SimPrec::Q8Q {
+    // Q8Q and Q4 run the GEMM MACs on the integer kernels —
+    // `int8_mac_ratio` more arithmetic per cycle at the same efficiency
+    // curve (q4 unpacks nibbles in-register into the same i16-pair
+    // multiplies, so its MAC rate matches q8q's).  Only the GEMM term
+    // gets the ratio: the element-wise remainder (and the quantization
+    // pass) stays f32.  Q8 only shrinks bytes (widening path computes
+    // in f32), so its compute terms are the f32 ones.
+    let mac_ratio = if matches!(cfg.precision, SimPrec::Q8Q | SimPrec::Q4) {
         spec.int8_mac_ratio
     } else {
         1.0
@@ -431,6 +460,43 @@ mod tests {
         );
         assert!(qq.seconds <= q.seconds + 1e-12);
         assert!(q.seconds <= f.seconds + 1e-12);
+    }
+
+    #[test]
+    fn q4_halves_weight_traffic_and_density_scales_it() {
+        // The sub-byte/sparse axis: q4 streams half of q8q's weight
+        // bytes; density 0.5 halves whatever the precision streams; the
+        // two compose.  (T is kept moderate so the weight stream still
+        // dominates DRAM traffic and the ratios are visible.)
+        let model = ModelConfig::paper(Arch::Sru, ModelSize::Large);
+        let at = |prec: SimPrec, density: f64| {
+            let mut c = SimConfig::paper(ARM_DENVER2, model, 4);
+            c.samples = 256;
+            c.precision = prec;
+            c.density = density;
+            simulate(&c)
+        };
+        let qq = at(SimPrec::Q8Q, 1.0);
+        let q4 = at(SimPrec::Q4, 1.0);
+        let qq_half = at(SimPrec::Q8Q, 0.5);
+        let q4_half = at(SimPrec::Q4, 0.5);
+        let ratio = qq.dram_bytes_per_sample / q4.dram_bytes_per_sample;
+        assert!(
+            ratio > 1.5 && ratio <= 2.05,
+            "q4 should ~halve q8q traffic, got {ratio:.2}"
+        );
+        let sratio = qq.dram_bytes_per_sample / qq_half.dram_bytes_per_sample;
+        assert!(
+            sratio > 1.5 && sratio <= 2.05,
+            "density 0.5 should ~halve traffic, got {sratio:.2}"
+        );
+        assert!(
+            q4_half.dram_bytes_per_sample < q4.dram_bytes_per_sample,
+            "sparsity must compose with q4"
+        );
+        // Same integer MAC model as q8q; sparsity also cuts the MACs.
+        assert!(q4.seconds <= qq.seconds + 1e-12);
+        assert!(qq_half.compute_cycles < qq.compute_cycles);
     }
 
     #[test]

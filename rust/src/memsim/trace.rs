@@ -63,8 +63,31 @@ pub fn trace_gemm_w(
     n: usize,
     wf: u64,
 ) {
+    trace_gemm_wb(h, a, b, c, m, k, n, wf * 8, 1.0);
+}
+
+/// [`trace_gemm`] with the weight stream expressed in **bits** per
+/// element and a block-sparsity density factor — the sub-byte/sparse
+/// precision axis: q4 streams 4 bits per weight (two per byte in the
+/// nibble-packed panels), and a density-`d` matrix streams only the `d`
+/// fraction of its panel bytes (the skipped blocks never leave DRAM —
+/// exactly what the `PanelMask` dispatch does).  `B`/`C` traffic is
+/// unchanged: sparsity and sub-byte packing shrink the weight stream
+/// only.
+#[allow(clippy::too_many_arguments)]
+pub fn trace_gemm_wb(
+    h: &mut Hierarchy,
+    a: u64,
+    b: u64,
+    c: u64,
+    m: usize,
+    k: usize,
+    n: usize,
+    wbits: u64,
+    density: f64,
+) {
     if n == 1 {
-        trace_gemv_w(h, a, b, c, m, k, wf);
+        trace_gemv_wb(h, a, b, c, m, k, wbits, density);
         return;
     }
     let ls = h.line_size() as u64;
@@ -77,9 +100,14 @@ pub fn trace_gemm_w(
             let mr = (MR as u64).min(m64 - i);
             // A elements: rows i..i+mr, columns k0..k0+kc, read once each
             // (each element is then reused n times from a register).
+            // Sub-byte elements round the row stream up to whole bytes;
+            // density scales the *streamed* length — the skipped blocks'
+            // bytes are interleaved in panel order, so modelling them as
+            // a shortened contiguous run keeps the same line count.
+            let row_bytes = ((((kc * wbits).div_ceil(8)) as f64) * density).round() as u64;
             for r in 0..mr {
-                let row_base = a + ((i + r) * k64 + k0) * wf;
-                h.access_range(row_base, kc * wf);
+                let row_base = a + (((i + r) * k64 + k0) * wbits) / 8;
+                h.access_range(row_base, row_bytes);
             }
             // B rows k0..k0+kc: each traversed once per A-stripe — this
             // is the stream that must stay cache-resident for the GEMM
@@ -109,9 +137,26 @@ pub fn trace_gemv(h: &mut Hierarchy, a: u64, x: u64, y: u64, m: usize, k: usize)
 
 /// [`trace_gemv`] with an explicit weight element size in bytes.
 pub fn trace_gemv_w(h: &mut Hierarchy, a: u64, x: u64, y: u64, m: usize, k: usize, wf: u64) {
+    trace_gemv_wb(h, a, x, y, m, k, wf * 8, 1.0);
+}
+
+/// [`trace_gemv`] with the weight stream in bits per element and a
+/// density factor (see [`trace_gemm_wb`]).
+#[allow(clippy::too_many_arguments)]
+pub fn trace_gemv_wb(
+    h: &mut Hierarchy,
+    a: u64,
+    x: u64,
+    y: u64,
+    m: usize,
+    k: usize,
+    wbits: u64,
+    density: f64,
+) {
     let (m64, k64) = (m as u64, k as u64);
+    let row_bytes = ((((k64 * wbits).div_ceil(8)) as f64) * density).round() as u64;
     for r in 0..m64 {
-        h.access_range(a + r * k64 * wf, k64 * wf);
+        h.access_range(a + (r * k64 * wbits) / 8, row_bytes);
         h.access_range(x, k64 * F);
         h.access_range(y + r * F, F);
     }

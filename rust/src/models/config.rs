@@ -181,6 +181,12 @@ pub enum Precision {
     /// block and a bounded extra quantization error (~0.4% of each
     /// frame's max activation).
     Q8Q,
+    /// Int4 weights (two signed nibbles per byte, per-row scales) with
+    /// the same dynamic activation quantization and integer compute as
+    /// [`Precision::Q8Q`] — **1/8** the f32 weight DRAM traffic, at a
+    /// coarser weight resolution (15 levels per row; see
+    /// `QuantMatrix::quantize_q4` for the error bound).
+    Q4,
 }
 
 impl Precision {
@@ -189,6 +195,7 @@ impl Precision {
             Precision::F32 => "f32",
             Precision::Q8 => "q8",
             Precision::Q8Q => "q8q",
+            Precision::Q4 => "q4",
         }
     }
 
@@ -197,6 +204,7 @@ impl Precision {
             "f32" => Some(Precision::F32),
             "q8" => Some(Precision::Q8),
             "q8q" => Some(Precision::Q8Q),
+            "q4" => Some(Precision::Q4),
             _ => None,
         }
     }
@@ -273,9 +281,9 @@ pub struct LayerSpec {
 }
 
 impl LayerSpec {
-    /// Validating constructor: int8 precisions (q8, q8q) exist only for
-    /// SRU (the paper's §4 quantization result); other combinations are
-    /// errors, not panics.
+    /// Validating constructor: quantized precisions (q8, q8q, q4) exist
+    /// only for SRU (the paper's §4 quantization result); other
+    /// combinations are errors, not panics.
     pub fn new(arch: Arch, precision: Precision) -> Result<LayerSpec, String> {
         if precision != Precision::F32 && arch != Arch::Sru {
             return Err(format!(
@@ -326,7 +334,7 @@ impl LayerSpec {
         let arch = Arch::parse(a)
             .ok_or_else(|| format!("layer spec {s:?}: unknown arch {a:?} (sru|qrnn|lstm)"))?;
         let precision = Precision::parse(p)
-            .ok_or_else(|| format!("layer spec {s:?}: unknown precision {p:?} (f32|q8|q8q)"))?;
+            .ok_or_else(|| format!("layer spec {s:?}: unknown precision {p:?} (f32|q8|q8q|q4)"))?;
         let spec = LayerSpec::new(arch, precision)?;
         Ok(if bidir { spec.bi() } else { spec })
     }
@@ -706,6 +714,13 @@ mod tests {
         let mixed = StackSpec::parse("sru:f32:64x4,l3=sru:q8q").unwrap();
         assert_eq!(mixed.layers[3].precision, Precision::Q8Q);
         assert_eq!(StackSpec::parse(&mixed.name()).unwrap(), mixed);
+        // q4: base grammar and per-layer override both round-trip.
+        let q4 = StackSpec::parse("sru:q4:512x4").unwrap();
+        assert!(q4.layers.iter().all(|l| l.precision == Precision::Q4));
+        assert_eq!(StackSpec::parse(&q4.name()).unwrap(), q4);
+        let mixed4 = StackSpec::parse("sru:f32:64x4,l2=sru:q4").unwrap();
+        assert_eq!(mixed4.layers[2].precision, Precision::Q4);
+        assert_eq!(StackSpec::parse(&mixed4.name()).unwrap(), mixed4);
         let uniform = StackSpec::parse("lstm:f32:32x2").unwrap();
         assert_eq!(uniform.name(), "lstm:f32:32x2");
         assert_eq!(StackSpec::parse(&uniform.name()).unwrap(), uniform);
@@ -719,11 +734,13 @@ mod tests {
             "sru:f32",
             "sru:f32:512",
             "gru:f32:512x4",
-            "sru:q4:512x4",
+            "sru:q2:512x4",    // no such precision
             "lstm:q8:512x4",   // q8 is sru-only
             "qrnn:q8:512x4",   // q8 is sru-only
             "lstm:q8q:512x4",  // q8q is sru-only
             "qrnn:q8q:512x4",  // q8q is sru-only
+            "lstm:q4:512x4",   // q4 is sru-only
+            "qrnn:q4:512x4",   // q4 is sru-only
             "sru:f32:0x4",     // hidden must be >= 1
             "sru:f32:512x0",   // depth must be >= 1
             "sru:f32:512x4,l9=sru:q8", // override out of range
@@ -753,6 +770,11 @@ mod tests {
             LayerSpec::new(Arch::Sru, Precision::Q8Q).unwrap().state_layout(h),
             LayerSpec::f32(Arch::Sru).state_layout(h),
             "q8q must not change the state layout either"
+        );
+        assert_eq!(
+            LayerSpec::new(Arch::Sru, Precision::Q4).unwrap().state_layout(h),
+            LayerSpec::f32(Arch::Sru).state_layout(h),
+            "q4 must not change the state layout either"
         );
         assert_eq!(
             LayerSpec::f32(Arch::Qrnn).state_layout(h).slots,

@@ -6,6 +6,7 @@
 //! than as silent numerical garbage.
 
 pub mod fnv;
+pub mod prune;
 
 use std::collections::BTreeMap;
 use std::fs;

@@ -1,0 +1,189 @@
+//! Deterministic magnitude pruning at the kernel's skip granularity.
+//!
+//! The sparse GEMM path (`linalg::PanelMask`) skips whole
+//! `PACK_MR x SPARSE_KB` weight blocks whose entries are all exactly
+//! zero — so pruning is only useful to the kernels when it zeroes
+//! *aligned blocks*, not scattered elements.  This module provides that
+//! structured pass: rank every aligned block of a `[m, k]` matrix by L1
+//! norm and zero the smallest until the target density is reached.  The
+//! ranking breaks norm ties by block index, so the pruned pattern (and
+//! therefore every downstream packed panel, bitmap, and benchmark
+//! number) is a pure function of the weights and the target — no RNG,
+//! no thread-order dependence.
+//!
+//! Magnitude pruning of RNN gate matrices is the structured-sparsity
+//! lever both E-PUR (Silfa et al.) and the embedded-RNN survey (Rezk et
+//! al.) point at; here it exists to *generate* test/bench stacks at
+//! controlled densities — the repo has no training loop, so the pruned
+//! stacks measure the compute/traffic win, not task accuracy.
+
+use crate::linalg::{PACK_MR, SPARSE_KB};
+use crate::models::{LayerParams, StackParams};
+
+/// Zero the lowest-L1 `PACK_MR x SPARSE_KB` blocks of the row-major
+/// `[m, k]` matrix `w` until at most `ceil(total * density)` blocks
+/// remain non-zero.  Returns the achieved block density (kept blocks /
+/// total blocks) — ≥ the target only through rounding, and 1.0 when
+/// `density >= 1`.
+///
+/// Blocks cover row range `bi*PACK_MR ..` and column range
+/// `bj*SPARSE_KB ..`, clipped at the matrix edge — exactly the regions
+/// `PanelMask` tests at pack time, so every block zeroed here is a
+/// block the kernels skip.  Already-zero blocks rank first (L1 = 0) and
+/// count toward the prune budget.
+pub fn prune_blocks(w: &mut [f32], m: usize, k: usize, density: f64) -> f64 {
+    assert_eq!(w.len(), m * k, "w must be [m={m}, k={k}]");
+    assert!(density >= 0.0, "density must be non-negative");
+    let nbr = m.div_ceil(PACK_MR);
+    let nbc = k.div_ceil(SPARSE_KB);
+    let total = nbr * nbc;
+    if density >= 1.0 || total == 0 {
+        return 1.0;
+    }
+    let keep = ((total as f64) * density).ceil() as usize;
+
+    // (L1 norm, block index) — the index tiebreak pins the order.
+    let mut ranked: Vec<(f64, usize)> = (0..total)
+        .map(|b| {
+            let (bi, bj) = (b / nbc, b % nbc);
+            let mut l1 = 0.0f64;
+            for r in bi * PACK_MR..((bi + 1) * PACK_MR).min(m) {
+                for c in bj * SPARSE_KB..((bj + 1) * SPARSE_KB).min(k) {
+                    l1 += f64::from(w[r * k + c].abs());
+                }
+            }
+            (l1, b)
+        })
+        .collect();
+    ranked.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+
+    for &(_, b) in &ranked[..total - keep] {
+        let (bi, bj) = (b / nbc, b % nbc);
+        for r in bi * PACK_MR..((bi + 1) * PACK_MR).min(m) {
+            for c in bj * SPARSE_KB..((bj + 1) * SPARSE_KB).min(k) {
+                w[r * k + c] = 0.0;
+            }
+        }
+    }
+    keep as f64 / total as f64
+}
+
+/// Prune every recurrent layer's gate matrix of a stack in place
+/// (projection and head GEMMs stay dense — they are a small fraction of
+/// the weight bytes and run every block regardless).  Returns the mean
+/// achieved block density across the pruned matrices.
+pub fn prune_stack(params: &mut StackParams, density: f64) -> f64 {
+    fn prune_layer(lp: &mut LayerParams, density: f64, acc: &mut (f64, usize)) {
+        match lp {
+            LayerParams::Sru(p) => {
+                let (m, k) = (p.w.rows(), p.w.cols());
+                acc.0 += prune_blocks(p.w.data_mut(), m, k, density);
+                acc.1 += 1;
+            }
+            LayerParams::Qrnn(p) => {
+                let (m, k) = (p.w.rows(), p.w.cols());
+                acc.0 += prune_blocks(p.w.data_mut(), m, k, density);
+                acc.1 += 1;
+            }
+            LayerParams::Lstm(p) => {
+                let (m, k) = (p.w.rows(), p.w.cols());
+                acc.0 += prune_blocks(p.w.data_mut(), m, k, density);
+                let (mu, ku) = (p.u.rows(), p.u.cols());
+                acc.0 += prune_blocks(p.u.data_mut(), mu, ku, density);
+                acc.1 += 2;
+            }
+            LayerParams::Bidir(f, b) => {
+                prune_layer(f, density, acc);
+                prune_layer(b, density, acc);
+            }
+        }
+    }
+    let mut acc = (0.0f64, 0usize);
+    for lp in params.layers.iter_mut() {
+        prune_layer(lp, density, &mut acc);
+    }
+    if acc.1 == 0 {
+        1.0
+    } else {
+        acc.0 / acc.1 as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::PackedGemm;
+    use crate::models::config::StackSpec;
+    use crate::util::Rng;
+
+    #[test]
+    fn prunes_to_target_density_and_packs_sparse() {
+        let (m, k) = (64, 128); // 4 x 4 = 16 blocks
+        let mut w = vec![0.0f32; m * k];
+        Rng::new(42).fill_normal(&mut w, 1.0);
+        let achieved = prune_blocks(&mut w, m, k, 0.5);
+        assert_eq!(achieved, 0.5);
+        // The pack-time mask must see exactly the pruned blocks.
+        let pg = PackedGemm::new(&w, m, k);
+        assert!((pg.density() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rounding_keeps_ceil_and_edges_clip() {
+        // 17 x 33 -> 2 x 2 = 4 ragged-edge blocks; density 0.3 keeps
+        // ceil(4 * 0.3) = 2.
+        let (m, k) = (17, 33);
+        let mut w = vec![1.0f32; m * k];
+        // Make block (0,0) and (1,1) the smallest by zeroing most of them.
+        for r in 0..PACK_MR {
+            for c in 0..SPARSE_KB {
+                w[r * k + c] = 0.01;
+            }
+        }
+        w[16 * k + 32] = 0.001; // block (1,1) is a single tiny element
+        let achieved = prune_blocks(&mut w, m, k, 0.3);
+        assert_eq!(achieved, 0.5);
+        assert_eq!(w[0], 0.0, "smallest block pruned");
+        assert_eq!(w[16 * k + 32], 0.0, "tiny ragged block pruned");
+        assert_eq!(w[SPARSE_KB], 1.0, "kept block untouched");
+    }
+
+    #[test]
+    fn deterministic_under_ties() {
+        // All-equal blocks: the index tiebreak must prune the *lowest*
+        // indices, identically on every call.
+        let (m, k) = (32, 64); // 2 x 2 blocks
+        let mut a = vec![1.0f32; m * k];
+        let mut b = a.clone();
+        prune_blocks(&mut a, m, k, 0.5);
+        prune_blocks(&mut b, m, k, 0.5);
+        assert_eq!(a, b);
+        // Blocks (0,0) and (0,1) pruned, row 16+ intact.
+        assert_eq!(a[0], 0.0);
+        assert_eq!(a[16 * k], 1.0);
+    }
+
+    #[test]
+    fn density_one_is_identity() {
+        let (m, k) = (16, 32);
+        let mut w = vec![0.0f32; m * k];
+        Rng::new(7).fill_normal(&mut w, 1.0);
+        let orig = w.clone();
+        assert_eq!(prune_blocks(&mut w, m, k, 1.0), 1.0);
+        assert_eq!(w, orig);
+    }
+
+    #[test]
+    fn stack_helper_prunes_all_layers() {
+        let spec = StackSpec::parse("sru:f32:64x2,feat=8,vocab=5").unwrap();
+        let mut params = StackParams::init(&spec, &mut Rng::new(2018)).unwrap();
+        let mean = prune_stack(&mut params, 0.5);
+        assert!((mean - 0.5).abs() < 0.1, "mean achieved density {mean}");
+        for lp in &params.layers {
+            if let LayerParams::Sru(p) = lp {
+                let zeros = p.w.data().iter().filter(|v| **v == 0.0).count();
+                assert!(zeros * 3 > p.w.data().len(), "layer should be ~half zero");
+            }
+        }
+    }
+}

@@ -1,0 +1,487 @@
+//! q4 + block-sparse parity — the sub-byte/sparse subsystem's core
+//! guarantees:
+//!
+//! 1. **Exact nibble round-trip.**  Packing two signed 4-bit weights per
+//!    byte and decoding them back is lossless for every value in
+//!    `[-7, 7]`, at every panel/pair boundary (odd k, ragged m).
+//! 2. **Bit-identical i32 accumulators across dispatch targets.**  The
+//!    q4 kernels unpack nibbles in-register but accumulate the same
+//!    exact integer dot products, so portable, AVX2 and NEON must agree
+//!    bit for bit — and the fused f32 outputs too (one shared dequant).
+//! 3. **Skip ≡ compute.**  Dispatching with the `PanelMask` (zero
+//!    blocks skipped) produces bitwise the same output as the same
+//!    handle forced dense (zero blocks computed), for f32, q8q and q4
+//!    panels — and stays bitwise invariant across thread counts {1, 4}.
+//! 4. **Accuracy + serving.**  The q4 engine/stack stay within the
+//!    4-bit tolerance class of their f32 twins at T in {1, 4, 16}; a
+//!    `sru:q4:512x4` stack round-trips through the coordinator; q4
+//!    panels are resident at exactly half the q8 bytes.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use mtsrnn::coordinator::{BatchMode, Coordinator, CoordinatorConfig, NativeBackend, PolicyMode};
+use mtsrnn::engine::{Engine, NativeStack, QuantMatrix, QuantSruEngine, SruEngine};
+use mtsrnn::linalg::pool;
+use mtsrnn::linalg::{
+    detect_simd, Act, Epilogue, PackedGemm, PackedQuantGemm, QuantScratch, Simd, PACK_MR,
+    SPARSE_KB,
+};
+use mtsrnn::models::config::{Arch, ModelConfig, StackSpec};
+use mtsrnn::models::{SruParams, StackParams};
+use mtsrnn::util::Rng;
+use mtsrnn::weights::prune::prune_blocks;
+
+static POOL_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock_pool() -> std::sync::MutexGuard<'static, ()> {
+    POOL_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Per-row 4-bit weights + scales for a seeded random `[m, k]` matrix.
+fn quantized_q4(m: usize, k: usize, seed: u64) -> (QuantMatrix, Vec<f32>) {
+    let mut w = vec![0.0; m * k];
+    Rng::new(seed).fill_normal(&mut w, 0.5);
+    (QuantMatrix::quantize_q4(&w, m, k), w)
+}
+
+/// A seeded random `[m, k]` f32 matrix block-pruned to `density`.
+fn pruned(m: usize, k: usize, density: f64, seed: u64) -> Vec<f32> {
+    let mut w = vec![0.0; m * k];
+    Rng::new(seed).fill_normal(&mut w, 0.5);
+    prune_blocks(&mut w, m, k, density);
+    w
+}
+
+fn assert_bits_equal(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            x.to_bits() == y.to_bits(),
+            "{what}: idx {i}: {x} ({:#010x}) vs {y} ({:#010x})",
+            x.to_bits(),
+            y.to_bits()
+        );
+    }
+}
+
+// -----------------------------------------------------------------------
+// 1. Exact nibble round-trip
+// -----------------------------------------------------------------------
+
+#[test]
+fn q4_pack_roundtrip_is_exact() {
+    // Odd k exercises the zero pad nibble, ragged m the panel pad rows;
+    // `dequant` on a with_dispatch handle reads the row-major widening
+    // copy, so comparing it against scale * q proves the nibble layout
+    // agrees with the logical weights only if both paths decode — the
+    // new_q4 handle below drops the widening copy (small shape => no
+    // probe) and forces the nibble decode path.
+    for &(m, k) in &[(1usize, 1usize), (15, 7), (16, 2), (17, 63), (48, 33)] {
+        let (q, _) = quantized_q4(m, k, (m * 191 + k) as u64);
+        assert!(q.q().iter().all(|&v| (-7..=7).contains(&v)));
+        let nibble = PackedQuantGemm::new_q4(q.q(), q.row_scales(), m, k);
+        assert!(nibble.is_q4());
+        for r in 0..m {
+            for c in 0..k {
+                let want = f32::from(q.q()[r * k + c]) * q.row_scales()[r];
+                let got = nibble.dequant(r, c);
+                assert!(
+                    got.to_bits() == want.to_bits(),
+                    "({m},{k}) at ({r},{c}): {got} vs {want}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn q4_panel_bytes_are_exactly_half_of_q8() {
+    // The acceptance bar, at the engine's DRAM-accounting surface: q4
+    // weight panels resident at exactly half the q8 bytes for the same
+    // shape (both carry one f32 scale per output row — subtract them).
+    let cfg = ModelConfig {
+        arch: Arch::Sru,
+        hidden: 64,
+        input: 64,
+    };
+    let p = SruParams::init(&cfg, &mut Rng::new(17));
+    let scales_bytes = 3 * 64 * 4;
+    let q8 = QuantSruEngine::new(&p, 4);
+    let q4 = QuantSruEngine::new_q4(&p, 4);
+    let q8_panel = q8.weight_bytes_per_block() - scales_bytes;
+    let q4_panel = q4.weight_bytes_per_block() - scales_bytes;
+    assert_eq!(q8_panel, 3 * 64 * 64, "q8 packs one byte per weight");
+    assert_eq!(q4_panel * 2, q8_panel, "q4 must be exactly half of q8");
+}
+
+// -----------------------------------------------------------------------
+// 2. q4 bit-identical across dispatch targets
+// -----------------------------------------------------------------------
+
+#[test]
+fn q4_i32_accumulators_bit_identical_across_dispatch() {
+    // Grid crosses panel (16), register-tile (AVX2's 6 / NEON's 4) and
+    // k-pair boundaries (odd k exercises the zero pad nibble).
+    let host = detect_simd();
+    for &m in &[1usize, 15, 16, 17, 48] {
+        for &k in &[1usize, 2, 7, 16, 63, 256] {
+            for n in 1..=13 {
+                let (q, _) = quantized_q4(m, k, (m * 1000 + k * 13 + n) as u64);
+                let mut x = vec![0.0; n * k];
+                Rng::new((n * 31 + k) as u64).fill_normal(&mut x, 1.0);
+
+                let hq = PackedQuantGemm::with_dispatch_q4(q.q(), q.row_scales(), m, k, host, 0);
+                let pq = PackedQuantGemm::with_dispatch_q4(
+                    q.q(),
+                    q.row_scales(),
+                    m,
+                    k,
+                    Simd::Portable,
+                    0,
+                );
+                let mut scratch = QuantScratch::new();
+                let mut got = vec![0i32; m * n];
+                let mut want = vec![0i32; m * n];
+                hq.matmul_i32(&mut got, &x, n, &mut scratch);
+                pq.matmul_i32(&mut want, &x, n, &mut scratch);
+                assert_eq!(got, want, "({m},{k},{n}) {host:?} vs portable i32");
+            }
+        }
+    }
+}
+
+#[test]
+fn q4_fused_outputs_bit_identical_across_dispatch() {
+    let host = detect_simd();
+    let (m, k) = (48usize, 70usize);
+    let (q, _) = quantized_q4(m, k, 0x4B17);
+    let bias: Vec<f32> = (0..m).map(|r| (r as f32 - 24.0) * 0.01).collect();
+    let acts = [Act::Ident, Act::Sigmoid, Act::Tanh];
+    let hq = PackedQuantGemm::with_dispatch_q4(q.q(), q.row_scales(), m, k, host, 0);
+    let pq = PackedQuantGemm::with_dispatch_q4(q.q(), q.row_scales(), m, k, Simd::Portable, 0);
+    let mut scratch = QuantScratch::new();
+    for n in [1usize, 3, 6, 7, 16] {
+        let mut x = vec![0.0; n * k];
+        Rng::new(n as u64).fill_normal(&mut x, 1.0);
+        for acc in [false, true] {
+            let mut got = vec![0.25f32; m * n];
+            let mut want = vec![0.25f32; m * n];
+            let epi = Epilogue::fused(&bias, &acts);
+            hq.matmul_q4(&mut got, &x, n, acc, &epi, &mut scratch);
+            pq.matmul_q4(&mut want, &x, n, acc, &epi, &mut scratch);
+            assert_bits_equal(&got, &want, &format!("n={n} acc={acc}"));
+        }
+    }
+}
+
+// -----------------------------------------------------------------------
+// 3. Sparse skip-at-dispatch ≡ dense-with-zeros, bitwise
+// -----------------------------------------------------------------------
+
+#[test]
+fn sparse_f32_skip_equals_dense_bitwise_across_dispatch() {
+    let host = detect_simd();
+    // Shapes that are ragged against both the 16-row panel and the
+    // 32-column skip block, pruned to several densities.
+    for &(m, k) in &[(48usize, 96usize), (17, 63), (64, 160)] {
+        for &d in &[0.75f64, 0.5, 0.25] {
+            let w = pruned(m, k, d, (m + k) as u64);
+            // bt_cutoff = 0 pins the masked packed path (the gemm_bt
+            // crossover path computes the zeros instead — numerically
+            // identical but a different code path than the one under
+            // test).
+            let sparse = PackedGemm::with_dispatch(&w, m, k, host, 0);
+            assert!(sparse.density() < 1.0, "prune must produce zero blocks");
+            let mut dense = PackedGemm::with_dispatch(&w, m, k, host, 0);
+            dense.force_dense();
+            let portable = PackedGemm::with_dispatch(&w, m, k, Simd::Portable, 0);
+            let bias = vec![0.02f32; m];
+            let epi = Epilogue::with_bias(&bias);
+            for n in [1usize, 4, 11] {
+                let mut x = vec![0.0; n * k];
+                Rng::new((n * 7 + m) as u64).fill_normal(&mut x, 1.0);
+                let mut a = vec![0.0f32; m * n];
+                let mut b = vec![0.0f32; m * n];
+                let mut c = vec![0.0f32; m * n];
+                sparse.matmul(&mut a, &x, n, false, &epi);
+                dense.matmul(&mut b, &x, n, false, &epi);
+                portable.matmul(&mut c, &x, n, false, &epi);
+                assert_bits_equal(&a, &b, &format!("f32 skip vs dense ({m},{k},{n}) d={d}"));
+                assert_bits_equal(&a, &c, &format!("f32 {host:?} vs portable ({m},{k},{n}) d={d}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn sparse_int_skip_equals_dense_bitwise() {
+    // q8q and q4 over the same pruned weights: the skipped blocks
+    // contribute exactly 0 to every i32 dot, so skip vs dense is exact
+    // (not merely close) on the accumulators and bitwise on the fused
+    // outputs.  The portable oracle must agree too.
+    let host = detect_simd();
+    let (m, k, n) = (48usize, 128usize, 9usize);
+    let w = pruned(m, k, 0.5, 0xBEEF);
+    let q8 = QuantMatrix::quantize(&w, m, k);
+    let q4 = QuantMatrix::quantize_q4(&w, m, k);
+    let mut x = vec![0.0; n * k];
+    Rng::new(12).fill_normal(&mut x, 1.0);
+    let bias = vec![0.01f32; m];
+    let epi = Epilogue::fused(&bias, &[Act::Ident, Act::Sigmoid, Act::Sigmoid]);
+    let mut scratch = QuantScratch::new();
+
+    for (label, qm, is4) in [("q8q", &q8, false), ("q4", &q4, true)] {
+        let build = |simd| {
+            if is4 {
+                PackedQuantGemm::with_dispatch_q4(qm.q(), qm.row_scales(), m, k, simd, 0)
+            } else {
+                PackedQuantGemm::with_dispatch_q8q(qm.q(), qm.row_scales(), m, k, simd, 0)
+            }
+        };
+        let sparse = build(host);
+        assert!(
+            (sparse.density() - 0.5).abs() < 0.26,
+            "{label}: pruned zeros must survive quantization (density {})",
+            sparse.density()
+        );
+        let mut dense = build(host);
+        dense.force_dense();
+        let portable = build(Simd::Portable);
+
+        let mut i_sparse = vec![0i32; m * n];
+        let mut i_dense = vec![0i32; m * n];
+        let mut i_port = vec![0i32; m * n];
+        sparse.matmul_i32(&mut i_sparse, &x, n, &mut scratch);
+        dense.matmul_i32(&mut i_dense, &x, n, &mut scratch);
+        portable.matmul_i32(&mut i_port, &x, n, &mut scratch);
+        assert_eq!(i_sparse, i_dense, "{label}: skip vs dense i32");
+        assert_eq!(i_sparse, i_port, "{label}: {host:?} vs portable i32");
+
+        let run = |pq: &PackedQuantGemm, scratch: &mut QuantScratch| {
+            let mut c = vec![0.0f32; m * n];
+            if is4 {
+                pq.matmul_q4(&mut c, &x, n, false, &epi, scratch);
+            } else {
+                pq.matmul_q8q(&mut c, &x, n, false, &epi, scratch);
+            }
+            c
+        };
+        let a = run(&sparse, &mut scratch);
+        let b = run(&dense, &mut scratch);
+        assert_bits_equal(&a, &b, &format!("{label}: fused skip vs dense"));
+    }
+}
+
+// -----------------------------------------------------------------------
+// 4. Bit-identical across thread counts {1, 4}
+// -----------------------------------------------------------------------
+
+#[test]
+fn sparse_and_q4_bit_identical_across_thread_counts() {
+    let _guard = lock_pool();
+    // Big enough that m*k*n crosses PAR_MIN_WORK and many panels exist.
+    let (m, k, n) = (512usize, 256usize, 16usize);
+    let w = pruned(m, k, 0.5, 0x5EED);
+    let q8 = QuantMatrix::quantize(&w, m, k);
+    let q4 = QuantMatrix::quantize_q4(&w, m, k);
+    let pg = PackedGemm::new(&w, m, k);
+    let pq8q = PackedQuantGemm::new_q8q(q8.q(), q8.row_scales(), m, k);
+    let pq4 = PackedQuantGemm::new_q4(q4.q(), q4.row_scales(), m, k);
+    let mut x = vec![0.0; n * k];
+    Rng::new(5).fill_normal(&mut x, 1.0);
+    let bias = vec![0.05f32; m];
+    let epi = Epilogue::fused(&bias, &[Act::Ident, Act::Sigmoid, Act::Sigmoid]);
+
+    let run_all = || {
+        let mut f = vec![0.0f32; m * n];
+        let mut q = vec![0.0f32; m * n];
+        let mut s = QuantScratch::new();
+        pg.matmul(&mut f, &x, n, false, &epi);
+        pq8q.matmul_q8q(&mut q, &x, n, false, &epi, &mut s);
+        let mut q4out = vec![0.0f32; m * n];
+        pq4.matmul_q4(&mut q4out, &x, n, false, &epi, &mut s);
+        (f, q, q4out)
+    };
+    pool::set_threads(1);
+    let (f1, q1, v1) = run_all();
+    pool::set_threads(4);
+    let (f4, q4o, v4) = run_all();
+    pool::set_threads(1);
+
+    assert_bits_equal(&f1, &f4, "sparse f32: threads 1 vs 4");
+    assert_bits_equal(&q1, &q4o, "sparse q8q: threads 1 vs 4");
+    assert_bits_equal(&v1, &v4, "q4: threads 1 vs 4");
+}
+
+// -----------------------------------------------------------------------
+// 5. Accuracy: q4 engine / stack in the 4-bit tolerance class
+// -----------------------------------------------------------------------
+
+#[test]
+fn q4_stack_logits_close_to_f32() {
+    // Same f32 master weights; the q4 stack quantizes to nibbles at
+    // construction and quantizes activations per dispatch.  The 4-bit
+    // weight LSB is ~18x the 8-bit one, so the thresholds are wider
+    // than quant_kernel_parity's q8q test but of the same structure.
+    let f32_spec = StackSpec::parse("sru:f32:24x2,feat=8,vocab=5").unwrap();
+    let q4_spec = StackSpec::parse("sru:q4:24x2,feat=8,vocab=5").unwrap();
+    let params = StackParams::init(&f32_spec, &mut Rng::new(41)).unwrap();
+    let steps = 24;
+    let mut x = vec![0.0; steps * f32_spec.feat];
+    Rng::new(43).fill_normal(&mut x, 1.0);
+
+    for t in [1usize, 4, 16] {
+        let run = |spec: &StackSpec| {
+            let mut stack = NativeStack::new(spec, params.clone(), t).unwrap();
+            let mut state = stack.init_state();
+            let mut logits = vec![0.0; steps * spec.vocab];
+            let mut s = 0;
+            while s < steps {
+                let tt = t.min(steps - s);
+                stack
+                    .run_block(
+                        &x[s * spec.feat..(s + tt) * spec.feat],
+                        tt,
+                        &mut state,
+                        &mut logits[s * spec.vocab..(s + tt) * spec.vocab],
+                    )
+                    .unwrap();
+                s += tt;
+            }
+            logits
+        };
+        let want = run(&f32_spec);
+        let got = run(&q4_spec);
+        let mut mad = 0.0f64;
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            let d = (g - w).abs();
+            mad += d as f64;
+            assert!(d < 1.0, "T={t} idx {i}: q4 {g} vs f32 {w}");
+        }
+        mad /= want.len() as f64;
+        assert!(mad < 0.1, "T={t}: mean abs deviation {mad}");
+    }
+}
+
+#[test]
+fn q4_sparse_engine_close_to_f32_reference() {
+    // Compose the axes: block-pruned weights on the q4 engine vs the
+    // same pruned weights on the f32 engine.  The reference already
+    // contains the pruning error, so the remaining gap is purely the
+    // 4-bit quantization class.
+    let h = 48;
+    let cfg = ModelConfig {
+        arch: Arch::Sru,
+        hidden: h,
+        input: h,
+    };
+    let mut p = SruParams::init(&cfg, &mut Rng::new(23));
+    let (m, k) = (p.w.rows(), p.w.cols());
+    let achieved = prune_blocks(p.w.data_mut(), m, k, 0.5);
+    assert!(achieved <= 0.51, "achieved density {achieved}");
+    let steps = 33;
+    let mut x = vec![0.0; steps * h];
+    Rng::new(24).fill_normal(&mut x, 1.0);
+
+    let mut f32e = SruEngine::new(p.clone(), 16);
+    let mut want = vec![0.0; steps * h];
+    f32e.run_sequence(&x, steps, &mut want);
+
+    for t in [1usize, 4, 16] {
+        let mut qe = QuantSruEngine::new_q4(&p, t);
+        assert_eq!(qe.arch(), "sru-int4");
+        let mut got = vec![0.0; steps * h];
+        qe.run_sequence(&x, steps, &mut got);
+        let mut mad = 0.0f64;
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            let d = (g - w).abs();
+            mad += d as f64;
+            assert!(d < 0.5, "T={t} idx {i}: {g} vs {w}");
+        }
+        mad /= (steps * h) as f64;
+        assert!(mad < 0.05, "T={t}: mean abs deviation {mad}");
+    }
+}
+
+// -----------------------------------------------------------------------
+// 6. Coordinator serve round-trip on the full-size q4 stack
+// -----------------------------------------------------------------------
+
+#[test]
+fn q4_512x4_serves_through_coordinator() {
+    let spec = StackSpec::parse("sru:q4:512x4").unwrap();
+    let params = StackParams::init(&spec, &mut Rng::new(11)).unwrap();
+    let backend = NativeBackend::new(NativeStack::new(&spec, params.clone(), 16).unwrap());
+    let mut c = Coordinator::new(
+        backend,
+        CoordinatorConfig {
+            policy: PolicyMode::Fixed(8),
+            max_wait: Duration::ZERO,
+            max_sessions: 4,
+            batching: BatchMode::Auto,
+        },
+    );
+    let frames = 26;
+    let mut x = vec![0.0; frames * spec.feat];
+    Rng::new(47).fill_normal(&mut x, 1.0);
+    let id = c.open().unwrap();
+    let mut got = Vec::new();
+    // Odd-sized chunks force mixed block decompositions.
+    for chunk in x.chunks(5 * spec.feat) {
+        c.feed(id, chunk).unwrap();
+        c.tick().unwrap();
+        got.extend(c.drain(id, usize::MAX).unwrap());
+    }
+    got.extend(c.close(id).unwrap());
+    assert_eq!(got.len(), frames * spec.vocab);
+    assert!(got.iter().all(|v| v.is_finite()), "logits must be finite");
+
+    // Ground truth: the f32 twin of the same weights through a direct
+    // stack run — q4 stays in the 4-bit tolerance class end to end.
+    let f32_spec = StackSpec::parse("sru:f32:512x4").unwrap();
+    let mut stack = NativeStack::new(&f32_spec, params, 16).unwrap();
+    let mut state = stack.init_state();
+    let mut want = vec![0.0; frames * spec.vocab];
+    let mut s = 0;
+    while s < frames {
+        let tt = 8.min(frames - s);
+        stack
+            .run_block(
+                &x[s * spec.feat..(s + tt) * spec.feat],
+                tt,
+                &mut state,
+                &mut want[s * spec.vocab..(s + tt) * spec.vocab],
+            )
+            .unwrap();
+        s += tt;
+    }
+    let mut mad = 0.0f64;
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        let d = (g - w).abs();
+        mad += d as f64;
+        assert!(d < 1.0, "logit {i}: q4 {g} vs f32 {w}");
+    }
+    mad /= want.len() as f64;
+    assert!(mad < 0.1, "mean abs deviation {mad}");
+}
+
+// -----------------------------------------------------------------------
+// 7. Sparse bytes accounting: skipped blocks never cross the bus
+// -----------------------------------------------------------------------
+
+#[test]
+fn sparse_weight_bytes_scale_with_density() {
+    let (m, k) = (64usize, 128usize); // 4 x 4 = 16 skip blocks
+    let dense_w = pruned(m, k, 1.0, 3);
+    let half_w = pruned(m, k, 0.5, 3);
+    let q_dense = QuantMatrix::quantize_q4(&dense_w, m, k);
+    let q_half = QuantMatrix::quantize_q4(&half_w, m, k);
+    let pq_dense = PackedQuantGemm::new_q4(q_dense.q(), q_dense.row_scales(), m, k);
+    let pq_half = PackedQuantGemm::new_q4(q_half.q(), q_half.row_scales(), m, k);
+    assert_eq!(pq_dense.panel_weight_bytes(), m * k / 2);
+    assert_eq!(pq_half.panel_weight_bytes(), m * k / 4);
+    // The skip granularity the accounting (and the kernels) use.
+    assert_eq!(PACK_MR, 16);
+    assert_eq!(SPARSE_KB, 32);
+}

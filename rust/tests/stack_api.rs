@@ -203,6 +203,9 @@ fn run_reference(
             (Precision::Q8Q, LayerParams::Sru(p)) => {
                 Box::new(QuantSruEngine::new_q8q(p, t)) as Box<dyn Engine>
             }
+            (Precision::Q4, LayerParams::Sru(p)) => {
+                Box::new(QuantSruEngine::new_q4(p, t)) as Box<dyn Engine>
+            }
             (_, LayerParams::Qrnn(p)) => Box::new(QrnnEngine::new(p.clone(), t)) as Box<dyn Engine>,
             (_, LayerParams::Lstm(p)) => {
                 Box::new(LstmEngine::new(p.clone(), LstmMode::Precompute(t))) as Box<dyn Engine>
