@@ -86,7 +86,7 @@ impl NativeBackend {
             .map(|k| 1usize << k)
             .take_while(|&v| v <= max)
             .collect();
-        if *sizes.last().unwrap() != max {
+        if sizes.last() != Some(&max) {
             sizes.push(max);
         }
         Self { stack, sizes }

@@ -45,6 +45,8 @@ pub fn decompose_block(frames: usize, sizes: &[usize]) -> Vec<usize> {
             .rev()
             .find(|&&s| s <= rest)
             .copied()
+            // lint: infallible — the assert above requires sizes[0] == 1
+            // and the loop guard keeps rest >= 1, so 1 always fits.
             .expect("sizes contains 1, so a fit always exists");
         out.push(s);
         rest -= s;

@@ -72,6 +72,8 @@ impl AdaptivePolicy {
     /// Choose the target block size given the backlog depth.
     /// `sizes` ascending; returns one of them.
     pub fn target(&self, sizes: &[usize], backlog: usize) -> usize {
+        // lint: infallible — every backend advertises at least block
+        // size 1 (see NativeBackend::new / the AOT variant set).
         let max = *sizes.last().expect("non-empty sizes");
         match self.mode {
             PolicyMode::Fixed(t) => clamp_to(sizes, t),

@@ -26,6 +26,7 @@ pub mod qrnn;
 pub mod quant;
 pub mod sru;
 pub mod stack;
+pub mod wavefront;
 
 pub use bidir::{BiDir, ChunkedBidir};
 pub use lstm::{LstmEngine, LstmMode};

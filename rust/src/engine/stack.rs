@@ -15,9 +15,16 @@
 //! Every user-reachable shape/spec problem is a `Result::Err`, never a
 //! panic — `mtsrnn serve` must not abort on a bad request.
 
-use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicUsize, Ordering};
+// This module is on the crate's unsafe allowlist (see lib.rs and
+// docs/UNSAFE.md) for exactly one reason: the wavefront hands each pool
+// task raw-pointer slices of the shared layer/buffer arrays.  The
+// publish protocol that makes those slices disjoint-by-construction
+// lives in `engine::wavefront` and is loom-model-checked.
+#![allow(unsafe_code)]
 
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+
+use crate::engine::wavefront::WavefrontGate;
 use crate::engine::{build_layer, Engine, RecurrentLayer};
 use crate::linalg::pool::{self, SendPtr, ThreadPool};
 use crate::linalg::{transpose_into, Act, Epilogue, PackedGemm};
@@ -401,56 +408,58 @@ impl NativeStack {
     fn run_wavefront(&mut self, t: usize, w: usize, nsub: usize, pool: &ThreadPool) {
         let depth = self.layers.len();
         let h = self.cfg.hidden;
-        // progress[l] = sub-blocks of wave[l] published; the input is
-        // fully available before any task starts.
-        let progress: Vec<AtomicUsize> = (0..=depth)
-            .map(|l| AtomicUsize::new(if l == 0 { nsub } else { 0 }))
-            .collect();
+        // Publish counters (`gate.progress[l]` = sub-blocks of wave[l]
+        // available); the input row starts fully published because the
+        // projection ran before the wavefront.
+        let gate = WavefrontGate::new(depth, nsub);
         let layers_base = SendPtr(self.layers.as_mut_ptr());
         let bufs: Vec<SendPtr<f32>> = self
             .wave
             .iter_mut()
             .map(|b| SendPtr(b.as_mut_ptr()))
             .collect();
-        let progress = &progress;
+        let gate = &gate;
         pool.run(depth, move |li| {
-            // SAFETY: task index `li` is claimed by exactly one thread,
-            // which makes it the sole owner of layer `li` and the sole
-            // writer of `wave[li + 1]` for the duration of the job; the
-            // Acquire load below orders its reads of `wave[li]` after
-            // the producer's Release publish, and the pool's join orders
-            // everything before the caller resumes.
+            // SAFETY: task index `li` is claimed by exactly one thread
+            // (pool claim counter), which makes it the sole owner of
+            // layer `li` for the duration of the job; `li < depth` =
+            // `self.layers.len()`, so the offset stays in bounds.  The
+            // pool's join orders everything before the caller resumes
+            // and regains `&mut self`.
             let layer = unsafe { &mut *layers_base.get().add(li) };
             let inp = bufs[li];
             let outp = bufs[li + 1];
             let r = catch_unwind(AssertUnwindSafe(|| {
                 for si in 0..nsub {
-                    let mut spins = 0u32;
-                    while progress[li].load(Ordering::Acquire) <= si {
-                        spins += 1;
-                        if spins > 10_000 {
-                            std::thread::yield_now();
-                        } else {
-                            std::hint::spin_loop();
-                        }
-                    }
+                    gate.wait_input(li, si);
                     let s0 = si * w;
                     // The last sub-block absorbs the remainder, keeping
                     // every width >= the layers' minimum.
                     let sl = if si + 1 == nsub { t - s0 } else { w };
+                    // SAFETY: rows `s0..s0 + sl` of wave[li] lie inside
+                    // the buffer (`s0 + sl <= t`, each buffer holds
+                    // `t * h` floats), and `gate.wait_input` returned,
+                    // so the producer's Release publish of exactly this
+                    // sub-block happens-before this Acquire-ordered
+                    // read — no concurrent writer exists for it.
                     let x = unsafe { std::slice::from_raw_parts(inp.get().add(s0 * h), sl * h) };
+                    // SAFETY: task `li` is the *only* writer of
+                    // wave[li + 1] (one task per layer), and consumers
+                    // of that buffer read sub-block `si` only after the
+                    // `gate.publish(li, si)` below — so this mutable
+                    // slice is exclusive while it lives.
                     let out = unsafe {
                         std::slice::from_raw_parts_mut(outp.get().add(s0 * h), sl * h)
                     };
                     layer.run_sequence(x, sl, out);
-                    progress[li + 1].store(si + 1, Ordering::Release);
+                    gate.publish(li, si);
                 }
             }));
             if let Err(payload) = r {
                 // Unblock downstream consumers before propagating, so a
                 // panicking layer cannot wedge the pipeline; the pool
                 // re-raises on the calling thread after the join.
-                progress[li + 1].store(nsub, Ordering::Release);
+                gate.poison(li);
                 resume_unwind(payload);
             }
         });

@@ -1,0 +1,77 @@
+//! The wavefront `progress[]` publish protocol, extracted from
+//! [`crate::engine::stack`] so it can be model-checked.
+//!
+//! A wavefront over `depth` layers × `nsub` sub-blocks assigns pool
+//! task `l` exclusive ownership of layer `l`: it consumes buffer `l`
+//! and produces buffer `l + 1`, sub-block by sub-block.  `progress[l]`
+//! counts the sub-blocks of buffer `l` published so far; task `l` may
+//! read sub-block `s` of its input only once `progress[l] > s`.  The
+//! counters are the *only* synchronization between pipeline stages —
+//! the Release store on publish and the Acquire load on the spin-wait
+//! are what make the raw-pointer buffer slices in `stack.rs` sound.
+//!
+//! Primitives come from [`crate::sync`], so `RUSTFLAGS="--cfg loom"`
+//! swaps in the miniloom scheduler: `tests/loom_pool.rs` drives a
+//! miniature 2-layer × 3-sub-block wavefront through every
+//! interleaving, including the panic-poison path.
+
+use crate::sync::atomic::{AtomicUsize, Ordering};
+
+/// Publish/consume counters for one wavefront execution.  Construct one
+/// per `run_wavefront` call; the input row (`layer == 0`) starts fully
+/// published because the projection ran before the wavefront.
+pub struct WavefrontGate {
+    /// `progress[l]` = sub-blocks of buffer `l` published; length
+    /// `depth + 1` (last entry is the stack output, never waited on).
+    progress: Vec<AtomicUsize>,
+    nsub: usize,
+}
+
+impl WavefrontGate {
+    pub fn new(depth: usize, nsub: usize) -> Self {
+        WavefrontGate {
+            progress: (0..=depth)
+                .map(|l| AtomicUsize::new(if l == 0 { nsub } else { 0 }))
+                .collect(),
+            nsub,
+        }
+    }
+
+    /// Block until sub-block `si` of layer `li`'s *input* buffer is
+    /// published.  The Acquire load pairs with [`publish`]'s Release
+    /// store: after this returns, the producer's writes to that
+    /// sub-block are visible to the caller.
+    ///
+    /// [`publish`]: WavefrontGate::publish
+    pub fn wait_input(&self, li: usize, si: usize) {
+        let mut spins = 0u32;
+        while self.progress[li].load(Ordering::Acquire) <= si {
+            spins += 1;
+            if cfg!(loom) || spins > 10_000 {
+                // Under loom every spin must yield so the scheduler can
+                // run the producer; natively we yield only after the
+                // pipeline is clearly stalled (cold start, tail skew).
+                crate::sync::thread::yield_now();
+            } else {
+                crate::sync::hint::spin_loop();
+            }
+        }
+    }
+
+    /// Publish sub-block `si` of layer `li`'s *output* buffer (Release:
+    /// every write to the sub-block happens-before a consumer's
+    /// matching Acquire in [`wait_input`]).
+    ///
+    /// [`wait_input`]: WavefrontGate::wait_input
+    pub fn publish(&self, li: usize, si: usize) {
+        self.progress[li + 1].store(si + 1, Ordering::Release);
+    }
+
+    /// Panic path: mark layer `li`'s output fully published so
+    /// downstream tasks cannot wedge on a producer that will never
+    /// publish again.  Their output is garbage, but the pool re-raises
+    /// the original panic after the join, so it is never observed.
+    pub fn poison(&self, li: usize) {
+        self.progress[li + 1].store(self.nsub, Ordering::Release);
+    }
+}

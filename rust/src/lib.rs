@@ -18,6 +18,16 @@
 //!
 //! See `DESIGN.md` for the system inventory and experiment index.
 
+// Unsafe-surface policy (enforced twice: here by rustc, and redundantly
+// by `tools/lint` in CI): `unsafe` is denied crate-wide and re-allowed
+// only in the audited modules — the SIMD kernels, the panel packer's
+// row splitter, the thread pool, and the wavefront scheduler — each of
+// which carries `// SAFETY:` justifications catalogued in
+// `docs/UNSAFE.md`.  Within those modules every operation inside an
+// `unsafe fn` still needs its own `unsafe {}` block.
+#![deny(unsafe_code)]
+#![deny(unsafe_op_in_unsafe_fn)]
+
 pub mod bench;
 pub mod cli;
 pub mod coordinator;
@@ -28,6 +38,7 @@ pub mod memsim;
 pub mod models;
 pub mod runtime;
 pub mod server;
+pub mod sync;
 pub mod util;
 pub mod weights;
 pub mod workload;

@@ -1,0 +1,499 @@
+//! Checked kernel contracts: every precondition the unsafe microkernels
+//! rely on, validated at the dispatch boundary.
+//!
+//! The raw-pointer kernels in [`crate::linalg::kernels`] are `unsafe fn`s
+//! whose `# Safety` sections promise things like "the panel slice holds
+//! `np * PACK_MR * k` floats" or "the mask carries `ceil(nkb / 64)` words
+//! per panel".  Those promises are upheld structurally by the packers in
+//! [`crate::linalg::pack`] — but a structural argument is invisible at
+//! the call site, and a refactor that breaks it corrupts memory instead
+//! of failing a test.  This module makes the argument *executable*: each
+//! kernel family gets a validator that re-derives every bound from first
+//! principles and returns a precise [`ContractError`] on the first
+//! violation.
+//!
+//! The validators run in two configurations:
+//!
+//! * **Always** in debug builds (`debug_assertions`), so every unit and
+//!   parity test exercises them for free.
+//! * In release builds **only** when the `checks` cargo feature is on —
+//!   the hot path stays branch-free in production (the zero-overhead
+//!   claim is benchmarked in `EXPERIMENTS.md` §Static-analysis).
+//!
+//! The typed views ([`PanelView`], [`QPanelView`], [`Q4PanelView`],
+//! [`FrameView`], [`QFrameView`], [`MaskView`]) are the building blocks:
+//! each couples a slice to the geometry it must satisfy, and can only be
+//! constructed by a validating `new`.  The `check_*_dispatch` functions
+//! compose them into the exact argument lists of the three dispatchers
+//! in `kernels/mod.rs`, adding the cross-argument conditions (panel
+//! range bounds, output-range disjointness, epilogue shape).
+//!
+//! Everything here is safe Rust and allocation-free.
+
+use crate::linalg::kernels::Simd;
+use crate::linalg::pack::{Epilogue, PACK_MR, SPARSE_KB};
+
+/// Maximum reduction depth for q8q kernels such that the i32 accumulator
+/// provably cannot overflow: `k * 127 * 127 <= i32::MAX`.  Mirrors
+/// `pack::Q8_MAX_K` (assert-checked equal in this module's tests).
+pub const Q8_MAX_K: usize = (i32::MAX as usize) / (127 * 127);
+
+/// Maximum reduction depth for q4 kernels (`|w| <= 7`, `|x| <= 127`):
+/// `k * 7 * 127 <= i32::MAX`.  Mirrors `pack::Q4_MAX_K`.
+pub const Q4_MAX_K: usize = (i32::MAX as usize) / (7 * 127);
+
+/// A violated kernel precondition.  Each variant names the argument at
+/// fault and carries the observed vs. required geometry, so the panic
+/// message a failed check produces identifies the bug without a
+/// debugger.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ContractError {
+    /// Panel storage length does not match `np * stride` for the
+    /// family's panel stride.
+    PanelLen { expected: usize, got: usize, np: usize, stride: usize },
+    /// Quantized panel `kp` must be even (integer kernels walk K in
+    /// pairs).
+    OddKp { kp: usize },
+    /// Reduction depth exceeds the family's i32-exactness bound.
+    KTooLarge { kp: usize, max: usize, family: &'static str },
+    /// Frame buffer too short for `n` frames of length `k`.
+    FrameLen { expected: usize, got: usize, n: usize, k: usize },
+    /// Pair-broadcast buffer (`qpair`) too short for `n * kp / 2` pairs.
+    PairLen { expected: usize, got: usize },
+    /// Mask words-per-panel disagrees with the K geometry.
+    MaskWordsPerPanel { expected: usize, got: usize, nkb: usize },
+    /// Mask word storage too short for `np` panels.
+    MaskLen { expected: usize, got: usize, np: usize },
+    /// Panel range is not `p0 <= p1 <= np`.
+    PanelRange { p0: usize, p1: usize, np: usize },
+    /// `crow0` is not the first row of panel `p0` — the output sub-slice
+    /// would alias a neighbouring range's rows.
+    OutputRow0 { crow0: usize, expected: usize },
+    /// Output sub-slice length does not cover exactly the range's rows —
+    /// either truncated (out-of-bounds stores) or oversized (overlap
+    /// with the next range).
+    OutputLen { expected: usize, got: usize, rows: usize, n: usize },
+    /// Epilogue bias length is not `m`.
+    BiasLen { expected: usize, got: usize },
+    /// Epilogue activation segments do not divide `m` evenly.
+    ActSegments { m: usize, nacts: usize },
+    /// A SIMD variant was requested on a target where its kernels are
+    /// not compiled (`Avx2` off x86-64, `Neon` off aarch64).
+    SimdUnavailable { simd: &'static str },
+}
+
+impl std::fmt::Display for ContractError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            ContractError::PanelLen { expected, got, np, stride } => write!(
+                f,
+                "panel storage must hold np * stride = {np} * {stride} = \
+                 {expected} elements, got {got}"
+            ),
+            ContractError::OddKp { kp } => {
+                write!(f, "quantized panel depth kp must be even (pair-walked), got {kp}")
+            }
+            ContractError::KTooLarge { kp, max, family } => write!(
+                f,
+                "{family} reduction depth {kp} exceeds i32-exactness bound {max}"
+            ),
+            ContractError::FrameLen { expected, got, n, k } => write!(
+                f,
+                "frame buffer must hold n * k = {n} * {k} = {expected} elements, got {got}"
+            ),
+            ContractError::PairLen { expected, got } => write!(
+                f,
+                "qpair buffer must hold n * kp / 2 = {expected} pairs, got {got}"
+            ),
+            ContractError::MaskWordsPerPanel { expected, got, nkb } => write!(
+                f,
+                "mask words_per_panel must be ceil(nkb={nkb} / 64) = {expected}, got {got}"
+            ),
+            ContractError::MaskLen { expected, got, np } => write!(
+                f,
+                "mask must hold np * words_per_panel = {np} * wpp = {expected} words, got {got}"
+            ),
+            ContractError::PanelRange { p0, p1, np } => {
+                write!(f, "panel range must satisfy p0 <= p1 <= np, got {p0}..{p1} of {np}")
+            }
+            ContractError::OutputRow0 { crow0, expected } => write!(
+                f,
+                "crow0 must equal p0 * PACK_MR = {expected} (disjoint-range invariant), got {crow0}"
+            ),
+            ContractError::OutputLen { expected, got, rows, n } => write!(
+                f,
+                "output sub-slice must hold rows * n = {rows} * {n} = \
+                 {expected} elements, got {got}"
+            ),
+            ContractError::BiasLen { expected, got } => {
+                write!(f, "epilogue bias must have len m = {expected}, got {got}")
+            }
+            ContractError::ActSegments { m, nacts } => write!(
+                f,
+                "epilogue activation segments must divide m evenly: m = {m}, acts = {nacts}"
+            ),
+            ContractError::SimdUnavailable { simd } => {
+                write!(f, "SIMD variant {simd} is not compiled for this target")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ContractError {}
+
+/// Number of `PACK_MR`-row panels covering `m` rows.
+#[inline]
+pub fn num_panels(m: usize) -> usize {
+    m.div_ceil(PACK_MR)
+}
+
+/// A validated view over f32 packed panels: `np` panels of stride
+/// `PACK_MR * k` (k-major, zero-padded rows).
+#[derive(Debug, Clone, Copy)]
+pub struct PanelView<'a> {
+    pub panels: &'a [f32],
+    pub m: usize,
+    pub k: usize,
+}
+
+impl<'a> PanelView<'a> {
+    pub fn new(panels: &'a [f32], m: usize, k: usize) -> Result<Self, ContractError> {
+        let np = num_panels(m);
+        let stride = PACK_MR * k;
+        let expected = np * stride;
+        if panels.len() != expected {
+            return Err(ContractError::PanelLen { expected, got: panels.len(), np, stride });
+        }
+        Ok(Self { panels, m, k })
+    }
+}
+
+/// A validated view over q8q pair-interleaved i8 panels: stride
+/// `PACK_MR * kp` with `kp` even and within the i32-exactness bound.
+#[derive(Debug, Clone, Copy)]
+pub struct QPanelView<'a> {
+    pub panels: &'a [i8],
+    pub m: usize,
+    pub kp: usize,
+}
+
+impl<'a> QPanelView<'a> {
+    pub fn new(panels: &'a [i8], m: usize, kp: usize) -> Result<Self, ContractError> {
+        if kp % 2 != 0 {
+            return Err(ContractError::OddKp { kp });
+        }
+        // kp = k rounded up to even, so kp <= Q8_MAX_K + 1 iff
+        // k <= Q8_MAX_K (padding columns are zero and add nothing).
+        if kp > Q8_MAX_K + 1 {
+            return Err(ContractError::KTooLarge { kp, max: Q8_MAX_K, family: "q8q" });
+        }
+        let np = num_panels(m);
+        let stride = PACK_MR * kp;
+        let expected = np * stride;
+        if panels.len() != expected {
+            return Err(ContractError::PanelLen { expected, got: panels.len(), np, stride });
+        }
+        Ok(Self { panels, m, kp })
+    }
+}
+
+/// A validated view over q4 nibble-packed panels: stride
+/// `(PACK_MR / 2) * kp` bytes (two rows per byte), `kp` even, depth
+/// within the q4 i32-exactness bound.
+#[derive(Debug, Clone, Copy)]
+pub struct Q4PanelView<'a> {
+    pub panels: &'a [u8],
+    pub m: usize,
+    pub kp: usize,
+}
+
+impl<'a> Q4PanelView<'a> {
+    pub fn new(panels: &'a [u8], m: usize, kp: usize) -> Result<Self, ContractError> {
+        if kp % 2 != 0 {
+            return Err(ContractError::OddKp { kp });
+        }
+        if kp > Q4_MAX_K + 1 {
+            return Err(ContractError::KTooLarge { kp, max: Q4_MAX_K, family: "q4" });
+        }
+        let np = num_panels(m);
+        let stride = (PACK_MR / 2) * kp;
+        let expected = np * stride;
+        if panels.len() != expected {
+            return Err(ContractError::PanelLen { expected, got: panels.len(), np, stride });
+        }
+        Ok(Self { panels, m, kp })
+    }
+}
+
+/// A validated view over `n` time-major f32 frames of length `k`.
+#[derive(Debug, Clone, Copy)]
+pub struct FrameView<'a> {
+    pub x: &'a [f32],
+    pub n: usize,
+    pub k: usize,
+}
+
+impl<'a> FrameView<'a> {
+    pub fn new(x: &'a [f32], n: usize, k: usize) -> Result<Self, ContractError> {
+        let expected = n * k;
+        if x.len() != expected {
+            return Err(ContractError::FrameLen { expected, got: x.len(), n, k });
+        }
+        Ok(Self { x, n, k })
+    }
+}
+
+/// A validated view over quantized activation frames: `xq` holds `n`
+/// i8 frames of length `kp`, and (when present) `qpair` the same data
+/// as `n * kp / 2` packed i16 pairs — the two broadcast forms the
+/// integer kernels consume.
+#[derive(Debug, Clone, Copy)]
+pub struct QFrameView<'a> {
+    pub xq: &'a [i8],
+    pub qpair: &'a [i32],
+    pub n: usize,
+    pub kp: usize,
+}
+
+impl<'a> QFrameView<'a> {
+    pub fn new(
+        xq: &'a [i8],
+        qpair: &'a [i32],
+        n: usize,
+        kp: usize,
+    ) -> Result<Self, ContractError> {
+        if kp % 2 != 0 {
+            return Err(ContractError::OddKp { kp });
+        }
+        let expected = n * kp;
+        if xq.len() != expected {
+            return Err(ContractError::FrameLen { expected, got: xq.len(), n, k: kp });
+        }
+        let pairs = n * kp / 2;
+        if qpair.len() != pairs {
+            return Err(ContractError::PairLen { expected: pairs, got: qpair.len() });
+        }
+        Ok(Self { xq, qpair, n, kp })
+    }
+}
+
+/// A validated view over a `PanelMask::for_kernels` bitmap: `wpp` words
+/// per panel consistent with the K geometry, `np * wpp` words total.
+///
+/// `nkb` is derived from the *kernel-visible* depth: `ceil(k /
+/// SPARSE_KB)` for f32, `ceil(kp / SPARSE_KB)` for the integer families
+/// (identical to the pack-time `ceil(k / SPARSE_KB)` because the single
+/// pad column of an odd `k` never starts a new block).
+#[derive(Debug, Clone, Copy)]
+pub struct MaskView<'a> {
+    pub words: &'a [u64],
+    pub wpp: usize,
+    pub np: usize,
+}
+
+impl<'a> MaskView<'a> {
+    pub fn new(
+        words: &'a [u64],
+        wpp: usize,
+        m: usize,
+        k: usize,
+    ) -> Result<Self, ContractError> {
+        let np = num_panels(m);
+        let nkb = k.div_ceil(SPARSE_KB);
+        let expected_wpp = nkb.div_ceil(64);
+        if wpp != expected_wpp {
+            return Err(ContractError::MaskWordsPerPanel { expected: expected_wpp, got: wpp, nkb });
+        }
+        let expected = np * wpp;
+        if words.len() != expected {
+            return Err(ContractError::MaskLen { expected, got: words.len(), np });
+        }
+        Ok(Self { words, wpp, np })
+    }
+}
+
+/// Validate a panel range plus its output sub-slice: `p0 <= p1 <= np`,
+/// `crow0 == p0 * PACK_MR`, and `c_len` covering *exactly* the range's
+/// rows.  Exactness is the disjointness proof: when the pool splits
+/// `0..np` into consecutive ranges, equal-length sub-slices tile the
+/// output with no gap and no overlap, so concurrent range sweeps never
+/// alias.
+pub fn check_range_output(
+    m: usize,
+    n: usize,
+    p0: usize,
+    p1: usize,
+    crow0: usize,
+    c_len: usize,
+) -> Result<(), ContractError> {
+    let np = num_panels(m);
+    if p0 > p1 || p1 > np {
+        return Err(ContractError::PanelRange { p0, p1, np });
+    }
+    let row0 = p0 * PACK_MR;
+    if crow0 != row0 {
+        return Err(ContractError::OutputRow0 { crow0, expected: row0 });
+    }
+    let rows = (p1 * PACK_MR).min(m).saturating_sub(row0);
+    let expected = rows * n;
+    if c_len != expected {
+        return Err(ContractError::OutputLen { expected, got: c_len, rows, n });
+    }
+    Ok(())
+}
+
+/// Validate the epilogue against the row count: bias (if any) has one
+/// entry per row, and the activation segment map divides `m` evenly
+/// (the `act_for_row` indexing requirement).
+pub fn check_epilogue(epi: &Epilogue<'_>, m: usize) -> Result<(), ContractError> {
+    if let Some(bias) = epi.bias {
+        if bias.len() != m {
+            return Err(ContractError::BiasLen { expected: m, got: bias.len() });
+        }
+    }
+    if !epi.acts.is_empty() && m % epi.acts.len() != 0 {
+        return Err(ContractError::ActSegments { m, nacts: epi.acts.len() });
+    }
+    Ok(())
+}
+
+/// Validate that the requested kernel family exists on this target.
+pub fn check_simd(simd: Simd) -> Result<(), ContractError> {
+    match simd {
+        Simd::Avx2 if !cfg!(target_arch = "x86_64") => {
+            Err(ContractError::SimdUnavailable { simd: "avx2" })
+        }
+        Simd::Neon if !cfg!(target_arch = "aarch64") => {
+            Err(ContractError::SimdUnavailable { simd: "neon" })
+        }
+        _ => Ok(()),
+    }
+}
+
+/// Full precondition set of `kernels::matmul_range` (and therefore
+/// `kernels::matmul`, which delegates with the full range).
+#[allow(clippy::too_many_arguments)]
+pub fn check_f32_dispatch(
+    simd: Simd,
+    panels: &[f32],
+    c_len: usize,
+    crow0: usize,
+    x: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    epi: &Epilogue<'_>,
+    pm_all: Option<(&[u64], usize)>,
+    p0: usize,
+    p1: usize,
+) -> Result<(), ContractError> {
+    check_simd(simd)?;
+    PanelView::new(panels, m, k)?;
+    FrameView::new(x, n, k)?;
+    if let Some((words, wpp)) = pm_all {
+        MaskView::new(words, wpp, m, k)?;
+    }
+    check_range_output(m, n, p0, p1, crow0, c_len)?;
+    check_epilogue(epi, m)
+}
+
+/// Full precondition set of `kernels::matmul_q8q`.
+#[allow(clippy::too_many_arguments)]
+pub fn check_q8q_dispatch(
+    simd: Simd,
+    qpanels: &[i8],
+    c32_len: usize,
+    crow0: usize,
+    xq: &[i8],
+    qpair: &[i32],
+    m: usize,
+    kp: usize,
+    n: usize,
+    pm_all: Option<(&[u64], usize)>,
+    p0: usize,
+    p1: usize,
+) -> Result<(), ContractError> {
+    check_simd(simd)?;
+    QPanelView::new(qpanels, m, kp)?;
+    QFrameView::new(xq, qpair, n, kp)?;
+    if let Some((words, wpp)) = pm_all {
+        MaskView::new(words, wpp, m, kp)?;
+    }
+    check_range_output(m, n, p0, p1, crow0, c32_len)
+}
+
+/// Full precondition set of `kernels::matmul_q4`.
+#[allow(clippy::too_many_arguments)]
+pub fn check_q4_dispatch(
+    simd: Simd,
+    q4panels: &[u8],
+    c32_len: usize,
+    crow0: usize,
+    xq: &[i8],
+    qpair: &[i32],
+    m: usize,
+    kp: usize,
+    n: usize,
+    pm_all: Option<(&[u64], usize)>,
+    p0: usize,
+    p1: usize,
+) -> Result<(), ContractError> {
+    check_simd(simd)?;
+    Q4PanelView::new(q4panels, m, kp)?;
+    QFrameView::new(xq, qpair, n, kp)?;
+    if let Some((words, wpp)) = pm_all {
+        MaskView::new(words, wpp, m, kp)?;
+    }
+    check_range_output(m, n, p0, p1, crow0, c32_len)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bounds_match_pack() {
+        assert_eq!(Q8_MAX_K, crate::linalg::pack::Q8_MAX_K);
+        assert_eq!(Q4_MAX_K, crate::linalg::pack::Q4_MAX_K);
+    }
+
+    #[test]
+    fn happy_path_f32() {
+        let (m, k, n) = (20, 7, 3);
+        let np = num_panels(m);
+        let panels = vec![0.0f32; np * PACK_MR * k];
+        let x = vec![0.0f32; n * k];
+        assert!(check_f32_dispatch(
+            Simd::Portable,
+            &panels,
+            m * n,
+            0,
+            &x,
+            m,
+            k,
+            n,
+            &Epilogue::NONE,
+            None,
+            0,
+            np
+        )
+        .is_ok());
+    }
+
+    #[test]
+    fn range_disjointness_is_enforced() {
+        // crow0 not on the p0 panel boundary aliases the prior range.
+        let err = check_range_output(32, 4, 1, 2, 8, 16 * 4).unwrap_err();
+        assert!(matches!(err, ContractError::OutputRow0 { .. }));
+        // Oversized output overlaps the next range.
+        let err = check_range_output(32, 4, 0, 1, 0, 17 * 4).unwrap_err();
+        assert!(matches!(err, ContractError::OutputLen { .. }));
+    }
+
+    #[test]
+    fn display_is_precise() {
+        let e = ContractError::PanelLen { expected: 224, got: 200, np: 2, stride: 112 };
+        let s = e.to_string();
+        assert!(s.contains("224") && s.contains("200"), "{s}");
+    }
+}

@@ -7,6 +7,14 @@
 //! is spilled to a 384-byte stack buffer once per full-K sweep and the
 //! epilogue-fused store runs from there; at K >= 256 the spill is noise.
 
+// On the audited unsafe allowlist (see `tools/lint` and
+// `docs/UNSAFE.md`).  Under `deny(unsafe_op_in_unsafe_fn)` the value
+// intrinsics are safe inside these `#[target_feature]` functions; the
+// `unsafe {}` blocks below mark exactly the raw-pointer operations,
+// each with the bound that keeps it in range.  The bounds themselves
+// are validated at the dispatch boundary by `linalg::contract`.
+#![allow(unsafe_code)]
+
 use core::arch::x86_64::{
     __m128i, __m256i, _mm256_add_epi32, _mm256_cvtepi8_epi16, _mm256_fmadd_ps, _mm256_loadu_ps,
     _mm256_madd_epi16, _mm256_permute2x128_si256, _mm256_set1_epi32, _mm256_set1_ps,
@@ -40,7 +48,9 @@ macro_rules! def_kern {
             let mut acc1 = [_mm256_setzero_ps(); $nr];
             let mut frames = [x; $nr];
             for (jj, f) in frames.iter_mut().enumerate() {
-                *f = x.add((j0 + jj) * k);
+                // SAFETY: caller guarantees `x` holds `(j0 + $nr) * k`
+                // floats, so frame `j0 + jj` starts in bounds.
+                *f = unsafe { x.add((j0 + jj) * k) };
             }
             // K walks in SPARSE_KB chunks; skipping an inactive (all
             // exactly zero) block keeps the surviving FMA chain in
@@ -50,10 +60,16 @@ macro_rules! def_kern {
                 let ke = (kb0 + SPARSE_KB).min(k);
                 if kb_active(pm, kb0 / SPARSE_KB) {
                     for kk in kb0..ke {
-                        let a0 = _mm256_loadu_ps(panel.add(kk * PACK_MR));
-                        let a1 = _mm256_loadu_ps(panel.add(kk * PACK_MR + 8));
+                        // SAFETY: kk < k and the panel holds
+                        // `k * PACK_MR` floats, so both 8-lane loads
+                        // stay inside panel column kk.
+                        let a0 = unsafe { _mm256_loadu_ps(panel.add(kk * PACK_MR)) };
+                        // SAFETY: as above, second half of column kk.
+                        let a1 = unsafe { _mm256_loadu_ps(panel.add(kk * PACK_MR + 8)) };
                         for jj in 0..$nr {
-                            let b = _mm256_set1_ps(*frames[jj].add(kk));
+                            // SAFETY: frames[jj] points at a k-float
+                            // frame and kk < k.
+                            let b = _mm256_set1_ps(unsafe { *frames[jj].add(kk) });
                             acc0[jj] = _mm256_fmadd_ps(a0, b, acc0[jj]);
                             acc1[jj] = _mm256_fmadd_ps(a1, b, acc1[jj]);
                         }
@@ -62,8 +78,12 @@ macro_rules! def_kern {
                 kb0 = ke;
             }
             for jj in 0..$nr {
-                _mm256_storeu_ps(tile[jj].as_mut_ptr(), acc0[jj]);
-                _mm256_storeu_ps(tile[jj].as_mut_ptr().add(8), acc1[jj]);
+                // SAFETY: tile[jj] is [f32; PACK_MR] = 16 floats; the
+                // two 8-lane stores cover exactly elements 0..16.
+                unsafe {
+                    _mm256_storeu_ps(tile[jj].as_mut_ptr(), acc0[jj]);
+                    _mm256_storeu_ps(tile[jj].as_mut_ptr().add(8), acc1[jj]);
+                }
             }
         }
     };
@@ -81,7 +101,12 @@ def_kern!(kern6, 6);
 ///
 /// # Safety
 /// Requires avx2+fma (guaranteed by the `detect()` gate in the
-/// dispatcher).  Slice sizes are checked by `PackedGemm::matmul`.
+/// dispatcher).  The caller must uphold the dispatch contract validated
+/// by `contract::check_f32_dispatch`: `panels` holds
+/// `ceil(m / PACK_MR) * PACK_MR * k` floats, `x` holds `n * k` floats,
+/// `p0 <= p1 <= ceil(m / PACK_MR)`, `crow0 == p0 * PACK_MR`, `c` covers
+/// exactly the range's rows, and any mask carries
+/// `ceil(ceil(k / SPARSE_KB) / 64)` words per panel.
 #[target_feature(enable = "avx2,fma")]
 #[allow(clippy::too_many_arguments)]
 pub(crate) unsafe fn matmul(
@@ -107,13 +132,19 @@ pub(crate) unsafe fn matmul(
         let mut j0 = 0;
         while j0 < n {
             let nr = NR.min(n - j0);
-            match nr {
-                6 => kern6(panel, xp, k, j0, pm, &mut tile),
-                5 => kern5(panel, xp, k, j0, pm, &mut tile),
-                4 => kern4(panel, xp, k, j0, pm, &mut tile),
-                3 => kern3(panel, xp, k, j0, pm, &mut tile),
-                2 => kern2(panel, xp, k, j0, pm, &mut tile),
-                _ => kern1(panel, xp, k, j0, pm, &mut tile),
+            // SAFETY: `panel` starts a full `k * PACK_MR` panel
+            // (pi < p1 <= np and panels.len() == np * PACK_MR * k) and
+            // `x` holds n * k floats with j0 + nr <= n — exactly each
+            // kernel's documented requirement.
+            unsafe {
+                match nr {
+                    6 => kern6(panel, xp, k, j0, pm, &mut tile),
+                    5 => kern5(panel, xp, k, j0, pm, &mut tile),
+                    4 => kern4(panel, xp, k, j0, pm, &mut tile),
+                    3 => kern3(panel, xp, k, j0, pm, &mut tile),
+                    2 => kern2(panel, xp, k, j0, pm, &mut tile),
+                    _ => kern1(panel, xp, k, j0, pm, &mut tile),
+                }
             }
             store_tile(c, crow0, &tile, j0, nr, pi * PACK_MR, m, n, acc, None, epi);
             j0 += nr;
@@ -150,7 +181,10 @@ macro_rules! def_kern_q8q {
             let mut hi = [_mm256_setzero_si256(); $nr];
             let mut frames = [qpair; $nr];
             for (jj, f) in frames.iter_mut().enumerate() {
-                *f = qpair.add((j0 + jj) * (kp / 2));
+                // SAFETY: caller guarantees `qpair` holds
+                // `(j0 + $nr) * kp / 2` pairs, so frame `j0 + jj`
+                // starts in bounds.
+                *f = unsafe { qpair.add((j0 + jj) * (kp / 2)) };
             }
             // Pair loop chunked at SPARSE_KB / 2 pairs per sparse
             // block; skipping is exact (i32) so results stay
@@ -160,14 +194,25 @@ macro_rules! def_kern_q8q {
                 let ge = (g0 + SPARSE_KB / 2).min(kp / 2);
                 if kb_active(pm, g0 / (SPARSE_KB / 2)) {
                     for g in g0..ge {
-                        let w0 = _mm256_cvtepi8_epi16(_mm_loadu_si128(
-                            panel.add(g * 32) as *const __m128i
-                        ));
-                        let w1 = _mm256_cvtepi8_epi16(_mm_loadu_si128(
-                            panel.add(g * 32 + 16) as *const __m128i,
-                        ));
+                        // SAFETY: g < kp / 2 and the pair-interleaved
+                        // panel holds kp * PACK_MR = (kp / 2) * 32
+                        // bytes, so both 16-byte loads stay inside
+                        // pair-group g.
+                        let w0 = unsafe {
+                            _mm256_cvtepi8_epi16(_mm_loadu_si128(
+                                panel.add(g * 32) as *const __m128i
+                            ))
+                        };
+                        // SAFETY: as above, second half of group g.
+                        let w1 = unsafe {
+                            _mm256_cvtepi8_epi16(_mm_loadu_si128(
+                                panel.add(g * 32 + 16) as *const __m128i,
+                            ))
+                        };
                         for jj in 0..$nr {
-                            let b = _mm256_set1_epi32(*frames[jj].add(g));
+                            // SAFETY: frames[jj] points at kp / 2
+                            // packed pairs and g < kp / 2.
+                            let b = _mm256_set1_epi32(unsafe { *frames[jj].add(g) });
                             lo[jj] = _mm256_add_epi32(lo[jj], _mm256_madd_epi16(w0, b));
                             hi[jj] = _mm256_add_epi32(hi[jj], _mm256_madd_epi16(w1, b));
                         }
@@ -176,8 +221,12 @@ macro_rules! def_kern_q8q {
                 g0 = ge;
             }
             for jj in 0..$nr {
-                _mm256_storeu_si256(tile[jj].as_mut_ptr() as *mut __m256i, lo[jj]);
-                _mm256_storeu_si256(tile[jj].as_mut_ptr().add(8) as *mut __m256i, hi[jj]);
+                // SAFETY: tile[jj] is [i32; PACK_MR] = 16 lanes; the
+                // two 8-lane stores cover exactly elements 0..16.
+                unsafe {
+                    _mm256_storeu_si256(tile[jj].as_mut_ptr() as *mut __m256i, lo[jj]);
+                    _mm256_storeu_si256(tile[jj].as_mut_ptr().add(8) as *mut __m256i, hi[jj]);
+                }
             }
         }
     };
@@ -195,7 +244,12 @@ def_kern_q8q!(kq6, 6);
 ///
 /// # Safety
 /// Requires avx2 (guaranteed by the `detect()` gate in the dispatcher).
-/// Slice sizes are checked by `PackedQuantGemm::matmul_q8q`.
+/// The caller must uphold the dispatch contract validated by
+/// `contract::check_q8q_dispatch`: `qpanels` holds
+/// `ceil(m / PACK_MR) * PACK_MR * kp` bytes with `kp` even and within
+/// the i32-exactness bound, `qpair` holds `n * kp / 2` packed pairs,
+/// `p0 <= p1 <= ceil(m / PACK_MR)`, `crow0 == p0 * PACK_MR`, and `c32`
+/// covers exactly the range's rows.
 #[target_feature(enable = "avx2")]
 #[allow(clippy::too_many_arguments)]
 pub(crate) unsafe fn matmul_q8q(
@@ -219,13 +273,18 @@ pub(crate) unsafe fn matmul_q8q(
         let mut j0 = 0;
         while j0 < n {
             let nr = NR.min(n - j0);
-            match nr {
-                6 => kq6(panel, qp, kp, j0, pm, &mut tile),
-                5 => kq5(panel, qp, kp, j0, pm, &mut tile),
-                4 => kq4(panel, qp, kp, j0, pm, &mut tile),
-                3 => kq3(panel, qp, kp, j0, pm, &mut tile),
-                2 => kq2(panel, qp, kp, j0, pm, &mut tile),
-                _ => kq1(panel, qp, kp, j0, pm, &mut tile),
+            // SAFETY: `panel` starts a full `kp * PACK_MR`-byte q8q
+            // panel and `qpair` holds n * kp / 2 pairs with
+            // j0 + nr <= n — exactly each kernel's requirement.
+            unsafe {
+                match nr {
+                    6 => kq6(panel, qp, kp, j0, pm, &mut tile),
+                    5 => kq5(panel, qp, kp, j0, pm, &mut tile),
+                    4 => kq4(panel, qp, kp, j0, pm, &mut tile),
+                    3 => kq3(panel, qp, kp, j0, pm, &mut tile),
+                    2 => kq2(panel, qp, kp, j0, pm, &mut tile),
+                    _ => kq1(panel, qp, kp, j0, pm, &mut tile),
+                }
             }
             store_tile_i32(c32, crow0, &tile, j0, nr, pi * PACK_MR, m, n);
             j0 += nr;
@@ -269,21 +328,29 @@ macro_rules! def_kern_q4 {
             let mut acc_b = [_mm256_setzero_si256(); $nr];
             let mut frames = [qpair; $nr];
             for (jj, f) in frames.iter_mut().enumerate() {
-                *f = qpair.add((j0 + jj) * (kp / 2));
+                // SAFETY: caller guarantees `qpair` holds
+                // `(j0 + $nr) * kp / 2` pairs, so frame `j0 + jj`
+                // starts in bounds.
+                *f = unsafe { qpair.add((j0 + jj) * (kp / 2)) };
             }
             let mut g0 = 0usize;
             while g0 < kp / 2 {
                 let ge = (g0 + SPARSE_KB / 2).min(kp / 2);
                 if kb_active(pm, g0 / (SPARSE_KB / 2)) {
                     for g in g0..ge {
-                        let raw = _mm_loadu_si128(panel.add(g * 16) as *const __m128i);
+                        // SAFETY: g < kp / 2 and the nibble-packed
+                        // panel holds (kp / 2) * 16 bytes, so the
+                        // 16-byte load covers exactly pair-group g.
+                        let raw = unsafe { _mm_loadu_si128(panel.add(g * 16) as *const __m128i) };
                         let v = _mm256_cvtepi8_epi16(raw);
                         let lo = _mm256_srai_epi16(_mm256_slli_epi16(v, 12), 12);
                         let hi = _mm256_srai_epi16(v, 4);
                         let pa = _mm256_unpacklo_epi16(lo, hi);
                         let pb = _mm256_unpackhi_epi16(lo, hi);
                         for jj in 0..$nr {
-                            let b = _mm256_set1_epi32(*frames[jj].add(g));
+                            // SAFETY: frames[jj] points at kp / 2
+                            // packed pairs and g < kp / 2.
+                            let b = _mm256_set1_epi32(unsafe { *frames[jj].add(g) });
                             acc_a[jj] = _mm256_add_epi32(acc_a[jj], _mm256_madd_epi16(pa, b));
                             acc_b[jj] = _mm256_add_epi32(acc_b[jj], _mm256_madd_epi16(pb, b));
                         }
@@ -294,8 +361,12 @@ macro_rules! def_kern_q4 {
             for jj in 0..$nr {
                 let r07 = _mm256_permute2x128_si256(acc_a[jj], acc_b[jj], 0x20);
                 let r8f = _mm256_permute2x128_si256(acc_a[jj], acc_b[jj], 0x31);
-                _mm256_storeu_si256(tile[jj].as_mut_ptr() as *mut __m256i, r07);
-                _mm256_storeu_si256(tile[jj].as_mut_ptr().add(8) as *mut __m256i, r8f);
+                // SAFETY: tile[jj] is [i32; PACK_MR] = 16 lanes; the
+                // two 8-lane stores cover exactly elements 0..16.
+                unsafe {
+                    _mm256_storeu_si256(tile[jj].as_mut_ptr() as *mut __m256i, r07);
+                    _mm256_storeu_si256(tile[jj].as_mut_ptr().add(8) as *mut __m256i, r8f);
+                }
             }
         }
     };
@@ -313,7 +384,12 @@ def_kern_q4!(k46, 6);
 ///
 /// # Safety
 /// Requires avx2 (guaranteed by the `detect()` gate in the dispatcher).
-/// Slice sizes are checked by `PackedQuantGemm::matmul_q4`.
+/// The caller must uphold the dispatch contract validated by
+/// `contract::check_q4_dispatch`: `q4panels` holds
+/// `ceil(m / PACK_MR) * (PACK_MR / 2) * kp` bytes with `kp` even and
+/// within the q4 i32-exactness bound, `qpair` holds `n * kp / 2` packed
+/// pairs, `p0 <= p1 <= ceil(m / PACK_MR)`, `crow0 == p0 * PACK_MR`, and
+/// `c32` covers exactly the range's rows.
 #[target_feature(enable = "avx2")]
 #[allow(clippy::too_many_arguments)]
 pub(crate) unsafe fn matmul_q4(
@@ -337,13 +413,18 @@ pub(crate) unsafe fn matmul_q4(
         let mut j0 = 0;
         while j0 < n {
             let nr = NR.min(n - j0);
-            match nr {
-                6 => k46(panel, qp, kp, j0, pm, &mut tile),
-                5 => k45(panel, qp, kp, j0, pm, &mut tile),
-                4 => k44(panel, qp, kp, j0, pm, &mut tile),
-                3 => k43(panel, qp, kp, j0, pm, &mut tile),
-                2 => k42(panel, qp, kp, j0, pm, &mut tile),
-                _ => k41(panel, qp, kp, j0, pm, &mut tile),
+            // SAFETY: `panel` starts a full `(kp / 2) * 16`-byte q4
+            // panel and `qpair` holds n * kp / 2 pairs with
+            // j0 + nr <= n — exactly each kernel's requirement.
+            unsafe {
+                match nr {
+                    6 => k46(panel, qp, kp, j0, pm, &mut tile),
+                    5 => k45(panel, qp, kp, j0, pm, &mut tile),
+                    4 => k44(panel, qp, kp, j0, pm, &mut tile),
+                    3 => k43(panel, qp, kp, j0, pm, &mut tile),
+                    2 => k42(panel, qp, kp, j0, pm, &mut tile),
+                    _ => k41(panel, qp, kp, j0, pm, &mut tile),
+                }
             }
             store_tile_i32(c32, crow0, &tile, j0, nr, pi * PACK_MR, m, n);
             j0 += nr;

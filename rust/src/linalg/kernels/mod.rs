@@ -19,6 +19,14 @@
 //! The portable kernel doubles as the correctness oracle for the
 //! intrinsic paths (see `rust/tests/packed_gemm_parity.rs`).
 
+// On the audited unsafe allowlist (see `tools/lint` and
+// `docs/UNSAFE.md`): this module is the single boundary where checked
+// safe Rust hands raw slices to the intrinsic kernels.  Every `unsafe`
+// call below is preceded by the contract validation in
+// [`crate::linalg::contract`] (debug builds and the `checks` feature)
+// and carries a `// SAFETY:` argument for release builds.
+#![allow(unsafe_code)]
+
 #[cfg(target_arch = "x86_64")]
 pub mod avx2;
 #[cfg(target_arch = "aarch64")]
@@ -136,6 +144,25 @@ pub(crate) fn matmul_range(
     p0: usize,
     p1: usize,
 ) {
+    // Checked contracts (debug builds + the `checks` feature): validate
+    // every precondition the unsafe kernels rely on before dispatch.
+    #[cfg(any(debug_assertions, feature = "checks"))]
+    if let Err(e) = crate::linalg::contract::check_f32_dispatch(
+        simd,
+        panels,
+        c.len(),
+        crow0,
+        x,
+        m,
+        k,
+        n,
+        epi,
+        pm_all,
+        p0,
+        p1,
+    ) {
+        panic!("f32 kernel contract violated: {e}");
+    }
     match simd {
         #[cfg(target_arch = "x86_64")]
         // SAFETY: an Avx2 request only exists when `detect()` returned it
@@ -179,6 +206,23 @@ pub(crate) fn matmul_q8q(
     // Each architecture consumes one broadcast form; keep both names
     // live so neither cfg arm trips unused-variable lints.
     let _ = (&xq, &qpair);
+    #[cfg(any(debug_assertions, feature = "checks"))]
+    if let Err(e) = crate::linalg::contract::check_q8q_dispatch(
+        simd,
+        qpanels,
+        c32.len(),
+        crow0,
+        xq,
+        qpair,
+        m,
+        kp,
+        n,
+        pm_all,
+        p0,
+        p1,
+    ) {
+        panic!("q8q kernel contract violated: {e}");
+    }
     match simd {
         #[cfg(target_arch = "x86_64")]
         // SAFETY: an Avx2 request only exists when `detect()` returned
@@ -220,6 +264,23 @@ pub(crate) fn matmul_q4(
     // Each architecture consumes one broadcast form; keep both names
     // live so neither cfg arm trips unused-variable lints.
     let _ = (&xq, &qpair);
+    #[cfg(any(debug_assertions, feature = "checks"))]
+    if let Err(e) = crate::linalg::contract::check_q4_dispatch(
+        simd,
+        q4panels,
+        c32.len(),
+        crow0,
+        xq,
+        qpair,
+        m,
+        kp,
+        n,
+        pm_all,
+        p0,
+        p1,
+    ) {
+        panic!("q4 kernel contract violated: {e}");
+    }
     match simd {
         #[cfg(target_arch = "x86_64")]
         // SAFETY: an Avx2 request only exists when `detect()` returned
@@ -305,5 +366,95 @@ pub(crate) fn store_tile(
             }
             *cv = act.apply(v);
         }
+    }
+}
+
+// The dispatch-boundary contract wiring: active in debug builds and
+// under `--features checks`, so these tests are gated the same way
+// (plain `cargo test` runs them; a bare release build skips them).
+#[cfg(test)]
+#[cfg(any(debug_assertions, feature = "checks"))]
+mod contract_wiring_tests {
+    use super::*;
+
+    fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+        payload
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+            .unwrap_or_default()
+    }
+
+    #[test]
+    fn f32_dispatch_rejects_wrong_panel_stride() {
+        let (m, k, n) = (16usize, 8usize, 2usize);
+        let panels = vec![0.0f32; PACK_MR * k - 1]; // one float short
+        let x = vec![0.0f32; n * k];
+        let mut c = vec![0.0f32; m * n];
+        let payload = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            matmul(Simd::Portable, &panels, &mut c, &x, m, k, n, false, &Epilogue::NONE, None);
+        }))
+        .unwrap_err();
+        let msg = panic_message(payload);
+        assert!(msg.contains("f32 kernel contract violated"), "{msg}");
+    }
+
+    #[test]
+    fn f32_dispatch_rejects_short_mask() {
+        let (m, k, n) = (40usize, 64usize, 2usize);
+        let np = m.div_ceil(PACK_MR);
+        let panels = vec![0.0f32; np * PACK_MR * k];
+        let x = vec![0.0f32; n * k];
+        let mut c = vec![0.0f32; m * n];
+        let words = vec![u64::MAX; np - 1]; // wpp = 1, one panel short
+        let payload = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            matmul(
+                Simd::Portable,
+                &panels,
+                &mut c,
+                &x,
+                m,
+                k,
+                n,
+                false,
+                &Epilogue::NONE,
+                Some((&words, 1)),
+            );
+        }))
+        .unwrap_err();
+        let msg = panic_message(payload);
+        assert!(msg.contains("mask"), "{msg}");
+    }
+
+    #[test]
+    fn q8q_dispatch_rejects_odd_kp() {
+        let (m, kp, n) = (16usize, 7usize, 1usize);
+        let qpanels = vec![0i8; PACK_MR * kp];
+        let xq = vec![0i8; n * kp];
+        let qpair = vec![0i32; n * (kp / 2)];
+        let mut c32 = vec![0i32; m * n];
+        let payload = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            matmul_q8q(Simd::Portable, &qpanels, &mut c32, 0, &xq, &qpair, m, kp, n, None, 0, 1);
+        }))
+        .unwrap_err();
+        let msg = panic_message(payload);
+        assert!(msg.contains("q8q kernel contract violated"), "{msg}");
+    }
+
+    #[test]
+    fn q4_dispatch_rejects_overlapping_output_range() {
+        let (m, kp, n) = (32usize, 8usize, 2usize);
+        let np = m.div_ceil(PACK_MR);
+        let q4panels = vec![0u8; np * (PACK_MR / 2) * kp];
+        let xq = vec![0i8; n * kp];
+        let qpair = vec![0i32; n * kp / 2];
+        // Range 1..2 with crow0 = 0 would alias panel 0's output rows.
+        let mut c32 = vec![0i32; PACK_MR * n];
+        let payload = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            matmul_q4(Simd::Portable, &q4panels, &mut c32, 0, &xq, &qpair, m, kp, n, None, 1, 2);
+        }))
+        .unwrap_err();
+        let msg = panic_message(payload);
+        assert!(msg.contains("crow0"), "{msg}");
     }
 }

@@ -6,6 +6,14 @@
 //! registers out of the 32-register aarch64 SIMD file.  The embedded ARM
 //! boards the paper targets (Tables 3/4/7/8) are exactly this path.
 
+// On the audited unsafe allowlist (see `tools/lint` and
+// `docs/UNSAFE.md`).  Under `deny(unsafe_op_in_unsafe_fn)` the value
+// intrinsics are safe inside these `#[target_feature]` functions; the
+// `unsafe {}` blocks below mark exactly the raw-pointer operations,
+// each with the bound that keeps it in range.  The bounds themselves
+// are validated at the dispatch boundary by `linalg::contract`.
+#![allow(unsafe_code)]
+
 use core::arch::aarch64::{
     vdup_n_u16, vdupq_n_f32, vdupq_n_s32, vfmaq_n_f32, vget_high_s8, vget_low_s8, vld1_s8,
     vld1q_f32, vld1q_s8, vmull_s8, vpadalq_s16, vreinterpret_s8_u16, vshlq_n_s8, vshrq_n_s8,
@@ -37,7 +45,9 @@ macro_rules! def_kern {
             let mut acc = [[zero; 4]; $nr];
             let mut frames = [x; $nr];
             for (jj, f) in frames.iter_mut().enumerate() {
-                *f = x.add((j0 + jj) * k);
+                // SAFETY: caller guarantees `x` holds `(j0 + $nr) * k`
+                // floats, so frame `j0 + jj` starts in bounds.
+                *f = unsafe { x.add((j0 + jj) * k) };
             }
             // K walks in SPARSE_KB chunks; skipping an all-zero block
             // leaves the surviving FMA chain identical to the dense
@@ -47,12 +57,21 @@ macro_rules! def_kern {
                 let ke = (kb0 + SPARSE_KB).min(k);
                 if kb_active(pm, kb0 / SPARSE_KB) {
                     for kk in kb0..ke {
-                        let a0 = vld1q_f32(panel.add(kk * PACK_MR));
-                        let a1 = vld1q_f32(panel.add(kk * PACK_MR + 4));
-                        let a2 = vld1q_f32(panel.add(kk * PACK_MR + 8));
-                        let a3 = vld1q_f32(panel.add(kk * PACK_MR + 12));
+                        // SAFETY: kk < k and the panel holds
+                        // `k * PACK_MR` floats, so all four 4-lane
+                        // loads stay inside panel column kk.
+                        let (a0, a1, a2, a3) = unsafe {
+                            (
+                                vld1q_f32(panel.add(kk * PACK_MR)),
+                                vld1q_f32(panel.add(kk * PACK_MR + 4)),
+                                vld1q_f32(panel.add(kk * PACK_MR + 8)),
+                                vld1q_f32(panel.add(kk * PACK_MR + 12)),
+                            )
+                        };
                         for jj in 0..$nr {
-                            let b = *frames[jj].add(kk);
+                            // SAFETY: frames[jj] points at a k-float
+                            // frame and kk < k.
+                            let b = unsafe { *frames[jj].add(kk) };
                             acc[jj][0] = vfmaq_n_f32(acc[jj][0], a0, b);
                             acc[jj][1] = vfmaq_n_f32(acc[jj][1], a1, b);
                             acc[jj][2] = vfmaq_n_f32(acc[jj][2], a2, b);
@@ -64,7 +83,9 @@ macro_rules! def_kern {
             }
             for jj in 0..$nr {
                 for l in 0..4 {
-                    vst1q_f32(tile[jj].as_mut_ptr().add(4 * l), acc[jj][l]);
+                    // SAFETY: tile[jj] is [f32; PACK_MR] = 16 floats;
+                    // the four 4-lane stores cover elements 0..16.
+                    unsafe { vst1q_f32(tile[jj].as_mut_ptr().add(4 * l), acc[jj][l]) };
                 }
             }
         }
@@ -81,8 +102,13 @@ def_kern!(kern4, 4);
 /// `pm_all` is the block-sparsity bitmap (`None` = dense).
 ///
 /// # Safety
-/// Requires neon (baseline on aarch64; verified by `detect()`).  Slice
-/// sizes are checked by `PackedGemm::matmul`.
+/// Requires neon (baseline on aarch64; verified by `detect()`).  The
+/// caller must uphold the dispatch contract validated by
+/// `contract::check_f32_dispatch`: `panels` holds
+/// `ceil(m / PACK_MR) * PACK_MR * k` floats, `x` holds `n * k` floats,
+/// `p0 <= p1 <= ceil(m / PACK_MR)`, `crow0 == p0 * PACK_MR`, `c` covers
+/// exactly the range's rows, and any mask carries
+/// `ceil(ceil(k / SPARSE_KB) / 64)` words per panel.
 #[target_feature(enable = "neon")]
 #[allow(clippy::too_many_arguments)]
 pub(crate) unsafe fn matmul(
@@ -108,11 +134,17 @@ pub(crate) unsafe fn matmul(
         let mut j0 = 0;
         while j0 < n {
             let nr = NR.min(n - j0);
-            match nr {
-                4 => kern4(panel, xp, k, j0, pm, &mut tile),
-                3 => kern3(panel, xp, k, j0, pm, &mut tile),
-                2 => kern2(panel, xp, k, j0, pm, &mut tile),
-                _ => kern1(panel, xp, k, j0, pm, &mut tile),
+            // SAFETY: `panel` starts a full `k * PACK_MR` panel
+            // (pi < p1 <= np and panels.len() == np * PACK_MR * k) and
+            // `x` holds n * k floats with j0 + nr <= n — exactly each
+            // kernel's documented requirement.
+            unsafe {
+                match nr {
+                    4 => kern4(panel, xp, k, j0, pm, &mut tile),
+                    3 => kern3(panel, xp, k, j0, pm, &mut tile),
+                    2 => kern2(panel, xp, k, j0, pm, &mut tile),
+                    _ => kern1(panel, xp, k, j0, pm, &mut tile),
+                }
             }
             store_tile(c, crow0, &tile, j0, nr, pi * PACK_MR, m, n, acc, None, epi);
             j0 += nr;
@@ -152,7 +184,10 @@ macro_rules! def_kern_q8q {
             let mut acc = [[zero; 4]; $nr];
             let mut frames = [xq; $nr];
             for (jj, f) in frames.iter_mut().enumerate() {
-                *f = xq.add((j0 + jj) * kp);
+                // SAFETY: caller guarantees `xq` holds
+                // `(j0 + $nr) * kp` bytes, so frame `j0 + jj` starts
+                // in bounds.
+                *f = unsafe { xq.add((j0 + jj) * kp) };
             }
             // Pair loop chunked at SPARSE_KB / 2 pairs per block; for
             // odd k the pad pair shares the last real block's bit.
@@ -161,13 +196,26 @@ macro_rules! def_kern_q8q {
                 let ge = (g0 + SPARSE_KB / 2).min(kp / 2);
                 if kb_active(pm, g0 / (SPARSE_KB / 2)) {
                     for g in g0..ge {
-                        let w0 = vld1_s8(panel.add(g * 32));
-                        let w1 = vld1_s8(panel.add(g * 32 + 8));
-                        let w2 = vld1_s8(panel.add(g * 32 + 16));
-                        let w3 = vld1_s8(panel.add(g * 32 + 24));
+                        // SAFETY: g < kp / 2 and the pair-interleaved
+                        // panel holds kp * PACK_MR = (kp / 2) * 32
+                        // bytes, so all four 8-byte loads stay inside
+                        // pair-group g.
+                        let (w0, w1, w2, w3) = unsafe {
+                            (
+                                vld1_s8(panel.add(g * 32)),
+                                vld1_s8(panel.add(g * 32 + 8)),
+                                vld1_s8(panel.add(g * 32 + 16)),
+                                vld1_s8(panel.add(g * 32 + 24)),
+                            )
+                        };
                         for jj in 0..$nr {
                             // [x0, x1] repeated four times as an i8x8 vector.
-                            let pair = (frames[jj].add(2 * g) as *const u16).read_unaligned();
+                            // SAFETY: frames[jj] points at a kp-byte
+                            // frame and 2 * g + 1 < kp; unaligned u16
+                            // read of the adjacent byte pair.
+                            let pair = unsafe {
+                                (frames[jj].add(2 * g) as *const u16).read_unaligned()
+                            };
                             let xp = vreinterpret_s8_u16(vdup_n_u16(pair));
                             acc[jj][0] = vpadalq_s16(acc[jj][0], vmull_s8(w0, xp));
                             acc[jj][1] = vpadalq_s16(acc[jj][1], vmull_s8(w1, xp));
@@ -180,7 +228,9 @@ macro_rules! def_kern_q8q {
             }
             for jj in 0..$nr {
                 for l in 0..4 {
-                    vst1q_s32(tile[jj].as_mut_ptr().add(4 * l), acc[jj][l]);
+                    // SAFETY: tile[jj] is [i32; PACK_MR] = 16 lanes;
+                    // the four 4-lane stores cover elements 0..16.
+                    unsafe { vst1q_s32(tile[jj].as_mut_ptr().add(4 * l), acc[jj][l]) };
                 }
             }
         }
@@ -196,8 +246,13 @@ def_kern_q8q!(kq4, 4);
 /// sub-slice contract as [`matmul`], writing raw i32 accumulators.
 ///
 /// # Safety
-/// Requires neon (baseline on aarch64; verified by `detect()`).  Slice
-/// sizes are checked by `PackedQuantGemm::matmul_q8q`.
+/// Requires neon (baseline on aarch64; verified by `detect()`).  The
+/// caller must uphold the dispatch contract validated by
+/// `contract::check_q8q_dispatch`: `qpanels` holds
+/// `ceil(m / PACK_MR) * PACK_MR * kp` bytes with `kp` even and within
+/// the i32-exactness bound, `xq` holds `n * kp` bytes,
+/// `p0 <= p1 <= ceil(m / PACK_MR)`, `crow0 == p0 * PACK_MR`, and `c32`
+/// covers exactly the range's rows.
 #[target_feature(enable = "neon")]
 #[allow(clippy::too_many_arguments)]
 pub(crate) unsafe fn matmul_q8q(
@@ -221,11 +276,16 @@ pub(crate) unsafe fn matmul_q8q(
         let mut j0 = 0;
         while j0 < n {
             let nr = NR.min(n - j0);
-            match nr {
-                4 => kq4(panel, xp, kp, j0, pm, &mut tile),
-                3 => kq3(panel, xp, kp, j0, pm, &mut tile),
-                2 => kq2(panel, xp, kp, j0, pm, &mut tile),
-                _ => kq1(panel, xp, kp, j0, pm, &mut tile),
+            // SAFETY: `panel` starts a full `kp * PACK_MR`-byte q8q
+            // panel and `xq` holds n * kp bytes with j0 + nr <= n —
+            // exactly each kernel's documented requirement.
+            unsafe {
+                match nr {
+                    4 => kq4(panel, xp, kp, j0, pm, &mut tile),
+                    3 => kq3(panel, xp, kp, j0, pm, &mut tile),
+                    2 => kq2(panel, xp, kp, j0, pm, &mut tile),
+                    _ => kq1(panel, xp, kp, j0, pm, &mut tile),
+                }
             }
             store_tile_i32(c32, crow0, &tile, j0, nr, pi * PACK_MR, m, n);
             j0 += nr;
@@ -263,14 +323,20 @@ macro_rules! def_kern_q4 {
             let mut acc = [[zero; 4]; $nr];
             let mut frames = [xq; $nr];
             for (jj, f) in frames.iter_mut().enumerate() {
-                *f = xq.add((j0 + jj) * kp);
+                // SAFETY: caller guarantees `xq` holds
+                // `(j0 + $nr) * kp` bytes, so frame `j0 + jj` starts
+                // in bounds.
+                *f = unsafe { xq.add((j0 + jj) * kp) };
             }
             let mut g0 = 0usize;
             while g0 < kp / 2 {
                 let ge = (g0 + SPARSE_KB / 2).min(kp / 2);
                 if kb_active(pm, g0 / (SPARSE_KB / 2)) {
                     for g in g0..ge {
-                        let raw = vld1q_s8(panel.add(g * 16) as *const i8);
+                        // SAFETY: g < kp / 2 and the nibble-packed
+                        // panel holds (kp / 2) * 16 bytes, so the
+                        // 16-byte load covers exactly pair-group g.
+                        let raw = unsafe { vld1q_s8(panel.add(g * 16) as *const i8) };
                         let lo = vshrq_n_s8::<4>(vshlq_n_s8::<4>(raw));
                         let hi = vshrq_n_s8::<4>(raw);
                         // Rows 0-7 / 8-15, bytes pair-interleaved
@@ -278,7 +344,12 @@ macro_rules! def_kern_q4 {
                         let pa = vzip1q_s8(lo, hi);
                         let pb = vzip2q_s8(lo, hi);
                         for jj in 0..$nr {
-                            let pair = (frames[jj].add(2 * g) as *const u16).read_unaligned();
+                            // SAFETY: frames[jj] points at a kp-byte
+                            // frame and 2 * g + 1 < kp; unaligned u16
+                            // read of the adjacent byte pair.
+                            let pair = unsafe {
+                                (frames[jj].add(2 * g) as *const u16).read_unaligned()
+                            };
                             let xp = vreinterpret_s8_u16(vdup_n_u16(pair));
                             acc[jj][0] = vpadalq_s16(acc[jj][0], vmull_s8(vget_low_s8(pa), xp));
                             acc[jj][1] = vpadalq_s16(acc[jj][1], vmull_s8(vget_high_s8(pa), xp));
@@ -291,7 +362,9 @@ macro_rules! def_kern_q4 {
             }
             for jj in 0..$nr {
                 for l in 0..4 {
-                    vst1q_s32(tile[jj].as_mut_ptr().add(4 * l), acc[jj][l]);
+                    // SAFETY: tile[jj] is [i32; PACK_MR] = 16 lanes;
+                    // the four 4-lane stores cover elements 0..16.
+                    unsafe { vst1q_s32(tile[jj].as_mut_ptr().add(4 * l), acc[jj][l]) };
                 }
             }
         }
@@ -307,8 +380,13 @@ def_kern_q4!(k44, 4);
 /// sub-slice contract as [`matmul`], writing raw i32 accumulators.
 ///
 /// # Safety
-/// Requires neon (baseline on aarch64; verified by `detect()`).  Slice
-/// sizes are checked by `PackedQuantGemm::matmul_q4`.
+/// Requires neon (baseline on aarch64; verified by `detect()`).  The
+/// caller must uphold the dispatch contract validated by
+/// `contract::check_q4_dispatch`: `q4panels` holds
+/// `ceil(m / PACK_MR) * (PACK_MR / 2) * kp` bytes with `kp` even and
+/// within the q4 i32-exactness bound, `xq` holds `n * kp` bytes,
+/// `p0 <= p1 <= ceil(m / PACK_MR)`, `crow0 == p0 * PACK_MR`, and `c32`
+/// covers exactly the range's rows.
 #[target_feature(enable = "neon")]
 #[allow(clippy::too_many_arguments)]
 pub(crate) unsafe fn matmul_q4(
@@ -332,11 +410,16 @@ pub(crate) unsafe fn matmul_q4(
         let mut j0 = 0;
         while j0 < n {
             let nr = NR.min(n - j0);
-            match nr {
-                4 => k44(panel, xp, kp, j0, pm, &mut tile),
-                3 => k43(panel, xp, kp, j0, pm, &mut tile),
-                2 => k42(panel, xp, kp, j0, pm, &mut tile),
-                _ => k41(panel, xp, kp, j0, pm, &mut tile),
+            // SAFETY: `panel` starts a full `(kp / 2) * 16`-byte q4
+            // panel and `xq` holds n * kp bytes with j0 + nr <= n —
+            // exactly each kernel's documented requirement.
+            unsafe {
+                match nr {
+                    4 => k44(panel, xp, kp, j0, pm, &mut tile),
+                    3 => k43(panel, xp, kp, j0, pm, &mut tile),
+                    2 => k42(panel, xp, kp, j0, pm, &mut tile),
+                    _ => k41(panel, xp, kp, j0, pm, &mut tile),
+                }
             }
             store_tile_i32(c32, crow0, &tile, j0, nr, pi * PACK_MR, m, n);
             j0 += nr;

@@ -22,6 +22,7 @@
 //!   for the calibrated small-`N` crossover, and the fallback path when
 //!   that probe finds `gemm_bt` faster on the host.
 
+pub mod contract;
 pub mod fastmath;
 pub mod gemm;
 pub mod kernels;
@@ -29,6 +30,7 @@ pub mod matrix;
 pub mod pack;
 pub mod pool;
 
+pub use contract::ContractError;
 pub use fastmath::{fast_exp, fast_sigmoid, fast_tanh};
 pub use gemm::{
     add_row_bias, dot, gemm, gemm_acc, gemm_bt, gemm_bt_acc, gemm_naive, gemv, gemv_acc,

@@ -28,11 +28,23 @@
 //! `MTSRNN_THREADS` env > `std::thread::available_parallelism()`.
 //! `threads == 1` means no workers exist and every `run` is an inline
 //! serial loop — the exact legacy single-threaded path.
+//!
+//! The claim/steal/remaining/condvar protocol below imports its
+//! primitives from [`crate::sync`] so `RUSTFLAGS="--cfg loom"` can swap
+//! them for the miniloom scheduler: `tests/loom_pool.rs` exhaustively
+//! model-checks claim races, join-before-drain, panic-during-steal and
+//! shutdown.  The process-global registry at the bottom stays on `std`
+//! — it is not part of the modeled protocol.
 
+// This module is on the crate's unsafe allowlist (see lib.rs and
+// docs/UNSAFE.md): it owns the SendPtr escape hatch and the
+// lifetime-erased job closure.
+#![allow(unsafe_code)]
+
+use crate::sync::atomic::{AtomicUsize, Ordering};
+use crate::sync::thread::JoinHandle;
+use crate::sync::{Arc, Condvar, Mutex};
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
-use std::thread::JoinHandle;
 
 /// Below this many multiply-adds a GEMM is not worth dispatching to the
 /// pool: wake + join costs a few microseconds, which only pays for
@@ -128,7 +140,7 @@ impl ThreadPool {
         let workers = (1..threads)
             .map(|i| {
                 let sh = shared.clone();
-                std::thread::Builder::new()
+                crate::sync::thread::Builder::new()
                     .name(format!("mtsrnn-w{i}"))
                     .spawn(move || worker_loop(&sh))
                     .expect("spawn pool worker")
@@ -167,9 +179,11 @@ impl ThreadPool {
         }
         // Erase the closure's borrow lifetime for storage in the job
         // header (the field's trait-object pointer defaults to
-        // `'static`).  SAFETY: `run_dyn` does not return until
-        // `remaining == 0`, and workers only dereference `func` for
-        // claimed task indices, so the borrow outlives every use.
+        // `'static`).
+        // SAFETY: `run_dyn` does not return until `remaining == 0`, and
+        // workers only dereference `func` for claimed task indices, so
+        // the borrow outlives every use.  `tests/loom_pool.rs` model-
+        // checks exactly this property (no claim after the join).
         let func: &'static (dyn Fn(usize) + Sync) = unsafe {
             std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(f)
         };
@@ -271,12 +285,15 @@ fn run_tasks(shared: &Shared, job: &Job) {
 // Process-wide pool
 // ---------------------------------------------------------------------
 
-static GLOBAL: Mutex<Option<Arc<ThreadPool>>> = Mutex::new(None);
+// Explicitly `std` (not `crate::sync`): statics need const
+// constructors, and the global registry is not part of the
+// loom-modeled protocol.
+static GLOBAL: std::sync::Mutex<Option<Arc<ThreadPool>>> = std::sync::Mutex::new(None);
 
 /// Lock-free snapshot of the process pool's size (0 = not yet built).
 /// Hot paths consult this before deciding to parallelize, so a
 /// single-threaded process never touches the `GLOBAL` mutex per GEMM.
-static THREADS_HINT: AtomicUsize = AtomicUsize::new(0);
+static THREADS_HINT: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsize::new(0);
 
 fn default_threads() -> usize {
     match std::env::var("MTSRNN_THREADS") {

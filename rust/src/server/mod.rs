@@ -125,6 +125,8 @@ pub fn spawn_inference<B: BlockBackend + Send + 'static>(
     std::thread::Builder::new()
         .name("mtsrnn-inference".into())
         .spawn(move || inference_loop(coordinator, rx, tick_every))
+        // lint: infallible — the one inference thread spawns at startup,
+        // before any request exists; if the OS is out of threads, abort.
         .expect("spawn inference thread");
     ServerHandle { jobs: tx }
 }

@@ -1,0 +1,45 @@
+//! Synchronization primitive aliases for the model-checking lane.
+//!
+//! The two concurrent protocols in this crate — the thread pool's
+//! claim/steal/remaining/condvar protocol ([`crate::linalg::pool`]) and
+//! the wavefront `progress[]` publish protocol
+//! ([`crate::engine::wavefront`]) — import their atomics, locks and
+//! thread handles from here instead of `std` directly.  A normal build
+//! re-exports `std` types (zero cost, identical codegen); building with
+//! `RUSTFLAGS="--cfg loom"` swaps in the vendored miniloom scheduler so
+//! `tests/loom_pool.rs` can exhaustively explore their interleavings.
+//!
+//! Everything *outside* those two protocols (the process-global pool
+//! registry, env handling, engines) deliberately keeps using `std`
+//! paths: only the modeled protocols need scheduling points, and loom
+//! primitives are only valid inside `loom::model`.
+
+#[cfg(not(loom))]
+pub use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+#[cfg(loom)]
+pub use loom::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+pub mod atomic {
+    #[cfg(not(loom))]
+    pub use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+
+    #[cfg(loom)]
+    pub use loom::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+}
+
+pub mod thread {
+    #[cfg(not(loom))]
+    pub use std::thread::{yield_now, Builder, JoinHandle};
+
+    #[cfg(loom)]
+    pub use loom::thread::{yield_now, Builder, JoinHandle};
+}
+
+pub mod hint {
+    #[cfg(not(loom))]
+    pub use std::hint::spin_loop;
+
+    #[cfg(loom)]
+    pub use loom::hint::spin_loop;
+}

@@ -1,0 +1,288 @@
+//! Negative tests for the checked kernel contracts
+//! (`linalg::contract`): every class of precondition violation must be
+//! rejected with the precise error naming the argument at fault.
+//!
+//! The validators themselves are compiled unconditionally, so these
+//! tests run in every configuration; the dispatch wiring (validators
+//! invoked inside `kernels::matmul*`) is active under
+//! `debug_assertions` or `--features checks` and is covered by the
+//! crate-internal tests in `linalg/kernels/mod.rs`.
+
+use mtsrnn::linalg::contract::{
+    check_epilogue, check_f32_dispatch, check_q4_dispatch, check_q8q_dispatch,
+    check_range_output, check_simd, num_panels, ContractError, FrameView, MaskView, PanelView,
+    Q4PanelView, QFrameView, QPanelView, Q4_MAX_K, Q8_MAX_K,
+};
+use mtsrnn::linalg::{Act, Epilogue, Simd, PACK_MR, SPARSE_KB};
+
+#[test]
+fn f32_panel_wrong_stride_is_rejected() {
+    let (m, k) = (20, 7);
+    let np = num_panels(m);
+    // One float short of the required np * PACK_MR * k storage.
+    let panels = vec![0.0f32; np * PACK_MR * k - 1];
+    let err = PanelView::new(&panels, m, k).unwrap_err();
+    match err {
+        ContractError::PanelLen { expected, got, np: enp, stride } => {
+            assert_eq!(expected, np * PACK_MR * k);
+            assert_eq!(got, panels.len());
+            assert_eq!(enp, np);
+            assert_eq!(stride, PACK_MR * k);
+        }
+        other => panic!("wrong error: {other}"),
+    }
+    // The message names both numbers.
+    let msg = ContractError::PanelLen { expected: 224, got: 223, np: 2, stride: 112 }.to_string();
+    assert!(msg.contains("224") && msg.contains("223"), "{msg}");
+}
+
+#[test]
+fn q8q_panel_rejects_odd_kp_and_oversized_k() {
+    assert!(matches!(
+        QPanelView::new(&[], 16, 7).unwrap_err(),
+        ContractError::OddKp { kp: 7 }
+    ));
+    // kp just past the i32-exactness bound (checked before length, so
+    // no giant allocation is needed to exercise it).
+    let kp_over = (Q8_MAX_K + 2).next_multiple_of(2);
+    assert!(matches!(
+        QPanelView::new(&[], 16, kp_over).unwrap_err(),
+        ContractError::KTooLarge { family: "q8q", .. }
+    ));
+    // Wrong stride: q8q panels are PACK_MR * kp i8 per panel.
+    let bad = vec![0i8; PACK_MR * 4 + 1];
+    assert!(matches!(
+        QPanelView::new(&bad, 16, 4).unwrap_err(),
+        ContractError::PanelLen { .. }
+    ));
+}
+
+#[test]
+fn q4_panel_rejects_oversized_k_and_wrong_stride() {
+    let kp_over = (Q4_MAX_K + 2).next_multiple_of(2);
+    assert!(matches!(
+        Q4PanelView::new(&[], 16, kp_over).unwrap_err(),
+        ContractError::KTooLarge { family: "q4", .. }
+    ));
+    // q4 stride is (PACK_MR / 2) * kp bytes — a q8q-sized buffer must
+    // be rejected, not silently half-read.
+    let q8q_sized = vec![0u8; PACK_MR * 4];
+    assert!(matches!(
+        Q4PanelView::new(&q8q_sized, 16, 4).unwrap_err(),
+        ContractError::PanelLen { .. }
+    ));
+    let ok = vec![0u8; (PACK_MR / 2) * 4];
+    assert!(Q4PanelView::new(&ok, 16, 4).is_ok());
+}
+
+#[test]
+fn frame_buffer_length_is_exact() {
+    assert!(FrameView::new(&[0.0; 12], 3, 4).is_ok());
+    assert!(matches!(
+        FrameView::new(&[0.0; 11], 3, 4).unwrap_err(),
+        ContractError::FrameLen { expected: 12, got: 11, .. }
+    ));
+    // Oversized is also rejected: the dispatchers take exact sub-slices.
+    assert!(FrameView::new(&[0.0; 13], 3, 4).is_err());
+}
+
+#[test]
+fn quantized_frames_need_both_broadcast_forms() {
+    let xq = vec![0i8; 3 * 4];
+    let qpair = vec![0i32; 3 * 2];
+    assert!(QFrameView::new(&xq, &qpair, 3, 4).is_ok());
+    assert!(matches!(
+        QFrameView::new(&xq[..11], &qpair, 3, 4).unwrap_err(),
+        ContractError::FrameLen { .. }
+    ));
+    assert!(matches!(
+        QFrameView::new(&xq, &qpair[..5], 3, 4).unwrap_err(),
+        ContractError::PairLen { expected: 6, got: 5 }
+    ));
+}
+
+#[test]
+fn short_mask_is_rejected() {
+    // m = 40 rows -> 3 panels; k = 100 -> nkb = ceil(100 / 32) = 4
+    // blocks -> 1 word per panel -> 3 words total.
+    let (m, k) = (40, 100);
+    let nkb = k.div_ceil(SPARSE_KB);
+    let wpp = nkb.div_ceil(64);
+    let words = vec![u64::MAX; num_panels(m) * wpp];
+    assert!(MaskView::new(&words, wpp, m, k).is_ok());
+    // One word short.
+    assert!(matches!(
+        MaskView::new(&words[..words.len() - 1], wpp, m, k).unwrap_err(),
+        ContractError::MaskLen { .. }
+    ));
+    // Inconsistent words-per-panel (e.g. mask built for a different k).
+    assert!(matches!(
+        MaskView::new(&words, wpp + 1, m, k).unwrap_err(),
+        ContractError::MaskWordsPerPanel { .. }
+    ));
+}
+
+#[test]
+fn panel_range_and_output_disjointness() {
+    let (m, n) = (40, 4); // 3 panels: rows 0..16, 16..32, 32..40
+    let np = num_panels(m);
+    // In-range splits with exact sub-slices pass.
+    assert!(check_range_output(m, n, 0, 1, 0, 16 * n).is_ok());
+    assert!(check_range_output(m, n, 1, 2, 16, 16 * n).is_ok());
+    assert!(check_range_output(m, n, 2, 3, 32, 8 * n).is_ok()); // ragged tail
+    assert!(check_range_output(m, n, 0, np, 0, m * n).is_ok());
+    // p1 past the panel count.
+    assert!(matches!(
+        check_range_output(m, n, 0, np + 1, 0, m * n).unwrap_err(),
+        ContractError::PanelRange { .. }
+    ));
+    // Inverted range.
+    assert!(matches!(
+        check_range_output(m, n, 2, 1, 32, 0).unwrap_err(),
+        ContractError::PanelRange { .. }
+    ));
+    // crow0 off the panel boundary would alias the neighbour's rows.
+    assert!(matches!(
+        check_range_output(m, n, 1, 2, 15, 16 * n).unwrap_err(),
+        ContractError::OutputRow0 { crow0: 15, expected: 16 }
+    ));
+    // Output one row too long overlaps the next range's stripe.
+    assert!(matches!(
+        check_range_output(m, n, 0, 1, 0, 17 * n).unwrap_err(),
+        ContractError::OutputLen { .. }
+    ));
+}
+
+#[test]
+fn epilogue_shapes_are_validated() {
+    let bias = vec![0.0f32; 48];
+    assert!(check_epilogue(&Epilogue::with_bias(&bias), 48).is_ok());
+    assert!(matches!(
+        check_epilogue(&Epilogue::with_bias(&bias), 47).unwrap_err(),
+        ContractError::BiasLen { expected: 47, got: 48 }
+    ));
+    // 3 activation segments must divide m evenly.
+    let acts = [Act::Tanh, Act::Sigmoid, Act::Sigmoid];
+    let bias48 = vec![0.0f32; 48];
+    assert!(check_epilogue(&Epilogue::fused(&bias48, &acts), 48).is_ok());
+    let bias50 = vec![0.0f32; 50];
+    assert!(matches!(
+        check_epilogue(&Epilogue::fused(&bias50, &acts), 50).unwrap_err(),
+        ContractError::ActSegments { m: 50, nacts: 3 }
+    ));
+}
+
+#[test]
+fn foreign_simd_is_rejected_per_target() {
+    assert!(check_simd(Simd::Portable).is_ok());
+    assert_eq!(check_simd(Simd::Avx2).is_ok(), cfg!(target_arch = "x86_64"));
+    assert_eq!(check_simd(Simd::Neon).is_ok(), cfg!(target_arch = "aarch64"));
+}
+
+#[test]
+fn full_dispatch_checks_compose() {
+    // A correct f32 dispatch argument set passes end to end...
+    let (m, k, n) = (20, 37, 5);
+    let np = num_panels(m);
+    let panels = vec![0.0f32; np * PACK_MR * k];
+    let x = vec![0.0f32; n * k];
+    let nkb = k.div_ceil(SPARSE_KB);
+    let wpp = nkb.div_ceil(64);
+    let words = vec![u64::MAX; np * wpp];
+    let ok = check_f32_dispatch(
+        Simd::Portable,
+        &panels,
+        m * n,
+        0,
+        &x,
+        m,
+        k,
+        n,
+        &Epilogue::NONE,
+        Some((&words, wpp)),
+        0,
+        np,
+    );
+    assert!(ok.is_ok(), "{ok:?}");
+    // ...and the first broken argument (the mask) is the one reported.
+    let err = check_f32_dispatch(
+        Simd::Portable,
+        &panels,
+        m * n,
+        0,
+        &x,
+        m,
+        k,
+        n,
+        &Epilogue::NONE,
+        Some((&words[..words.len() - 1], wpp)),
+        0,
+        np,
+    )
+    .unwrap_err();
+    assert!(matches!(err, ContractError::MaskLen { .. }), "{err}");
+
+    // Same composition for the integer families, kp = k rounded even.
+    let kp = k.next_multiple_of(2);
+    let qpanels = vec![0i8; np * PACK_MR * kp];
+    let q4panels = vec![0u8; np * (PACK_MR / 2) * kp];
+    let xq = vec![0i8; n * kp];
+    let qpair = vec![0i32; n * kp / 2];
+    let q8q_ok = check_q8q_dispatch(
+        Simd::Portable,
+        &qpanels,
+        m * n,
+        0,
+        &xq,
+        &qpair,
+        m,
+        kp,
+        n,
+        Some((&words, wpp)),
+        0,
+        np,
+    );
+    assert!(q8q_ok.is_ok(), "{q8q_ok:?}");
+    let q4_ok = check_q4_dispatch(
+        Simd::Portable,
+        &q4panels,
+        m * n,
+        0,
+        &xq,
+        &qpair,
+        m,
+        kp,
+        n,
+        Some((&words, wpp)),
+        0,
+        np,
+    );
+    assert!(q4_ok.is_ok(), "{q4_ok:?}");
+    // Swapping the q4 panel buffer for the q8q-sized one is caught.
+    assert!(matches!(
+        check_q4_dispatch(
+            Simd::Portable,
+            bytemuck_cast(&qpanels),
+            m * n,
+            0,
+            &xq,
+            &qpair,
+            m,
+            kp,
+            n,
+            Some((&words, wpp)),
+            0,
+            np
+        )
+        .unwrap_err(),
+        ContractError::PanelLen { .. }
+    ));
+}
+
+/// View an i8 slice as u8 (test helper; std-only, no bytemuck dep).
+fn bytemuck_cast(v: &[i8]) -> &[u8] {
+    // An i8 -> u8 reinterpret is always valid; do it safely per element
+    // to keep this test crate free of unsafe.
+    // (Allocation is fine in a test.)
+    Box::leak(v.iter().map(|&b| b as u8).collect::<Vec<u8>>().into_boxed_slice())
+}

@@ -1,0 +1,267 @@
+//! The Miri lane: small-shape end-to-end exercises of every unsafe
+//! subsystem through the public API, sized for the interpreter's ~100x
+//! slowdown.  CI runs this file under
+//! `cargo +nightly miri test --test miri_suite` with
+//! `MTSRNN_FORCE_PORTABLE=1` (intrinsics don't exist under Miri) and
+//! `MTSRNN_THREADS=2` (so the pool-fanned sweeps and the worker-pool
+//! unsafe — `SendPtr`, the job transmute — run under the borrow
+//! tracker too).
+//!
+//! Every test doubles as a plain parity test on the host, so the file
+//! is also part of the normal `cargo test` run.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use mtsrnn::decode::{render_tokens, CtcDecoder, CtcGreedy, DecoderSpec};
+use mtsrnn::linalg::{
+    Act, Epilogue, PackedGemm, PackedQuantGemm, PanelMask, QuantScratch, Simd, ThreadPool,
+};
+
+/// Tiny deterministic value stream (no rand dep): xorshift mapped to
+/// roughly [-1, 1].
+fn lcg(state: &mut u64) -> f32 {
+    *state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+    ((*state >> 33) as f32 / (1u64 << 31) as f32) - 1.0
+}
+
+/// `C[m, n] = A[m, k] @ X[n, k]^T`, the naive reference.
+fn naive_matmul(a: &[f32], x: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut c = vec![0.0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut s = 0.0f32;
+            for kk in 0..k {
+                s += a[i * k + kk] * x[j * k + kk];
+            }
+            c[i * n + j] = s;
+        }
+    }
+    c
+}
+
+/// Replicates `quantize_frames`: per-frame symmetric i8 quantization
+/// with `s = max|x| / 127` (1.0 for an all-zero frame).
+fn quantize_ref(x: &[f32], n: usize, k: usize) -> (Vec<i8>, Vec<f32>) {
+    let mut q = vec![0i8; n * k];
+    let mut scales = vec![0.0f32; n];
+    for j in 0..n {
+        let frame = &x[j * k..(j + 1) * k];
+        let max = frame.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        let s = if max > 0.0 { max / 127.0 } else { 1.0 };
+        scales[j] = s;
+        for (dst, &v) in q[j * k..(j + 1) * k].iter_mut().zip(frame) {
+            *dst = (v / s).round().clamp(-127.0, 127.0) as i8;
+        }
+    }
+    (q, scales)
+}
+
+/// Integer reference for the quantized paths: exact i32 accumulation
+/// of `qw[m, k] @ qx[n, k]^T`.
+fn naive_matmul_i32(qw: &[i8], qx: &[i8], m: usize, k: usize, n: usize) -> Vec<i32> {
+    let mut c = vec![0i32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut s = 0i32;
+            for kk in 0..k {
+                s += qw[i * k + kk] as i32 * qx[j * k + kk] as i32;
+            }
+            c[i * n + j] = s;
+        }
+    }
+    c
+}
+
+fn assert_close(got: &[f32], want: &[f32], tol: f32, what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert!(
+            (g - w).abs() <= tol,
+            "{what}: element {i}: got {g}, want {w}"
+        );
+    }
+}
+
+#[test]
+fn f32_packed_matmul_matches_naive() {
+    let (m, k, n) = (20, 10, 3);
+    let mut st = 7u64;
+    let a: Vec<f32> = (0..m * k).map(|_| lcg(&mut st)).collect();
+    let x: Vec<f32> = (0..n * k).map(|_| lcg(&mut st)).collect();
+    let g = PackedGemm::with_dispatch(&a, m, k, Simd::Portable, 0);
+
+    let mut c = vec![0.0f32; m * n];
+    g.matmul(&mut c, &x, n, false, &Epilogue::NONE);
+    let want = naive_matmul(&a, &x, m, k, n);
+    assert_close(&c, &want, 1e-4, "plain");
+
+    // acc = true adds onto the existing C.
+    g.matmul(&mut c, &x, n, true, &Epilogue::NONE);
+    let want2: Vec<f32> = want.iter().map(|v| 2.0 * v).collect();
+    assert_close(&c, &want2, 2e-4, "accumulating");
+
+    // Fused bias + 2-segment activation epilogue (m = 20 -> rows 0..10
+    // tanh, rows 10..20 sigmoid), replicated with the crate's own
+    // Act::apply so the fast-math curves match bit for bit.
+    let bias: Vec<f32> = (0..m).map(|i| i as f32 * 0.01).collect();
+    let acts = [Act::Tanh, Act::Sigmoid];
+    let mut cf = vec![0.0f32; m * n];
+    g.matmul(&mut cf, &x, n, false, &Epilogue::fused(&bias, &acts));
+    let seg = m / acts.len();
+    for i in 0..m {
+        for j in 0..n {
+            let v = acts[i / seg].apply(want[i * n + j] + bias[i]);
+            let got = cf[i * n + j];
+            assert!((got - v).abs() <= 1e-4, "fused [{i},{j}]: {got} vs {v}");
+        }
+    }
+}
+
+#[test]
+fn sparse_masked_matmul_matches_naive() {
+    // 3 row panels x 3 k-blocks of 32; zero out whole (panel, block)
+    // tiles so PanelMask finds skippable work, then check the skipping
+    // kernel still produces dense-equal values.
+    let (m, k, n) = (40, 96, 2);
+    let mut st = 11u64;
+    let mut a: Vec<f32> = (0..m * k).map(|_| lcg(&mut st)).collect();
+    for row in 0..m {
+        // Panel 0 (rows 0..16): kill block 1; panel 2 (rows 32..40):
+        // kill blocks 0 and 2.
+        let dead: &[usize] = match row / 16 {
+            0 => &[1],
+            2 => &[0, 2],
+            _ => &[],
+        };
+        for &kb in dead {
+            a[row * k + kb * 32..row * k + (kb + 1) * 32].fill(0.0);
+        }
+    }
+    assert!(
+        PanelMask::from_f32(&a, m, k).is_some(),
+        "test matrix must actually have inactive blocks"
+    );
+    let x: Vec<f32> = (0..n * k).map(|_| lcg(&mut st)).collect();
+    let g = PackedGemm::with_dispatch(&a, m, k, Simd::Portable, 0);
+    let mut c = vec![0.0f32; m * n];
+    g.matmul(&mut c, &x, n, false, &Epilogue::NONE);
+    assert_close(&c, &naive_matmul(&a, &x, m, k, n), 1e-3, "sparse");
+}
+
+#[test]
+fn q8q_integer_path_matches_scalar_reference() {
+    let (m, k, n) = (20, 9, 3); // odd k exercises the kp padding column
+    let mut st = 13u64;
+    let qw: Vec<i8> = (0..m * k).map(|_| (lcg(&mut st) * 127.0) as i8).collect();
+    let scales: Vec<f32> = (0..m).map(|i| 0.01 + i as f32 * 1e-4).collect();
+    let x: Vec<f32> = (0..n * k).map(|_| lcg(&mut st)).collect();
+
+    let g = PackedQuantGemm::with_dispatch_q8q(&qw, &scales, m, k, Simd::Portable, 0);
+    let mut scratch = QuantScratch::new();
+    let mut c32 = vec![0i32; m * n];
+    g.matmul_i32(&mut c32, &x, n, &mut scratch);
+
+    let (qx, xscales) = quantize_ref(&x, n, k);
+    assert_eq!(c32, naive_matmul_i32(&qw, &qx, m, k, n), "q8q i32");
+    assert_close(scratch.col_scales(), &xscales, 0.0, "column scales");
+
+    // The dequantized front door applies exactly
+    // `acc * (row_scale * col_scale) + bias` per element.
+    let bias: Vec<f32> = (0..m).map(|i| -0.5 + i as f32 * 0.05).collect();
+    let mut c = vec![0.0f32; m * n];
+    g.matmul_q8q(&mut c, &x, n, false, &Epilogue::with_bias(&bias), &mut scratch);
+    for i in 0..m {
+        for j in 0..n {
+            let want = c32[i * n + j] as f32 * (scales[i] * xscales[j]) + bias[i];
+            let got = c[i * n + j];
+            assert!((got - want).abs() <= 1e-6, "dequant [{i},{j}]: {got} vs {want}");
+        }
+    }
+}
+
+#[test]
+fn q4_integer_path_matches_scalar_reference() {
+    let (m, k, n) = (20, 11, 2);
+    let mut st = 17u64;
+    // q4 weights live in the nibble range [-7, 7].
+    let qw: Vec<i8> = (0..m * k).map(|_| (lcg(&mut st) * 7.0) as i8).collect();
+    let scales: Vec<f32> = (0..m).map(|i| 0.1 + i as f32 * 1e-3).collect();
+    let x: Vec<f32> = (0..n * k).map(|_| lcg(&mut st)).collect();
+
+    let g = PackedQuantGemm::with_dispatch_q4(&qw, &scales, m, k, Simd::Portable, 0);
+    let mut scratch = QuantScratch::new();
+    let mut c32 = vec![0i32; m * n];
+    g.matmul_i32(&mut c32, &x, n, &mut scratch);
+
+    let (qx, _) = quantize_ref(&x, n, k);
+    assert_eq!(c32, naive_matmul_i32(&qw, &qx, m, k, n), "q4 i32");
+}
+
+#[test]
+fn thread_pool_runs_and_reuses_under_miri() {
+    let pool = ThreadPool::new(2);
+    let hits = AtomicUsize::new(0);
+    pool.run(5, |ti| {
+        hits.fetch_add(ti + 1, Ordering::SeqCst);
+    });
+    assert_eq!(hits.load(Ordering::SeqCst), 15);
+    // Second job on the same pool: the generation counter and the
+    // parked-worker wakeup survive a full job cycle.
+    pool.run(3, |_| {
+        hits.fetch_add(100, Ordering::SeqCst);
+    });
+    assert_eq!(hits.load(Ordering::SeqCst), 315);
+}
+
+/// One frame of logits strongly preferring `class`.
+fn frame(vocab: usize, class: usize) -> Vec<f32> {
+    let mut f = vec![-4.0f32; vocab];
+    f[class] = 4.0;
+    f
+}
+
+#[test]
+fn greedy_decode_collapses_blanks_and_repeats() {
+    // 27-class letter head; argmax path c a a <blank> a t collapses to
+    // "caat" (classes 1..=26 render as 'a'..='z', 0 is the blank — the
+    // repeat survives because a blank separates the two 'a' runs).
+    let vocab = 27;
+    let path = [3usize, 1, 1, 0, 1, 20];
+    let mut logits = Vec::new();
+    for &c in &path {
+        logits.extend(frame(vocab, c));
+    }
+    let mut d = CtcGreedy::new(vocab);
+    d.step(&logits).expect("well-shaped slab");
+    assert_eq!(d.partial(), &[3, 1, 1, 20]);
+    assert_eq!(render_tokens(d.partial()), "caat");
+    assert_eq!(d.frames_decoded(), path.len() as u64);
+    // Shape errors surface as Err, never a panic.
+    assert!(d.step(&logits[..vocab + 1]).is_err());
+}
+
+#[test]
+fn beam_decode_streaming_matches_batch() {
+    let vocab = 6;
+    let path = [2usize, 0, 2, 3, 3, 0, 1];
+    let mut logits = Vec::new();
+    for &c in &path {
+        logits.extend(frame(vocab, c));
+    }
+
+    let mut batch = DecoderSpec::parse("beam:4")
+        .expect("valid spec")
+        .build(vocab)
+        .expect("vocab >= 2");
+    batch.step(&logits).expect("well-shaped slab");
+
+    let mut streamed = DecoderSpec::parse("beam:4").unwrap().build(vocab).unwrap();
+    for t in 0..path.len() {
+        streamed.step(&logits[t * vocab..(t + 1) * vocab]).expect("frame");
+    }
+
+    assert_eq!(streamed.partial(), batch.partial(), "streaming == batch");
+    assert_eq!(streamed.score(), batch.score());
+    // Clear argmax frames: the beam agrees with the collapsed path.
+    assert_eq!(batch.partial(), &[2, 2, 3, 1]);
+}

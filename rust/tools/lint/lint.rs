@@ -1,0 +1,361 @@
+//! mtsrnn-lint — the repo-policy gate CI runs next to fmt and clippy.
+//!
+//! Three policies over `rust/src/` (std-only, no syn — a small scanner
+//! strips comments and string/char literals so rules only ever match
+//! real code tokens):
+//!
+//! 1. **Unsafe allowlist.**  The `unsafe` keyword may appear only in
+//!    the audited modules listed in [`UNSAFE_ALLOWLIST`] (the SIMD
+//!    kernels, the panel packer's disjoint row splitter, the thread
+//!    pool, and the wavefront scheduler).  Everywhere else the crate is
+//!    `#![deny(unsafe_code)]`; this gate is the redundant check that
+//!    also catches new `#![allow(unsafe_code)]` opt-outs.
+//! 2. **SAFETY coverage.**  Every line containing an `unsafe` token in
+//!    an allowlisted file must have a `// SAFETY:` comment (or a
+//!    `# Safety` doc section for `unsafe fn` contracts) within the
+//!    [`SAFETY_WINDOW`] preceding lines.  100% coverage, no grandfather
+//!    clause — see `docs/UNSAFE.md` for the catalogued justifications.
+//! 3. **Serving-path unwrap ban.**  `.unwrap()` / `.expect(` are
+//!    forbidden in non-test code under `src/server/` and
+//!    `src/coordinator/` (request paths must degrade into typed
+//!    `Response` errors, not aborts).  Provably-infallible uses are
+//!    exempted by a `// lint: infallible — <why>` comment on the same
+//!    line or the two lines above; the reason is mandatory.
+//!
+//! Test code is excluded by the repo convention that `#[cfg(test)] mod`
+//! is the tail of a file: everything from the first `#[cfg(test)]` line
+//! to EOF is skipped for rule 3.
+//!
+//! Usage: `cargo run -p mtsrnn-lint [--root <dir>]` (default root:
+//! `src`, i.e. run it from `rust/`).  Exit code 1 on any violation.
+
+use std::path::{Path, PathBuf};
+
+/// Files (exact) and directory prefixes (trailing `/`) where `unsafe`
+/// is permitted.  Keep in sync with the `#![allow(unsafe_code)]`
+/// headers and `docs/UNSAFE.md`.
+const UNSAFE_ALLOWLIST: &[&str] = &[
+    "linalg/kernels/",
+    "linalg/pack.rs",
+    "linalg/pool.rs",
+    "engine/stack.rs",
+];
+
+/// Directories where rule 3 (unwrap/expect ban) applies.
+const NO_UNWRAP_DIRS: &[&str] = &["server/", "coordinator/"];
+
+/// How many lines above an `unsafe` token a SAFETY justification may
+/// sit (attributes, `#[target_feature]` stacks and multi-line comments
+/// push the keyword down from its comment).
+const SAFETY_WINDOW: usize = 15;
+
+const INFALLIBLE_MARKER: &str = "lint: infallible";
+
+fn main() {
+    let mut root = PathBuf::from("src");
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--root" => {
+                root = PathBuf::from(args.next().unwrap_or_else(|| {
+                    eprintln!("--root needs a value");
+                    std::process::exit(2);
+                }));
+            }
+            other => {
+                eprintln!("unknown argument: {other}");
+                std::process::exit(2);
+            }
+        }
+    }
+    if !root.is_dir() {
+        eprintln!("lint root {} is not a directory (run from rust/)", root.display());
+        std::process::exit(2);
+    }
+
+    let mut files = Vec::new();
+    collect_rs(&root, &mut files);
+    files.sort();
+
+    let mut violations = Vec::new();
+    for f in &files {
+        let src = match std::fs::read_to_string(f) {
+            Ok(s) => s,
+            Err(e) => {
+                violations.push(format!("{}: unreadable: {e}", f.display()));
+                continue;
+            }
+        };
+        let rel = f
+            .strip_prefix(&root)
+            .unwrap_or(f)
+            .to_string_lossy()
+            .replace('\\', "/");
+        check_file(&rel, &src, &mut violations);
+    }
+
+    if violations.is_empty() {
+        println!("mtsrnn-lint: {} files clean", files.len());
+    } else {
+        for v in &violations {
+            eprintln!("lint: {v}");
+        }
+        eprintln!("mtsrnn-lint: {} violation(s)", violations.len());
+        std::process::exit(1);
+    }
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) {
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(_) => return,
+    };
+    for e in entries.flatten() {
+        let p = e.path();
+        if p.is_dir() {
+            collect_rs(&p, out);
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            out.push(p);
+        }
+    }
+}
+
+fn check_file(rel: &str, src: &str, violations: &mut Vec<String>) {
+    let lines = scan(src);
+    let allowlisted = UNSAFE_ALLOWLIST
+        .iter()
+        .any(|a| rel == *a || (a.ends_with('/') && rel.starts_with(a)));
+
+    // First `#[cfg(test)]` line: everything after is test code.
+    let test_start = lines
+        .iter()
+        .position(|l| l.code.contains("#[cfg(test)]"))
+        .unwrap_or(lines.len());
+
+    for (i, line) in lines.iter().enumerate() {
+        let lineno = i + 1;
+
+        if has_word(&line.code, "unsafe") {
+            if !allowlisted {
+                violations.push(format!(
+                    "{rel}:{lineno}: `unsafe` outside the allowlist \
+                     (see tools/lint/lint.rs UNSAFE_ALLOWLIST and docs/UNSAFE.md)"
+                ));
+            } else {
+                let lo = i.saturating_sub(SAFETY_WINDOW);
+                let justified = lines[lo..=i].iter().any(|l| {
+                    l.comment.contains("SAFETY:") || l.comment.contains("# Safety")
+                });
+                if !justified {
+                    violations.push(format!(
+                        "{rel}:{lineno}: `unsafe` without a `// SAFETY:` comment \
+                         within the preceding {SAFETY_WINDOW} lines"
+                    ));
+                }
+            }
+        }
+
+        if !allowlisted && line.code.contains("#![allow(unsafe_code)]") {
+            violations.push(format!(
+                "{rel}:{lineno}: `#![allow(unsafe_code)]` outside the unsafe allowlist"
+            ));
+        }
+
+        let unwrap_banned = NO_UNWRAP_DIRS.iter().any(|d| rel.starts_with(d));
+        if unwrap_banned && i < test_start {
+            let hit = if line.code.contains(".unwrap()") {
+                Some(".unwrap()")
+            } else if line.code.contains(".expect(") {
+                Some(".expect(..)")
+            } else {
+                None
+            };
+            if let Some(what) = hit {
+                let lo = i.saturating_sub(2);
+                let exempt = lines[lo..=i]
+                    .iter()
+                    .any(|l| l.comment.contains(INFALLIBLE_MARKER));
+                if !exempt {
+                    violations.push(format!(
+                        "{rel}:{lineno}: {what} on the serving path — return a typed \
+                         error, or justify with `// {INFALLIBLE_MARKER} — <why>`"
+                    ));
+                }
+            }
+        }
+    }
+}
+
+/// One source line split into its code text (string/char literals and
+/// comments blanked to spaces) and its comment text.
+struct ScannedLine {
+    code: String,
+    comment: String,
+}
+
+/// `word` present in `code` with non-identifier chars (or edges) on
+/// both sides.
+fn has_word(code: &str, word: &str) -> bool {
+    let bytes = code.as_bytes();
+    let mut from = 0;
+    while let Some(p) = code[from..].find(word) {
+        let start = from + p;
+        let end = start + word.len();
+        let pre_ok = start == 0 || !is_ident(bytes[start - 1]);
+        let post_ok = end == bytes.len() || !is_ident(bytes[end]);
+        if pre_ok && post_ok {
+            return true;
+        }
+        from = end;
+    }
+    false
+}
+
+fn is_ident(b: u8) -> bool {
+    b == b'_' || b.is_ascii_alphanumeric()
+}
+
+/// Minimal Rust lexer: tracks line/block comments (nested), string,
+/// raw-string and char literals, and emits per-line code vs comment
+/// text.  Good enough to keyword-match without being fooled by
+/// `"unsafe"` in a string or `unsafe` in prose.
+fn scan(src: &str) -> Vec<ScannedLine> {
+    #[derive(PartialEq)]
+    enum St {
+        Code,
+        LineComment,
+        BlockComment(usize),
+        Str,
+        RawStr(usize),
+    }
+    let mut st = St::Code;
+    let mut out = Vec::new();
+    let mut code = String::new();
+    let mut comment = String::new();
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut i = 0;
+    while i < n {
+        let c = b[i];
+        if c == b'\n' {
+            if st == St::LineComment {
+                st = St::Code;
+            }
+            out.push(ScannedLine {
+                code: std::mem::take(&mut code),
+                comment: std::mem::take(&mut comment),
+            });
+            i += 1;
+            continue;
+        }
+        match st {
+            St::Code => {
+                if c == b'/' && i + 1 < n && b[i + 1] == b'/' {
+                    st = St::LineComment;
+                    i += 2;
+                } else if c == b'/' && i + 1 < n && b[i + 1] == b'*' {
+                    st = St::BlockComment(1);
+                    i += 2;
+                } else if c == b'"' {
+                    st = St::Str;
+                    code.push(' ');
+                    i += 1;
+                } else if c == b'r' && i + 1 < n && (b[i + 1] == b'"' || b[i + 1] == b'#') {
+                    // Raw string r"..", r#".."#, ... (not an ident tail:
+                    // previous char must not be identifier-ish).
+                    let prev_ident = !code.is_empty()
+                        && is_ident(*code.as_bytes().last().unwrap_or(&b' '));
+                    let mut j = i + 1;
+                    let mut hashes = 0;
+                    while j < n && b[j] == b'#' {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    if !prev_ident && j < n && b[j] == b'"' {
+                        st = St::RawStr(hashes);
+                        code.push(' ');
+                        i = j + 1;
+                    } else {
+                        code.push(c as char);
+                        i += 1;
+                    }
+                } else if c == b'\'' {
+                    // Char literal vs lifetime.  A char literal closes
+                    // with `'` after one (possibly escaped) char.
+                    if i + 2 < n && b[i + 1] == b'\\' {
+                        let mut j = i + 2;
+                        while j < n && b[j] != b'\'' && b[j] != b'\n' {
+                            j += 1;
+                        }
+                        code.push(' ');
+                        i = (j + 1).min(n);
+                    } else if i + 2 < n && b[i + 2] == b'\'' && b[i + 1] != b'\'' {
+                        code.push(' ');
+                        i += 3;
+                    } else {
+                        // Lifetime: keep as code (harmless).
+                        code.push(c as char);
+                        i += 1;
+                    }
+                } else {
+                    code.push(c as char);
+                    i += 1;
+                }
+            }
+            St::LineComment => {
+                comment.push(c as char);
+                i += 1;
+            }
+            St::BlockComment(depth) => {
+                if c == b'*' && i + 1 < n && b[i + 1] == b'/' {
+                    st = if depth == 1 {
+                        St::Code
+                    } else {
+                        St::BlockComment(depth - 1)
+                    };
+                    i += 2;
+                } else if c == b'/' && i + 1 < n && b[i + 1] == b'*' {
+                    st = St::BlockComment(depth + 1);
+                    i += 2;
+                } else {
+                    comment.push(c as char);
+                    i += 1;
+                }
+            }
+            St::Str => {
+                if c == b'\\' && i + 1 < n && b[i + 1] != b'\n' {
+                    i += 2;
+                } else if c == b'"' {
+                    st = St::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            St::RawStr(hashes) => {
+                if c == b'"' {
+                    let mut j = i + 1;
+                    let mut seen = 0;
+                    while j < n && b[j] == b'#' && seen < hashes {
+                        seen += 1;
+                        j += 1;
+                    }
+                    if seen == hashes {
+                        st = St::Code;
+                        i = j;
+                    } else {
+                        i += 1;
+                    }
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+    if !code.is_empty() || !comment.is_empty() {
+        out.push(ScannedLine { code, comment });
+    }
+    // Doc comments (`///`, `//!`) land in `comment` via the `//` arm,
+    // which is exactly where `# Safety` sections should be found.
+    out
+}

@@ -1,0 +1,867 @@
+//! miniloom — a minimal, std-only, vendored stand-in for the `loom`
+//! model checker.
+//!
+//! The repo builds fully offline (no crates.io), so instead of depending
+//! on the real `loom` crate the workspace vendors this subset.  It keeps
+//! loom's public shape — `loom::model(|| ..)`, `loom::thread`,
+//! `loom::sync::{Mutex, Condvar, atomic}`, `loom::hint::spin_loop` — so
+//! the model tests read exactly like loom tests and could move to the
+//! real crate unchanged if it is ever vendored.
+//!
+//! ## What it checks
+//!
+//! `model(f)` runs the closure to completion many times.  Every atomic
+//! operation, mutex acquire/release, condvar wait/notify, spawn, join
+//! and yield is a *scheduling point*: only one model thread runs at a
+//! time, and at each point a cooperative scheduler picks which thread
+//! runs next.  A depth-first search over those choices replays the
+//! closure under every distinct interleaving (bounded by a preemption
+//! budget, like loom's `LOOM_MAX_PREEMPTIONS` — default 2), and fails on:
+//!
+//! * **deadlock** — no thread is runnable but some are unfinished
+//!   (this is what catches lost condvar wakeups);
+//! * **livelock / runaway spin** — an execution exceeds the step budget;
+//! * **any panic** in model code (assertion failures in the test body).
+//!
+//! ## What it does NOT check
+//!
+//! Exploration is **sequentially consistent**: `Ordering` arguments are
+//! accepted for API compatibility but every atomic op executes as
+//! `SeqCst`.  Races that only manifest through Relaxed/Acquire/Release
+//! *reordering* are out of scope (the real loom models the C11 graph).
+//! What remains covered are the protocol-logic races this repo actually
+//! risks: lost wakeups, claim-counter double-claims, join-before-drain,
+//! use-after-free orderings, shutdown hangs.  `docs/UNSAFE.md` records
+//! this caveat next to the TSan lane that partially compensates for it.
+//!
+//! ## Model requirements
+//!
+//! * Create all loom `Mutex`/`Condvar`/atomics *inside* the model
+//!   closure (ids are per-execution).
+//! * Spin loops must call `loom::hint::spin_loop()` or
+//!   `loom::thread::yield_now()` so the scheduler can deschedule them.
+//! * Model code must be deterministic given the schedule (no time, no
+//!   randomness) — replay divergence is reported as a failure.
+
+use std::cell::RefCell;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::Ordering as StdOrdering;
+use std::sync::{Arc as StdArc, Condvar as StdCondvar, Mutex as StdMutex, MutexGuard as StdGuard};
+
+// ---------------------------------------------------------------------
+// Scheduler core
+// ---------------------------------------------------------------------
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Status {
+    Runnable,
+    BlockedMutex(usize),
+    BlockedCv(usize),
+    BlockedJoin(usize),
+    Finished,
+}
+
+/// One recorded scheduling decision: which thread ids were runnable and
+/// which of them (by index into `candidates`) was chosen.  The DFS
+/// backtracks by bumping the deepest `index` with untried alternatives.
+#[derive(Clone, Debug)]
+struct TraceEntry {
+    candidates: Vec<usize>,
+    index: usize,
+}
+
+struct State {
+    statuses: Vec<Status>,
+    active: usize,
+    trace: Vec<TraceEntry>,
+    pos: usize,
+    preemptions: usize,
+    max_preemptions: usize,
+    steps: usize,
+    max_steps: usize,
+    /// `mutexes[id]` = holder thread id, or None when free.
+    mutexes: Vec<Option<usize>>,
+    ncvs: usize,
+    finished: usize,
+    done: bool,
+    failure: Option<String>,
+}
+
+struct Scheduler {
+    state: StdMutex<State>,
+    cv: StdCondvar,
+}
+
+/// Internal panic payload used to unwind model threads once the
+/// execution has already been declared failed; never reported itself.
+struct ModelAbort;
+
+thread_local! {
+    static CURRENT: RefCell<Option<(StdArc<Scheduler>, usize)>> = const { RefCell::new(None) };
+}
+
+fn set_current(sched: StdArc<Scheduler>, id: usize) {
+    CURRENT.with(|c| *c.borrow_mut() = Some((sched, id)));
+}
+
+fn current() -> Option<(StdArc<Scheduler>, usize)> {
+    CURRENT.with(|c| c.borrow().clone())
+}
+
+fn lock_state(s: &Scheduler) -> StdGuard<'_, State> {
+    // Poison-immune: a model thread that panics while holding the state
+    // lock must not cascade into every other thread's unwrap.
+    s.state.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+impl Scheduler {
+    fn new(trace: Vec<TraceEntry>, max_preemptions: usize, max_steps: usize) -> Self {
+        Scheduler {
+            state: StdMutex::new(State {
+                statuses: vec![Status::Runnable],
+                active: 0,
+                trace,
+                pos: 0,
+                preemptions: 0,
+                max_preemptions,
+                steps: 0,
+                max_steps,
+                mutexes: Vec::new(),
+                ncvs: 0,
+                finished: 0,
+                done: false,
+                failure: None,
+            }),
+            cv: StdCondvar::new(),
+        }
+    }
+
+    /// Record a failure (first one wins), wake every parked thread so
+    /// they can unwind, and unwind the calling thread.
+    fn fail(&self, mut s: StdGuard<'_, State>, msg: String) -> ! {
+        if s.failure.is_none() {
+            s.failure = Some(msg);
+        }
+        s.done = true;
+        drop(s);
+        self.cv.notify_all();
+        std::panic::panic_any(ModelAbort);
+    }
+
+    fn abort_if_failed(&self, s: &StdGuard<'_, State>) {
+        if s.failure.is_some() {
+            std::panic::panic_any(ModelAbort);
+        }
+    }
+
+    /// Pick the next active thread.  `me` is the calling thread, whose
+    /// status must already reflect its new state (Runnable, Blocked*,
+    /// or Finished).  `exclude_self` models `yield_now`: the caller is
+    /// only re-eligible if nobody else can run.
+    fn reschedule(&self, s: &mut State, me: usize, exclude_self: bool) {
+        let mut cands: Vec<usize> = (0..s.statuses.len())
+            .filter(|&t| s.statuses[t] == Status::Runnable)
+            .collect();
+        if exclude_self && cands.len() > 1 {
+            cands.retain(|&t| t != me);
+        }
+        if cands.is_empty() {
+            if s.finished == s.statuses.len() {
+                s.done = true;
+                self.cv.notify_all();
+                return;
+            }
+            let detail: Vec<String> = s
+                .statuses
+                .iter()
+                .enumerate()
+                .map(|(t, st)| format!("t{t}:{st:?}"))
+                .collect();
+            let msg = format!("deadlock — no runnable thread [{}]", detail.join(", "));
+            s.failure.get_or_insert(msg);
+            s.done = true;
+            self.cv.notify_all();
+            return;
+        }
+        // Preferred = run-to-completion: keep the current thread first
+        // when it is still eligible, so index 0 is the no-preemption
+        // choice and every other candidate costs preemption budget.
+        cands.sort_unstable();
+        if let Some(p) = cands.iter().position(|&t| t == me) {
+            cands.remove(p);
+            cands.insert(0, me);
+        }
+        let self_preferred = cands[0] == me && !exclude_self;
+        if self_preferred && s.preemptions >= s.max_preemptions {
+            cands.truncate(1);
+        }
+        let idx = if s.pos < s.trace.len() {
+            if s.trace[s.pos].candidates != cands {
+                let msg = format!(
+                    "replay diverged at step {} (recorded {:?}, recomputed {:?}) — \
+                     model code is nondeterministic",
+                    s.pos, s.trace[s.pos].candidates, cands
+                );
+                s.failure.get_or_insert(msg);
+                s.done = true;
+                self.cv.notify_all();
+                return;
+            }
+            s.trace[s.pos].index
+        } else {
+            s.trace.push(TraceEntry {
+                candidates: cands.clone(),
+                index: 0,
+            });
+            0
+        };
+        let chosen = s.trace[s.pos].candidates[idx];
+        s.pos += 1;
+        if self_preferred && chosen != me {
+            s.preemptions += 1;
+        }
+        s.active = chosen;
+        self.cv.notify_all();
+    }
+
+    /// Park until this thread is the active one (or the execution
+    /// failed, in which case unwind).
+    fn wait_my_turn(&self, mut s: StdGuard<'_, State>, me: usize) {
+        loop {
+            if s.failure.is_some() {
+                drop(s);
+                std::panic::panic_any(ModelAbort);
+            }
+            if s.active == me && s.statuses[me] == Status::Runnable {
+                return;
+            }
+            s = self.cv.wait(s).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    /// The basic scheduling point: hand the scheduler a chance to run
+    /// someone else, then wait to be picked again.
+    fn switch(&self, me: usize, exclude_self: bool) {
+        let mut s = lock_state(self);
+        self.abort_if_failed(&s);
+        s.steps += 1;
+        if s.steps > s.max_steps {
+            let msg = format!(
+                "step budget exceeded ({} scheduling points) — livelock or unbounded spin",
+                s.max_steps
+            );
+            self.fail(s, msg);
+        }
+        self.reschedule(&mut s, me, exclude_self);
+        self.wait_my_turn(s, me);
+    }
+
+    fn alloc_mutex(&self) -> usize {
+        let mut s = lock_state(self);
+        s.mutexes.push(None);
+        s.mutexes.len() - 1
+    }
+
+    fn alloc_cv(&self) -> usize {
+        let mut s = lock_state(self);
+        s.ncvs += 1;
+        s.ncvs - 1
+    }
+
+    fn mutex_lock(&self, me: usize, id: usize) {
+        self.switch(me, false);
+        loop {
+            let mut s = lock_state(self);
+            self.abort_if_failed(&s);
+            if s.mutexes[id].is_none() {
+                s.mutexes[id] = Some(me);
+                return;
+            }
+            s.statuses[me] = Status::BlockedMutex(id);
+            self.reschedule(&mut s, me, false);
+            self.wait_my_turn(s, me);
+        }
+    }
+
+    /// `quiet` skips the post-op scheduling point and the failure check;
+    /// used from guard Drop during unwinding, where a second panic
+    /// would abort the process.
+    fn mutex_unlock(&self, me: usize, id: usize, quiet: bool) {
+        {
+            let mut s = lock_state(self);
+            s.mutexes[id] = None;
+            for t in 0..s.statuses.len() {
+                if s.statuses[t] == Status::BlockedMutex(id) {
+                    s.statuses[t] = Status::Runnable;
+                }
+            }
+        }
+        if !quiet {
+            self.switch(me, false);
+        }
+    }
+
+    /// Atomically release the mutex and register as a condvar waiter —
+    /// the two must be one transition or the model itself would invent
+    /// lost wakeups.  Re-acquires the mutex after being notified.
+    fn condvar_wait(&self, me: usize, cvid: usize, mid: usize) {
+        {
+            let mut s = lock_state(self);
+            self.abort_if_failed(&s);
+            s.mutexes[mid] = None;
+            for t in 0..s.statuses.len() {
+                if s.statuses[t] == Status::BlockedMutex(mid) {
+                    s.statuses[t] = Status::Runnable;
+                }
+            }
+            s.statuses[me] = Status::BlockedCv(cvid);
+            self.reschedule(&mut s, me, false);
+            self.wait_my_turn(s, me);
+        }
+        self.mutex_lock(me, mid);
+    }
+
+    fn notify(&self, me: usize, cvid: usize, all: bool) {
+        {
+            let mut s = lock_state(self);
+            self.abort_if_failed(&s);
+            for t in 0..s.statuses.len() {
+                if s.statuses[t] == Status::BlockedCv(cvid) {
+                    s.statuses[t] = Status::Runnable;
+                    if !all {
+                        break; // notify_one wakes the lowest waiting id
+                    }
+                }
+            }
+        }
+        self.switch(me, false);
+    }
+
+    /// Register a new model thread (called by the spawning thread);
+    /// returns its id.
+    fn register_thread(&self) -> usize {
+        let mut s = lock_state(self);
+        s.statuses.push(Status::Runnable);
+        s.statuses.len() - 1
+    }
+
+    /// First park of a freshly spawned thread: runs only once scheduled.
+    fn first_wait(&self, me: usize) {
+        let s = lock_state(self);
+        self.wait_my_turn(s, me);
+    }
+
+    fn join_wait(&self, me: usize, target: usize) {
+        self.switch(me, false);
+        let mut s = lock_state(self);
+        self.abort_if_failed(&s);
+        if s.statuses[target] != Status::Finished {
+            s.statuses[me] = Status::BlockedJoin(target);
+            self.reschedule(&mut s, me, false);
+            self.wait_my_turn(s, me);
+        }
+    }
+
+    fn finish(&self, me: usize, panic_msg: Option<String>) {
+        let mut s = lock_state(self);
+        if let Some(msg) = panic_msg {
+            s.failure
+                .get_or_insert(format!("thread t{me} panicked: {msg}"));
+            s.done = true;
+            drop(s);
+            self.cv.notify_all();
+            return;
+        }
+        s.statuses[me] = Status::Finished;
+        s.finished += 1;
+        for t in 0..s.statuses.len() {
+            if s.statuses[t] == Status::BlockedJoin(me) {
+                s.statuses[t] = Status::Runnable;
+            }
+        }
+        self.reschedule(&mut s, me, false);
+    }
+
+    /// Block the model driver until the execution completes or fails.
+    fn wait_done(&self) {
+        let mut s = lock_state(self);
+        while !s.done && s.finished != s.statuses.len() && s.failure.is_none() {
+            s = self.cv.wait(s).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    fn failure(&self) -> Option<String> {
+        lock_state(self).failure.clone()
+    }
+
+    fn take_trace(&self) -> Vec<TraceEntry> {
+        std::mem::take(&mut lock_state(self).trace)
+    }
+}
+
+/// A scheduling point for the calling thread, if it is a model thread.
+/// Outside a model (e.g. crate code compiled with `--cfg loom` but not
+/// under test) ops fall through to plain execution.
+fn point(exclude_self: bool) {
+    if let Some((sched, me)) = current() {
+        sched.switch(me, exclude_self);
+    } else if exclude_self {
+        std::thread::yield_now();
+    }
+}
+
+fn panic_msg(p: &(dyn std::any::Any + Send)) -> Option<String> {
+    if p.is::<ModelAbort>() {
+        return None; // secondary unwind of an already-failed execution
+    }
+    if let Some(s) = p.downcast_ref::<&str>() {
+        return Some((*s).to_string());
+    }
+    if let Some(s) = p.downcast_ref::<String>() {
+        return Some(s.clone());
+    }
+    Some("non-string panic payload".to_string())
+}
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.trim().parse().ok())
+        .unwrap_or(default)
+}
+
+fn backtrack(trace: &mut Vec<TraceEntry>) -> bool {
+    while let Some(last) = trace.last_mut() {
+        if last.index + 1 < last.candidates.len() {
+            last.index += 1;
+            return true;
+        }
+        trace.pop();
+    }
+    false
+}
+
+/// Exhaustively (within the preemption bound) explore every interleaving
+/// of the model closure.  Panics on the first failing execution with the
+/// recorded failure; returns normally once the search space is drained.
+pub fn model<F>(f: F)
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    let f = StdArc::new(f);
+    let max_preemptions = env_usize("LOOM_MAX_PREEMPTIONS", 2);
+    let max_steps = env_usize("LOOM_MAX_STEPS", 100_000);
+    let max_execs = env_usize("LOOM_MAX_EXECUTIONS", 1_000_000);
+    let mut trace: Vec<TraceEntry> = Vec::new();
+    let mut execs = 0usize;
+    loop {
+        execs += 1;
+        if execs > max_execs {
+            panic!("loom: execution budget exceeded ({max_execs}) — model too large");
+        }
+        let sched = StdArc::new(Scheduler::new(
+            std::mem::take(&mut trace),
+            max_preemptions,
+            max_steps,
+        ));
+        let sref = sched.clone();
+        let fref = f.clone();
+        let root = std::thread::Builder::new()
+            .name("loom-root".into())
+            .spawn(move || {
+                set_current(sref.clone(), 0);
+                let r = catch_unwind(AssertUnwindSafe(|| fref()));
+                match r {
+                    Ok(()) => sref.finish(0, None),
+                    Err(p) => sref.finish(0, panic_msg(&*p)),
+                }
+            })
+            .expect("loom: spawn root thread");
+        let _ = root.join();
+        sched.wait_done();
+        if let Some(msg) = sched.failure() {
+            panic!("loom: model failed on execution {execs}: {msg}");
+        }
+        trace = sched.take_trace();
+        if !backtrack(&mut trace) {
+            if std::env::var("LOOM_LOG").is_ok() {
+                eprintln!("loom: explored {execs} executions");
+            }
+            return;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Public loom-shaped API
+// ---------------------------------------------------------------------
+
+pub mod hint {
+    /// In a model, a spin-loop iteration is a forced yield: the
+    /// scheduler must run someone else if anyone else can run (this is
+    /// what bounds spin loops during exploration).
+    pub fn spin_loop() {
+        super::point(true);
+    }
+}
+
+pub mod thread {
+    use super::*;
+
+    pub struct JoinHandle<T> {
+        id: usize,
+        inner: std::thread::JoinHandle<T>,
+    }
+
+    impl<T> JoinHandle<T> {
+        pub fn join(self) -> std::thread::Result<T> {
+            if let Some((sched, me)) = current() {
+                sched.join_wait(me, self.id);
+            }
+            self.inner.join()
+        }
+    }
+
+    #[derive(Default)]
+    pub struct Builder {
+        name: Option<String>,
+    }
+
+    impl Builder {
+        pub fn new() -> Self {
+            Builder { name: None }
+        }
+
+        pub fn name(mut self, name: String) -> Self {
+            self.name = Some(name);
+            self
+        }
+
+        pub fn spawn<F, T>(self, f: F) -> std::io::Result<JoinHandle<T>>
+        where
+            F: FnOnce() -> T + Send + 'static,
+            T: Send + 'static,
+        {
+            let (sched, _me) =
+                current().expect("loom: threads may only be spawned inside a model");
+            let id = sched.register_thread();
+            let child_sched = sched.clone();
+            let mut b = std::thread::Builder::new();
+            if let Some(n) = self.name {
+                b = b.name(n);
+            }
+            let inner = b.spawn(move || {
+                set_current(child_sched.clone(), id);
+                child_sched.first_wait(id);
+                let r = catch_unwind(AssertUnwindSafe(f));
+                match r {
+                    Ok(v) => {
+                        child_sched.finish(id, None);
+                        v
+                    }
+                    Err(p) => {
+                        child_sched.finish(id, panic_msg(&*p));
+                        resume_unwind(p)
+                    }
+                }
+            })?;
+            // Scheduling point: expose the new thread to the search.
+            point(false);
+            Ok(JoinHandle { id, inner })
+        }
+    }
+
+    pub fn spawn<F, T>(f: F) -> JoinHandle<T>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        Builder::new().spawn(f).expect("loom: spawn")
+    }
+
+    /// A yield is a scheduling point at which the caller is only
+    /// re-eligible when no other thread can run.
+    pub fn yield_now() {
+        super::point(true);
+    }
+}
+
+pub mod sync {
+    use super::*;
+    use std::cell::UnsafeCell;
+    use std::sync::OnceLock;
+
+    pub use std::sync::Arc;
+    pub use std::sync::LockResult;
+
+    pub mod atomic {
+        pub use std::sync::atomic::Ordering;
+
+        macro_rules! model_atomic {
+            ($name:ident, $std:ty, $val:ty) => {
+                /// Model-checked atomic: every operation is a scheduling
+                /// point; all orderings execute as `SeqCst` (see crate
+                /// docs for the sequential-consistency caveat).
+                #[derive(Debug, Default)]
+                pub struct $name {
+                    inner: $std,
+                }
+
+                impl $name {
+                    pub fn new(v: $val) -> Self {
+                        Self {
+                            inner: <$std>::new(v),
+                        }
+                    }
+
+                    pub fn load(&self, _o: Ordering) -> $val {
+                        super::super::point(false);
+                        self.inner.load(super::super::StdOrdering::SeqCst)
+                    }
+
+                    pub fn store(&self, v: $val, _o: Ordering) {
+                        super::super::point(false);
+                        self.inner.store(v, super::super::StdOrdering::SeqCst)
+                    }
+
+                    pub fn swap(&self, v: $val, _o: Ordering) -> $val {
+                        super::super::point(false);
+                        self.inner.swap(v, super::super::StdOrdering::SeqCst)
+                    }
+
+                    pub fn compare_exchange(
+                        &self,
+                        cur: $val,
+                        new: $val,
+                        _s: Ordering,
+                        _f: Ordering,
+                    ) -> Result<$val, $val> {
+                        super::super::point(false);
+                        self.inner.compare_exchange(
+                            cur,
+                            new,
+                            super::super::StdOrdering::SeqCst,
+                            super::super::StdOrdering::SeqCst,
+                        )
+                    }
+                }
+            };
+        }
+
+        model_atomic!(AtomicUsize, std::sync::atomic::AtomicUsize, usize);
+        model_atomic!(AtomicU64, std::sync::atomic::AtomicU64, u64);
+        model_atomic!(AtomicBool, std::sync::atomic::AtomicBool, bool);
+
+        impl AtomicUsize {
+            pub fn fetch_add(&self, v: usize, _o: Ordering) -> usize {
+                super::super::point(false);
+                self.inner.fetch_add(v, super::super::StdOrdering::SeqCst)
+            }
+
+            pub fn fetch_sub(&self, v: usize, _o: Ordering) -> usize {
+                super::super::point(false);
+                self.inner.fetch_sub(v, super::super::StdOrdering::SeqCst)
+            }
+        }
+    }
+
+    /// Model-checked mutex.  Must be created inside the model closure
+    /// (its scheduler id is allocated on first lock and is only valid
+    /// for that execution).
+    pub struct Mutex<T> {
+        id: OnceLock<usize>,
+        data: UnsafeCell<T>,
+    }
+
+    // SAFETY: the scheduler grants the lock to exactly one thread at a
+    // time (`State::mutexes[id]` holder), so access to `data` is
+    // exclusive; `T: Send` makes moving that access across threads ok.
+    unsafe impl<T: Send> Send for Mutex<T> {}
+    // SAFETY: as above — `&Mutex` only exposes `data` through `lock`,
+    // which the scheduler serializes.
+    unsafe impl<T: Send> Sync for Mutex<T> {}
+
+    pub struct MutexGuard<'a, T> {
+        m: &'a Mutex<T>,
+        id: usize,
+    }
+
+    impl<T> Mutex<T> {
+        pub fn new(data: T) -> Self {
+            Mutex {
+                id: OnceLock::new(),
+                data: UnsafeCell::new(data),
+            }
+        }
+
+        fn id(&self) -> usize {
+            *self.id.get_or_init(|| {
+                let (sched, _) =
+                    current().expect("loom: Mutex must be first locked inside a model");
+                sched.alloc_mutex()
+            })
+        }
+
+        pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+            let id = self.id();
+            let (sched, me) = current().expect("loom: Mutex::lock outside a model");
+            sched.mutex_lock(me, id);
+            Ok(MutexGuard { m: self, id })
+        }
+    }
+
+    impl<T> std::ops::Deref for MutexGuard<'_, T> {
+        type Target = T;
+
+        fn deref(&self) -> &T {
+            // SAFETY: the scheduler recorded this thread as the unique
+            // holder of mutex `id`; no other guard exists.
+            unsafe { &*self.m.data.get() }
+        }
+    }
+
+    impl<T> std::ops::DerefMut for MutexGuard<'_, T> {
+        fn deref_mut(&mut self) -> &mut T {
+            // SAFETY: as in `deref` — exclusive holder.
+            unsafe { &mut *self.m.data.get() }
+        }
+    }
+
+    impl<T> Drop for MutexGuard<'_, T> {
+        fn drop(&mut self) {
+            if let Some((sched, me)) = current() {
+                // Quiet during unwinding: a scheduling point here could
+                // panic again and abort the process.
+                sched.mutex_unlock(me, self.id, std::thread::panicking());
+            }
+        }
+    }
+
+    /// Model-checked condvar.  `wait` atomically releases the mutex and
+    /// registers as a waiter (no spurious wakeups are modeled; lost
+    /// wakeups surface as deadlock failures).
+    #[derive(Default)]
+    pub struct Condvar {
+        id: OnceLock<usize>,
+    }
+
+    impl Condvar {
+        pub fn new() -> Self {
+            Condvar { id: OnceLock::new() }
+        }
+
+        fn id(&self) -> usize {
+            *self.id.get_or_init(|| {
+                let (sched, _) =
+                    current().expect("loom: Condvar must be first used inside a model");
+                sched.alloc_cv()
+            })
+        }
+
+        pub fn wait<'a, T>(&self, guard: MutexGuard<'a, T>) -> LockResult<MutexGuard<'a, T>> {
+            let cvid = self.id();
+            let (sched, me) = current().expect("loom: Condvar::wait outside a model");
+            let m = guard.m;
+            let mid = guard.id;
+            // The scheduler performs the release half of the wait; the
+            // guard must not also unlock on drop.
+            std::mem::forget(guard);
+            sched.condvar_wait(me, cvid, mid);
+            Ok(MutexGuard { m, id: mid })
+        }
+
+        pub fn notify_one(&self) {
+            let cvid = self.id();
+            if let Some((sched, me)) = current() {
+                sched.notify(me, cvid, false);
+            }
+        }
+
+        pub fn notify_all(&self) {
+            let cvid = self.id();
+            if let Some((sched, me)) = current() {
+                sched.notify(me, cvid, true);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::sync::atomic::{AtomicUsize, Ordering};
+    use super::sync::{Arc, Condvar, Mutex};
+
+    #[test]
+    fn counter_increments_are_atomic() {
+        super::model(|| {
+            let n = Arc::new(AtomicUsize::new(0));
+            let n2 = n.clone();
+            let h = super::thread::spawn(move || {
+                n2.fetch_add(1, Ordering::SeqCst);
+            });
+            n.fetch_add(1, Ordering::SeqCst);
+            h.join().unwrap();
+            assert_eq!(n.load(Ordering::SeqCst), 2);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "loom: model failed")]
+    fn load_store_race_is_found() {
+        // Non-atomic-style read-modify-write: some interleaving loses an
+        // increment, and the search must find it.
+        super::model(|| {
+            let n = Arc::new(AtomicUsize::new(0));
+            let n2 = n.clone();
+            let h = super::thread::spawn(move || {
+                let v = n2.load(Ordering::SeqCst);
+                n2.store(v + 1, Ordering::SeqCst);
+            });
+            let v = n.load(Ordering::SeqCst);
+            n.store(v + 1, Ordering::SeqCst);
+            h.join().unwrap();
+            assert_eq!(n.load(Ordering::SeqCst), 2);
+        });
+    }
+
+    #[test]
+    fn mutex_condvar_handoff() {
+        super::model(|| {
+            let pair = Arc::new((Mutex::new(false), Condvar::new()));
+            let p2 = pair.clone();
+            let h = super::thread::spawn(move || {
+                let (m, cv) = &*p2;
+                let mut ready = m.lock().unwrap();
+                *ready = true;
+                cv.notify_all();
+                drop(ready);
+            });
+            let (m, cv) = &*pair;
+            let mut ready = m.lock().unwrap();
+            while !*ready {
+                ready = cv.wait(ready).unwrap();
+            }
+            drop(ready);
+            h.join().unwrap();
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "deadlock")]
+    fn lost_wakeup_is_found() {
+        // Waiting without re-checking a predicate set *before* the wait
+        // deadlocks in the interleaving where notify comes first.
+        super::model(|| {
+            let pair = Arc::new((Mutex::new(()), Condvar::new()));
+            let p2 = pair.clone();
+            let h = super::thread::spawn(move || {
+                let (_m, cv) = &*p2;
+                cv.notify_all();
+            });
+            let (m, cv) = &*pair;
+            let g = m.lock().unwrap();
+            let _g = cv.wait(g).unwrap(); // no predicate: loses the race
+            h.join().unwrap();
+        });
+    }
+}
