@@ -1,0 +1,129 @@
+#!/usr/bin/env python3
+"""Soft perf-regression radar for the CI bench job.
+
+Compares the bench_out/*.json a CI run just produced against the
+baselines committed at HEAD (read via `git show`, so a dirty working
+tree cannot shadow them).  Any throughput field that dropped more than
+REGRESSION_FRAC emits a GitHub `::warning::` annotation.
+
+This is deliberately warn-only and always exits 0: hosted runners are
+shared, thermally unstable machines, and a hard throughput gate there
+fails on noise far more often than on real regressions.  The value is
+the annotation trail — a genuine regression shows up as the same
+warning on every run until it is fixed or the committed baseline is
+refreshed from a newer artifact.
+
+Run from the `rust/` directory (the CI job's working-directory):
+
+    python3 ../.github/scripts/bench_compare.py
+"""
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+# A measured throughput this much below baseline (relative) warns.
+REGRESSION_FRAC = 0.15
+
+# Record fields that identify a measurement point across runs; the rest
+# of a record is data.  `shape` is a list in the JSON, made hashable
+# below.
+ID_KEYS = ("m", "k", "t", "threads", "tier", "dot", "shape")
+
+
+def is_throughput(key: str) -> bool:
+    """Higher-is-better rate fields; ratios and byte counts are not."""
+    return key.endswith("gflops") or key.endswith("fps")
+
+
+def load_baseline(name: str):
+    """The committed copy of bench_out/<name> at HEAD, or None."""
+    try:
+        proc = subprocess.run(
+            ["git", "show", f"HEAD:rust/bench_out/{name}"],
+            capture_output=True,
+            text=True,
+            check=True,
+        )
+        return json.loads(proc.stdout)
+    except (subprocess.CalledProcessError, json.JSONDecodeError, OSError):
+        return None
+
+
+def records(doc: dict):
+    """Yield ((field, identity), record) for every list-of-records
+    field in a bench report (points, isa_tiers, acceptance, ...)."""
+    for field, val in doc.items():
+        if not (isinstance(val, list) and val and isinstance(val[0], dict)):
+            continue
+        for rec in val:
+            ident = tuple(
+                (k, tuple(rec[k]) if isinstance(rec[k], list) else rec[k])
+                for k in ID_KEYS
+                if k in rec
+            )
+            yield (field, ident), rec
+
+
+def compare(name: str, fresh: dict, base: dict) -> int:
+    warned = 0
+    base_index = dict(records(base))
+    for key, rec in records(fresh):
+        baserec = base_index.get(key)
+        if baserec is None:
+            # New measurement point (e.g. a tier the baseline host did
+            # not support) — nothing to compare against.
+            continue
+        for fld, got in rec.items():
+            if not is_throughput(fld):
+                continue
+            want = baserec.get(fld)
+            if not isinstance(want, (int, float)) or not isinstance(got, (int, float)):
+                continue
+            if want <= 0:
+                continue
+            drop = (want - got) / want
+            if drop > REGRESSION_FRAC:
+                field, ident = key
+                where = " ".join(f"{k}={v}" for k, v in ident)
+                print(
+                    f"::warning file=rust/bench_out/{name}::"
+                    f"{name} {field}[{where}] {fld}: {got:.2f} is "
+                    f"{drop:.0%} below committed baseline {want:.2f}"
+                )
+                warned += 1
+    return warned
+
+
+def main() -> int:
+    out_dir = Path("bench_out")
+    fresh_files = sorted(out_dir.glob("BENCH_*.json"))
+    if not fresh_files:
+        print("bench_compare: no bench_out/BENCH_*.json produced; nothing to do")
+        return 0
+    total = 0
+    for path in fresh_files:
+        base = load_baseline(path.name)
+        if base is None:
+            print(f"bench_compare: no committed baseline for {path.name}; skipping")
+            continue
+        try:
+            fresh = json.loads(path.read_text())
+        except json.JSONDecodeError as e:
+            print(f"::warning::{path} is not valid JSON ({e}); skipping")
+            continue
+        n = compare(path.name, fresh, base)
+        print(f"bench_compare: {path.name}: {n} regression warning(s)")
+        total += n
+    if total:
+        print(
+            f"bench_compare: {total} throughput point(s) >"
+            f"{REGRESSION_FRAC:.0%} below baseline (warn-only, not failing)"
+        )
+    # Warn-only by design; see module docstring.
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -11,8 +11,8 @@ use mtsrnn::coordinator::{BatchMode, Coordinator, CoordinatorConfig, NativeBacke
 use mtsrnn::engine::{Engine, NativeStack, QuantMatrix, SruEngine};
 use mtsrnn::linalg::pool;
 use mtsrnn::linalg::{
-    add_row_bias, fast_sigmoid, gemm, gemm_bt, gemv, transpose_into, Act, Epilogue, PackedGemm,
-    PackedQuantGemm, QuantScratch, SMALL_N_CUTOFF,
+    add_row_bias, fast_sigmoid, gemm, gemm_bt, gemv, supported_tiers, transpose_into, Act,
+    Epilogue, PackedGemm, PackedQuantGemm, QuantScratch, Simd, SMALL_N_CUTOFF,
 };
 use mtsrnn::memsim::{simulate, SimConfig, SimPrec, INTEL_I7_3930K};
 use mtsrnn::models::config::{Arch, ModelConfig, ModelSize, StackSpec};
@@ -342,7 +342,7 @@ fn quant_sweep(opts: &BenchOpts) {
     // says each precision/density point should buy over f32.  Recorded
     // next to the measurements so predicted-vs-measured drift is part of
     // the artifact trail (EXPERIMENTS.md §Sub-byte-and-sparse).
-    let predict = |prec: SimPrec, density: f64| {
+    let predict = |prec: SimPrec, density: f64, use_dot: bool| {
         let cfg = ModelConfig {
             arch: Arch::Sru,
             hidden: 512,
@@ -352,19 +352,75 @@ fn quant_sweep(opts: &BenchOpts) {
         c.samples = 256;
         c.precision = prec;
         c.density = density;
+        c.use_dot = use_dot;
         simulate(&c).seconds
     };
-    let base = predict(SimPrec::F32, 1.0);
+    let base = predict(SimPrec::F32, 1.0, false);
     let (p8, p8q, p4, pd50, pd25) = (
-        base / predict(SimPrec::Q8, 1.0),
-        base / predict(SimPrec::Q8Q, 1.0),
-        base / predict(SimPrec::Q4, 1.0),
-        base / predict(SimPrec::Q8Q, 0.5),
-        base / predict(SimPrec::Q8Q, 0.25),
+        base / predict(SimPrec::Q8, 1.0, false),
+        base / predict(SimPrec::Q8Q, 1.0, false),
+        base / predict(SimPrec::Q4, 1.0, false),
+        base / predict(SimPrec::Q8Q, 0.5, false),
+        base / predict(SimPrec::Q8Q, 0.25, false),
     );
     println!(
         "  memsim prediction (intel, sru-small, T=16) vs f32: q8 {p8:.2}x q8q {p8q:.2}x q4 {p4:.2}x q8q@d0.5 {pd50:.2}x q8q@d0.25 {pd25:.2}x"
     );
+
+    // ISA-ladder sweep: the integer families through every tier this
+    // host can pin via MTSRNN_ISA, at the acceptance shape [2048, 512]
+    // x T=16, with memsim's prediction for each tier's MAC-rate class
+    // next to the measurement (`use_dot` = the 4-way byte-dot tiers).
+    // int_cutoff = 0 forces the integer kernels, so a row measures the
+    // tier itself, not the probe's int-vs-widening routing.
+    println!("-- ISA dispatch ladder: q8q | q4 per pinnable tier --");
+    struct IsaPoint {
+        tier: &'static str,
+        dot: bool,
+        g8q: f64,
+        g4: f64,
+        pred8q: f64,
+        pred4: f64,
+    }
+    let mut isa_points: Vec<IsaPoint> = Vec::new();
+    {
+        let (m, k, t) = (2048usize, 512usize, 16usize);
+        let mut w = vec![0.0; m * k];
+        rng.fill_normal(&mut w, 0.05);
+        let q = QuantMatrix::quantize(&w, m, k);
+        let q4 = QuantMatrix::quantize_q4(&w, m, k);
+        let mut x = vec![0.0; t * k];
+        rng.fill_normal(&mut x, 1.0);
+        let mut c = vec![0.0; m * t];
+        let bias = vec![0.1f32; m];
+        let epi = Epilogue::with_bias(&bias);
+        let mut scratch = QuantScratch::new();
+        let flops = 2.0 * (m * k * t) as f64;
+        for tier in supported_tiers() {
+            let p8 = PackedQuantGemm::with_dispatch_q8q(q.q(), q.row_scales(), m, k, tier, 0);
+            let p4t = PackedQuantGemm::with_dispatch_q4(q4.q(), q4.row_scales(), m, k, tier, 0);
+            let m8 = bench(&format!("q8q@{} {m}x{k}x{t}", tier.name()), opts, || {
+                p8.matmul_q8q(&mut c, &x, t, false, &epi, &mut scratch);
+            });
+            let m4 = bench(&format!("q4@{} {m}x{k}x{t}", tier.name()), opts, || {
+                p4t.matmul_q4(&mut c, &x, t, false, &epi, &mut scratch);
+            });
+            let dot = matches!(tier, Simd::Vnni | Simd::Sdot);
+            let p = IsaPoint {
+                tier: tier.name(),
+                dot,
+                g8q: flops / m8.median_ns,
+                g4: flops / m4.median_ns,
+                pred8q: base / predict(SimPrec::Q8Q, 1.0, dot),
+                pred4: base / predict(SimPrec::Q4, 1.0, dot),
+            };
+            println!(
+                "  tier={:<9} q8q {:>6.2} | q4 {:>6.2} GFLOP/s-eq | memsim vs f32: q8q {:>4.2}x q4 {:>4.2}x",
+                p.tier, p.g8q, p.g4, p.pred8q, p.pred4
+            );
+            isa_points.push(p);
+        }
+    }
 
     let mut json = String::from(
         "{\n  \"bench\": \"quant_sweep\",\n  \"densities\": [1.0, 0.5, 0.25],\n  \"points\": [\n",
@@ -380,6 +436,15 @@ fn quant_sweep(opts: &BenchOpts) {
             (p.m * p.k * 4) as f64 / p.t as f64,
             (p.m * p.k + p.m * 4) as f64 / p.t as f64,
             ((p.m * p.k).div_ceil(2) + p.m * 4) as f64 / p.t as f64,
+        ));
+    }
+    json.push_str("  ],\n");
+    json.push_str("  \"isa_tiers\": [\n");
+    for (i, p) in isa_points.iter().enumerate() {
+        let sep = if i + 1 < isa_points.len() { "," } else { "" };
+        json.push_str(&format!(
+            "    {{\"tier\": \"{}\", \"dot\": {}, \"shape\": [2048, 512, 16], \"q8q_gflops\": {:.2}, \"q4_gflops\": {:.2}, \"memsim_predicted_vs_f32_q8q\": {:.3}, \"memsim_predicted_vs_f32_q4\": {:.3}}}{sep}\n",
+            p.tier, p.dot, p.g8q, p.g4, p.pred8q, p.pred4
         ));
     }
     json.push_str("  ],\n");

@@ -138,7 +138,19 @@ STACK SPECS (native serve; one weight set, any layer kind x precision):
   the q4 tolerance tests (tests/q4_sparse_parity.rs).  Block-sparse
   weights (weights/prune.rs zeroes whole 16x32 blocks) compose with any
   precision: zero blocks are skipped at dispatch, bit-identically to
-  running them.  MTSRNN_FORCE_PORTABLE=1 pins all kernels to portable.
+  running them.
+
+  isa tiers: kernels dispatch down a per-host ladder — x86-64:
+  vnni (AVX-VNNI vpdpbusd, 4-way u8xs8 dot) > avx2 > portable;
+  aarch64: sdot (NEON dotprod, 4-way s8xs8 dot) > neon > portable.
+  The integer families accumulate exact i32 on every rung, so all
+  tiers are bit-identical — pinning changes speed, never results.
+  MTSRNN_ISA=portable|avx2|vnni|neon|sdot pins one rung (errors if the
+  host lacks it); MTSRNN_FORCE_PORTABLE=1 survives as an alias for
+  MTSRNN_ISA=portable.  `mtsrnn info` prints the detected rung and the
+  full pinnable ladder (\"isa tiers: ...\").  Very deep q8q/q4
+  reductions past the VNNI exactness bound silently demote that handle
+  to avx2 (still exact); sdot keeps the wider s8xs8 bound.
 
 TRANSCRIBE MODE (serve, native backend):
   DECODE <id> [greedy|beam[:W]]   attach a streaming CTC decoder to a

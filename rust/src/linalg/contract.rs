@@ -42,6 +42,19 @@ pub const Q8_MAX_K: usize = (i32::MAX as usize) / (127 * 127);
 /// `k * 7 * 127 <= i32::MAX`.  Mirrors `pack::Q4_MAX_K`.
 pub const Q4_MAX_K: usize = (i32::MAX as usize) / (7 * 127);
 
+/// Maximum reduction depth for the AVX-VNNI q8q path.  `vpdpbusd` is
+/// u8 x s8, so activations are shifted to `xu = x + 128 <= 255` and the
+/// accumulator starts at `-128 * sum(w)`.  Per reduction step the
+/// running magnitude grows by at most `|w| * xu + 128 * |w| <= 127 *
+/// (255 + 128) = 127 * 383`, so exactness needs `k * 127 * 383 <=
+/// i32::MAX`.  Mirrors `pack::VNNI_Q8_MAX_K`.
+pub const VNNI_Q8_MAX_K: usize = (i32::MAX as usize) / (127 * 383);
+
+/// Maximum reduction depth for the AVX-VNNI q4 path (`|w| <= 7`,
+/// shifted activation `<= 255`, correction magnitude `128 * |w|`):
+/// `k * 7 * 383 <= i32::MAX`.  Mirrors `pack::VNNI_Q4_MAX_K`.
+pub const VNNI_Q4_MAX_K: usize = (i32::MAX as usize) / (7 * 383);
+
 /// A violated kernel precondition.  Each variant names the argument at
 /// fault and carries the observed vs. required geometry, so the panic
 /// message a failed check produces identifies the bug without a
@@ -54,6 +67,16 @@ pub enum ContractError {
     /// Quantized panel `kp` must be even (integer kernels walk K in
     /// pairs).
     OddKp { kp: usize },
+    /// Quad-interleaved panel `kp` must be a multiple of 4 (the
+    /// VNNI/sdot kernels walk K in quads) — raised when a pair-packed
+    /// panel is handed to a quad-tier dispatch or vice versa.
+    QuadKp { kp: usize },
+    /// Shifted-activation buffer (`qshift`, VNNI only) too short for
+    /// `n * kp` bytes.
+    ShiftLen { expected: usize, got: usize },
+    /// Per-row zero-point correction buffer (`corr`, VNNI only) must
+    /// hold exactly `np * PACK_MR` entries.
+    CorrLen { expected: usize, got: usize },
     /// Reduction depth exceeds the family's i32-exactness bound.
     KTooLarge { kp: usize, max: usize, family: &'static str },
     /// Frame buffer too short for `n` frames of length `k`.
@@ -93,6 +116,19 @@ impl std::fmt::Display for ContractError {
             ContractError::OddKp { kp } => {
                 write!(f, "quantized panel depth kp must be even (pair-walked), got {kp}")
             }
+            ContractError::QuadKp { kp } => write!(
+                f,
+                "quad-interleaved panel depth kp must be a multiple of 4 \
+                 (quad-walked), got {kp}"
+            ),
+            ContractError::ShiftLen { expected, got } => write!(
+                f,
+                "qshift buffer must hold n * kp = {expected} shifted bytes, got {got}"
+            ),
+            ContractError::CorrLen { expected, got } => write!(
+                f,
+                "corr buffer must hold np * PACK_MR = {expected} row corrections, got {got}"
+            ),
             ContractError::KTooLarge { kp, max, family } => write!(
                 f,
                 "{family} reduction depth {kp} exceeds i32-exactness bound {max}"
@@ -195,6 +231,33 @@ impl<'a> QPanelView<'a> {
         }
         Ok(Self { panels, m, kp })
     }
+
+    /// Validate a k-quad-interleaved q8q panel (the VNNI/sdot layout):
+    /// `kp % 4 == 0`, depth within the tier's i32-exactness bound
+    /// (`max_k`), same `np * PACK_MR * kp` storage.  `kp = k` rounded
+    /// up to a multiple of 4, so `kp <= max_k + 3` iff `k <= max_k`
+    /// (pad columns are zero and add nothing).
+    pub fn new_quad(
+        panels: &'a [i8],
+        m: usize,
+        kp: usize,
+        max_k: usize,
+        family: &'static str,
+    ) -> Result<Self, ContractError> {
+        if kp % 4 != 0 {
+            return Err(ContractError::QuadKp { kp });
+        }
+        if kp > max_k + 3 {
+            return Err(ContractError::KTooLarge { kp, max: max_k, family });
+        }
+        let np = num_panels(m);
+        let stride = PACK_MR * kp;
+        let expected = np * stride;
+        if panels.len() != expected {
+            return Err(ContractError::PanelLen { expected, got: panels.len(), np, stride });
+        }
+        Ok(Self { panels, m, kp })
+    }
 }
 
 /// A validated view over q4 nibble-packed panels: stride
@@ -214,6 +277,31 @@ impl<'a> Q4PanelView<'a> {
         }
         if kp > Q4_MAX_K + 1 {
             return Err(ContractError::KTooLarge { kp, max: Q4_MAX_K, family: "q4" });
+        }
+        let np = num_panels(m);
+        let stride = (PACK_MR / 2) * kp;
+        let expected = np * stride;
+        if panels.len() != expected {
+            return Err(ContractError::PanelLen { expected, got: panels.len(), np, stride });
+        }
+        Ok(Self { panels, m, kp })
+    }
+
+    /// Validate a k-quad nibble-packed q4 panel (the VNNI/sdot group
+    /// layout): `kp % 4 == 0`, depth within the tier bound, same
+    /// `np * (PACK_MR / 2) * kp` byte storage.
+    pub fn new_quad(
+        panels: &'a [u8],
+        m: usize,
+        kp: usize,
+        max_k: usize,
+        family: &'static str,
+    ) -> Result<Self, ContractError> {
+        if kp % 4 != 0 {
+            return Err(ContractError::QuadKp { kp });
+        }
+        if kp > max_k + 3 {
+            return Err(ContractError::KTooLarge { kp, max: max_k, family });
         }
         let np = num_panels(m);
         let stride = (PACK_MR / 2) * kp;
@@ -358,16 +446,48 @@ pub fn check_epilogue(epi: &Epilogue<'_>, m: usize) -> Result<(), ContractError>
 }
 
 /// Validate that the requested kernel family exists on this target.
+/// (Runtime feature availability — `avxvnni`, `dotprod` — is enforced
+/// separately by the `detect_host()` gate in the `with_dispatch*`
+/// constructors; this check only rules out tiers whose kernels are not
+/// even compiled for the target architecture.)
 pub fn check_simd(simd: Simd) -> Result<(), ContractError> {
     match simd {
         Simd::Avx2 if !cfg!(target_arch = "x86_64") => {
             Err(ContractError::SimdUnavailable { simd: "avx2" })
         }
+        Simd::Vnni if !cfg!(target_arch = "x86_64") => {
+            Err(ContractError::SimdUnavailable { simd: "vnni" })
+        }
         Simd::Neon if !cfg!(target_arch = "aarch64") => {
             Err(ContractError::SimdUnavailable { simd: "neon" })
         }
+        Simd::Sdot if !cfg!(target_arch = "aarch64") => {
+            Err(ContractError::SimdUnavailable { simd: "sdot" })
+        }
         _ => Ok(()),
     }
+}
+
+/// Validate the VNNI-only side buffers: `qshift` holds the `n * kp`
+/// +128-shifted activation bytes and `corr` one `128 * sum(w)` entry
+/// per packed row (`np * PACK_MR`, pad rows included).  Public so the
+/// negative contract tests can hit each variant directly.
+pub fn check_vnni_bufs(
+    qshift: &[u8],
+    corr: &[i32],
+    m: usize,
+    kp: usize,
+    n: usize,
+) -> Result<(), ContractError> {
+    let expected = n * kp;
+    if qshift.len() != expected {
+        return Err(ContractError::ShiftLen { expected, got: qshift.len() });
+    }
+    let expected = num_panels(m) * PACK_MR;
+    if corr.len() != expected {
+        return Err(ContractError::CorrLen { expected, got: corr.len() });
+    }
+    Ok(())
 }
 
 /// Full precondition set of `kernels::matmul_range` (and therefore
@@ -406,6 +526,8 @@ pub fn check_q8q_dispatch(
     crow0: usize,
     xq: &[i8],
     qpair: &[i32],
+    qshift: &[u8],
+    corr: &[i32],
     m: usize,
     kp: usize,
     n: usize,
@@ -414,7 +536,21 @@ pub fn check_q8q_dispatch(
     p1: usize,
 ) -> Result<(), ContractError> {
     check_simd(simd)?;
-    QPanelView::new(qpanels, m, kp)?;
+    match simd {
+        // Quad tiers consume the k-quad-interleaved layout; a
+        // pair-packed panel (kp == k rounded to even) fails QuadKp
+        // here, which is the wrong-tier panel/dispatch mix guard.
+        Simd::Vnni => {
+            QPanelView::new_quad(qpanels, m, kp, VNNI_Q8_MAX_K, "q8q-vnni")?;
+            check_vnni_bufs(qshift, corr, m, kp, n)?;
+        }
+        Simd::Sdot => {
+            QPanelView::new_quad(qpanels, m, kp, Q8_MAX_K, "q8q")?;
+        }
+        _ => {
+            QPanelView::new(qpanels, m, kp)?;
+        }
+    }
     QFrameView::new(xq, qpair, n, kp)?;
     if let Some((words, wpp)) = pm_all {
         MaskView::new(words, wpp, m, kp)?;
@@ -431,6 +567,8 @@ pub fn check_q4_dispatch(
     crow0: usize,
     xq: &[i8],
     qpair: &[i32],
+    qshift: &[u8],
+    corr: &[i32],
     m: usize,
     kp: usize,
     n: usize,
@@ -439,7 +577,18 @@ pub fn check_q4_dispatch(
     p1: usize,
 ) -> Result<(), ContractError> {
     check_simd(simd)?;
-    Q4PanelView::new(q4panels, m, kp)?;
+    match simd {
+        Simd::Vnni => {
+            Q4PanelView::new_quad(q4panels, m, kp, VNNI_Q4_MAX_K, "q4-vnni")?;
+            check_vnni_bufs(qshift, corr, m, kp, n)?;
+        }
+        Simd::Sdot => {
+            Q4PanelView::new_quad(q4panels, m, kp, Q4_MAX_K, "q4")?;
+        }
+        _ => {
+            Q4PanelView::new(q4panels, m, kp)?;
+        }
+    }
     QFrameView::new(xq, qpair, n, kp)?;
     if let Some((words, wpp)) = pm_all {
         MaskView::new(words, wpp, m, kp)?;
@@ -455,6 +604,38 @@ mod tests {
     fn bounds_match_pack() {
         assert_eq!(Q8_MAX_K, crate::linalg::pack::Q8_MAX_K);
         assert_eq!(Q4_MAX_K, crate::linalg::pack::Q4_MAX_K);
+        assert_eq!(VNNI_Q8_MAX_K, crate::linalg::pack::VNNI_Q8_MAX_K);
+        assert_eq!(VNNI_Q4_MAX_K, crate::linalg::pack::VNNI_Q4_MAX_K);
+        // The VNNI bounds are strictly tighter than the s8 x s8 ones —
+        // the silent Vnni -> Avx2 demotion in `with_dispatch_q8q/q4`
+        // relies on that ordering.
+        assert!(VNNI_Q8_MAX_K < Q8_MAX_K);
+        assert!(VNNI_Q4_MAX_K < Q4_MAX_K);
+    }
+
+    #[test]
+    fn quad_views_enforce_quad_kp() {
+        let (m, kp) = (16, 10);
+        let q = vec![0i8; num_panels(m) * PACK_MR * kp];
+        // kp = 10 is pair-legal but not quad-legal.
+        assert!(QPanelView::new(&q, m, kp).is_ok());
+        let err = QPanelView::new_quad(&q, m, kp, Q8_MAX_K, "q8q").unwrap_err();
+        assert!(matches!(err, ContractError::QuadKp { kp: 10 }));
+        let q4 = vec![0u8; num_panels(m) * (PACK_MR / 2) * kp];
+        let err = Q4PanelView::new_quad(&q4, m, kp, Q4_MAX_K, "q4").unwrap_err();
+        assert!(matches!(err, ContractError::QuadKp { kp: 10 }));
+    }
+
+    #[test]
+    fn vnni_bufs_are_checked() {
+        let (m, kp, n) = (16, 8, 3);
+        let qshift = vec![128u8; n * kp];
+        let corr = vec![0i32; num_panels(m) * PACK_MR];
+        assert!(check_vnni_bufs(&qshift, &corr, m, kp, n).is_ok());
+        let err = check_vnni_bufs(&qshift[1..], &corr, m, kp, n).unwrap_err();
+        assert!(matches!(err, ContractError::ShiftLen { .. }));
+        let err = check_vnni_bufs(&qshift, &corr[1..], m, kp, n).unwrap_err();
+        assert!(matches!(err, ContractError::CorrLen { .. }));
     }
 
     #[test]

@@ -14,10 +14,20 @@
 //! [`store_tile`], which fuses the accumulate / dequant-scale / bias /
 //! activation epilogue into the single store pass over `C`.
 //!
-//! Dispatch is decided once per process by [`detect`]:
-//! AVX2+FMA (`is_x86_feature_detected!`) > NEON (aarch64) > portable.
-//! The portable kernel doubles as the correctness oracle for the
-//! intrinsic paths (see `rust/tests/packed_gemm_parity.rs`).
+//! Dispatch is decided once per process by [`detect`], walking the ISA
+//! ladder top-down per architecture:
+//!
+//! * x86-64: **AVX-VNNI** (`avxvnni`, 4-way u8 x s8 `vpdpbusd` integer
+//!   kernels; f32 still runs the AVX2 kernels) > **AVX2+FMA** > portable;
+//! * aarch64: **NEON dotprod** (`sdot`, 4-way s8 x s8 integer kernels;
+//!   f32 still runs the NEON kernels) > **NEON** > portable.
+//!
+//! `MTSRNN_ISA=portable|avx2|vnni|neon|sdot` pins any rung the host
+//! supports (`MTSRNN_FORCE_PORTABLE=1` survives as an alias for
+//! `portable`).  The portable kernel doubles as the correctness oracle
+//! for every intrinsic path (see `rust/tests/packed_gemm_parity.rs`):
+//! the integer families accumulate exact i32, so all tiers are
+//! bit-identical, not merely close.
 
 // On the audited unsafe allowlist (see `tools/lint` and
 // `docs/UNSAFE.md`): this module is the single boundary where checked
@@ -32,6 +42,8 @@ pub mod avx2;
 #[cfg(target_arch = "aarch64")]
 pub mod neon;
 pub mod portable;
+#[cfg(target_arch = "x86_64")]
+pub mod vnni;
 
 use std::sync::OnceLock;
 
@@ -52,10 +64,20 @@ pub(crate) fn kb_active(pm: Option<&[u64]>, kb: usize) -> bool {
 }
 
 /// Which microkernel family [`detect`] selected for this process.
+///
+/// Every variant exists on every architecture (so tier names parse and
+/// print everywhere); whether one *runs* on the current host is
+/// [`Simd::runs_on`]'s question, asserted at every handle construction.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Simd {
+    /// x86-64 AVX-VNNI (`vpdpbusd` u8 x s8 4-way dot) integer kernels
+    /// over k-quad panels; implies Avx2 (f32 runs the AVX2 kernels).
+    Vnni,
     /// x86-64 AVX2 + FMA intrinsics (16x6 register tile).
     Avx2,
+    /// aarch64 NEON dotprod (`sdot` s8 x s8 4-way dot) integer kernels
+    /// over k-quad panels; implies Neon (f32 runs the NEON kernels).
+    Sdot,
     /// aarch64 NEON intrinsics (16x4 register tile).
     Neon,
     /// Autovectorized fallback (16x4 tile) — also the correctness oracle.
@@ -65,38 +87,109 @@ pub enum Simd {
 impl Simd {
     pub fn name(self) -> &'static str {
         match self {
+            Simd::Vnni => "vnni",
             Simd::Avx2 => "avx2",
+            Simd::Sdot => "sdot",
             Simd::Neon => "neon",
             Simd::Portable => "portable",
         }
+    }
+
+    /// Whether a handle built for `self` may execute when the hardware
+    /// probe returned `detected`: exactly `self`, the portable fallback,
+    /// or one ladder rung down on the same architecture (VNNI detection
+    /// verified avx2+fma; `dotprod` implies the NEON baseline).  This is
+    /// the soundness predicate the `with_dispatch*` constructors assert,
+    /// and what lets parity tests pin any supported rung in-process.
+    pub fn runs_on(self, detected: Simd) -> bool {
+        self == Simd::Portable
+            || self == detected
+            || matches!(
+                (detected, self),
+                (Simd::Vnni, Simd::Avx2) | (Simd::Sdot, Simd::Neon)
+            )
+    }
+}
+
+/// Pure hardware probe: the highest ladder rung the host supports,
+/// ignoring every pinning environment variable.  [`supported_tiers`]
+/// and the `with_dispatch*` soundness asserts key off this, so a pinned
+/// process can still construct (and test) any tier the silicon has.
+pub fn detect_host() -> Simd {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+            if is_x86_feature_detected!("avxvnni") {
+                return Simd::Vnni;
+            }
+            return Simd::Avx2;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            if std::arch::is_aarch64_feature_detected!("dotprod") {
+                return Simd::Sdot;
+            }
+            return Simd::Neon;
+        }
+    }
+    Simd::Portable
+}
+
+/// Every ladder rung the host can execute, best first — the tier list
+/// CI matrixes `MTSRNN_ISA` over (printed by `mtsrnn info`).  Ignores
+/// the pinning env vars on purpose: it answers "what could run here",
+/// not "what was picked".
+pub fn supported_tiers() -> Vec<Simd> {
+    let host = detect_host();
+    [Simd::Vnni, Simd::Avx2, Simd::Sdot, Simd::Neon, Simd::Portable]
+        .into_iter()
+        .filter(|t| t.runs_on(host))
+        .collect()
+}
+
+fn parse_isa(name: &str) -> Option<Simd> {
+    match name {
+        "portable" => Some(Simd::Portable),
+        "avx2" => Some(Simd::Avx2),
+        "vnni" => Some(Simd::Vnni),
+        "neon" => Some(Simd::Neon),
+        "sdot" => Some(Simd::Sdot),
+        _ => None,
     }
 }
 
 /// One-time runtime CPU feature detection (cached for the process).
 ///
-/// `MTSRNN_FORCE_PORTABLE=1` (any value but `0`/empty) pins the process
-/// to the portable kernels regardless of host features — CI uses it to
-/// keep the fallback paths covered on x86 runners, and it doubles as an
-/// escape hatch on hosts with broken feature detection.
+/// `MTSRNN_ISA=portable|avx2|vnni|neon|sdot` pins the process to one
+/// ladder rung — tests and benches use it to cover every tier the host
+/// supports; an unknown name or a tier the hardware lacks panics
+/// loudly rather than silently falling back.  The older
+/// `MTSRNN_FORCE_PORTABLE=1` (any value but `0`/empty) is kept as an
+/// alias for `MTSRNN_ISA=portable` and doubles as an escape hatch on
+/// hosts with broken feature detection.
 pub fn detect() -> Simd {
     static LEVEL: OnceLock<Simd> = OnceLock::new();
     *LEVEL.get_or_init(|| {
+        let host = detect_host();
+        if let Ok(v) = std::env::var("MTSRNN_ISA") {
+            if !v.is_empty() {
+                let want = parse_isa(&v).unwrap_or_else(|| {
+                    panic!("MTSRNN_ISA={v}: unknown tier (expected portable|avx2|vnni|neon|sdot)")
+                });
+                assert!(
+                    want.runs_on(host),
+                    "MTSRNN_ISA={v}: tier not supported on this host (detected {})",
+                    host.name()
+                );
+                return want;
+            }
+        }
         if std::env::var("MTSRNN_FORCE_PORTABLE").is_ok_and(|v| !v.is_empty() && v != "0") {
             return Simd::Portable;
         }
-        #[cfg(target_arch = "x86_64")]
-        {
-            if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
-                return Simd::Avx2;
-            }
-        }
-        #[cfg(target_arch = "aarch64")]
-        {
-            if std::arch::is_aarch64_feature_detected!("neon") {
-                return Simd::Neon;
-            }
-        }
-        Simd::Portable
+        host
     })
 }
 
@@ -165,29 +258,37 @@ pub(crate) fn matmul_range(
     }
     match simd {
         #[cfg(target_arch = "x86_64")]
-        // SAFETY: an Avx2 request only exists when `detect()` returned it
-        // (PackedGemm::new uses detect(); with_dispatch asserts equality
-        // with detect()), i.e. avx2+fma were verified on this host.
-        Simd::Avx2 => unsafe {
+        // SAFETY: an Avx2/Vnni request only exists when `detect_host()`
+        // verified avx2+fma on this host (constructors assert
+        // `Simd::runs_on`; VNNI detection requires avx2+fma too).  The
+        // f32 family has no VNNI kernel — dot instructions are
+        // integer-only — so Vnni routes to the AVX2 f32 kernels.
+        Simd::Avx2 | Simd::Vnni => unsafe {
             avx2::matmul(panels, c, crow0, x, m, k, n, acc, epi, pm_all, p0, p1)
         },
         #[cfg(target_arch = "aarch64")]
-        // SAFETY: NEON is baseline on aarch64; `detect()` verifies it.
-        Simd::Neon => unsafe {
+        // SAFETY: NEON is baseline on aarch64 (and implied by `dotprod`);
+        // `detect_host()` verifies it.  Sdot routes f32 to the NEON
+        // kernels for the same reason Vnni routes to AVX2.
+        Simd::Neon | Simd::Sdot => unsafe {
             neon::matmul(panels, c, crow0, x, m, k, n, acc, epi, pm_all, p0, p1)
         },
         _ => portable::matmul(panels, c, crow0, x, m, k, n, acc, epi, pm_all, p0, p1),
     }
 }
 
-/// q8q integer GEMM over pair-interleaved i8 panels (see
-/// `pack::pack_panels_q8q` for the layout): `c32[m, n] = panels @ xq^T`
-/// with pure i32 accumulation — **no f32 anywhere**.  `xq` holds `n`
-/// quantized frames of length `kp` (i8); `qpair` is the same data as
-/// packed i16 pairs (the AVX2 broadcast form).  Because every product is
-/// exact and integer addition is associative, all three kernel families
-/// produce bit-identical accumulators, and disjoint panel ranges make
-/// the pool-fanned sweep bit-identical to the serial one.
+/// q8q integer GEMM over the dispatched tier's interleaved i8 panels
+/// (pair layout for AVX2/NEON/portable — `pack::pack_panels_q8q` — and
+/// quad layout for VNNI/sdot — `pack::pack_panels_q8q_quad`):
+/// `c32[m, n] = panels @ xq^T` with pure i32 accumulation — **no f32
+/// anywhere**.  `xq` holds `n` quantized frames of length `kp` (i8);
+/// `qpair` is the same data as packed i16 pairs (the AVX2 broadcast
+/// form); `qshift` is the +128-shifted u8 form with `corr` the packed
+/// per-row zero-point corrections (the VNNI pair — empty slices on
+/// every other tier).  Because every product is exact and integer
+/// addition is associative, all kernel families produce bit-identical
+/// accumulators, and disjoint panel ranges make the pool-fanned sweep
+/// bit-identical to the serial one.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn matmul_q8q(
     simd: Simd,
@@ -196,6 +297,8 @@ pub(crate) fn matmul_q8q(
     crow0: usize,
     xq: &[i8],
     qpair: &[i32],
+    qshift: &[u8],
+    corr: &[i32],
     m: usize,
     kp: usize,
     n: usize,
@@ -203,9 +306,9 @@ pub(crate) fn matmul_q8q(
     p0: usize,
     p1: usize,
 ) {
-    // Each architecture consumes one broadcast form; keep both names
-    // live so neither cfg arm trips unused-variable lints.
-    let _ = (&xq, &qpair);
+    // Each architecture consumes one broadcast form; keep every name
+    // live so no cfg arm trips unused-variable lints.
+    let _ = (&xq, &qpair, &qshift, &corr);
     #[cfg(any(debug_assertions, feature = "checks"))]
     if let Err(e) = crate::linalg::contract::check_q8q_dispatch(
         simd,
@@ -214,6 +317,8 @@ pub(crate) fn matmul_q8q(
         crow0,
         xq,
         qpair,
+        qshift,
+        corr,
         m,
         kp,
         n,
@@ -225,14 +330,28 @@ pub(crate) fn matmul_q8q(
     }
     match simd {
         #[cfg(target_arch = "x86_64")]
-        // SAFETY: an Avx2 request only exists when `detect()` returned
-        // it (new_q8q uses detect(); with_dispatch_q8q asserts equality
-        // with detect()), i.e. avx2 was verified on this host.
+        // SAFETY: a Vnni request only exists when `detect_host()`
+        // verified avxvnni (+avx2+fma) on this host — constructors
+        // assert `Simd::runs_on`.
+        Simd::Vnni => unsafe {
+            vnni::matmul_q8q(qpanels, c32, crow0, qshift, corr, m, kp, n, pm_all, p0, p1)
+        },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: an Avx2 request only exists when `detect_host()`
+        // verified avx2+fma on this host (constructors assert
+        // `Simd::runs_on`).
         Simd::Avx2 => unsafe {
             avx2::matmul_q8q(qpanels, c32, crow0, qpair, m, kp, n, pm_all, p0, p1)
         },
         #[cfg(target_arch = "aarch64")]
-        // SAFETY: NEON is baseline on aarch64; `detect()` verifies it.
+        // SAFETY: an Sdot request only exists when `detect_host()`
+        // verified `dotprod` on this host (constructors assert
+        // `Simd::runs_on`).
+        Simd::Sdot => unsafe {
+            neon::matmul_q8q_sdot(qpanels, c32, crow0, xq, m, kp, n, pm_all, p0, p1)
+        },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64; `detect_host()` verifies it.
         Simd::Neon => unsafe {
             neon::matmul_q8q(qpanels, c32, crow0, xq, m, kp, n, pm_all, p0, p1)
         },
@@ -240,12 +359,14 @@ pub(crate) fn matmul_q8q(
     }
 }
 
-/// q4 integer GEMM over nibble-packed panels (see
-/// `pack::pack_panels_q4` for the layout): `c32[m, n] = panels @ xq^T`
-/// with in-register nibble unpack and pure i32 accumulation — the q8q
-/// contract (exact, order-independent, bit-identical across kernel
-/// families and thread counts) at **half** the weight byte stream.
-/// `xq`/`qpair` are the same quantized activation forms q8q consumes.
+/// q4 integer GEMM over nibble-packed panels (pair layout
+/// `pack::pack_panels_q4` for AVX2/NEON/portable, tier-specific quad
+/// layout `pack::pack_panels_q4_quad` for VNNI/sdot):
+/// `c32[m, n] = panels @ xq^T` with in-register nibble unpack and pure
+/// i32 accumulation — the q8q contract (exact, order-independent,
+/// bit-identical across kernel families and thread counts) at **half**
+/// the weight byte stream.  `xq`/`qpair`/`qshift`/`corr` are the same
+/// quantized activation forms q8q consumes.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn matmul_q4(
     simd: Simd,
@@ -254,6 +375,8 @@ pub(crate) fn matmul_q4(
     crow0: usize,
     xq: &[i8],
     qpair: &[i32],
+    qshift: &[u8],
+    corr: &[i32],
     m: usize,
     kp: usize,
     n: usize,
@@ -261,9 +384,9 @@ pub(crate) fn matmul_q4(
     p0: usize,
     p1: usize,
 ) {
-    // Each architecture consumes one broadcast form; keep both names
-    // live so neither cfg arm trips unused-variable lints.
-    let _ = (&xq, &qpair);
+    // Each architecture consumes one broadcast form; keep every name
+    // live so no cfg arm trips unused-variable lints.
+    let _ = (&xq, &qpair, &qshift, &corr);
     #[cfg(any(debug_assertions, feature = "checks"))]
     if let Err(e) = crate::linalg::contract::check_q4_dispatch(
         simd,
@@ -272,6 +395,8 @@ pub(crate) fn matmul_q4(
         crow0,
         xq,
         qpair,
+        qshift,
+        corr,
         m,
         kp,
         n,
@@ -283,14 +408,28 @@ pub(crate) fn matmul_q4(
     }
     match simd {
         #[cfg(target_arch = "x86_64")]
-        // SAFETY: an Avx2 request only exists when `detect()` returned
-        // it (new_q4 uses detect(); with_dispatch_q4 asserts equality
-        // with detect()), i.e. avx2 was verified on this host.
+        // SAFETY: a Vnni request only exists when `detect_host()`
+        // verified avxvnni (+avx2+fma) on this host — constructors
+        // assert `Simd::runs_on`.
+        Simd::Vnni => unsafe {
+            vnni::matmul_q4(q4panels, c32, crow0, qshift, corr, m, kp, n, pm_all, p0, p1)
+        },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: an Avx2 request only exists when `detect_host()`
+        // verified avx2+fma on this host (constructors assert
+        // `Simd::runs_on`).
         Simd::Avx2 => unsafe {
             avx2::matmul_q4(q4panels, c32, crow0, qpair, m, kp, n, pm_all, p0, p1)
         },
         #[cfg(target_arch = "aarch64")]
-        // SAFETY: NEON is baseline on aarch64; `detect()` verifies it.
+        // SAFETY: an Sdot request only exists when `detect_host()`
+        // verified `dotprod` on this host (constructors assert
+        // `Simd::runs_on`).
+        Simd::Sdot => unsafe {
+            neon::matmul_q4_sdot(q4panels, c32, crow0, xq, m, kp, n, pm_all, p0, p1)
+        },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64; `detect_host()` verifies it.
         Simd::Neon => unsafe {
             neon::matmul_q4(q4panels, c32, crow0, xq, m, kp, n, pm_all, p0, p1)
         },
@@ -434,7 +573,22 @@ mod contract_wiring_tests {
         let qpair = vec![0i32; n * (kp / 2)];
         let mut c32 = vec![0i32; m * n];
         let payload = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            matmul_q8q(Simd::Portable, &qpanels, &mut c32, 0, &xq, &qpair, m, kp, n, None, 0, 1);
+            matmul_q8q(
+                Simd::Portable,
+                &qpanels,
+                &mut c32,
+                0,
+                &xq,
+                &qpair,
+                &[],
+                &[],
+                m,
+                kp,
+                n,
+                None,
+                0,
+                1,
+            );
         }))
         .unwrap_err();
         let msg = panic_message(payload);
@@ -451,7 +605,22 @@ mod contract_wiring_tests {
         // Range 1..2 with crow0 = 0 would alias panel 0's output rows.
         let mut c32 = vec![0i32; PACK_MR * n];
         let payload = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            matmul_q4(Simd::Portable, &q4panels, &mut c32, 0, &xq, &qpair, m, kp, n, None, 1, 2);
+            matmul_q4(
+                Simd::Portable,
+                &q4panels,
+                &mut c32,
+                0,
+                &xq,
+                &qpair,
+                &[],
+                &[],
+                m,
+                kp,
+                n,
+                None,
+                1,
+                2,
+            );
         }))
         .unwrap_err();
         let msg = panic_message(payload);

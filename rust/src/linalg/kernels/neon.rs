@@ -15,9 +15,9 @@
 #![allow(unsafe_code)]
 
 use core::arch::aarch64::{
-    vdup_n_u16, vdupq_n_f32, vdupq_n_s32, vfmaq_n_f32, vget_high_s8, vget_low_s8, vld1_s8,
-    vld1q_f32, vld1q_s8, vmull_s8, vpadalq_s16, vreinterpret_s8_u16, vshlq_n_s8, vshrq_n_s8,
-    vst1q_f32, vst1q_s32, vzip1q_s8, vzip2q_s8,
+    vdotq_s32, vdup_n_u16, vdupq_n_f32, vdupq_n_s32, vfmaq_n_f32, vget_high_s8, vget_low_s8,
+    vld1_s8, vld1q_f32, vld1q_s8, vmull_s8, vpadalq_s16, vreinterpret_s8_u16,
+    vreinterpretq_s8_s32, vshlq_n_s8, vshrq_n_s8, vst1q_f32, vst1q_s32, vzip1q_s8, vzip2q_s8,
 };
 
 use super::{kb_active, store_tile, store_tile_i32};
@@ -161,10 +161,10 @@ macro_rules! def_kern_q8q {
         /// lanes — 8 MACs per multiply instruction vs 4 for f32
         /// `vfmaq`, and exact i32 arithmetic throughout (i8·i8 products
         /// fit i16, the pairwise sum widens to i32 before accumulation,
-        /// so nothing ever saturates).  An `sdot`-based variant (4× MACs
-        /// per instruction, needs the `dotprod` feature + a k-quad
-        /// layout) remains future work; it would stay bit-compatible
-        /// since i32 accumulation is order-independent.
+        /// so nothing ever saturates).  On `dotprod` hardware the
+        /// dispatcher selects the `sdot` kernels below instead (4 MACs
+        /// per instruction over k-quad panels); both tiers stay
+        /// bit-compatible since i32 accumulation is order-independent.
         ///
         /// # Safety
         /// Requires neon.  `panel` must hold `kp * PACK_MR` bytes in the
@@ -419,6 +419,292 @@ pub(crate) unsafe fn matmul_q4(
                     3 => k43(panel, xp, kp, j0, pm, &mut tile),
                     2 => k42(panel, xp, kp, j0, pm, &mut tile),
                     _ => k41(panel, xp, kp, j0, pm, &mut tile),
+                }
+            }
+            store_tile_i32(c32, crow0, &tile, j0, nr, pi * PACK_MR, m, n);
+            j0 += nr;
+        }
+    }
+}
+
+macro_rules! def_kern_q8q_sdot {
+    ($name:ident, $nr:literal) => {
+        /// q8q `sdot` microkernel: per k-quad `g` (`kk = 4g`), each
+        /// 16-byte quarter of the 64-byte quad group (4 rows x 4 k,
+        /// row-major quads; i32 lane `l` = row `4q + l`) takes one
+        /// `vdotq_s32` against the broadcast `[x_{4g} .. x_{4g+3}]` i8
+        /// quad — **16 MACs per instruction**, twice the widening
+        /// `vmull_s8` + `vpadalq_s16` rate, natively s8 x s8 (no zero
+        /// point, no correction term) and exact i32 throughout, so the
+        /// accumulators are bit-identical to every other family.
+        ///
+        /// # Safety
+        /// Requires neon+dotprod.  `panel` must hold `kp * PACK_MR`
+        /// bytes in the quad-interleaved q8q layout and `xq` at least
+        /// `(j0 + $nr) * kp` bytes.
+        #[target_feature(enable = "neon,dotprod")]
+        #[allow(clippy::needless_range_loop, clippy::single_element_loop)]
+        unsafe fn $name(
+            panel: *const i8,
+            xq: *const i8,
+            kp: usize,
+            j0: usize,
+            pm: Option<&[u64]>,
+            tile: &mut [[i32; PACK_MR]; NR],
+        ) {
+            let zero = vdupq_n_s32(0);
+            let mut acc = [[zero; 4]; $nr];
+            let mut frames = [xq; $nr];
+            for (jj, f) in frames.iter_mut().enumerate() {
+                // SAFETY: caller guarantees `xq` holds
+                // `(j0 + $nr) * kp` bytes, so frame `j0 + jj` starts
+                // in bounds.
+                *f = unsafe { xq.add((j0 + jj) * kp) };
+            }
+            // Quad loop chunked at SPARSE_KB / 4 quads per sparse
+            // block; skipping is exact (i32), so results stay
+            // bit-identical to the dense sweep.
+            let mut g0 = 0usize;
+            while g0 < kp / 4 {
+                let ge = (g0 + SPARSE_KB / 4).min(kp / 4);
+                if kb_active(pm, g0 / (SPARSE_KB / 4)) {
+                    for g in g0..ge {
+                        // SAFETY: g < kp / 4 and the quad-interleaved
+                        // panel holds kp * PACK_MR = (kp / 4) * 64
+                        // bytes, so all four 16-byte loads stay inside
+                        // quad-group g.
+                        let (w0, w1, w2, w3) = unsafe {
+                            (
+                                vld1q_s8(panel.add(g * 64)),
+                                vld1q_s8(panel.add(g * 64 + 16)),
+                                vld1q_s8(panel.add(g * 64 + 32)),
+                                vld1q_s8(panel.add(g * 64 + 48)),
+                            )
+                        };
+                        for jj in 0..$nr {
+                            // SAFETY: frames[jj] points at a kp-byte
+                            // frame and 4 * g + 3 < kp; unaligned i32
+                            // read of the adjacent byte quad.
+                            let quad = unsafe {
+                                (frames[jj].add(4 * g) as *const i32).read_unaligned()
+                            };
+                            let xp = vreinterpretq_s8_s32(vdupq_n_s32(quad));
+                            acc[jj][0] = vdotq_s32(acc[jj][0], w0, xp);
+                            acc[jj][1] = vdotq_s32(acc[jj][1], w1, xp);
+                            acc[jj][2] = vdotq_s32(acc[jj][2], w2, xp);
+                            acc[jj][3] = vdotq_s32(acc[jj][3], w3, xp);
+                        }
+                    }
+                }
+                g0 = ge;
+            }
+            for jj in 0..$nr {
+                for l in 0..4 {
+                    // SAFETY: tile[jj] is [i32; PACK_MR] = 16 lanes;
+                    // the four 4-lane stores cover elements 0..16.
+                    unsafe { vst1q_s32(tile[jj].as_mut_ptr().add(4 * l), acc[jj][l]) };
+                }
+            }
+        }
+    };
+}
+
+def_kern_q8q_sdot!(ks1, 1);
+def_kern_q8q_sdot!(ks2, 2);
+def_kern_q8q_sdot!(ks3, 3);
+def_kern_q8q_sdot!(ks4, 4);
+
+/// q8q integer GEMM over quad-interleaved panels via `sdot`; same
+/// panel-range / sub-slice contract as [`matmul`], writing raw i32
+/// accumulators.
+///
+/// # Safety
+/// Requires neon+dotprod (guaranteed by the `detect_host()` gate behind
+/// the dispatcher).  The caller must uphold the dispatch contract
+/// validated by `contract::check_q8q_dispatch` at the Sdot tier:
+/// `qpanels` holds `ceil(m / PACK_MR) * PACK_MR * kp` bytes with
+/// `kp % 4 == 0` and within the i32-exactness bound, `xq` holds
+/// `n * kp` bytes, `p0 <= p1 <= ceil(m / PACK_MR)`,
+/// `crow0 == p0 * PACK_MR`, and `c32` covers exactly the range's rows.
+#[target_feature(enable = "neon,dotprod")]
+#[allow(clippy::too_many_arguments)]
+pub(crate) unsafe fn matmul_q8q_sdot(
+    qpanels: &[i8],
+    c32: &mut [i32],
+    crow0: usize,
+    xq: &[i8],
+    m: usize,
+    kp: usize,
+    n: usize,
+    pm_all: Option<(&[u64], usize)>,
+    p0: usize,
+    p1: usize,
+) {
+    debug_assert_eq!(qpanels.len(), m.div_ceil(PACK_MR) * PACK_MR * kp);
+    debug_assert_eq!(kp % 4, 0);
+    let mut tile = [[0i32; PACK_MR]; NR];
+    for pi in p0..p1 {
+        let panel = qpanels[pi * PACK_MR * kp..].as_ptr();
+        let pm = pm_all.map(|(bits, wpp)| &bits[pi * wpp..(pi + 1) * wpp]);
+        let xp = xq.as_ptr();
+        let mut j0 = 0;
+        while j0 < n {
+            let nr = NR.min(n - j0);
+            // SAFETY: `panel` starts a full `kp * PACK_MR`-byte quad
+            // panel and `xq` holds n * kp bytes with j0 + nr <= n —
+            // exactly each kernel's documented requirement.
+            unsafe {
+                match nr {
+                    4 => ks4(panel, xp, kp, j0, pm, &mut tile),
+                    3 => ks3(panel, xp, kp, j0, pm, &mut tile),
+                    2 => ks2(panel, xp, kp, j0, pm, &mut tile),
+                    _ => ks1(panel, xp, kp, j0, pm, &mut tile),
+                }
+            }
+            store_tile_i32(c32, crow0, &tile, j0, nr, pi * PACK_MR, m, n);
+            j0 += nr;
+        }
+    }
+}
+
+macro_rules! def_kern_q4_sdot {
+    ($name:ident, $nr:literal) => {
+        /// q4 `sdot` microkernel: per k-quad, two 16-byte loads carry
+        /// **64 weights** (two signed nibbles per byte).  `vshl/vshr`
+        /// by 4 sign-extend the low and high nibbles, then
+        /// `vzip1q/vzip2q` rebuild row-major quads — the sdot group
+        /// layout (`SDOT_Q4_GRP_BASE`) stores row quarters sequentially
+        /// so the zip outputs are exactly the four 4-row weight vectors
+        /// `vdotq_s32` wants, with no extra shuffle.  Same 16 MACs per
+        /// dot instruction as the q8q sdot kernel at half the weight
+        /// bytes, exact i32 throughout.
+        ///
+        /// # Safety
+        /// Requires neon+dotprod.  `panel` must hold `kp * PACK_MR / 2`
+        /// bytes in the sdot nibble-quad layout and `xq` at least
+        /// `(j0 + $nr) * kp` bytes.
+        #[target_feature(enable = "neon,dotprod")]
+        #[allow(clippy::needless_range_loop, clippy::single_element_loop)]
+        unsafe fn $name(
+            panel: *const u8,
+            xq: *const i8,
+            kp: usize,
+            j0: usize,
+            pm: Option<&[u64]>,
+            tile: &mut [[i32; PACK_MR]; NR],
+        ) {
+            let zero = vdupq_n_s32(0);
+            let mut acc = [[zero; 4]; $nr];
+            let mut frames = [xq; $nr];
+            for (jj, f) in frames.iter_mut().enumerate() {
+                // SAFETY: caller guarantees `xq` holds
+                // `(j0 + $nr) * kp` bytes, so frame `j0 + jj` starts
+                // in bounds.
+                *f = unsafe { xq.add((j0 + jj) * kp) };
+            }
+            let mut g0 = 0usize;
+            while g0 < kp / 4 {
+                let ge = (g0 + SPARSE_KB / 4).min(kp / 4);
+                if kb_active(pm, g0 / (SPARSE_KB / 4)) {
+                    for g in g0..ge {
+                        // SAFETY: g < kp / 4 and the nibble-quad panel
+                        // holds (kp / 4) * 32 bytes, so both 16-byte
+                        // loads stay inside quad-group g.
+                        let (raw0, raw1) = unsafe {
+                            (
+                                vld1q_s8(panel.add(g * 32) as *const i8),
+                                vld1q_s8(panel.add(g * 32 + 16) as *const i8),
+                            )
+                        };
+                        let lo0 = vshrq_n_s8::<4>(vshlq_n_s8::<4>(raw0));
+                        let hi0 = vshrq_n_s8::<4>(raw0);
+                        let lo1 = vshrq_n_s8::<4>(vshlq_n_s8::<4>(raw1));
+                        let hi1 = vshrq_n_s8::<4>(raw1);
+                        // Zip restores [w0, w1, w2, w3] per row: rows
+                        // 0-3 / 4-7 from the first half, 8-11 / 12-15
+                        // from the second.
+                        let w0 = vzip1q_s8(lo0, hi0);
+                        let w1 = vzip2q_s8(lo0, hi0);
+                        let w2 = vzip1q_s8(lo1, hi1);
+                        let w3 = vzip2q_s8(lo1, hi1);
+                        for jj in 0..$nr {
+                            // SAFETY: frames[jj] points at a kp-byte
+                            // frame and 4 * g + 3 < kp; unaligned i32
+                            // read of the adjacent byte quad.
+                            let quad = unsafe {
+                                (frames[jj].add(4 * g) as *const i32).read_unaligned()
+                            };
+                            let xp = vreinterpretq_s8_s32(vdupq_n_s32(quad));
+                            acc[jj][0] = vdotq_s32(acc[jj][0], w0, xp);
+                            acc[jj][1] = vdotq_s32(acc[jj][1], w1, xp);
+                            acc[jj][2] = vdotq_s32(acc[jj][2], w2, xp);
+                            acc[jj][3] = vdotq_s32(acc[jj][3], w3, xp);
+                        }
+                    }
+                }
+                g0 = ge;
+            }
+            for jj in 0..$nr {
+                for l in 0..4 {
+                    // SAFETY: tile[jj] is [i32; PACK_MR] = 16 lanes;
+                    // the four 4-lane stores cover elements 0..16.
+                    unsafe { vst1q_s32(tile[jj].as_mut_ptr().add(4 * l), acc[jj][l]) };
+                }
+            }
+        }
+    };
+}
+
+def_kern_q4_sdot!(ks41, 1);
+def_kern_q4_sdot!(ks42, 2);
+def_kern_q4_sdot!(ks43, 3);
+def_kern_q4_sdot!(ks44, 4);
+
+/// q4 integer GEMM over sdot nibble-quad panels; same panel-range /
+/// sub-slice contract as [`matmul`], writing raw i32 accumulators.
+///
+/// # Safety
+/// Requires neon+dotprod (guaranteed by the `detect_host()` gate behind
+/// the dispatcher).  The caller must uphold the dispatch contract
+/// validated by `contract::check_q4_dispatch` at the Sdot tier:
+/// `q4panels` holds `ceil(m / PACK_MR) * (PACK_MR / 2) * kp` bytes with
+/// `kp % 4 == 0` and within the q4 i32-exactness bound, `xq` holds
+/// `n * kp` bytes, `p0 <= p1 <= ceil(m / PACK_MR)`,
+/// `crow0 == p0 * PACK_MR`, and `c32` covers exactly the range's rows.
+#[target_feature(enable = "neon,dotprod")]
+#[allow(clippy::too_many_arguments)]
+pub(crate) unsafe fn matmul_q4_sdot(
+    q4panels: &[u8],
+    c32: &mut [i32],
+    crow0: usize,
+    xq: &[i8],
+    m: usize,
+    kp: usize,
+    n: usize,
+    pm_all: Option<(&[u64], usize)>,
+    p0: usize,
+    p1: usize,
+) {
+    debug_assert_eq!(q4panels.len(), m.div_ceil(PACK_MR) * (PACK_MR / 2) * kp);
+    debug_assert_eq!(kp % 4, 0);
+    let mut tile = [[0i32; PACK_MR]; NR];
+    for pi in p0..p1 {
+        let panel = q4panels[pi * (PACK_MR / 2) * kp..].as_ptr();
+        let pm = pm_all.map(|(bits, wpp)| &bits[pi * wpp..(pi + 1) * wpp]);
+        let xp = xq.as_ptr();
+        let mut j0 = 0;
+        while j0 < n {
+            let nr = NR.min(n - j0);
+            // SAFETY: `panel` starts a full `(kp / 4) * 32`-byte
+            // nibble-quad panel and `xq` holds n * kp bytes with
+            // j0 + nr <= n — exactly each kernel's documented
+            // requirement.
+            unsafe {
+                match nr {
+                    4 => ks44(panel, xp, kp, j0, pm, &mut tile),
+                    3 => ks43(panel, xp, kp, j0, pm, &mut tile),
+                    2 => ks42(panel, xp, kp, j0, pm, &mut tile),
+                    _ => ks41(panel, xp, kp, j0, pm, &mut tile),
                 }
             }
             store_tile_i32(c32, crow0, &tile, j0, nr, pi * PACK_MR, m, n);

@@ -1,0 +1,363 @@
+//! AVX-VNNI integer microkernel: 16-row panels x 6-column register
+//! tile over k-quad-interleaved panels.
+//!
+//! Per k-quad: two 32-byte unit-stride panel loads plus one 4-byte
+//! activation broadcast per frame column feed `2 * NR` independent
+//! `vpdpbusd` chains — each instruction retires **4 MACs per output
+//! row** (64 per ymm), twice the `madd_epi16` pair rate of the AVX2
+//! tier for the same weight stream.
+//!
+//! `vpdpbusd` multiplies *unsigned* bytes by signed bytes, so the
+//! activations arrive pre-shifted by the +128 zero point (`qshift` in
+//! [`crate::linalg::pack::QuantScratch`]) and every accumulator is
+//! **initialized at `-corr[row]`** where `corr[row] = 128 * sum_k w` —
+//! by `sum_k w * (x + 128) - 128 * sum_k w == sum_k w * x` the final
+//! value is the exact signed dot product, bit-identical to every other
+//! kernel family.  The `VNNI_Q8_MAX_K` / `VNNI_Q4_MAX_K` bounds keep
+//! every intermediate (the un-cancelled correction prefix plus shifted
+//! partial sums) inside i32, so no wrap ever occurs.
+
+// On the audited unsafe allowlist (see `tools/lint` and
+// `docs/UNSAFE.md`).  Under `deny(unsafe_op_in_unsafe_fn)` the value
+// intrinsics are safe inside these `#[target_feature]` functions; the
+// `unsafe {}` blocks below mark exactly the raw-pointer operations,
+// each with the bound that keeps it in range.  The bounds themselves
+// are validated at the dispatch boundary by `linalg::contract`.
+#![allow(unsafe_code)]
+
+use core::arch::x86_64::{
+    __m256i, _mm256_and_si256, _mm256_dpbusd_avx_epi32, _mm256_loadu_si256, _mm256_set1_epi8,
+    _mm256_set1_epi32, _mm256_setzero_si256, _mm256_srli_epi16, _mm256_storeu_si256,
+    _mm256_sub_epi8, _mm256_sub_epi32, _mm256_unpackhi_epi8, _mm256_unpacklo_epi8,
+    _mm256_xor_si256,
+};
+
+use super::{kb_active, store_tile_i32};
+use crate::linalg::pack::{PACK_MR, SPARSE_KB};
+
+/// Register-tile width (frame columns per microkernel pass) — same
+/// 16x6 tile shape as the AVX2 tier: 12 ymm accumulators + 2 weight
+/// registers + 1 broadcast fill the 16-register ymm file.
+pub(crate) const NR: usize = 6;
+
+macro_rules! def_kern_q8q {
+    ($name:ident, $nr:literal) => {
+        /// q8q VNNI microkernel: per k-quad `g` (`kk = 4g`), the two
+        /// 32-byte halves of the 64-byte quad group (row-major quads;
+        /// i32 lane `l` = row `l` / `8 + l`) each take one `vpdpbusd`
+        /// against the broadcast `[xu_{4g} .. xu_{4g+3}]` u8 quad.
+        /// Accumulators start at `-corr` (see the module docs), so the
+        /// finished lane is the exact signed dot product.
+        ///
+        /// # Safety
+        /// Requires avx2+avxvnni.  `panel` must hold `kp * PACK_MR`
+        /// bytes in the quad-interleaved q8q layout, `qshift` at least
+        /// `(j0 + $nr) * kp` shifted bytes, and `corrp` this panel's
+        /// `PACK_MR` correction terms.
+        #[target_feature(enable = "avx2,avxvnni")]
+        #[allow(clippy::needless_range_loop, clippy::single_element_loop)]
+        unsafe fn $name(
+            panel: *const i8,
+            qshift: *const u8,
+            corrp: *const i32,
+            kp: usize,
+            j0: usize,
+            pm: Option<&[u64]>,
+            tile: &mut [[i32; PACK_MR]; NR],
+        ) {
+            // SAFETY: caller guarantees `corrp` points at PACK_MR i32
+            // corrections, so both 8-lane loads stay in bounds.
+            let (c0, c1) = unsafe {
+                (
+                    _mm256_loadu_si256(corrp as *const __m256i),
+                    _mm256_loadu_si256(corrp.add(8) as *const __m256i),
+                )
+            };
+            let zero = _mm256_setzero_si256();
+            let mut lo = [_mm256_sub_epi32(zero, c0); $nr];
+            let mut hi = [_mm256_sub_epi32(zero, c1); $nr];
+            let mut frames = [qshift; $nr];
+            for (jj, f) in frames.iter_mut().enumerate() {
+                // SAFETY: caller guarantees `qshift` holds
+                // `(j0 + $nr) * kp` bytes, so frame `j0 + jj` starts in
+                // bounds.
+                *f = unsafe { qshift.add((j0 + jj) * kp) };
+            }
+            // Quad loop chunked at SPARSE_KB / 4 quads per sparse
+            // block; skipping is exact (skipped blocks are all-zero
+            // weights, contributing 0 to both the dot and `corr`), so
+            // results stay bit-identical to the dense sweep.
+            let mut g0 = 0usize;
+            while g0 < kp / 4 {
+                let ge = (g0 + SPARSE_KB / 4).min(kp / 4);
+                if kb_active(pm, g0 / (SPARSE_KB / 4)) {
+                    for g in g0..ge {
+                        // SAFETY: g < kp / 4 and the quad-interleaved
+                        // panel holds kp * PACK_MR = (kp / 4) * 64
+                        // bytes, so both 32-byte loads stay inside
+                        // quad-group g.
+                        let w0 = unsafe { _mm256_loadu_si256(panel.add(g * 64) as *const __m256i) };
+                        // SAFETY: as above, second half of group g.
+                        let w1 =
+                            unsafe { _mm256_loadu_si256(panel.add(g * 64 + 32) as *const __m256i) };
+                        for jj in 0..$nr {
+                            // SAFETY: frames[jj] points at a kp-byte
+                            // frame and 4 * g + 3 < kp.
+                            let q = unsafe {
+                                (frames[jj].add(4 * g) as *const i32).read_unaligned()
+                            };
+                            let b = _mm256_set1_epi32(q);
+                            lo[jj] = _mm256_dpbusd_avx_epi32(lo[jj], b, w0);
+                            hi[jj] = _mm256_dpbusd_avx_epi32(hi[jj], b, w1);
+                        }
+                    }
+                }
+                g0 = ge;
+            }
+            for jj in 0..$nr {
+                // SAFETY: tile[jj] is [i32; PACK_MR] = 16 lanes; the
+                // two 8-lane stores cover exactly elements 0..16.
+                unsafe {
+                    _mm256_storeu_si256(tile[jj].as_mut_ptr() as *mut __m256i, lo[jj]);
+                    _mm256_storeu_si256(tile[jj].as_mut_ptr().add(8) as *mut __m256i, hi[jj]);
+                }
+            }
+        }
+    };
+}
+
+def_kern_q8q!(kv1, 1);
+def_kern_q8q!(kv2, 2);
+def_kern_q8q!(kv3, 3);
+def_kern_q8q!(kv4, 4);
+def_kern_q8q!(kv5, 5);
+def_kern_q8q!(kv6, 6);
+
+/// q8q integer GEMM over quad-interleaved panels; same panel-range /
+/// sub-slice contract as the AVX2 driver, writing raw i32 accumulators.
+///
+/// # Safety
+/// Requires avx2+avxvnni (guaranteed by the `detect_host()` gate behind
+/// the dispatcher).  The caller must uphold the dispatch contract
+/// validated by `contract::check_q8q_dispatch` at the Vnni tier:
+/// `qpanels` holds `ceil(m / PACK_MR) * PACK_MR * kp` bytes with
+/// `kp % 4 == 0` and within the `VNNI_Q8_MAX_K` exactness bound,
+/// `qshift` holds `n * kp` shifted activation bytes, `corr` holds
+/// `ceil(m / PACK_MR) * PACK_MR` per-row corrections,
+/// `p0 <= p1 <= ceil(m / PACK_MR)`, `crow0 == p0 * PACK_MR`, and `c32`
+/// covers exactly the range's rows.
+#[target_feature(enable = "avx2,avxvnni")]
+#[allow(clippy::too_many_arguments)]
+pub(crate) unsafe fn matmul_q8q(
+    qpanels: &[i8],
+    c32: &mut [i32],
+    crow0: usize,
+    qshift: &[u8],
+    corr: &[i32],
+    m: usize,
+    kp: usize,
+    n: usize,
+    pm_all: Option<(&[u64], usize)>,
+    p0: usize,
+    p1: usize,
+) {
+    debug_assert_eq!(qpanels.len(), m.div_ceil(PACK_MR) * PACK_MR * kp);
+    debug_assert_eq!(corr.len(), m.div_ceil(PACK_MR) * PACK_MR);
+    debug_assert_eq!(kp % 4, 0);
+    let mut tile = [[0i32; PACK_MR]; NR];
+    for pi in p0..p1 {
+        let panel = qpanels[pi * PACK_MR * kp..].as_ptr();
+        let corrp = corr[pi * PACK_MR..].as_ptr();
+        let pm = pm_all.map(|(bits, wpp)| &bits[pi * wpp..(pi + 1) * wpp]);
+        let qs = qshift.as_ptr();
+        let mut j0 = 0;
+        while j0 < n {
+            let nr = NR.min(n - j0);
+            // SAFETY: `panel` starts a full `kp * PACK_MR`-byte quad
+            // panel, `corrp` its PACK_MR corrections, and `qshift`
+            // holds n * kp bytes with j0 + nr <= n — exactly each
+            // kernel's documented requirement.
+            unsafe {
+                match nr {
+                    6 => kv6(panel, qs, corrp, kp, j0, pm, &mut tile),
+                    5 => kv5(panel, qs, corrp, kp, j0, pm, &mut tile),
+                    4 => kv4(panel, qs, corrp, kp, j0, pm, &mut tile),
+                    3 => kv3(panel, qs, corrp, kp, j0, pm, &mut tile),
+                    2 => kv2(panel, qs, corrp, kp, j0, pm, &mut tile),
+                    _ => kv1(panel, qs, corrp, kp, j0, pm, &mut tile),
+                }
+            }
+            store_tile_i32(c32, crow0, &tile, j0, nr, pi * PACK_MR, m, n);
+            j0 += nr;
+        }
+    }
+}
+
+macro_rules! def_kern_q4 {
+    ($name:ident, $nr:literal) => {
+        /// q4 VNNI microkernel: per k-quad, one 32-byte load carries
+        /// **64 weights** (two signed nibbles per byte).  Sign
+        /// extension stays in the byte domain — AVX2 has no 8-bit
+        /// shifts, so `(n & 0x0F) ^ 8 - 8` recovers the low nibble and
+        /// the same trick on `(bytes >> 4) & 0x0F` the high one — then
+        /// one `unpacklo/hi_epi8` pair rebuilds row-major quads.  The
+        /// panel layout pre-compensates unpack's per-128-bit-lane
+        /// traversal (`VNNI_Q4_GRP_BASE`), so no cross-lane permute is
+        /// ever needed; the `vpdpbusd` accumulation and `-corr` init
+        /// then match the q8q kernel exactly.
+        ///
+        /// # Safety
+        /// Requires avx2+avxvnni.  `panel` must hold `kp * PACK_MR / 2`
+        /// bytes in the VNNI nibble-quad layout, `qshift` at least
+        /// `(j0 + $nr) * kp` shifted bytes, and `corrp` this panel's
+        /// `PACK_MR` correction terms.
+        #[target_feature(enable = "avx2,avxvnni")]
+        #[allow(clippy::needless_range_loop, clippy::single_element_loop)]
+        unsafe fn $name(
+            panel: *const u8,
+            qshift: *const u8,
+            corrp: *const i32,
+            kp: usize,
+            j0: usize,
+            pm: Option<&[u64]>,
+            tile: &mut [[i32; PACK_MR]; NR],
+        ) {
+            // SAFETY: caller guarantees `corrp` points at PACK_MR i32
+            // corrections, so both 8-lane loads stay in bounds.
+            let (c0, c1) = unsafe {
+                (
+                    _mm256_loadu_si256(corrp as *const __m256i),
+                    _mm256_loadu_si256(corrp.add(8) as *const __m256i),
+                )
+            };
+            let zero = _mm256_setzero_si256();
+            let mut lo = [_mm256_sub_epi32(zero, c0); $nr];
+            let mut hi = [_mm256_sub_epi32(zero, c1); $nr];
+            let mut frames = [qshift; $nr];
+            for (jj, f) in frames.iter_mut().enumerate() {
+                // SAFETY: caller guarantees `qshift` holds
+                // `(j0 + $nr) * kp` bytes, so frame `j0 + jj` starts in
+                // bounds.
+                *f = unsafe { qshift.add((j0 + jj) * kp) };
+            }
+            let nib = _mm256_set1_epi8(0x0F);
+            let sgn = _mm256_set1_epi8(0x08);
+            let mut g0 = 0usize;
+            while g0 < kp / 4 {
+                let ge = (g0 + SPARSE_KB / 4).min(kp / 4);
+                if kb_active(pm, g0 / (SPARSE_KB / 4)) {
+                    for g in g0..ge {
+                        // SAFETY: g < kp / 4 and the nibble-quad panel
+                        // holds (kp / 4) * 32 bytes, so the 32-byte
+                        // load covers exactly quad-group g.
+                        let raw =
+                            unsafe { _mm256_loadu_si256(panel.add(g * 32) as *const __m256i) };
+                        // Byte-domain nibble sign extension: for
+                        // n in 0..16, ((n ^ 8) - 8) maps 0..8 -> n and
+                        // 8..16 -> n - 16; sub_epi8 borrows never cross
+                        // byte lanes.
+                        let ln = _mm256_sub_epi8(
+                            _mm256_xor_si256(_mm256_and_si256(raw, nib), sgn),
+                            sgn,
+                        );
+                        let hn = _mm256_sub_epi8(
+                            _mm256_xor_si256(
+                                _mm256_and_si256(_mm256_srli_epi16(raw, 4), nib),
+                                sgn,
+                            ),
+                            sgn,
+                        );
+                        let w0 = _mm256_unpacklo_epi8(ln, hn);
+                        let w1 = _mm256_unpackhi_epi8(ln, hn);
+                        for jj in 0..$nr {
+                            // SAFETY: frames[jj] points at a kp-byte
+                            // frame and 4 * g + 3 < kp.
+                            let q = unsafe {
+                                (frames[jj].add(4 * g) as *const i32).read_unaligned()
+                            };
+                            let b = _mm256_set1_epi32(q);
+                            lo[jj] = _mm256_dpbusd_avx_epi32(lo[jj], b, w0);
+                            hi[jj] = _mm256_dpbusd_avx_epi32(hi[jj], b, w1);
+                        }
+                    }
+                }
+                g0 = ge;
+            }
+            for jj in 0..$nr {
+                // SAFETY: tile[jj] is [i32; PACK_MR] = 16 lanes; the
+                // two 8-lane stores cover exactly elements 0..16.
+                unsafe {
+                    _mm256_storeu_si256(tile[jj].as_mut_ptr() as *mut __m256i, lo[jj]);
+                    _mm256_storeu_si256(tile[jj].as_mut_ptr().add(8) as *mut __m256i, hi[jj]);
+                }
+            }
+        }
+    };
+}
+
+def_kern_q4!(kv41, 1);
+def_kern_q4!(kv42, 2);
+def_kern_q4!(kv43, 3);
+def_kern_q4!(kv44, 4);
+def_kern_q4!(kv45, 5);
+def_kern_q4!(kv46, 6);
+
+/// q4 integer GEMM over VNNI nibble-quad panels; same panel-range /
+/// sub-slice contract as the AVX2 driver, writing raw i32 accumulators.
+///
+/// # Safety
+/// Requires avx2+avxvnni (guaranteed by the `detect_host()` gate behind
+/// the dispatcher).  The caller must uphold the dispatch contract
+/// validated by `contract::check_q4_dispatch` at the Vnni tier:
+/// `q4panels` holds `ceil(m / PACK_MR) * (PACK_MR / 2) * kp` bytes with
+/// `kp % 4 == 0` and within the `VNNI_Q4_MAX_K` exactness bound,
+/// `qshift` holds `n * kp` shifted activation bytes, `corr` holds
+/// `ceil(m / PACK_MR) * PACK_MR` per-row corrections,
+/// `p0 <= p1 <= ceil(m / PACK_MR)`, `crow0 == p0 * PACK_MR`, and `c32`
+/// covers exactly the range's rows.
+#[target_feature(enable = "avx2,avxvnni")]
+#[allow(clippy::too_many_arguments)]
+pub(crate) unsafe fn matmul_q4(
+    q4panels: &[u8],
+    c32: &mut [i32],
+    crow0: usize,
+    qshift: &[u8],
+    corr: &[i32],
+    m: usize,
+    kp: usize,
+    n: usize,
+    pm_all: Option<(&[u64], usize)>,
+    p0: usize,
+    p1: usize,
+) {
+    debug_assert_eq!(q4panels.len(), m.div_ceil(PACK_MR) * (PACK_MR / 2) * kp);
+    debug_assert_eq!(corr.len(), m.div_ceil(PACK_MR) * PACK_MR);
+    debug_assert_eq!(kp % 4, 0);
+    let mut tile = [[0i32; PACK_MR]; NR];
+    for pi in p0..p1 {
+        let panel = q4panels[pi * (PACK_MR / 2) * kp..].as_ptr();
+        let corrp = corr[pi * PACK_MR..].as_ptr();
+        let pm = pm_all.map(|(bits, wpp)| &bits[pi * wpp..(pi + 1) * wpp]);
+        let qs = qshift.as_ptr();
+        let mut j0 = 0;
+        while j0 < n {
+            let nr = NR.min(n - j0);
+            // SAFETY: `panel` starts a full `(kp / 4) * 32`-byte
+            // nibble-quad panel, `corrp` its PACK_MR corrections, and
+            // `qshift` holds n * kp bytes with j0 + nr <= n — exactly
+            // each kernel's documented requirement.
+            unsafe {
+                match nr {
+                    6 => kv46(panel, qs, corrp, kp, j0, pm, &mut tile),
+                    5 => kv45(panel, qs, corrp, kp, j0, pm, &mut tile),
+                    4 => kv44(panel, qs, corrp, kp, j0, pm, &mut tile),
+                    3 => kv43(panel, qs, corrp, kp, j0, pm, &mut tile),
+                    2 => kv42(panel, qs, corrp, kp, j0, pm, &mut tile),
+                    _ => kv41(panel, qs, corrp, kp, j0, pm, &mut tile),
+                }
+            }
+            store_tile_i32(c32, crow0, &tile, j0, nr, pi * PACK_MR, m, n);
+            j0 += nr;
+        }
+    }
+}

@@ -36,7 +36,7 @@ pub use gemm::{
     add_row_bias, dot, gemm, gemm_acc, gemm_bt, gemm_bt_acc, gemm_naive, gemv, gemv_acc,
     SMALL_N_CUTOFF,
 };
-pub use kernels::{detect as detect_simd, Simd};
+pub use kernels::{detect as detect_simd, detect_host, supported_tiers, Simd};
 pub use matrix::{transpose_into, Matrix};
 pub use pack::{
     Act, Epilogue, PackedGemm, PackedMatrix, PackedQuantGemm, PanelMask, QuantScratch, PACK_MR,

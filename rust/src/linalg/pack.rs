@@ -10,9 +10,12 @@
 //!   the whole K sweep — sequential hardware prefetch, one TLB walk per
 //!   page, and SIMD lanes that map directly onto output rows (no
 //!   horizontal reductions anywhere).
-//! * **Runtime dispatch** ([`super::kernels`]): AVX2+FMA and NEON
-//!   intrinsic microkernels selected once per process, with the portable
-//!   kernel as fallback and correctness oracle.
+//! * **Runtime dispatch** ([`super::kernels`]): intrinsic microkernels
+//!   selected once per process from an ISA ladder (AVX-VNNI > AVX2+FMA
+//!   on x86_64, NEON dotprod > NEON on aarch64), with the portable
+//!   kernel as fallback and correctness oracle.  The integer panel
+//!   layout follows the tier: the 4-way byte-dot tiers pack k-quads,
+//!   the pair tiers pack k-pairs.
 //! * **Fused epilogue** ([`Epilogue`]): per-row bias and the gate
 //!   activations are applied to the register tile as it is stored,
 //!   eliminating the separate `add_row_bias` pass and the activation
@@ -58,8 +61,9 @@ pub const PACK_MR: usize = 16;
 /// Sparse-block width along `K`: the block-sparsity bitmap
 /// ([`PanelMask`]) records zero blocks of `PACK_MR x SPARSE_KB` weights,
 /// and the kernels skip a whole block's k-range when its bit is clear.
-/// Must stay even — the integer kernels walk K in pairs and chunk their
-/// pair loop at `SPARSE_KB / 2`.
+/// Must stay divisible by 4 — the pair-layout integer kernels walk K in
+/// pairs and chunk their loop at `SPARSE_KB / 2`, the quad-layout (dot)
+/// kernels walk K in quads and chunk at `SPARSE_KB / 4`.
 pub const SPARSE_KB: usize = 32;
 
 /// Activation applied per output element by the fused epilogue.
@@ -327,6 +331,76 @@ fn pack_panels_q8q(q: &[i8], m: usize, k: usize) -> (Vec<i8>, usize) {
     (out, kp)
 }
 
+/// Largest `K` the **VNNI** q8q path accepts.  `vpdpbusd` is u8 x s8, so
+/// the activations carry a +128 zero-point shift (`xu = x + 128 <= 255`)
+/// and the kernel subtracts the per-row correction `128 * sum_k w` by
+/// *initializing* the accumulator at `-corr`.  Any intermediate value is
+/// then bounded by `K * 127 * (128 + 255)`: the correction prefix not
+/// yet cancelled contributes at most `128 * |w|` per lane-k and the
+/// shifted products at most `255 * |w|`.  Tighter than [`Q8_MAX_K`] by
+/// ~3x; shapes past it demote to the AVX2 pair tier at construction.
+pub(crate) const VNNI_Q8_MAX_K: usize = (i32::MAX as usize) / (127 * 383);
+
+/// Repack a row-major `[m, k]` int8 matrix into the *quad-interleaved*
+/// panel layout the 4-way byte-dot kernels (AVX-VNNI `vpdpbusd`, NEON
+/// `sdot`) consume.  Returns the panels and `kp` (`k` rounded up to a
+/// multiple of 4; pad columns are zero, contributing exactly 0 to every
+/// integer dot product).
+///
+/// Per `PACK_MR`-row panel, per k-quad `g` (`kk = 4g`), 64 bytes,
+/// row-major quads:
+///
+/// ```text
+/// [ r0@kk..kk+4 | r1@kk..kk+4 | ... | r15@kk..kk+4 ]
+/// ```
+///
+/// VNNI reads the group as two 32-byte ymm loads (i32 lanes = rows 0..8
+/// and 8..16); sdot reads four 16-byte q loads (lane `l` of load `q` =
+/// row `4q + l`).  Both broadcast one activation quad per i32 lane, so
+/// each dot instruction retires 4 MACs per output row — twice the pair
+/// layout's `madd_epi16` / `vmull_s8` rate.
+fn pack_panels_q8q_quad(q: &[i8], m: usize, k: usize) -> (Vec<i8>, usize) {
+    assert_eq!(q.len(), m * k, "pack: Q must be [m, k]");
+    let kp = k.next_multiple_of(4);
+    let np = m.div_ceil(PACK_MR);
+    let mut out = vec![0i8; np * PACK_MR * kp];
+    for pi in 0..np {
+        let base = pi * PACK_MR * kp;
+        for g in 0..kp / 4 {
+            let kk = 4 * g;
+            for r in 0..PACK_MR {
+                let row = pi * PACK_MR + r;
+                if row >= m {
+                    continue;
+                }
+                for j in 0..(k - kk).min(4) {
+                    out[base + g * 64 + r * 4 + j] = q[row * k + kk + j];
+                }
+            }
+        }
+    }
+    (out, kp)
+}
+
+/// Per-row zero-point corrections for the VNNI u8 x s8 kernels:
+/// `corr[row] = 128 * sum_k w[row, k]`, indexed by absolute packed row
+/// (`np * PACK_MR` entries; padding rows stay 0).  Exactness:
+/// `sum_k w * (x + 128) - 128 * sum_k w == sum_k w * x` in exact integer
+/// arithmetic, and the bound check ([`VNNI_Q8_MAX_K`] /
+/// [`VNNI_Q4_MAX_K`]) guarantees no intermediate wraps.  Sparse skip
+/// stays consistent: a clear mask bit certifies every weight in the
+/// block is zero, so skipped blocks contribute 0 to both the dot and the
+/// correction sum.
+fn vnni_row_corrections(q: &[i8], m: usize, k: usize) -> Vec<i32> {
+    assert_eq!(q.len(), m * k, "corr: Q must be [m, k]");
+    let np = m.div_ceil(PACK_MR);
+    let mut corr = vec![0i32; np * PACK_MR];
+    for (row, c) in corr.iter_mut().enumerate().take(m) {
+        *c = 128 * q[row * k..(row + 1) * k].iter().map(|&w| i32::from(w)).sum::<i32>();
+    }
+    corr
+}
+
 /// Largest `K` the q4 integer path accepts: `|w| <= 7` and `|x| <= 127`
 /// bound the i32 accumulator magnitude by `K * 7 * 127` — the same
 /// overflow-freedom argument as [`Q8_MAX_K`], ~18x roomier.
@@ -372,6 +446,69 @@ fn pack_panels_q4(q: &[i8], m: usize, k: usize) -> (Vec<u8>, usize) {
     (out, kp)
 }
 
+/// Largest `K` the VNNI q4 path accepts: same shifted-activation bound
+/// as [`VNNI_Q8_MAX_K`] with `|w| <= 7` — roomy enough that real shapes
+/// never demote.
+pub(crate) const VNNI_Q4_MAX_K: usize = (i32::MAX as usize) / (7 * 383);
+
+/// Row-quarter byte offsets of the VNNI quad-q4 group layout: after the
+/// kernel splits a 32-byte group into sign-extended low/high nibble
+/// vectors, `_mm256_unpacklo_epi8` interleaves **per 128-bit lane**, so
+/// producing row-major quads for rows 0..8 in the low result (and 8..16
+/// in the high one) needs rows 4..8 stored in the *upper* lane half —
+/// quarters land at byte offsets 0, 16, 8, 24.  With this order the
+/// kernel needs no cross-lane permute at all.
+pub(crate) const VNNI_Q4_GRP_BASE: [usize; 4] = [0, 16, 8, 24];
+
+/// Row-quarter byte offsets of the sdot quad-q4 group layout: the
+/// kernel splits the group into two 16-byte halves and `vzip1q_s8` /
+/// `vzip2q_s8` interleave whole halves, so the quarters are sequential.
+pub(crate) const SDOT_Q4_GRP_BASE: [usize; 4] = [0, 8, 16, 24];
+
+/// Repack a row-major `[m, k]` 4-bit matrix into the *quad-interleaved*
+/// nibble layout of one byte-dot tier.  Per panel, per k-quad `g`
+/// (`kk = 4g`), **32 bytes**; the quarter of rows `r / 4` starts at
+/// `grp_base[r / 4]` and row `r`'s two bytes hold its four weights as
+/// signed nibbles:
+///
+/// ```text
+/// byte grp_base[r/4] + 2*(r%4) + h =
+///     (w(r, kk + 2h) & 0x0F) | (w(r, kk + 2h + 1) << 4)     h = 0, 1
+/// ```
+///
+/// `grp_base` is tier-specific ([`VNNI_Q4_GRP_BASE`] /
+/// [`SDOT_Q4_GRP_BASE`]) because the two ISAs' in-register interleave
+/// primitives traverse the group differently; both unpack to the exact
+/// byte order of [`pack_panels_q8q_quad`] with zero shuffle cost in the
+/// kernel.  Returns the panels and `kp` (`k` rounded up to a multiple
+/// of 4; pad nibbles are zero).
+fn pack_panels_q4_quad(q: &[i8], m: usize, k: usize, grp_base: [usize; 4]) -> (Vec<u8>, usize) {
+    assert_eq!(q.len(), m * k, "pack: Q must be [m, k]");
+    let kp = k.next_multiple_of(4);
+    let np = m.div_ceil(PACK_MR);
+    let mut out = vec![0u8; np * (PACK_MR / 2) * kp];
+    for pi in 0..np {
+        let base = pi * (PACK_MR / 2) * kp;
+        for g in 0..kp / 4 {
+            let kk = 4 * g;
+            for r in 0..PACK_MR {
+                let row = pi * PACK_MR + r;
+                if row >= m {
+                    continue;
+                }
+                for h in 0..2 {
+                    let w0 = if kk + 2 * h < k { q[row * k + kk + 2 * h] } else { 0 };
+                    let w1 = if kk + 2 * h + 1 < k { q[row * k + kk + 2 * h + 1] } else { 0 };
+                    debug_assert!((-7..=7).contains(&w0) && (-7..=7).contains(&w1));
+                    out[base + g * 32 + grp_base[r / 4] + 2 * (r % 4) + h] =
+                        (w0 as u8 & 0x0F) | ((w1 as u8) << 4);
+                }
+            }
+        }
+    }
+    (out, kp)
+}
+
 /// Caller-owned scratch for the q8q (quantized-activation) GEMM path.
 ///
 /// Everything the dynamic quantization and the integer kernels need
@@ -387,6 +524,12 @@ pub struct QuantScratch {
     /// AVX2 broadcast form: per frame, `kp / 2` sign-extended i16 pairs
     /// packed little-endian into one i32 each (`x_{2g} | x_{2g+1} << 16`).
     qpair: Vec<i32>,
+    /// VNNI broadcast form `[n, kp]`: the same frames shifted to u8 by
+    /// the +128 zero point (`qx + 128`; zero padding becomes 128, which
+    /// only ever multiplies zero pad weights).  `vpdpbusd` takes its
+    /// activation operand unsigned; the kernel cancels the shift with
+    /// the packed per-row correction term.
+    qshift: Vec<u8>,
     /// Per-column (per-time-step) symmetric dequantization scales.
     cscale: Vec<f32>,
     /// Raw `[m, n]` i32 accumulators (dequantized into `C` per panel
@@ -415,6 +558,7 @@ fn quantize_frames(x: &[f32], n: usize, k: usize, kp: usize, scratch: &mut Quant
     if scratch.qx.len() < n * kp {
         scratch.qx.resize(n * kp, 0);
         scratch.qpair.resize(n * (kp / 2), 0);
+        scratch.qshift.resize(n * kp, 128);
     }
     if scratch.cscale.len() < n {
         scratch.cscale.resize(n, 0.0);
@@ -434,6 +578,10 @@ fn quantize_frames(x: &[f32], n: usize, k: usize, kp: usize, scratch: &mut Quant
             let x0 = q[2 * g] as i16 as u16 as u32;
             let x1 = q[2 * g + 1] as i16 as u16 as u32;
             *p = (x0 | (x1 << 16)) as i32;
+        }
+        let shifts = &mut scratch.qshift[j * kp..(j + 1) * kp];
+        for (s, &v) in shifts.iter_mut().zip(q.iter()) {
+            *s = (v as u8).wrapping_add(128);
         }
     }
 }
@@ -548,6 +696,11 @@ enum ProbeKind {
     BtF32,
     IntQ8q,
     IntQ4,
+    /// q8q on a 4-way byte-dot tier (VNNI / sdot): the quad kernels have
+    /// a different integer-vs-widening crossover than the pair kernels,
+    /// so they calibrate their own registry rows.
+    IntQ8qDot,
+    IntQ4Dot,
 }
 
 /// Process-wide registry of probed crossovers, keyed by `(kind, m, k)`.
@@ -643,16 +796,18 @@ impl PackedGemm {
     }
 
     /// Bypass probing: fixed SIMD level and crossover.  Used by the
-    /// parity tests (forcing the portable oracle) and the benches.
+    /// parity tests (forcing the portable oracle or a lower rung of the
+    /// detected ladder) and the benches.
     ///
-    /// Soundness: an intrinsic level may only be requested when it is
-    /// the one [`kernels::detect`] verified on this host — asserted here
-    /// so safe callers can never reach an unsupported instruction set.
+    /// Soundness: an intrinsic level may only be requested when the
+    /// detected tier implies it runs on this host ([`Simd::runs_on`]) —
+    /// asserted here so safe callers can never reach an unsupported
+    /// instruction set.
     pub fn with_dispatch(a: &[f32], m: usize, k: usize, simd: Simd, bt_cutoff: usize) -> Self {
         assert!(
-            simd == Simd::Portable || simd == kernels::detect(),
+            simd.runs_on(kernels::detect_host()),
             "SIMD level {simd:?} not available on this host (detected {:?})",
-            kernels::detect()
+            kernels::detect_host()
         );
         let packed = PackedMatrix::pack(a, m, k);
         let row_major = (bt_cutoff > 0).then(|| a.to_vec());
@@ -799,8 +954,12 @@ pub struct PackedQuantGemm {
     /// Nibble-packed panels (q4 integer path; empty otherwise).  Half
     /// the bytes of `qpanels` for the same shape.
     q4panels: Vec<u8>,
-    /// `k` rounded up to even (integer-panel stride; 0 in q8 mode).
+    /// `k` rounded up to the integer-panel k-group (even on the pair
+    /// tiers, a multiple of 4 on the quad tiers; 0 in q8 mode).
     kp: usize,
+    /// VNNI zero-point corrections `128 * sum_k w[row]`, one i32 per
+    /// packed row (`np * PACK_MR`); empty on every other tier.
+    corr: Vec<i32>,
     /// Block-sparsity bitmap over the quantized operand, shared by every
     /// resident panel layout (`None` = dense; see [`PanelMask`]).
     mask: Option<PanelMask>,
@@ -823,6 +982,7 @@ impl PackedQuantGemm {
             qpanels: Vec::new(),
             q4panels: Vec::new(),
             kp: 0,
+            corr: Vec::new(),
             mask: PanelMask::from_i8(q, m, k),
             scales: scales.to_vec(),
             simd: kernels::detect(),
@@ -865,15 +1025,24 @@ impl PackedQuantGemm {
     ) -> Self {
         assert_eq!(scales.len(), m, "one dequant scale per row");
         assert!(
-            simd == Simd::Portable || simd == kernels::detect(),
+            simd.runs_on(kernels::detect_host()),
             "SIMD level {simd:?} not available on this host (detected {:?})",
-            kernels::detect()
+            kernels::detect_host()
         );
         assert!(
             k <= Q8_MAX_K,
             "q8q supports K up to {Q8_MAX_K} (i32 accumulator bound), got {k}"
         );
-        let (qpanels, kp) = pack_panels_q8q(q, m, k);
+        // The VNNI zero-point shift tightens the overflow bound; shapes
+        // past it silently demote to the AVX2 pair tier (always present
+        // beneath VNNI in the ladder) instead of rejecting a K every
+        // other tier accepts.
+        let simd = if simd == Simd::Vnni && k > VNNI_Q8_MAX_K { Simd::Avx2 } else { simd };
+        let (qpanels, kp) = match simd {
+            Simd::Vnni | Simd::Sdot => pack_panels_q8q_quad(q, m, k),
+            _ => pack_panels_q8q(q, m, k),
+        };
+        let corr = if simd == Simd::Vnni { vnni_row_corrections(q, m, k) } else { Vec::new() };
         Self {
             m,
             k,
@@ -881,6 +1050,7 @@ impl PackedQuantGemm {
             qpanels,
             q4panels: Vec::new(),
             kp,
+            corr,
             mask: PanelMask::from_i8(q, m, k),
             scales: scales.to_vec(),
             simd,
@@ -921,9 +1091,9 @@ impl PackedQuantGemm {
     ) -> Self {
         assert_eq!(scales.len(), m, "one dequant scale per row");
         assert!(
-            simd == Simd::Portable || simd == kernels::detect(),
+            simd.runs_on(kernels::detect_host()),
             "SIMD level {simd:?} not available on this host (detected {:?})",
-            kernels::detect()
+            kernels::detect_host()
         );
         assert!(
             k <= Q4_MAX_K,
@@ -933,7 +1103,15 @@ impl PackedQuantGemm {
             q.iter().all(|&v| (-7..=7).contains(&v)),
             "q4 weights must lie in [-7, 7]"
         );
-        let (q4panels, kp) = pack_panels_q4(q, m, k);
+        // Same silent VNNI -> AVX2 demotion as q8q (the q4 bound is ~18x
+        // roomier, so this is essentially unreachable in practice).
+        let simd = if simd == Simd::Vnni && k > VNNI_Q4_MAX_K { Simd::Avx2 } else { simd };
+        let (q4panels, kp) = match simd {
+            Simd::Vnni => pack_panels_q4_quad(q, m, k, VNNI_Q4_GRP_BASE),
+            Simd::Sdot => pack_panels_q4_quad(q, m, k, SDOT_Q4_GRP_BASE),
+            _ => pack_panels_q4(q, m, k),
+        };
+        let corr = if simd == Simd::Vnni { vnni_row_corrections(q, m, k) } else { Vec::new() };
         Self {
             m,
             k,
@@ -941,6 +1119,7 @@ impl PackedQuantGemm {
             qpanels: Vec::new(),
             q4panels,
             kp,
+            corr,
             mask: PanelMask::from_i8(q, m, k),
             scales: scales.to_vec(),
             simd,
@@ -954,6 +1133,12 @@ impl PackedQuantGemm {
 
     pub fn k(&self) -> usize {
         self.k
+    }
+
+    /// The dispatch tier this handle's panels were packed for (after
+    /// any silent Vnni -> Avx2 exactness demotion).
+    pub fn simd(&self) -> Simd {
+        self.simd
     }
 
     /// Streamed weight panel bytes per block (the DRAM-traffic unit,
@@ -984,17 +1169,31 @@ impl PackedQuantGemm {
     pub fn dequant(&self, r: usize, c: usize) -> f32 {
         assert!(r < self.m && c < self.k);
         let (pi, rr) = (r / PACK_MR, r % PACK_MR);
+        let quad = matches!(self.simd, Simd::Vnni | Simd::Sdot);
         let q = if !self.panels.is_empty() {
             self.panels[pi * PACK_MR * self.k + c * PACK_MR + rr]
         } else if self.is_q4() {
             // q4 handle whose widening panels were dropped: decode the
-            // signed nibble from the packed layout.
-            let b = self.q4panels[pi * (PACK_MR / 2) * self.kp + (c / 2) * 16 + rr];
+            // signed nibble from whichever packed layout the tier uses.
+            let b = if quad {
+                let grp_base = if self.simd == Simd::Vnni {
+                    VNNI_Q4_GRP_BASE
+                } else {
+                    SDOT_Q4_GRP_BASE
+                };
+                let base = pi * (PACK_MR / 2) * self.kp + (c / 4) * 32;
+                self.q4panels[base + grp_base[rr / 4] + 2 * (rr % 4) + (c % 4) / 2]
+            } else {
+                self.q4panels[pi * (PACK_MR / 2) * self.kp + (c / 2) * 16 + rr]
+            };
             if c % 2 == 0 {
                 ((b << 4) as i8) >> 4
             } else {
                 (b as i8) >> 4
             }
+        } else if quad {
+            // q8q quad layout: row-major k-quads, 64 bytes per group.
+            self.qpanels[pi * PACK_MR * self.kp + (c / 4) * 64 + rr * 4 + c % 4]
         } else {
             // q8q handle whose widening panels were dropped: read the
             // pair-interleaved integer layout instead.
@@ -1145,10 +1344,12 @@ impl PackedQuantGemm {
         if scratch.acc.len() < m * n {
             scratch.acc.resize(m * n, 0);
         }
-        let QuantScratch { qx, qpair, cscale, acc: acc32 } = scratch;
-        let (qx, qpair, cscale) = (&qx[..n * kp], &qpair[..n * (kp / 2)], &cscale[..n]);
+        let QuantScratch { qx, qpair, qshift, cscale, acc: acc32 } = scratch;
+        let (qx, qpair, qshift, cscale) =
+            (&qx[..n * kp], &qpair[..n * (kp / 2)], &qshift[..n * kp], &cscale[..n]);
         let (simd, scales) = (self.simd, self.scales.as_slice());
         let (qpanels, q4panels) = (self.qpanels.as_slice(), self.q4panels.as_slice());
+        let corr = self.corr.as_slice();
         let q4 = self.is_q4();
         let pm_all = self.mask.as_ref().map(PanelMask::for_kernels);
         let acc_base = SendPtr(acc32.as_mut_ptr());
@@ -1160,9 +1361,15 @@ impl PackedQuantGemm {
             let c32 =
                 unsafe { std::slice::from_raw_parts_mut(acc_base.get().add(row0 * n), rows * n) };
             if q4 {
-                kernels::matmul_q4(simd, q4panels, c32, row0, qx, qpair, m, kp, n, pm_all, pi, pi + 1);
+                kernels::matmul_q4(
+                    simd, q4panels, c32, row0, qx, qpair, qshift, corr, m, kp, n, pm_all, pi,
+                    pi + 1,
+                );
             } else {
-                kernels::matmul_q8q(simd, qpanels, c32, row0, qx, qpair, m, kp, n, pm_all, pi, pi + 1);
+                kernels::matmul_q8q(
+                    simd, qpanels, c32, row0, qx, qpair, qshift, corr, m, kp, n, pm_all, pi,
+                    pi + 1,
+                );
             }
             dequant_rows(csub, row0, c32, rows, m, n, acc, scales, cscale, epi);
         });
@@ -1170,9 +1377,13 @@ impl PackedQuantGemm {
             let np = m.div_ceil(PACK_MR);
             let c32 = &mut acc32[..m * n];
             if q4 {
-                kernels::matmul_q4(simd, q4panels, c32, 0, qx, qpair, m, kp, n, pm_all, 0, np);
+                kernels::matmul_q4(
+                    simd, q4panels, c32, 0, qx, qpair, qshift, corr, m, kp, n, pm_all, 0, np,
+                );
             } else {
-                kernels::matmul_q8q(simd, qpanels, c32, 0, qx, qpair, m, kp, n, pm_all, 0, np);
+                kernels::matmul_q8q(
+                    simd, qpanels, c32, 0, qx, qpair, qshift, corr, m, kp, n, pm_all, 0, np,
+                );
             }
             dequant_rows(c, 0, c32, m, m, n, acc, scales, cscale, epi);
         }
@@ -1196,14 +1407,16 @@ impl PackedQuantGemm {
         quantize_frames(x, n, k, kp, scratch);
         let np = m.div_ceil(PACK_MR);
         let pm_all = self.mask.as_ref().map(PanelMask::for_kernels);
-        let (qx, qpair) = (&scratch.qx[..n * kp], &scratch.qpair[..n * (kp / 2)]);
+        let (qx, qpair, qshift) =
+            (&scratch.qx[..n * kp], &scratch.qpair[..n * (kp / 2)], &scratch.qshift[..n * kp]);
+        let corr = self.corr.as_slice();
         if self.is_q4() {
             kernels::matmul_q4(
-                self.simd, &self.q4panels, c32, 0, qx, qpair, m, kp, n, pm_all, 0, np,
+                self.simd, &self.q4panels, c32, 0, qx, qpair, qshift, corr, m, kp, n, pm_all, 0, np,
             );
         } else {
             kernels::matmul_q8q(
-                self.simd, &self.qpanels, c32, 0, qx, qpair, m, kp, n, pm_all, 0, np,
+                self.simd, &self.qpanels, c32, 0, qx, qpair, qshift, corr, m, kp, n, pm_all, 0, np,
             );
         }
     }
@@ -1245,7 +1458,13 @@ fn probe_int_cutoff(pq: &PackedQuantGemm) -> usize {
 /// panel layout picks the probe kind (q4 and q8q calibrate separately —
 /// the q4 kernel has different unpack cost per byte).
 fn cached_int_cutoff(pq: &PackedQuantGemm) -> usize {
-    let kind = if pq.is_q4() { ProbeKind::IntQ4 } else { ProbeKind::IntQ8q };
+    let dot = matches!(pq.simd, Simd::Vnni | Simd::Sdot);
+    let kind = match (pq.is_q4(), dot) {
+        (false, false) => ProbeKind::IntQ8q,
+        (true, false) => ProbeKind::IntQ4,
+        (false, true) => ProbeKind::IntQ8qDot,
+        (true, true) => ProbeKind::IntQ4Dot,
+    };
     cached_cutoff(kind, pq.m, pq.k, || probe_int_cutoff(pq))
 }
 
@@ -1404,6 +1623,66 @@ mod tests {
     }
 
     #[test]
+    fn q8q_quad_panel_layout_and_padding() {
+        // The VNNI/sdot layout: k = 5 -> kp = 8 (rounded to a quad),
+        // 64-byte groups of row-major k-quads.
+        let (m, k) = (PACK_MR + 1, 5);
+        let q: Vec<i8> = (0..m * k).map(|i| (i % 127) as i8).collect();
+        let (panels, kp) = pack_panels_q8q_quad(&q, m, k);
+        assert_eq!(kp, 8);
+        assert_eq!(panels.len(), 2 * PACK_MR * kp);
+        let at = |pi: usize, g: usize, r: usize, j: usize| {
+            panels[pi * PACK_MR * kp + g * 64 + r * 4 + j]
+        };
+        for pi in 0..2 {
+            for g in 0..kp / 4 {
+                for r in 0..PACK_MR {
+                    for j in 0..4 {
+                        let row = pi * PACK_MR + r;
+                        let kk = 4 * g + j;
+                        let want = if row < m && kk < k { q[row * k + kk] } else { 0 };
+                        assert_eq!(at(pi, g, r, j), want, "p{pi} g{g} r{r} j{j}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn vnni_demotes_past_its_exactness_bound() {
+        // Only runnable where the Vnni tier is constructible at all.
+        if !Simd::Vnni.runs_on(kernels::detect_host()) {
+            return;
+        }
+        let (m, k) = (PACK_MR, VNNI_Q8_MAX_K + 1);
+        let q = vec![1i8; m * k];
+        let scales = vec![1.0f32; m];
+        let pq = PackedQuantGemm::with_dispatch_q8q(&q, &scales, m, k, Simd::Vnni, 0);
+        assert_eq!(pq.simd(), Simd::Avx2, "K past the u8xs8 bound must demote");
+        // In range: the tier sticks and the panels are quad-packed.
+        let k = 8;
+        let q = vec![1i8; m * k];
+        let pq = PackedQuantGemm::with_dispatch_q8q(&q, &scales, m, k, Simd::Vnni, 0);
+        assert_eq!(pq.simd(), Simd::Vnni);
+    }
+
+    #[test]
+    fn vnni_row_corrections_are_128_row_sums() {
+        let (m, k) = (PACK_MR + 2, 7);
+        let q: Vec<i8> = (0..m * k).map(|i| ((i * 11) % 255) as u8 as i8).collect();
+        let corr = vnni_row_corrections(&q, m, k);
+        assert_eq!(corr.len(), 2 * PACK_MR);
+        for r in 0..m {
+            let sum: i32 = q[r * k..(r + 1) * k].iter().map(|&w| i32::from(w)).sum();
+            assert_eq!(corr[r], 128 * sum, "row {r}");
+        }
+        // Pad rows correct nothing (their weights are zero).
+        for r in m..2 * PACK_MR {
+            assert_eq!(corr[r], 0);
+        }
+    }
+
+    #[test]
     fn q8q_matmul_matches_scalar_integer_oracle() {
         // The full q8q pipeline (dynamic per-column quantization ->
         // integer kernel -> fused dequant) against a from-scratch scalar
@@ -1540,6 +1819,13 @@ mod tests {
         let x0 = s.qx[kp] as i16 as u16 as u32;
         let x1 = s.qx[kp + 1] as i16 as u16 as u32;
         assert_eq!(s.qpair[kp / 2] as u32, x0 | (x1 << 16));
+        // qshift is the same quant stream in the +128 u8 domain (the
+        // vpdpbusd operand); pad bytes sit at the zero point 128.
+        assert_eq!(s.qshift.len(), n * kp);
+        for (i, (&sv, &qv)) in s.qshift.iter().zip(&s.qx).enumerate() {
+            assert_eq!(sv, (qv as u8).wrapping_add(128), "byte {i}");
+        }
+        assert_eq!(s.qshift[kp + 3], 128);
     }
 
     #[test]
@@ -1568,6 +1854,43 @@ mod tests {
         // Panel 1 holds row 16; rows 17.. are zero padding.
         assert_eq!(nib(1, 0, 0, 0), q[PACK_MR * k]);
         assert_eq!(nib(1, 0, 1, 0), 0);
+    }
+
+    #[test]
+    fn q4_quad_panel_layouts_vnni_and_sdot() {
+        // Both quad q4 layouts pack the same nibbles — the same row's
+        // k-quad as two bytes at `grp_base[r/4] + 2 * (r%4)` — and
+        // differ only in the group-quarter order that makes each ISA's
+        // in-register unpack shuffle-free.
+        let (m, k) = (PACK_MR + 1, 6);
+        let q: Vec<i8> = (0..m * k).map(|i| ((i * 5) % 15) as i8 - 7).collect();
+        for grp_base in [VNNI_Q4_GRP_BASE, SDOT_Q4_GRP_BASE] {
+            let (panels, kp) = pack_panels_q4_quad(&q, m, k, grp_base);
+            assert_eq!(kp, 8);
+            assert_eq!(panels.len(), 2 * (PACK_MR / 2) * kp);
+            for pi in 0..2 {
+                for g in 0..kp / 4 {
+                    for r in 0..PACK_MR {
+                        for j in 0..4 {
+                            let byte = panels[pi * (PACK_MR / 2) * kp
+                                + g * 32
+                                + grp_base[r / 4]
+                                + 2 * (r % 4)
+                                + j / 2];
+                            let got = if j % 2 == 0 {
+                                ((byte << 4) as i8) >> 4
+                            } else {
+                                (byte as i8) >> 4
+                            };
+                            let row = pi * PACK_MR + r;
+                            let kk = 4 * g + j;
+                            let want = if row < m && kk < k { q[row * k + kk] } else { 0 };
+                            assert_eq!(got, want, "base{:?} p{pi} g{g} r{r} j{j}", grp_base);
+                        }
+                    }
+                }
+            }
+        }
     }
 
     fn quantize_rows_q4(a: &[f32], m: usize, k: usize) -> (Vec<i8>, Vec<f32>) {

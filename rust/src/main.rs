@@ -432,6 +432,13 @@ fn cmd_info() -> Result<(), String> {
         mtsrnn::linalg::pool::threads(),
         mtsrnn::linalg::detect_simd().name()
     );
+    // Machine-readable ladder line: CI parses it to matrix MTSRNN_ISA
+    // over every tier the runner supports.
+    let tiers: Vec<&str> = mtsrnn::linalg::supported_tiers()
+        .iter()
+        .map(|t| t.name())
+        .collect();
+    println!("isa tiers: {}", tiers.join(" "));
     println!("\nSimulated platforms: intel (i7-3930K), arm (Denver2)");
     let quick = sim_ms(
         mtsrnn::memsim::ARM_DENVER2,

@@ -42,6 +42,15 @@ pub struct CpuSpec {
     /// NEON `vmull_s8` + `vpadalq_s16` likewise doubles the per-
     /// instruction MAC count over `vfmaq_f32`.
     pub int8_mac_ratio: f64,
+    /// 4-way byte-dot MAC throughput relative to f32 FMA throughput —
+    /// the AVX-VNNI `vpdpbusd` / NEON `sdot` tier: 32 MACs per 256-bit
+    /// instruction (16 per 128-bit `sdot`) vs 8 (4) f32 MACs per FMA on
+    /// the same ports → 4.0, i.e. 2x the widening `int8_mac_ratio`.
+    /// Neither paper platform ships these extensions (SNB-E predates
+    /// VNNI, Denver2 lacks dotprod), so the paper-mode simulator never
+    /// selects this ratio; it exists to predict the measured speedup of
+    /// the quad-dot kernels on modern hosts (`SimConfig::use_dot`).
+    pub dot_mac_ratio: f64,
     pub line_size: usize,
     pub l1: CacheSpec,
     pub l2: CacheSpec,
@@ -92,6 +101,9 @@ pub const INTEL_I7_3930K: CpuSpec = CpuSpec {
     // SSE4/AVX2-class pmaddwd: 2x the f32 MAC rate (no VNNI on SNB-E;
     // the ratio models the madd_epi16 kernel this repo actually ships).
     int8_mac_ratio: 2.0,
+    // Hypothetical vpdpbusd on the same port structure: 4x (used only
+    // by `use_dot` predictions, never in paper mode — SNB-E has no VNNI).
+    dot_mac_ratio: 4.0,
     line_size: 64,
     l1: CacheSpec {
         size_bytes: 32 * 1024,
@@ -135,6 +147,9 @@ pub const ARM_DENVER2: CpuSpec = CpuSpec {
     transcendental_cycles: 18.0,
     // NEON widening i16 dot (vmull_s8 + vpadalq_s16): 2x f32 vfmaq.
     int8_mac_ratio: 2.0,
+    // Hypothetical sdot on the same pipes: 4x (used only by `use_dot`
+    // predictions, never in paper mode — Denver2 lacks dotprod).
+    dot_mac_ratio: 4.0,
     line_size: 64,
     l1: CacheSpec {
         size_bytes: 32 * 1024,

@@ -88,6 +88,14 @@ pub struct SimConfig {
     /// run — `B`/`C` traffic and the element-wise remainder are
     /// unchanged.  SRU only, like `precision`.
     pub density: f64,
+    /// Model the 4-way byte-dot tier (AVX-VNNI `vpdpbusd` / NEON
+    /// `sdot`) for the integer precisions: the compute term uses
+    /// `CpuSpec::dot_mac_ratio` instead of `int8_mac_ratio`.  Memory
+    /// traffic is unchanged — the quad-interleaved panel is the same
+    /// byte count in a different order.  Always `false` in paper mode
+    /// (neither paper platform has the instructions); the quant
+    /// microbench flips it on for the vnni/sdot predicted columns.
+    pub use_dot: bool,
 }
 
 impl SimConfig {
@@ -101,6 +109,7 @@ impl SimConfig {
             cores: 1,
             precision: SimPrec::F32,
             density: 1.0,
+            use_dot: false,
         }
     }
 }
@@ -276,9 +285,11 @@ pub fn simulate(cfg: &SimConfig) -> SimReport {
     // multiplies, so its MAC rate matches q8q's).  Only the GEMM term
     // gets the ratio: the element-wise remainder (and the quantization
     // pass) stays f32.  Q8 only shrinks bytes (widening path computes
-    // in f32), so its compute terms are the f32 ones.
+    // in f32), so its compute terms are the f32 ones.  `use_dot` swaps
+    // in the 4-way byte-dot rate (vpdpbusd/sdot) for the same integer
+    // precisions; memory traffic is identical either way.
     let mac_ratio = if matches!(cfg.precision, SimPrec::Q8Q | SimPrec::Q4) {
-        spec.int8_mac_ratio
+        if cfg.use_dot { spec.dot_mac_ratio } else { spec.int8_mac_ratio }
     } else {
         1.0
     };
@@ -497,6 +508,39 @@ mod tests {
         // Same integer MAC model as q8q; sparsity also cuts the MACs.
         assert!(q4.seconds <= qq.seconds + 1e-12);
         assert!(qq_half.compute_cycles < qq.compute_cycles);
+    }
+
+    #[test]
+    fn dot_tier_halves_int_compute_and_leaves_memory_alone() {
+        // The ISA axis: use_dot swaps int8_mac_ratio (2.0) for
+        // dot_mac_ratio (4.0) in the GEMM term only.  The GEMM MACs
+        // dominate at T=32, so the compute term drops toward (but not
+        // fully to) half; traffic is bit-for-bit the same stream.  For
+        // f32 the flag must be a no-op.
+        let model = ModelConfig::paper(Arch::Sru, ModelSize::Large);
+        let at = |prec: SimPrec, use_dot: bool| {
+            let mut c = SimConfig::paper(ARM_DENVER2, model, 32);
+            c.samples = 256;
+            c.precision = prec;
+            c.use_dot = use_dot;
+            simulate(&c)
+        };
+        let widen = at(SimPrec::Q8Q, false);
+        let dot = at(SimPrec::Q8Q, true);
+        assert!(
+            dot.compute_cycles < widen.compute_cycles * 0.75,
+            "4-way dot must cut the int compute term: {:.3e} vs {:.3e}",
+            dot.compute_cycles,
+            widen.compute_cycles
+        );
+        assert!(
+            (dot.dram_bytes_per_sample - widen.dram_bytes_per_sample).abs()
+                < 1e-9 * widen.dram_bytes_per_sample,
+            "quad interleave reorders bytes, it does not add any"
+        );
+        let f = at(SimPrec::F32, false);
+        let fd = at(SimPrec::F32, true);
+        assert!((f.cycles - fd.cycles).abs() < 1e-9 * f.cycles.max(1.0));
     }
 
     #[test]

@@ -10,8 +10,9 @@
 
 use mtsrnn::linalg::contract::{
     check_epilogue, check_f32_dispatch, check_q4_dispatch, check_q8q_dispatch,
-    check_range_output, check_simd, num_panels, ContractError, FrameView, MaskView, PanelView,
-    Q4PanelView, QFrameView, QPanelView, Q4_MAX_K, Q8_MAX_K,
+    check_range_output, check_simd, check_vnni_bufs, num_panels, ContractError, FrameView,
+    MaskView, PanelView, Q4PanelView, QFrameView, QPanelView, Q4_MAX_K, Q8_MAX_K, VNNI_Q4_MAX_K,
+    VNNI_Q8_MAX_K,
 };
 use mtsrnn::linalg::{Act, Epilogue, Simd, PACK_MR, SPARSE_KB};
 
@@ -176,7 +177,111 @@ fn epilogue_shapes_are_validated() {
 fn foreign_simd_is_rejected_per_target() {
     assert!(check_simd(Simd::Portable).is_ok());
     assert_eq!(check_simd(Simd::Avx2).is_ok(), cfg!(target_arch = "x86_64"));
+    assert_eq!(check_simd(Simd::Vnni).is_ok(), cfg!(target_arch = "x86_64"));
     assert_eq!(check_simd(Simd::Neon).is_ok(), cfg!(target_arch = "aarch64"));
+    assert_eq!(check_simd(Simd::Sdot).is_ok(), cfg!(target_arch = "aarch64"));
+}
+
+#[test]
+fn quad_views_reject_pair_layouts_and_tier_bounds() {
+    // A pair-legal kp (even, not a multiple of 4) is a wrong-tier mix
+    // for the quad views: QuadKp, before any length check.
+    assert!(matches!(
+        QPanelView::new_quad(&[], 16, 6, Q8_MAX_K, "q8q").unwrap_err(),
+        ContractError::QuadKp { kp: 6 }
+    ));
+    assert!(matches!(
+        Q4PanelView::new_quad(&[], 16, 6, Q4_MAX_K, "q4").unwrap_err(),
+        ContractError::QuadKp { kp: 6 }
+    ));
+    // The VNNI bounds are tighter than the pair-tier ones: a depth the
+    // pair view accepts is rejected at the vnni tier bound.
+    let kp_over = (VNNI_Q8_MAX_K + 4).next_multiple_of(4);
+    assert!(QPanelView::new(&vec![0i8; PACK_MR * kp_over], 16, kp_over).is_ok());
+    assert!(matches!(
+        QPanelView::new_quad(&[], 16, kp_over, VNNI_Q8_MAX_K, "q8q-vnni").unwrap_err(),
+        ContractError::KTooLarge { family: "q8q-vnni", .. }
+    ));
+    let kp_over4 = (VNNI_Q4_MAX_K + 4).next_multiple_of(4);
+    assert!(matches!(
+        Q4PanelView::new_quad(&[], 16, kp_over4, VNNI_Q4_MAX_K, "q4-vnni").unwrap_err(),
+        ContractError::KTooLarge { family: "q4-vnni", .. }
+    ));
+}
+
+#[test]
+fn quad_tier_dispatch_negatives() {
+    // The quad tier compiled for this target (Vnni on x86-64, Sdot on
+    // aarch64); other targets have no quad tier to misuse — and the
+    // *other* arch's quad tier must be rejected outright.
+    let quad = if cfg!(target_arch = "x86_64") {
+        assert!(matches!(
+            check_simd(Simd::Sdot).unwrap_err(),
+            ContractError::SimdUnavailable { simd: "sdot" }
+        ));
+        Simd::Vnni
+    } else if cfg!(target_arch = "aarch64") {
+        assert!(matches!(
+            check_simd(Simd::Vnni).unwrap_err(),
+            ContractError::SimdUnavailable { simd: "vnni" }
+        ));
+        Simd::Sdot
+    } else {
+        return;
+    };
+    let (m, k, n) = (20usize, 5usize, 3usize);
+    let np = num_panels(m);
+
+    // Wrong-tier panel/dispatch mix: a pair-packed panel (kp = 6)
+    // handed to the quad dispatch fails on geometry (QuadKp).
+    let kp_pair = k.next_multiple_of(2);
+    let pair_panels = vec![0i8; np * PACK_MR * kp_pair];
+    let xq_pair = vec![0i8; n * kp_pair];
+    let qpair_pair = vec![0i32; n * kp_pair / 2];
+    let err = check_q8q_dispatch(
+        quad, &pair_panels, m * n, 0, &xq_pair, &qpair_pair, &[], &[], m, kp_pair, n, None, 0, np,
+    )
+    .unwrap_err();
+    assert!(matches!(err, ContractError::QuadKp { kp: 6 }), "{err}");
+    let pair_q4 = vec![0u8; np * (PACK_MR / 2) * kp_pair];
+    let err = check_q4_dispatch(
+        quad, &pair_q4, m * n, 0, &xq_pair, &qpair_pair, &[], &[], m, kp_pair, n, None, 0, np,
+    )
+    .unwrap_err();
+    assert!(matches!(err, ContractError::QuadKp { kp: 6 }), "{err}");
+
+    // Quad-legal geometry: the VNNI tier additionally demands the
+    // shifted-activation and correction buffers; sdot needs neither.
+    let kp = k.next_multiple_of(4);
+    let qpanels = vec![0i8; np * PACK_MR * kp];
+    let xq = vec![0i8; n * kp];
+    let qpair = vec![0i32; n * kp / 2];
+    if quad == Simd::Vnni {
+        let err = check_q8q_dispatch(
+            quad, &qpanels, m * n, 0, &xq, &qpair, &[], &[], m, kp, n, None, 0, np,
+        )
+        .unwrap_err();
+        assert!(matches!(err, ContractError::ShiftLen { .. }), "{err}");
+        let qshift = vec![128u8; n * kp];
+        let err = check_q8q_dispatch(
+            quad, &qpanels, m * n, 0, &xq, &qpair, &qshift, &[], m, kp, n, None, 0, np,
+        )
+        .unwrap_err();
+        assert!(matches!(err, ContractError::CorrLen { .. }), "{err}");
+        let corr = vec![0i32; np * PACK_MR];
+        assert!(check_q8q_dispatch(
+            quad, &qpanels, m * n, 0, &xq, &qpair, &qshift, &corr, m, kp, n, None, 0, np,
+        )
+        .is_ok());
+        // The standalone helper reports the same violations.
+        assert!(check_vnni_bufs(&qshift, &corr, m, kp, n).is_ok());
+        assert!(check_vnni_bufs(&qshift[1..], &corr, m, kp, n).is_err());
+    } else {
+        assert!(check_q8q_dispatch(
+            quad, &qpanels, m * n, 0, &xq, &qpair, &[], &[], m, kp, n, None, 0, np,
+        )
+        .is_ok());
+    }
 }
 
 #[test]
@@ -235,6 +340,8 @@ fn full_dispatch_checks_compose() {
         0,
         &xq,
         &qpair,
+        &[],
+        &[],
         m,
         kp,
         n,
@@ -250,6 +357,8 @@ fn full_dispatch_checks_compose() {
         0,
         &xq,
         &qpair,
+        &[],
+        &[],
         m,
         kp,
         n,
@@ -267,6 +376,8 @@ fn full_dispatch_checks_compose() {
             0,
             &xq,
             &qpair,
+            &[],
+            &[],
             m,
             kp,
             n,

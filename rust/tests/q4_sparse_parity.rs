@@ -24,8 +24,8 @@ use mtsrnn::coordinator::{BatchMode, Coordinator, CoordinatorConfig, NativeBacke
 use mtsrnn::engine::{Engine, NativeStack, QuantMatrix, QuantSruEngine, SruEngine};
 use mtsrnn::linalg::pool;
 use mtsrnn::linalg::{
-    detect_simd, Act, Epilogue, PackedGemm, PackedQuantGemm, QuantScratch, Simd, PACK_MR,
-    SPARSE_KB,
+    detect_simd, supported_tiers, Act, Epilogue, PackedGemm, PackedQuantGemm, QuantScratch, Simd,
+    PACK_MR, SPARSE_KB,
 };
 use mtsrnn::models::config::{Arch, ModelConfig, StackSpec};
 use mtsrnn::models::{SruParams, StackParams};
@@ -171,6 +171,52 @@ fn q4_fused_outputs_bit_identical_across_dispatch() {
             hq.matmul_q4(&mut got, &x, n, acc, &epi, &mut scratch);
             pq.matmul_q4(&mut want, &x, n, acc, &epi, &mut scratch);
             assert_bits_equal(&got, &want, &format!("n={n} acc={acc}"));
+        }
+    }
+}
+
+#[test]
+fn forced_tier_q4_sparse_parity_at_threads_1_and_4() {
+    let _guard = lock_pool();
+    // The quad tiers (vnni/sdot) through the full q4 + sparse-skip
+    // surface: every pinnable tier must match the portable oracle bit
+    // for bit on pruned weights — i32 and fused f32 — at threads 1 and
+    // 4.  k = 61 leaves a quad pad inside the last skip block; the
+    // large shape crosses the pool fan-out threshold with several
+    // maskable blocks per panel.
+    for &(m, k, n) in &[(48usize, 61usize, 7usize), (512, 256, 16)] {
+        let w = pruned(m, k, 0.5, (m * 3 + k) as u64);
+        let q4 = QuantMatrix::quantize_q4(&w, m, k);
+        let mut x = vec![0.0; n * k];
+        Rng::new((k * 5 + n) as u64).fill_normal(&mut x, 1.0);
+        let bias: Vec<f32> = (0..m).map(|r| r as f32 * 0.002).collect();
+        let epi = Epilogue::with_bias(&bias);
+        let oracle =
+            PackedQuantGemm::with_dispatch_q4(q4.q(), q4.row_scales(), m, k, Simd::Portable, 0);
+        assert!(oracle.density() < 1.0, "prune must produce zero blocks");
+        let mut scratch = QuantScratch::new();
+        pool::set_threads(1);
+        let mut want32 = vec![0i32; m * n];
+        oracle.matmul_i32(&mut want32, &x, n, &mut scratch);
+        let mut wantf = vec![0.0f32; m * n];
+        oracle.matmul_q4(&mut wantf, &x, n, false, &epi, &mut scratch);
+        for tier in supported_tiers() {
+            let pq = PackedQuantGemm::with_dispatch_q4(q4.q(), q4.row_scales(), m, k, tier, 0);
+            assert_eq!(pq.simd(), tier);
+            for threads in [1usize, 4] {
+                pool::set_threads(threads);
+                let mut got32 = vec![0i32; m * n];
+                pq.matmul_i32(&mut got32, &x, n, &mut scratch);
+                assert_eq!(got32, want32, "({m},{k},{n}) {tier:?} @{threads}t i32");
+                let mut gotf = vec![0.0f32; m * n];
+                pq.matmul_q4(&mut gotf, &x, n, false, &epi, &mut scratch);
+                assert_bits_equal(
+                    &gotf,
+                    &wantf,
+                    &format!("({m},{k},{n}) {tier:?} @{threads}t fused"),
+                );
+            }
+            pool::set_threads(1);
         }
     }
 }

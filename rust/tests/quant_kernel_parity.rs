@@ -21,7 +21,9 @@ use std::time::Duration;
 use mtsrnn::coordinator::{BatchMode, Coordinator, CoordinatorConfig, NativeBackend, PolicyMode};
 use mtsrnn::engine::{Engine, NativeStack, QuantMatrix, QuantSruEngine, SruEngine};
 use mtsrnn::linalg::pool;
-use mtsrnn::linalg::{detect_simd, Act, Epilogue, PackedQuantGemm, QuantScratch, Simd};
+use mtsrnn::linalg::{
+    detect_simd, supported_tiers, Act, Epilogue, PackedQuantGemm, QuantScratch, Simd,
+};
 use mtsrnn::models::config::{Arch, ModelConfig, StackSpec};
 use mtsrnn::models::{SruParams, StackParams};
 use mtsrnn::util::Rng;
@@ -110,6 +112,52 @@ fn fused_outputs_bit_identical_across_dispatch() {
             hq.matmul_q8q(&mut got, &x, n, acc, &epi, &mut scratch);
             pq.matmul_q8q(&mut want, &x, n, acc, &epi, &mut scratch);
             assert_bits_equal(&got, &want, &format!("n={n} acc={acc}"));
+        }
+    }
+}
+
+#[test]
+fn forced_tier_q8q_parity_at_threads_1_and_4() {
+    let _guard = lock_pool();
+    // Every tier this host can pin via MTSRNN_ISA — including the quad
+    // vnni/sdot tiers where the hardware has them — must agree with the
+    // portable oracle bit for bit, on both the raw i32 block and the
+    // fused f32 output, at thread counts 1 and 4.  Hosts lacking a
+    // feature simply don't list the tier, so the loop degrades
+    // gracefully rather than failing.  k = 61 exercises the quad pad
+    // (pair kp = 62, quad kp = 64); the large shape crosses the pool
+    // fan-out threshold.
+    for &(m, k, n) in &[(48usize, 61usize, 7usize), (512, 256, 16)] {
+        let (q, _) = quantized(m, k, (m + k) as u64);
+        let mut x = vec![0.0; n * k];
+        Rng::new((k + n) as u64).fill_normal(&mut x, 1.0);
+        let bias: Vec<f32> = (0..m).map(|r| r as f32 * 0.003).collect();
+        let epi = Epilogue::with_bias(&bias);
+        let oracle =
+            PackedQuantGemm::with_dispatch_q8q(q.q(), q.row_scales(), m, k, Simd::Portable, 0);
+        let mut scratch = QuantScratch::new();
+        pool::set_threads(1);
+        let mut want32 = vec![0i32; m * n];
+        oracle.matmul_i32(&mut want32, &x, n, &mut scratch);
+        let mut wantf = vec![0.0f32; m * n];
+        oracle.matmul_q8q(&mut wantf, &x, n, false, &epi, &mut scratch);
+        for tier in supported_tiers() {
+            let pq = PackedQuantGemm::with_dispatch_q8q(q.q(), q.row_scales(), m, k, tier, 0);
+            assert_eq!(pq.simd(), tier, "in-bound K must keep the pinned tier");
+            for threads in [1usize, 4] {
+                pool::set_threads(threads);
+                let mut got32 = vec![0i32; m * n];
+                pq.matmul_i32(&mut got32, &x, n, &mut scratch);
+                assert_eq!(got32, want32, "({m},{k},{n}) {tier:?} @{threads}t i32");
+                let mut gotf = vec![0.0f32; m * n];
+                pq.matmul_q8q(&mut gotf, &x, n, false, &epi, &mut scratch);
+                assert_bits_equal(
+                    &gotf,
+                    &wantf,
+                    &format!("({m},{k},{n}) {tier:?} @{threads}t fused"),
+                );
+            }
+            pool::set_threads(1);
         }
     }
 }
