@@ -29,7 +29,7 @@ REGRESSION_FRAC = 0.15
 # Record fields that identify a measurement point across runs; the rest
 # of a record is data.  `shape` is a list in the JSON, made hashable
 # below.
-ID_KEYS = ("m", "k", "t", "threads", "tier", "dot", "shape")
+ID_KEYS = ("m", "k", "t", "threads", "tier", "dot", "shape", "shards", "sessions")
 
 
 def is_throughput(key: str) -> bool:

@@ -44,6 +44,7 @@ fn serve_trace<B: BlockBackend>(
             policy,
             max_wait: Duration::from_millis(80),
             max_sessions: 8,
+            ..Default::default()
         },
     );
     let mut trace = AsrTrace::new(40, 42);

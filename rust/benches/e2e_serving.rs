@@ -27,6 +27,7 @@ fn run(policy: PolicyMode, label: &str, frames: &[f32]) {
             max_wait: Duration::from_millis(80),
             max_sessions: 4,
             batching: BatchMode::Auto,
+            ..Default::default()
         },
     );
     let id = coord.open().unwrap();
@@ -69,6 +70,7 @@ fn run_transcribe(spec_str: &str, t: usize, frames: &[f32]) {
             max_wait: Duration::from_millis(80),
             max_sessions: 4,
             batching: BatchMode::Auto,
+            ..Default::default()
         },
     );
     let id = coord.open().unwrap();

@@ -189,6 +189,7 @@ fn main() {
             max_wait: Duration::from_millis(100),
             max_sessions: 4,
             batching: BatchMode::Auto,
+            ..Default::default()
         },
     );
     let id = coord.open().unwrap();
@@ -503,6 +504,7 @@ fn serve_fps(frames_per_stream: usize, streams: usize) -> f64 {
             max_wait: Duration::from_millis(80),
             max_sessions: streams.max(1),
             batching: BatchMode::Auto,
+            ..Default::default()
         },
     );
     let feat = spec.feat;

@@ -84,6 +84,14 @@ COMMANDS:
                                             [--block N | --adaptive]
                                             [--max-wait-ms N] [--max-block N]
                                             [--batch auto|on|off] [--seed N]
+                                            [--shards N] [--max-sessions N]
+                                            [--max-pending N] [--evict-ms N]
+  loadgen    serving load test: concurrent   [--stack SPEC] [--shards N]
+             synthetic CTC sessions against  [--sessions N] [--clients N]
+             an in-process sharded server;   [--chunk N] [--block N]
+             writes bench_out/               [--tokens N] [--max-wait-ms N]
+             BENCH_serving.json, exits       [--max-sessions N] [--max-pending N]
+             non-zero on any dropped session [--retry-deadline-ms N] [--seed N]
   decode     offline streaming transcription [--stack SPEC] [--decoder D]
              (frames -> logits -> CTC)       [--frames N] [--block N] [--seed N]
   info       model/platform inventory
@@ -99,6 +107,25 @@ GLOBAL OPTIONS:
   --batch MODE   (serve, native backend) cross-session fusing of ready
                  blocks into one N = B*T dispatch per tick: auto (fuse
                  whenever the pool has >1 thread, the default), on, off.
+
+SHARDED SERVING (serve/loadgen, native backend):
+  --shards N        spawn N coordinator shards, each its own inference
+                    thread + stack replica.  Shard s of N mints session
+                    ids with id % N == s, so every id-bearing request
+                    routes by modulus — no cross-shard state, and for a
+                    fixed session->shard assignment the math is
+                    bit-identical to --shards 1.  Default 1 (serve).
+  --max-sessions N  per-shard session budget (OPEN past it -> BUSY, a
+                    retryable capacity refusal, distinct from hard ERR).
+  --max-pending N   per-session pending-frame admission bound (FEED past
+                    it -> BUSY; a single FEED larger than the whole
+                    bound -> ERR).  Default 1024.
+  --evict-ms N      park sessions idle and quiescent for N ms off the
+                    tick scan path (transparently revived on their next
+                    request, bit-identically).  0 disables.  Default
+                    30000.  STATS reports evicted/restored counts; with
+                    --shards > 1 it returns one shard<i>[...] summary
+                    per shard.
 
 STACK SPECS (native serve; one weight set, any layer kind x precision):
   <arch>:<prec>[:bi]:<hidden>x<depth>[,feat=N][,vocab=N][,l<i>=<arch>:<prec>[:bi]]

@@ -23,6 +23,44 @@ use crate::decode::DecoderSpec;
 use crate::engine::StreamState;
 use crate::linalg::pool;
 
+/// Typed serve-path failure, the overload/backpressure contract of the
+/// whole serving stack.
+///
+/// * [`CoordError::Busy`] — a transient **capacity** condition: the
+///   request was *not* applied, no state changed, and the server is
+///   healthy.  Retrying the identical request after backoff is expected
+///   to succeed once load drains (a session closes, a tick drains a
+///   queue).  On the wire this becomes the `BUSY` response.
+/// * [`CoordError::Failed`] — a hard error: the request itself is
+///   invalid (unknown session, ragged frames, over-bound single feed)
+///   and retrying it unchanged will fail again.  On the wire: `ERR`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CoordError {
+    Busy(String),
+    Failed(String),
+}
+
+impl CoordError {
+    pub fn is_busy(&self) -> bool {
+        matches!(self, CoordError::Busy(_))
+    }
+
+    pub fn message(&self) -> &str {
+        match self {
+            CoordError::Busy(m) | CoordError::Failed(m) => m,
+        }
+    }
+}
+
+impl std::fmt::Display for CoordError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CoordError::Busy(m) => write!(f, "busy: {m}"),
+            CoordError::Failed(m) => write!(f, "{m}"),
+        }
+    }
+}
+
 /// When a tick may fuse many streams' ready blocks into one batched
 /// dispatch (requires a backend with a genuinely fused path — see
 /// `BlockBackend::supports_batch`).
@@ -45,10 +83,26 @@ pub struct CoordinatorConfig {
     pub policy: PolicyMode,
     /// Latency budget used by the adaptive policy AND the deadline flush.
     pub max_wait: Duration,
-    /// Maximum live sessions (embedded memory budget).
+    /// Maximum live sessions, active + parked (embedded memory budget).
     pub max_sessions: usize,
     /// Cross-session batching of ready blocks within a tick.
     pub batching: BatchMode,
+    /// Admission bound on each session's pending-frame queue: a FEED that
+    /// would push a session past this many queued frames is refused with
+    /// [`CoordError::Busy`] (nothing applied — drain and retry), and a
+    /// single FEED larger than the whole bound is a hard
+    /// [`CoordError::Failed`].
+    pub max_pending_frames: usize,
+    /// Idle-eviction horizon: a quiescent session (no pending frames, no
+    /// undelivered logits) idle this long is parked by the next tick —
+    /// its queue capacity is released, only recurrent state and the
+    /// decoder hypothesis stay resident — and transparently revived by
+    /// its next request.  `None` disables the sweep.
+    pub evict_after: Option<Duration>,
+    /// First session id this coordinator hands out (shard affinity).
+    pub first_id: SessionId,
+    /// Session-id increment (shard count; ids stay `≡ first_id mod stride`).
+    pub id_stride: u64,
 }
 
 impl Default for CoordinatorConfig {
@@ -58,7 +112,25 @@ impl Default for CoordinatorConfig {
             max_wait: Duration::from_millis(100),
             max_sessions: 64,
             batching: BatchMode::Auto,
+            max_pending_frames: 1024,
+            evict_after: Some(Duration::from_secs(30)),
+            first_id: 1,
+            id_stride: 1,
         }
+    }
+}
+
+impl CoordinatorConfig {
+    /// Partition the session-id space for shard `shard` of `nshards`:
+    /// this shard hands out ids `nshards + shard, 2·nshards + shard, …`,
+    /// so `id % nshards == shard` for every id any shard mints and the
+    /// front-end routes requests by modulus alone, with no shared state.
+    /// `nshards = 1` reproduces the unsharded sequence 1, 2, 3, ….
+    pub fn for_shard(mut self, shard: usize, nshards: usize) -> Self {
+        let n = nshards.max(1) as u64;
+        self.first_id = n + (shard as u64 % n);
+        self.id_stride = n;
+        self
     }
 }
 
@@ -66,7 +138,13 @@ impl Default for CoordinatorConfig {
 pub struct Coordinator<B: BlockBackend> {
     backend: B,
     cfg: CoordinatorConfig,
+    /// Sessions the tick loop iterates (dispatchable).
     sessions: BTreeMap<SessionId, Session>,
+    /// Idle sessions parked by the eviction sweep: only recurrent state
+    /// and decoder hypotheses resident, never scanned by `tick`, revived
+    /// transparently on their next request.  Counts toward
+    /// `max_sessions` — parking frees queue memory, not the session slot.
+    parked: BTreeMap<SessionId, Session>,
     next_id: SessionId,
     policy: AdaptivePolicy,
     pub metrics: Metrics,
@@ -75,11 +153,13 @@ pub struct Coordinator<B: BlockBackend> {
 impl<B: BlockBackend> Coordinator<B> {
     pub fn new(backend: B, cfg: CoordinatorConfig) -> Self {
         let policy = AdaptivePolicy::new(cfg.policy, cfg.max_wait);
+        let first_id = cfg.first_id.max(1);
         Self {
             backend,
             cfg,
             sessions: BTreeMap::new(),
-            next_id: 1,
+            parked: BTreeMap::new(),
+            next_id: first_id,
             policy,
             metrics: Metrics::new(),
         }
@@ -89,8 +169,19 @@ impl<B: BlockBackend> Coordinator<B> {
         &self.backend
     }
 
+    /// Open sessions, active + parked (the `max_sessions` accounting).
     pub fn session_count(&self) -> usize {
+        self.sessions.len() + self.parked.len()
+    }
+
+    /// Sessions the tick loop currently scans.
+    pub fn active_sessions(&self) -> usize {
         self.sessions.len()
+    }
+
+    /// Sessions parked by the idle-eviction sweep.
+    pub fn parked_sessions(&self) -> usize {
+        self.parked.len()
     }
 
     pub fn feat(&self) -> usize {
@@ -101,16 +192,38 @@ impl<B: BlockBackend> Coordinator<B> {
         self.backend.config().vocab
     }
 
-    /// Open a new stream; returns its id.
-    pub fn open(&mut self) -> Result<SessionId, String> {
-        if self.sessions.len() >= self.cfg.max_sessions {
-            return Err(format!(
-                "session limit {} reached",
+    /// Look up a session for a client request, transparently reviving it
+    /// from the parked table if the idle sweep evicted it, and resetting
+    /// its idle clock either way.
+    fn session_entry(&mut self, id: SessionId) -> Result<&mut Session, String> {
+        if !self.sessions.contains_key(&id) {
+            if let Some(mut s) = self.parked.remove(&id) {
+                self.metrics.sessions_restored += 1;
+                s.touch(Instant::now());
+                self.sessions.insert(id, s);
+            }
+        }
+        match self.sessions.get_mut(&id) {
+            Some(s) => {
+                s.touch(Instant::now());
+                Ok(s)
+            }
+            None => Err(format!("no such session {id}")),
+        }
+    }
+
+    /// Open a new stream; returns its id.  At the session limit this is
+    /// the typed overload (`Busy`): nothing changed, retry after a
+    /// session closes.
+    pub fn open(&mut self) -> Result<SessionId, CoordError> {
+        if self.session_count() >= self.cfg.max_sessions {
+            return Err(CoordError::Busy(format!(
+                "session limit {} reached; retry after a session closes",
                 self.cfg.max_sessions
-            ));
+            )));
         }
         let id = self.next_id;
-        self.next_id += 1;
+        self.next_id += self.cfg.id_stride.max(1);
         let cfg = self.backend.config();
         let session = Session::new(id, cfg.feat, cfg.vocab, self.backend.init_state());
         self.sessions.insert(id, session);
@@ -120,6 +233,9 @@ impl<B: BlockBackend> Coordinator<B> {
     /// Close a stream, flushing any pending frames first.  Returns the
     /// final logits flushed (possibly empty).
     pub fn close(&mut self, id: SessionId) -> Result<Vec<f32>, String> {
+        // Revive a parked session first so the flush sees it (cheap: a
+        // parked session is quiescent, so its flush is a no-op).
+        self.session_entry(id)?;
         // Flush remaining frames at exact sizes.
         self.flush_session(id)?;
         let mut sess = self
@@ -130,30 +246,49 @@ impl<B: BlockBackend> Coordinator<B> {
     }
 
     /// Feed frames to a stream (`x.len()` multiple of `feat`).
-    pub fn feed(&mut self, id: SessionId, x: &[f32]) -> Result<usize, String> {
+    ///
+    /// Admission control: a feed that would push the session past
+    /// `max_pending_frames` queued frames is refused with `Busy` (nothing
+    /// applied — poll, let a tick drain, retry); a single feed larger
+    /// than the whole bound can never succeed and is a hard `Failed`.
+    pub fn feed(&mut self, id: SessionId, x: &[f32]) -> Result<usize, CoordError> {
         let now = Instant::now();
-        let sess = self
-            .sessions
-            .get_mut(&id)
-            .ok_or_else(|| format!("no such session {id}"))?;
-        let n = sess.push_frames(x, now)?;
+        let bound = self.cfg.max_pending_frames;
+        let sess = self.session_entry(id).map_err(CoordError::Failed)?;
+        if x.len() % sess.feat != 0 {
+            return Err(CoordError::Failed(format!(
+                "input length {} is not a multiple of feat {}",
+                x.len(),
+                sess.feat
+            )));
+        }
+        let n = x.len() / sess.feat;
+        if n > bound {
+            return Err(CoordError::Failed(format!(
+                "FEED of {n} frames exceeds the per-session queue bound {bound}; split the request"
+            )));
+        }
+        if sess.pending_frames() + n > bound {
+            return Err(CoordError::Busy(format!(
+                "session {id} frame queue full ({} pending, bound {bound}); poll and retry",
+                sess.pending_frames()
+            )));
+        }
+        let n = sess.push_frames(x, now).map_err(CoordError::Failed)?;
         self.policy.on_arrival(n, now);
         Ok(n)
     }
 
     /// Pop up to `max_frames` of computed logits for a stream.
     pub fn drain(&mut self, id: SessionId, max_frames: usize) -> Result<Vec<f32>, String> {
-        let sess = self
-            .sessions
-            .get_mut(&id)
-            .ok_or_else(|| format!("no such session {id}"))?;
-        Ok(sess.pop_ready(max_frames))
+        Ok(self.session_entry(id)?.pop_ready(max_frames))
     }
 
     /// Frames computed and waiting for pickup.
     pub fn ready_frames(&self, id: SessionId) -> Result<usize, String> {
         self.sessions
             .get(&id)
+            .or_else(|| self.parked.get(&id))
             .map(|s| s.ready_frames())
             .ok_or_else(|| format!("no such session {id}"))
     }
@@ -162,10 +297,7 @@ impl<B: BlockBackend> Coordinator<B> {
     /// Must happen before any of the stream's frames are computed.
     pub fn set_decoder(&mut self, id: SessionId, spec: DecoderSpec) -> Result<(), String> {
         let vocab = self.backend.config().vocab;
-        let sess = self
-            .sessions
-            .get_mut(&id)
-            .ok_or_else(|| format!("no such session {id}"))?;
+        let sess = self.session_entry(id)?;
         sess.attach_decoder(spec.build(vocab)?)
     }
 
@@ -173,6 +305,7 @@ impl<B: BlockBackend> Coordinator<B> {
     /// are flushed through the engine first, so the transcript covers
     /// every frame fed so far.
     pub fn transcript(&mut self, id: SessionId, finalize: bool) -> Result<Vec<usize>, String> {
+        self.session_entry(id)?;
         if finalize {
             self.flush_session(id)?;
         }
@@ -198,6 +331,7 @@ impl<B: BlockBackend> Coordinator<B> {
     /// otherwise each session executes its own blocks.  Returns the
     /// number of dispatches run.
     pub fn tick(&mut self) -> Result<usize, String> {
+        self.metrics.ticks += 1;
         let now = Instant::now();
         let sizes: Vec<usize> = self.backend.block_sizes().to_vec();
         let ids: Vec<SessionId> = self.sessions.keys().copied().collect();
@@ -215,14 +349,40 @@ impl<B: BlockBackend> Coordinator<B> {
                 plan.entries.push((id, d));
             }
         }
-        if plan.is_batchable() && self.batching_enabled() {
-            return self.execute_batch(&plan);
-        }
-        let mut ran = 0;
-        for (id, dispatch) in &plan.entries {
-            ran += self.execute(*id, &dispatch.blocks)?;
-        }
+        let ran = if plan.is_batchable() && self.batching_enabled() {
+            self.execute_batch(&plan)?
+        } else {
+            let mut ran = 0;
+            for (id, dispatch) in &plan.entries {
+                ran += self.execute(*id, &dispatch.blocks)?;
+            }
+            ran
+        };
+        self.evict_idle(now);
         Ok(ran)
+    }
+
+    /// Park quiescent sessions idle past the eviction horizon: release
+    /// their queue capacity and move them off the tick loop's scan path.
+    /// Recurrent state and decoder hypotheses survive — the session's
+    /// next request revives it with full transcript continuity.
+    fn evict_idle(&mut self, now: Instant) {
+        let Some(after) = self.cfg.evict_after else {
+            return;
+        };
+        let idle: Vec<SessionId> = self
+            .sessions
+            .iter()
+            .filter(|(_, s)| s.is_quiescent() && s.idle_for(now) >= after)
+            .map(|(id, _)| *id)
+            .collect();
+        for id in idle {
+            if let Some(mut s) = self.sessions.remove(&id) {
+                s.shrink();
+                self.parked.insert(id, s);
+                self.metrics.sessions_evicted += 1;
+            }
+        }
     }
 
     /// Force-flush one session's pending frames.
@@ -230,11 +390,8 @@ impl<B: BlockBackend> Coordinator<B> {
         let sizes: Vec<usize> = self.backend.block_sizes().to_vec();
         let batcher = Batcher::new(1, Duration::ZERO);
         let dispatch = {
-            let sess = self
-                .sessions
-                .get(&id)
-                .ok_or_else(|| format!("no such session {id}"))?;
-            batcher.flush(sess, &sizes)
+            let sess = self.session_entry(id)?;
+            batcher.flush(&*sess, &sizes)
         };
         match dispatch {
             Some(d) => self.execute(id, &d.blocks),
@@ -416,6 +573,7 @@ mod tests {
                 max_wait: Duration::from_millis(max_wait_ms),
                 max_sessions: 4,
                 batching,
+                ..Default::default()
             },
         )
     }
@@ -457,12 +615,139 @@ mod tests {
     }
 
     #[test]
-    fn session_limit_enforced() {
+    fn session_limit_is_typed_overload() {
         let mut c = coord(PolicyMode::Fixed(4), 100);
-        for _ in 0..4 {
-            c.open().unwrap();
+        let ids: Vec<_> = (0..4).map(|_| c.open().unwrap()).collect();
+        // At the limit the refusal is the retryable overload, not a hard
+        // failure — and retrying after a close succeeds.
+        match c.open() {
+            Err(e) => assert!(e.is_busy(), "expected Busy, got {e:?}"),
+            Ok(id) => panic!("opened {id} past the limit"),
         }
-        assert!(c.open().is_err());
+        c.close(ids[0]).unwrap();
+        c.open().unwrap();
+    }
+
+    #[test]
+    fn feed_backpressure_is_typed() {
+        let mut c = coord(PolicyMode::Fixed(4), 10_000);
+        c.cfg.max_pending_frames = 8;
+        let id = c.open().unwrap();
+        c.feed(id, &vec![0.0; 6 * 8]).unwrap();
+        // 6 + 4 > 8: refused with Busy, nothing applied.
+        let err = c.feed(id, &vec![0.0; 4 * 8]).unwrap_err();
+        assert!(err.is_busy(), "{err:?}");
+        assert_eq!(c.sessions[&id].pending_frames(), 6, "busy feed not applied");
+        // Exactly to the bound still fits.
+        c.feed(id, &vec![0.0; 2 * 8]).unwrap();
+        // A single feed larger than the whole bound is a hard error.
+        let mut c2 = coord(PolicyMode::Fixed(4), 100);
+        c2.cfg.max_pending_frames = 8;
+        let id2 = c2.open().unwrap();
+        let err = c2.feed(id2, &vec![0.0; 9 * 8]).unwrap_err();
+        assert!(!err.is_busy(), "over-bound single feed must be Failed: {err:?}");
+        // Draining via ticks clears the backpressure.
+        c.tick().unwrap();
+        c.feed(id, &vec![0.0; 8 * 8]).unwrap();
+    }
+
+    #[test]
+    fn idle_quiescent_sessions_park_and_revive() {
+        let mut c = coord(PolicyMode::Fixed(4), 0);
+        c.cfg.evict_after = Some(Duration::ZERO);
+        let id = c.open().unwrap();
+        let mut x = vec![0.0; 4 * 8];
+        Rng::new(9).fill_normal(&mut x, 1.0);
+        c.feed(id, &x).unwrap();
+        c.tick().unwrap();
+        // Undelivered logits pin the session active.
+        c.tick().unwrap();
+        assert_eq!(c.parked_sessions(), 0, "ready frames block eviction");
+        c.drain(id, usize::MAX).unwrap();
+        c.tick().unwrap();
+        assert_eq!(c.parked_sessions(), 1, "quiescent idle session parks");
+        assert_eq!(c.active_sessions(), 0);
+        assert_eq!(c.session_count(), 1, "parked still counts as open");
+        assert_eq!(c.metrics.sessions_evicted, 1);
+        // Any request revives it transparently; recurrent state carried.
+        c.feed(id, &x).unwrap();
+        assert_eq!(c.active_sessions(), 1);
+        assert_eq!(c.metrics.sessions_restored, 1);
+        c.tick().unwrap();
+        assert_eq!(c.ready_frames(id).unwrap(), 4);
+        // Parked sessions can be closed directly.
+        c.drain(id, usize::MAX).unwrap();
+        c.tick().unwrap();
+        assert_eq!(c.parked_sessions(), 1);
+        c.close(id).unwrap();
+        assert_eq!(c.session_count(), 0);
+    }
+
+    #[test]
+    fn eviction_preserves_bits_and_transcripts() {
+        // A park/revive cycle must be invisible in the numbers: same
+        // logits, bit for bit, as a run that never evicts.
+        let mut chunks = Vec::new();
+        for k in 0..3u64 {
+            let mut x = vec![0.0; 4 * 8];
+            Rng::new(70 + k).fill_normal(&mut x, 1.0);
+            chunks.push(x);
+        }
+        let run = |evict: bool| -> (Vec<f32>, Vec<usize>) {
+            let mut c = coord(PolicyMode::Fixed(4), 0);
+            c.cfg.evict_after = if evict { Some(Duration::ZERO) } else { None };
+            let id = c.open().unwrap();
+            c.set_decoder(id, crate::decode::DecoderSpec::Greedy).unwrap();
+            let mut logits = Vec::new();
+            for x in &chunks {
+                c.feed(id, x).unwrap();
+                c.tick().unwrap();
+                logits.extend(c.drain(id, usize::MAX).unwrap());
+                // Extra empty ticks so the evicting run actually parks
+                // the (now quiescent) session between chunks.
+                c.tick().unwrap();
+                if evict {
+                    assert_eq!(c.parked_sessions(), 1, "session must park");
+                }
+            }
+            let toks = c.transcript(id, true).unwrap();
+            (logits, toks)
+        };
+        let (base_logits, base_toks) = run(false);
+        let (evi_logits, evi_toks) = run(true);
+        assert_eq!(base_logits.len(), 12 * 4);
+        assert_eq!(base_toks, evi_toks, "transcript continuity across park");
+        for (i, (a, b)) in base_logits.iter().zip(&evi_logits).enumerate() {
+            assert!(a.to_bits() == b.to_bits(), "idx {i}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn sharded_id_spaces_are_disjoint_by_modulus() {
+        let base = CoordinatorConfig::default();
+        for nshards in [1usize, 2, 3, 4] {
+            for shard in 0..nshards {
+                let cfg = base.clone().for_shard(shard, nshards);
+                let mut expect = cfg.first_id;
+                assert!(expect >= 1, "ids stay positive");
+                for _ in 0..5 {
+                    assert_eq!(expect as usize % nshards, shard);
+                    expect += cfg.id_stride;
+                }
+            }
+        }
+        // nshards = 1 reproduces the unsharded sequence exactly.
+        let cfg = base.for_shard(0, 1);
+        assert_eq!((cfg.first_id, cfg.id_stride), (1, 1));
+    }
+
+    #[test]
+    fn ticks_are_counted() {
+        let mut c = coord(PolicyMode::Fixed(4), 100);
+        assert_eq!(c.metrics.ticks, 0);
+        c.tick().unwrap();
+        c.tick().unwrap();
+        assert_eq!(c.metrics.ticks, 2);
     }
 
     #[test]

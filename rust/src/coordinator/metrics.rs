@@ -21,6 +21,13 @@ pub struct Metrics {
     pub weight_bytes_fetched: u64,
     /// Hypothetical weight bytes if every frame ran at T=1.
     pub weight_bytes_t1: u64,
+    /// Dispatch-loop passes (`Coordinator::tick` calls) — the serve loop
+    /// must pay exactly one per request wakeup, asserted in tests.
+    pub ticks: u64,
+    /// Idle quiescent sessions parked by the eviction sweep.
+    pub sessions_evicted: u64,
+    /// Parked sessions transparently revived by a later request.
+    pub sessions_restored: u64,
 }
 
 impl Metrics {
@@ -34,6 +41,9 @@ impl Metrics {
             block_size_counts: Vec::new(),
             weight_bytes_fetched: 0,
             weight_bytes_t1: 0,
+            ticks: 0,
+            sessions_evicted: 0,
+            sessions_restored: 0,
         }
     }
 
@@ -123,13 +133,16 @@ impl Metrics {
     /// One-line human summary (server STATS command, examples).
     pub fn summary(&self) -> String {
         format!(
-            "frames={} blocks={} mean_T={:.1} p50_lat={:.0}us p99_lat={:.0}us traffic_reduction={:.1}x",
+            "frames={} blocks={} mean_T={:.1} p50_lat={:.0}us p99_lat={:.0}us traffic_reduction={:.1}x ticks={} evicted={} restored={}",
             self.frames_processed,
             self.blocks_dispatched,
             self.mean_block(),
             self.latency_us.quantile_bound(0.5),
             self.latency_us.quantile_bound(0.99),
             self.traffic_reduction(),
+            self.ticks,
+            self.sessions_evicted,
+            self.sessions_restored,
         )
     }
 }
@@ -181,5 +194,12 @@ mod tests {
         let s = m.summary();
         assert!(s.contains("frames=8"));
         assert!(s.contains("mean_T=8.0"));
+        m.ticks = 3;
+        m.sessions_evicted = 2;
+        m.sessions_restored = 1;
+        let s = m.summary();
+        assert!(s.contains("ticks=3"));
+        assert!(s.contains("evicted=2"));
+        assert!(s.contains("restored=1"));
     }
 }

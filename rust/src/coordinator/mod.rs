@@ -30,7 +30,7 @@ pub mod session;
 
 pub use backend::{BlockBackend, NativeBackend};
 pub use batcher::{decompose_block, Batcher, Dispatch, TickPlan};
-pub use core::{BatchMode, Coordinator, CoordinatorConfig};
+pub use core::{BatchMode, CoordError, Coordinator, CoordinatorConfig};
 pub use metrics::Metrics;
 pub use policy::{AdaptivePolicy, PolicyMode};
 pub use session::{Session, SessionId};

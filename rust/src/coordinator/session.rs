@@ -38,6 +38,9 @@ pub struct Session {
     pub frames_in: u64,
     pub frames_out: u64,
     pub created: Instant,
+    /// Last client activity (feed/poll/attach/restore) — drives the
+    /// coordinator's idle-eviction sweep.
+    pub last_touch: Instant,
 }
 
 impl Session {
@@ -55,7 +58,33 @@ impl Session {
             frames_in: 0,
             frames_out: 0,
             created: Instant::now(),
+            last_touch: Instant::now(),
         }
+    }
+
+    /// Record client activity (resets the idle-eviction clock).
+    pub fn touch(&mut self, now: Instant) {
+        self.last_touch = now;
+    }
+
+    /// Time since the last client activity.
+    pub fn idle_for(&self, now: Instant) -> std::time::Duration {
+        now.saturating_duration_since(self.last_touch)
+    }
+
+    /// Nothing queued in either direction: the session is pure recurrent
+    /// state (+ decoder hypothesis) and is safe to park.
+    pub fn is_quiescent(&self) -> bool {
+        self.pending.is_empty() && self.ready.is_empty()
+    }
+
+    /// Release the queues' spare capacity.  Called when the session is
+    /// parked: an idle session must pin only its recurrent state and
+    /// decoder hypothesis, not the high-water-mark frame buffers.
+    pub fn shrink(&mut self) {
+        self.pending.shrink_to_fit();
+        self.arrivals.shrink_to_fit();
+        self.ready.shrink_to_fit();
     }
 
     /// Enqueue frames (`x.len()` must be a multiple of `feat`).
@@ -73,6 +102,7 @@ impl Session {
             self.arrivals.push_back(now);
         }
         self.frames_in += n as u64;
+        self.last_touch = now;
         Ok(n)
     }
 
@@ -271,6 +301,34 @@ mod tests {
         assert_eq!(s.decode_progress().unwrap().0, 3);
         // Logits still pollable alongside the transcript.
         assert_eq!(s.ready_frames(), 3);
+    }
+
+    #[test]
+    fn quiescence_tracks_both_queues() {
+        let mut s = sess();
+        assert!(s.is_quiescent(), "fresh session is parkable");
+        s.push_frames(&[1., 2., 3.], Instant::now()).unwrap();
+        assert!(!s.is_quiescent(), "pending frames pin the session");
+        let _ = s.take_frames(1).unwrap();
+        s.push_ready(&[0.5, 0.5]);
+        assert!(!s.is_quiescent(), "undelivered logits pin the session");
+        let _ = s.pop_ready(usize::MAX);
+        assert!(s.is_quiescent());
+        // Shrinking a quiescent session keeps it serviceable.
+        s.shrink();
+        s.push_frames(&[4., 5., 6.], Instant::now()).unwrap();
+        assert_eq!(s.pending_frames(), 1);
+    }
+
+    #[test]
+    fn idle_clock_resets_on_feed() {
+        let mut s = sess();
+        let t0 = Instant::now();
+        s.touch(t0);
+        let later = t0 + std::time::Duration::from_secs(5);
+        assert_eq!(s.idle_for(later), std::time::Duration::from_secs(5));
+        s.push_frames(&[1., 2., 3.], later).unwrap();
+        assert_eq!(s.idle_for(later), std::time::Duration::ZERO);
     }
 
     #[test]

@@ -48,6 +48,7 @@ fn main() {
         "simulate" => cmd_simulate(&args),
         "parity" => cmd_parity(&args),
         "serve" => cmd_serve(&args),
+        "loadgen" => cmd_loadgen(&args),
         "decode" => cmd_decode(&args),
         "info" => cmd_info(),
         "help" | "--help" | "-h" => {
@@ -315,6 +316,10 @@ fn cmd_decode(args: &Args) -> Result<(), String> {
 
 fn cmd_serve(args: &Args) -> Result<(), String> {
     let port = args.get_usize("port", 7433)?;
+    let shards = args.get_usize("shards", 1)?;
+    if shards < 1 {
+        return Err("--shards must be >= 1".into());
+    }
     let policy = if args.has("adaptive") {
         PolicyMode::Adaptive
     } else {
@@ -326,11 +331,21 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         "off" => BatchMode::Off,
         other => return Err(format!("unknown --batch {other:?} (auto|on|off)")),
     };
+    let evict_ms = args.get_usize("evict-ms", 30_000)?;
     let cfg = CoordinatorConfig {
         policy,
         max_wait: Duration::from_millis(args.get_usize("max-wait-ms", 100)? as u64),
+        // Per-shard budget: the total session capacity is --max-sessions
+        // times --shards.
         max_sessions: args.get_usize("max-sessions", 64)?,
         batching,
+        max_pending_frames: args.get_usize("max-pending", 1024)?,
+        evict_after: if evict_ms == 0 {
+            None
+        } else {
+            Some(Duration::from_millis(evict_ms as u64))
+        },
+        ..Default::default()
     };
     let listener =
         TcpListener::bind(("127.0.0.1", port as u16)).map_err(|e| format!("bind: {e}"))?;
@@ -345,26 +360,41 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
             // artifact names remain valid aliases.
             let spec = StackSpec::parse(args.get_or("stack", "sru:f32:512x4"))?;
             let seed = args.get_usize("seed", 2018)? as u64;
-            let params = StackParams::init(&spec, &mut Rng::new(seed))?;
             let max_block = args.get_usize("max-block", 32)?;
-            let stack = NativeStack::new(&spec, params, max_block)?;
-            println!(
-                "backend=native stack={} params={} weight_bytes/block={} state_bytes/stream={} threads={} batch={:?}",
-                spec.name(),
-                spec.param_count(),
-                stack.weight_bytes_per_block(),
-                spec.state_bytes(),
-                mtsrnn::linalg::pool::threads(),
-                batching
-            );
-            let backend = NativeBackend::new(stack);
-            let coordinator = Coordinator::new(backend, cfg);
-            let handle = server::spawn_inference(coordinator, tick);
+            // One coordinator (and stack replica) per shard; shard `s`
+            // mints session ids with `id % shards == s`, so the handle
+            // routes by modulus and shards share no mutable state.
+            let mut coordinators = Vec::with_capacity(shards);
+            for s in 0..shards {
+                let params = StackParams::init(&spec, &mut Rng::new(seed))?;
+                let stack = NativeStack::new(&spec, params, max_block)?;
+                if s == 0 {
+                    println!(
+                        "backend=native stack={} params={} weight_bytes/block={} state_bytes/stream={} threads={} batch={:?} shards={shards}",
+                        spec.name(),
+                        spec.param_count(),
+                        stack.weight_bytes_per_block(),
+                        spec.state_bytes(),
+                        mtsrnn::linalg::pool::threads(),
+                        batching
+                    );
+                }
+                let shard_cfg = cfg.clone().for_shard(s, shards);
+                coordinators.push(Coordinator::new(NativeBackend::new(stack), shard_cfg));
+            }
+            let handle = server::spawn_shards(coordinators, tick);
             server::serve(listener, handle, stop).map_err(|e| e.to_string())
         }
         "pjrt" => {
             // PJRT handles are not Send: inference runs on THIS thread and
             // the accept loop runs on a helper thread.
+            if shards > 1 {
+                return Err(
+                    "--shards > 1 requires --backend native (PJRT handles are not Send, \
+                     so the single inference loop must run on the main thread)"
+                        .into(),
+                );
+            }
             let dir = ArtifactDir::load(args.get_or("artifacts", "artifacts"))?;
             let name = args.get_or("stack", "asr_sru_512x4").to_string();
             let backend = PjrtBackend::load(&dir, &name).map_err(|e| e.to_string())?;
@@ -374,7 +404,7 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
             let handle = server::ServerHandle::from_sender(tx);
             let stop2 = stop.clone();
             let accept = std::thread::spawn(move || server::serve(listener, handle, stop2));
-            server::inference_loop(coordinator, rx, tick);
+            let _ = server::inference_loop(coordinator, rx, tick);
             accept
                 .join()
                 .map_err(|_| "accept thread panicked".to_string())?
@@ -382,6 +412,58 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         }
         other => Err(format!("unknown --backend {other:?}")),
     }
+}
+
+/// Serving load test: `--sessions` concurrent synthetic CTC sessions
+/// against an in-process `--shards`-shard server, reporting aggregate
+/// frames/s and time-to-first-partial percentiles, and emitting the
+/// `bench_out/BENCH_serving.json` record the CI bench comparator reads.
+/// Exits non-zero if any session is dropped (hard error, retry-deadline
+/// exhaustion, or frame loss) — the zero-drop gate.
+fn cmd_loadgen(args: &Args) -> Result<(), String> {
+    let cfg = server::loadgen::LoadgenConfig {
+        spec: args
+            .get_or("stack", "sru:f32:64x2,feat=16,vocab=16")
+            .to_string(),
+        seed: args.get_usize("seed", 2018)? as u64,
+        shards: args.get_usize("shards", 2)?,
+        sessions: args.get_usize("sessions", 1000)?,
+        tokens: args.get_usize("tokens", 8)?,
+        chunk: args.get_usize("chunk", 16)?,
+        clients: args.get_usize("clients", 8)?,
+        block: args.get_usize("block", 16)?,
+        max_wait_ms: args.get_usize("max-wait-ms", 5)? as u64,
+        max_sessions: args.get_usize("max-sessions", 0)?,
+        max_pending: args.get_usize("max-pending", 1024)?,
+        retry_deadline_ms: args.get_usize("retry-deadline-ms", 10_000)? as u64,
+    };
+    println!(
+        "loadgen: stack={} shards={} sessions={} clients={} chunk={} block={} threads={}",
+        cfg.spec,
+        cfg.shards,
+        cfg.sessions,
+        cfg.clients,
+        cfg.chunk,
+        cfg.block,
+        mtsrnn::linalg::pool::threads()
+    );
+    let report = server::loadgen::run(&cfg)?;
+    println!("{}", report.summary());
+    let source = format!(
+        "local run — regenerate with ./target/release/mtsrnn loadgen --stack {} \
+         --shards {} --sessions {} --clients {} --chunk {} --block {}",
+        cfg.spec, cfg.shards, cfg.sessions, cfg.clients, cfg.chunk, cfg.block
+    );
+    let json = server::loadgen::report_json(&cfg.spec, &source, &[report.clone()]);
+    let path = write_report("BENCH_serving.json", &json).map_err(|e| e.to_string())?;
+    println!("wrote {}", path.display());
+    if report.dropped_sessions > 0 {
+        return Err(format!(
+            "{} of {} sessions dropped (see summary above)",
+            report.dropped_sessions, report.sessions
+        ));
+    }
+    Ok(())
 }
 
 fn cmd_info() -> Result<(), String> {

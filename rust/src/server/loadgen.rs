@@ -1,0 +1,464 @@
+//! Load generator: thousands of concurrent synthetic CTC sessions
+//! against an in-process sharded server, reporting time-to-first-partial
+//! percentiles and aggregate frames/s.
+//!
+//! The workload reuses [`CtcEmission`](crate::workload::CtcEmission):
+//! each session is one synthetic utterance whose frame-level emission
+//! logits (width = the stack's `feat`) are fed as input frames through
+//! the serving stack, with a greedy CTC decoder attached — so every
+//! session exercises the full transcribe path: admission control, block
+//! batching, cross-session fusing, decode, and the typed `BUSY`
+//! backpressure contract (`BUSY` responses are retried with the
+//! documented back-off, and counted).
+//!
+//! Driving happens through [`ServerHandle::call`] from `clients` worker
+//! threads, each multiplexing its share of the sessions — the channel
+//! ingress IS the serve path boundary (the TCP accept loop in front of
+//! it is covered by the e2e tests); this keeps the measurement about
+//! shard/coordinator throughput, not kernel socket limits.
+//!
+//! **Time-to-first-partial** here is the wall time from a session's
+//! first accepted FEED to the first partial *result* observed for it (a
+//! polled logit frame — the transcript rides the same computed frames).
+//!
+//! A session is **dropped** iff it hits a hard `ERR`, exhausts the
+//! `BUSY` retry deadline, or fails frame conservation (frames drained ≠
+//! frames fed after the closing flush).  The CLI exits non-zero on any
+//! drop, which is the CI gate.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Barrier;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{
+    BatchMode, Coordinator, CoordinatorConfig, NativeBackend, PolicyMode,
+};
+use crate::decode::DecoderSpec;
+use crate::engine::NativeStack;
+use crate::linalg::pool;
+use crate::models::config::StackSpec;
+use crate::models::StackParams;
+use crate::server::protocol::{Request, Response};
+use crate::server::{spawn_shards, ServerHandle};
+use crate::util::Rng;
+use crate::workload::CtcEmission;
+
+/// Loadgen tunables (`mtsrnn loadgen --…`).
+#[derive(Debug, Clone)]
+pub struct LoadgenConfig {
+    /// Stack spec; its `feat` doubles as the synthetic emission vocab.
+    pub spec: String,
+    pub seed: u64,
+    /// Coordinator shards to spawn.
+    pub shards: usize,
+    /// Concurrent sessions (all open before any feeding starts).
+    pub sessions: usize,
+    /// Target tokens per synthetic utterance (frames ≈ 2–3×).
+    pub tokens: usize,
+    /// Frames per FEED request.
+    pub chunk: usize,
+    /// Worker threads multiplexing the sessions.
+    pub clients: usize,
+    /// Batcher block size (and the stack's compiled max block).
+    pub block: usize,
+    pub max_wait_ms: u64,
+    /// Per-shard session budget; 0 sizes it from `sessions`/`shards`.
+    pub max_sessions: usize,
+    /// Per-session pending-frame admission bound.
+    pub max_pending: usize,
+    /// How long a session keeps retrying consecutive `BUSY` refusals
+    /// before it counts as dropped.
+    pub retry_deadline_ms: u64,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        Self {
+            spec: "sru:f32:64x2,feat=16,vocab=16".into(),
+            seed: 2018,
+            shards: 2,
+            sessions: 256,
+            tokens: 8,
+            chunk: 16,
+            clients: 8,
+            block: 16,
+            max_wait_ms: 5,
+            max_sessions: 0,
+            max_pending: 1024,
+            retry_deadline_ms: 10_000,
+        }
+    }
+}
+
+/// One (shards × threads × sessions) measurement point.
+#[derive(Debug, Clone)]
+pub struct LoadgenReport {
+    pub shards: usize,
+    pub threads: usize,
+    pub sessions: usize,
+    pub chunk: usize,
+    pub elapsed_s: f64,
+    /// Aggregate frames drained per second across every session.
+    pub agg_fps: f64,
+    pub ttfp_p50_ms: f64,
+    pub ttfp_p99_ms: f64,
+    pub busy_retries: u64,
+    pub dropped_sessions: usize,
+    pub frames_fed: u64,
+    pub frames_drained: u64,
+}
+
+impl LoadgenReport {
+    pub fn summary(&self) -> String {
+        format!(
+            "shards={} threads={} sessions={} chunk={}: {:.0} frames/s aggregate, \
+             ttfp p50={:.2}ms p99={:.2}ms, busy_retries={}, dropped={}, \
+             frames {}/{} (drained/fed) in {:.2}s",
+            self.shards,
+            self.threads,
+            self.sessions,
+            self.chunk,
+            self.agg_fps,
+            self.ttfp_p50_ms,
+            self.ttfp_p99_ms,
+            self.busy_retries,
+            self.dropped_sessions,
+            self.frames_drained,
+            self.frames_fed,
+            self.elapsed_s,
+        )
+    }
+}
+
+/// Per-session driver state for one synthetic utterance.
+struct SessionDrive {
+    id: u64,
+    /// Emission logits fed as input frames, flat `[frames, feat]`.
+    frames: Vec<f32>,
+    feat: usize,
+    /// Frames fed so far (offset into `frames`).
+    off: usize,
+    fed: u64,
+    drained: u64,
+    first_feed: Option<Instant>,
+    ttfp_ms: Option<f64>,
+    /// Start of the current consecutive-BUSY run, if any.
+    busy_since: Option<Instant>,
+    dropped: bool,
+    done_feeding: bool,
+}
+
+/// Final per-session tally.
+struct SessionOutcome {
+    ttfp_ms: Option<f64>,
+    fed: u64,
+    drained: u64,
+    dropped: bool,
+}
+
+impl SessionDrive {
+    fn new(k: usize, cfg: &LoadgenConfig, feat: usize) -> Self {
+        // Golden-ratio seed mixing keeps per-session utterances distinct
+        // and deterministic for a fixed --seed.
+        let seed = cfg.seed ^ (0x9E37_79B9_7F4A_7C15u64.wrapping_mul(k as u64 + 1));
+        let emission = CtcEmission::new(feat, cfg.tokens.max(1), 8.0, seed);
+        Self {
+            id: 0,
+            frames: emission.logits().to_vec(),
+            feat,
+            off: 0,
+            fed: 0,
+            drained: 0,
+            first_feed: None,
+            ttfp_ms: None,
+            busy_since: None,
+            dropped: false,
+            done_feeding: false,
+        }
+    }
+
+    fn total_frames(&self) -> usize {
+        self.frames.len() / self.feat
+    }
+
+    /// Record a `BUSY` and decide whether the retry deadline has passed.
+    fn note_busy(&mut self, busy: &AtomicU64, cfg: &LoadgenConfig) {
+        busy.fetch_add(1, Ordering::Relaxed);
+        let since = *self.busy_since.get_or_insert_with(Instant::now);
+        if since.elapsed() > Duration::from_millis(cfg.retry_deadline_ms) {
+            self.dropped = true;
+        }
+    }
+
+    /// OPEN (with BUSY retry) + attach the greedy decoder.
+    fn open(&mut self, handle: &ServerHandle, busy: &AtomicU64, cfg: &LoadgenConfig) {
+        loop {
+            if self.dropped {
+                return;
+            }
+            match handle.call(Request::Open) {
+                Response::Opened(id) => {
+                    self.id = id;
+                    self.busy_since = None;
+                    break;
+                }
+                Response::Busy(_) => {
+                    self.note_busy(busy, cfg);
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                _ => {
+                    self.dropped = true;
+                    return;
+                }
+            }
+        }
+        match handle.call(Request::Decode(self.id, DecoderSpec::Greedy)) {
+            Response::Accepted(_) => {}
+            _ => self.dropped = true,
+        }
+    }
+
+    /// Drain whatever logits are ready; the first frame back stamps
+    /// time-to-first-partial.
+    fn poll(&mut self, handle: &ServerHandle, vocab: usize) {
+        match handle.call(Request::Poll(self.id, usize::MAX)) {
+            Response::Logits(v) => {
+                let n = v.len() / vocab;
+                self.drained += n as u64;
+                if n > 0 && self.ttfp_ms.is_none() {
+                    if let Some(t0) = self.first_feed {
+                        self.ttfp_ms = Some(t0.elapsed().as_secs_f64() * 1e3);
+                    }
+                }
+            }
+            Response::Busy(_) => {}
+            _ => self.dropped = true,
+        }
+    }
+
+    /// Feed the next chunk (retrying `BUSY` on later rounds) and drain.
+    /// Returns true while this session still has work in flight.
+    fn step(
+        &mut self,
+        handle: &ServerHandle,
+        busy: &AtomicU64,
+        cfg: &LoadgenConfig,
+        vocab: usize,
+    ) -> bool {
+        if self.dropped || self.done_feeding {
+            return false;
+        }
+        let t = cfg.chunk.min(self.total_frames() - self.off);
+        let chunk = &self.frames[self.off * self.feat..(self.off + t) * self.feat];
+        if self.first_feed.is_none() {
+            self.first_feed = Some(Instant::now());
+        }
+        match handle.call(Request::Feed(self.id, chunk.to_vec())) {
+            Response::Accepted(n) => {
+                self.busy_since = None;
+                self.fed += n as u64;
+                self.off += n;
+                if self.off >= self.total_frames() {
+                    self.done_feeding = true;
+                }
+            }
+            Response::Busy(_) => {
+                // Documented contract: drain, back off, retry unchanged.
+                self.note_busy(busy, cfg);
+            }
+            _ => {
+                self.dropped = true;
+                return false;
+            }
+        }
+        self.poll(handle, vocab);
+        !self.dropped && !self.done_feeding
+    }
+
+    /// Final transcript + close; enforce frame conservation.
+    fn finish(mut self, handle: &ServerHandle, vocab: usize) -> SessionOutcome {
+        if !self.dropped {
+            if !matches!(
+                handle.call(Request::Transcribe(self.id, true)),
+                Response::Tokens(_)
+            ) {
+                self.dropped = true;
+            }
+            match handle.call(Request::Close(self.id)) {
+                Response::Logits(v) => self.drained += (v.len() / vocab) as u64,
+                _ => self.dropped = true,
+            }
+            if self.fed != self.drained || self.fed != self.total_frames() as u64 {
+                // Frames went missing somewhere on the serve path.
+                self.dropped = true;
+            }
+        }
+        SessionOutcome {
+            ttfp_ms: self.ttfp_ms,
+            fed: self.fed,
+            drained: self.drained,
+            dropped: self.dropped,
+        }
+    }
+}
+
+/// Build the sharded in-process server for one loadgen run.
+fn build_handle(cfg: &LoadgenConfig, spec: &StackSpec) -> Result<ServerHandle, String> {
+    let per_shard = if cfg.max_sessions > 0 {
+        cfg.max_sessions
+    } else {
+        cfg.sessions.div_ceil(cfg.shards) + 1
+    };
+    let mut coordinators = Vec::with_capacity(cfg.shards);
+    for s in 0..cfg.shards {
+        let params = StackParams::init(spec, &mut Rng::new(cfg.seed))?;
+        let stack = NativeStack::new(spec, params, cfg.block.max(cfg.chunk))?;
+        let ccfg = CoordinatorConfig {
+            policy: PolicyMode::Fixed(cfg.block),
+            max_wait: Duration::from_millis(cfg.max_wait_ms),
+            max_sessions: per_shard,
+            batching: BatchMode::Auto,
+            max_pending_frames: cfg.max_pending,
+            ..Default::default()
+        }
+        .for_shard(s, cfg.shards);
+        coordinators.push(Coordinator::new(NativeBackend::new(stack), ccfg));
+    }
+    Ok(spawn_shards(coordinators, Duration::from_millis(2)))
+}
+
+/// Run one loadgen point: `cfg.sessions` concurrent synthetic CTC
+/// sessions against a fresh `cfg.shards`-shard server at the current
+/// pool thread count.
+pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport, String> {
+    if cfg.shards == 0 || cfg.sessions == 0 || cfg.chunk == 0 || cfg.block == 0 {
+        return Err("loadgen: --shards, --sessions, --chunk, --block must be >= 1".into());
+    }
+    if cfg.chunk > cfg.max_pending {
+        return Err(format!(
+            "loadgen: --chunk {} exceeds the per-session admission bound \
+             --max-pending {} — every FEED would be a hard error",
+            cfg.chunk, cfg.max_pending
+        ));
+    }
+    let spec = StackSpec::parse(&cfg.spec)?;
+    if spec.feat < 2 {
+        return Err("loadgen: stack feat must be >= 2 (it is the emission vocab)".into());
+    }
+    let handle = build_handle(cfg, &spec)?;
+    let vocab = spec.vocab;
+    let feat = spec.feat;
+    let clients = cfg.clients.clamp(1, cfg.sessions);
+    let barrier = Barrier::new(clients);
+    let busy = AtomicU64::new(0);
+    let started = Instant::now();
+    let outcomes: Vec<SessionOutcome> = std::thread::scope(|scope| {
+        let mut workers = Vec::with_capacity(clients);
+        for w in 0..clients {
+            let handle = handle.clone();
+            let barrier = &barrier;
+            let busy = &busy;
+            workers.push(scope.spawn(move || {
+                let mut drives: Vec<SessionDrive> = (w..cfg.sessions)
+                    .step_by(clients)
+                    .map(|k| SessionDrive::new(k, cfg, feat))
+                    .collect();
+                // Phase 1: open every owned session, then rendezvous so
+                // all `cfg.sessions` are concurrently open before any
+                // frames flow (the "concurrent sessions" claim).
+                for d in &mut drives {
+                    d.open(&handle, busy, cfg);
+                }
+                barrier.wait();
+                // Phase 2: interleave chunked feeding round-robin across
+                // owned sessions — every session is in flight at once.
+                loop {
+                    let mut in_flight = false;
+                    for d in &mut drives {
+                        in_flight |= d.step(&handle, busy, cfg, vocab);
+                    }
+                    if !in_flight {
+                        break;
+                    }
+                }
+                // Phase 3: final transcripts, closing flushes, tallies.
+                drives
+                    .into_iter()
+                    .map(|d| d.finish(&handle, vocab))
+                    .collect::<Vec<_>>()
+            }));
+        }
+        workers
+            .into_iter()
+            .flat_map(|h| h.join().unwrap_or_default())
+            .collect()
+    });
+    let elapsed_s = started.elapsed().as_secs_f64();
+
+    // A worker that panicked loses its sessions: count them dropped.
+    let missing = cfg.sessions.saturating_sub(outcomes.len());
+    let dropped = missing + outcomes.iter().filter(|o| o.dropped).count();
+    let frames_fed: u64 = outcomes.iter().map(|o| o.fed).sum();
+    let frames_drained: u64 = outcomes.iter().map(|o| o.drained).sum();
+    let mut ttfp: Vec<f64> = outcomes.iter().filter_map(|o| o.ttfp_ms).collect();
+    ttfp.sort_by(|a, b| a.total_cmp(b));
+    let pick = |q: f64| -> f64 {
+        if ttfp.is_empty() {
+            return f64::NAN;
+        }
+        let i = ((ttfp.len() as f64 * q) as usize).min(ttfp.len() - 1);
+        ttfp[i]
+    };
+    Ok(LoadgenReport {
+        shards: cfg.shards,
+        threads: pool::threads(),
+        sessions: cfg.sessions,
+        chunk: cfg.chunk,
+        elapsed_s,
+        agg_fps: if elapsed_s > 0.0 {
+            frames_drained as f64 / elapsed_s
+        } else {
+            0.0
+        },
+        ttfp_p50_ms: pick(0.50),
+        ttfp_p99_ms: pick(0.99),
+        busy_retries: busy.load(Ordering::Relaxed),
+        dropped_sessions: dropped,
+        frames_fed,
+        frames_drained,
+    })
+}
+
+/// Render points in the committed `bench_out/BENCH_*.json` record
+/// format (`bench_compare.py` identifies points by shards/threads/
+/// sessions and watches the `*_fps` fields).
+pub fn report_json(stack: &str, source: &str, points: &[LoadgenReport]) -> String {
+    let mut s = String::from("{\n");
+    s.push_str("  \"bench\": \"serving_loadgen\",\n");
+    s.push_str(&format!("  \"source\": \"{source}\",\n"));
+    s.push_str(&format!("  \"stack\": \"{stack}\",\n"));
+    s.push_str("  \"points\": [\n");
+    for (i, p) in points.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"shards\": {}, \"threads\": {}, \"sessions\": {}, \"chunk\": {}, \
+             \"agg_fps\": {:.1}, \"ttfp_p50_ms\": {:.3}, \"ttfp_p99_ms\": {:.3}, \
+             \"busy_retries\": {}, \"dropped_sessions\": {}, \"frames_fed\": {}, \
+             \"frames_drained\": {}, \"elapsed_s\": {:.3}}}{}\n",
+            p.shards,
+            p.threads,
+            p.sessions,
+            p.chunk,
+            p.agg_fps,
+            p.ttfp_p50_ms,
+            p.ttfp_p99_ms,
+            p.busy_retries,
+            p.dropped_sessions,
+            p.frames_fed,
+            p.frames_drained,
+            p.elapsed_s,
+            if i + 1 < points.len() { "," } else { "" },
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    s
+}

@@ -15,19 +15,33 @@
 //! QUIT                          -> OK bye
 //! ```
 //!
+//! Overload responses come back as `BUSY <reason>` — retryable capacity
+//! refusals, distinct from hard `ERR`s; see [`protocol`] for the retry
+//! contract.
+//!
 //! Threading: connection handlers parse text and push typed requests onto
-//! a channel; a single inference thread owns the coordinator (PJRT /
-//! engine handles are not Send) and serves requests in order, ticking the
-//! batcher between requests and on a timer.  Responses return through
-//! per-request channels.
+//! a channel; each coordinator **shard** is a single inference thread
+//! owning its own `Coordinator` (PJRT / engine handles are not Send) and
+//! serves its requests in order, ticking its batcher once per wakeup.
+//! Responses return through per-request channels.
+//!
+//! Sharding: session ids carry their shard — shard `s` of `N` mints ids
+//! with `id % N == s` (see `CoordinatorConfig::for_shard`), so the
+//! [`ServerHandle`] routes every id-bearing request by modulus alone,
+//! with no cross-shard state.  OPENs are spread round-robin; STATS fans
+//! out to every shard and merges.  For any fixed session→shard
+//! assignment the dispatched math is bitwise identical to a single-shard
+//! server — shards partition the session table, they never change the
+//! per-session numbers.
 
+pub mod loadgen;
 pub mod protocol;
 
 use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
-use std::sync::atomic::{AtomicBool, Ordering};
 use std::time::Duration;
 
 use crate::coordinator::{BlockBackend, Coordinator};
@@ -39,36 +53,87 @@ pub struct Job {
     reply: Sender<Response>,
 }
 
-/// Handle used by connection threads to reach the inference thread.
+/// Handle used by connection threads to reach the shard inference
+/// threads.  Cloned per connection; routing is pure arithmetic on the
+/// session id, so handles share nothing but the channels and the OPEN
+/// round-robin cursor.
 #[derive(Clone)]
 pub struct ServerHandle {
-    jobs: Sender<Job>,
+    shards: Vec<Sender<Job>>,
+    next_open: Arc<AtomicUsize>,
 }
 
 impl ServerHandle {
-    /// Build a handle from a raw sender (used when the inference loop must
-    /// run on the main thread, e.g. the non-Send PJRT backend).
+    /// Build a single-shard handle from a raw sender (used when the
+    /// inference loop must run on the caller's thread, e.g. the non-Send
+    /// PJRT backend).
     pub fn from_sender(jobs: Sender<Job>) -> Self {
-        Self { jobs }
+        Self {
+            shards: vec![jobs],
+            next_open: Arc::new(AtomicUsize::new(0)),
+        }
     }
 
-    pub fn call(&self, req: Request) -> Response {
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The shard an id-bearing request routes to: session ids are minted
+    /// so `id % nshards` names the owning shard (`for_shard`).
+    fn shard_of(&self, req: &Request) -> usize {
+        let n = self.shards.len();
+        match req {
+            // OPENs spread round-robin; the chosen shard mints an id in
+            // its own residue class, pinning the session there.
+            Request::Open => self.next_open.fetch_add(1, Ordering::Relaxed) % n,
+            Request::Feed(id, _)
+            | Request::Poll(id, _)
+            | Request::Decode(id, _)
+            | Request::Transcribe(id, _)
+            | Request::Close(id) => (*id as usize) % n,
+            // Handled by broadcast in `call`; routing it anywhere is a
+            // safe fallback, never reached.
+            Request::Stats => 0,
+        }
+    }
+
+    fn call_shard(&self, shard: usize, req: Request) -> Response {
         let (tx, rx) = channel();
-        if self.jobs.send(Job { req, reply: tx }).is_err() {
+        if self.shards[shard].send(Job { req, reply: tx }).is_err() {
             return Response::Err("server shutting down".into());
         }
         rx.recv()
             .unwrap_or_else(|_| Response::Err("inference thread died".into()))
     }
+
+    pub fn call(&self, req: Request) -> Response {
+        if matches!(req, Request::Stats) && self.shards.len() > 1 {
+            // Fan out and merge; per-shard summaries stay legible.
+            let mut parts = Vec::with_capacity(self.shards.len());
+            for s in 0..self.shards.len() {
+                match self.call_shard(s, Request::Stats) {
+                    Response::Stats(line) => parts.push(format!("shard{s}[{line}]")),
+                    other => return other,
+                }
+            }
+            return Response::Stats(parts.join(" "));
+        }
+        let shard = self.shard_of(&req);
+        self.call_shard(shard, req)
+    }
 }
 
 /// Run the inference loop over `coordinator`, serving `jobs` until the
-/// channel closes.  Ticks the batcher on every request and on timeout.
+/// channel closes.  Ticks the batcher exactly **once per wakeup** —
+/// after serving a request or on the `tick_every` timeout — which both
+/// dispatches freshly-fed full blocks and deadline-flushes partials.
+/// Returns the coordinator so callers (tests, stats dumps) can inspect
+/// its final state.
 pub fn inference_loop<B: BlockBackend>(
     mut coordinator: Coordinator<B>,
     jobs: Receiver<Job>,
     tick_every: Duration,
-) {
+) -> Coordinator<B> {
     loop {
         let job = match jobs.recv_timeout(tick_every) {
             Ok(j) => Some(j),
@@ -79,15 +144,11 @@ pub fn inference_loop<B: BlockBackend>(
             let resp = match job.req {
                 Request::Open => match coordinator.open() {
                     Ok(id) => Response::Opened(id),
-                    Err(e) => Response::Err(e),
+                    Err(e) => e.into(),
                 },
                 Request::Feed(id, frames) => match coordinator.feed(id, &frames) {
-                    Ok(n) => {
-                        // Opportunistic dispatch right after arrival.
-                        let _ = coordinator.tick();
-                        Response::Accepted(n)
-                    }
-                    Err(e) => Response::Err(e),
+                    Ok(n) => Response::Accepted(n),
+                    Err(e) => e.into(),
                 },
                 Request::Poll(id, max) => match coordinator.drain(id, max) {
                     Ok(v) => Response::Logits(v),
@@ -111,24 +172,47 @@ pub fn inference_loop<B: BlockBackend>(
             };
             let _ = job.reply.send(resp);
         }
-        // Deadline flushes for partially-filled blocks.
+        // The single tick per wakeup: dispatches whatever the request
+        // just made ready AND deadline-flushes partially-filled blocks.
         let _ = coordinator.tick();
+    }
+    coordinator
+}
+
+/// Spawn one inference thread per coordinator shard; returns the handle
+/// connections use.  Shard `s` must have been configured with
+/// `CoordinatorConfig::for_shard(s, coordinators.len())` so its session
+/// ids route back to it by modulus.
+pub fn spawn_shards<B: BlockBackend + Send + 'static>(
+    coordinators: Vec<Coordinator<B>>,
+    tick_every: Duration,
+) -> ServerHandle {
+    let mut shards = Vec::with_capacity(coordinators.len());
+    for (s, coordinator) in coordinators.into_iter().enumerate() {
+        let (tx, rx) = channel();
+        std::thread::Builder::new()
+            .name(format!("mtsrnn-shard{s}"))
+            .spawn(move || {
+                let _ = inference_loop(coordinator, rx, tick_every);
+            })
+            // lint: infallible — shard threads spawn at startup, before
+            // any request exists; if the OS is out of threads, abort.
+            .expect("spawn shard inference thread");
+        shards.push(tx);
+    }
+    ServerHandle {
+        shards,
+        next_open: Arc::new(AtomicUsize::new(0)),
     }
 }
 
-/// Spawn the inference thread; returns the handle connections use.
+/// Spawn the single inference thread (the 1-shard special case); returns
+/// the handle connections use.
 pub fn spawn_inference<B: BlockBackend + Send + 'static>(
     coordinator: Coordinator<B>,
     tick_every: Duration,
 ) -> ServerHandle {
-    let (tx, rx) = channel();
-    std::thread::Builder::new()
-        .name("mtsrnn-inference".into())
-        .spawn(move || inference_loop(coordinator, rx, tick_every))
-        // lint: infallible — the one inference thread spawns at startup,
-        // before any request exists; if the OS is out of threads, abort.
-        .expect("spawn inference thread");
-    ServerHandle { jobs: tx }
+    spawn_shards(vec![coordinator], tick_every)
 }
 
 /// Serve one client connection (blocking).
@@ -166,25 +250,72 @@ pub fn handle_connection(stream: TcpStream, handle: ServerHandle) {
     log::info!("connection {peer} closed");
 }
 
-/// Run the TCP server until `stop` flips (or forever).
+/// Flip the stop flag and wake `serve`'s blocking accept with a
+/// throwaway self-connection, so shutdown is immediate without the
+/// accept loop ever busy-polling.  The address is the listener's own
+/// (`listener.local_addr()`).
+pub fn request_stop(stop: &AtomicBool, addr: SocketAddr) {
+    stop.store(true, Ordering::SeqCst);
+    // The accept loop re-checks `stop` after every accept; this connect
+    // is only a wakeup and is dropped unserved.  A failed connect is
+    // fine — it means the listener is already gone.
+    let _ = TcpStream::connect(addr);
+}
+
+/// Run the TCP server until [`request_stop`] fires (or forever).
+///
+/// The accept is **blocking** — zero CPU at idle, no accept latency —
+/// and each iteration reaps connection threads that have finished, so
+/// long-running servers hold handles only for live connections, not one
+/// per connection ever accepted.
 pub fn serve(
     listener: TcpListener,
     handle: ServerHandle,
     stop: Arc<AtomicBool>,
 ) -> std::io::Result<()> {
-    listener.set_nonblocking(true)?;
-    let mut threads = Vec::new();
-    while !stop.load(Ordering::Relaxed) {
-        match listener.accept() {
-            Ok((stream, _)) => {
-                stream.set_nonblocking(false)?;
-                let h = handle.clone();
-                threads.push(std::thread::spawn(move || handle_connection(stream, h)));
-            }
-            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                std::thread::sleep(Duration::from_millis(5));
-            }
+    serve_with_gauge(listener, handle, stop, None)
+}
+
+/// [`serve`] with an observable live-connection-thread gauge: after each
+/// accept, `gauge` holds the number of connection threads still held
+/// (live, or finished-but-not-yet-reaped since the last accept).  Tests
+/// use it to prove churn does not accumulate handles.
+pub fn serve_with_gauge(
+    listener: TcpListener,
+    handle: ServerHandle,
+    stop: Arc<AtomicBool>,
+    gauge: Option<Arc<AtomicUsize>>,
+) -> std::io::Result<()> {
+    let mut threads: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    while !stop.load(Ordering::SeqCst) {
+        let (stream, _) = match listener.accept() {
+            Ok(pair) => pair,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
             Err(e) => return Err(e),
+        };
+        if stop.load(Ordering::SeqCst) {
+            // The wakeup connection from `request_stop` (or a client
+            // racing shutdown): drop it unserved and exit.
+            drop(stream);
+            break;
+        }
+        // Reap finished connection threads before spawning another, so
+        // the handle list tracks live connections — not every connection
+        // ever accepted (the old leak under connection churn).
+        let mut i = 0;
+        while i < threads.len() {
+            if threads[i].is_finished() {
+                let t = threads.swap_remove(i);
+                let _ = t.join();
+            } else {
+                i += 1;
+            }
+        }
+        stream.set_nonblocking(false)?;
+        let h = handle.clone();
+        threads.push(std::thread::spawn(move || handle_connection(stream, h)));
+        if let Some(g) = &gauge {
+            g.store(threads.len(), Ordering::Relaxed);
         }
     }
     for t in threads {

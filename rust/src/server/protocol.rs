@@ -2,8 +2,26 @@
 //!
 //! Every malformed line becomes a typed `Err` string (never a panic):
 //! this module is the first stop of the serve request path.
+//!
+//! # Overload / retry contract
+//!
+//! Failure responses come in two distinct kinds, and clients must treat
+//! them differently:
+//!
+//! * `BUSY <reason>` — a transient **capacity** refusal (session table
+//!   full on OPEN, a session's frame queue at its admission bound on
+//!   FEED).  The request was **not** applied and no session state
+//!   changed; the server is healthy.  The correct client move is to back
+//!   off briefly and retry the *identical* request — it is expected to
+//!   succeed once load drains (a session closes, a tick drains a
+//!   queue).  Polling (`POLL`/`TRANSCRIBE`) between retries actively
+//!   helps, since draining delivered frames is what frees queue budget.
+//! * `ERR <msg>` — a hard failure: the request itself is invalid
+//!   (unknown command or session, ragged frames, a single FEED larger
+//!   than the whole queue bound).  Retrying it unchanged will fail
+//!   again; the client must fix or drop the request.
 
-use crate::coordinator::SessionId;
+use crate::coordinator::{CoordError, SessionId};
 use crate::decode::DecoderSpec;
 
 #[derive(Debug, Clone, PartialEq)]
@@ -29,7 +47,21 @@ pub enum Response {
     /// appears here).
     Tokens(Vec<usize>),
     Stats(String),
+    /// Transient overload: the request was not applied, back off and
+    /// retry it unchanged (see the module-level retry contract).
+    Busy(String),
     Err(String),
+}
+
+/// Coordinator failures map onto the wire's two failure kinds: `Busy`
+/// stays retryable (`BUSY`), everything else is a hard `ERR`.
+impl From<CoordError> for Response {
+    fn from(e: CoordError) -> Self {
+        match e {
+            CoordError::Busy(m) => Response::Busy(m),
+            CoordError::Failed(m) => Response::Err(m),
+        }
+    }
 }
 
 /// Parse one request line.
@@ -113,6 +145,7 @@ impl Response {
                 s
             }
             Response::Stats(line) => format!("OK {line}"),
+            Response::Busy(reason) => format!("BUSY {reason}"),
             Response::Err(e) => format!("ERR {e}"),
         }
     }
@@ -181,8 +214,22 @@ mod tests {
             "OK 2 1 -0.5"
         );
         assert_eq!(Response::Err("nope".into()).encode(), "ERR nope");
+        assert_eq!(
+            Response::Busy("queue full".into()).encode(),
+            "BUSY queue full"
+        );
         assert_eq!(Response::Tokens(vec![3, 1, 4]).encode(), "OK 3 3 1 4");
         assert_eq!(Response::Tokens(vec![]).encode(), "OK 0");
+    }
+
+    #[test]
+    fn coord_errors_keep_their_kind_on_the_wire() {
+        let busy: Response = CoordError::Busy("limit".into()).into();
+        assert_eq!(busy, Response::Busy("limit".into()));
+        assert!(busy.encode().starts_with("BUSY "));
+        let hard: Response = CoordError::Failed("ragged".into()).into();
+        assert_eq!(hard, Response::Err("ragged".into()));
+        assert!(hard.encode().starts_with("ERR "));
     }
 
     #[test]

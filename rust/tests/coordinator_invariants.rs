@@ -40,6 +40,7 @@ fn coordinator(policy: PolicyMode, max_wait_ms: u64) -> Coordinator<NativeBacken
             max_wait: Duration::from_millis(max_wait_ms),
             max_sessions: 16,
             batching: BatchMode::Auto,
+            ..Default::default()
         },
     )
 }
@@ -177,6 +178,7 @@ fn backend_failure_is_reported_and_recoverable() {
             max_wait: Duration::from_millis(0),
             max_sessions: 4,
             batching: BatchMode::Auto,
+            ..Default::default()
         },
     );
     let id = c.open().unwrap();

@@ -167,6 +167,7 @@ fn serve_fixture(name: &str) {
                 max_wait: Duration::from_secs(100),
                 max_sessions: 4,
                 batching: BatchMode::Auto,
+                ..Default::default()
             },
         );
         let id = coord.open().unwrap();

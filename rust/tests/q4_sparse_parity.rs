@@ -466,6 +466,7 @@ fn q4_512x4_serves_through_coordinator() {
             max_wait: Duration::ZERO,
             max_sessions: 4,
             batching: BatchMode::Auto,
+            ..Default::default()
         },
     );
     let frames = 26;

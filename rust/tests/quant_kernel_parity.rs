@@ -360,6 +360,7 @@ fn q8q_512x4_serves_through_coordinator() {
             max_wait: Duration::ZERO,
             max_sessions: 4,
             batching: BatchMode::Auto,
+            ..Default::default()
         },
     );
     let frames = 26;

@@ -1,0 +1,213 @@
+//! Sharded-serving invariants:
+//!
+//! 1. **Shard parity.**  For a fixed session→shard assignment, running S
+//!    sessions across N coordinator shards is *bitwise* identical to
+//!    running them on one shard — shards partition the session table,
+//!    they never change per-session math.  Checked at pool sizes 1 and 4
+//!    (composing with the thread-count bit-exactness guarantee).
+//! 2. **One tick per wakeup.**  The serve loop pays exactly one batcher
+//!    tick per request — the old FEED path ticked twice, doubling
+//!    deadline scans and skewing the tick metrics.
+//! 3. **Loadgen end-to-end.**  The load generator drives concurrent
+//!    synthetic CTC sessions over the real shard routing (ids minted in
+//!    per-shard residue classes; any misroute would surface as a hard
+//!    "no such session" drop) with zero dropped sessions and exact frame
+//!    conservation.
+//!
+//! Tests that flip the process-wide pool size hold `POOL_LOCK`, same as
+//! tests/parallel_parity.rs.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use mtsrnn::coordinator::{
+    BatchMode, Coordinator, CoordinatorConfig, NativeBackend, PolicyMode,
+};
+use mtsrnn::engine::NativeStack;
+use mtsrnn::linalg::pool;
+use mtsrnn::models::config::StackSpec;
+use mtsrnn::models::StackParams;
+use mtsrnn::server::{self, loadgen};
+use mtsrnn::server::protocol::{Request, Response};
+use mtsrnn::util::Rng;
+
+static POOL_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock_pool() -> std::sync::MutexGuard<'static, ()> {
+    // A panicking sibling test must not wedge the others.
+    POOL_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+const SESSIONS: usize = 6;
+const BLOCK: usize = 4;
+const CHUNKS: usize = 3;
+const SPEC: &str = "sru:f32:32x2,feat=8,vocab=8";
+
+/// Drive the fixed workload over `nshards` coordinators (session k on
+/// shard k % nshards) and return each session's full logit stream.
+/// Feeds exact block multiples and ticks the owning shard after every
+/// feed, so dispatch decomposition is identical in every configuration
+/// and any difference is a real sharding bug.
+fn run_scenario(nshards: usize) -> Vec<Vec<f32>> {
+    let spec = StackSpec::parse(SPEC).unwrap();
+    let mut coords: Vec<_> = (0..nshards)
+        .map(|s| {
+            let params = StackParams::init(&spec, &mut Rng::new(11)).unwrap();
+            let stack = NativeStack::new(&spec, params, BLOCK).unwrap();
+            let cfg = CoordinatorConfig {
+                policy: PolicyMode::Fixed(BLOCK),
+                max_wait: Duration::from_secs(1000),
+                max_sessions: SESSIONS + 1,
+                batching: BatchMode::Auto,
+                ..Default::default()
+            }
+            .for_shard(s, nshards);
+            Coordinator::new(NativeBackend::new(stack), cfg)
+        })
+        .collect();
+    let ids: Vec<(usize, u64)> = (0..SESSIONS)
+        .map(|k| {
+            let shard = k % nshards;
+            let id = coords[shard].open().unwrap();
+            assert_eq!(
+                id as usize % nshards,
+                shard,
+                "shard {shard} must mint ids in its own residue class"
+            );
+            (shard, id)
+        })
+        .collect();
+    let mut out = vec![Vec::new(); SESSIONS];
+    for chunk in 0..CHUNKS {
+        for (k, &(shard, id)) in ids.iter().enumerate() {
+            let mut rng = Rng::new(500 + (k * CHUNKS + chunk) as u64);
+            let mut x = vec![0.0f32; BLOCK * spec.feat];
+            rng.fill_uniform(&mut x, -1.0, 1.0);
+            let c = &mut coords[shard];
+            assert_eq!(c.feed(id, &x).unwrap(), BLOCK);
+            c.tick().unwrap();
+            out[k].extend(c.drain(id, usize::MAX).unwrap());
+        }
+    }
+    for (k, o) in out.iter().enumerate() {
+        assert_eq!(
+            o.len(),
+            CHUNKS * BLOCK * spec.vocab,
+            "session {k} must drain every frame"
+        );
+    }
+    out
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn sharded_dispatch_is_bitwise_identical_to_single_shard() {
+    let _guard = lock_pool();
+    for threads in [1, 4] {
+        pool::set_threads(threads);
+        let single = run_scenario(1);
+        for nshards in [2, 3] {
+            let sharded = run_scenario(nshards);
+            for k in 0..SESSIONS {
+                assert_eq!(
+                    bits(&single[k]),
+                    bits(&sharded[k]),
+                    "threads={threads} shards={nshards} session {k}: \
+                     sharding must not change a single bit"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn inference_loop_ticks_once_per_request() {
+    let spec = StackSpec::parse(SPEC).unwrap();
+    let params = StackParams::init(&spec, &mut Rng::new(7)).unwrap();
+    let stack = NativeStack::new(&spec, params, BLOCK).unwrap();
+    let coordinator = Coordinator::new(
+        NativeBackend::new(stack),
+        CoordinatorConfig {
+            policy: PolicyMode::Fixed(BLOCK),
+            max_wait: Duration::from_secs(1000),
+            max_sessions: 4,
+            batching: BatchMode::Auto,
+            ..Default::default()
+        },
+    );
+    // Huge timeout: every tick must come from a request wakeup, so the
+    // counter reads exactly one tick per request served.
+    let handle = server::spawn_inference(coordinator, Duration::from_secs(1000));
+    let id = match handle.call(Request::Open) {
+        Response::Opened(id) => id,
+        other => panic!("{other:?}"),
+    };
+    let x = vec![0.25f32; BLOCK * spec.feat];
+    for _ in 0..2 {
+        assert!(matches!(
+            handle.call(Request::Feed(id, x.clone())),
+            Response::Accepted(n) if n == BLOCK
+        ));
+    }
+    assert!(matches!(
+        handle.call(Request::Poll(id, usize::MAX)),
+        Response::Logits(_)
+    ));
+    // 4 requests served before STATS builds its summary (the tick for
+    // the STATS wakeup itself lands after the summary is taken).  The
+    // old serve loop double-ticked FEED, which would read ticks=6 here.
+    let summary = match handle.call(Request::Stats) {
+        Response::Stats(s) => s,
+        other => panic!("{other:?}"),
+    };
+    assert!(
+        summary.contains("ticks=4"),
+        "one tick per request wakeup, got: {summary}"
+    );
+}
+
+#[test]
+fn loadgen_two_shards_zero_drops_and_frame_conservation() {
+    let _guard = lock_pool();
+    pool::set_threads(2);
+    let cfg = loadgen::LoadgenConfig {
+        spec: SPEC.into(),
+        shards: 2,
+        sessions: 96,
+        clients: 4,
+        tokens: 4,
+        chunk: 8,
+        block: 8,
+        ..Default::default()
+    };
+    let report = loadgen::run(&cfg).unwrap();
+    assert_eq!(report.dropped_sessions, 0, "{}", report.summary());
+    assert_eq!(
+        report.frames_fed, report.frames_drained,
+        "frame conservation: {}",
+        report.summary()
+    );
+    assert!(report.frames_fed > 0);
+    assert!(report.agg_fps > 0.0);
+    assert!(
+        report.ttfp_p50_ms.is_finite() && report.ttfp_p99_ms >= report.ttfp_p50_ms,
+        "{}",
+        report.summary()
+    );
+    // The JSON record carries the comparator's ID keys and the fps field
+    // bench_compare.py watches.
+    let json = loadgen::report_json(SPEC, "test", &[report]);
+    for key in [
+        "\"bench\": \"serving_loadgen\"",
+        "\"shards\": 2",
+        "\"sessions\": 96",
+        "\"threads\": 2",
+        "\"agg_fps\"",
+        "\"dropped_sessions\": 0",
+    ] {
+        assert!(json.contains(key), "{key} missing from {json}");
+    }
+}

@@ -336,6 +336,7 @@ fn serve_through_coordinator(spec: &StackSpec, x: &[f32], frames: usize) -> Vec<
             max_wait: Duration::ZERO,
             max_sessions: 4,
             batching: BatchMode::Auto,
+            ..Default::default()
         },
     );
     let id = c.open().unwrap();
