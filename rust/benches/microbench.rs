@@ -8,11 +8,13 @@ use std::time::Duration;
 
 use mtsrnn::bench::{bench, print_measurement, write_report, BenchOpts};
 use mtsrnn::coordinator::{BatchMode, Coordinator, CoordinatorConfig, NativeBackend, PolicyMode};
-use mtsrnn::engine::{Engine, NativeStack, QuantMatrix, SruEngine};
+use mtsrnn::engine::recurrence::{lstm_gate_fuse, qrnn_chain, sru_chain};
+use mtsrnn::engine::{Engine, NativeStack, QuantMatrix, QuantSruEngine, SruEngine};
 use mtsrnn::linalg::pool;
 use mtsrnn::linalg::{
-    add_row_bias, fast_sigmoid, gemm, gemm_bt, gemv, supported_tiers, transpose_into, Act,
-    Epilogue, PackedGemm, PackedQuantGemm, QuantScratch, Simd, SMALL_N_CUTOFF,
+    add_row_bias, detect_simd, fast_sigmoid, gemm, gemm_bt, gemv, supported_tiers,
+    transpose_into, Act, Epilogue, PackedGemm, PackedQuantGemm, QuantScratch, Simd,
+    SMALL_N_CUTOFF,
 };
 use mtsrnn::memsim::{simulate, SimConfig, SimPrec, INTEL_I7_3930K};
 use mtsrnn::models::config::{Arch, ModelConfig, ModelSize, StackSpec};
@@ -21,8 +23,9 @@ use mtsrnn::util::{Rng, Timer};
 use mtsrnn::weights::prune::prune_blocks;
 
 fn main() {
-    // MTSRNN_BENCH_ONLY=threads|quant runs just that sweep (what the CI
-    // smoke job uses to publish BENCH_threads.json / BENCH_quant.json).
+    // MTSRNN_BENCH_ONLY=threads|quant|elemwise runs just that sweep
+    // (what the CI smoke job uses to publish BENCH_threads.json /
+    // BENCH_quant.json / BENCH_elemwise.json).
     match std::env::var("MTSRNN_BENCH_ONLY").as_deref() {
         Ok("threads") => {
             let opts = BenchOpts {
@@ -41,6 +44,15 @@ fn main() {
                 max_seconds: 30.0,
             };
             quant_sweep(&opts);
+            return;
+        }
+        Ok("elemwise") => {
+            let opts = BenchOpts {
+                warmup_iters: 1,
+                measure_iters: 5,
+                max_seconds: 20.0,
+            };
+            elemwise_sweep(&opts);
             return;
         }
         _ => {}
@@ -206,6 +218,7 @@ fn main() {
     );
 
     quant_sweep(&opts);
+    elemwise_sweep(&opts);
     threads_sweep(&opts);
 
     println!(
@@ -486,6 +499,151 @@ fn quant_sweep(opts: &BenchOpts) {
     match write_report("BENCH_quant.json", &json) {
         Ok(p) => println!("  wrote {}", p.display()),
         Err(e) => println!("  could not write BENCH_quant.json: {e}"),
+    }
+}
+
+/// Recurrence-epilogue sweep (the Amdahl-tail artifact): per-cell chain
+/// throughput at `h = 512` for T in {1, 16} and threads in {1, 4},
+/// SIMD + pool-split chain vs the scalar-serial reference (portable
+/// tier, one thread — the pre-PR loop), plus the end-to-end check the
+/// epilogue exists for: a q4 SRU block at T=16, where the GEMM is cheap
+/// enough that the element-wise tail governs, measured against memsim's
+/// prediction with the measured chain speedup as `elem_simd_ratio`.
+/// Elements are credited fixed nominal flop counts (scalar op counts
+/// including the polynomial transcendentals), so the GFLOP/s-eq columns
+/// compare across hosts — the ratio columns carry the signal.  Emits
+/// `bench_out/BENCH_elemwise.json`.
+fn elemwise_sweep(opts: &BenchOpts) {
+    println!("-- recurrence epilogue: SIMD + pool-split chains vs scalar-serial --");
+    let h = 512usize;
+    let isa = detect_simd();
+    let mut rng = Rng::new(77);
+    // Nominal flops per element: SRU 4 chain + ~20 tanh + 6 highway;
+    // QRNN 4 chain + ~20 tanh + 2; LSTM 3 sigmoid + 2 tanh + 8.
+    const CELL_FLOPS: [(&str, f64); 3] = [("sru", 30.0), ("qrnn", 26.0), ("lstm", 110.0)];
+
+    let sig = |rng: &mut Rng, n: usize| -> Vec<f32> {
+        (0..n).map(|_| fast_sigmoid(rng.uniform_in(-3.0, 3.0))).collect()
+    };
+
+    struct ElemPoint {
+        cell: &'static str,
+        t: usize,
+        threads: usize,
+        chain: f64,
+        scalar: f64,
+    }
+    let mut points: Vec<ElemPoint> = Vec::new();
+    for &(cell, flops_per_elem) in &CELL_FLOPS {
+        for &t in &[1usize, 16] {
+            // Shared planes for every (threads, tier) row of this cell.
+            let gx: Vec<f32> = (0..h * t).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+            let gf = sig(&mut rng, h * t);
+            let gr = sig(&mut rng, h * t);
+            let mut x = vec![0.0; t * h];
+            rng.fill_normal(&mut x, 1.0);
+            let mut g4 = vec![0.0; 4 * h];
+            rng.fill_normal(&mut g4, 1.0);
+            let mut c = vec![0.0f32; h];
+            let mut hs = vec![0.0f32; h];
+            let mut out = vec![0.0f32; t * h];
+            // `c` persists across iterations; f in (0, 1) keeps it
+            // bounded, so repeated timing passes stay finite.
+            let mut run = |simd: Simd, label: &str| -> f64 {
+                let meas = bench(&format!("{cell} chain {h}x{t} {label}"), opts, || {
+                    match cell {
+                        "sru" => {
+                            sru_chain(simd, &gx, &gf, &gr, h, t, 0, t, &x, h, &mut c, &mut out)
+                        }
+                        "qrnn" => qrnn_chain(simd, &gx, &gf, &gr, h, t, 0, t, &mut c, &mut out),
+                        _ => {
+                            for _ in 0..t {
+                                lstm_gate_fuse(simd, &g4, h, &mut c, &mut hs, &mut out[..h]);
+                            }
+                        }
+                    }
+                });
+                flops_per_elem * (h * t) as f64 / meas.median_ns
+            };
+            pool::set_threads(1);
+            let scalar = run(Simd::Portable, "scalar@1t");
+            for &nt in &[1usize, 4] {
+                pool::set_threads(nt);
+                let chain = run(isa, &format!("{}@{nt}t", isa.name()));
+                println!(
+                    "  {cell:<5} T={t:<3} threads={nt}  chain {chain:>7.2} | scalar {scalar:>7.2} GFLOP/s-eq | {:>5.2}x",
+                    chain / scalar
+                );
+                points.push(ElemPoint {
+                    cell,
+                    t,
+                    threads: nt,
+                    chain,
+                    scalar,
+                });
+            }
+        }
+    }
+    pool::set_threads(1);
+
+    // End-to-end: a q4 SRU layer block at T=16 — the precision where
+    // the weight stream is cheapest and the element-wise tail largest —
+    // with memsim's prediction of what the vectorized epilogue buys
+    // (elem_simd_ratio = the measured 1-thread sru T=16 chain speedup).
+    let measured_ratio = points
+        .iter()
+        .find(|p| p.cell == "sru" && p.t == 16 && p.threads == 1)
+        .map(|p| (p.chain / p.scalar).max(1.0))
+        .unwrap_or(1.0);
+    let (bt, feat) = (16usize, 512usize);
+    let cfg = ModelConfig {
+        arch: Arch::Sru,
+        hidden: feat,
+        input: feat,
+    };
+    let params = SruParams::init(&cfg, &mut Rng::new(5));
+    let mut eng = QuantSruEngine::new_q4(&params, bt);
+    let mut x = vec![0.0; bt * feat];
+    Rng::new(6).fill_normal(&mut x, 1.0);
+    let mut out = vec![0.0; bt * feat];
+    let meas = bench(&format!("q4 sru block {feat}x{bt}"), opts, || {
+        eng.run_sequence(&x, bt, &mut out)
+    });
+    let block_fps = bt as f64 / (meas.median_ns / 1e9);
+    let predict = |ratio: f64| {
+        let mut c = SimConfig::paper(INTEL_I7_3930K, cfg, bt);
+        c.samples = 256;
+        c.precision = SimPrec::Q4;
+        c.elem_simd_ratio = ratio;
+        simulate(&c).seconds
+    };
+    let predicted_gain = predict(1.0) / predict(measured_ratio);
+    println!(
+        "  q4 sru {feat} T={bt}: {block_fps:.0} frames/s | chain speedup measured {measured_ratio:.2}x | memsim epilogue gain {predicted_gain:.2}x"
+    );
+
+    let mut json = String::from("{\n  \"bench\": \"elemwise_sweep\",\n  \"points\": [\n");
+    for (i, p) in points.iter().enumerate() {
+        let sep = if i + 1 < points.len() { "," } else { "" };
+        json.push_str(&format!(
+            "    {{\"cell\": \"{}\", \"h\": {h}, \"t\": {}, \"threads\": {}, \"isa\": \"{}\", \"chain_gflops\": {:.2}, \"scalar_gflops\": {:.2}, \"speedup\": {:.3}}}{sep}\n",
+            p.cell,
+            p.t,
+            p.threads,
+            isa.name(),
+            p.chain,
+            p.scalar,
+            p.chain / p.scalar
+        ));
+    }
+    json.push_str("  ],\n");
+    json.push_str(&format!(
+        "  \"recurrence_block\": {{\"cell\": \"sru\", \"prec\": \"q4\", \"h\": {feat}, \"t\": {bt}, \"block_fps\": {block_fps:.1}, \"measured_chain_speedup\": {measured_ratio:.3}, \"memsim_predicted_epilogue_gain\": {predicted_gain:.3}}}\n"
+    ));
+    json.push_str("}\n");
+    match write_report("BENCH_elemwise.json", &json) {
+        Ok(p) => println!("  wrote {}", p.display()),
+        Err(e) => println!("  could not write BENCH_elemwise.json: {e}"),
     }
 }
 

@@ -177,7 +177,12 @@ STACK SPECS (native serve; one weight set, any layer kind x precision):
   MTSRNN_ISA=portable.  `mtsrnn info` prints the detected rung and the
   full pinnable ladder (\"isa tiers: ...\").  Very deep q8q/q4
   reductions past the VNNI exactness bound silently demote that handle
-  to avx2 (still exact); sdot keeps the wider s8xs8 bound.
+  to avx2 (still exact); sdot keeps the wider s8xs8 bound.  The
+  element-wise recurrence epilogue (SRU/QRNN chains, LSTM gate fuse,
+  bidir merge) dispatches down the same ladder: its SIMD lanes evaluate
+  the scalar fast-math polynomials in the same operation order, so the
+  f32 recurrence too is bit-identical on every rung and at any
+  MTSRNN_THREADS — pinning changes speed, never results.
 
 TRANSCRIBE MODE (serve, native backend):
   DECODE <id> [greedy|beam[:W]]   attach a streaming CTC decoder to a

@@ -21,7 +21,8 @@
 //! on the packed SIMD path with the fused epilogue, and packing happens
 //! once per direction at construction (not per sequence).
 
-use crate::engine::{check_io, Engine, RecurrentLayer};
+use crate::engine::{check_io, recurrence, Engine, RecurrentLayer};
+use crate::linalg::{detect_simd, Simd};
 use crate::models::config::StateLayout;
 
 /// Two engines of identical geometry run in opposite directions.
@@ -140,6 +141,9 @@ pub struct ChunkedBidir {
     rev_x: Vec<f32>,
     fwd_out: Vec<f32>,
     bwd_out: Vec<f32>,
+    /// Dispatch tier for the merge kernel (cached from `detect_simd()`,
+    /// so `MTSRNN_ISA` pins it alongside the directions' GEMMs).
+    simd: Simd,
 }
 
 impl ChunkedBidir {
@@ -170,6 +174,7 @@ impl ChunkedBidir {
             rev_x: Vec::new(),
             fwd_out: Vec::new(),
             bwd_out: Vec::new(),
+            simd: detect_simd(),
         })
     }
 }
@@ -210,13 +215,14 @@ impl Engine for ChunkedBidir {
         self.bwd.reset();
         let rev = &self.rev_x[..steps * d];
         self.bwd.run_sequence(rev, steps, &mut self.bwd_out[..steps * h]);
-        for s in 0..steps {
-            let f = &self.fwd_out[s * h..(s + 1) * h];
-            let b = &self.bwd_out[(steps - 1 - s) * h..(steps - s) * h];
-            for (o, (&fv, &bv)) in out[s * h..(s + 1) * h].iter_mut().zip(f.iter().zip(b)) {
-                *o = fv + bv;
-            }
-        }
+        recurrence::merge_sum(
+            self.simd,
+            &self.fwd_out[..steps * h],
+            &self.bwd_out[..steps * h],
+            out,
+            steps,
+            h,
+        );
     }
 
     fn reset(&mut self) {

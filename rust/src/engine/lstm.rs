@@ -10,8 +10,8 @@
 //!   can cut weight traffic *at most in half*, which the ABL2 ablation
 //!   measures.
 
-use crate::engine::{check_io, Engine, RecurrentLayer};
-use crate::linalg::{fast_sigmoid, fast_tanh, Epilogue, PackedGemm};
+use crate::engine::{check_io, recurrence, Engine, RecurrentLayer};
+use crate::linalg::{detect_simd, Epilogue, PackedGemm, Simd};
 use crate::models::config::StateLayout;
 use crate::models::LstmParams;
 
@@ -41,6 +41,8 @@ pub struct LstmEngine {
     g: Vec<f32>,
     /// Precompute mode: `[4H, T]` input-side gates (bias included).
     gx: Vec<f32>,
+    /// Dispatch tier for the gate-fuse kernel.
+    simd: Simd,
 }
 
 impl LstmEngine {
@@ -67,6 +69,7 @@ impl LstmEngine {
             mode,
             hidden,
             input,
+            simd: detect_simd(),
         }
     }
 
@@ -82,19 +85,17 @@ impl LstmEngine {
     }
 
     /// Apply gate math for one step given pre-activations in `self.g`,
-    /// writing `h_t` into `out_row`.
+    /// writing `h_t` into `out_row` (shared SIMD fuse kernel, bitwise
+    /// identical to the old scalar loop).
     fn gate_step(&mut self, out_row: &mut [f32]) {
-        let h = self.hidden;
-        for i in 0..h {
-            let f = fast_sigmoid(self.g[i]);
-            let ig = fast_sigmoid(self.g[h + i]);
-            let o = fast_sigmoid(self.g[2 * h + i]);
-            let chat = fast_tanh(self.g[3 * h + i]);
-            self.c[i] = f * self.c[i] + ig * chat;
-            let hv = o * fast_tanh(self.c[i]);
-            self.h[i] = hv;
-            out_row[i] = hv;
-        }
+        recurrence::lstm_gate_fuse(
+            self.simd,
+            &self.g,
+            self.hidden,
+            &mut self.c,
+            &mut self.h,
+            out_row,
+        );
     }
 
     fn run_single_step(&mut self, x: &[f32], steps: usize, out: &mut [f32]) {

@@ -19,11 +19,18 @@
 //! portable) is chosen by one-time runtime detection, bias + gate
 //! activations are fused into the GEMM store, and the small-`T`
 //! crossover is calibrated per weight shape by a one-shot probe.
+//!
+//! The element-wise recurrence itself — the one strictly sequential
+//! stage — runs through the shared chain kernels in [`recurrence`]:
+//! SIMD across hidden units, split over the worker pool in disjoint
+//! unit strips, bit-identical to scalar execution at any tier and
+//! thread count.
 
 pub mod bidir;
 pub mod lstm;
 pub mod qrnn;
 pub mod quant;
+pub mod recurrence;
 pub mod sru;
 pub mod stack;
 pub mod wavefront;

@@ -5,8 +5,8 @@
 //! still enjoy the once-per-block weight fetch, and the second fuses
 //! bias + gate activations into its accumulate-store.
 
-use crate::engine::{check_io, Engine, RecurrentLayer};
-use crate::linalg::{fast_tanh, Epilogue, PackedGemm};
+use crate::engine::{check_io, recurrence, Engine, RecurrentLayer};
+use crate::linalg::{detect_simd, Epilogue, PackedGemm, Simd};
 use crate::models::config::StateLayout;
 use crate::models::QrnnParams;
 
@@ -28,6 +28,8 @@ pub struct QrnnEngine {
     /// `[T, D]` shifted previous frames: `[x_carry ; x_0 .. x_{t-2}]`.
     x_prev: Vec<f32>,
     gates: Vec<f32>, // [3H, T]
+    /// Dispatch tier for the fo-pool chain kernel.
+    simd: Simd,
 }
 
 impl QrnnEngine {
@@ -59,6 +61,7 @@ impl QrnnEngine {
             x_carry: vec![0.0; input],
             x_prev: vec![0.0; input * t_block],
             gates: vec![0.0; 3 * hidden * t_block],
+            simd: detect_simd(),
         }
     }
 
@@ -95,22 +98,12 @@ impl QrnnEngine {
             &Epilogue::fused(&self.b, &QrnnParams::GATE_ACTS),
         );
 
-        // fo-pooling remainder, unit-outer for contiguous gate rows; all
-        // three gate rows arrive pre-activated from the epilogue.
+        // fo-pooling remainder via the shared SIMD + pool-split chain
+        // kernel; all three gate rows arrive pre-activated from the
+        // epilogue.
         let (gx, gfo) = gates.split_at(h * t);
         let (gf, go) = gfo.split_at(h * t);
-        for i in 0..h {
-            let mut c = self.c[i];
-            let xh_row = &gx[i * t..i * t + t];
-            let f_row = &gf[i * t..i * t + t];
-            let o_row = &go[i * t..i * t + t];
-            for s in 0..t {
-                let f = f_row[s];
-                c = f * c + (1.0 - f) * xh_row[s];
-                out[s * h + i] = o_row[s] * fast_tanh(c);
-            }
-            self.c[i] = c;
-        }
+        recurrence::qrnn_chain(self.simd, gx, gf, go, h, t, 0, t, &mut self.c, out);
 
         // Carry the final input column for the next block.
         self.x_carry.copy_from_slice(&x[(t - 1) * d..t * d]);
@@ -201,6 +194,11 @@ impl RecurrentLayer for QrnnEngine {
         let xp = &mut self.x_prev[..n * d];
         let mut off = 0;
         for (&t, st) in segs.iter().zip(states.iter()) {
+            // Zero-length segments contribute no frames (and previously
+            // panicked here on the `t - 1` slice): skip, carry unchanged.
+            if t == 0 {
+                continue;
+            }
             let seg = &mut xp[off * d..(off + t) * d];
             seg[..d].copy_from_slice(&st[1]);
             seg[d..].copy_from_slice(&x[off * d..(off + t - 1) * d]);
@@ -219,18 +217,24 @@ impl RecurrentLayer for QrnnEngine {
         let (gf, go) = gfo.split_at(h * n);
         let mut off = 0;
         for (&t, st) in segs.iter().zip(states.iter_mut()) {
-            let (c_slot, xc_slot) = st.split_at_mut(1);
-            let c_slot = &mut c_slot[0];
-            for i in 0..h {
-                let mut c = c_slot[i];
-                for s in 0..t {
-                    let j = off + s;
-                    let f = gf[i * n + j];
-                    c = f * c + (1.0 - f) * gx[i * n + j];
-                    out[j * h + i] = go[i * n + j] * fast_tanh(c);
-                }
-                c_slot[i] = c;
+            // Zero-length segment: no output columns, c and the input
+            // carry both stay as they were.
+            if t == 0 {
+                continue;
             }
+            let (c_slot, xc_slot) = st.split_at_mut(1);
+            recurrence::qrnn_chain(
+                self.simd,
+                gx,
+                gf,
+                go,
+                h,
+                n,
+                off,
+                t,
+                &mut c_slot[0],
+                &mut out[..n * h],
+            );
             xc_slot[0].copy_from_slice(&x[(off + t - 1) * d..(off + t) * d]);
             off += t;
         }

@@ -21,8 +21,8 @@
 //! f32 engine is property-tested below (and is far below the sigmoid's
 //! useful resolution for realistic weight scales).
 
-use crate::engine::{check_io, Engine, RecurrentLayer};
-use crate::linalg::{fast_tanh, Epilogue, PackedQuantGemm, QuantScratch};
+use crate::engine::{check_io, recurrence, Engine, RecurrentLayer};
+use crate::linalg::{detect_simd, Epilogue, PackedQuantGemm, QuantScratch, Simd};
 use crate::models::config::StateLayout;
 use crate::models::SruParams;
 
@@ -179,6 +179,8 @@ pub struct QuantSruEngine {
     mode: QuantMode,
     /// Activation-quantization scratch (q8q/q4; reused per dispatch).
     scratch: QuantScratch,
+    /// Dispatch tier for the (f32) recurrence chain kernel.
+    simd: Simd,
 }
 
 impl QuantSruEngine {
@@ -222,6 +224,7 @@ impl QuantSruEngine {
             gates: vec![0.0; 3 * hidden * t_block],
             mode,
             scratch: QuantScratch::new(),
+            simd: detect_simd(),
         }
     }
 
@@ -276,21 +279,14 @@ impl QuantSruEngine {
         // per time step and accumulates in integer arithmetic.
         self.gate_gemm(x, t);
 
-        // Identical fo/highway recurrence to the f32 engine; f/r arrive
+        // Identical fo/highway recurrence to the f32 engine (the gates
+        // are f32 after the dequant epilogue), routed through the same
+        // shared SIMD + pool-split chain kernel; f/r arrive
         // pre-sigmoided.
-        let gates = &self.gates[..3 * h * t];
+        let (gates, c) = (&self.gates[..3 * h * t], &mut self.c);
         let (gx, gfr) = gates.split_at(h * t);
         let (gf, gr) = gfr.split_at(h * t);
-        for i in 0..h {
-            let mut c = self.c[i];
-            for s in 0..t {
-                let f = gf[i * t + s];
-                let r = gr[i * t + s];
-                c = f * c + (1.0 - f) * gx[i * t + s];
-                out[s * h + i] = r * fast_tanh(c) + (1.0 - r) * x[s * d + i];
-            }
-            self.c[i] = c;
-        }
+        recurrence::sru_chain(self.simd, gx, gf, gr, h, t, 0, t, &x[..t * d], d, c, out);
     }
 }
 
@@ -390,18 +386,22 @@ impl RecurrentLayer for QuantSruEngine {
         let (gf, gr) = gfr.split_at(h * n);
         let mut off = 0;
         for (&t, st) in segs.iter().zip(states.iter_mut()) {
-            let c_slot = &mut st[0];
-            for i in 0..h {
-                let mut c = c_slot[i];
-                for s in 0..t {
-                    let j = off + s;
-                    let f = gf[i * n + j];
-                    let r = gr[i * n + j];
-                    c = f * c + (1.0 - f) * gx[i * n + j];
-                    out[j * h + i] = r * fast_tanh(c) + (1.0 - r) * x[j * d + i];
-                }
-                c_slot[i] = c;
-            }
+            // Same chain kernel as `forward_block`, windowed to this
+            // stream's columns.
+            recurrence::sru_chain(
+                self.simd,
+                gx,
+                gf,
+                gr,
+                h,
+                n,
+                off,
+                t,
+                &x[..n * d],
+                d,
+                &mut st[0],
+                &mut out[..n * h],
+            );
             off += t;
         }
     }

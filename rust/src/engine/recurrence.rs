@@ -1,0 +1,895 @@
+//! Vectorized, pool-parallel element-wise recurrence chains.
+//!
+//! Every engine used to finish each block with its own scalar
+//! per-hidden-unit loop (duplicated between `run_sequence` and
+//! `run_segments`).  Those loops are the Amdahl tail the paper's cell
+//! choice exists to avoid: the SRU/QRNN recurrences are element-wise in
+//! the hidden dimension, so the only *sequential* axis is time.  This
+//! module is the shared replacement — kernel-style chain routines that
+//! walk `t` sequentially but run SIMD across hidden units, split across
+//! the worker pool in disjoint unit strips:
+//!
+//! * [`sru_chain`] — the SRU c-recurrence + highway output (also the
+//!   quantized SRU engine's epilogue: identical math after dequant);
+//! * [`qrnn_chain`] — the QRNN fo-pool;
+//! * [`lstm_gate_fuse`] — one LSTM step's gate squash + state update;
+//! * [`merge_sum`] — the chunked-bidir forward/backward merge.
+//!
+//! **Bit-identity.**  The SIMD lanes perform the exact scalar op
+//! sequence per unit (see `linalg/fastmath.rs` for the transcendental
+//! argument; the surrounding adds/muls mirror the scalar expressions
+//! term by term, no FMA).  Unit strips are disjoint and the chain along
+//! `t` never crosses units, so *any* strip decomposition — one thread
+//! or eight — produces the same bits.  The scalar tail of a strip runs
+//! the same ops, so `h` need not divide the vector width.  This is the
+//! same determinism argument as the GEMM M-split (PR 3), applied to the
+//! last scalar stage of the hot path.
+//!
+//! **Layout.**  Gates arrive as `[h or 3h/4h, stride]` row-major planes
+//! straight from the gate GEMM (unit-major rows, time columns), so
+//! vector lanes gather gate values with a `stride` hop; the input `x`
+//! and output planes are time-major, so those loads/stores are
+//! contiguous.  A chain touches columns `off..off + t` only — exactly
+//! the window `run_segments` hands it — which is what lets
+//! `run_sequence` (`stride == t, off == 0`) and `run_segments`
+//! (`stride == n`) share one kernel.
+//!
+//! Contract validators (`linalg/contract.rs::check_*_chain`) run in
+//! debug builds and under `--features checks`, matching the GEMM
+//! kernels' trust model.
+
+// This module is on the unsafe allowlist (tools/lint): the strip
+// kernels write disjoint regions of shared output planes through
+// `SendPtr` and use unchecked indexing justified by the validated
+// chain geometry.  Every unsafe block carries a `// SAFETY:` comment.
+#![allow(unsafe_code)]
+
+use crate::linalg::fastmath::{fast_sigmoid, fast_tanh};
+use crate::linalg::pool::{self, SendPtr};
+use crate::linalg::{Simd, PACK_MR};
+
+/// Units per pool task: one packed-panel row block, so a strip's state
+/// slice matches the GEMM's own M-tiling and false sharing on the `c`
+/// vector stays off (16 f32 = one cache line).
+pub const STRIP: usize = PACK_MR;
+
+/// Minimum `h * t` element count before the chain fans out across the
+/// pool.  Far lower than the GEMM's `PAR_MIN_WORK`: each element costs
+/// a polynomial transcendental (~tens of cycles), not one MAC.
+pub const ELEM_PAR_MIN: usize = 2048;
+
+/// Run `f(i0, i1)` over `STRIP`-wide unit ranges covering `0..h`,
+/// fanned across the pool when the chain is big enough.  Inline (single
+/// range) when small, single-threaded, or already inside a pool task —
+/// the same re-entrancy guard the GEMM splits use, so wavefront and
+/// batching callers never change path.
+fn run_strips(h: usize, work: usize, f: impl Fn(usize, usize) + Sync) {
+    let ns = h.div_ceil(STRIP);
+    if ns > 1 && work >= ELEM_PAR_MIN && !pool::in_worker() && pool::threads_hint() > 1 {
+        pool::current().run(ns, |si| {
+            let i0 = si * STRIP;
+            f(i0, (i0 + STRIP).min(h));
+        });
+    } else {
+        f(0, h);
+    }
+}
+
+/// Borrowed geometry of one SRU chain call.  Gate planes are shared
+/// reads; `c`/`out` are raw because strips write disjoint pieces of
+/// them concurrently (`c[i0..i1]`; `out` columns `i0..i1` of rows
+/// `off..off + t`).
+struct SruArgs<'a> {
+    gx: &'a [f32],
+    gf: &'a [f32],
+    gr: &'a [f32],
+    stride: usize,
+    off: usize,
+    t: usize,
+    x: &'a [f32],
+    d: usize,
+    h: usize,
+    c: SendPtr<f32>,
+    out: SendPtr<f32>,
+}
+
+/// Borrowed geometry of one QRNN fo-pool call (no highway input).
+struct QrnnArgs<'a> {
+    gz: &'a [f32],
+    gf: &'a [f32],
+    go: &'a [f32],
+    stride: usize,
+    off: usize,
+    t: usize,
+    h: usize,
+    c: SendPtr<f32>,
+    out: SendPtr<f32>,
+}
+
+/// Borrowed geometry of one LSTM gate-fuse step (`g = [4h]` raw
+/// pre-activations; `c`, `h`, `out` all `h` long).
+struct LstmArgs<'a> {
+    g: &'a [f32],
+    h: usize,
+    c: SendPtr<f32>,
+    hs: SendPtr<f32>,
+    out: SendPtr<f32>,
+}
+
+/// Borrowed geometry of one bidirectional merge.
+struct MergeArgs<'a> {
+    fwd: &'a [f32],
+    bwd: &'a [f32],
+    steps: usize,
+    h: usize,
+    out: SendPtr<f32>,
+}
+
+// ---------------------------------------------------------------------
+// Scalar strip kernels: the reference op sequence.  The SIMD strips
+// mirror these term by term and fall back to them for tail units.
+// ---------------------------------------------------------------------
+
+fn sru_strip_scalar(a: &SruArgs<'_>, i0: usize, i1: usize) {
+    let c = a.c.get();
+    let out = a.out.get();
+    for i in i0..i1 {
+        // SAFETY: the public entry validated (debug/`checks`) and its
+        // callers uphold: gate planes hold `h * stride`, `x` holds
+        // `stride * d` with `h <= d`, `out` holds `stride * h`, `c`
+        // holds `h`, and `off + t <= stride` — so every index below is
+        // in bounds; this strip exclusively owns `c[i]` and `out`
+        // column `i`.
+        unsafe {
+            let mut cv = *c.add(i);
+            let row = i * a.stride;
+            for s in 0..a.t {
+                let j = a.off + s;
+                let f = *a.gf.get_unchecked(row + j);
+                let r = *a.gr.get_unchecked(row + j);
+                let xh = *a.gx.get_unchecked(row + j);
+                cv = f * cv + (1.0 - f) * xh;
+                *out.add(j * a.h + i) =
+                    r * fast_tanh(cv) + (1.0 - r) * *a.x.get_unchecked(j * a.d + i);
+            }
+            *c.add(i) = cv;
+        }
+    }
+}
+
+fn qrnn_strip_scalar(a: &QrnnArgs<'_>, i0: usize, i1: usize) {
+    let c = a.c.get();
+    let out = a.out.get();
+    for i in i0..i1 {
+        // SAFETY: validated chain geometry (gate planes `h * stride`,
+        // `out` `stride * h`, `c` len `h`, `off + t <= stride`); this
+        // strip exclusively owns `c[i]` and `out` column `i`.
+        unsafe {
+            let mut cv = *c.add(i);
+            let row = i * a.stride;
+            for s in 0..a.t {
+                let j = a.off + s;
+                let f = *a.gf.get_unchecked(row + j);
+                let o = *a.go.get_unchecked(row + j);
+                let z = *a.gz.get_unchecked(row + j);
+                cv = f * cv + (1.0 - f) * z;
+                *out.add(j * a.h + i) = o * fast_tanh(cv);
+            }
+            *c.add(i) = cv;
+        }
+    }
+}
+
+fn lstm_strip_scalar(a: &LstmArgs<'_>, i0: usize, i1: usize) {
+    let c = a.c.get();
+    let hs = a.hs.get();
+    let out = a.out.get();
+    for i in i0..i1 {
+        // SAFETY: validated fuse geometry (`g` holds `4h`; `c`, `h`,
+        // `out` hold `h`); this strip exclusively owns index `i` of
+        // each state/output vector.
+        unsafe {
+            let f = fast_sigmoid(*a.g.get_unchecked(i));
+            let ig = fast_sigmoid(*a.g.get_unchecked(a.h + i));
+            let o = fast_sigmoid(*a.g.get_unchecked(2 * a.h + i));
+            let chat = fast_tanh(*a.g.get_unchecked(3 * a.h + i));
+            let cv = f * *c.add(i) + ig * chat;
+            *c.add(i) = cv;
+            let hv = o * fast_tanh(cv);
+            *hs.add(i) = hv;
+            *out.add(i) = hv;
+        }
+    }
+}
+
+fn merge_strip_scalar(a: &MergeArgs<'_>, i0: usize, i1: usize) {
+    let out = a.out.get();
+    for s in 0..a.steps {
+        let fw = s * a.h;
+        let bw = (a.steps - 1 - s) * a.h;
+        for i in i0..i1 {
+            // SAFETY: all three planes hold `steps * h` (validated);
+            // this strip exclusively owns columns `i0..i1` of `out`.
+            unsafe {
+                *out.add(fw + i) =
+                    *a.fwd.get_unchecked(fw + i) + *a.bwd.get_unchecked(bw + i);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// AVX2 strips: 8 units per lane, gate gathers strided, x/out
+// contiguous.  Same op sequence per unit as the scalar strips.
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::{LstmArgs, MergeArgs, QrnnArgs, SruArgs};
+    use crate::linalg::fastmath::avx2::{fast_sigmoid_ps, fast_tanh_ps};
+    use core::arch::x86_64::*;
+
+    /// Gather 8 consecutive unit rows of a `[h, stride]` gate plane at
+    /// time column `j`.
+    ///
+    /// # Safety
+    /// Caller must ensure `(i + 7) * stride + j < g.len()` and AVX2.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn gather8(g: &[f32], i: usize, stride: usize, j: usize) -> __m256 {
+        // SAFETY: bound promised by the caller (chain geometry).
+        unsafe {
+            _mm256_set_ps(
+                *g.get_unchecked((i + 7) * stride + j),
+                *g.get_unchecked((i + 6) * stride + j),
+                *g.get_unchecked((i + 5) * stride + j),
+                *g.get_unchecked((i + 4) * stride + j),
+                *g.get_unchecked((i + 3) * stride + j),
+                *g.get_unchecked((i + 2) * stride + j),
+                *g.get_unchecked((i + 1) * stride + j),
+                *g.get_unchecked(i * stride + j),
+            )
+        }
+    }
+
+    /// # Safety
+    /// Caller must ensure AVX2 and the validated SRU chain geometry.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn sru_strip(a: &SruArgs<'_>, i0: usize, i1: usize) {
+        let c = a.c.get();
+        let out = a.out.get();
+        let one = _mm256_set1_ps(1.0);
+        let mut i = i0;
+        while i + 8 <= i1 {
+            // SAFETY: i + 8 <= i1 <= h <= d, so the contiguous x/out/c
+            // accesses at `j * d + i` / `j * h + i` / `i` stay inside
+            // their planes for every `j < stride`; gathers are bounded
+            // by `(i + 7) * stride + j < h * stride`; this strip owns
+            // `c[i..i+8]` and `out` columns `i..i+8`; AVX2 is enabled
+            // in this target-feature context for the lane calls.
+            unsafe {
+                let mut cv = _mm256_loadu_ps(c.add(i));
+                for s in 0..a.t {
+                    let j = a.off + s;
+                    let f = gather8(a.gf, i, a.stride, j);
+                    let r = gather8(a.gr, i, a.stride, j);
+                    let xh = gather8(a.gx, i, a.stride, j);
+                    let xv = _mm256_loadu_ps(a.x.as_ptr().add(j * a.d + i));
+                    cv = _mm256_add_ps(
+                        _mm256_mul_ps(f, cv),
+                        _mm256_mul_ps(_mm256_sub_ps(one, f), xh),
+                    );
+                    let res = _mm256_add_ps(
+                        _mm256_mul_ps(r, fast_tanh_ps(cv)),
+                        _mm256_mul_ps(_mm256_sub_ps(one, r), xv),
+                    );
+                    _mm256_storeu_ps(out.add(j * a.h + i), res);
+                }
+                _mm256_storeu_ps(c.add(i), cv);
+            }
+            i += 8;
+        }
+        super::sru_strip_scalar(a, i, i1);
+    }
+
+    /// # Safety
+    /// Caller must ensure AVX2 and the validated QRNN chain geometry.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn qrnn_strip(a: &QrnnArgs<'_>, i0: usize, i1: usize) {
+        let c = a.c.get();
+        let out = a.out.get();
+        let one = _mm256_set1_ps(1.0);
+        let mut i = i0;
+        while i + 8 <= i1 {
+            // SAFETY: same bounds as `sru_strip` minus the x plane;
+            // this strip owns `c[i..i+8]` and `out` columns `i..i+8`.
+            unsafe {
+                let mut cv = _mm256_loadu_ps(c.add(i));
+                for s in 0..a.t {
+                    let j = a.off + s;
+                    let f = gather8(a.gf, i, a.stride, j);
+                    let o = gather8(a.go, i, a.stride, j);
+                    let z = gather8(a.gz, i, a.stride, j);
+                    cv = _mm256_add_ps(
+                        _mm256_mul_ps(f, cv),
+                        _mm256_mul_ps(_mm256_sub_ps(one, f), z),
+                    );
+                    let res = _mm256_mul_ps(o, fast_tanh_ps(cv));
+                    _mm256_storeu_ps(out.add(j * a.h + i), res);
+                }
+                _mm256_storeu_ps(c.add(i), cv);
+            }
+            i += 8;
+        }
+        super::qrnn_strip_scalar(a, i, i1);
+    }
+
+    /// # Safety
+    /// Caller must ensure AVX2 and the validated LSTM fuse geometry.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn lstm_strip(a: &LstmArgs<'_>, i0: usize, i1: usize) {
+        let g = a.g.as_ptr();
+        let c = a.c.get();
+        let hs = a.hs.get();
+        let out = a.out.get();
+        let mut i = i0;
+        while i + 8 <= i1 {
+            // SAFETY: i + 8 <= i1 <= h, so the four gate segments at
+            // `k * h + i` and the `c`/`h`/`out` vectors are all in
+            // bounds; this strip owns index range `i..i+8` of each.
+            unsafe {
+                let f = fast_sigmoid_ps(_mm256_loadu_ps(g.add(i)));
+                let ig = fast_sigmoid_ps(_mm256_loadu_ps(g.add(a.h + i)));
+                let o = fast_sigmoid_ps(_mm256_loadu_ps(g.add(2 * a.h + i)));
+                let chat = fast_tanh_ps(_mm256_loadu_ps(g.add(3 * a.h + i)));
+                let cv = _mm256_add_ps(
+                    _mm256_mul_ps(f, _mm256_loadu_ps(c.add(i))),
+                    _mm256_mul_ps(ig, chat),
+                );
+                _mm256_storeu_ps(c.add(i), cv);
+                let hv = _mm256_mul_ps(o, fast_tanh_ps(cv));
+                _mm256_storeu_ps(hs.add(i), hv);
+                _mm256_storeu_ps(out.add(i), hv);
+            }
+            i += 8;
+        }
+        super::lstm_strip_scalar(a, i, i1);
+    }
+
+    /// # Safety
+    /// Caller must ensure AVX2 and the validated merge geometry.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn merge_strip(a: &MergeArgs<'_>, i0: usize, i1: usize) {
+        let out = a.out.get();
+        for s in 0..a.steps {
+            let fw = s * a.h;
+            let bw = (a.steps - 1 - s) * a.h;
+            let mut i = i0;
+            while i + 8 <= i1 {
+                // SAFETY: i + 8 <= i1 <= h keeps `row + i + 8` within
+                // the `steps * h` planes; this strip owns `out`
+                // columns `i0..i1`.
+                unsafe {
+                    let v = _mm256_add_ps(
+                        _mm256_loadu_ps(a.fwd.as_ptr().add(fw + i)),
+                        _mm256_loadu_ps(a.bwd.as_ptr().add(bw + i)),
+                    );
+                    _mm256_storeu_ps(out.add(fw + i), v);
+                }
+                i += 8;
+            }
+            for i in i..i1 {
+                // SAFETY: same bounds, scalar tail.
+                unsafe {
+                    *out.add(fw + i) =
+                        *a.fwd.get_unchecked(fw + i) + *a.bwd.get_unchecked(bw + i);
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// NEON strips: 4 units per lane, same structure as the AVX2 strips.
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod arm {
+    use super::{LstmArgs, MergeArgs, QrnnArgs, SruArgs};
+    use crate::linalg::fastmath::neon::{fast_sigmoid_ps, fast_tanh_ps};
+    use core::arch::aarch64::*;
+
+    /// Gather 4 consecutive unit rows of a `[h, stride]` gate plane at
+    /// time column `j`.
+    ///
+    /// # Safety
+    /// Caller must ensure `(i + 3) * stride + j < g.len()` and NEON.
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn gather4(g: &[f32], i: usize, stride: usize, j: usize) -> float32x4_t {
+        // SAFETY: bound promised by the caller (chain geometry).
+        unsafe {
+            let tmp = [
+                *g.get_unchecked(i * stride + j),
+                *g.get_unchecked((i + 1) * stride + j),
+                *g.get_unchecked((i + 2) * stride + j),
+                *g.get_unchecked((i + 3) * stride + j),
+            ];
+            vld1q_f32(tmp.as_ptr())
+        }
+    }
+
+    /// # Safety
+    /// Caller must ensure NEON and the validated SRU chain geometry.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn sru_strip(a: &SruArgs<'_>, i0: usize, i1: usize) {
+        let c = a.c.get();
+        let out = a.out.get();
+        let one = vdupq_n_f32(1.0);
+        let mut i = i0;
+        while i + 4 <= i1 {
+            // SAFETY: i + 4 <= i1 <= h <= d keeps the contiguous
+            // x/out/c accesses in bounds for every `j < stride`;
+            // gathers bounded by `(i + 3) * stride + j < h * stride`;
+            // this strip owns `c[i..i+4]` and `out` columns `i..i+4`;
+            // NEON is enabled in this target-feature context.
+            unsafe {
+                let mut cv = vld1q_f32(c.add(i));
+                for s in 0..a.t {
+                    let j = a.off + s;
+                    let f = gather4(a.gf, i, a.stride, j);
+                    let r = gather4(a.gr, i, a.stride, j);
+                    let xh = gather4(a.gx, i, a.stride, j);
+                    let xv = vld1q_f32(a.x.as_ptr().add(j * a.d + i));
+                    cv = vaddq_f32(
+                        vmulq_f32(f, cv),
+                        vmulq_f32(vsubq_f32(one, f), xh),
+                    );
+                    let res = vaddq_f32(
+                        vmulq_f32(r, fast_tanh_ps(cv)),
+                        vmulq_f32(vsubq_f32(one, r), xv),
+                    );
+                    vst1q_f32(out.add(j * a.h + i), res);
+                }
+                vst1q_f32(c.add(i), cv);
+            }
+            i += 4;
+        }
+        super::sru_strip_scalar(a, i, i1);
+    }
+
+    /// # Safety
+    /// Caller must ensure NEON and the validated QRNN chain geometry.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn qrnn_strip(a: &QrnnArgs<'_>, i0: usize, i1: usize) {
+        let c = a.c.get();
+        let out = a.out.get();
+        let one = vdupq_n_f32(1.0);
+        let mut i = i0;
+        while i + 4 <= i1 {
+            // SAFETY: same bounds as `sru_strip` minus the x plane;
+            // this strip owns `c[i..i+4]` and `out` columns `i..i+4`.
+            unsafe {
+                let mut cv = vld1q_f32(c.add(i));
+                for s in 0..a.t {
+                    let j = a.off + s;
+                    let f = gather4(a.gf, i, a.stride, j);
+                    let o = gather4(a.go, i, a.stride, j);
+                    let z = gather4(a.gz, i, a.stride, j);
+                    cv = vaddq_f32(
+                        vmulq_f32(f, cv),
+                        vmulq_f32(vsubq_f32(one, f), z),
+                    );
+                    let res = vmulq_f32(o, fast_tanh_ps(cv));
+                    vst1q_f32(out.add(j * a.h + i), res);
+                }
+                vst1q_f32(c.add(i), cv);
+            }
+            i += 4;
+        }
+        super::qrnn_strip_scalar(a, i, i1);
+    }
+
+    /// # Safety
+    /// Caller must ensure NEON and the validated LSTM fuse geometry.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn lstm_strip(a: &LstmArgs<'_>, i0: usize, i1: usize) {
+        let g = a.g.as_ptr();
+        let c = a.c.get();
+        let hs = a.hs.get();
+        let out = a.out.get();
+        let mut i = i0;
+        while i + 4 <= i1 {
+            // SAFETY: i + 4 <= i1 <= h keeps the four gate segments and
+            // the `c`/`h`/`out` vectors in bounds; this strip owns
+            // index range `i..i+4` of each.
+            unsafe {
+                let f = fast_sigmoid_ps(vld1q_f32(g.add(i)));
+                let ig = fast_sigmoid_ps(vld1q_f32(g.add(a.h + i)));
+                let o = fast_sigmoid_ps(vld1q_f32(g.add(2 * a.h + i)));
+                let chat = fast_tanh_ps(vld1q_f32(g.add(3 * a.h + i)));
+                let cv = vaddq_f32(
+                    vmulq_f32(f, vld1q_f32(c.add(i))),
+                    vmulq_f32(ig, chat),
+                );
+                vst1q_f32(c.add(i), cv);
+                let hv = vmulq_f32(o, fast_tanh_ps(cv));
+                vst1q_f32(hs.add(i), hv);
+                vst1q_f32(out.add(i), hv);
+            }
+            i += 4;
+        }
+        super::lstm_strip_scalar(a, i, i1);
+    }
+
+    /// # Safety
+    /// Caller must ensure NEON and the validated merge geometry.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn merge_strip(a: &MergeArgs<'_>, i0: usize, i1: usize) {
+        let out = a.out.get();
+        for s in 0..a.steps {
+            let fw = s * a.h;
+            let bw = (a.steps - 1 - s) * a.h;
+            let mut i = i0;
+            while i + 4 <= i1 {
+                // SAFETY: i + 4 <= i1 <= h keeps `row + i + 4` within
+                // the `steps * h` planes; this strip owns `out`
+                // columns `i0..i1`.
+                unsafe {
+                    let v = vaddq_f32(
+                        vld1q_f32(a.fwd.as_ptr().add(fw + i)),
+                        vld1q_f32(a.bwd.as_ptr().add(bw + i)),
+                    );
+                    vst1q_f32(out.add(fw + i), v);
+                }
+                i += 4;
+            }
+            for i in i..i1 {
+                // SAFETY: same bounds, scalar tail.
+                unsafe {
+                    *out.add(fw + i) =
+                        *a.fwd.get_unchecked(fw + i) + *a.bwd.get_unchecked(bw + i);
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Per-cell tier dispatch (mirrors the f32 GEMM ladder: Vnni shares the
+// Avx2 f32 lanes, Sdot shares Neon; anything else runs scalar).
+// ---------------------------------------------------------------------
+
+fn run_sru_strip(simd: Simd, a: &SruArgs<'_>, i0: usize, i1: usize) {
+    match simd {
+        #[cfg(target_arch = "x86_64")]
+        Simd::Avx2 | Simd::Vnni => {
+            // SAFETY: these tiers are only dispatched on AVX2 hosts
+            // (`detect()`/`runs_on()`), and the public entry validated
+            // the chain geometry the strip requires.
+            unsafe { x86::sru_strip(a, i0, i1) }
+        }
+        #[cfg(target_arch = "aarch64")]
+        Simd::Neon | Simd::Sdot => {
+            // SAFETY: NEON is baseline on aarch64; geometry validated
+            // at the public entry.
+            unsafe { arm::sru_strip(a, i0, i1) }
+        }
+        _ => sru_strip_scalar(a, i0, i1),
+    }
+}
+
+fn run_qrnn_strip(simd: Simd, a: &QrnnArgs<'_>, i0: usize, i1: usize) {
+    match simd {
+        #[cfg(target_arch = "x86_64")]
+        Simd::Avx2 | Simd::Vnni => {
+            // SAFETY: AVX2 host (tier gate) + validated chain geometry.
+            unsafe { x86::qrnn_strip(a, i0, i1) }
+        }
+        #[cfg(target_arch = "aarch64")]
+        Simd::Neon | Simd::Sdot => {
+            // SAFETY: NEON baseline on aarch64 + validated geometry.
+            unsafe { arm::qrnn_strip(a, i0, i1) }
+        }
+        _ => qrnn_strip_scalar(a, i0, i1),
+    }
+}
+
+fn run_lstm_strip(simd: Simd, a: &LstmArgs<'_>, i0: usize, i1: usize) {
+    match simd {
+        #[cfg(target_arch = "x86_64")]
+        Simd::Avx2 | Simd::Vnni => {
+            // SAFETY: AVX2 host (tier gate) + validated fuse geometry.
+            unsafe { x86::lstm_strip(a, i0, i1) }
+        }
+        #[cfg(target_arch = "aarch64")]
+        Simd::Neon | Simd::Sdot => {
+            // SAFETY: NEON baseline on aarch64 + validated geometry.
+            unsafe { arm::lstm_strip(a, i0, i1) }
+        }
+        _ => lstm_strip_scalar(a, i0, i1),
+    }
+}
+
+fn run_merge_strip(simd: Simd, a: &MergeArgs<'_>, i0: usize, i1: usize) {
+    match simd {
+        #[cfg(target_arch = "x86_64")]
+        Simd::Avx2 | Simd::Vnni => {
+            // SAFETY: AVX2 host (tier gate) + validated merge geometry.
+            unsafe { x86::merge_strip(a, i0, i1) }
+        }
+        #[cfg(target_arch = "aarch64")]
+        Simd::Neon | Simd::Sdot => {
+            // SAFETY: NEON baseline on aarch64 + validated geometry.
+            unsafe { arm::merge_strip(a, i0, i1) }
+        }
+        _ => merge_strip_scalar(a, i0, i1),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Public chain entry points.
+// ---------------------------------------------------------------------
+
+/// SRU c-recurrence + highway output over the time window
+/// `off..off + t` of `[h, stride]` gate planes (`gx`/`gf`/`gr` already
+/// activated by the GEMM epilogue):
+///
+/// ```text
+/// c      = f · c + (1 − f) · x̃            (per unit, sequential in t)
+/// out[j] = r · tanh(c) + (1 − r) · x[j]   (time-major rows)
+/// ```
+///
+/// Bitwise identical to the engines' previous scalar loops at any tier
+/// and any thread count.  `run_sequence` calls it with
+/// `stride == t, off == 0`; `run_segments` with the full-block stride.
+#[allow(clippy::too_many_arguments)]
+pub fn sru_chain(
+    simd: Simd,
+    gx: &[f32],
+    gf: &[f32],
+    gr: &[f32],
+    h: usize,
+    stride: usize,
+    off: usize,
+    t: usize,
+    x: &[f32],
+    d: usize,
+    c: &mut [f32],
+    out: &mut [f32],
+) {
+    #[cfg(any(debug_assertions, feature = "checks"))]
+    if let Err(e) = crate::linalg::contract::check_sru_chain(
+        simd,
+        gx.len(),
+        gf.len(),
+        gr.len(),
+        h,
+        stride,
+        off,
+        t,
+        x.len(),
+        d,
+        c.len(),
+        out.len(),
+    ) {
+        panic!("recurrence kernel contract violated: {e}");
+    }
+    if t == 0 || h == 0 {
+        return;
+    }
+    let a = SruArgs {
+        gx,
+        gf,
+        gr,
+        stride,
+        off,
+        t,
+        x,
+        d,
+        h,
+        c: SendPtr(c.as_mut_ptr()),
+        out: SendPtr(out.as_mut_ptr()),
+    };
+    run_strips(h, h * t, |i0, i1| run_sru_strip(simd, &a, i0, i1));
+}
+
+/// QRNN fo-pool over the time window `off..off + t` (`gz` pre-tanh'd,
+/// `gf`/`go` pre-sigmoided by the GEMM epilogue):
+///
+/// ```text
+/// c      = f · c + (1 − f) · z
+/// out[j] = o · tanh(c)
+/// ```
+#[allow(clippy::too_many_arguments)]
+pub fn qrnn_chain(
+    simd: Simd,
+    gz: &[f32],
+    gf: &[f32],
+    go: &[f32],
+    h: usize,
+    stride: usize,
+    off: usize,
+    t: usize,
+    c: &mut [f32],
+    out: &mut [f32],
+) {
+    #[cfg(any(debug_assertions, feature = "checks"))]
+    if let Err(e) = crate::linalg::contract::check_qrnn_chain(
+        simd,
+        gz.len(),
+        gf.len(),
+        go.len(),
+        h,
+        stride,
+        off,
+        t,
+        c.len(),
+        out.len(),
+    ) {
+        panic!("recurrence kernel contract violated: {e}");
+    }
+    if t == 0 || h == 0 {
+        return;
+    }
+    let a = QrnnArgs {
+        gz,
+        gf,
+        go,
+        stride,
+        off,
+        t,
+        h,
+        c: SendPtr(c.as_mut_ptr()),
+        out: SendPtr(out.as_mut_ptr()),
+    };
+    run_strips(h, h * t, |i0, i1| run_qrnn_strip(simd, &a, i0, i1));
+}
+
+/// One LSTM step: squash the raw `[4h]` gate vector (`f, i, o, c̃`
+/// segments), update `c`, and write `h_state` and `out_row` (both get
+/// `o · tanh(c)`).  Single time step, so `work = h` — typically below
+/// [`ELEM_PAR_MIN`], where the strips run inline but still SIMD.
+pub fn lstm_gate_fuse(
+    simd: Simd,
+    g: &[f32],
+    h: usize,
+    c: &mut [f32],
+    h_state: &mut [f32],
+    out_row: &mut [f32],
+) {
+    #[cfg(any(debug_assertions, feature = "checks"))]
+    if let Err(e) = crate::linalg::contract::check_lstm_fuse(
+        simd,
+        g.len(),
+        h,
+        c.len(),
+        h_state.len(),
+        out_row.len(),
+    ) {
+        panic!("recurrence kernel contract violated: {e}");
+    }
+    if h == 0 {
+        return;
+    }
+    let a = LstmArgs {
+        g,
+        h,
+        c: SendPtr(c.as_mut_ptr()),
+        hs: SendPtr(h_state.as_mut_ptr()),
+        out: SendPtr(out_row.as_mut_ptr()),
+    };
+    run_strips(h, h, |i0, i1| run_lstm_strip(simd, &a, i0, i1));
+}
+
+/// Bidirectional merge: `out[s] = fwd[s] + bwd[steps − 1 − s]` over
+/// `[steps, h]` time-major planes.  SIMD but never pool-split — it is
+/// one add per element, pure bandwidth, and fan-out would cost more
+/// than it saves.
+pub fn merge_sum(
+    simd: Simd,
+    fwd: &[f32],
+    bwd: &[f32],
+    out: &mut [f32],
+    steps: usize,
+    h: usize,
+) {
+    #[cfg(any(debug_assertions, feature = "checks"))]
+    if let Err(e) =
+        crate::linalg::contract::check_merge(fwd.len(), bwd.len(), out.len(), steps, h)
+    {
+        panic!("recurrence kernel contract violated: {e}");
+    }
+    if steps == 0 || h == 0 {
+        return;
+    }
+    let a = MergeArgs { fwd, bwd, steps, h, out: SendPtr(out.as_mut_ptr()) };
+    run_merge_strip(simd, &a, 0, h);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn sigmoided(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| fast_sigmoid(rng.uniform_in(-3.0, 3.0))).collect()
+    }
+
+    /// Portable-tier chain vs a straight transliteration of the old
+    /// engine loop — the windowed (`off`, `stride`) geometry is the
+    /// part the engines can no longer test on their own.
+    #[test]
+    fn windowed_sru_chain_matches_reference() {
+        let (h, d, n) = (21, 25, 9);
+        let mut rng = Rng::new(7);
+        let gx: Vec<f32> = (0..h * n).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+        let gf = sigmoided(&mut rng, h * n);
+        let gr = sigmoided(&mut rng, h * n);
+        let x: Vec<f32> = (0..n * d).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+        for (off, t) in [(0usize, 4usize), (4, 0), (4, 1), (5, 4)] {
+            let mut c = vec![0.25f32; h];
+            let mut out = vec![0.0f32; n * h];
+            sru_chain(
+                Simd::Portable,
+                &gx,
+                &gf,
+                &gr,
+                h,
+                n,
+                off,
+                t,
+                &x,
+                d,
+                &mut c,
+                &mut out,
+            );
+            let mut cref = vec![0.25f32; h];
+            let mut oref = vec![0.0f32; n * h];
+            for i in 0..h {
+                let mut cv = cref[i];
+                for s in 0..t {
+                    let j = off + s;
+                    let f = gf[i * n + j];
+                    let r = gr[i * n + j];
+                    cv = f * cv + (1.0 - f) * gx[i * n + j];
+                    oref[j * h + i] = r * fast_tanh(cv) + (1.0 - r) * x[j * d + i];
+                }
+                cref[i] = cv;
+            }
+            for i in 0..h {
+                assert_eq!(c[i].to_bits(), cref[i].to_bits(), "c[{i}] off={off} t={t}");
+            }
+            for j in 0..n * h {
+                assert_eq!(out[j].to_bits(), oref[j].to_bits(), "out[{j}] off={off} t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn merge_reverses_backward_rows() {
+        let (steps, h) = (5, 11);
+        let mut rng = Rng::new(8);
+        let fwd: Vec<f32> = (0..steps * h).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+        let bwd: Vec<f32> = (0..steps * h).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+        let mut out = vec![0.0f32; steps * h];
+        merge_sum(Simd::Portable, &fwd, &bwd, &mut out, steps, h);
+        for s in 0..steps {
+            for i in 0..h {
+                let want = fwd[s * h + i] + bwd[(steps - 1 - s) * h + i];
+                assert_eq!(out[s * h + i].to_bits(), want.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "recurrence kernel contract violated")]
+    #[cfg(any(debug_assertions, feature = "checks"))]
+    fn bad_window_panics() {
+        let h = 4;
+        let (mut c, mut out) = (vec![0.0f32; h], vec![0.0f32; 4 * h]);
+        let g = vec![0.0f32; h * 4];
+        // off + t = 5 > stride = 4.
+        qrnn_chain(Simd::Portable, &g, &g, &g, h, 4, 2, 3, &mut c, &mut out);
+    }
+}

@@ -1,7 +1,7 @@
 //! SRU engine with multi-time-step parallelization (paper §3.2, Eq. 2/4).
 
-use crate::engine::{check_io, Engine, RecurrentLayer};
-use crate::linalg::{fast_tanh, Epilogue, PackedGemm};
+use crate::engine::{check_io, recurrence, Engine, RecurrentLayer};
+use crate::linalg::{detect_simd, Epilogue, PackedGemm, Simd};
 use crate::models::config::StateLayout;
 use crate::models::SruParams;
 
@@ -26,6 +26,9 @@ pub struct SruEngine {
     gates: Vec<f32>,
     /// Stacked bias `[3H]`: zeros for xhat, then b_f, b_r.
     b3: Vec<f32>,
+    /// Dispatch tier for the element-wise chain kernels (cached from
+    /// `detect_simd()`, so `MTSRNN_ISA` pins it alongside the GEMM).
+    simd: Simd,
 }
 
 impl SruEngine {
@@ -48,6 +51,7 @@ impl SruEngine {
             t_block,
             hidden,
             input,
+            simd: detect_simd(),
         }
     }
 
@@ -80,26 +84,26 @@ impl SruEngine {
             &Epilogue::fused(&self.b3, &SruParams::GATE_ACTS),
         );
 
-        // (2) The sequential remainder (element-wise, per hidden unit).
-        //     Each unit's c-chain is independent, so we iterate units in
-        //     the outer loop: gate rows are then read contiguously.  The
-        //     f/r rows are already sigmoided by the epilogue.
+        // (2) The element-wise remainder: the shared SIMD + pool-split
+        //     c-chain kernel (f/r rows already sigmoided by the
+        //     epilogue), bit-identical to the old scalar loop at any
+        //     tier and thread count.
         let (gx, gfr) = gates.split_at(h * t);
         let (gf, gr) = gfr.split_at(h * t);
-        for i in 0..h {
-            let mut c = self.c[i];
-            let xh_row = &gx[i * t..i * t + t];
-            let f_row = &gf[i * t..i * t + t];
-            let r_row = &gr[i * t..i * t + t];
-            for s in 0..t {
-                let f = f_row[s];
-                let r = r_row[s];
-                c = f * c + (1.0 - f) * xh_row[s];
-                // Highway term uses the raw input (time-major read).
-                out[s * h + i] = r * fast_tanh(c) + (1.0 - r) * x[s * d + i];
-            }
-            self.c[i] = c;
-        }
+        recurrence::sru_chain(
+            self.simd,
+            gx,
+            gf,
+            gr,
+            h,
+            t,
+            0,
+            t,
+            &x[..t * d],
+            d,
+            &mut self.c,
+            out,
+        );
     }
 }
 
@@ -188,18 +192,22 @@ impl RecurrentLayer for SruEngine {
         let (gf, gr) = gfr.split_at(h * n);
         let mut off = 0;
         for (&t, st) in segs.iter().zip(states.iter_mut()) {
-            let c_slot = &mut st[0];
-            for i in 0..h {
-                let mut c = c_slot[i];
-                for s in 0..t {
-                    let j = off + s;
-                    let f = gf[i * n + j];
-                    let r = gr[i * n + j];
-                    c = f * c + (1.0 - f) * gx[i * n + j];
-                    out[j * h + i] = r * fast_tanh(c) + (1.0 - r) * x[j * d + i];
-                }
-                c_slot[i] = c;
-            }
+            // Same chain kernel as `forward_block`, windowed to this
+            // stream's columns — no scalar twin to keep in sync.
+            recurrence::sru_chain(
+                self.simd,
+                gx,
+                gf,
+                gr,
+                h,
+                n,
+                off,
+                t,
+                &x[..n * d],
+                d,
+                &mut st[0],
+                &mut out[..n * h],
+            );
             off += t;
         }
     }

@@ -20,7 +20,8 @@
 
 // Unsafe-surface policy (enforced twice: here by rustc, and redundantly
 // by `tools/lint` in CI): `unsafe` is denied crate-wide and re-allowed
-// only in the audited modules — the SIMD kernels, the panel packer's
+// only in the audited modules — the SIMD kernels, the vectorized
+// transcendentals, the recurrence chain strips, the panel packer's
 // row splitter, the thread pool, and the wavefront scheduler — each of
 // which carries `// SAFETY:` justifications catalogued in
 // `docs/UNSAFE.md`.  Within those modules every operation inside an

@@ -103,6 +103,21 @@ pub enum ContractError {
     /// A SIMD variant was requested on a target where its kernels are
     /// not compiled (`Avx2` off x86-64, `Neon` off aarch64).
     SimdUnavailable { simd: &'static str },
+    /// A recurrence gate plane does not hold `h * stride` entries (the
+    /// `[h, stride]` row-major layout the chain kernels walk).
+    GateLen { expected: usize, got: usize, h: usize, stride: usize },
+    /// The chain's time window `off..off + t` escapes the gate stride —
+    /// the strided column loads would read a neighbouring row.
+    ChainWindow { off: usize, t: usize, stride: usize },
+    /// The SRU highway term reads `x[j * d + i]` for `i < h`, which
+    /// requires `h <= d`.
+    HighwayDim { h: usize, d: usize },
+    /// A recurrent state vector (`c`, `h`) does not hold exactly `h`
+    /// entries.
+    StateLen { expected: usize, got: usize },
+    /// The chain's output plane does not hold `stride * h` entries
+    /// (time-major rows shared with the other streams in the block).
+    ChainOut { expected: usize, got: usize, stride: usize, h: usize },
 }
 
 impl std::fmt::Display for ContractError {
@@ -171,6 +186,24 @@ impl std::fmt::Display for ContractError {
             ContractError::SimdUnavailable { simd } => {
                 write!(f, "SIMD variant {simd} is not compiled for this target")
             }
+            ContractError::GateLen { expected, got, h, stride } => write!(
+                f,
+                "gate plane must hold h * stride = {h} * {stride} = {expected} entries, got {got}"
+            ),
+            ContractError::ChainWindow { off, t, stride } => write!(
+                f,
+                "chain window off + t = {off} + {t} must stay within the gate stride {stride}"
+            ),
+            ContractError::HighwayDim { h, d } => {
+                write!(f, "SRU highway requires h <= d, got h = {h}, d = {d}")
+            }
+            ContractError::StateLen { expected, got } => {
+                write!(f, "state vector must hold h = {expected} entries, got {got}")
+            }
+            ContractError::ChainOut { expected, got, stride, h } => write!(
+                f,
+                "chain output must hold stride * h = {stride} * {h} = {expected} entries, got {got}"
+            ),
         }
     }
 }
@@ -596,6 +629,135 @@ pub fn check_q4_dispatch(
     check_range_output(m, n, p0, p1, crow0, c32_len)
 }
 
+/// Shared geometry of every element-wise chain: gates are `[h, stride]`
+/// row-major planes whose time window `off..off + t` is walked
+/// sequentially, the output is a `[stride, h]` time-major plane, and
+/// the carried state holds `h` entries.
+#[allow(clippy::too_many_arguments)]
+fn check_chain_geometry(
+    simd: Simd,
+    gate_lens: &[usize],
+    h: usize,
+    stride: usize,
+    off: usize,
+    t: usize,
+    c_len: usize,
+    out_len: usize,
+) -> Result<(), ContractError> {
+    check_simd(simd)?;
+    if off + t > stride {
+        return Err(ContractError::ChainWindow { off, t, stride });
+    }
+    let plane = h * stride;
+    for &got in gate_lens {
+        if got != plane {
+            return Err(ContractError::GateLen { expected: plane, got, h, stride });
+        }
+    }
+    if c_len != h {
+        return Err(ContractError::StateLen { expected: h, got: c_len });
+    }
+    let expected = stride * h;
+    if out_len != expected {
+        return Err(ContractError::ChainOut { expected, got: out_len, stride, h });
+    }
+    Ok(())
+}
+
+/// Full precondition set of `engine::recurrence::sru_chain`: three gate
+/// planes, the `[stride, d]` input frames the highway reads, and
+/// `h <= d` for the highway column access.
+#[allow(clippy::too_many_arguments)]
+pub fn check_sru_chain(
+    simd: Simd,
+    gx_len: usize,
+    gf_len: usize,
+    gr_len: usize,
+    h: usize,
+    stride: usize,
+    off: usize,
+    t: usize,
+    x_len: usize,
+    d: usize,
+    c_len: usize,
+    out_len: usize,
+) -> Result<(), ContractError> {
+    check_chain_geometry(simd, &[gx_len, gf_len, gr_len], h, stride, off, t, c_len, out_len)?;
+    let expected = stride * d;
+    if x_len != expected {
+        return Err(ContractError::FrameLen { expected, got: x_len, n: stride, k: d });
+    }
+    if h > d {
+        return Err(ContractError::HighwayDim { h, d });
+    }
+    Ok(())
+}
+
+/// Full precondition set of `engine::recurrence::qrnn_chain` (the
+/// fo-pool has no highway, so no input-frame condition).
+#[allow(clippy::too_many_arguments)]
+pub fn check_qrnn_chain(
+    simd: Simd,
+    gx_len: usize,
+    gf_len: usize,
+    go_len: usize,
+    h: usize,
+    stride: usize,
+    off: usize,
+    t: usize,
+    c_len: usize,
+    out_len: usize,
+) -> Result<(), ContractError> {
+    check_chain_geometry(simd, &[gx_len, gf_len, go_len], h, stride, off, t, c_len, out_len)
+}
+
+/// Full precondition set of `engine::recurrence::lstm_gate_fuse`: one
+/// contiguous `[4h]` gate vector, `h`-length `c`/`h` state and output.
+pub fn check_lstm_fuse(
+    simd: Simd,
+    g_len: usize,
+    h: usize,
+    c_len: usize,
+    h_len: usize,
+    out_len: usize,
+) -> Result<(), ContractError> {
+    check_simd(simd)?;
+    if g_len != 4 * h {
+        return Err(ContractError::GateLen { expected: 4 * h, got: g_len, h, stride: 4 });
+    }
+    if c_len != h {
+        return Err(ContractError::StateLen { expected: h, got: c_len });
+    }
+    if h_len != h {
+        return Err(ContractError::StateLen { expected: h, got: h_len });
+    }
+    if out_len != h {
+        return Err(ContractError::StateLen { expected: h, got: out_len });
+    }
+    Ok(())
+}
+
+/// Full precondition set of `engine::recurrence::merge_sum`: forward,
+/// backward and merged planes all hold `steps * h` entries.
+pub fn check_merge(
+    fwd_len: usize,
+    bwd_len: usize,
+    out_len: usize,
+    steps: usize,
+    h: usize,
+) -> Result<(), ContractError> {
+    let expected = steps * h;
+    for got in [fwd_len, bwd_len] {
+        if got != expected {
+            return Err(ContractError::FrameLen { expected, got, n: steps, k: h });
+        }
+    }
+    if out_len != expected {
+        return Err(ContractError::ChainOut { expected, got: out_len, stride: steps, h });
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -676,5 +838,109 @@ mod tests {
         let e = ContractError::PanelLen { expected: 224, got: 200, np: 2, stride: 112 };
         let s = e.to_string();
         assert!(s.contains("224") && s.contains("200"), "{s}");
+    }
+
+    #[test]
+    fn chain_geometry_is_enforced() {
+        let (h, stride, d) = (8, 10, 12);
+        let plane = h * stride;
+        let ok = |off: usize, t: usize| {
+            check_sru_chain(
+                Simd::Portable,
+                plane,
+                plane,
+                plane,
+                h,
+                stride,
+                off,
+                t,
+                stride * d,
+                d,
+                h,
+                stride * h,
+            )
+        };
+        assert!(ok(0, stride).is_ok());
+        assert!(ok(3, 7).is_ok());
+        assert!(ok(4, 0).is_ok(), "zero-length segments are legal");
+        // Window escapes the stride.
+        let err = ok(4, 7).unwrap_err();
+        assert!(matches!(err, ContractError::ChainWindow { off: 4, t: 7, stride: 10 }));
+        // Short gate plane.
+        let err = check_sru_chain(
+            Simd::Portable,
+            plane - 1,
+            plane,
+            plane,
+            h,
+            stride,
+            0,
+            stride,
+            stride * d,
+            d,
+            h,
+            stride * h,
+        )
+        .unwrap_err();
+        assert!(matches!(err, ContractError::GateLen { .. }));
+        // Highway needs h <= d.
+        let err = check_sru_chain(
+            Simd::Portable,
+            plane,
+            plane,
+            plane,
+            h,
+            stride,
+            0,
+            stride,
+            stride * 4,
+            4,
+            h,
+            stride * h,
+        )
+        .unwrap_err();
+        assert!(matches!(err, ContractError::HighwayDim { h: 8, d: 4 }));
+        // QRNN shares the window/plane rules without the highway.
+        assert!(check_qrnn_chain(
+            Simd::Portable,
+            plane,
+            plane,
+            plane,
+            h,
+            stride,
+            2,
+            8,
+            h,
+            stride * h
+        )
+        .is_ok());
+        let err = check_qrnn_chain(
+            Simd::Portable,
+            plane,
+            plane,
+            plane,
+            h,
+            stride,
+            0,
+            stride,
+            h - 1,
+            stride * h,
+        )
+        .unwrap_err();
+        assert!(matches!(err, ContractError::StateLen { .. }));
+    }
+
+    #[test]
+    fn lstm_and_merge_shapes() {
+        assert!(check_lstm_fuse(Simd::Portable, 32, 8, 8, 8, 8).is_ok());
+        let err = check_lstm_fuse(Simd::Portable, 31, 8, 8, 8, 8).unwrap_err();
+        assert!(matches!(err, ContractError::GateLen { .. }));
+        let err = check_lstm_fuse(Simd::Portable, 32, 8, 7, 8, 8).unwrap_err();
+        assert!(matches!(err, ContractError::StateLen { .. }));
+        assert!(check_merge(40, 40, 40, 5, 8).is_ok());
+        let err = check_merge(40, 39, 40, 5, 8).unwrap_err();
+        assert!(matches!(err, ContractError::FrameLen { .. }));
+        let err = check_merge(40, 40, 41, 5, 8).unwrap_err();
+        assert!(matches!(err, ContractError::ChainOut { .. }));
     }
 }

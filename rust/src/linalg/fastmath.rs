@@ -6,6 +6,27 @@
 //! (clamp + polynomial + exponent bit-assembly), so whole scan loops
 //! vectorize.
 //!
+//! Two forms coexist and are **bit-identical** to each other:
+//!
+//! * the scalar fns ([`fast_exp`], [`fast_sigmoid`], [`fast_tanh`]) —
+//!   the reference semantics every engine test is pinned to;
+//! * explicit SIMD lanes ([`avx2`]/[`neon`], 8/4 values per call) behind
+//!   the [`map_exp`]/[`map_sigmoid`]/[`map_tanh`] slice dispatchers and
+//!   the `engine/recurrence.rs` chain kernels.
+//!
+//! Bit-identity holds because every lane performs the *same sequence of
+//! correctly-rounded IEEE-754 single operations* as the scalar code: the
+//! same clamp, the same round-to-nearest-even, the same two-step
+//! Cody–Waite reduction, the same Horner evaluation with separate
+//! mul/add (no FMA — contraction would change results), the same
+//! exponent-bit assembly, and the same compare+blend where the scalar
+//! code branches on sign (computing both sides and selecting gives the
+//! value the taken branch would have produced).  The one documented
+//! exclusion is NaN input: vector min/max order NaN differently than
+//! scalar `clamp`, and gate pre-activations are never NaN.
+//! `tests::simd_lanes_bitwise_match_scalar` sweeps the full f32 exponent
+//! range over every tier the host supports.
+//!
 //! Accuracy (property-tested in this module):
 //! * `fast_exp`:    relative error < 3e-7 over [-87, 87]
 //! * `fast_sigmoid`: absolute error < 1e-6 everywhere
@@ -13,6 +34,13 @@
 //!
 //! That is far below the 1e-4 tolerance of the JAX-parity tests, so the
 //! engines use these unconditionally.
+
+// This module is on the unsafe allowlist (tools/lint): the SIMD lanes
+// need raw loads/stores and `#[target_feature]` calls.  Every unsafe
+// block carries a `// SAFETY:` comment; the lint gate enforces it.
+#![allow(unsafe_code)]
+
+use super::kernels::Simd;
 
 const LOG2_E: f32 = std::f32::consts::LOG2_E;
 const LN_2_HI: f32 = 0.693_359_4; // ln2 split for extra precision
@@ -65,6 +93,286 @@ pub fn fast_tanh(x: f32) -> f32 {
     } else {
         -t
     }
+}
+
+/// In-place `fast_exp` over a slice, dispatched down the ISA ladder.
+/// Bitwise identical to the scalar loop for every `simd` tier.
+pub fn map_exp(simd: Simd, v: &mut [f32]) {
+    match simd {
+        #[cfg(target_arch = "x86_64")]
+        Simd::Avx2 | Simd::Vnni => {
+            // SAFETY: `detect()`/`runs_on()` only hand out Avx2/Vnni on
+            // hosts with AVX2; both tiers share the f32 lane.
+            unsafe { avx2::map_exp(v) }
+        }
+        #[cfg(target_arch = "aarch64")]
+        Simd::Neon | Simd::Sdot => {
+            // SAFETY: `detect()`/`runs_on()` only hand out Neon/Sdot on
+            // aarch64 hosts, where NEON is baseline.
+            unsafe { neon::map_exp(v) }
+        }
+        _ => {
+            for x in v.iter_mut() {
+                *x = fast_exp(*x);
+            }
+        }
+    }
+}
+
+/// In-place `fast_sigmoid` over a slice (see [`map_exp`]).
+pub fn map_sigmoid(simd: Simd, v: &mut [f32]) {
+    match simd {
+        #[cfg(target_arch = "x86_64")]
+        Simd::Avx2 | Simd::Vnni => {
+            // SAFETY: Avx2/Vnni tiers imply AVX2 on this host.
+            unsafe { avx2::map_sigmoid(v) }
+        }
+        #[cfg(target_arch = "aarch64")]
+        Simd::Neon | Simd::Sdot => {
+            // SAFETY: Neon/Sdot tiers imply NEON on this host.
+            unsafe { neon::map_sigmoid(v) }
+        }
+        _ => {
+            for x in v.iter_mut() {
+                *x = fast_sigmoid(*x);
+            }
+        }
+    }
+}
+
+/// In-place `fast_tanh` over a slice (see [`map_exp`]).
+pub fn map_tanh(simd: Simd, v: &mut [f32]) {
+    match simd {
+        #[cfg(target_arch = "x86_64")]
+        Simd::Avx2 | Simd::Vnni => {
+            // SAFETY: Avx2/Vnni tiers imply AVX2 on this host.
+            unsafe { avx2::map_tanh(v) }
+        }
+        #[cfg(target_arch = "aarch64")]
+        Simd::Neon | Simd::Sdot => {
+            // SAFETY: Neon/Sdot tiers imply NEON on this host.
+            unsafe { neon::map_tanh(v) }
+        }
+        _ => {
+            for x in v.iter_mut() {
+                *x = fast_tanh(*x);
+            }
+        }
+    }
+}
+
+/// AVX2 8-lane mirrors of the scalar polynomials.  Same op order per
+/// lane ⇒ bitwise-identical results (see the module doc).
+#[cfg(target_arch = "x86_64")]
+pub(crate) mod avx2 {
+    use super::{LN_2_HI, LN_2_LO, LOG2_E};
+    use core::arch::x86_64::*;
+
+    /// `_MM_FROUND_TO_NEAREST_INT | _MM_FROUND_NO_EXC`: the vector twin
+    /// of scalar `round_ties_even`.
+    const ROUND_NE: i32 = _MM_FROUND_TO_NEAREST_INT | _MM_FROUND_NO_EXC;
+
+    /// 8-lane `fast_exp`.
+    ///
+    /// # Safety
+    /// Caller must ensure the host supports AVX2 (the `Avx2`/`Vnni`
+    /// dispatch tiers guarantee it).
+    #[target_feature(enable = "avx2")]
+    pub(crate) unsafe fn fast_exp_ps(x: __m256) -> __m256 {
+        // clamp: identical to scalar `f32::clamp` for non-NaN input.
+        let x = _mm256_min_ps(_mm256_max_ps(x, _mm256_set1_ps(-87.0)), _mm256_set1_ps(87.0));
+        let n = _mm256_round_ps::<ROUND_NE>(_mm256_mul_ps(x, _mm256_set1_ps(LOG2_E)));
+        let r = _mm256_sub_ps(
+            _mm256_sub_ps(x, _mm256_mul_ps(n, _mm256_set1_ps(LN_2_HI))),
+            _mm256_mul_ps(n, _mm256_set1_ps(LN_2_LO)),
+        );
+        // Horner, innermost-out; separate mul/add per level exactly as
+        // the scalar expression evaluates (no FMA contraction).
+        let mut p = _mm256_set1_ps(1.0 / 720.0);
+        for c in [1.0 / 120.0, 1.0 / 24.0, 1.0 / 6.0, 0.5, 1.0, 1.0] {
+            p = _mm256_add_ps(_mm256_set1_ps(c), _mm256_mul_ps(r, p));
+        }
+        // 2^n via exponent bits.  `n` is integral after the round, so
+        // cvtps (round-to-nearest) equals the scalar `as i32` truncation.
+        let bits = _mm256_slli_epi32::<23>(_mm256_add_epi32(
+            _mm256_cvtps_epi32(n),
+            _mm256_set1_epi32(127),
+        ));
+        _mm256_mul_ps(p, _mm256_castsi256_ps(bits))
+    }
+
+    /// 8-lane `fast_sigmoid`.  Computes both branch arms and blends on
+    /// `x >= 0`, which yields exactly the scalar branch's value.
+    ///
+    /// # Safety
+    /// Caller must ensure the host supports AVX2.
+    #[target_feature(enable = "avx2")]
+    pub(crate) unsafe fn fast_sigmoid_ps(x: __m256) -> __m256 {
+        let sign_mask = _mm256_set1_ps(-0.0);
+        let ax = _mm256_andnot_ps(sign_mask, x); // |x|
+        // SAFETY: same target-feature context (AVX2 enabled here).
+        let e = unsafe { fast_exp_ps(_mm256_xor_ps(ax, sign_mask)) }; // exp(-|x|)
+        let one = _mm256_set1_ps(1.0);
+        let pos = _mm256_div_ps(one, _mm256_add_ps(one, e));
+        let neg = _mm256_sub_ps(one, pos);
+        let ge = _mm256_cmp_ps::<_CMP_GE_OQ>(x, _mm256_setzero_ps());
+        _mm256_blendv_ps(neg, pos, ge)
+    }
+
+    /// 8-lane `fast_tanh`.  The sign is resolved by the same `x >= 0`
+    /// compare the scalar code branches on (NOT a sign-bit copy: scalar
+    /// `-0.0 >= 0.0` is true, so `fast_tanh(-0.0)` is `+0.0`).
+    ///
+    /// # Safety
+    /// Caller must ensure the host supports AVX2.
+    #[target_feature(enable = "avx2")]
+    pub(crate) unsafe fn fast_tanh_ps(x: __m256) -> __m256 {
+        let sign_mask = _mm256_set1_ps(-0.0);
+        let ax = _mm256_andnot_ps(sign_mask, x);
+        // SAFETY: same target-feature context (AVX2 enabled here).
+        let e = unsafe { fast_exp_ps(_mm256_mul_ps(_mm256_set1_ps(-2.0), ax)) };
+        let one = _mm256_set1_ps(1.0);
+        let t = _mm256_sub_ps(
+            one,
+            _mm256_div_ps(_mm256_mul_ps(_mm256_set1_ps(2.0), e), _mm256_add_ps(one, e)),
+        );
+        let nt = _mm256_xor_ps(t, sign_mask); // exact IEEE negation
+        let ge = _mm256_cmp_ps::<_CMP_GE_OQ>(x, _mm256_setzero_ps());
+        _mm256_blendv_ps(nt, t, ge)
+    }
+
+    macro_rules! map_impl {
+        ($name:ident, $lane:ident, $scalar:path) => {
+            /// In-place slice map; 8-wide main loop + scalar tail (the
+            /// scalar fn IS the same op sequence, so the tail is also
+            /// bitwise-identical).
+            ///
+            /// # Safety
+            /// Caller must ensure the host supports AVX2.
+            #[target_feature(enable = "avx2")]
+            pub(crate) unsafe fn $name(v: &mut [f32]) {
+                let main = v.len() / 8 * 8;
+                let p = v.as_mut_ptr();
+                let mut i = 0;
+                while i < main {
+                    // SAFETY: i + 8 <= v.len(), so the unaligned
+                    // load/store stay inside the slice; AVX2 is enabled
+                    // in this target-feature context for the lane call.
+                    unsafe {
+                        let x = _mm256_loadu_ps(p.add(i));
+                        _mm256_storeu_ps(p.add(i), $lane(x));
+                    }
+                    i += 8;
+                }
+                for x in &mut v[main..] {
+                    *x = $scalar(*x);
+                }
+            }
+        };
+    }
+
+    map_impl!(map_exp, fast_exp_ps, super::fast_exp);
+    map_impl!(map_sigmoid, fast_sigmoid_ps, super::fast_sigmoid);
+    map_impl!(map_tanh, fast_tanh_ps, super::fast_tanh);
+}
+
+/// NEON 4-lane mirrors of the scalar polynomials (see [`avx2`]).
+#[cfg(target_arch = "aarch64")]
+pub(crate) mod neon {
+    use super::{LN_2_HI, LN_2_LO, LOG2_E};
+    use core::arch::aarch64::*;
+
+    /// 4-lane `fast_exp`.
+    ///
+    /// # Safety
+    /// Caller must ensure the host supports NEON (baseline on aarch64;
+    /// the `Neon`/`Sdot` dispatch tiers guarantee it).
+    #[target_feature(enable = "neon")]
+    pub(crate) unsafe fn fast_exp_ps(x: float32x4_t) -> float32x4_t {
+        let x = vminq_f32(vmaxq_f32(x, vdupq_n_f32(-87.0)), vdupq_n_f32(87.0));
+        // vrndnq = round-ties-even, same as the scalar reduction.
+        let n = vrndnq_f32(vmulq_f32(x, vdupq_n_f32(LOG2_E)));
+        let r = vsubq_f32(
+            vsubq_f32(x, vmulq_f32(n, vdupq_n_f32(LN_2_HI))),
+            vmulq_f32(n, vdupq_n_f32(LN_2_LO)),
+        );
+        // Separate mul/add per Horner level (no FMLA — fusing would
+        // change results vs the scalar expression).
+        let mut p = vdupq_n_f32(1.0 / 720.0);
+        for c in [1.0 / 120.0, 1.0 / 24.0, 1.0 / 6.0, 0.5, 1.0, 1.0] {
+            p = vaddq_f32(vdupq_n_f32(c), vmulq_f32(r, p));
+        }
+        // vcvtq truncates, exact on the integral `n` — same value as
+        // the scalar `as i32`.
+        let bits = vshlq_n_s32::<23>(vaddq_s32(vcvtq_s32_f32(n), vdupq_n_s32(127)));
+        vmulq_f32(p, vreinterpretq_f32_s32(bits))
+    }
+
+    /// 4-lane `fast_sigmoid` (compute-both-arms + `x >= 0` select).
+    ///
+    /// # Safety
+    /// Caller must ensure the host supports NEON.
+    #[target_feature(enable = "neon")]
+    pub(crate) unsafe fn fast_sigmoid_ps(x: float32x4_t) -> float32x4_t {
+        let ax = vabsq_f32(x);
+        // SAFETY: same target-feature context (NEON enabled here).
+        let e = unsafe { fast_exp_ps(vnegq_f32(ax)) };
+        let one = vdupq_n_f32(1.0);
+        let pos = vdivq_f32(one, vaddq_f32(one, e));
+        let neg = vsubq_f32(one, pos);
+        vbslq_f32(vcgeq_f32(x, vdupq_n_f32(0.0)), pos, neg)
+    }
+
+    /// 4-lane `fast_tanh` (`x >= 0` select, matching the scalar branch
+    /// including at `-0.0`).
+    ///
+    /// # Safety
+    /// Caller must ensure the host supports NEON.
+    #[target_feature(enable = "neon")]
+    pub(crate) unsafe fn fast_tanh_ps(x: float32x4_t) -> float32x4_t {
+        let ax = vabsq_f32(x);
+        // SAFETY: same target-feature context (NEON enabled here).
+        let e = unsafe { fast_exp_ps(vmulq_f32(vdupq_n_f32(-2.0), ax)) };
+        let one = vdupq_n_f32(1.0);
+        let t = vsubq_f32(
+            one,
+            vdivq_f32(vmulq_f32(vdupq_n_f32(2.0), e), vaddq_f32(one, e)),
+        );
+        vbslq_f32(vcgeq_f32(x, vdupq_n_f32(0.0)), t, vnegq_f32(t))
+    }
+
+    macro_rules! map_impl {
+        ($name:ident, $lane:ident, $scalar:path) => {
+            /// In-place slice map; 4-wide main loop + bitwise-identical
+            /// scalar tail.
+            ///
+            /// # Safety
+            /// Caller must ensure the host supports NEON.
+            #[target_feature(enable = "neon")]
+            pub(crate) unsafe fn $name(v: &mut [f32]) {
+                let main = v.len() / 4 * 4;
+                let p = v.as_mut_ptr();
+                let mut i = 0;
+                while i < main {
+                    // SAFETY: i + 4 <= v.len(), so the load/store stay
+                    // inside the slice; NEON is enabled in this
+                    // target-feature context for the lane call.
+                    unsafe {
+                        let x = vld1q_f32(p.add(i));
+                        vst1q_f32(p.add(i), $lane(x));
+                    }
+                    i += 4;
+                }
+                for x in &mut v[main..] {
+                    *x = $scalar(*x);
+                }
+            }
+        };
+    }
+
+    map_impl!(map_exp, fast_exp_ps, super::fast_exp);
+    map_impl!(map_sigmoid, fast_sigmoid_ps, super::fast_sigmoid);
+    map_impl!(map_tanh, fast_tanh_ps, super::fast_tanh);
 }
 
 #[cfg(test)]
@@ -137,6 +445,77 @@ mod tests {
             prev_s = s;
             prev_t = t;
             x += 1e-3;
+        }
+    }
+
+    /// Every f32 binade (±2^e for the full exponent range, four
+    /// mantissas each) plus zeros, denormals and infinities — the
+    /// bitwise contract sweep.  NaN is the documented exclusion.  The
+    /// length is deliberately not a multiple of the vector width so the
+    /// scalar tail is exercised too.
+    fn exponent_sweep() -> Vec<f32> {
+        let mut v = vec![
+            0.0f32,
+            -0.0,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            f32::MIN_POSITIVE,
+            -f32::MIN_POSITIVE,
+            f32::from_bits(1), // smallest denormal
+            -f32::from_bits(1),
+            f32::MAX,
+            f32::MIN,
+        ];
+        for e in -126i32..=127 {
+            let b = (e as f32).exp2();
+            for m in [1.0f32, 1.25, 1.5, 1.75] {
+                v.push(b * m);
+                v.push(-(b * m));
+            }
+        }
+        assert!(v.len() % 8 != 0, "sweep must exercise the scalar tail");
+        v
+    }
+
+    #[test]
+    fn simd_lanes_bitwise_match_scalar() {
+        let base = exponent_sweep();
+        for tier in crate::linalg::supported_tiers() {
+            for (name, mapper, scalar) in [
+                ("exp", map_exp as fn(Simd, &mut [f32]), fast_exp as fn(f32) -> f32),
+                ("sigmoid", map_sigmoid, fast_sigmoid),
+                ("tanh", map_tanh, fast_tanh),
+            ] {
+                let mut got = base.clone();
+                mapper(tier, &mut got);
+                for (i, (&g, &x)) in got.iter().zip(base.iter()).enumerate() {
+                    let want = scalar(x);
+                    assert_eq!(
+                        g.to_bits(),
+                        want.to_bits(),
+                        "{name}[{tier:?}] lane {i}: input {x:e} got {g:e} want {want:e}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn odd_symmetry_full_sweep() {
+        for &x in &exponent_sweep() {
+            // Float == (not to_bits): fast_tanh(-0.0) is +0.0 while
+            // -fast_tanh(0.0) is -0.0 — equal as floats, not as bits.
+            assert_eq!(fast_tanh(-x), -fast_tanh(x), "tanh odd symmetry at {x:e}");
+            assert_eq!(
+                fast_sigmoid(-x),
+                1.0 - fast_sigmoid(x),
+                "sigmoid mirror at {x:e}"
+            );
+            if x > 0.0 {
+                // Strictly positive inputs: the symmetry is exact down
+                // to the bit pattern.
+                assert_eq!(fast_tanh(-x).to_bits(), (-fast_tanh(x)).to_bits());
+            }
         }
     }
 }

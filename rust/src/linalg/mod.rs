@@ -31,7 +31,7 @@ pub mod pack;
 pub mod pool;
 
 pub use contract::ContractError;
-pub use fastmath::{fast_exp, fast_sigmoid, fast_tanh};
+pub use fastmath::{fast_exp, fast_sigmoid, fast_tanh, map_exp, map_sigmoid, map_tanh};
 pub use gemm::{
     add_row_bias, dot, gemm, gemm_acc, gemm_bt, gemm_bt_acc, gemm_naive, gemv, gemv_acc,
     SMALL_N_CUTOFF,

@@ -76,9 +76,9 @@ pub struct SimConfig {
     /// every weight byte still leaves DRAM exactly once (streamed into
     /// the shared LLC and consumed by whichever core owns the panel) —
     /// the memory side of the model is core-count-invariant while the
-    /// GEMM compute term divides by `cores`.  The strictly sequential
-    /// recurrence remainder (transcendentals) stays serial — the model's
-    /// Amdahl fraction.
+    /// GEMM compute term divides by `cores`.  The recurrence remainder
+    /// (transcendentals) divides by [`SimConfig::elem_simd_ratio`]
+    /// instead — the model's (now shrinkable) Amdahl fraction.
     pub cores: usize,
     /// Engine precision (see [`SimPrec`]; SRU only).
     pub precision: SimPrec,
@@ -96,6 +96,16 @@ pub struct SimConfig {
     /// (neither paper platform has the instructions); the quant
     /// microbench flips it on for the vnni/sdot predicted columns.
     pub use_dot: bool,
+    /// Effective speedup of the element-wise recurrence remainder
+    /// (transcendental chain) relative to scalar-serial execution —
+    /// the vectorized-epilogue axis.  The engines run the chain SIMD
+    /// across hidden units and strip-split across the pool
+    /// (`engine::recurrence`), so the old "the remainder stays serial"
+    /// assumption overstates the Amdahl tail; set this to the measured
+    /// lanes × strips factor (e.g. ~8 for AVX2 single-thread) to model
+    /// it.  `1.0` (paper mode) reproduces the paper's scalar scan.
+    /// Memory traffic is unchanged — vector lanes touch the same bytes.
+    pub elem_simd_ratio: f64,
 }
 
 impl SimConfig {
@@ -110,6 +120,7 @@ impl SimConfig {
             precision: SimPrec::F32,
             density: 1.0,
             use_dot: false,
+            elem_simd_ratio: 1.0,
         }
     }
 }
@@ -169,8 +180,12 @@ fn trace_block(
             if prec != SimPrec::F32 {
                 trace_elementwise(h, &[lay.weights2], &[], 3 * hd);
             }
-            // Scan: read 3 gate rows + x, write out; carry state.
-            trace_elementwise(h, &[lay.gates, lay.x], &[lay.out], hd * t * 3 / 2);
+            // Scan: the chain kernel reads all three [H, T] gate planes
+            // plus the time-major highway input and writes the output —
+            // 5·H·T elements of streaming traffic (the old 4.5·H·T
+            // figure undercounted the gate planes); carry state.
+            trace_elementwise(h, &[lay.gates], &[], 3 * hd * t);
+            trace_elementwise(h, &[lay.x], &[lay.out], hd * t);
             trace_elementwise(h, &[lay.state], &[lay.state], hd);
             // Skipped blocks run no MACs: the GEMM term scales with the
             // active fraction (the kernels skip at dispatch).
@@ -199,7 +214,10 @@ fn trace_block(
                 d,
                 t,
             );
-            trace_elementwise(h, &[lay.gates], &[lay.out], hd * t * 3 / 2);
+            // Scan: three gate planes in, output plane out (no highway
+            // read — the fo-pool consumes gates only).
+            trace_elementwise(h, &[lay.gates], &[], 3 * hd * t);
+            trace_elementwise(h, &[], &[lay.out], hd * t);
             trace_elementwise(h, &[lay.state], &[lay.state], hd);
             let gemm = 2.0 * (2 * 3 * hd * d * t) as f64;
             let aux = 8.0 * (hd * t) as f64;
@@ -293,9 +311,18 @@ pub fn simulate(cfg: &SimConfig) -> SimReport {
     } else {
         1.0
     };
+    // The element-wise remainder divides by the measured lanes × strips
+    // factor (1.0 in paper mode = scalar-serial); it never divides by
+    // `cores` on top — `elem_simd_ratio` already includes the strip
+    // split, and double-counting would hide the Amdahl tail entirely.
+    let elem_ratio = if cfg.elem_simd_ratio > 0.0 {
+        cfg.elem_simd_ratio
+    } else {
+        1.0
+    };
     let compute_cycles_measured = gemm_flops / (spec.flops_per_cycle * eff * cores * mac_ratio)
         + aux_flops / (spec.flops_per_cycle * eff * cores)
-        + transc * spec.transcendental_cycles;
+        + transc * spec.transcendental_cycles / elem_ratio;
 
     let compute_cycles = compute_cycles_measured * scale;
     let memory_cycles = mem_cycles_measured * scale;
@@ -541,6 +568,37 @@ mod tests {
         let f = at(SimPrec::F32, false);
         let fd = at(SimPrec::F32, true);
         assert!((f.cycles - fd.cycles).abs() < 1e-9 * f.cycles.max(1.0));
+    }
+
+    #[test]
+    fn elem_simd_ratio_shrinks_only_the_amdahl_tail() {
+        // The vectorized-epilogue axis: raising the ratio cuts the
+        // transcendental term (largest share of compute at big T, where
+        // the GEMM is efficient and the remainder is the tail) and must
+        // leave memory traffic untouched — lanes touch the same bytes.
+        let model = ModelConfig::paper(Arch::Sru, ModelSize::Large);
+        let at = |ratio: f64| {
+            let mut c = SimConfig::paper(ARM_DENVER2, model, 32);
+            c.samples = 256;
+            c.elem_simd_ratio = ratio;
+            simulate(&c)
+        };
+        let scalar = at(1.0);
+        let simd = at(8.0);
+        assert!(
+            simd.compute_cycles < scalar.compute_cycles,
+            "{:.3e} vs {:.3e}",
+            simd.compute_cycles,
+            scalar.compute_cycles
+        );
+        assert!(
+            (simd.memory_cycles - scalar.memory_cycles).abs()
+                < 1e-9 * scalar.memory_cycles.max(1.0),
+            "vector lanes must not change the byte stream"
+        );
+        // Diminishing returns: the GEMM + aux terms bound the benefit.
+        let gain = scalar.compute_cycles / simd.compute_cycles;
+        assert!(gain < 8.0, "Amdahl: gain {gain:.2} must stay below the ratio");
     }
 
     #[test]

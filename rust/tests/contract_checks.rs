@@ -9,10 +9,10 @@
 //! crate-internal tests in `linalg/kernels/mod.rs`.
 
 use mtsrnn::linalg::contract::{
-    check_epilogue, check_f32_dispatch, check_q4_dispatch, check_q8q_dispatch,
-    check_range_output, check_simd, check_vnni_bufs, num_panels, ContractError, FrameView,
-    MaskView, PanelView, Q4PanelView, QFrameView, QPanelView, Q4_MAX_K, Q8_MAX_K, VNNI_Q4_MAX_K,
-    VNNI_Q8_MAX_K,
+    check_epilogue, check_f32_dispatch, check_lstm_fuse, check_merge, check_q4_dispatch,
+    check_q8q_dispatch, check_qrnn_chain, check_range_output, check_simd, check_sru_chain,
+    check_vnni_bufs, num_panels, ContractError, FrameView, MaskView, PanelView, Q4PanelView,
+    QFrameView, QPanelView, Q4_MAX_K, Q8_MAX_K, VNNI_Q4_MAX_K, VNNI_Q8_MAX_K,
 };
 use mtsrnn::linalg::{Act, Epilogue, Simd, PACK_MR, SPARSE_KB};
 
@@ -387,6 +387,89 @@ fn full_dispatch_checks_compose() {
         )
         .unwrap_err(),
         ContractError::PanelLen { .. }
+    ));
+}
+
+#[test]
+fn recurrence_chain_contracts_reject_each_violation() {
+    let (h, stride, d) = (5usize, 7, 6);
+    let plane = h * stride;
+    let ok = |gx, gf, gr, off, t, x, c, out| {
+        check_sru_chain(Simd::Portable, gx, gf, gr, h, stride, off, t, x, d, c, out)
+    };
+    // The full-window call with exact lengths passes.
+    ok(plane, plane, plane, 0, stride, stride * d, h, stride * h).unwrap();
+    // Window past the plane edge.
+    assert!(matches!(
+        ok(plane, plane, plane, 3, 5, stride * d, h, stride * h).unwrap_err(),
+        ContractError::ChainWindow { off: 3, t: 5, stride: 7 }
+    ));
+    // Short gate plane (any of the three).
+    assert!(matches!(
+        ok(plane, plane - 1, plane, 0, stride, stride * d, h, stride * h).unwrap_err(),
+        ContractError::GateLen { .. }
+    ));
+    // Highway input too narrow for the hidden width.
+    assert!(matches!(
+        check_sru_chain(
+            Simd::Portable,
+            plane,
+            plane,
+            plane,
+            h,
+            stride,
+            0,
+            stride,
+            stride * (h - 1),
+            h - 1,
+            h,
+            stride * h,
+        )
+        .unwrap_err(),
+        ContractError::HighwayDim { .. }
+    ));
+    // Wrong frame-buffer and state lengths.
+    assert!(matches!(
+        ok(plane, plane, plane, 0, stride, stride * d + 1, h, stride * h).unwrap_err(),
+        ContractError::FrameLen { .. }
+    ));
+    assert!(matches!(
+        ok(plane, plane, plane, 0, stride, stride * d, h + 1, stride * h).unwrap_err(),
+        ContractError::StateLen { .. }
+    ));
+    assert!(matches!(
+        ok(plane, plane, plane, 0, stride, stride * d, h, stride * h - 1).unwrap_err(),
+        ContractError::ChainOut { .. }
+    ));
+
+    // QRNN shares the geometry core; spot-check the window rule.
+    check_qrnn_chain(Simd::Portable, plane, plane, plane, h, stride, 2, 5, h, stride * h).unwrap();
+    assert!(matches!(
+        check_qrnn_chain(Simd::Portable, plane, plane, plane, h, stride, 2, 6, h, stride * h)
+            .unwrap_err(),
+        ContractError::ChainWindow { .. }
+    ));
+
+    // LSTM fuse: the [4h] gate slab and each h-length buffer.
+    check_lstm_fuse(Simd::Portable, 4 * h, h, h, h, h).unwrap();
+    assert!(matches!(
+        check_lstm_fuse(Simd::Portable, 4 * h - 1, h, h, h, h).unwrap_err(),
+        ContractError::GateLen { .. }
+    ));
+    assert!(matches!(
+        check_lstm_fuse(Simd::Portable, 4 * h, h, h, h - 1, h).unwrap_err(),
+        ContractError::StateLen { .. }
+    ));
+
+    // Bidir merge: all three planes steps * h.
+    check_merge(21, 21, 21, 3, 7).unwrap();
+    assert!(matches!(
+        check_merge(20, 21, 21, 3, 7).unwrap_err(),
+        ContractError::FrameLen { .. }
+    ));
+    assert!(matches!(
+        check_merge(21, 21, 20, 3, 7).unwrap_err(),
+        ContractError::ChainOut { .. }
     ));
 }
 

@@ -13,8 +13,10 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 use mtsrnn::decode::{render_tokens, CtcDecoder, CtcGreedy, DecoderSpec};
+use mtsrnn::engine::recurrence::{sru_chain, ELEM_PAR_MIN};
 use mtsrnn::linalg::{
-    Act, Epilogue, PackedGemm, PackedQuantGemm, PanelMask, QuantScratch, Simd, ThreadPool,
+    fast_exp, fast_sigmoid, fast_tanh, map_exp, map_sigmoid, map_tanh, pool, Act, Epilogue,
+    PackedGemm, PackedQuantGemm, PanelMask, QuantScratch, Simd, ThreadPool,
 };
 
 /// Tiny deterministic value stream (no rand dep): xorshift mapped to
@@ -211,6 +213,63 @@ fn thread_pool_runs_and_reuses_under_miri() {
         hits.fetch_add(100, Ordering::SeqCst);
     });
     assert_eq!(hits.load(Ordering::SeqCst), 315);
+}
+
+#[test]
+fn fastmath_portable_lanes_match_scalar_bitwise() {
+    // The contract the SIMD tiers are held to elsewhere applies to the
+    // portable 4-lane unrolled bodies too: same polynomial, same op
+    // order, so every lane — including the sub-width tail — must equal
+    // the scalar call bit for bit.  11 elements = two full portable
+    // lanes plus a 3-wide tail; values cover both clamp edges.
+    let mut st = 23u64;
+    let mut v: Vec<f32> = (0..11).map(|_| lcg(&mut st) * 90.0).collect();
+    v[0] = -88.5; // below the exp clamp
+    v[1] = 88.5; // above it
+    for (name, map, scal) in [
+        ("exp", map_exp as fn(Simd, &mut [f32]), fast_exp as fn(f32) -> f32),
+        ("sigmoid", map_sigmoid, fast_sigmoid),
+        ("tanh", map_tanh, fast_tanh),
+    ] {
+        let mut got = v.clone();
+        map(Simd::Portable, &mut got);
+        for (i, (g, &x)) in got.iter().zip(&v).enumerate() {
+            let w = scal(x);
+            assert_eq!(g.to_bits(), w.to_bits(), "{name}[{i}]: {g:e} vs {w:e}");
+        }
+    }
+}
+
+#[test]
+fn recurrence_chain_pool_split_matches_serial_under_miri() {
+    // Smallest geometry that trips the strip fan-out (h * t ==
+    // ELEM_PAR_MIN), so the SendPtr hand-off into the worker pool runs
+    // under the borrow tracker; the 2-thread serial run is the oracle.
+    let (h, t) = (ELEM_PAR_MIN / 16, 16);
+    let d = h; // the SRU highway term reads x[j * d + i] for i < h
+    let mut st = 29u64;
+    let gx: Vec<f32> = (0..h * t).map(|_| lcg(&mut st)).collect();
+    let gf: Vec<f32> = (0..h * t).map(|_| fast_sigmoid(lcg(&mut st) * 3.0)).collect();
+    let gr: Vec<f32> = (0..h * t).map(|_| fast_sigmoid(lcg(&mut st) * 3.0)).collect();
+    let x: Vec<f32> = (0..t * d).map(|_| lcg(&mut st)).collect();
+    let c0: Vec<f32> = (0..h).map(|_| lcg(&mut st) * 0.5).collect();
+
+    let run = |threads: usize| {
+        pool::set_threads(threads);
+        let mut c = c0.clone();
+        let mut out = vec![0.0f32; t * h];
+        sru_chain(Simd::Portable, &gx, &gf, &gr, h, t, 0, t, &x, d, &mut c, &mut out);
+        (c, out)
+    };
+    let (c1, out1) = run(1);
+    let (c2, out2) = run(2);
+    pool::set_threads(1);
+    for (i, (a, b)) in c1.iter().zip(&c2).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "c[{i}]");
+    }
+    for (i, (a, b)) in out1.iter().zip(&out2).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "out[{i}]");
+    }
 }
 
 /// One frame of logits strongly preferring `class`.

@@ -1,0 +1,373 @@
+//! Bitwise parity of the vectorized recurrence chains
+//! (`engine::recurrence`) against the scalar-serial reference — the
+//! PR's acceptance bar: the SIMD + pool-split epilogue must produce the
+//! exact bits of the old per-engine scalar loops at every pinnable ISA
+//! tier and thread count, including the windowed `run_segments`
+//! geometry and its edge cases (zero-length segments, 1-step segments,
+//! `h` not divisible by the strip width).
+//!
+//! Runs under the CI `MTSRNN_ISA` matrix: `supported_tiers()` honours
+//! the pin, so each matrix leg checks host-vs-portable for its tier.
+
+use mtsrnn::engine::recurrence::{lstm_gate_fuse, merge_sum, qrnn_chain, sru_chain};
+use mtsrnn::engine::{
+    Engine, LstmEngine, LstmMode, QrnnEngine, QuantSruEngine, RecurrentLayer, SruEngine,
+};
+use mtsrnn::linalg::{fast_sigmoid, fast_tanh, pool, supported_tiers, Simd};
+use mtsrnn::models::config::{Arch, ModelConfig};
+use mtsrnn::models::{LstmParams, QrnnParams, SruParams};
+use mtsrnn::util::Rng;
+
+/// Gate planes with sigmoid-shaped values (what the GEMM epilogue
+/// produces for f/r/o rows).
+fn sigmoided(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| fast_sigmoid(rng.uniform_in(-3.0, 3.0))).collect()
+}
+
+fn uniform(rng: &mut Rng, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+    (0..n).map(|_| rng.uniform_in(lo, hi)).collect()
+}
+
+fn assert_bits_eq(got: &[f32], want: &[f32], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(g.to_bits(), w.to_bits(), "{what}[{i}]: {g:e} vs {w:e}");
+    }
+}
+
+/// h = 69: not a multiple of the 8/4 vector width or the 16-unit strip,
+/// so every tier exercises full lanes, a scalar tail, and (at t = 40,
+/// h * t = 2760 >= ELEM_PAR_MIN) the pool split.
+const H: usize = 69;
+const T: usize = 40;
+
+#[test]
+fn sru_chain_bitwise_across_tiers_and_threads() {
+    let (h, d, n) = (H, H + 7, T + 5);
+    let mut rng = Rng::new(101);
+    let gx = uniform(&mut rng, h * n, -1.0, 1.0);
+    let gf = sigmoided(&mut rng, h * n);
+    let gr = sigmoided(&mut rng, h * n);
+    let x = uniform(&mut rng, n * d, -1.0, 1.0);
+    let c0 = uniform(&mut rng, h, -0.5, 0.5);
+
+    for (off, t) in [(0usize, T), (3, 1), (5, T)] {
+        // Scalar-serial reference: the old engine loop, transliterated.
+        let mut cref = c0.clone();
+        let mut oref = vec![0.0f32; n * h];
+        for i in 0..h {
+            let mut cv = cref[i];
+            for s in 0..t {
+                let j = off + s;
+                let f = gf[i * n + j];
+                let r = gr[i * n + j];
+                cv = f * cv + (1.0 - f) * gx[i * n + j];
+                oref[j * h + i] = r * fast_tanh(cv) + (1.0 - r) * x[j * d + i];
+            }
+            cref[i] = cv;
+        }
+        for tier in supported_tiers() {
+            for threads in [1usize, 4] {
+                pool::set_threads(threads);
+                let mut c = c0.clone();
+                let mut out = vec![0.0f32; n * h];
+                sru_chain(tier, &gx, &gf, &gr, h, n, off, t, &x, d, &mut c, &mut out);
+                let what = format!("sru {} @{threads}t off={off} t={t}", tier.name());
+                assert_bits_eq(&c, &cref, &format!("{what} c"));
+                assert_bits_eq(&out, &oref, &format!("{what} out"));
+            }
+        }
+    }
+    pool::set_threads(1);
+}
+
+#[test]
+fn qrnn_chain_bitwise_across_tiers_and_threads() {
+    let (h, n) = (H, T);
+    let mut rng = Rng::new(202);
+    let gz = uniform(&mut rng, h * n, -1.0, 1.0);
+    let gf = sigmoided(&mut rng, h * n);
+    let go = sigmoided(&mut rng, h * n);
+    let c0 = uniform(&mut rng, h, -0.5, 0.5);
+
+    let mut cref = c0.clone();
+    let mut oref = vec![0.0f32; n * h];
+    for i in 0..h {
+        let mut cv = cref[i];
+        for j in 0..n {
+            let f = gf[i * n + j];
+            let o = go[i * n + j];
+            cv = f * cv + (1.0 - f) * gz[i * n + j];
+            oref[j * h + i] = o * fast_tanh(cv);
+        }
+        cref[i] = cv;
+    }
+    for tier in supported_tiers() {
+        for threads in [1usize, 4] {
+            pool::set_threads(threads);
+            let mut c = c0.clone();
+            let mut out = vec![0.0f32; n * h];
+            qrnn_chain(tier, &gz, &gf, &go, h, n, 0, n, &mut c, &mut out);
+            let what = format!("qrnn {} @{threads}t", tier.name());
+            assert_bits_eq(&c, &cref, &format!("{what} c"));
+            assert_bits_eq(&out, &oref, &format!("{what} out"));
+        }
+    }
+    pool::set_threads(1);
+}
+
+#[test]
+fn lstm_fuse_bitwise_across_tiers() {
+    let h = H;
+    let mut rng = Rng::new(303);
+    let g = uniform(&mut rng, 4 * h, -2.0, 2.0);
+    let c0 = uniform(&mut rng, h, -0.5, 0.5);
+    let h0 = uniform(&mut rng, h, -0.5, 0.5);
+
+    let mut cref = c0.clone();
+    let mut href = h0.clone();
+    let mut oref = vec![0.0f32; h];
+    for i in 0..h {
+        let f = fast_sigmoid(g[i]);
+        let ig = fast_sigmoid(g[h + i]);
+        let o = fast_sigmoid(g[2 * h + i]);
+        let chat = fast_tanh(g[3 * h + i]);
+        let cv = f * cref[i] + ig * chat;
+        cref[i] = cv;
+        let hv = o * fast_tanh(cv);
+        href[i] = hv;
+        oref[i] = hv;
+    }
+    for tier in supported_tiers() {
+        let mut c = c0.clone();
+        let mut hs = h0.clone();
+        let mut out = vec![0.0f32; h];
+        lstm_gate_fuse(tier, &g, h, &mut c, &mut hs, &mut out);
+        let what = format!("lstm {}", tier.name());
+        assert_bits_eq(&c, &cref, &format!("{what} c"));
+        assert_bits_eq(&hs, &href, &format!("{what} h"));
+        assert_bits_eq(&out, &oref, &format!("{what} out"));
+    }
+}
+
+#[test]
+fn merge_sum_bitwise_across_tiers() {
+    let (steps, h) = (9, H);
+    let mut rng = Rng::new(404);
+    let fwd = uniform(&mut rng, steps * h, -1.0, 1.0);
+    let bwd = uniform(&mut rng, steps * h, -1.0, 1.0);
+    let mut want = vec![0.0f32; steps * h];
+    for s in 0..steps {
+        for i in 0..h {
+            want[s * h + i] = fwd[s * h + i] + bwd[(steps - 1 - s) * h + i];
+        }
+    }
+    for tier in supported_tiers() {
+        let mut out = vec![0.0f32; steps * h];
+        merge_sum(tier, &fwd, &bwd, &mut out, steps, h);
+        assert_bits_eq(&out, &want, &format!("merge {}", tier.name()));
+    }
+}
+
+// ---------------------------------------------------------------------
+// Engine-level edge geometry: run_segments vs the per-stream loop, with
+// a zero-length segment, a single 1-step segment among long ones, and
+// h = 37 (not a strip multiple).  The 60-step stream crosses the
+// pool-split threshold at 4 threads, so both the inline and fanned
+// paths are covered.
+// ---------------------------------------------------------------------
+
+const SEGS: [usize; 4] = [60, 0, 1, 25];
+
+/// Random initial states shaped by the layer's layout.
+fn random_states(layer: &dyn RecurrentLayer, streams: usize, seed: u64) -> Vec<Vec<Vec<f32>>> {
+    let layout = layer.state_layout();
+    let mut rng = Rng::new(seed);
+    (0..streams)
+        .map(|_| {
+            layout
+                .slots
+                .iter()
+                .map(|s| uniform(&mut rng, s.len, -0.5, 0.5))
+                .collect()
+        })
+        .collect()
+}
+
+/// Reference: the `RecurrentLayer` default — load, run, save per stream.
+fn per_stream_reference(
+    layer: &mut dyn RecurrentLayer,
+    x: &[f32],
+    segs: &[usize],
+    states: &mut [Vec<Vec<f32>>],
+    out: &mut [f32],
+) {
+    let (d, h) = (layer.input(), layer.hidden());
+    let mut off = 0;
+    for (&t, st) in segs.iter().zip(states.iter_mut()) {
+        layer.load_state(st);
+        layer.run_sequence(&x[off * d..(off + t) * d], t, &mut out[off * h..(off + t) * h]);
+        layer.save_state(st);
+        off += t;
+    }
+}
+
+/// Batched vs per-stream parity for one layer constructor, bitwise, at
+/// threads {1, 4}.  `make` must build identical engines every call.
+fn check_segments_bitwise(make: &dyn Fn() -> Box<dyn RecurrentLayer>, name: &str) {
+    let mut reference = make();
+    let (d, h) = (reference.input(), reference.hidden());
+    let n: usize = SEGS.iter().sum();
+    let mut rng = Rng::new(77);
+    let x = uniform(&mut rng, n * d, -1.0, 1.0);
+
+    let states0 = random_states(reference.as_ref(), SEGS.len(), 99);
+    let mut states_ref = states0.clone();
+    let mut out_ref = vec![0.0f32; n * h];
+    pool::set_threads(1);
+    per_stream_reference(reference.as_mut(), &x, &SEGS, &mut states_ref, &mut out_ref);
+
+    for threads in [1usize, 4] {
+        pool::set_threads(threads);
+        let mut batched = make();
+        let mut states = states0.clone();
+        let mut refs: Vec<&mut [Vec<f32>]> = states.iter_mut().map(|s| s.as_mut_slice()).collect();
+        let mut out = vec![0.0f32; n * h];
+        batched.run_segments(&x, &SEGS, &mut refs, &mut out);
+        let what = format!("{name} @{threads}t");
+        assert_bits_eq(&out, &out_ref, &format!("{what} out"));
+        for (k, (got, want)) in states.iter().zip(&states_ref).enumerate() {
+            for (slot, (g, w)) in got.iter().zip(want).enumerate() {
+                assert_bits_eq(g, w, &format!("{what} stream {k} slot {slot}"));
+            }
+        }
+    }
+    pool::set_threads(1);
+}
+
+#[test]
+fn sru_segments_edge_geometry_bitwise() {
+    let cfg = ModelConfig {
+        arch: Arch::Sru,
+        hidden: 37,
+        input: 37,
+    };
+    let p = SruParams::init(&cfg, &mut Rng::new(1));
+    check_segments_bitwise(&|| Box::new(SruEngine::new(p.clone(), 16)), "sru:f32");
+}
+
+/// Batched `run_segments` at 4 threads vs 1 thread, bitwise.  Both
+/// sides run the gate GEMM at the same fused width, so this holds
+/// regardless of where the integer-vs-widening crossover landed — it
+/// isolates exactly what this PR changed: the pool-split chain epilogue.
+fn check_segments_thread_invariant(make: &dyn Fn() -> Box<dyn RecurrentLayer>, name: &str) {
+    let probe = make();
+    let (d, h) = (probe.input(), probe.hidden());
+    let n: usize = SEGS.iter().sum();
+    let mut rng = Rng::new(77);
+    let x = uniform(&mut rng, n * d, -1.0, 1.0);
+    let states0 = random_states(probe.as_ref(), SEGS.len(), 99);
+
+    let mut runs = Vec::new();
+    for threads in [1usize, 4] {
+        pool::set_threads(threads);
+        let mut batched = make();
+        let mut states = states0.clone();
+        let mut refs: Vec<&mut [Vec<f32>]> = states.iter_mut().map(|s| s.as_mut_slice()).collect();
+        let mut out = vec![0.0f32; n * h];
+        batched.run_segments(&x, &SEGS, &mut refs, &mut out);
+        runs.push((out, states));
+    }
+    pool::set_threads(1);
+    let what = format!("{name} 4t vs 1t");
+    assert_bits_eq(&runs[1].0, &runs[0].0, &format!("{what} out"));
+    for (k, (got, want)) in runs[1].1.iter().zip(&runs[0].1).enumerate() {
+        for (slot, (g, w)) in got.iter().zip(want).enumerate() {
+            assert_bits_eq(g, w, &format!("{what} stream {k} slot {slot}"));
+        }
+    }
+}
+
+#[test]
+fn quant_sru_segments_edge_geometry_bitwise() {
+    let cfg = ModelConfig {
+        arch: Arch::Sru,
+        hidden: 37,
+        input: 37,
+    };
+    let p = SruParams::init(&cfg, &mut Rng::new(2));
+    // Q8 dequantizes weights into the widening GEMM at every width, so
+    // batched-vs-per-stream is bitwise at any geometry.
+    check_segments_bitwise(&|| Box::new(QuantSruEngine::new(&p, 16)), "sru:q8");
+    // Q8q/Q4 route `n <= int_cutoff` through the widening fallback with
+    // different low-order numerics, and the crossover is probed per host
+    // at construction.  When the probe keeps the integer kernel at every
+    // width (`min_wavefront_width() == 1`, the overwhelmingly common
+    // outcome), batched-vs-per-stream is exact; on a host where the
+    // probe found a nonzero cutoff, mixed widths legitimately differ in
+    // low bits, so check same-width thread invariance instead.
+    let q4: &dyn Fn() -> Box<dyn RecurrentLayer> = &|| Box::new(QuantSruEngine::new_q4(&p, 16));
+    let q8q: &dyn Fn() -> Box<dyn RecurrentLayer> = &|| Box::new(QuantSruEngine::new_q8q(&p, 16));
+    for (maker, name) in [(q4, "sru:q4"), (q8q, "sru:q8q")] {
+        if maker().min_wavefront_width() == 1 {
+            check_segments_bitwise(maker, name);
+        } else {
+            check_segments_thread_invariant(maker, name);
+        }
+    }
+}
+
+#[test]
+fn qrnn_segments_edge_geometry_bitwise() {
+    let cfg = ModelConfig {
+        arch: Arch::Qrnn,
+        hidden: 37,
+        input: 37,
+    };
+    let p = QrnnParams::init(&cfg, &mut Rng::new(3));
+    check_segments_bitwise(&|| Box::new(QrnnEngine::new(p.clone(), 16)), "qrnn:f32");
+}
+
+#[test]
+fn lstm_segments_edge_geometry_bitwise() {
+    let cfg = ModelConfig {
+        arch: Arch::Lstm,
+        hidden: 37,
+        input: 37,
+    };
+    let p = LstmParams::init(&cfg, &mut Rng::new(4));
+    check_segments_bitwise(
+        &|| Box::new(LstmEngine::new(p.clone(), LstmMode::Precompute(16))),
+        "lstm:f32",
+    );
+}
+
+/// The block path (`run_sequence`) must also be invariant in thread
+/// count — the strip split may engage at 4 threads for h * t >= the
+/// fan-out threshold, and disjoint strips must not change a bit.
+#[test]
+fn run_sequence_thread_count_invariant() {
+    let cfg = ModelConfig {
+        arch: Arch::Sru,
+        hidden: 64,
+        input: 64,
+    };
+    let p = SruParams::init(&cfg, &mut Rng::new(5));
+    let steps = 64; // h * t = 4096 over the ELEM_PAR_MIN threshold
+    let mut x = vec![0.0; steps * 64];
+    Rng::new(6).fill_normal(&mut x, 1.0);
+
+    pool::set_threads(1);
+    let mut e1 = SruEngine::new(p.clone(), steps);
+    let mut out1 = vec![0.0; steps * 64];
+    e1.run_sequence(&x, steps, &mut out1);
+
+    pool::set_threads(4);
+    let mut e4 = SruEngine::new(p, steps);
+    let mut out4 = vec![0.0; steps * 64];
+    e4.run_sequence(&x, steps, &mut out4);
+    pool::set_threads(1);
+
+    assert_bits_eq(&out4, &out1, "sru run_sequence 4t vs 1t");
+    assert_bits_eq(e4.state(), e1.state(), "sru state 4t vs 1t");
+}

@@ -35,9 +35,11 @@ use std::path::{Path, PathBuf};
 /// is permitted.  Keep in sync with the `#![allow(unsafe_code)]`
 /// headers and `docs/UNSAFE.md`.
 const UNSAFE_ALLOWLIST: &[&str] = &[
+    "linalg/fastmath.rs",
     "linalg/kernels/",
     "linalg/pack.rs",
     "linalg/pool.rs",
+    "engine/recurrence.rs",
     "engine/stack.rs",
 ];
 
